@@ -1,0 +1,32 @@
+//! Fig. 3 demo: dump the aggregated quantization function (Eq. 6) as
+//! CSV + a terminal sparkline, showing how EBS interpolates between
+//! candidate step functions as the strengths move.
+//!
+//!   cargo run --release --example fig3_quant_function
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::Path::new("runs/reports");
+    ebs::report::fig3::run(out, 200)?;
+
+    // Terminal rendering of the r=[0,0] vs r=[-1,1] mixtures.
+    let csv = std::fs::read_to_string(out.join("fig3.csv"))?;
+    let rows: Vec<Vec<f64>> = csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(|v| v.parse().unwrap_or(0.0)).collect())
+        .collect();
+    let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    for (label, col) in [("mix r=[0,0] over B={2,3}", 3usize), ("mix r=[-1,1]", 4)] {
+        let line: String = rows
+            .iter()
+            .step_by(2)
+            .map(|r| {
+                let v = ((r[col] + 1.0) / 2.0 * (glyphs.len() - 1) as f64).round() as usize;
+                glyphs[v.min(glyphs.len() - 1)]
+            })
+            .collect();
+        println!("{label:<26} |{line}|");
+    }
+    println!("(full curves in runs/reports/fig3.csv — plot w vs each column)");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! End-to-end validation driver (the repository's headline experiment):
+//! the full three-stage pipeline of Fig. 1 on the CIFAR-stand-in task
+//! with ResNet-20 — FP pre-training, bilevel bitwidth search against a
+//! FLOPs target, argmax selection, quantized retraining, test
+//! evaluation, and BD-engine deployment with HLO parity — logging the
+//! loss curve to `runs/e2e_resnet20/log.jsonl`.
+//!
+//!   cargo run --release --example pipeline_e2e [-- <steps-scale>]
+//!
+//! The default budget (scale 1.0) runs a few hundred steps per stage;
+//! EXPERIMENTS.md records a reference run.
+
+use ebs::bd::{BdMode, BdNetwork};
+use ebs::coordinator::{
+    run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
+};
+use ebs::data::synth::{generate, SynthSpec};
+use ebs::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let steps = |base: usize| ((base as f64 * scale) as usize).max(10);
+
+    let dir = std::path::Path::new("artifacts/resnet20_synth");
+    let mut engine = Engine::open(dir)?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let target = flops.uniform_mflops(3);
+    println!(
+        "== e2e: {} on synthetic CIFAR | FP32 {:.2} MFLOPs, target {:.2} MFLOPs (3-bit point) ==",
+        engine.manifest.model, flops.fp32_mflops, target
+    );
+
+    let (train, test) = generate(&SynthSpec::cifar_like(1234));
+    let run_dir = std::path::Path::new("runs/e2e_resnet20");
+    let mut logger = RunLogger::new(run_dir, true)?;
+    let cfg = PipelineCfg {
+        pretrain: TrainCfg { steps: steps(240), eval_every: 80, ..TrainCfg::defaults(0) },
+        search: SearchCfg { steps: steps(160), eval_every: 80, ..SearchCfg::defaults(target, 0) },
+        retrain: TrainCfg { steps: steps(320), eval_every: 80, ..TrainCfg::defaults(0) },
+        seed: 42,
+        save_artifacts: true,
+    };
+    let t0 = std::time::Instant::now();
+    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger)?;
+    println!(
+        "\npipeline wall-clock: {:.1}s | loss curve + summary in {}",
+        t0.elapsed().as_secs_f64(),
+        run_dir.display()
+    );
+    let (mw, mx) = result.selection.mean_bits();
+    println!(
+        "FP32 acc {:.2}% | EBS-Det mixed acc {:.2}% @ {:.2} MFLOPs ({:.2}x saving); \
+         mean bits w={mw:.2} a={mx:.2}",
+        100.0 * result.fp_test_acc,
+        100.0 * result.test_acc,
+        result.mflops,
+        result.saving
+    );
+
+    // Deployment stage: BD engine accuracy must match the HLO eval path.
+    let net = BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused)?;
+    let n = 256.min(test.len());
+    let sz = test.hw * test.hw * test.channels;
+    let preds = net.classify_batch(&test.images[..n * sz], n);
+    let bd_acc = preds
+        .iter()
+        .zip(&test.labels[..n])
+        .filter(|(p, &l)| **p == l as usize)
+        .count() as f64
+        / n as f64;
+    println!(
+        "BD deployment acc on {n} samples: {:.2}% (HLO-path acc {:.2}%) — deployment parity",
+        100.0 * bd_acc,
+        100.0 * result.test_acc
+    );
+    Ok(())
+}

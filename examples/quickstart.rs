@@ -1,0 +1,72 @@
+//! Quickstart: the whole EBS system in ~60 seconds on the tiny model.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Pre-trains a small FP network on the synthetic task, runs a short
+//! bilevel bitwidth search (Alg. 1), retrains the selected mixed
+//! precision QNN, and deploys it on the Binary Decomposition engine —
+//! printing the per-layer bitwidths and the BD/HLO parity check.
+
+use ebs::bd::{BdMode, BdNetwork};
+use ebs::coordinator::{
+    run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
+};
+use ebs::data::synth::{generate, SynthSpec};
+use ebs::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts/resnet8_tiny");
+    let mut engine = Engine::open(dir)?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let target = flops.uniform_mflops(3); // aim for the 3-bit cost point
+    println!(
+        "== EBS quickstart: {} | FP32 {:.2} MFLOPs, target {:.2} MFLOPs ==",
+        engine.manifest.model, flops.fp32_mflops, target
+    );
+
+    let (train, test) = generate(&SynthSpec::tiny(7));
+    let mut logger = RunLogger::ephemeral();
+    let cfg = PipelineCfg {
+        pretrain: TrainCfg { steps: 120, eval_every: 60, ..TrainCfg::defaults(120) },
+        search: SearchCfg { steps: 80, eval_every: 40, ..SearchCfg::defaults(target, 80) },
+        retrain: TrainCfg { steps: 150, eval_every: 75, ..TrainCfg::defaults(150) },
+        seed: 7,
+        save_artifacts: false,
+    };
+    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger)?;
+
+    println!("\nper-layer bitwidths (Eq. 4 argmax):");
+    for (i, name) in engine.manifest.qconv_layers.iter().enumerate() {
+        println!(
+            "  {name:<8} W{} A{}",
+            result.selection.w_bits[i], result.selection.x_bits[i]
+        );
+    }
+    println!(
+        "\nFP32 acc {:.1}% → mixed precision acc {:.1}% at {:.2} MFLOPs ({:.2}x saving)",
+        100.0 * result.fp_test_acc,
+        100.0 * result.test_acc,
+        result.mflops,
+        result.saving
+    );
+
+    // Deploy on the Binary Decomposition engine and sanity-check parity.
+    let net = BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused)?;
+    let n = 64.min(test.len());
+    let sz = test.hw * test.hw * test.channels;
+    let mut correct = 0;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let logits = net.forward(&test.images[i * sz..(i + 1) * sz]);
+        let pred = logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        correct += (pred == test.labels[i] as usize) as usize;
+    }
+    println!(
+        "BD deployment: {}/{} correct, {:.2} ms/image, packed weights {:.1} KiB",
+        correct,
+        n,
+        1e3 * t0.elapsed().as_secs_f64() / n as f64,
+        net.packed_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}

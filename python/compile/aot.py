@@ -1,0 +1,277 @@
+"""AOT exporter: lower every step graph to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+For each model variant this writes:
+
+    artifacts/<model>/<graph>.hlo.txt      one per exported graph
+    artifacts/<model>/manifest.json        the Rust runtime's contract
+
+The manifest records, per graph, the exact flattened input/output leaf
+order with a ``role`` for each leaf:
+
+    state:<path>   canonical training-state tensor (round-tripped)
+    io:<name>      per-call input (batch tensors, schedule scalars)
+    metric:<name>  per-call output
+
+plus the model geometry (stages, conv inventory, MAC table, bit
+candidates) that the Rust FLOPs model and BD engine rebuild and
+parity-test against.
+
+Usage:  python -m compile.aot --out ../artifacts \
+            [--models resnet8_tiny,resnet20_synth] [--dnas] [--graphs ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dnas, steps
+from .flops import fp_macs, full_precision_mflops, qconv_macs, uniform_mflops
+from .model import MODELS, ModelCfg, conv_inventory, init_state, qconv_names
+
+DEFAULT_MODELS = ["resnet8_tiny", "resnet20_synth"]
+ALL_GRAPHS = [
+    "init", "fp_train", "fp_eval", "fp_infer",
+    "train", "eval", "infer", "search_det", "search_sto",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered → XLA HLO text (the only format xla_extension 0.5.1 parses)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _leaf_specs(tree) -> List[Dict]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [
+        {
+            "path": _path_str(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        }
+        for path, leaf in leaves
+    ]
+
+
+def _shape_structs(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def export_graph(fn, args_template, out_path: str) -> Dict:
+    """Flatten → lower → write HLO text; return the io spec for the manifest.
+
+    ``args_template`` is a single pytree (dict) of concrete or
+    ShapeDtypeStruct leaves; ``fn`` receives the unflattened pytree and
+    must return a dict pytree (its flattened leaves become the output
+    tuple, in tree order).
+    """
+    template = _shape_structs(args_template)
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    out_template = jax.eval_shape(lambda t: fn(t), template)
+
+    def flat_fn(*flat_args):
+        tree = jax.tree_util.tree_unflatten(treedef, flat_args)
+        out = fn(tree)
+        return tuple(jax.tree_util.tree_flatten(out)[0])
+
+    # keep_unused: graphs like eval/infer read only part of the state, but
+    # the runtime protocol feeds every leaf — parameters must not be pruned.
+    lowered = jax.jit(flat_fn, keep_unused=True).lower(*flat)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return {
+        "file": os.path.basename(out_path),
+        "inputs": _leaf_specs(template),
+        "outputs": _leaf_specs(out_template),
+    }
+
+
+def _batch(cfg: ModelCfg):
+    h, w, c = cfg.image
+    x = jax.ShapeDtypeStruct((cfg.batch_size, h, w, c), jnp.float32)
+    y = jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32)
+    return x, y
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def graph_templates(cfg: ModelCfg, state):
+    """args_template per graph name."""
+    x, y = _batch(cfg)
+    L, N = len(qconv_names(cfg)), cfg.n_bits
+    sel = jax.ShapeDtypeStruct((L, N), jnp.float32)
+    gmat = jax.ShapeDtypeStruct((L, N), jnp.float32)
+    teacher = jax.ShapeDtypeStruct((cfg.batch_size, cfg.num_classes), jnp.float32)
+    s = _scalar
+    return {
+        "init": {"in": {"seed": jax.ShapeDtypeStruct((), jnp.int32)}},
+        "fp_train": {"state": state, "in": {"x": x, "y": y, "lr": s(), "wd": s()}},
+        "fp_eval": {"state": state, "in": {"x": x, "y": y}},
+        "fp_infer": {"state": state, "in": {"x": x}},
+        "train": {
+            "state": state,
+            "in": {
+                "sel_w": sel, "sel_x": sel, "x": x, "y": y,
+                "teacher": teacher, "lr": s(), "wd": s(), "mu": s(),
+            },
+        },
+        "eval": {"state": state, "in": {"sel_w": sel, "sel_x": sel, "x": x, "y": y}},
+        "infer": {"state": state, "in": {"sel_w": sel, "sel_x": sel, "x": x}},
+        "search_det": {
+            "state": state,
+            "in": {
+                "xt": x, "yt": y, "xv": x, "yv": y,
+                "lr_w": s(), "lr_arch": s(), "wd": s(), "lam": s(), "target": s(),
+            },
+        },
+        "search_sto": {
+            "state": state,
+            "in": {
+                "xt": x, "yt": y, "xv": x, "yv": y, "g_r": gmat, "g_s": gmat,
+                "tau": s(), "lr_w": s(), "lr_arch": s(), "wd": s(),
+                "lam": s(), "target": s(),
+            },
+        },
+    }
+
+
+def graph_fns(cfg: ModelCfg):
+    fp_train = steps.make_fp_train(cfg)
+    train = steps.make_train(cfg)
+    sdet = steps.make_search_det(cfg)
+    ssto = steps.make_search_sto(cfg)
+    init = steps.make_init(cfg)
+    return {
+        "init": lambda t: init(t["in"]),
+        "fp_train": lambda t: fp_train(t["state"], t["in"]),
+        "fp_eval": lambda t: steps.make_eval(cfg, False)(t["state"], t["in"]),
+        "fp_infer": lambda t: steps.make_infer(cfg, False)(t["state"], t["in"]),
+        "train": lambda t: train(t["state"], t["in"]),
+        "eval": lambda t: steps.make_eval(cfg, True)(t["state"], t["in"]),
+        "infer": lambda t: steps.make_infer(cfg, True)(t["state"], t["in"]),
+        "search_det": lambda t: sdet(t["state"], t["in"]),
+        "search_sto": lambda t: ssto(t["state"], t["in"]),
+    }
+
+
+def model_manifest(cfg: ModelCfg, state) -> Dict:
+    inv = conv_inventory(cfg)
+    return {
+        "model": cfg.name,
+        "batch_size": cfg.batch_size,
+        "image": list(cfg.image),
+        "num_classes": cfg.num_classes,
+        "bits": list(cfg.bits),
+        "alpha_init": cfg.alpha_init,
+        "stem_channels": cfg.stem_channels,
+        "stages": [
+            {"channels": st.channels, "blocks": st.blocks, "stride": st.stride}
+            for st in cfg.stages
+        ],
+        "qconv_layers": qconv_names(cfg),
+        "layers": [
+            {
+                "name": c.name, "kind": c.kind, "in_ch": c.in_ch, "out_ch": c.out_ch,
+                "ksize": c.ksize, "stride": c.stride, "in_hw": c.in_hw,
+                "out_hw": c.out_hw, "macs": c.macs,
+            }
+            for c in inv
+        ],
+        "fp_macs": fp_macs(cfg),
+        "qconv_macs": qconv_macs(cfg),
+        "fp32_mflops": full_precision_mflops(cfg),
+        "uniform_mflops": {str(b): uniform_mflops(cfg, b, b) for b in cfg.bits},
+        "state_spec": _leaf_specs({"state": state}),
+        "graphs": {},
+    }
+
+
+def export_model(cfg: ModelCfg, out_dir: str, graphs: List[str], with_dnas: bool):
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    state = _shape_structs(jax.eval_shape(lambda s: init_state(cfg, s), jnp.zeros((), jnp.int32)))
+    manifest = model_manifest(cfg, state)
+    templates = graph_templates(cfg, state)
+    fns = graph_fns(cfg)
+    for g in graphs:
+        path = os.path.join(mdir, f"{g}.hlo.txt")
+        print(f"[aot] {cfg.name}/{g} ...", flush=True)
+        manifest["graphs"][g] = export_graph(fns[g], templates[g], path)
+
+    if with_dnas:
+        dstate = _shape_structs(
+            jax.eval_shape(lambda s: dnas.init_dnas_state(cfg, s), jnp.zeros((), jnp.int32))
+        )
+        x, y = _batch(cfg)
+        s = _scalar
+        dnas_tmpl = {
+            "state": dstate,
+            "in": {
+                "xt": x, "yt": y, "xv": x, "yv": y,
+                "lr_w": s(), "lr_arch": s(), "wd": s(), "lam": s(), "target": s(),
+            },
+        }
+        dfn = dnas.make_dnas_search(cfg)
+        print(f"[aot] {cfg.name}/dnas_search ...", flush=True)
+        manifest["graphs"]["dnas_search"] = export_graph(
+            lambda t: dfn(t["state"], t["in"]),
+            dnas_tmpl,
+            os.path.join(mdir, "dnas_search.hlo.txt"),
+        )
+        manifest["dnas_init"] = export_graph(
+            lambda t: {"state": dnas.init_dnas_state(cfg, t["in"]["seed"])},
+            {"in": {"seed": jax.ShapeDtypeStruct((), jnp.int32)}},
+            os.path.join(mdir, "dnas_init.hlo.txt"),
+        )
+        manifest["dnas_state_spec"] = _leaf_specs({"state": dstate})
+
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mdir}/manifest.json ({len(manifest['graphs'])} graphs)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--graphs", default=",".join(ALL_GRAPHS))
+    ap.add_argument("--dnas", action="store_true", help="also export the DNAS supernet step")
+    args = ap.parse_args()
+    models = [m for m in args.models.split(",") if m]
+    graphs = [g for g in args.graphs.split(",") if g]
+    for m in models:
+        export_model(MODELS[m], args.out, graphs, args.dnas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""DNAS-style supernet baseline (paper Fig. 2a, Table 3 comparator).
+
+DNAS [Wu et al. 2019] keeps **N full-precision weight copies per layer**
+(one per candidate bitwidth) and, once activations are also searched,
+evaluates **N² convolutions per layer**:
+
+    O = Σ_i Σ_j  f(r)_i f(s)_j  ( Q_{b_i}(W_i) * Q_{b_j}(X) )
+
+This module exists to reproduce Table 3's efficiency comparison: the
+O(N) memory / O(N²) compute blow-up is structural, so measuring this
+graph against the EBS graph on identical hardware reproduces the paper's
+orders-of-magnitude gap (we report wall-clock + resident-set on the CPU
+PJRT client instead of GPU memory; DESIGN.md §3).
+
+Only the search step is exported — DNAS retraining is identical to EBS
+retraining once bitwidths are selected.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import flops, layers, optim
+from .model import ModelCfg, conv_inventory, forward, init_state, qconv_names
+
+
+def init_dnas_state(cfg: ModelCfg, seed: jnp.ndarray):
+    """EBS state + (N-1) extra meta-weight copies per quantized conv.
+
+    The copy for branch 0 reuses the base params tensor so total copies
+    are exactly N, as in DNAS.  Optimizer momentum mirrors the copies.
+    """
+    state = init_state(cfg, seed)
+    key = jax.random.PRNGKey(seed + 1)
+    copies: Dict = {}
+    for c in conv_inventory(cfg):
+        if c.kind != "qconv":
+            continue
+        key, k1 = jax.random.split(key)
+        fan_in = c.ksize * c.ksize * c.in_ch
+        std = jnp.sqrt(2.0 / float(fan_in))
+        copies[c.name] = std * jax.random.normal(
+            k1, (cfg.n_bits - 1, c.ksize, c.ksize, c.in_ch, c.out_ch), jnp.float32
+        )
+    state["dnas_copies"] = copies
+    state["opt"]["mom_copies"] = jax.tree.map(jnp.zeros_like, copies)
+    return state
+
+
+def dnas_forward(cfg: ModelCfg, state, x: jnp.ndarray, train: bool):
+    """Supernet forward: N² conv superposition per quantized layer.
+
+    Implemented by monkey-patching the qconv call path is avoided; we
+    rebuild the block walk here (duplicating model.forward's topology)
+    because the per-layer compute pattern is fundamentally different.
+    """
+    from .kernels import ref
+
+    params, alphas, arch, bn_state = (
+        state["params"], state["alphas"], state["arch"], state["bn"],
+    )
+    new_bn = {k: dict(v) for k, v in bn_state.items()}
+
+    def apply_bn(name, h):
+        p = params["bn_" + name]
+        y, m, v = layers.batch_norm(
+            h, p["gamma"], p["beta"], bn_state[name]["mean"], bn_state[name]["var"], train
+        )
+        new_bn[name] = {"mean": m, "var": v}
+        return y
+
+    def dnas_qconv(name, h, stride):
+        pw = jax.nn.softmax(arch["r"][name])
+        px = jax.nn.softmax(arch["s"][name])
+        alpha = alphas[name]
+        out = None
+        for j, bx in enumerate(cfg.bits):
+            xq = ref.act_quant(h, alpha, bx)  # branch-j quantized input
+            for i, bw in enumerate(cfg.bits):
+                w_i = params[name]["w"] if i == 0 else state["dnas_copies"][name][i - 1]
+                wq = ref.weight_quant(w_i, bw)  # branch-i quantized copy
+                o = pw[i] * px[j] * layers.conv2d(xq, wq, stride)
+                out = o if out is None else out + o
+        return out
+
+    h = layers.conv2d(x, params["stem"]["w"], 1)
+    h = apply_bn("stem", h)
+    h = jax.nn.relu(h)
+    in_ch = cfg.stem_channels
+    for si, st in enumerate(cfg.stages):
+        for bi in range(st.blocks):
+            stride = st.stride if bi == 0 else 1
+            base = f"s{si}b{bi}"
+            ident = h
+            y = dnas_qconv(f"{base}c1", h, stride)
+            y = apply_bn(f"{base}c1", y)
+            y = jax.nn.relu(y)
+            y = dnas_qconv(f"{base}c2", y, 1)
+            y = apply_bn(f"{base}c2", y)
+            if stride != 1 or in_ch != st.channels:
+                ident = dnas_qconv(f"{base}sc", h, stride)
+                ident = apply_bn(f"{base}sc", ident)
+            h = jax.nn.relu(y + ident)
+            in_ch = st.channels
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["fc"]["w"] + params["fc"]["b"], new_bn
+
+
+def make_dnas_search(cfg: ModelCfg):
+    """Bilevel DNAS search step (weights on train batch, arch on val)."""
+
+    def step(state, inputs):
+        def wloss(wtrees):
+            params, copies, alphas = wtrees
+            st = dict(state)
+            st["params"], st["dnas_copies"], st["alphas"] = params, copies, alphas
+            logits, new_bn = dnas_forward(cfg, st, inputs["xt"], train=True)
+            return layers.cross_entropy(logits, inputs["yt"]), new_bn
+
+        (train_loss, new_bn), grads = jax.value_and_grad(wloss, has_aux=True)(
+            (state["params"], state["dnas_copies"], state["alphas"])
+        )
+        gp, gc, ga = grads
+        ns = dict(state)
+        ns["params"], new_vp = optim.sgd_momentum(
+            state["params"], gp, state["opt"]["mom"]["params"], inputs["lr_w"], inputs["wd"]
+        )
+        ns["dnas_copies"], new_vc = optim.sgd_momentum(
+            state["dnas_copies"], gc, state["opt"]["mom_copies"], inputs["lr_w"], inputs["wd"]
+        )
+        ns["alphas"], new_va = optim.sgd_momentum(
+            state["alphas"], ga, state["opt"]["mom"]["alphas"], inputs["lr_w"], inputs["wd"]
+        )
+        ns["bn"] = new_bn
+        ns["opt"] = dict(state["opt"])
+        ns["opt"]["mom"] = {"params": new_vp, "alphas": new_va}
+        ns["opt"]["mom_copies"] = new_vc
+
+        def aloss(arch):
+            st = dict(ns)
+            st["arch"] = arch
+            logits, _ = dnas_forward(cfg, st, inputs["xv"], train=True)
+            ce = layers.cross_entropy(logits, inputs["yv"])
+            cw = {n: jax.nn.softmax(arch["r"][n]) for n in qconv_names(cfg)}
+            cx = {n: jax.nn.softmax(arch["s"][n]) for n in qconv_names(cfg)}
+            eflops = flops.expected_mflops(cfg, cw, cx)
+            penalty = inputs["lam"] * jax.nn.relu(eflops - inputs["target"]) / inputs["target"]
+            return ce + penalty, ce
+
+        (_, val_loss), g_arch = jax.value_and_grad(aloss, has_aux=True)(ns["arch"])
+        adam_state = ns["opt"]["adam"]
+        new_arch, m, v, t = optim.adam(
+            ns["arch"], g_arch, adam_state["m"], adam_state["v"], adam_state["t"],
+            inputs["lr_arch"],
+        )
+        ns["arch"] = new_arch
+        ns["opt"]["adam"] = {"m": m, "v": v, "t": t}
+        return {"state": ns, "out": {"train_loss": train_loss, "val_loss": val_loss}}
+
+    return step

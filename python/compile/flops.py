@@ -1,0 +1,65 @@
+"""FLOPs cost model (paper Eq. 2 / 11).
+
+Calibration (DESIGN.md §7.6): fitting the paper's own tables gives
+
+    cost = Σ_fp-layers MACs  +  Σ_qconv MACs · (M·K) / 64
+
+(e.g. ResNet-18 W1-A3: 3/64·quantMACs + stem = 207M vs the paper's
+206M).  The same model is implemented in ``rust/src/coordinator/flops.rs``
+for selection-time accounting; the manifest carries this module's MAC
+table so a Rust unit test can assert parity.
+
+Eq. 11's *expected* FLOPs replaces the discrete (M, K) with the branch
+expectations E[M] = Σ f(r)_i·b_i and E[K] = Σ f(s)_j·b_j, which keeps the
+penalty differentiable w.r.t. the strengths.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax.numpy as jnp
+
+from .model import ModelCfg, conv_inventory
+
+MIXED_DIVISOR = 64.0  # (M·K)/64 — calibrated against the paper's tables
+
+
+def fp_macs(cfg: ModelCfg) -> int:
+    """MACs of the always-full-precision layers (stem + classifier)."""
+    return sum(c.macs for c in conv_inventory(cfg) if c.kind != "qconv")
+
+
+def qconv_macs(cfg: ModelCfg) -> Dict[str, int]:
+    """MACs per quantized conv, keyed by layer name."""
+    return {c.name: c.macs for c in conv_inventory(cfg) if c.kind == "qconv"}
+
+
+def expected_mflops(
+    cfg: ModelCfg,
+    coeffs_w: Dict[str, jnp.ndarray],
+    coeffs_x: Dict[str, jnp.ndarray],
+) -> jnp.ndarray:
+    """Eq. 11: E[FLOPs] in MFLOPs, differentiable w.r.t. the coefficients.
+
+    Works for softmax, Gumbel-softmax, and one-hot coefficient vectors
+    (the latter reduces to the exact cost of a selection).
+    """
+    bits_vec = jnp.array(cfg.bits, jnp.float32)
+    total = jnp.asarray(float(fp_macs(cfg)), jnp.float32)
+    for name, macs in qconv_macs(cfg).items():
+        e_m = jnp.sum(coeffs_w[name] * bits_vec)
+        e_k = jnp.sum(coeffs_x[name] * bits_vec)
+        total = total + float(macs) * e_m * e_k / MIXED_DIVISOR
+    return total / 1e6
+
+
+def uniform_mflops(cfg: ModelCfg, w_bits: int, x_bits: int) -> float:
+    """Exact cost of a uniform-precision QNN (Table 1/2 baseline rows)."""
+    q = sum(qconv_macs(cfg).values())
+    return (fp_macs(cfg) + q * w_bits * x_bits / MIXED_DIVISOR) / 1e6
+
+
+def full_precision_mflops(cfg: ModelCfg) -> float:
+    """Cost of the FP32 network (the "1.0×" row)."""
+    return sum(c.macs for c in conv_inventory(cfg)) / 1e6

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: Binary Decomposition matmul (paper Eq. 12-14).
+
+The deployment-stage compute pattern: an M-bit × K-bit integer matmul is
+decomposed into bitplanes, multiplied as *binary* matrices, and
+recombined with the powers-of-two stride-(M,K) depthwise kernel of
+Eq. 14 — all inside one Pallas call so the intermediate P = B_w·B_x
+never leaves VMEM.
+
+TPU mapping (DESIGN.md §4): the paper's ARM AND+popcount trick is
+bit-serial; the MXU analogue keeps bitplanes as {0,1} matrices and runs
+the decomposed product on the systolic array (an f32 matmul of 0/1
+matrices is exact: accumulators stay ≤ s < 2^24).  The grid tiles the
+(c_o × n) output; each program holds a (BLOCK_CO, s) weight-code block
+and an (s, BLOCK_N) activation-code block in VMEM, extracts bitplanes in
+registers, and accumulates Σ_{m,k} 2^{m+k} (B_w^m @ B_x^k), which equals
+Λ_w (B_w B_x) Λ_xᵀ by distributivity (the fused form of Fig. 4).
+
+The Rust engine (`rust/src/bd/`) implements the same algorithm with u64
+AND+popcount for generic-CPU deployment; both are checked against
+``ref.bd_matmul`` and against the plain integer product.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_CO = 64
+BLOCK_N = 128
+
+
+def _bd_kernel(m_bits: int, k_bits: int, wq_ref, xq_ref, o_ref):
+    """One (BLOCK_CO × BLOCK_N) output tile of Eq. 13-14, fused."""
+    wq = wq_ref[...]  # (BLOCK_CO, s) integer codes as f32
+    xq = xq_ref[...]  # (s, BLOCK_N)
+    acc = jnp.zeros((wq.shape[0], xq.shape[1]), jnp.float32)
+    for m in range(m_bits):
+        # bitplane m of the weight codes: c_m(w) ∈ {0,1}
+        bw = jnp.mod(jnp.floor(wq / float(1 << m)), 2.0)
+        for k in range(k_bits):
+            bx = jnp.mod(jnp.floor(xq / float(1 << k)), 2.0)
+            # binary GEMM tile — MXU matmul of {0,1} matrices — plus the
+            # 2^{m+k} shift of the Λ recombination folded in.
+            acc = acc + float(1 << (m + k)) * jnp.dot(bw, bx)
+    o_ref[...] = acc
+
+
+def _pad_to(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.zeros((rows, cols), a.dtype).at[: a.shape[0], : a.shape[1]].set(a)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def bd_matmul(wq: jnp.ndarray, xq: jnp.ndarray, m_bits: int, k_bits: int):
+    """Mixed precision integer matmul via fused Binary Decomposition.
+
+    ``wq``: (co, s) M-bit integer codes (held as f32);
+    ``xq``: (s, n) K-bit integer codes.  Returns exact ``wq @ xq``.
+    """
+    co, s = wq.shape
+    _, n = xq.shape
+    co_p = -(-co // BLOCK_CO) * BLOCK_CO
+    n_p = -(-n // BLOCK_N) * BLOCK_N
+    wq_p = _pad_to(wq.astype(jnp.float32), co_p, s)
+    xq_p = _pad_to(xq.astype(jnp.float32), s, n_p)
+    out = pl.pallas_call(
+        partial(_bd_kernel, m_bits, k_bits),
+        grid=(co_p // BLOCK_CO, n_p // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_CO, s), lambda i, j: (i, 0)),
+            pl.BlockSpec((s, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_CO, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((co_p, n_p), jnp.float32),
+        interpret=True,
+    )(wq_p, xq_p)
+    return out[:co, :n]

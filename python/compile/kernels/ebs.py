@@ -1,0 +1,173 @@
+"""L1 Pallas kernels: EBS aggregated quantization (paper Eq. 6 / 17).
+
+This is the search-stage hot-spot.  The paper's O(1) claim — one meta
+weight tensor, one convolution — is realized here as a *fused single
+sweep*: for each VMEM block of the input tensor, all N candidate
+quantizations are computed in-register and reduced against the softmax
+coefficient vector before anything is written back.  HBM traffic is one
+read of W and one write of Ŵ regardless of N (a pure-jnp implementation
+materializes N quantized copies between HBM round-trips unless XLA
+happens to fuse them).
+
+TPU mapping (DESIGN.md §4): W is tiled (BLOCK_R × BLOCK_C) into VMEM via
+``BlockSpec``; the coefficient vector p (length N=5) and the global
+normalizer live in SMEM-resident (1, N)/(1, 1) blocks.  The global
+``max|tanh(W)|`` reduction is a separate tiny jnp pass so the main kernel
+stays single-sweep.
+
+Kernels run ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls; see DESIGN.md §9 for the real-TPU estimate.
+
+Gradients: each public entry point is a ``jax.custom_vjp`` whose forward
+is the Pallas kernel and whose backward is ``jax.vjp`` of the pure-jnp
+oracle in ``ref.py``.  The kernels therefore inherit the paper's STE
+(Eq. 3) and PACT-α (Eq. 18-19) gradients exactly, and can never diverge
+from the reference semantics.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Block geometry: 256×128 f32 = 128 KiB per in/out block — comfortably
+# inside a TPU core's ~16 MiB VMEM with space for double buffering.
+BLOCK_R = 256
+BLOCK_C = 128
+
+
+def _pad2d(flat: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    """Pad a flat vector to a (rows, BLOCK_C) grid-aligned 2D array."""
+    n = flat.shape[0]
+    cols = BLOCK_C
+    rows = -(-n // cols)
+    rows_pad = -(-rows // BLOCK_R) * BLOCK_R
+    padded = jnp.zeros((rows_pad * cols,), flat.dtype).at[:n].set(flat)
+    return padded.reshape(rows_pad, cols), n
+
+
+def _ebs_w_kernel(bits: Tuple[int, ...], w_ref, p_ref, inv2m_ref, o_ref):
+    """One VMEM block of Eq. 6: Ŵ = Σ_i p_i (2·q_{b_i}(norm(W)) − 1).
+
+    ``inv2m`` is 1 / (2·max|tanh(W)|), precomputed by the host pass.
+    The N candidate quantizations live only in registers: the loop below
+    is unrolled at trace time (bits is static).
+    """
+    w = w_ref[...]
+    norm = jnp.tanh(w) * inv2m_ref[0, 0] + 0.5
+    acc = jnp.zeros_like(w)
+    psum = jnp.zeros((), w.dtype)
+    for i, b in enumerate(bits):
+        levels = float((1 << b) - 1)
+        q = jnp.floor(norm * levels + 0.5) / levels
+        acc = acc + p_ref[0, i] * q
+        psum = psum + p_ref[0, i]
+    # Σ p_i (2q−1) = 2 Σ p_i q − Σ p_i  (Σ p_i == 1 for softmax, but the
+    # retrain path may feed arbitrary coefficient vectors, so keep psum).
+    o_ref[...] = 2.0 * acc - psum
+
+
+def _ebs_x_kernel(bits: Tuple[int, ...], x_ref, p_ref, alpha_ref, o_ref):
+    """One VMEM block of Eq. 17: X̂ = α Σ_i p_i q_{b_i}(clip(X,0,α)/α)."""
+    x = x_ref[...]
+    alpha = alpha_ref[0, 0]
+    xt = jnp.clip(x, 0.0, alpha) / alpha
+    acc = jnp.zeros_like(x)
+    for i, b in enumerate(bits):
+        levels = float((1 << b) - 1)
+        q = jnp.floor(xt * levels + 0.5) / levels
+        acc = acc + p_ref[0, i] * q
+    o_ref[...] = alpha * acc
+
+
+def _run_blocked(kernel, arr2d: jnp.ndarray, p: jnp.ndarray, scalar: jnp.ndarray):
+    """Launch a (rows/BLOCK_R,) grid over ``arr2d`` with broadcast scalars."""
+    rows, cols = arr2d.shape
+    grid = (rows // BLOCK_R,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, p.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), arr2d.dtype),
+        interpret=True,
+    )(arr2d, p.reshape(1, -1), scalar.reshape(1, 1))
+
+
+def ebs_weight_quant_fwd(
+    w: jnp.ndarray, p: jnp.ndarray, bits: Sequence[int]
+) -> jnp.ndarray:
+    """Pallas forward for Eq. 6 over an arbitrary-shape weight tensor."""
+    flat = w.reshape(-1)
+    arr2d, n = _pad2d(flat)
+    # Host pass: the single global reduction (tiny; see module docstring).
+    inv2m = 1.0 / (2.0 * jnp.max(jnp.abs(jnp.tanh(flat[:n]))))
+    out = _run_blocked(partial(_ebs_w_kernel, tuple(bits)), arr2d, p, inv2m)
+    return out.reshape(-1)[:n].reshape(w.shape)
+
+
+def ebs_act_quant_fwd(
+    x: jnp.ndarray, p: jnp.ndarray, alpha: jnp.ndarray, bits: Sequence[int]
+) -> jnp.ndarray:
+    """Pallas forward for Eq. 17 over an arbitrary-shape activation tensor."""
+    flat = x.reshape(-1)
+    arr2d, n = _pad2d(flat)
+    out = _run_blocked(partial(_ebs_x_kernel, tuple(bits)), arr2d, p, alpha)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wrappers — forward: Pallas kernel; backward: vjp of the oracle
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def ebs_weight_quant(w: jnp.ndarray, p: jnp.ndarray, bits: Tuple[int, ...]):
+    """Eq. 6 aggregated weight quantization (Pallas fwd, oracle-STE bwd)."""
+    return ebs_weight_quant_fwd(w, p, bits)
+
+
+def _ebs_w_fwd(w, p, bits):
+    return ebs_weight_quant_fwd(w, p, bits), (w, p)
+
+
+def _ebs_w_bwd(bits, res, g):
+    w, p = res
+    _, vjp = jax.vjp(lambda w_, p_: ref.ebs_weight_quant(w_, p_, bits), w, p)
+    return vjp(g)
+
+
+ebs_weight_quant.defvjp(_ebs_w_fwd, _ebs_w_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def ebs_act_quant(
+    x: jnp.ndarray, p: jnp.ndarray, alpha: jnp.ndarray, bits: Tuple[int, ...]
+):
+    """Eq. 17 aggregated activation quantization (Pallas fwd, PACT-α bwd)."""
+    return ebs_act_quant_fwd(x, p, alpha, bits)
+
+
+def _ebs_x_fwd(x, p, alpha, bits):
+    return ebs_act_quant_fwd(x, p, alpha, bits), (x, p, alpha)
+
+
+def _ebs_x_bwd(bits, res, g):
+    x, p, alpha = res
+    _, vjp = jax.vjp(
+        lambda x_, p_, a_: ref.ebs_act_quant(x_, p_, a_, bits), x, p, alpha
+    )
+    return vjp(g)
+
+
+ebs_act_quant.defvjp(_ebs_x_fwd, _ebs_x_bwd)

@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything in this module is the *semantic definition* of the paper's
+numerics (Eq. 1a-1c, 6, 8, 12-14, 17).  The Pallas kernels in ``ebs.py``
+and ``bd.py`` are tested against these functions (pytest + hypothesis),
+and their custom-VJP backward passes are literally ``jax.vjp`` of these
+references, so the kernels can never drift from the oracle.
+
+Conventions
+-----------
+* ``quantize_b`` follows Eq. 1c with *round half up* (``floor(x + 0.5)``),
+  which the paper states explicitly; note ``jnp.round`` is half-to-even
+  and would disagree on exact .5 boundaries.
+* Weights (Eq. 1a) are tanh-normalized into [-1, 1]; the global
+  ``max(|tanh(W)|)`` is part of the forward value and, like DoReFa, is
+  differentiated through (autodiff handles the ``max``).
+* Activations (Eq. 1b / 16a-16c) use a learnable PACT clip ``alpha``;
+  the straight-through estimator on ``quantize_b`` makes autodiff of the
+  composition reproduce the paper's Eq. 18-19 gradients exactly (see
+  DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# The paper's search space (§5 Implementation): B = {1, 2, 3, 4, 5}.
+DEFAULT_BITS: Tuple[int, ...] = (1, 2, 3, 4, 5)
+
+
+def round_half_up(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to nearest integer, ties going up (paper §3, ``round(.)``)."""
+    return jnp.floor(x + 0.5)
+
+
+def ste_round_half_up(x: jnp.ndarray) -> jnp.ndarray:
+    """``round_half_up`` with a straight-through gradient (Eq. 3)."""
+    return x + jax.lax.stop_gradient(round_half_up(x) - x)
+
+
+def quantize_b(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. 1c: uniform quantization of ``x`` in [0, 1] to ``bits`` bits.
+
+    Includes the de-quantize rescale by ``1/(2^b - 1)``.  Straight-through
+    gradient: d quantize_b / dx = 1.
+    """
+    levels = float((1 << bits) - 1)
+    return ste_round_half_up(x * levels) / levels
+
+
+def weight_normalize(w: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1a inner term: map weights to [0, 1] via tanh normalization."""
+    t = jnp.tanh(w)
+    return t / (2.0 * jnp.max(jnp.abs(t))) + 0.5
+
+
+def weight_quant(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. 1a: b-bit quantized weights in [-1, 1]."""
+    return 2.0 * quantize_b(weight_normalize(w), bits) - 1.0
+
+
+def act_normalize(x: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 16a: clip to [0, alpha] and normalize to [0, 1]."""
+    return jnp.clip(x, 0.0, alpha) / alpha
+
+
+def act_quant(x: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. 1b / 16a-16c: b-bit quantized activations in [0, alpha]."""
+    return alpha * quantize_b(act_normalize(x, alpha), bits)
+
+
+def gumbel_softmax(r: jnp.ndarray, g: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 coefficients: softmax((log softmax(r) + g) / tau).
+
+    ``g`` is standard Gumbel(0,1) noise supplied by the caller (the Rust
+    coordinator owns the RNG so artifacts stay deterministic).
+    """
+    logp = jax.nn.log_softmax(r)
+    return jax.nn.softmax((logp + g) / tau)
+
+
+# ---------------------------------------------------------------------------
+# EBS aggregated quantization (the paper's core operation, Eq. 6 / 17)
+# ---------------------------------------------------------------------------
+
+
+def ebs_weight_quant(
+    w: jnp.ndarray, p: jnp.ndarray, bits: Sequence[int] = DEFAULT_BITS
+) -> jnp.ndarray:
+    """Eq. 6 inner sum: softmax-weighted aggregation of quantized weights.
+
+    ``p`` are the (already softmaxed / gumbel-softmaxed) branch
+    coefficients, one per candidate bitwidth.  Only ONE meta weight tensor
+    ``w`` exists; the N quantized views are ephemeral.
+    """
+    norm = weight_normalize(w)
+    agg = jnp.zeros_like(w)
+    for i, b in enumerate(bits):
+        agg = agg + p[i] * (2.0 * quantize_b(norm, b) - 1.0)
+    return agg
+
+
+def ebs_act_quant(
+    x: jnp.ndarray,
+    p: jnp.ndarray,
+    alpha: jnp.ndarray,
+    bits: Sequence[int] = DEFAULT_BITS,
+) -> jnp.ndarray:
+    """Eq. 17: softmax-weighted aggregation of quantized activations.
+
+    The clip/rescale (Eq. 16a/16c) stays outside the per-branch sum so a
+    single learned ``alpha`` serves all branches, exactly as in §B.1.
+    """
+    xt = act_normalize(x, alpha)
+    agg = jnp.zeros_like(x)
+    for i, b in enumerate(bits):
+        agg = agg + p[i] * quantize_b(xt, b)
+    return alpha * agg
+
+
+# ---------------------------------------------------------------------------
+# Binary Decomposition (Eq. 12-14) — deployment-stage reference
+# ---------------------------------------------------------------------------
+
+
+def weight_codes(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Integer codes (0 .. 2^b - 1) for Eq. 1a quantized weights.
+
+    ``weight_quant`` returns ``(2 c / (2^b-1)) - 1`` for code ``c``; the
+    deployment engine works on the raw codes and folds the affine map
+    into the output transform.  Gradient-free (inference only).
+    """
+    levels = float((1 << bits) - 1)
+    return round_half_up(weight_normalize(w) * levels)
+
+
+def act_codes(x: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Integer codes (0 .. 2^b - 1) for Eq. 1b quantized activations."""
+    levels = float((1 << bits) - 1)
+    return round_half_up(act_normalize(x, alpha) * levels)
+
+
+def bitplanes(codes: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    """Expand integer codes into ``bits`` binary {0,1} planes along ``axis``.
+
+    Plane ``m`` holds bit ``m`` (LSB first), matching ``c_m(.)`` in Eq. 2.
+    The planes are *interleaved* per element along ``axis`` so the layout
+    matches the paper's B_w / B_x matrices in Eq. 12: element ``i`` of the
+    original axis becomes elements ``i*bits + m``.
+    """
+    planes = [jnp.mod(jnp.floor(codes / float(1 << m)), 2.0) for m in range(bits)]
+    stacked = jnp.stack(planes, axis=axis + 1)  # (..., orig, bits, ...)
+    new_shape = list(codes.shape)
+    new_shape[axis] = codes.shape[axis] * bits
+    return stacked.reshape(new_shape)
+
+
+def bd_matmul(
+    wq: jnp.ndarray, xq: jnp.ndarray, m_bits: int, k_bits: int
+) -> jnp.ndarray:
+    """Eq. 12-14: mixed precision integer matmul via Binary Decomposition.
+
+    ``wq``: (co, s) integer codes of M-bit weights;
+    ``xq``: (s, n) integer codes of K-bit activations.
+    Returns the exact integer product ``wq @ xq`` computed through the
+    decomposed form  Λ_w (B_w B_x) Λ_xᵀ :
+
+    * B_w ∈ {0,1}^(co·M × s), rows interleaved per output channel;
+    * B_x ∈ {0,1}^(s × n·K), columns interleaved per output column;
+    * P = B_w B_x  (the AND+popcount stage);
+    * the Λ recombination is the stride-(M,K) depthwise conv of Eq. 14,
+      expressed as a reshape + tensordot against the δ_wᵀδ_x kernel.
+    """
+    co, s = wq.shape
+    s2, n = xq.shape
+    assert s == s2
+    bw = bitplanes(wq, m_bits, axis=0)            # (co*M, s)
+    bx = bitplanes(xq, k_bits, axis=1)            # (s, n*K) — interleave cols
+    p = bw @ bx                                   # (co*M, n*K): binary GEMM
+    # Depthwise powers-of-two recombination (Eq. 14 / Fig. 4):
+    p4 = p.reshape(co, m_bits, n, k_bits)
+    delta = jnp.array(
+        [[float(1 << (m + k)) for k in range(k_bits)] for m in range(m_bits)],
+        dtype=p.dtype,
+    )
+    return jnp.einsum("imjk,mk->ij", p4, delta)
+
+
+def bd_conv_output(
+    wq: jnp.ndarray,
+    xq: jnp.ndarray,
+    m_bits: int,
+    k_bits: int,
+    w_scale: float,
+    x_scale: float,
+    w_zero: float,
+) -> jnp.ndarray:
+    """Dequantized mixed precision product.
+
+    Real values are ``w = w_scale * c_w + w_zero`` (weights, Eq. 1a affine:
+    scale 2/(2^M-1), zero -1) and ``x = x_scale * c_x`` (activations).  The
+    affine expansion needs the per-column code sums of ``xq``, which the
+    Rust engine also tracks; kept here so the parity tests cover it.
+    """
+    prod = bd_matmul(wq, xq, m_bits, k_bits)
+    col_sums = jnp.sum(xq, axis=0, keepdims=True)  # (1, n)
+    return w_scale * x_scale * prod + w_zero * x_scale * col_sums

@@ -1,0 +1,112 @@
+"""L2 building blocks: convolution, batch norm, and EBS-quantized conv.
+
+All tensors are NHWC; conv weights are HWIO.  The quantized conv is the
+paper's Eq. 7: both the weight tensor and the input activation tensor are
+aggregated over the candidate-bitwidth branches with externally supplied
+coefficient vectors, then ONE convolution runs — the coefficients are
+softmax(r)/softmax(s) during search, Gumbel-softmax during stochastic
+search, and exact one-hots during retrain/eval (DESIGN.md §7.2).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ebs, ref
+
+# Artifacts embed the Pallas kernels (the L1 layer); tests flip this to
+# compare the pure-jnp oracle path end-to-end.
+USE_PALLAS = os.environ.get("EBS_USE_PALLAS", "1") == "1"
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME-padded 2D convolution, NHWC × HWIO → NHWC."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def batch_norm(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    mean: jnp.ndarray,
+    var: jnp.ndarray,
+    train: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batch norm over N,H,W.  Returns (y, new_mean, new_var).
+
+    Train mode normalizes with batch statistics and exponentially updates
+    the running stats (momentum 0.9); eval mode uses the running stats
+    and returns them unchanged.
+    """
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        sig2 = jnp.var(x, axis=(0, 1, 2))
+        y = (x - mu) / jnp.sqrt(sig2 + BN_EPS)
+        new_mean = BN_MOMENTUM * mean + (1.0 - BN_MOMENTUM) * mu
+        new_var = BN_MOMENTUM * var + (1.0 - BN_MOMENTUM) * sig2
+        return gamma * y + beta, new_mean, new_var
+    y = (x - mean) / jnp.sqrt(var + BN_EPS)
+    return gamma * y + beta, mean, var
+
+
+def ebs_weight(w: jnp.ndarray, pw: jnp.ndarray, bits: Tuple[int, ...]) -> jnp.ndarray:
+    """Aggregated quantized weights (Eq. 6); Pallas kernel or jnp oracle."""
+    if USE_PALLAS:
+        return ebs.ebs_weight_quant(w, pw, bits)
+    return ref.ebs_weight_quant(w, pw, bits)
+
+
+def ebs_act(
+    x: jnp.ndarray, px: jnp.ndarray, alpha: jnp.ndarray, bits: Tuple[int, ...]
+) -> jnp.ndarray:
+    """Aggregated quantized activations (Eq. 17); Pallas or jnp oracle."""
+    if USE_PALLAS:
+        return ebs.ebs_act_quant(x, px, alpha, bits)
+    return ref.ebs_act_quant(x, px, alpha, bits)
+
+
+def qconv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    pw: jnp.ndarray,
+    px: jnp.ndarray,
+    alpha: jnp.ndarray,
+    bits: Tuple[int, ...],
+    stride: int = 1,
+) -> jnp.ndarray:
+    """Eq. 7: one convolution over aggregated quantized weights & acts."""
+    xq = ebs_act(x, px, alpha, bits)
+    wq = ebs_weight(w, pw, bits)
+    return conv2d(xq, wq, stride)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def distill_loss(logits: jnp.ndarray, teacher_logits: jnp.ndarray) -> jnp.ndarray:
+    """KL(teacher ‖ student) — the label-refinery objective (§B.2/Table 2)."""
+    pt = jax.nn.softmax(teacher_logits)
+    return jnp.mean(
+        jnp.sum(pt * (jax.nn.log_softmax(teacher_logits) - jax.nn.log_softmax(logits)), axis=1)
+    )
+
+
+def accuracy_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Number of correct top-1 predictions in the batch (f32 scalar)."""
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))

@@ -1,0 +1,326 @@
+"""L2: EBS-quantized ResNet family (paper §5).
+
+One builder covers both geometries the paper evaluates:
+
+* CIFAR ResNet-20/32/56 (He et al.): 3×3 stem → 3 stages of basic blocks
+  with channels (16, 32, 64).
+* ImageNet ResNet-18/34: 4 stages of basic blocks with channels
+  (64, 128, 256, 512) — reproduced here at reduced input resolution and
+  width (see DESIGN.md §3: the real datasets are not available in this
+  environment, so geometry is preserved and scale is documented).
+
+Per the paper (§B.2) the first convolution and the final classifier stay
+full precision; every other conv (including projection shortcuts) is an
+EBS quantized conv with its own weight-strength r, activation-strength s
+and PACT clip α.
+
+The forward pass is *mode-polymorphic via its inputs*: the per-layer
+branch coefficient vectors are arguments, so the identical graph serves
+search (softmax/Gumbel coefficients computed by the caller), retraining
+and evaluation (one-hot coefficients fed by the Rust coordinator).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .kernels.ref import DEFAULT_BITS
+
+
+@dataclass(frozen=True)
+class StageCfg:
+    channels: int
+    blocks: int
+    stride: int
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Static description of one model variant (baked into artifacts)."""
+
+    name: str
+    image: Tuple[int, int, int]  # (H, W, C)
+    num_classes: int
+    stem_channels: int
+    stages: Tuple[StageCfg, ...]
+    batch_size: int
+    bits: Tuple[int, ...] = DEFAULT_BITS
+    alpha_init: float = 6.0  # paper §B.3
+
+    @property
+    def n_bits(self) -> int:
+        return len(self.bits)
+
+
+def _cifar_resnet(name: str, n: int, batch: int, classes: int = 10) -> ModelCfg:
+    return ModelCfg(
+        name=name,
+        image=(32, 32, 3),
+        num_classes=classes,
+        stem_channels=16,
+        stages=(StageCfg(16, n, 1), StageCfg(32, n, 2), StageCfg(64, n, 2)),
+        batch_size=batch,
+    )
+
+
+# Registry of model variants exported by aot.py.  The *_synth ImageNet
+# geometries run at 32×32/40-class scale (paper itself searches on a
+# 40-category ImageNet subsample, §B.2).
+MODELS: Dict[str, ModelCfg] = {
+    "resnet8_tiny": ModelCfg(
+        name="resnet8_tiny",
+        image=(16, 16, 3),
+        num_classes=10,
+        stem_channels=8,
+        stages=(StageCfg(8, 1, 1), StageCfg(16, 1, 2), StageCfg(32, 1, 2)),
+        batch_size=16,
+    ),
+    "resnet20_synth": _cifar_resnet("resnet20_synth", 3, 32),
+    "resnet32_synth": _cifar_resnet("resnet32_synth", 5, 32),
+    "resnet56_synth": _cifar_resnet("resnet56_synth", 9, 32),
+    "resnet18_synth": ModelCfg(
+        name="resnet18_synth",
+        image=(32, 32, 3),
+        num_classes=40,
+        stem_channels=32,
+        stages=(
+            StageCfg(32, 2, 1),
+            StageCfg(64, 2, 2),
+            StageCfg(128, 2, 2),
+            StageCfg(256, 2, 2),
+        ),
+        batch_size=16,
+    ),
+    "resnet34_synth": ModelCfg(
+        name="resnet34_synth",
+        image=(32, 32, 3),
+        num_classes=40,
+        stem_channels=32,
+        stages=(
+            StageCfg(32, 3, 1),
+            StageCfg(64, 4, 2),
+            StageCfg(128, 6, 2),
+            StageCfg(256, 3, 2),
+        ),
+        batch_size=16,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Layer inventory — the single source of truth for layer ordering, shared
+# with the manifest (and through it with the Rust FLOPs model / BD engine).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ConvDesc:
+    """One convolution of the network, as seen by FLOPs model + BD engine."""
+
+    name: str
+    kind: str  # "stem" | "qconv" | "fc"
+    in_ch: int
+    out_ch: int
+    ksize: int
+    stride: int
+    in_hw: int  # input spatial size (square)
+
+    @property
+    def out_hw(self) -> int:
+        return -(-self.in_hw // self.stride)
+
+    @property
+    def macs(self) -> int:
+        if self.kind == "fc":
+            return self.in_ch * self.out_ch
+        return self.ksize * self.ksize * self.in_ch * self.out_ch * self.out_hw**2
+
+
+def conv_inventory(cfg: ModelCfg) -> List[ConvDesc]:
+    """Every conv/fc in forward order, with shapes resolved."""
+    convs: List[ConvDesc] = []
+    hw = cfg.image[0]
+    convs.append(ConvDesc("stem", "stem", cfg.image[2], cfg.stem_channels, 3, 1, hw))
+    in_ch = cfg.stem_channels
+    for si, st in enumerate(cfg.stages):
+        for bi in range(st.blocks):
+            stride = st.stride if bi == 0 else 1
+            base = f"s{si}b{bi}"
+            convs.append(ConvDesc(f"{base}c1", "qconv", in_ch, st.channels, 3, stride, hw))
+            out_hw = -(-hw // stride)
+            convs.append(ConvDesc(f"{base}c2", "qconv", st.channels, st.channels, 3, 1, out_hw))
+            if stride != 1 or in_ch != st.channels:
+                convs.append(ConvDesc(f"{base}sc", "qconv", in_ch, st.channels, 1, stride, hw))
+            hw = out_hw
+            in_ch = st.channels
+    convs.append(ConvDesc("fc", "fc", in_ch, cfg.num_classes, 1, 1, 1))
+    return convs
+
+
+def qconv_names(cfg: ModelCfg) -> List[str]:
+    """Ordered names of the quantized convs — the manifest layer order."""
+    return [c.name for c in conv_inventory(cfg) if c.kind == "qconv"]
+
+
+# ---------------------------------------------------------------------------
+# Parameter/state initialization
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelCfg, seed: jnp.ndarray):
+    """Build the full training state pytree from a scalar int seed.
+
+    Exported as the ``init`` artifact so Rust never re-implements
+    initializer math.  Layout (canonical leaf order = sorted dict keys,
+    recorded in the manifest):
+
+      params  – conv/fc weights + BN affine
+      alphas  – PACT clip per qconv (init 6.0, §B.3)
+      arch    – r, s strengths per qconv (init 0, §B.2)
+      bn      – running mean/var
+      opt     – SGD velocity (params+alphas), Adam m/v/t (arch)
+    """
+    key = jax.random.PRNGKey(seed)
+    convs = conv_inventory(cfg)
+    params: Dict = {}
+    bn: Dict = {}
+    alphas: Dict = {}
+    arch_r: Dict = {}
+    arch_s: Dict = {}
+    n = cfg.n_bits
+
+    for c in convs:
+        key, k1 = jax.random.split(key)
+        if c.kind == "fc":
+            scale = 1.0 / jnp.sqrt(float(c.in_ch))
+            params[c.name] = {
+                "w": jax.random.uniform(k1, (c.in_ch, c.out_ch), jnp.float32, -scale, scale),
+                "b": jnp.zeros((c.out_ch,), jnp.float32),
+            }
+            continue
+        fan_in = c.ksize * c.ksize * c.in_ch
+        std = jnp.sqrt(2.0 / float(fan_in))  # He init
+        params[c.name] = {
+            "w": std * jax.random.normal(k1, (c.ksize, c.ksize, c.in_ch, c.out_ch), jnp.float32)
+        }
+        params["bn_" + c.name] = {
+            "gamma": jnp.ones((c.out_ch,), jnp.float32),
+            "beta": jnp.zeros((c.out_ch,), jnp.float32),
+        }
+        bn[c.name] = {
+            "mean": jnp.zeros((c.out_ch,), jnp.float32),
+            "var": jnp.ones((c.out_ch,), jnp.float32),
+        }
+        if c.kind == "qconv":
+            alphas[c.name] = jnp.full((), cfg.alpha_init, jnp.float32)
+            arch_r[c.name] = jnp.zeros((n,), jnp.float32)
+            arch_s[c.name] = jnp.zeros((n,), jnp.float32)
+
+    state = {
+        "params": params,
+        "alphas": alphas,
+        "arch": {"r": arch_r, "s": arch_s},
+        "bn": bn,
+        "opt": {
+            "mom": {
+                "params": jax.tree.map(jnp.zeros_like, params),
+                "alphas": jax.tree.map(jnp.zeros_like, alphas),
+            },
+            "adam": {
+                "m": {
+                    "r": jax.tree.map(jnp.zeros_like, arch_r),
+                    "s": jax.tree.map(jnp.zeros_like, arch_s),
+                },
+                "v": {
+                    "r": jax.tree.map(jnp.zeros_like, arch_r),
+                    "s": jax.tree.map(jnp.zeros_like, arch_s),
+                },
+                "t": jnp.zeros((), jnp.float32),
+            },
+        },
+    }
+    return state
+
+
+def decay_mask(cfg: ModelCfg, params) -> Dict:
+    """1.0 on conv/fc weights (L2-decayed, §B.2), 0.0 on BN affine + bias."""
+
+    def mask_entry(path_name: str, leaf_name: str):
+        decayed = (not path_name.startswith("bn_")) and leaf_name == "w"
+        return jnp.full((), 1.0 if decayed else 0.0, jnp.float32)
+
+    return {
+        pname: {lname: mask_entry(pname, lname) for lname in group}
+        for pname, group in params.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelCfg,
+    params,
+    alphas,
+    coeffs_w,  # {qconv_name: (N,) coefficient vector}
+    coeffs_x,
+    bn_state,
+    x: jnp.ndarray,
+    train: bool,
+    quantized: bool = True,
+):
+    """Logits + updated BN running stats.
+
+    ``quantized=False`` gives the full-precision network (used for the
+    pre-training stage that initializes the search, §B.2, and as the
+    Table 1 "Full Prec." row / label-refinery teacher).
+    """
+    new_bn = {k: dict(v) for k, v in bn_state.items()}
+
+    def apply_bn(name, h):
+        p = params["bn_" + name]
+        y, m, v = layers.batch_norm(
+            h, p["gamma"], p["beta"], bn_state[name]["mean"], bn_state[name]["var"], train
+        )
+        new_bn[name] = {"mean": m, "var": v}
+        return y
+
+    def conv(name, h, stride, quant):
+        w = params[name]["w"]
+        if quant and quantized:
+            return layers.qconv2d(
+                h, w, coeffs_w[name], coeffs_x[name], alphas[name], cfg.bits, stride
+            )
+        return layers.conv2d(h, w, stride)
+
+    h = conv("stem", x, 1, quant=False)
+    h = apply_bn("stem", h)
+    h = jax.nn.relu(h)
+
+    in_ch = cfg.stem_channels
+    for si, st in enumerate(cfg.stages):
+        for bi in range(st.blocks):
+            stride = st.stride if bi == 0 else 1
+            base = f"s{si}b{bi}"
+            ident = h
+            y = conv(f"{base}c1", h, stride, quant=True)
+            y = apply_bn(f"{base}c1", y)
+            y = jax.nn.relu(y)
+            y = conv(f"{base}c2", y, 1, quant=True)
+            y = apply_bn(f"{base}c2", y)
+            if stride != 1 or in_ch != st.channels:
+                ident = conv(f"{base}sc", h, stride, quant=True)
+                ident = apply_bn(f"{base}sc", ident)
+            h = jax.nn.relu(y + ident)
+            in_ch = st.channels
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    logits = h @ params["fc"]["w"] + params["fc"]["b"]
+    return logits, new_bn

@@ -1,0 +1,73 @@
+"""In-graph optimizers (L2).
+
+The paper trains weights + clip parameters with SGD-momentum(0.9) and the
+architecture strengths r, s with Adam(lr=0.02) (§B.2).  Both live inside
+the exported step graphs so the Rust coordinator only moves opaque state
+tensors; hyperparameters that the coordinator schedules (lr, weight
+decay) are runtime scalar inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def sgd_momentum(
+    params: Pytree,
+    grads: Pytree,
+    velocity: Pytree,
+    lr: jnp.ndarray,
+    weight_decay: jnp.ndarray,
+    decay_mask: Pytree = None,
+    momentum: float = 0.9,
+) -> Tuple[Pytree, Pytree]:
+    """Heavy-ball SGD: v' = m v + (g + wd·p);  p' = p − lr v'.
+
+    ``decay_mask`` mirrors ``params`` with 1.0 where L2 decay applies
+    (conv/fc weights and α, per §B.2) and 0.0 elsewhere (BN affine).
+    """
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda p: jnp.ones((), p.dtype), params)
+
+    def upd(p, g, v, mask):
+        g = g + weight_decay * mask * p
+        v_new = momentum * v + g
+        return p - lr * v_new, v_new
+
+    out = jax.tree.map(upd, params, grads, velocity, decay_mask)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_vel = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_vel
+
+
+def adam(
+    params: Pytree,
+    grads: Pytree,
+    m: Pytree,
+    v: Pytree,
+    t: jnp.ndarray,
+    lr: jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[Pytree, Pytree, Pytree, jnp.ndarray]:
+    """Adam with bias correction; ``t`` is the (scalar, f32) step counter."""
+    t_new = t + 1.0
+
+    def upd(p, g, m_, v_):
+        m_new = b1 * m_ + (1.0 - b1) * g
+        v_new = b2 * v_ + (1.0 - b2) * g * g
+        m_hat = m_new / (1.0 - b1 ** t_new)
+        v_hat = v_new / (1.0 - b2 ** t_new)
+        return p - lr * m_hat / (jnp.sqrt(v_hat) + eps), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, m, v)
+    pick = lambda i: jax.tree.map(
+        lambda tup: tup[i], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return pick(0), pick(1), pick(2), t_new

@@ -1,0 +1,265 @@
+"""L2 step graphs — the units the Rust coordinator executes (Alg. 1).
+
+Every public builder returns a pure function over pytrees.  ``aot.py``
+flattens these (state first, then named inputs, then scalars), lowers
+them to HLO text and records the leaf ordering in the manifest; the Rust
+runtime replays them as `state × batch × scalars → state' × metrics`.
+
+Graph family per model (DESIGN.md §7):
+
+  init            seed → fresh training state
+  fp_train        full-precision pre-training step (§B.2 initialization)
+  fp_eval         full-precision eval (loss + correct count)
+  fp_infer        full-precision logits (label-refinery teacher)
+  train           retrain step; one-hot selection vectors are INPUTS
+  eval            eval under given selection (loss + correct count)
+  infer           logits under given selection (BD parity oracle)
+  search_det      Alg. 1 body, deterministic (softmax coefficients)
+  search_sto      Alg. 1 body, stochastic (Gumbel-softmax, Eq. 8)
+
+The bilevel structure (Eq. 9-10): the weight phase updates (params, α)
+by SGD-momentum on the train batch; the architecture phase updates
+(r, s) by Adam on the validation batch with the expected-FLOPs penalty.
+Validation forwards use batch statistics but do NOT update the BN
+running stats (standard DARTS practice — the weights own the BN state).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flops, layers, optim
+from .kernels import ref
+from .model import ModelCfg, decay_mask, forward, init_state, qconv_names
+
+
+def coeff_dicts(cfg: ModelCfg, sel_w: jnp.ndarray, sel_x: jnp.ndarray):
+    """Split (L, N) coefficient matrices into per-layer dicts (manifest order)."""
+    names = qconv_names(cfg)
+    cw = {name: sel_w[i] for i, name in enumerate(names)}
+    cx = {name: sel_x[i] for i, name in enumerate(names)}
+    return cw, cx
+
+
+def _softmax_coeffs(cfg: ModelCfg, arch):
+    cw = {n: jax.nn.softmax(arch["r"][n]) for n in qconv_names(cfg)}
+    cx = {n: jax.nn.softmax(arch["s"][n]) for n in qconv_names(cfg)}
+    return cw, cx
+
+
+def _gumbel_coeffs(cfg: ModelCfg, arch, g_r, g_s, tau):
+    names = qconv_names(cfg)
+    cw = {n: ref.gumbel_softmax(arch["r"][n], g_r[i], tau) for i, n in enumerate(names)}
+    cx = {n: ref.gumbel_softmax(arch["s"][n], g_s[i], tau) for i, n in enumerate(names)}
+    return cw, cx
+
+
+def _ce_metrics(logits, y):
+    return layers.cross_entropy(logits, y), layers.accuracy_count(logits, y)
+
+
+# ---------------------------------------------------------------------------
+# Plain steps
+# ---------------------------------------------------------------------------
+
+
+def make_init(cfg: ModelCfg):
+    def init(inputs):
+        return {"state": init_state(cfg, inputs["seed"])}
+
+    return init
+
+
+def _weight_phase(cfg, state, cw, cx, x, y, lr, wd, mu, teacher, quantized):
+    """SGD-momentum update of (params, α) on one batch; returns new state."""
+
+    def loss_fn(wa):
+        params, alphas = wa
+        logits, new_bn = forward(
+            cfg, params, alphas, cw, cx, state["bn"], x, train=True, quantized=quantized
+        )
+        ce = layers.cross_entropy(logits, y)
+        loss = ce
+        if teacher is not None:
+            loss = (1.0 - mu) * ce + mu * layers.distill_loss(logits, teacher)
+        return loss, (new_bn, logits, ce)
+
+    (loss, (new_bn, logits, _)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        (state["params"], state["alphas"])
+    )
+    gp, ga = grads
+    masks = decay_mask(cfg, state["params"])
+    new_params, new_vp = optim.sgd_momentum(
+        state["params"], gp, state["opt"]["mom"]["params"], lr, wd, masks
+    )
+    new_alphas, new_va = optim.sgd_momentum(
+        state["alphas"], ga, state["opt"]["mom"]["alphas"], lr, wd
+    )
+    new_state = dict(state)
+    new_state["params"] = new_params
+    new_state["alphas"] = new_alphas
+    new_state["bn"] = new_bn
+    new_state["opt"] = dict(state["opt"])
+    new_state["opt"]["mom"] = {"params": new_vp, "alphas": new_va}
+    acc = layers.accuracy_count(logits, y) / y.shape[0]
+    return new_state, loss, acc
+
+
+def make_fp_train(cfg: ModelCfg):
+    """Full-precision training step (pretrain stage + Table 1 FP row)."""
+
+    def step(state, inputs):
+        ns, loss, acc = _weight_phase(
+            cfg, state, None, None, inputs["x"], inputs["y"],
+            inputs["lr"], inputs["wd"], None, None, quantized=False,
+        )
+        return {"state": ns, "out": {"acc": acc, "loss": loss}}
+
+    return step
+
+
+def make_train(cfg: ModelCfg):
+    """Retrain step: selection coefficients (usually one-hot) are inputs.
+
+    ``mu`` blends in the label-refinery KL term; feed mu=0 and zero
+    teacher logits to train on hard labels only.
+    """
+
+    def step(state, inputs):
+        cw, cx = coeff_dicts(cfg, inputs["sel_w"], inputs["sel_x"])
+        ns, loss, acc = _weight_phase(
+            cfg, state, cw, cx, inputs["x"], inputs["y"],
+            inputs["lr"], inputs["wd"], inputs["mu"], inputs["teacher"], quantized=True,
+        )
+        return {"state": ns, "out": {"acc": acc, "loss": loss}}
+
+    return step
+
+
+def make_eval(cfg: ModelCfg, quantized: bool):
+    """Eval on one batch with running BN stats: (loss, correct count)."""
+
+    def step(state, inputs):
+        if quantized:
+            cw, cx = coeff_dicts(cfg, inputs["sel_w"], inputs["sel_x"])
+        else:
+            cw, cx = None, None
+        logits, _ = forward(
+            cfg, state["params"], state["alphas"], cw, cx, state["bn"],
+            inputs["x"], train=False, quantized=quantized,
+        )
+        loss, correct = _ce_metrics(logits, inputs["y"])
+        return {"out": {"correct": correct, "loss": loss}}
+
+    return step
+
+
+def make_infer(cfg: ModelCfg, quantized: bool):
+    """Logits on one batch (BD parity oracle / distillation teacher)."""
+
+    def step(state, inputs):
+        if quantized:
+            cw, cx = coeff_dicts(cfg, inputs["sel_w"], inputs["sel_x"])
+        else:
+            cw, cx = None, None
+        logits, _ = forward(
+            cfg, state["params"], state["alphas"], cw, cx, state["bn"],
+            inputs["x"], train=False, quantized=quantized,
+        )
+        return {"out": {"logits": logits}}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Bilevel search steps (Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def _arch_phase(cfg, state, coeff_fn, xv, yv, lr_arch, lam, target):
+    """Adam update of (r, s) on the validation batch under Eq. 9."""
+
+    def loss_fn(arch):
+        cw, cx = coeff_fn(arch)
+        logits, _ = forward(
+            cfg, state["params"], state["alphas"], cw, cx, state["bn"],
+            xv, train=True, quantized=True,
+        )
+        ce = layers.cross_entropy(logits, yv)
+        eflops = flops.expected_mflops(cfg, cw, cx)
+        # Relative-overshoot hinge keeps λ comparable across model sizes.
+        penalty = lam * jax.nn.relu(eflops - target) / target
+        return ce + penalty, (ce, layers.accuracy_count(logits, yv), eflops)
+
+    (_, (val_ce, correct, eflops)), g_arch = jax.value_and_grad(loss_fn, has_aux=True)(
+        state["arch"]
+    )
+    adam_state = state["opt"]["adam"]
+    new_arch, new_m, new_v, new_t = optim.adam(
+        state["arch"], g_arch, adam_state["m"], adam_state["v"], adam_state["t"], lr_arch
+    )
+    new_state = dict(state)
+    new_state["arch"] = new_arch
+    new_state["opt"] = dict(state["opt"])
+    new_state["opt"]["adam"] = {"m": new_m, "v": new_v, "t": new_t}
+    return new_state, val_ce, correct, eflops
+
+
+def make_search_det(cfg: ModelCfg):
+    """Deterministic EBS search step: softmax(r), softmax(s) coefficients."""
+
+    def step(state, inputs):
+        cw, cx = _softmax_coeffs(cfg, state["arch"])
+        st1, train_loss, _ = _weight_phase(
+            cfg, state, cw, cx, inputs["xt"], inputs["yt"],
+            inputs["lr_w"], inputs["wd"], None, None, quantized=True,
+        )
+        st2, val_loss, correct, eflops = _arch_phase(
+            cfg, st1, lambda arch: _softmax_coeffs(cfg, arch),
+            inputs["xv"], inputs["yv"], inputs["lr_arch"], inputs["lam"], inputs["target"],
+        )
+        return {
+            "state": st2,
+            "out": {
+                "eflops": eflops,
+                "train_loss": train_loss,
+                "val_acc": correct / inputs["yv"].shape[0],
+                "val_loss": val_loss,
+            },
+        }
+
+    return step
+
+
+def make_search_sto(cfg: ModelCfg):
+    """Stochastic EBS search step: Gumbel-softmax coefficients (Eq. 8).
+
+    One Gumbel sample per step (supplied by Rust) is shared by the weight
+    and architecture phases.
+    """
+
+    def step(state, inputs):
+        g_r, g_s, tau = inputs["g_r"], inputs["g_s"], inputs["tau"]
+        cw, cx = _gumbel_coeffs(cfg, state["arch"], g_r, g_s, tau)
+        st1, train_loss, _ = _weight_phase(
+            cfg, state, cw, cx, inputs["xt"], inputs["yt"],
+            inputs["lr_w"], inputs["wd"], None, None, quantized=True,
+        )
+        st2, val_loss, correct, eflops = _arch_phase(
+            cfg, st1, lambda arch: _gumbel_coeffs(cfg, arch, g_r, g_s, tau),
+            inputs["xv"], inputs["yv"], inputs["lr_arch"], inputs["lam"], inputs["target"],
+        )
+        return {
+            "state": st2,
+            "out": {
+                "eflops": eflops,
+                "train_loss": train_loss,
+                "val_acc": correct / inputs["yv"].shape[0],
+                "val_loss": val_loss,
+            },
+        }
+
+    return step

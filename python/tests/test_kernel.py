@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the kernel layer — hypothesis
+sweeps shapes, dtypes-of-content (scale ranges), bit subsets and
+coefficient vectors, asserting allclose between the fused Pallas kernels
+and the reference, plus gradient semantics (STE Eq. 3, PACT Eq. 18-19).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bd, ebs, ref
+
+BITS_FULL = (1, 2, 3, 4, 5)
+
+
+def rand_coeffs(rng, n):
+    r = rng.randn(n).astype(np.float32)
+    return jax.nn.softmax(jnp.array(r))
+
+
+# ---------------------------------------------------------------------------
+# EBS aggregated quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    cols=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 10.0),
+)
+def test_ebs_weight_kernel_matches_ref(rows, cols, seed, scale):
+    rng = np.random.RandomState(seed)
+    w = jnp.array(scale * rng.randn(rows, cols).astype(np.float32))
+    p = rand_coeffs(rng, len(BITS_FULL))
+    got = ebs.ebs_weight_quant(w, p, BITS_FULL)
+    want = ref.ebs_weight_quant(w, p, BITS_FULL)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    hw=st.integers(1, 12),
+    ch=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(0.3, 8.0),
+)
+def test_ebs_act_kernel_matches_ref(n, hw, ch, seed, alpha):
+    rng = np.random.RandomState(seed)
+    x = jnp.array(np.abs(rng.randn(n, hw, hw, ch)).astype(np.float32) * 3.0)
+    p = rand_coeffs(rng, len(BITS_FULL))
+    a = jnp.float32(alpha)
+    got = ebs.ebs_act_quant(x, p, a, BITS_FULL)
+    want = ref.ebs_act_quant(x, p, a, BITS_FULL)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [(1,), (2, 3), (1, 3, 5), BITS_FULL])
+def test_ebs_weight_bit_subsets(bits):
+    rng = np.random.RandomState(0)
+    w = jnp.array(rng.randn(33, 29).astype(np.float32))
+    p = rand_coeffs(rng, len(bits))
+    np.testing.assert_allclose(
+        ebs.ebs_weight_quant(w, p, bits), ref.ebs_weight_quant(w, p, bits), atol=1e-5
+    )
+
+
+def test_onehot_coefficients_reduce_to_single_precision():
+    """One-hot p ⇒ aggregation equals plain Eq. 1a quantization — the
+    retrain graphs rely on this (DESIGN.md §7.2)."""
+    rng = np.random.RandomState(1)
+    w = jnp.array(rng.randn(17, 40).astype(np.float32))
+    for i, b in enumerate(BITS_FULL):
+        p = jnp.zeros(len(BITS_FULL)).at[i].set(1.0)
+        np.testing.assert_allclose(
+            ebs.ebs_weight_quant(w, p, BITS_FULL), ref.weight_quant(w, b), atol=1e-6
+        )
+
+
+def test_ste_weight_gradient_is_passthrough_sum():
+    """Eq. 3: with softmax coefficients summing to 1, dŴ/dW ≈ 1 away
+    from the tanh-normalization extremes."""
+    rng = np.random.RandomState(2)
+    w = jnp.array(rng.randn(64).astype(np.float32))
+    p = rand_coeffs(rng, 5)
+
+    g_kernel = jax.grad(lambda w_: jnp.sum(ebs.ebs_weight_quant(w_, p, BITS_FULL)))(w)
+    g_ref = jax.grad(lambda w_: jnp.sum(ref.ebs_weight_quant(w_, p, BITS_FULL)))(w)
+    np.testing.assert_allclose(g_kernel, g_ref, atol=1e-5)
+
+
+def test_pact_alpha_gradient_matches_eq19():
+    """Eq. 18-19: for x > α the gradient w.r.t. α is 1; for x ≤ α it is
+    Σ p_i (q_i(x/α) − x/α)."""
+    p = jnp.array([0.25, 0.75], dtype=jnp.float32)
+    bits = (2, 3)
+    alpha = jnp.float32(2.0)
+
+    # region x > alpha
+    x_hi = jnp.array([3.0, 5.0], dtype=jnp.float32)
+    g = jax.grad(lambda a: jnp.sum(ebs.ebs_act_quant(x_hi, p, a, bits)))(alpha)
+    np.testing.assert_allclose(g, float(len(x_hi)), atol=1e-5)
+
+    # region 0 < x < alpha: compare against the analytic Eq. 19
+    x_lo = jnp.array([0.37, 1.21], dtype=jnp.float32)
+    g = jax.grad(lambda a: jnp.sum(ebs.ebs_act_quant(x_lo, p, a, bits)))(alpha)
+    xt = x_lo / alpha
+    analytic = sum(
+        float(p[i]) * float(jnp.sum(ref.quantize_b(xt, b) - xt))
+        for i, b in enumerate(bits)
+    )
+    np.testing.assert_allclose(g, analytic, atol=1e-5)
+
+
+def test_gumbel_softmax_coefficients_are_distribution():
+    rng = np.random.RandomState(3)
+    r = jnp.array(rng.randn(5).astype(np.float32))
+    g = jnp.array(rng.gumbel(size=5).astype(np.float32))
+    for tau in (1.0, 0.4):
+        c = ref.gumbel_softmax(r, g, jnp.float32(tau))
+        assert float(jnp.sum(c)) == pytest.approx(1.0, abs=1e-5)
+        assert float(jnp.min(c)) >= 0.0
+    # τ → 0 approaches one-hot at argmax(log p + g)
+    c_cold = ref.gumbel_softmax(r, g, jnp.float32(1e-4))
+    assert float(jnp.max(c_cold)) > 0.999
+
+
+def test_round_half_up_vs_numpy_banker():
+    x = jnp.array([0.5, 1.5, 2.5, -0.5])
+    np.testing.assert_allclose(ref.round_half_up(x), [1.0, 2.0, 3.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# Binary Decomposition kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    co=st.integers(1, 40),
+    s=st.integers(1, 80),
+    n=st.integers(1, 40),
+    mb=st.integers(1, 5),
+    kb=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bd_kernel_exact_integer_product(co, s, n, mb, kb, seed):
+    rng = np.random.RandomState(seed)
+    wq = jnp.array(rng.randint(0, 1 << mb, (co, s)).astype(np.float32))
+    xq = jnp.array(rng.randint(0, 1 << kb, (s, n)).astype(np.float32))
+    direct = wq @ xq
+    np.testing.assert_array_equal(ref.bd_matmul(wq, xq, mb, kb), direct)
+    np.testing.assert_array_equal(bd.bd_matmul(wq, xq, mb, kb), direct)
+
+
+def test_bd_bitplane_shapes_match_eq12():
+    """Eq. 12: B_w ∈ {0,1}^{co·M × s}, B_x ∈ {0,1}^{s × n·K}."""
+    wq = jnp.array(np.arange(6).reshape(2, 3) % 4, dtype=jnp.float32)
+    bw = ref.bitplanes(wq, 2, axis=0)
+    assert bw.shape == (4, 3)
+    assert set(np.unique(np.asarray(bw))) <= {0.0, 1.0}
+    xq = jnp.array(np.arange(6).reshape(3, 2) % 8, dtype=jnp.float32)
+    bx = ref.bitplanes(xq, 3, axis=1)
+    assert bx.shape == (3, 6)
+
+
+def test_bd_dequant_affine():
+    """w_scale·c_w + w_zero decode against a float matmul of decoded values."""
+    rng = np.random.RandomState(4)
+    m_bits, k_bits = 2, 3
+    wq = jnp.array(rng.randint(0, 4, (5, 11)).astype(np.float32))
+    xq = jnp.array(rng.randint(0, 8, (11, 6)).astype(np.float32))
+    w_scale, w_zero = 2.0 / 3.0, -1.0
+    x_scale = 4.0 / 7.0
+    got = ref.bd_conv_output(wq, xq, m_bits, k_bits, w_scale, x_scale, w_zero)
+    want = (w_scale * wq + w_zero) @ (x_scale * xq)
+    np.testing.assert_allclose(got, want, atol=1e-4)

@@ -1,0 +1,174 @@
+"""L2 model tests: topology, state layout, FLOPs model, forward shapes,
+and the training-mode vs eval-mode BN contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import flops, steps
+from compile.model import MODELS, conv_inventory, forward, init_state, qconv_names
+
+
+CFG = MODELS["resnet8_tiny"]
+
+
+def softmax_coeffs(cfg, state):
+    cw = {n: jax.nn.softmax(state["arch"]["r"][n]) for n in qconv_names(cfg)}
+    cx = {n: jax.nn.softmax(state["arch"]["s"][n]) for n in qconv_names(cfg)}
+    return cw, cx
+
+
+def test_conv_inventory_depths():
+    # CIFAR resnets: 3 stages × n blocks × 2 convs + stem + fc (+ shortcuts)
+    for name, n, want_convs in [("resnet20_synth", 3, 20), ("resnet32_synth", 5, 32), ("resnet56_synth", 9, 56)]:
+        cfg = MODELS[name]
+        inv = conv_inventory(cfg)
+        main_path = [c for c in inv if not c.name.endswith("sc")]
+        assert len(main_path) == want_convs, name
+        # shortcut projections appear exactly at the 2 downsampling blocks
+        scs = [c for c in inv if c.name.endswith("sc")]
+        assert len(scs) == 2, name
+
+
+def test_macs_match_known_resnet20_shape():
+    cfg = MODELS["resnet20_synth"]
+    total = flops.full_precision_mflops(cfg)
+    # classic resnet20/CIFAR is ~40.8 MFLOPs (MAC count) + our projection
+    # shortcuts; allow the small delta
+    assert 38.0 < total < 44.0, total
+
+
+def test_uniform_flops_ordering_and_ratio():
+    cfg = MODELS["resnet20_synth"]
+    costs = [flops.uniform_mflops(cfg, b, b) for b in (1, 2, 3, 4, 5)]
+    assert all(a < b for a, b in zip(costs, costs[1:]))
+    # 1-bit cost ≈ fp/64 + stem/fc: the paper's ~36x saving territory
+    saving = flops.full_precision_mflops(cfg) / costs[0]
+    assert 20.0 < saving < 50.0, saving
+
+
+def test_expected_flops_onehot_equals_uniform():
+    cfg = CFG
+    names = qconv_names(cfg)
+    n = cfg.n_bits
+    for bi, b in enumerate(cfg.bits):
+        onehot = jnp.zeros((n,)).at[bi].set(1.0)
+        cw = {name: onehot for name in names}
+        e = float(flops.expected_mflops(cfg, cw, cw))
+        assert e == pytest.approx(flops.uniform_mflops(cfg, b, b), rel=1e-6)
+
+
+def test_expected_flops_grad_flows_to_strengths():
+    cfg = CFG
+    state = init_state(cfg, jnp.int32(0))
+
+    def cost(arch):
+        cw = {n: jax.nn.softmax(arch["r"][n]) for n in qconv_names(cfg)}
+        cx = {n: jax.nn.softmax(arch["s"][n]) for n in qconv_names(cfg)}
+        return flops.expected_mflops(cfg, cw, cx)
+
+    g = jax.grad(cost)(state["arch"])
+    some = g["r"][qconv_names(cfg)[0]]
+    assert float(jnp.sum(jnp.abs(some))) > 0.0
+    # pushing mass toward higher bits must increase expected cost
+    assert float(some[-1]) > float(some[0])
+
+
+def test_forward_shapes_and_bn_update():
+    cfg = CFG
+    state = init_state(cfg, jnp.int32(0))
+    cw, cx = softmax_coeffs(cfg, state)
+    x = jnp.ones((cfg.batch_size, *cfg.image), jnp.float32)
+    logits, new_bn = forward(
+        cfg, state["params"], state["alphas"], cw, cx, state["bn"], x, train=True
+    )
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+    # train mode must move the running stats
+    assert not np.allclose(np.asarray(new_bn["stem"]["mean"]), 0.0)
+    # eval mode must not
+    _, bn_eval = forward(
+        cfg, state["params"], state["alphas"], cw, cx, state["bn"], x, train=False
+    )
+    np.testing.assert_array_equal(bn_eval["stem"]["mean"], state["bn"]["stem"]["mean"])
+
+
+def test_state_leaf_paths_are_stable():
+    """The Rust runtime depends on deterministic flattening order."""
+    cfg = CFG
+    s1 = jax.tree_util.tree_flatten_with_path({"state": init_state(cfg, jnp.int32(0))})[0]
+    s2 = jax.tree_util.tree_flatten_with_path({"state": init_state(cfg, jnp.int32(1))})[0]
+    p1 = [jax.tree_util.keystr(p) for p, _ in s1]
+    p2 = [jax.tree_util.keystr(p) for p, _ in s2]
+    assert p1 == p2
+    assert len(p1) == len(set(p1)), "duplicate leaf paths"
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    cfg = CFG
+    step = steps.make_fp_train(cfg)
+    state = init_state(cfg, jnp.int32(0))
+    rng = np.random.RandomState(0)
+    x = jnp.array(np.abs(rng.randn(cfg.batch_size, *cfg.image)).astype(np.float32))
+    y = jnp.array(rng.randint(0, cfg.num_classes, cfg.batch_size).astype(np.int32))
+    jstep = jax.jit(lambda s: step(s, {"x": x, "y": y, "lr": jnp.float32(0.1), "wd": jnp.float32(0.0)}))
+    losses = []
+    for _ in range(6):
+        out = jstep(state)
+        state = out["state"]
+        losses.append(float(out["out"]["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_search_step_updates_arch_and_reports_eflops():
+    cfg = CFG
+    step = steps.make_search_det(cfg)
+    state = init_state(cfg, jnp.int32(0))
+    rng = np.random.RandomState(1)
+    mk = lambda: (
+        jnp.array(np.abs(rng.randn(cfg.batch_size, *cfg.image)).astype(np.float32)),
+        jnp.array(rng.randint(0, cfg.num_classes, cfg.batch_size).astype(np.int32)),
+    )
+    xt, yt = mk()
+    xv, yv = mk()
+    inputs = {
+        "xt": xt, "yt": yt, "xv": xv, "yv": yv,
+        "lr_w": jnp.float32(0.01), "lr_arch": jnp.float32(0.02),
+        "wd": jnp.float32(5e-4), "lam": jnp.float32(1.0),
+        "target": jnp.float32(0.05),
+    }
+    out = jax.jit(lambda s: step(s, inputs))(state)
+    name = qconv_names(cfg)[0]
+    assert not np.allclose(
+        np.asarray(out["state"]["arch"]["r"][name]), np.asarray(state["arch"]["r"][name])
+    )
+    lo = flops.uniform_mflops(cfg, 1, 1)
+    hi = flops.uniform_mflops(cfg, 5, 5)
+    assert lo * 0.9 <= float(out["out"]["eflops"]) <= hi * 1.1
+    # Adam step counter advanced
+    assert float(out["state"]["opt"]["adam"]["t"]) == 1.0
+
+
+def test_flops_penalty_pushes_bits_down():
+    """With a tight target and large λ, repeated arch steps must reduce
+    expected FLOPs — the mechanism behind Eq. 9."""
+    cfg = CFG
+    step = steps.make_search_det(cfg)
+    state = init_state(cfg, jnp.int32(0))
+    rng = np.random.RandomState(2)
+    x = jnp.array(np.abs(rng.randn(cfg.batch_size, *cfg.image)).astype(np.float32))
+    y = jnp.array(rng.randint(0, cfg.num_classes, cfg.batch_size).astype(np.int32))
+    inputs = {
+        "xt": x, "yt": y, "xv": x, "yv": y,
+        "lr_w": jnp.float32(0.0), "lr_arch": jnp.float32(0.05),
+        "wd": jnp.float32(0.0), "lam": jnp.float32(20.0),
+        "target": jnp.float32(flops.uniform_mflops(cfg, 1, 1)),
+    }
+    jstep = jax.jit(lambda s: step(s, inputs))
+    first = None
+    for i in range(8):
+        out = jstep(state)
+        state = out["state"]
+        if first is None:
+            first = float(out["out"]["eflops"])
+    assert float(out["out"]["eflops"]) < first

@@ -1,0 +1,58 @@
+//! Bench: the BD GEMM hot path in isolation (perf-pass workbench).
+//!
+//! Compares the fused AND+POPCNT kernel against the two-stage
+//! (paper-literal) path and a naive integer matmul across bit pairs, on
+//! a representative layer-sized problem.  `cargo bench --bench bd_gemm`.
+
+use std::time::Instant;
+
+use ebs::bd::gemm::{binary_gemm_p, fused, naive_codes_matmul, recombine};
+use ebs::bd::{pack_cols, pack_rows};
+use ebs::util::Rng;
+
+fn median_ms<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    let mut ts: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn main() {
+    let reps: usize = std::env::var("EBS_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    // 3×3 conv, 128→128 channels on a 14×14 map: co=128, s=1152, n=196.
+    let (co, s, n) = (128usize, 1152usize, 196usize);
+    println!("# BD GEMM bench — co={co} s={s} n={n}, median of {reps}");
+    println!("{:<8} {:>12} {:>12} {:>12} {:>8}", "M,K", "fused ms", "2stage ms", "naive ms", "GOP/s");
+    let mut rng = Rng::new(1);
+    for &(mb, kb) in &[(1u32, 1u32), (1, 2), (2, 2), (3, 3), (5, 5)] {
+        let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+        let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+        let bw = pack_rows(&wq, co, s, mb);
+        let (bx, _) = pack_cols(&xq, s, n, kb);
+        let t_fused = median_ms(|| {
+            std::hint::black_box(fused(&bw, &bx, co, n, mb, kb));
+        }, reps);
+        let t_two = median_ms(|| {
+            let p = binary_gemm_p(&bw, &bx);
+            std::hint::black_box(recombine(&p, co, n, mb, kb));
+        }, reps);
+        let t_naive = median_ms(|| {
+            std::hint::black_box(naive_codes_matmul(&wq, &xq, co, s, n));
+        }, reps);
+        // Eq. 2: s·n·co·M·K AND ops
+        let ops = s as f64 * n as f64 * co as f64 * (mb * kb) as f64;
+        println!(
+            "{:<8} {:>12.2} {:>12.2} {:>12.2} {:>8.2}",
+            format!("{mb},{kb}"),
+            t_fused,
+            t_two,
+            t_naive,
+            ops / (t_fused * 1e6)
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench: Table 4 layer latencies (the paper's deployment experiment).
+//! Thin wrapper over `report::table4` so `cargo bench` regenerates the
+//! table directly.  `EBS_BENCH_REPS` controls the median window;
+//! `EBS_BENCH_EXTENDED=1` adds the M·K linearity sweep (Table 4b).
+
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let reps: usize =
+        std::env::var("EBS_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let extended = std::env::var("EBS_BENCH_EXTENDED").map(|v| v == "1").unwrap_or(false);
+    let out = PathBuf::from(
+        std::env::var("EBS_BENCH_OUT").unwrap_or_else(|_| "runs/reports".into()),
+    );
+    ebs::report::table4::run(&out, reps, extended)
+}

@@ -1,0 +1,65 @@
+//! Bench: search-step efficiency (paper Table 3).
+//!
+//! Times N iterations of the EBS `search_det` graph vs the DNAS
+//! supernet `dnas_search` graph (N weight copies, N² convs) on the same
+//! model and random data, and reports wall-clock + peak RSS + the
+//! analytic weight-copy memory model.  `cargo bench --bench search_step`.
+//!
+//! Env knobs: EBS_BENCH_MODEL (default resnet8_tiny), EBS_BENCH_ITERS.
+
+use std::path::PathBuf;
+
+use ebs::baselines::dnas::{run_dnas_steps, weight_copy_bytes};
+use ebs::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("EBS_BENCH_MODEL").unwrap_or_else(|_| "resnet8_tiny".into());
+    let iters: usize =
+        std::env::var("EBS_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[bench:search_step] artifacts for {model} missing — run `make artifacts`; skipping");
+        return Ok(());
+    }
+    let mut engine = Engine::open(&dir)?;
+    let n_bits = engine.manifest.bits.len();
+    println!(
+        "# Table 3 bench — model={model}, {iters} iterations, batch={}",
+        engine.manifest.batch_size
+    );
+
+    // EBS
+    let mut state = engine.init_state(1)?;
+    let ebs_cost = run_dnas_steps(&mut engine, "search_det", &mut state, iters, 7)?;
+    let (one_copy, n_copies) = weight_copy_bytes(&engine, n_bits);
+    println!(
+        "EBS    : {:>8.2}s for {iters} iters ({:.3}s/iter)  peak_rss={:.2} GB  state={:.1} MB  weight_copies={:.2} MB",
+        ebs_cost.total_seconds,
+        ebs_cost.total_seconds / iters as f64,
+        ebs_cost.peak_rss_bytes as f64 / 1e9,
+        ebs_cost.state_bytes as f64 / 1e6,
+        one_copy as f64 / 1e6,
+    );
+
+    // DNAS (only exported for models built with --dnas)
+    if engine.manifest.graphs.contains_key("dnas_search") {
+        let mut dstate = engine.init_dnas_state(1)?;
+        let dnas_cost = run_dnas_steps(&mut engine, "dnas_search", &mut dstate, iters, 7)?;
+        println!(
+            "DNAS   : {:>8.2}s for {iters} iters ({:.3}s/iter)  peak_rss={:.2} GB  state={:.1} MB  weight_copies={:.2} MB",
+            dnas_cost.total_seconds,
+            dnas_cost.total_seconds / iters as f64,
+            dnas_cost.peak_rss_bytes as f64 / 1e9,
+            dnas_cost.state_bytes as f64 / 1e6,
+            n_copies as f64 / 1e6,
+        );
+        println!(
+            "ratio  : time {:.1}x, weight-copy memory {:.1}x (paper: O(N²)/O(N) vs O(1)/O(1))",
+            dnas_cost.total_seconds / ebs_cost.total_seconds,
+            n_copies as f64 / one_copy as f64,
+        );
+    } else {
+        println!("DNAS   : artifacts not exported for {model} (aot.py --dnas); EBS-only run");
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! DNAS supernet efficiency harness (Table 3).
+//!
+//! Runs N iterations of the `dnas_search` graph (N weight copies, N²
+//! convolutions per layer — Fig. 2a) and of the EBS `search_det` graph
+//! (one copy, one convolution — Fig. 2b) on identical data, recording
+//! wall-clock and peak RSS.  The O(N)/O(N²) vs O(1)/O(1) gap is the
+//! paper's Table 3 claim; see `report::table3` for the assembled table.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, StateVec, Tensor};
+use crate::util::{mem, Rng};
+
+/// Measured cost of running `iters` search iterations on one graph.
+#[derive(Debug, Clone)]
+pub struct StepCost {
+    pub graph: String,
+    pub iters: usize,
+    pub total_seconds: f64,
+    pub peak_rss_bytes: u64,
+    pub state_bytes: usize,
+}
+
+/// Execute `iters` steps of `graph` ("search_det" or "dnas_search") with
+/// random batches; returns wall-clock + memory accounting.
+pub fn run_dnas_steps(
+    engine: &mut Engine,
+    graph: &str,
+    state: &mut StateVec,
+    iters: usize,
+    seed: u64,
+) -> Result<StepCost> {
+    let mut rng = Rng::new(seed);
+    let [h, w, c] = engine.manifest.image;
+    let b = engine.manifest.batch_size;
+    let classes = engine.manifest.num_classes;
+    let batch = move |rng: &mut Rng| -> (Tensor, Tensor) {
+        (
+            Tensor::from_f32(&[b, h, w, c], (0..b * h * w * c).map(|_| rng.normal()).collect()),
+            Tensor::from_i32(&[b], (0..b).map(|_| rng.below(classes) as i32).collect()),
+        )
+    };
+    // Compile + one warmup step outside the timed region.
+    engine.prepare(graph)?;
+    let (xt, yt) = batch(&mut rng);
+    let (xv, yv) = batch(&mut rng);
+    let io = |xt: &Tensor, yt: &Tensor, xv: &Tensor, yv: &Tensor| {
+        vec![
+            ("xt".to_string(), xt.clone()),
+            ("yt".to_string(), yt.clone()),
+            ("xv".to_string(), xv.clone()),
+            ("yv".to_string(), yv.clone()),
+            ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+            ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+            ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+            ("lam".to_string(), Tensor::scalar_f32(0.5)),
+            ("target".to_string(), Tensor::scalar_f32(1.0)),
+        ]
+    };
+    engine.run(graph, state, &io(&xt, &yt, &xv, &yv))?;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let (xt, yt) = batch(&mut rng);
+        let (xv, yv) = batch(&mut rng);
+        engine.run(graph, state, &io(&xt, &yt, &xv, &yv))?;
+    }
+    let total_seconds = t0.elapsed().as_secs_f64();
+    Ok(StepCost {
+        graph: graph.to_string(),
+        iters,
+        total_seconds,
+        peak_rss_bytes: mem::peak_rss_bytes(),
+        state_bytes: state.size_bytes(),
+    })
+}
+
+/// Analytic memory model (the structural part of Table 3): bytes of
+/// meta-weight copies held by each method for N candidate bitwidths.
+pub fn weight_copy_bytes(engine: &Engine, n_candidates: usize) -> (usize, usize) {
+    // EBS: one meta copy per quantized conv; DNAS: N copies (§4.1).
+    let one: usize = engine
+        .manifest
+        .state_spec
+        .iter()
+        .filter(|l| {
+            l.path.starts_with("state/params/")
+                && l.path.ends_with("/w")
+                && !l.path.contains("stem")
+                && !l.path.contains("fc")
+        })
+        .map(|l| l.num_elements() * 4)
+        .sum();
+    (one, one * n_candidates)
+}

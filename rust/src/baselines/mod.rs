@@ -1,0 +1,11 @@
+//! Baselines the paper compares against (Tables 1-3, Fig. 5-6):
+//! uniform-precision QNNs, random bitwidth search, and the DNAS
+//! supernet cost harness.
+
+pub mod dnas;
+pub mod random_search;
+pub mod uniform;
+
+pub use dnas::run_dnas_steps;
+pub use random_search::run_random_search;
+pub use uniform::run_uniform;

@@ -1,0 +1,45 @@
+//! Random-search baseline (§5.1): sample a bitwidth assignment whose
+//! exact FLOPs land in the target window, retrain it, report accuracy.
+//! The paper samples r from a Gaussian and keeps QNNs within the target
+//! range; sampling assignments uniformly and rejecting on the same
+//! window is equivalent for the comparison.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_retrain, FlopsModel, RunLogger, Selection, TrainCfg, TrainResult};
+use crate::data::Dataset;
+use crate::runtime::{Engine, StateVec};
+use crate::util::Rng;
+
+/// Sample-and-retrain one random mixed precision QNN near the target.
+#[allow(clippy::too_many_arguments)]
+pub fn run_random_search(
+    engine: &mut Engine,
+    init_from: &StateVec,
+    target_mflops: f64,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainCfg,
+    seed: u64,
+    logger: &mut RunLogger,
+) -> Result<(TrainResult, Selection, f64)> {
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let mut rng = Rng::new(seed ^ 0x9A4D);
+    let sel = Selection::random_within(&mut rng, &flops, target_mflops, 0.08, 200_000)?;
+    let mflops = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
+    let (mw, mx) = sel.mean_bits();
+    logger.event(
+        "random_start",
+        &[("target", target_mflops), ("mflops", mflops), ("mean_w", mw), ("mean_x", mx)],
+    );
+    let mut state = engine.init_state(cfg.seed as i32)?;
+    state.transfer_from(init_from, "state/params/");
+    state.transfer_from(init_from, "state/bn/");
+    state.transfer_from(init_from, "state/alphas/");
+    let res = run_retrain(engine, &mut state, &sel, train, test, cfg, None, logger)?;
+    logger.event(
+        "random_done",
+        &[("mflops", mflops), ("test_acc", res.best_test_acc)],
+    );
+    Ok((res, sel, mflops))
+}

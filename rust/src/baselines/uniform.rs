@@ -1,0 +1,48 @@
+//! Uniform-precision QNN baseline (the "Uniform Precision QNN" rows of
+//! Tables 1/2 — the role PACT/LQ-Net/DSQ play in the paper: one global
+//! bitwidth for all weights and activations, trained with the same
+//! recipe as the EBS retrain stage).
+
+use anyhow::Result;
+
+use crate::coordinator::{run_retrain, FlopsModel, RunLogger, Selection, TrainCfg, TrainResult};
+use crate::data::Dataset;
+use crate::runtime::{Engine, StateVec};
+
+/// Train + evaluate a w-bit/x-bit uniform QNN starting from `init_from`
+/// (usually the FP-pretrained state, or the previous — higher-precision —
+/// model for progressive initialization, §B.3).
+#[allow(clippy::too_many_arguments)]
+pub fn run_uniform(
+    engine: &mut Engine,
+    init_from: &StateVec,
+    w_bits: u32,
+    x_bits: u32,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainCfg,
+    logger: &mut RunLogger,
+) -> Result<(TrainResult, Selection, f64, StateVec)> {
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let sel = Selection::uniform(w_bits, x_bits, engine.manifest.num_qconvs());
+    let mflops = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
+    let mut state = engine.init_state(cfg.seed as i32)?;
+    state.transfer_from(init_from, "state/params/");
+    state.transfer_from(init_from, "state/bn/");
+    state.transfer_from(init_from, "state/alphas/");
+    logger.event(
+        "uniform_start",
+        &[("w_bits", w_bits as f64), ("x_bits", x_bits as f64), ("mflops", mflops)],
+    );
+    let res = run_retrain(engine, &mut state, &sel, train, test, cfg, None, logger)?;
+    logger.event(
+        "uniform_done",
+        &[
+            ("w_bits", w_bits as f64),
+            ("x_bits", x_bits as f64),
+            ("mflops", mflops),
+            ("test_acc", res.best_test_acc),
+        ],
+    );
+    Ok((res, sel, mflops, state))
+}

@@ -1,0 +1,134 @@
+//! Bitplane packing: integer codes → u64-packed binary matrices.
+//!
+//! This is the B_w / B_x construction of Eq. 12, laid out for the
+//! AND+popcount GEMM: for each logical row (an output channel × weight
+//! bit, or an im2col column × activation bit) the {0,1} vector over the
+//! contraction dimension `s` is packed LSB-first into `words = ⌈s/64⌉`
+//! u64 words.  The paper's ARM NEON bit-ops map onto x86-64 `POPCNT`
+//! (`u64::count_ones`) — same algorithm, same operation count
+//! (DESIGN.md §3).
+
+/// A bitplane matrix: `rows` × `s` bits, packed per row.
+#[derive(Debug, Clone)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub s: usize,
+    pub words_per_row: usize,
+    pub words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, s: usize) -> BitMatrix {
+        let wpr = s.div_ceil(64);
+        BitMatrix { rows, s, words_per_row: wpr, words: vec![0; rows * wpr] }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    fn set(&mut self, r: usize, c: usize) {
+        self.words[r * self.words_per_row + c / 64] |= 1u64 << (c % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        (self.words[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    /// Storage in bytes (Table 4's memory accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Pack `bits` bitplanes of a codes matrix laid out `rows × s`
+/// (row-major).  Output row `r*bits + m` holds bit `m` of input row `r`
+/// — the interleaved layout of Eq. 12's B_w.
+pub fn pack_rows(codes: &[u8], rows: usize, s: usize, bits: u32) -> BitMatrix {
+    assert_eq!(codes.len(), rows * s);
+    let mut bm = BitMatrix::zeros(rows * bits as usize, s);
+    for r in 0..rows {
+        for c in 0..s {
+            let code = codes[r * s + c];
+            for m in 0..bits {
+                if (code >> m) & 1 == 1 {
+                    bm.set(r * bits as usize + m as usize, c);
+                }
+            }
+        }
+    }
+    bm
+}
+
+/// Pack a codes matrix laid out `s × cols` (row-major) by *columns*:
+/// output row `j*bits + k` holds bit `k` of input column `j` over the
+/// `s` dimension — B_x of Eq. 12, transposed for row-major popcount.
+/// Also returns the per-column code sums needed by the affine decode
+/// (`Σ_s c_x`, see `ref.bd_conv_output`).
+pub fn pack_cols(codes: &[u8], s: usize, cols: usize, bits: u32) -> (BitMatrix, Vec<u32>) {
+    assert_eq!(codes.len(), s * cols);
+    let mut bm = BitMatrix::zeros(cols * bits as usize, s);
+    let mut col_sums = vec![0u32; cols];
+    for si in 0..s {
+        let row = &codes[si * cols..(si + 1) * cols];
+        for (j, &code) in row.iter().enumerate() {
+            col_sums[j] += code as u32;
+            for k in 0..bits {
+                if (code >> k) & 1 == 1 {
+                    bm.set(j * bits as usize + k as usize, si);
+                }
+            }
+        }
+    }
+    (bm, col_sums)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_rows_reconstructs_codes() {
+        let codes: Vec<u8> = (0..6u8).map(|i| i % 8).collect(); // 2×3
+        let bm = pack_rows(&codes, 2, 3, 3);
+        for r in 0..2 {
+            for c in 0..3 {
+                let mut v = 0u8;
+                for m in 0..3 {
+                    v |= (bm.get(r * 3 + m, c) as u8) << m;
+                }
+                assert_eq!(v, codes[r * 3 + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_cols_reconstructs_codes_and_sums() {
+        // s=4, cols=2
+        let codes: Vec<u8> = vec![1, 2, 3, 0, 2, 1, 0, 3];
+        let (bm, sums) = pack_cols(&codes, 4, 2, 2);
+        assert_eq!(sums, vec![1 + 3 + 2 + 0, 2 + 0 + 1 + 3]);
+        for j in 0..2 {
+            for si in 0..4 {
+                let mut v = 0u8;
+                for k in 0..2 {
+                    v |= (bm.get(j * 2 + k, si) as u8) << k;
+                }
+                assert_eq!(v, codes[si * 2 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_bits_are_zero() {
+        // s=70 spans two words; bits beyond s must stay 0 so popcount
+        // over full words is exact.
+        let codes = vec![1u8; 70];
+        let bm = pack_rows(&codes, 1, 70, 1);
+        let row = bm.row(0);
+        assert_eq!(row[0].count_ones() + row[1].count_ones(), 70);
+    }
+}

@@ -1,0 +1,158 @@
+//! The Binary Decomposition GEMM (Eq. 13-14).
+//!
+//! Two equivalent implementations, both exact:
+//!
+//! * [`two_stage`] — the paper's literal structure: materialize
+//!   `P = B_w · B_x` with AND+popcount, then apply the stride-(M,K)
+//!   depthwise powers-of-two recombination of Eq. 14 (Fig. 4).
+//! * [`fused`] — the deployment hot path: the recombination is folded
+//!   into the popcount accumulation (`acc += popcnt << (m+k)`), so `P`
+//!   never materializes.  Same operation count, better locality.
+//!
+//! Unit + property tests pin both against a naive integer matmul.
+
+use super::bitplane::BitMatrix;
+
+/// Stage 1 of the paper's formulation: P[i, j] = popcount(AND(B_w[i], B_x[j])).
+/// `bw` has co·M rows, `bx` has n·K rows (column-major packing); P is
+/// (co·M) × (n·K), row-major u32.
+pub fn binary_gemm_p(bw: &BitMatrix, bx: &BitMatrix) -> Vec<u32> {
+    assert_eq!(bw.s, bx.s);
+    let mut p = vec![0u32; bw.rows * bx.rows];
+    for i in 0..bw.rows {
+        let wrow = bw.row(i);
+        let out = &mut p[i * bx.rows..(i + 1) * bx.rows];
+        for (j, o) in out.iter_mut().enumerate() {
+            let xrow = bx.row(j);
+            let mut acc = 0u32;
+            for (a, b) in wrow.iter().zip(xrow) {
+                acc += (a & b).count_ones();
+            }
+            *o = acc;
+        }
+    }
+    p
+}
+
+/// Stage 2: Eq. 14's depthwise powers-of-two recombination of `P`
+/// (kernel δ_wᵀδ_x, stride (M, K)) → integer products `co × n`.
+pub fn recombine(p: &[u32], co: usize, n: usize, m_bits: u32, k_bits: u32) -> Vec<i64> {
+    let (mb, kb) = (m_bits as usize, k_bits as usize);
+    let ncols = n * kb;
+    let mut out = vec![0i64; co * n];
+    for i in 0..co {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for m in 0..mb {
+                let row = &p[(i * mb + m) * ncols..(i * mb + m + 1) * ncols];
+                for k in 0..kb {
+                    acc += (row[j * kb + k] as i64) << (m + k);
+                }
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Fused path: integer product matrix `co × n` of the M-bit × K-bit
+/// codes, computed entirely with AND + POPCNT + shifts.
+///
+/// Perf notes (EXPERIMENTS.md §Perf): row slices are hoisted out of the
+/// (m, k) loops and the word loop runs on `zip` iterators so LLVM drops
+/// the bounds checks and keeps 4-wide POPCNT chains in flight; this is
+/// the deployment hot path (Table 4 / bd_layers bench).
+pub fn fused(bw: &BitMatrix, bx: &BitMatrix, co: usize, n: usize, m_bits: u32, k_bits: u32) -> Vec<i64> {
+    assert_eq!(bw.s, bx.s);
+    let (mb, kb) = (m_bits as usize, k_bits as usize);
+    assert_eq!(bw.rows, co * mb);
+    assert_eq!(bx.rows, n * kb);
+    let mut out = vec![0i64; co * n];
+    let mut wrows: Vec<&[u64]> = Vec::with_capacity(mb);
+    for i in 0..co {
+        wrows.clear();
+        wrows.extend((0..mb).map(|m| bw.row(i * mb + m)));
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let xbase = j * kb;
+            let mut acc = 0i64;
+            // k outer / m inner: each activation bitplane row is sliced
+            // once and reused across all M weight planes.
+            for k in 0..kb {
+                let xrow = bx.row(xbase + k);
+                for (m, wrow) in wrows.iter().enumerate() {
+                    let pop: u32 = wrow
+                        .iter()
+                        .zip(xrow)
+                        .map(|(a, b)| (a & b).count_ones())
+                        .sum();
+                    acc += (pop as i64) << (m + k);
+                }
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Naive reference: integer matmul of codes (`co × s` by `s × n`).
+pub fn naive_codes_matmul(wq: &[u8], xq: &[u8], co: usize, s: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    for i in 0..co {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..s {
+                acc += wq[i * s + t] as i64 * xq[t * n + j] as i64;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bd::bitplane::{pack_cols, pack_rows};
+    use crate::util::Rng;
+
+    fn random_case(rng: &mut Rng, co: usize, s: usize, n: usize, mb: u32, kb: u32) {
+        let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+        let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+        let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+
+        let bw = pack_rows(&wq, co, s, mb);
+        let (bx, _) = pack_cols(&xq, s, n, kb);
+
+        // two-stage (paper-literal) path
+        let p = binary_gemm_p(&bw, &bx);
+        assert_eq!(recombine(&p, co, n, mb, kb), expect, "two_stage co={co} s={s} n={n} M={mb} K={kb}");
+
+        // fused path
+        assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "fused co={co} s={s} n={n} M={mb} K={kb}");
+    }
+
+    #[test]
+    fn matches_naive_across_bitwidths() {
+        let mut rng = Rng::new(0xBD);
+        for &(mb, kb) in &[(1u32, 1u32), (1, 2), (2, 3), (3, 2), (4, 4), (5, 5)] {
+            random_case(&mut rng, 7, 65, 9, mb, kb); // s straddles a word
+            random_case(&mut rng, 3, 64, 4, mb, kb); // exact word
+            random_case(&mut rng, 2, 130, 3, mb, kb);
+        }
+    }
+
+    #[test]
+    fn paper_worked_example_shapes() {
+        // §4.3's example: Ŵ ∈ S^{2×3} (M=2), X̂ ∈ S^{3×2} (K=3 → S={0..7});
+        // but the text uses K=2 in Eq. 12-14 — test both.
+        let wq = vec![3u8, 1, 0, 2, 3, 1];
+        let xq = vec![1u8, 3, 0, 2, 3, 3];
+        let expect = naive_codes_matmul(&wq, &xq, 2, 3, 2);
+        let bw = pack_rows(&wq, 2, 3, 2);
+        let (bx, _) = pack_cols(&xq, 3, 2, 2);
+        let p = binary_gemm_p(&bw, &bx);
+        assert_eq!(p.len(), 4 * 4, "P is 4×4 as in Eq. 13");
+        assert_eq!(recombine(&p, 2, 2, 2, 2), expect);
+    }
+}

@@ -1,0 +1,99 @@
+//! im2col for NHWC single-image tensors with XLA-style SAME padding.
+//!
+//! The paper adopts img2col (§4.3): the K×K conv becomes a matmul over
+//! patch matrices.  Padding must replicate XLA's SAME semantics exactly
+//! (`pad_lo = ⌊pad/2⌋`) or the BD engine drifts from the `infer`
+//! artifact at the borders — the parity test pins this.
+
+/// Patch matrix layout: `s × n` row-major where `s = k·k·ci` (index
+/// order kh, kw, ci — matching HWIO weight flattening) and `n = oh·ow`.
+pub struct Patches {
+    pub s: usize,
+    pub n: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub data: Vec<f32>,
+}
+
+/// SAME-padding geometry for one spatial dim (XLA convention).
+pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize, usize) {
+    let out = in_size.div_ceil(stride);
+    let needed = ((out - 1) * stride + k).saturating_sub(in_size);
+    let lo = needed / 2;
+    (out, lo, needed - lo)
+}
+
+/// Extract im2col patches from an NHWC image (`n`=1): x is h×w×ci.
+pub fn im2col(x: &[f32], h: usize, w: usize, ci: usize, k: usize, stride: usize) -> Patches {
+    assert_eq!(x.len(), h * w * ci);
+    let (oh, pad_top, _) = same_pad(h, k, stride);
+    let (ow, pad_left, _) = same_pad(w, k, stride);
+    let s = k * k * ci;
+    let n = oh * ow;
+    let mut data = vec![0f32; s * n];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let col = oy * ow + ox;
+            for kh in 0..k {
+                let iy = (oy * stride + kh) as isize - pad_top as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue; // zero padding
+                }
+                for kw in 0..k {
+                    let ix = (ox * stride + kw) as isize - pad_left as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = ((iy as usize) * w + ix as usize) * ci;
+                    let dst_row = (kh * k + kw) * ci;
+                    for c in 0..ci {
+                        data[(dst_row + c) * n + col] = x[src + c];
+                    }
+                }
+            }
+        }
+    }
+    Patches { s, n, oh, ow, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pad_matches_xla() {
+        // stride 1, k 3: symmetric 1/1
+        assert_eq!(same_pad(32, 3, 1), (32, 1, 1));
+        // stride 2, k 3, even input: XLA pads (0, 1)
+        assert_eq!(same_pad(32, 3, 2), (16, 0, 1));
+        // 1×1 stride 2
+        assert_eq!(same_pad(32, 1, 2), (16, 0, 0));
+        // odd input stride 2
+        assert_eq!(same_pad(17, 3, 2), (9, 1, 1));
+    }
+
+    #[test]
+    fn identity_for_1x1() {
+        let x: Vec<f32> = (0..4 * 4 * 2).map(|i| i as f32).collect();
+        let p = im2col(&x, 4, 4, 2, 1, 1);
+        assert_eq!((p.s, p.n), (2, 16));
+        // row c of patches = channel c image flattened
+        for c in 0..2 {
+            for px in 0..16 {
+                assert_eq!(p.data[c * 16 + px], x[px * 2 + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn conv3x3_hand_checked_center_and_corner() {
+        // 3×3 single-channel image, k=3 s=1; center patch = whole image.
+        let x: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        let p = im2col(&x, 3, 3, 1, 3, 1);
+        let center: Vec<f32> = (0..9).map(|r| p.data[r * 9 + 4]).collect();
+        assert_eq!(center, x);
+        // top-left output: kh=0/kw=0 element is padding (0), last is x[4]=5
+        assert_eq!(p.data[0], 0.0);
+        assert_eq!(p.data[8 * 9], 5.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! One deployed mixed precision convolution layer (paper §4.3):
+//! im2col → activation quantization → bitplane packing → AND/popcount
+//! GEMM → powers-of-two recombination → affine decode → folded BN →
+//! optional ReLU.
+//!
+//! Weights are packed once at build time (B_w is the *stored* format —
+//! the paper's memory argument: `s·co·M` bits ≈ the quantized weights
+//! themselves, plus M·K powers-of-two, §4.3 Complexities).
+
+use anyhow::Result;
+
+use crate::quant::{quantize_acts, quantize_weights};
+
+use super::bitplane::{pack_cols, pack_rows, BitMatrix};
+use super::gemm;
+use super::im2col::im2col;
+
+/// Execution strategy — the paper-literal two-stage path keeps P
+/// materialized; the fused path folds Eq. 14 into the popcount loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BdMode {
+    #[default]
+    Fused,
+    TwoStage,
+}
+
+/// A ready-to-run BD conv layer.
+pub struct BdConvLayer {
+    pub name: String,
+    pub ci: usize,
+    pub co: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub m_bits: u32,
+    pub k_bits: u32,
+    pub alpha: f32,
+    /// Packed weight bitplanes: (co·M) × s.
+    pub bw: BitMatrix,
+    w_scale: f32,
+    w_zero: f32,
+    /// Folded per-channel output transform (BN eval): y = scale·o + bias.
+    pub out_scale: Vec<f32>,
+    pub out_bias: Vec<f32>,
+    pub relu: bool,
+    pub mode: BdMode,
+}
+
+impl BdConvLayer {
+    /// Build from float weights (HWIO flattened), BN eval statistics and
+    /// the layer's searched bitwidths.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        weights: &[f32],
+        ci: usize,
+        co: usize,
+        k: usize,
+        stride: usize,
+        m_bits: u32,
+        k_bits: u32,
+        alpha: f32,
+        bn: Option<(&[f32], &[f32], &[f32], &[f32], f32)>, // gamma, beta, mean, var, eps
+        relu: bool,
+    ) -> Result<BdConvLayer> {
+        let s = k * k * ci;
+        anyhow::ensure!(weights.len() == s * co, "weight size mismatch for {name}");
+        let q = quantize_weights(weights, m_bits);
+        // Repack codes from HWIO (s-major over rows of W[s][co]) to the
+        // BD layout W[co][s]: row per output channel.
+        let mut codes_cs = vec![0u8; co * s];
+        for si in 0..s {
+            for c in 0..co {
+                codes_cs[c * s + si] = q.codes[si * co + c];
+            }
+        }
+        let bw = pack_rows(&codes_cs, co, s, m_bits);
+        let (mut out_scale, mut out_bias) = (vec![1f32; co], vec![0f32; co]);
+        if let Some((gamma, beta, mean, var, eps)) = bn {
+            for c in 0..co {
+                let g = gamma[c] / (var[c] + eps).sqrt();
+                out_scale[c] = g;
+                out_bias[c] = beta[c] - g * mean[c];
+            }
+        }
+        Ok(BdConvLayer {
+            name: name.to_string(),
+            ci,
+            co,
+            k,
+            stride,
+            m_bits,
+            k_bits,
+            alpha,
+            bw,
+            w_scale: q.scale,
+            w_zero: q.zero,
+            out_scale,
+            out_bias,
+            relu,
+            mode: BdMode::Fused,
+        })
+    }
+
+    /// Forward one image (h×w×ci NHWC) → (oh·ow×co NHWC, oh, ow).
+    pub fn forward(&self, x: &[f32], h: usize, w: usize) -> (Vec<f32>, usize, usize) {
+        let p = im2col(x, h, w, self.ci, self.k, self.stride);
+        // Activation quantization (Eq. 1b) on the patch matrix.
+        let mut codes = vec![0u8; p.data.len()];
+        let x_scale = quantize_acts(&p.data, self.alpha, self.k_bits, &mut codes);
+        let (bx, col_sums) = pack_cols(&codes, p.s, p.n, self.k_bits);
+
+        // Integer product via Binary Decomposition.
+        let prod = match self.mode {
+            BdMode::Fused => gemm::fused(&self.bw, &bx, self.co, p.n, self.m_bits, self.k_bits),
+            BdMode::TwoStage => {
+                let pm = gemm::binary_gemm_p(&self.bw, &bx);
+                gemm::recombine(&pm, self.co, p.n, self.m_bits, self.k_bits)
+            }
+        };
+
+        // Affine decode + folded BN + ReLU, emitted NHWC.
+        let mut out = vec![0f32; p.n * self.co];
+        let sw_sx = self.w_scale * x_scale;
+        let zw_sx = self.w_zero * x_scale;
+        for i in 0..self.co {
+            let (a, b) = (self.out_scale[i], self.out_bias[i]);
+            for j in 0..p.n {
+                let real = sw_sx * prod[i * p.n + j] as f32 + zw_sx * col_sums[j] as f32;
+                let mut v = a * real + b;
+                if self.relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out[j * self.co + i] = v;
+            }
+        }
+        (out, p.oh, p.ow)
+    }
+
+    /// Model size of the packed weights in bytes (Table 4 discussion).
+    pub fn packed_bytes(&self) -> usize {
+        self.bw.size_bytes()
+    }
+
+    /// Eq. 2 operation count: AND ops for one forward at (oh·ow) = n.
+    pub fn and_ops(&self, n: usize) -> u64 {
+        (self.k * self.k * self.ci) as u64 * n as u64 * self.co as u64
+            * self.m_bits as u64 * self.k_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bd::reference::conv2d_fakequant;
+    use crate::util::Rng;
+
+    /// The BD layer (integer path) must match the fake-quantized float
+    /// conv (training-graph semantics) to float tolerance.
+    #[test]
+    fn bd_layer_equals_fakequant_reference() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for &(ci, co, k, stride, mb, kb) in &[
+            (3usize, 8usize, 3usize, 1usize, 2u32, 3u32),
+            (8, 16, 3, 2, 1, 1),
+            (16, 8, 1, 1, 4, 2),
+            (5, 7, 3, 1, 5, 5),
+        ] {
+            let (h, w) = (9, 9);
+            let x: Vec<f32> = (0..h * w * ci).map(|_| rng.normal().abs()).collect();
+            let wts: Vec<f32> = (0..k * k * ci * co).map(|_| 0.5 * rng.normal()).collect();
+            let alpha = 2.5f32;
+
+            let layer = BdConvLayer::new(
+                "t", &wts, ci, co, k, stride, mb, kb, alpha, None, false,
+            )
+            .unwrap();
+            let (got, oh, ow) = layer.forward(&x, h, w);
+            let (want, oh2, ow2) =
+                conv2d_fakequant(&x, h, w, ci, &wts, co, k, stride, mb, kb, alpha);
+            assert_eq!((oh, ow), (oh2, ow2));
+            let max_err = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                max_err < 2e-3,
+                "max err {max_err} at ci={ci} co={co} k={k} s={stride} M={mb} K={kb}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_and_two_stage_agree() {
+        let mut rng = Rng::new(7);
+        let (ci, co, k, h, w) = (4, 6, 3, 8, 8);
+        let x: Vec<f32> = (0..h * w * ci).map(|_| rng.normal().abs()).collect();
+        let wts: Vec<f32> = (0..k * k * ci * co).map(|_| rng.normal()).collect();
+        let mut layer =
+            BdConvLayer::new("t", &wts, ci, co, k, 1, 3, 2, 4.0, None, true).unwrap();
+        let (a, _, _) = layer.forward(&x, h, w);
+        layer.mode = BdMode::TwoStage;
+        let (b, _, _) = layer.forward(&x, h, w);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bn_fold_applies_scale_and_bias() {
+        let wts = vec![0.5f32; 9]; // 1 in, 1 out, 3×3
+        let gamma = [2.0f32];
+        let beta = [1.0f32];
+        let mean = [0.0f32];
+        let var = [1.0f32 - 1e-5];
+        let layer = BdConvLayer::new(
+            "t", &wts, 1, 1, 3, 1, 3, 3, 1.0,
+            Some((&gamma, &beta, &mean, &var, 1e-5)), false,
+        )
+        .unwrap();
+        let x = vec![1f32; 25];
+        let (out, _, _) = layer.forward(&x, 5, 5);
+        // center pixel: conv ≈ 9 quantized values ≈ 9·(~0.43); y = 2o+1
+        let (raw, _, _) = {
+            let mut l2 = BdConvLayer::new("t", &wts, 1, 1, 3, 1, 3, 3, 1.0, None, false).unwrap();
+            l2.mode = BdMode::Fused;
+            l2.forward(&x, 5, 5)
+        };
+        for (y, o) in out.iter().zip(&raw) {
+            assert!((y - (2.0 * o + 1.0)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Binary Decomposition deployment engine (paper §4.3, Eq. 12-14).
+//!
+//! Mixed precision (M-bit × K-bit) convolution on generic CPUs with no
+//! special-hardware support: integer codes are expanded into bitplanes,
+//! multiplied as binary matrices with AND+POPCNT, and recombined with
+//! the stride-(M,K) powers-of-two kernel of Eq. 14.  Correctness chain
+//! (DESIGN.md §7.4): `gemm` vs naive integer matmul (unit + property
+//! tests) → `layer` vs fake-quantized float conv → `network` vs the
+//! HLO `infer` artifact (integration test).
+
+pub mod bitplane;
+pub mod gemm;
+pub mod im2col;
+pub mod layer;
+pub mod network;
+pub mod reference;
+
+pub use bitplane::{pack_cols, pack_rows, BitMatrix};
+pub use layer::{BdConvLayer, BdMode};
+pub use network::BdNetwork;

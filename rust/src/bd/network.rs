@@ -1,0 +1,226 @@
+//! Full mixed precision ResNet inference on the BD engine — the
+//! deployment stage of Fig. 1.
+//!
+//! Built from a retrained [`StateVec`] + [`Selection`]: quantized convs
+//! run on the integer AND/popcount path with their searched (M, K);
+//! the stem, residual adds, pooling and classifier stay full precision
+//! (paper §B.2 leaves first/last layers unquantized).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Selection;
+use crate::models::NetDesc;
+use crate::runtime::{Manifest, StateVec};
+
+use super::layer::{BdConvLayer, BdMode};
+use super::reference::conv2d_f32;
+
+const BN_EPS: f32 = 1e-5;
+
+struct FpConv {
+    weights: Vec<f32>,
+    #[allow(dead_code)]
+    ci: usize,
+    co: usize,
+    k: usize,
+    stride: usize,
+    bn_scale: Vec<f32>,
+    bn_bias: Vec<f32>,
+}
+
+struct BdBlock {
+    c1: BdConvLayer,
+    c2: BdConvLayer,
+    shortcut: Option<BdConvLayer>,
+}
+
+/// A deployable network instance.
+pub struct BdNetwork {
+    stem: FpConv,
+    blocks: Vec<BdBlock>,
+    fc_w: Vec<f32>, // (in, classes) row-major
+    fc_b: Vec<f32>,
+    pub classes: usize,
+    pub input_hw: usize,
+    pub input_ch: usize,
+}
+
+fn bn_fold(state: &StateVec, name: &str, co: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?;
+    let beta = state.get(&format!("state/params/bn_{name}/beta"))?.as_f32()?;
+    let mean = state.get(&format!("state/bn/{name}/mean"))?.as_f32()?;
+    let var = state.get(&format!("state/bn/{name}/var"))?.as_f32()?;
+    let mut scale = vec![0f32; co];
+    let mut bias = vec![0f32; co];
+    for c in 0..co {
+        let g = gamma[c] / (var[c] + BN_EPS).sqrt();
+        scale[c] = g;
+        bias[c] = beta[c] - g * mean[c];
+    }
+    Ok((scale, bias))
+}
+
+impl BdNetwork {
+    /// Assemble from artifacts-state + selection.  `mode` picks the
+    /// fused or paper-literal two-stage GEMM.
+    pub fn from_state(
+        manifest: &Manifest,
+        state: &StateVec,
+        selection: &Selection,
+        mode: BdMode,
+    ) -> Result<BdNetwork> {
+        let net = NetDesc::from_manifest(manifest)?;
+        anyhow::ensure!(
+            selection.w_bits.len() == net.qconv_names.len(),
+            "selection/topology mismatch"
+        );
+        let bits_of = |name: &str| -> Result<(u32, u32)> {
+            let idx = net
+                .qconv_names
+                .iter()
+                .position(|n| n == name)
+                .with_context(|| format!("{name} not a qconv"))?;
+            Ok((selection.w_bits[idx], selection.x_bits[idx]))
+        };
+
+        let make_bd = |name: &str, desc: &crate::runtime::LayerDesc, relu: bool| -> Result<BdConvLayer> {
+            let w = state.get(&format!("state/params/{name}/w"))?.as_f32()?;
+            let alpha = state.get(&format!("state/alphas/{name}"))?.item_f32()?;
+            let (mb, kb) = bits_of(name)?;
+            let (bn_g, bn_b) = {
+                let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?.to_vec();
+                let beta = state.get(&format!("state/params/bn_{name}/beta"))?.as_f32()?.to_vec();
+                let mean = state.get(&format!("state/bn/{name}/mean"))?.as_f32()?.to_vec();
+                let var = state.get(&format!("state/bn/{name}/var"))?.as_f32()?.to_vec();
+                ((gamma, beta), (mean, var))
+            };
+            let mut layer = BdConvLayer::new(
+                name,
+                w,
+                desc.in_ch,
+                desc.out_ch,
+                desc.ksize,
+                desc.stride,
+                mb,
+                kb,
+                alpha,
+                Some((&bn_g.0, &bn_g.1, &bn_b.0, &bn_b.1, BN_EPS)),
+                relu,
+            )?;
+            layer.mode = mode;
+            Ok(layer)
+        };
+
+        let stem_w = state.get("state/params/stem/w")?.as_f32()?.to_vec();
+        let (bn_scale, bn_bias) = bn_fold(state, "stem", net.stem.out_ch)?;
+        let stem = FpConv {
+            weights: stem_w,
+            ci: net.stem.in_ch,
+            co: net.stem.out_ch,
+            k: net.stem.ksize,
+            stride: net.stem.stride,
+            bn_scale,
+            bn_bias,
+        };
+
+        let mut blocks = Vec::with_capacity(net.blocks.len());
+        for b in &net.blocks {
+            blocks.push(BdBlock {
+                c1: make_bd(&b.c1.name, &b.c1, true)?,
+                c2: make_bd(&b.c2.name, &b.c2, false)?,
+                shortcut: match &b.shortcut {
+                    Some(sc) => Some(make_bd(&sc.name, sc, false)?),
+                    None => None,
+                },
+            });
+        }
+
+        Ok(BdNetwork {
+            stem,
+            blocks,
+            fc_w: state.get("state/params/fc/w")?.as_f32()?.to_vec(),
+            fc_b: state.get("state/params/fc/b")?.as_f32()?.to_vec(),
+            classes: manifest.num_classes,
+            input_hw: manifest.image[0],
+            input_ch: manifest.image[2],
+        })
+    }
+
+    /// Logits for one image (h×w×c NHWC).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let hw = self.input_hw;
+        // Stem (full precision) + folded BN + ReLU.
+        let (mut h, mut ch_h, mut ch_w) = conv2d_f32(
+            x, hw, hw, self.input_ch, &self.stem.weights, self.stem.co, self.stem.k,
+            self.stem.stride,
+        );
+        for (j, v) in h.iter_mut().enumerate() {
+            let c = j % self.stem.co;
+            *v = (self.stem.bn_scale[c] * *v + self.stem.bn_bias[c]).max(0.0);
+        }
+
+        for block in &self.blocks {
+            let (y1, oh, ow) = block.c1.forward(&h, ch_h, ch_w);
+            let (mut y2, oh2, ow2) = block.c2.forward(&y1, oh, ow);
+            let ident: Vec<f32> = match &block.shortcut {
+                Some(sc) => sc.forward(&h, ch_h, ch_w).0,
+                None => h.clone(),
+            };
+            for (v, id) in y2.iter_mut().zip(&ident) {
+                *v = (*v + id).max(0.0); // residual add + ReLU
+            }
+            h = y2;
+            ch_h = oh2;
+            ch_w = ow2;
+        }
+
+        // Global average pool → fc.
+        let co = self.blocks.last().map(|b| b.c2.co).unwrap_or(self.stem.co);
+        let n = ch_h * ch_w;
+        let mut pooled = vec![0f32; co];
+        for j in 0..n {
+            for c in 0..co {
+                pooled[c] += h[j * co + c];
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= n as f32;
+        }
+        let mut logits = self.fc_b.clone();
+        for (c, &p) in pooled.iter().enumerate() {
+            let row = &self.fc_w[c * self.classes..(c + 1) * self.classes];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += p * wv;
+            }
+        }
+        logits
+    }
+
+    /// Classify a batch laid out (B, H, W, C); returns argmax labels.
+    pub fn classify_batch(&self, xs: &[f32], batch: usize) -> Vec<usize> {
+        let sz = self.input_hw * self.input_hw * self.input_ch;
+        (0..batch)
+            .map(|i| {
+                let logits = self.forward(&xs[i * sz..(i + 1) * sz]);
+                logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(c, _)| c)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Total packed-weight bytes (deployment model size).
+    pub fn packed_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| {
+                b.c1.packed_bytes()
+                    + b.c2.packed_bytes()
+                    + b.shortcut.as_ref().map_or(0, |s| s.packed_bytes())
+            })
+            .sum()
+    }
+}

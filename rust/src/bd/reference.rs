@@ -1,0 +1,96 @@
+//! Reference float paths: direct f32 convolution (for the always-FP stem
+//! and for cross-checking the BD integer path) and a fake-quantized f32
+//! conv that mirrors what the training graphs compute.
+
+use crate::quant::{fake_quant_weights, quantize_acts};
+
+use super::im2col::im2col;
+
+/// Direct f32 SAME conv, single image NHWC; weights HWIO-flattened
+/// (kh, kw, ci, co).  Returns (out NHWC, oh, ow).
+pub fn conv2d_f32(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    ci: usize,
+    weights: &[f32],
+    co: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    assert_eq!(weights.len(), k * k * ci * co);
+    let p = im2col(x, h, w, ci, k, stride);
+    let mut out = vec![0f32; p.n * co];
+    // weights matrix W[s][co]; patches P[s][n]; out[n][co] = Pᵀ W
+    for s_idx in 0..p.s {
+        let wrow = &weights[s_idx * co..(s_idx + 1) * co];
+        let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
+        for j in 0..p.n {
+            let pv = prow[j];
+            if pv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[j * co..(j + 1) * co];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += pv * wv;
+            }
+        }
+    }
+    (out, p.oh, p.ow)
+}
+
+/// Fake-quantized conv exactly as the retrain/eval graphs see it:
+/// weights → Eq. 1a M-bit values, activations → Eq. 1b K-bit values,
+/// then a float conv.  The BD engine must reproduce this bit-exactly up
+/// to float summation order.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fakequant(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    ci: usize,
+    weights: &[f32],
+    co: usize,
+    k: usize,
+    stride: usize,
+    m_bits: u32,
+    k_bits: u32,
+    alpha: f32,
+) -> (Vec<f32>, usize, usize) {
+    let wq = fake_quant_weights(weights, m_bits);
+    let mut codes = vec![0u8; x.len()];
+    let x_scale = quantize_acts(x, alpha, k_bits, &mut codes);
+    let xq: Vec<f32> = codes.iter().map(|&c| c as f32 * x_scale).collect();
+    conv2d_f32(&xq, h, w, ci, &wq, co, k, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_1x1_is_matmul() {
+        // 2×2 image, 2→3 channels, identity-ish weights
+        let x = vec![1., 2., 3., 4., 5., 6., 7., 8.];
+        let w = vec![
+            1., 0., 1., // ci=0 → co 0,2
+            0., 1., 1., // ci=1 → co 1,2
+        ];
+        let (out, oh, ow) = conv2d_f32(&x, 2, 2, 2, &w, 3, 1, 1);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(&out[..3], &[1., 2., 3.]); // pixel0: [x0, x1, x0+x1]
+        assert_eq!(&out[9..12], &[7., 8., 15.]);
+    }
+
+    #[test]
+    fn conv_3x3_sums_neighborhood() {
+        // all-ones 4×4 single channel, all-ones 3×3 kernel, stride 1:
+        // interior pixels see 9, edges 6, corners 4.
+        let x = vec![1f32; 16];
+        let w = vec![1f32; 9];
+        let (out, _, _) = conv2d_f32(&x, 4, 4, 1, &w, 1, 3, 1);
+        assert_eq!(out[5], 9.0);
+        assert_eq!(out[1], 6.0);
+        assert_eq!(out[0], 4.0);
+    }
+}

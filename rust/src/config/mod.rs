@@ -1,0 +1,159 @@
+//! Experiment configuration (TOML) → typed run configs.
+//!
+//! Every run — quickstart, pipeline, table regeneration — is described
+//! by a config file in `configs/`; CLI flags can override the common
+//! fields.  Unknown keys fall back to paper defaults (§B.2/B.3).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::{SearchCfg, TrainCfg};
+use crate::data::SynthSpec;
+use crate::util::toml::{load, TomlDoc};
+
+/// Dataset configuration (synthetic generator parameters).
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub kind: String, // "cifar_like" | "imagenet_like" | "tiny"
+    pub n_train: usize,
+    pub n_test: usize,
+    pub noise: f32,
+    pub confusability: f32,
+    pub seed: u64,
+}
+
+impl DataConfig {
+    pub fn to_spec(&self) -> SynthSpec {
+        let mut spec = match self.kind.as_str() {
+            "imagenet_like" => SynthSpec::imagenet_like(self.seed),
+            "tiny" => SynthSpec::tiny(self.seed),
+            _ => SynthSpec::cifar_like(self.seed),
+        };
+        spec.n_train = self.n_train;
+        spec.n_test = self.n_test;
+        spec.noise = self.noise;
+        spec.confusability = self.confusability;
+        spec
+    }
+}
+
+/// A full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub seed: i32,
+    pub data: DataConfig,
+    pub pretrain: TrainCfg,
+    pub search: SearchCfg,
+    pub retrain: TrainCfg,
+    /// FLOPs targets (MFLOPs) for multi-target table runs; empty → use
+    /// `search.target_mflops` only.
+    pub targets_mflops: Vec<f64>,
+    pub doc: TomlDoc,
+}
+
+fn train_cfg(doc: &TomlDoc, section: &str, default_steps: usize, default_lr: f32) -> TrainCfg {
+    TrainCfg {
+        steps: doc.usize_or(&format!("{section}.steps"), default_steps),
+        lr: doc.f32_or(&format!("{section}.lr"), default_lr),
+        weight_decay: doc.f32_or(&format!("{section}.weight_decay"), 5e-4),
+        distill_mu: doc.f32_or(&format!("{section}.distill_mu"), 0.0),
+        eval_every: doc.usize_or(&format!("{section}.eval_every"), 100),
+        log_every: doc.usize_or(&format!("{section}.log_every"), 20),
+        seed: doc.i64_or(&format!("{section}.seed"), 0) as u64,
+    }
+}
+
+impl RunConfig {
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let doc = load(path)?;
+        Ok(Self::from_doc(doc))
+    }
+
+    pub fn from_doc(doc: TomlDoc) -> RunConfig {
+        let model = doc.str_or("run.model", "resnet20_synth").to_string();
+        let data = DataConfig {
+            kind: doc.str_or("data.kind", "cifar_like").to_string(),
+            n_train: doc.usize_or("data.n_train", 2560),
+            n_test: doc.usize_or("data.n_test", 1280),
+            noise: doc.f32_or("data.noise", 0.35),
+            confusability: doc.f32_or("data.confusability", 0.5),
+            seed: doc.i64_or("data.seed", 1234) as u64,
+        };
+        let search = SearchCfg {
+            steps: doc.usize_or("search.steps", 200),
+            lr_w: doc.f32_or("search.lr_w", 0.01),
+            lr_arch: doc.f32_or("search.lr_arch", 0.02),
+            weight_decay: doc.f32_or("search.weight_decay", 5e-4),
+            lambda: doc.f32_or("search.lambda", 0.5),
+            target_mflops: doc.f64_or("search.target_mflops", 0.0),
+            stochastic: doc.bool_or("search.stochastic", false),
+            tau0: doc.f32_or("search.tau0", 1.0),
+            tau1: doc.f32_or("search.tau1", 0.4),
+            eval_every: doc.usize_or("search.eval_every", 50),
+            log_every: doc.usize_or("search.log_every", 10),
+            seed: doc.i64_or("search.seed", 0) as u64,
+        };
+        RunConfig {
+            model: model.clone(),
+            artifacts_dir: PathBuf::from(doc.str_or("run.artifacts", "artifacts")),
+            out_dir: PathBuf::from(doc.str_or("run.out", "runs").to_string()),
+            seed: doc.i64_or("run.seed", 42) as i32,
+            data,
+            pretrain: train_cfg(&doc, "pretrain", 300, 0.05),
+            search,
+            retrain: train_cfg(&doc, "retrain", 400, 0.04),
+            targets_mflops: doc.f64_array("search.targets_mflops").unwrap_or_default(),
+            doc,
+        }
+    }
+
+    /// Artifact directory for this run's model.
+    pub fn model_dir(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml::parse;
+
+    #[test]
+    fn defaults_follow_paper() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.search.lr_arch, 0.02); // §B.2 Adam lr
+        assert_eq!(cfg.retrain.lr, 0.04); // §B.3 retrain lr
+        assert_eq!(cfg.search.tau1, 0.4); // §B.2 temperature floor
+        assert_eq!(cfg.model, "resnet20_synth");
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let cfg = RunConfig::from_doc(
+            parse(
+                r#"
+[run]
+model = "resnet8_tiny"
+seed = 7
+[data]
+kind = "tiny"
+n_train = 256
+[search]
+steps = 25
+stochastic = true
+targets_mflops = [0.10, 0.16]
+"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.model, "resnet8_tiny");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.data.n_train, 256);
+        assert!(cfg.search.stochastic);
+        assert_eq!(cfg.targets_mflops, vec![0.10, 0.16]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Full-dataset evaluation helpers (loss + top-1 accuracy).
+//!
+//! Artifacts are compiled for a fixed batch shape, so evaluation walks
+//! the dataset in full batches and drops the tail (<1 batch); datasets
+//! in `configs/` are sized as multiples of the batch so nothing is lost.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+
+use super::selection::Selection;
+
+/// Aggregate evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub samples: usize,
+}
+
+/// Evaluate a quantized network under `sel` over `ds`.
+pub fn eval_quantized(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    sel: &Selection,
+    ds: &Dataset,
+) -> Result<EvalResult> {
+    let (sel_w, sel_x) = sel.to_onehot(&engine.manifest)?;
+    eval_graph(engine, state, ds, "eval", Some((sel_w, sel_x)))
+}
+
+/// Evaluate the full-precision network over `ds`.
+pub fn eval_fp(engine: &mut Engine, state: &mut StateVec, ds: &Dataset) -> Result<EvalResult> {
+    eval_graph(engine, state, ds, "fp_eval", None)
+}
+
+fn eval_graph(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    ds: &Dataset,
+    graph: &str,
+    sel: Option<(Tensor, Tensor)>,
+) -> Result<EvalResult> {
+    let b = engine.manifest.batch_size;
+    let n_batches = ds.len() / b;
+    assert!(n_batches > 0, "dataset smaller than one batch");
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0.0f64;
+    for i in 0..n_batches {
+        let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+        let (x, y) = ds.gather(&idx);
+        let mut io = vec![("x".to_string(), x), ("y".to_string(), y)];
+        if let Some((sw, sx)) = &sel {
+            io.push(("sel_w".to_string(), sw.clone()));
+            io.push(("sel_x".to_string(), sx.clone()));
+        }
+        let m = engine.run(graph, state, &io)?;
+        total_loss += metric_f32(&m, "loss")? as f64;
+        total_correct += metric_f32(&m, "correct")? as f64;
+    }
+    let samples = n_batches * b;
+    Ok(EvalResult {
+        loss: total_loss / n_batches as f64,
+        accuracy: total_correct / samples as f64,
+        samples,
+    })
+}
+
+/// Teacher logits for one batch via the FP graph (label refinery, §B.2).
+pub fn teacher_logits(
+    engine: &mut Engine,
+    fp_state: &mut StateVec,
+    x: &Tensor,
+) -> Result<Tensor> {
+    let io = vec![("x".to_string(), x.clone())];
+    let m = engine.run("fp_infer", fp_state, &io)?;
+    m.get("logits")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("fp_infer returned no logits"))
+}

@@ -1,0 +1,130 @@
+//! Selection-time FLOPs accounting (paper Eq. 2 / 11) — Rust mirror of
+//! `python/compile/flops.py`.
+//!
+//! Cost model (calibrated against the paper's own tables, DESIGN.md §7.6):
+//! `cost = Σ_fp MACs + Σ_qconv MACs · (M·K) / 64`.
+//!
+//! A unit test asserts parity with the python-computed `uniform_mflops`
+//! table carried by the manifest, so the two implementations cannot
+//! silently diverge.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+/// Divisor mapping (M·K) bit-serial work onto FP32-MAC units.
+pub const MIXED_DIVISOR: f64 = 64.0;
+
+/// FLOPs model for one model variant.
+#[derive(Debug, Clone)]
+pub struct FlopsModel {
+    pub fp_macs: u64,
+    /// (layer name, MACs) for each quantized conv, in manifest order.
+    pub qconv_macs: Vec<(String, u64)>,
+    pub bits: Vec<u32>,
+    pub fp32_mflops: f64,
+}
+
+impl FlopsModel {
+    pub fn from_manifest(m: &Manifest) -> Result<FlopsModel> {
+        let mut qconv_macs = Vec::with_capacity(m.qconv_layers.len());
+        for name in &m.qconv_layers {
+            let Some(&macs) = m.qconv_macs.get(name) else {
+                bail!("manifest missing MACs for layer {name}");
+            };
+            qconv_macs.push((name.clone(), macs));
+        }
+        Ok(FlopsModel {
+            fp_macs: m.fp_macs,
+            qconv_macs,
+            bits: m.bits.clone(),
+            fp32_mflops: m.fp32_mflops,
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.qconv_macs.len()
+    }
+
+    /// Exact MFLOPs of a per-layer bitwidth assignment.
+    pub fn exact_mflops(&self, w_bits: &[u32], x_bits: &[u32]) -> f64 {
+        assert_eq!(w_bits.len(), self.num_layers());
+        assert_eq!(x_bits.len(), self.num_layers());
+        let mut total = self.fp_macs as f64;
+        for (i, (_, macs)) in self.qconv_macs.iter().enumerate() {
+            total += *macs as f64 * (w_bits[i] * x_bits[i]) as f64 / MIXED_DIVISOR;
+        }
+        total / 1e6
+    }
+
+    /// Eq. 11 expected MFLOPs from (L, N) coefficient matrices
+    /// (row-major, N = candidate count).
+    pub fn expected_mflops(&self, coeffs_w: &[f32], coeffs_x: &[f32]) -> f64 {
+        let n = self.bits.len();
+        assert_eq!(coeffs_w.len(), self.num_layers() * n);
+        assert_eq!(coeffs_x.len(), self.num_layers() * n);
+        let mut total = self.fp_macs as f64;
+        for (i, (_, macs)) in self.qconv_macs.iter().enumerate() {
+            let e_m: f64 = (0..n)
+                .map(|j| coeffs_w[i * n + j] as f64 * self.bits[j] as f64)
+                .sum();
+            let e_k: f64 = (0..n)
+                .map(|j| coeffs_x[i * n + j] as f64 * self.bits[j] as f64)
+                .sum();
+            total += *macs as f64 * e_m * e_k / MIXED_DIVISOR;
+        }
+        total / 1e6
+    }
+
+    /// Uniform-precision cost (Table 1/2 baseline rows).
+    pub fn uniform_mflops(&self, b: u32) -> f64 {
+        let w = vec![b; self.num_layers()];
+        self.exact_mflops(&w, &w)
+    }
+
+    /// "Saving" column: FP32 cost / quantized cost.
+    pub fn saving(&self, mflops: f64) -> f64 {
+        self.fp32_mflops / mflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> FlopsModel {
+        FlopsModel {
+            fp_macs: 1_000_000,
+            qconv_macs: vec![("a".into(), 10_000_000), ("b".into(), 20_000_000)],
+            bits: vec![1, 2, 3, 4, 5],
+            fp32_mflops: 31.0,
+        }
+    }
+
+    #[test]
+    fn exact_matches_hand_computation() {
+        let f = toy();
+        // 1 + 10*(2*3)/64 + 20*(4*5)/64 = 1 + 0.9375 + 6.25
+        let got = f.exact_mflops(&[2, 4], &[3, 5]);
+        assert!((got - 8.1875).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn expected_reduces_to_exact_for_onehot() {
+        let f = toy();
+        // one-hot on 2 bits (idx 1) and 3 bits (idx 2) per layer
+        let cw = [0., 1., 0., 0., 0., 0., 1., 0., 0., 0.];
+        let cx = [0., 0., 1., 0., 0., 0., 0., 1., 0., 0.];
+        let e = f.expected_mflops(&cw, &cx);
+        let x = f.exact_mflops(&[2, 2], &[3, 3]);
+        assert!((e - x).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_is_monotone_in_coefficient_mass_on_high_bits() {
+        let f = toy();
+        let low = [1., 0., 0., 0., 0., 1., 0., 0., 0., 0.];
+        let high = [0., 0., 0., 0., 1., 0., 0., 0., 0., 1.];
+        assert!(f.expected_mflops(&high, &high) > f.expected_mflops(&low, &low));
+    }
+}

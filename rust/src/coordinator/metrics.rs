@@ -1,0 +1,89 @@
+//! Run logging: JSONL event stream + final summary document.
+//!
+//! Every driver appends typed records to `<run_dir>/log.jsonl`; report
+//! generators read summaries back to assemble the paper's tables.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Append-only JSONL logger for one run.
+pub struct RunLogger {
+    pub dir: PathBuf,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    echo: bool,
+}
+
+impl RunLogger {
+    pub fn new(dir: &Path, echo: bool) -> Result<RunLogger> {
+        std::fs::create_dir_all(dir)?;
+        let file = std::fs::File::create(dir.join("log.jsonl"))?;
+        Ok(RunLogger { dir: dir.to_path_buf(), file: Some(std::io::BufWriter::new(file)), echo })
+    }
+
+    /// A logger that only echoes to stderr (for examples/tests).
+    pub fn ephemeral() -> RunLogger {
+        RunLogger { dir: PathBuf::new(), file: None, echo: true }
+    }
+
+    /// Log one event: kind + (key, value) scalar fields.
+    pub fn event(&mut self, kind: &str, fields: &[(&str, f64)]) {
+        let mut obj = vec![("event".to_string(), Json::Str(kind.to_string()))];
+        for (k, v) in fields {
+            obj.push((k.to_string(), Json::Num(*v)));
+        }
+        let line = Json::Obj(obj).to_string();
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+        if self.echo {
+            eprintln!("[{kind}] {}", summarize(fields));
+        }
+    }
+
+    /// Write `<run_dir>/summary.json`.
+    pub fn summary(&self, doc: &Json) -> Result<()> {
+        if !self.dir.as_os_str().is_empty() {
+            std::fs::write(self.dir.join("summary.json"), doc.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+fn summarize(fields: &[(&str, f64)]) -> String {
+    fields
+        .iter()
+        .map(|(k, v)| {
+            if v.fract() == 0.0 && v.abs() < 1e9 {
+                format!("{k}={v:.0}")
+            } else {
+                format!("{k}={v:.4}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_parseable_jsonl() {
+        let dir = std::env::temp_dir().join("ebs_logger_test");
+        let mut lg = RunLogger::new(&dir, false).unwrap();
+        lg.event("step", &[("loss", 1.25), ("step", 3.0)]);
+        lg.event("eval", &[("acc", 0.5)]);
+        let text = std::fs::read_to_string(dir.join("log.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "step");
+        assert_eq!(j.get("loss").unwrap().as_f64().unwrap(), 1.25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

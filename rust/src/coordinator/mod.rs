@@ -1,0 +1,22 @@
+//! L3 coordinator — the paper's system contribution, orchestrated:
+//! bilevel bitwidth search (Alg. 1), FP pre-training, quantized
+//! retraining with progressive initialization, FLOPs accounting,
+//! bitwidth selection, schedules, and run logging.
+
+pub mod evaluate;
+pub mod flops;
+pub mod metrics;
+pub mod pipeline;
+pub mod schedule;
+pub mod search;
+pub mod selection;
+pub mod train;
+
+pub use evaluate::{eval_fp, eval_quantized, EvalResult};
+pub use flops::FlopsModel;
+pub use metrics::RunLogger;
+pub use pipeline::{run_pipeline, PipelineCfg, PipelineResult};
+pub use schedule::{CosineLr, LinearSchedule};
+pub use search::{run_search, SearchCfg, SearchResult};
+pub use selection::Selection;
+pub use train::{run_fp_train, run_retrain, TrainCfg, TrainResult};

@@ -1,0 +1,135 @@
+//! The paper's Fig. 1 pipeline, end to end: FP pre-train → bilevel
+//! bitwidth search (on a 50/50 split of the training set, §B.2) →
+//! argmax selection (Eq. 4) → quantized retraining on the full training
+//! set (§B.3) → final test evaluation.  Checkpoints and the selection
+//! land in the run directory so the BD deployment stage can pick them up.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::{Engine, StateVec};
+use crate::util::json::Json;
+
+use super::evaluate::eval_quantized;
+use super::flops::FlopsModel;
+use super::metrics::RunLogger;
+use super::search::{run_search, SearchCfg, SearchResult};
+use super::selection::Selection;
+use super::train::{run_fp_train, run_retrain, TrainCfg};
+
+/// Configuration of a full pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    pub pretrain: TrainCfg,
+    pub search: SearchCfg,
+    pub retrain: TrainCfg,
+    pub seed: i32,
+    /// Save checkpoints/selection into the logger's run directory.
+    pub save_artifacts: bool,
+}
+
+/// Everything a table row needs.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    pub fp_test_acc: f64,
+    pub search: SearchResult,
+    pub test_acc: f64,
+    pub mflops: f64,
+    pub saving: f64,
+    pub selection: Selection,
+}
+
+/// Run the full pipeline.  `retrain_from` lets callers chain progressive
+/// initialization (§B.3): pass the retrained state of the previous
+/// (higher-FLOPs) model to initialize this one; otherwise the retrain
+/// starts from the FP-pretrained weights, as the paper does for the
+/// first model.
+pub fn run_pipeline(
+    engine: &mut Engine,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &PipelineCfg,
+    retrain_from: Option<&StateVec>,
+    logger: &mut RunLogger,
+) -> Result<(PipelineResult, StateVec)> {
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+
+    // Stage 0: FP pre-training (also the teacher for label refinery).
+    let mut fp_state = engine.init_state(cfg.seed)?;
+    let fp_res = run_fp_train(engine, &mut fp_state, train, test, &cfg.pretrain, logger)?;
+    logger.event("pipeline_fp_done", &[("fp_test_acc", fp_res.best_test_acc)]);
+
+    // Stage 1: bilevel search on a stratified 50/50 split (§B.2).
+    let (search_train, search_val) = train.split(0.5, cfg.search.seed ^ 0x51);
+    let mut search_state = engine.init_state(cfg.seed)?;
+    search_state.transfer_from(&fp_state, "state/params/");
+    search_state.transfer_from(&fp_state, "state/bn/");
+    let search_res = run_search(
+        engine,
+        &mut search_state,
+        &search_train,
+        &search_val,
+        &cfg.search,
+        logger,
+    )?;
+
+    // Stage 2: retrain the selected mixed precision QNN on the full set.
+    let mut retrain_state = engine.init_state(cfg.seed)?;
+    let init_src = retrain_from.unwrap_or(&fp_state);
+    retrain_state.transfer_from(init_src, "state/params/");
+    retrain_state.transfer_from(init_src, "state/bn/");
+    retrain_state.transfer_from(init_src, "state/alphas/");
+    let use_teacher = cfg.retrain.distill_mu > 0.0;
+    let retrain_res = run_retrain(
+        engine,
+        &mut retrain_state,
+        &search_res.selection,
+        train,
+        test,
+        &cfg.retrain,
+        use_teacher.then_some(&mut fp_state),
+        logger,
+    )?;
+
+    // Stage 3: final evaluation + bookkeeping.
+    let final_eval = eval_quantized(engine, &mut retrain_state, &search_res.selection, test)?;
+    let test_acc = final_eval.accuracy.max(retrain_res.best_test_acc);
+    let mflops = search_res.exact_mflops;
+    let saving = flops.saving(mflops);
+    logger.event(
+        "pipeline_done",
+        &[
+            ("fp_test_acc", fp_res.best_test_acc),
+            ("test_acc", test_acc),
+            ("mflops", mflops),
+            ("saving", saving),
+        ],
+    );
+
+    let selection = search_res.selection.clone();
+    if cfg.save_artifacts && !logger.dir.as_os_str().is_empty() {
+        fp_state.save(&logger.dir.join("fp.ckpt"))?;
+        retrain_state.save(&logger.dir.join("retrained.ckpt"))?;
+        selection.save(&logger.dir.join("selection.json"))?;
+        logger.summary(&Json::Obj(vec![
+            ("model".into(), Json::Str(engine.manifest.model.clone())),
+            ("fp_test_acc".into(), Json::Num(fp_res.best_test_acc)),
+            ("test_acc".into(), Json::Num(test_acc)),
+            ("mflops".into(), Json::Num(mflops)),
+            ("saving".into(), Json::Num(saving)),
+            ("selection".into(), selection.to_json()),
+        ]))?;
+    }
+
+    Ok((
+        PipelineResult {
+            fp_test_acc: fp_res.best_test_acc,
+            search: search_res,
+            test_acc,
+            mflops,
+            saving,
+            selection,
+        },
+        retrain_state,
+    ))
+}

@@ -1,0 +1,67 @@
+//! Hyperparameter schedules owned by the coordinator (paper §B.2/B.3):
+//! cosine-annealed learning rate and linearly-decayed Gumbel temperature.
+
+/// Cosine annealing from `lr0` to `lr_min` over `total` steps.
+#[derive(Debug, Clone, Copy)]
+pub struct CosineLr {
+    pub lr0: f32,
+    pub lr_min: f32,
+    pub total: usize,
+}
+
+impl CosineLr {
+    pub fn new(lr0: f32, total: usize) -> CosineLr {
+        CosineLr { lr0, lr_min: 0.0, total: total.max(1) }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        let t = (step.min(self.total) as f32) / self.total as f32;
+        self.lr_min
+            + 0.5 * (self.lr0 - self.lr_min) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Linear interpolation from `v0` (step 0) to `v1` (step `total`) —
+/// the paper anneals τ linearly 1.0 → 0.4 during stochastic search.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearSchedule {
+    pub v0: f32,
+    pub v1: f32,
+    pub total: usize,
+}
+
+impl LinearSchedule {
+    pub fn new(v0: f32, v1: f32, total: usize) -> LinearSchedule {
+        LinearSchedule { v0, v1, total: total.max(1) }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        let t = (step.min(self.total) as f32) / self.total as f32;
+        self.v0 + (self.v1 - self.v0) * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints_and_monotonicity() {
+        let s = CosineLr::new(0.1, 100);
+        assert!((s.at(0) - 0.1).abs() < 1e-7);
+        assert!(s.at(100) < 1e-7);
+        for i in 1..=100 {
+            assert!(s.at(i) <= s.at(i - 1) + 1e-9);
+        }
+        // past the horizon it stays at the floor
+        assert_eq!(s.at(500), s.at(100));
+    }
+
+    #[test]
+    fn linear_endpoints() {
+        let s = LinearSchedule::new(1.0, 0.4, 10);
+        assert_eq!(s.at(0), 1.0);
+        assert!((s.at(10) - 0.4).abs() < 1e-7);
+        assert!((s.at(5) - 0.7).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,198 @@
+//! The bilevel bitwidth-search driver — the paper's Algorithm 1.
+//!
+//! The coordinator owns everything the paper's §B.2 describes around the
+//! step graph: the train/validation split, batch scheduling, cosine LR
+//! for the weight phase, constant-Adam LR for the strengths, the FLOPs
+//! target, the linear Gumbel-temperature anneal (stochastic mode), and
+//! the "keep the strengths with the best validation accuracy" rule.
+//! Each iteration executes ONE compiled `search_det`/`search_sto` graph,
+//! which internally performs both phases of Eq. 9-10.
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+use crate::util::Rng;
+
+use super::evaluate::eval_quantized;
+use super::flops::FlopsModel;
+use super::metrics::RunLogger;
+use super::schedule::{CosineLr, LinearSchedule};
+use super::selection::Selection;
+
+/// Search hyperparameters (defaults follow paper §B.2).
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    pub steps: usize,
+    pub lr_w: f32,       // 0.01, cosine annealed
+    pub lr_arch: f32,    // 0.02, constant (Adam)
+    pub weight_decay: f32,
+    pub lambda: f32,     // FLOPs-penalty trade-off
+    pub target_mflops: f64,
+    pub stochastic: bool,
+    pub tau0: f32, // 1.0 → …
+    pub tau1: f32, // … 0.4 (linear, stochastic mode)
+    /// Full-validation eval (with hard argmax selection) every N steps.
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl SearchCfg {
+    pub fn defaults(target_mflops: f64, steps: usize) -> SearchCfg {
+        SearchCfg {
+            steps,
+            lr_w: 0.01,
+            lr_arch: 0.02,
+            weight_decay: 5e-4,
+            lambda: 0.5,
+            target_mflops,
+            stochastic: false,
+            tau0: 1.0,
+            tau1: 0.4,
+            eval_every: 50,
+            log_every: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub selection: Selection,
+    pub best_val_acc: f64,
+    pub final_eflops: f64,
+    pub exact_mflops: f64,
+    pub steps: usize,
+}
+
+/// Run Algorithm 1.  `state` should be FP-pretrained (§B.2); it is
+/// mutated in place and holds the final meta weights + strengths.
+pub fn run_search(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    train: &Dataset,
+    valid: &Dataset,
+    cfg: &SearchCfg,
+    logger: &mut RunLogger,
+) -> Result<SearchResult> {
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let graph = if cfg.stochastic { "search_sto" } else { "search_det" };
+    let l = engine.manifest.num_qconvs();
+    let n = engine.manifest.bits.len();
+
+    let mut train_batches = Batcher::new(train, engine.manifest.batch_size, cfg.seed ^ 0x7214);
+    let mut val_batches = Batcher::new(valid, engine.manifest.batch_size, cfg.seed ^ 0x88AA);
+    let lr_sched = CosineLr::new(cfg.lr_w, cfg.steps);
+    let tau_sched = LinearSchedule::new(cfg.tau0, cfg.tau1, cfg.steps);
+    let mut rng = Rng::new(cfg.seed ^ 0x6B31);
+
+    let mut best_val_acc = f64::NEG_INFINITY;
+    let mut best_selection = Selection::from_state(state, &engine.manifest)?;
+    let mut last_eflops = 0.0f64;
+    // Running mean of the supernet's per-step validation accuracy — the
+    // §B.3 "highest validation accuracy" checkpoint signal.  (The hard
+    // argmax network before retraining is BN-mis-calibrated, so its full
+    // eval is logged as a diagnostic but not used for selection.)
+    let mut soft_acc_ema = 0.0f64;
+    let ema_beta = 0.9f64;
+
+    for step in 0..cfg.steps {
+        let (xt, yt) = train_batches.next_batch();
+        let (xv, yv) = val_batches.next_batch();
+        let mut io = vec![
+            ("xt".to_string(), xt),
+            ("yt".to_string(), yt),
+            ("xv".to_string(), xv),
+            ("yv".to_string(), yv),
+            ("lr_w".to_string(), Tensor::scalar_f32(lr_sched.at(step))),
+            ("lr_arch".to_string(), Tensor::scalar_f32(cfg.lr_arch)),
+            ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
+            ("lam".to_string(), Tensor::scalar_f32(cfg.lambda)),
+            ("target".to_string(), Tensor::scalar_f32(cfg.target_mflops as f32)),
+        ];
+        if cfg.stochastic {
+            let gumbel = |rng: &mut Rng| -> Tensor {
+                Tensor::from_f32(&[l, n], (0..l * n).map(|_| rng.gumbel()).collect())
+            };
+            io.push(("g_r".to_string(), gumbel(&mut rng)));
+            io.push(("g_s".to_string(), gumbel(&mut rng)));
+            io.push(("tau".to_string(), Tensor::scalar_f32(tau_sched.at(step))));
+        }
+        let m = engine.run(graph, state, &io)?;
+        last_eflops = metric_f32(&m, "eflops")? as f64;
+        let step_val_acc = metric_f32(&m, "val_acc")? as f64;
+        soft_acc_ema = ema_beta * soft_acc_ema + (1.0 - ema_beta) * step_val_acc;
+        let soft_acc = soft_acc_ema / (1.0 - ema_beta.powi(step as i32 + 1));
+
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            logger.event(
+                "search_step",
+                &[
+                    ("step", step as f64),
+                    ("train_loss", metric_f32(&m, "train_loss")? as f64),
+                    ("val_loss", metric_f32(&m, "val_loss")? as f64),
+                    ("val_acc", metric_f32(&m, "val_acc")? as f64),
+                    ("eflops", last_eflops),
+                    ("lr_w", lr_sched.at(step) as f64),
+                ],
+            );
+        }
+
+        // Periodic full-validation eval with the *discretized* selection:
+        // the checkpointing rule of §B.3.
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let sel = Selection::from_state(state, &engine.manifest)?;
+            let exact = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
+            let res = {
+                // evaluate on a snapshot so BN stats are not disturbed
+                let mut snap = state.clone();
+                eval_quantized(engine, &mut snap, &sel, valid)?
+            };
+            logger.event(
+                "search_eval",
+                &[
+                    ("step", step as f64),
+                    ("val_acc_soft", soft_acc),
+                    ("val_acc_hard", res.accuracy),
+                    ("val_loss_hard", res.loss),
+                    ("exact_mflops", exact),
+                ],
+            );
+            // Prefer the supernet's validation accuracy among selections
+            // honoring the FLOPs target (small tolerance — the
+            // discretized cost may straddle it).
+            let feasible = exact <= cfg.target_mflops * 1.15;
+            if feasible && soft_acc > best_val_acc {
+                best_val_acc = soft_acc;
+                best_selection = sel;
+            }
+        }
+    }
+
+    // Fall back to the final selection if no eval was feasible.
+    if best_val_acc == f64::NEG_INFINITY {
+        best_selection = Selection::from_state(state, &engine.manifest)?;
+        best_val_acc = 0.0;
+    }
+    let exact_mflops = flops.exact_mflops(&best_selection.w_bits, &best_selection.x_bits);
+    let (mw, mx) = best_selection.mean_bits();
+    logger.event(
+        "search_done",
+        &[
+            ("best_val_acc", best_val_acc),
+            ("exact_mflops", exact_mflops),
+            ("eflops", last_eflops),
+            ("mean_w_bits", mw),
+            ("mean_x_bits", mx),
+        ],
+    );
+    Ok(SearchResult {
+        selection: best_selection,
+        best_val_acc,
+        final_eflops: last_eflops,
+        exact_mflops,
+        steps: cfg.steps,
+    })
+}

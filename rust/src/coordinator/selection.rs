@@ -1,0 +1,179 @@
+//! Bitwidth selection (paper Eq. 4): the discrete per-layer (M, K)
+//! assignment extracted from learned strengths, plus the one-hot
+//! coefficient encoding fed back into the retrain/eval/infer graphs.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Manifest, StateVec, Tensor};
+use crate::util::json::{parse, Json};
+use crate::util::Rng;
+
+use super::flops::FlopsModel;
+
+/// Per-layer bitwidths for weights and activations (manifest qconv order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    pub w_bits: Vec<u32>,
+    pub x_bits: Vec<u32>,
+}
+
+impl Selection {
+    /// Uniform-precision selection (baseline rows of Tables 1/2).
+    pub fn uniform(w: u32, x: u32, layers: usize) -> Selection {
+        Selection { w_bits: vec![w; layers], x_bits: vec![x; layers] }
+    }
+
+    /// Eq. 4: argmax over the learned strengths in a search state.
+    pub fn from_state(state: &StateVec, manifest: &Manifest) -> Result<Selection> {
+        let argmax_bits = |prefix: &str| -> Result<Vec<u32>> {
+            manifest
+                .qconv_layers
+                .iter()
+                .map(|name| {
+                    let t = state.get(&format!("state/arch/{prefix}/{name}"))?;
+                    let v = t.as_f32()?;
+                    let idx = v
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    Ok(manifest.bits[idx])
+                })
+                .collect()
+        };
+        Ok(Selection { w_bits: argmax_bits("r")?, x_bits: argmax_bits("s")? })
+    }
+
+    /// Random-search baseline: sample uniformly until the exact cost
+    /// lands within ±`tol` (relative) of `target_mflops` (paper §5.1
+    /// keeps only QNNs whose FLOPs are in the target range).
+    pub fn random_within(
+        rng: &mut Rng,
+        flops: &FlopsModel,
+        target_mflops: f64,
+        tol: f64,
+        max_tries: usize,
+    ) -> Result<Selection> {
+        let l = flops.num_layers();
+        for _ in 0..max_tries {
+            let w: Vec<u32> = (0..l).map(|_| flops.bits[rng.below(flops.bits.len())]).collect();
+            let x: Vec<u32> = (0..l).map(|_| flops.bits[rng.below(flops.bits.len())]).collect();
+            let sel = Selection { w_bits: w, x_bits: x };
+            let mf = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
+            if (mf - target_mflops).abs() / target_mflops <= tol {
+                return Ok(sel);
+            }
+        }
+        bail!("no random selection hit {target_mflops:.2} MFLOPs (±{tol:.0?}) in {max_tries} tries")
+    }
+
+    /// One-hot (L, N) coefficient tensors for the train/eval/infer graphs.
+    pub fn to_onehot(&self, manifest: &Manifest) -> Result<(Tensor, Tensor)> {
+        let n = manifest.bits.len();
+        let l = self.w_bits.len();
+        if l != manifest.num_qconvs() {
+            bail!("selection has {l} layers, model has {}", manifest.num_qconvs());
+        }
+        let encode = |bits: &[u32]| -> Result<Tensor> {
+            let mut data = vec![0f32; l * n];
+            for (i, &b) in bits.iter().enumerate() {
+                let idx = manifest
+                    .bits
+                    .iter()
+                    .position(|&c| c == b)
+                    .with_context(|| format!("bitwidth {b} not a candidate"))?;
+                data[i * n + idx] = 1.0;
+            }
+            Ok(Tensor::from_f32(&[l, n], data))
+        };
+        Ok((encode(&self.w_bits)?, encode(&self.x_bits)?))
+    }
+
+    /// Average bitwidths (Fig. 7 commentary: weights skew lower than acts).
+    pub fn mean_bits(&self) -> (f64, f64) {
+        let mw = self.w_bits.iter().map(|&b| b as f64).sum::<f64>() / self.w_bits.len() as f64;
+        let mx = self.x_bits.iter().map(|&b| b as f64).sum::<f64>() / self.x_bits.len() as f64;
+        (mw, mx)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "w_bits".into(),
+                Json::Arr(self.w_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "x_bits".into(),
+                Json::Arr(self.x_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Selection> {
+        let j = parse(&std::fs::read_to_string(path)?)
+            .with_context(|| format!("parsing selection {}", path.display()))?;
+        let bits = |key: &str| -> Result<Vec<u32>> {
+            j.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_usize()? as u32))
+                .collect()
+        };
+        Ok(Selection { w_bits: bits("w_bits")?, x_bits: bits("x_bits")? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::flops::FlopsModel;
+
+    fn toy_flops() -> FlopsModel {
+        FlopsModel {
+            fp_macs: 100_000,
+            qconv_macs: (0..6).map(|i| (format!("l{i}"), 1_000_000u64)).collect(),
+            bits: vec![1, 2, 3, 4, 5],
+            fp32_mflops: 6.1,
+        }
+    }
+
+    #[test]
+    fn random_search_respects_target_window() {
+        let f = toy_flops();
+        let target = f.uniform_mflops(3);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let s = Selection::random_within(&mut rng, &f, target, 0.1, 10_000).unwrap();
+            let mf = f.exact_mflops(&s.w_bits, &s.x_bits);
+            assert!((mf - target).abs() / target <= 0.1);
+        }
+    }
+
+    #[test]
+    fn mean_bits() {
+        let s = Selection { w_bits: vec![1, 2, 3], x_bits: vec![4, 4, 4] };
+        let (mw, mx) = s.mean_bits();
+        assert!((mw - 2.0).abs() < 1e-9);
+        assert!((mx - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Selection { w_bits: vec![1, 5], x_bits: vec![2, 3] };
+        let tmp = std::env::temp_dir().join("ebs_sel_test.json");
+        s.save(&tmp).unwrap();
+        assert_eq!(Selection::load(&tmp).unwrap(), s);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

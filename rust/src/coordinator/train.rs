@@ -1,0 +1,171 @@
+//! Training drivers: full-precision pre-training (§B.2 initialization)
+//! and quantized retraining under a fixed bitwidth selection (§B.3),
+//! including the label-refinery (distillation) option and progressive
+//! initialization across FLOPs targets.
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+
+use super::evaluate::{eval_fp, eval_quantized, teacher_logits, EvalResult};
+use super::metrics::RunLogger;
+use super::schedule::CosineLr;
+use super::selection::Selection;
+
+/// Hyperparameters shared by both training drivers.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// Distillation mix μ (0 = hard labels only) — Table 2's
+    /// "+label refinery" rows.
+    pub distill_mu: f32,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl TrainCfg {
+    pub fn defaults(steps: usize) -> TrainCfg {
+        TrainCfg {
+            steps,
+            lr: 0.04, // paper §B.3 retraining LR
+            weight_decay: 5e-4,
+            distill_mu: 0.0,
+            eval_every: 100,
+            log_every: 20,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a training run: best test accuracy seen at eval points.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainResult {
+    pub best_test_acc: f64,
+    pub final_train_loss: f64,
+}
+
+/// Full-precision pre-training (initializes search; FP table rows).
+pub fn run_fp_train(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainCfg,
+    logger: &mut RunLogger,
+) -> Result<TrainResult> {
+    let mut batches = Batcher::new(train, engine.manifest.batch_size, cfg.seed ^ 0xF9);
+    let lr = CosineLr::new(cfg.lr, cfg.steps);
+    let mut best = f64::NEG_INFINITY;
+    let mut last_loss = f64::NAN;
+    for step in 0..cfg.steps {
+        let (x, y) = batches.next_batch();
+        let io = vec![
+            ("x".to_string(), x),
+            ("y".to_string(), y),
+            ("lr".to_string(), Tensor::scalar_f32(lr.at(step))),
+            ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
+        ];
+        let m = engine.run("fp_train", state, &io)?;
+        last_loss = metric_f32(&m, "loss")? as f64;
+        if step % cfg.log_every == 0 {
+            logger.event(
+                "fp_train_step",
+                &[
+                    ("step", step as f64),
+                    ("loss", last_loss),
+                    ("acc", metric_f32(&m, "acc")? as f64),
+                ],
+            );
+        }
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let res = eval_fp(engine, state, test)?;
+            logger.event(
+                "fp_eval",
+                &[("step", step as f64), ("test_acc", res.accuracy), ("test_loss", res.loss)],
+            );
+            best = best.max(res.accuracy);
+        }
+    }
+    Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })
+}
+
+/// Quantized retraining under a fixed selection (the paper's stage 2).
+///
+/// `teacher`: optional FP state used as a label-refinery teacher — its
+/// logits are fed with mix μ (`cfg.distill_mu`).
+pub fn run_retrain(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    selection: &Selection,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &TrainCfg,
+    mut teacher: Option<&mut StateVec>,
+    logger: &mut RunLogger,
+) -> Result<TrainResult> {
+    let (sel_w, sel_x) = selection.to_onehot(&engine.manifest)?;
+    let b = engine.manifest.batch_size;
+    let classes = engine.manifest.num_classes;
+    let mut batches = Batcher::new(train, b, cfg.seed ^ 0x3C);
+    let lr = CosineLr::new(cfg.lr, cfg.steps);
+    let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
+    let mut best = f64::NEG_INFINITY;
+    let mut last_loss = f64::NAN;
+
+    for step in 0..cfg.steps {
+        let (x, y) = batches.next_batch();
+        let (t_logits, mu) = match teacher.as_deref_mut() {
+            Some(fp_state) if cfg.distill_mu > 0.0 => {
+                (teacher_logits(engine, fp_state, &x)?, cfg.distill_mu)
+            }
+            _ => (zero_teacher.clone(), 0.0),
+        };
+        let io = vec![
+            ("sel_w".to_string(), sel_w.clone()),
+            ("sel_x".to_string(), sel_x.clone()),
+            ("x".to_string(), x),
+            ("y".to_string(), y),
+            ("teacher".to_string(), t_logits),
+            ("lr".to_string(), Tensor::scalar_f32(lr.at(step))),
+            ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
+            ("mu".to_string(), Tensor::scalar_f32(mu)),
+        ];
+        let m = engine.run("train", state, &io)?;
+        last_loss = metric_f32(&m, "loss")? as f64;
+        if step % cfg.log_every == 0 {
+            logger.event(
+                "retrain_step",
+                &[
+                    ("step", step as f64),
+                    ("loss", last_loss),
+                    ("acc", metric_f32(&m, "acc")? as f64),
+                    ("lr", lr.at(step) as f64),
+                ],
+            );
+        }
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let res = eval_quantized(engine, state, selection, test)?;
+            logger.event(
+                "retrain_eval",
+                &[("step", step as f64), ("test_acc", res.accuracy), ("test_loss", res.loss)],
+            );
+            best = best.max(res.accuracy);
+        }
+    }
+    Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })
+}
+
+/// Re-export for driver callers.
+pub use super::evaluate::EvalResult as Eval;
+pub fn final_eval(
+    engine: &mut Engine,
+    state: &mut StateVec,
+    selection: &Selection,
+    test: &Dataset,
+) -> Result<EvalResult> {
+    eval_quantized(engine, state, selection, test)
+}

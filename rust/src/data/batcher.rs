@@ -1,0 +1,92 @@
+//! Epoch-shuffled batch iterator over a [`Dataset`].
+//!
+//! Fixed batch size (artifacts are compiled for one batch shape); the
+//! tail of each epoch that doesn't fill a batch is carried into the next
+//! epoch's shuffle, so every sample is seen with equal frequency.
+
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+use super::synth::Dataset;
+
+/// Shuffled mini-batch source with a deterministic RNG.
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Batcher<'a> {
+        assert!(batch <= ds.len(), "batch {} > dataset {}", batch, ds.len());
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, batch, order, pos: 0, rng, epoch: 0 }
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.len() / self.batch
+    }
+
+    /// Next (x, y) batch; reshuffles on epoch boundary.
+    pub fn next_batch(&mut self) -> (Tensor, Tensor) {
+        if self.pos + self.batch > self.order.len() {
+            // carry the unused tail into the next epoch's shuffle
+            let tail: Vec<usize> = self.order[self.pos..].to_vec();
+            let mut fresh: Vec<usize> = (0..self.ds.len()).collect();
+            self.rng.shuffle(&mut fresh);
+            self.order = tail;
+            self.order.extend(fresh);
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        self.ds.gather(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    #[test]
+    fn batches_have_fixed_shape_and_cover_dataset() {
+        let (ds, _) = generate(&SynthSpec::tiny(2));
+        let mut b = Batcher::new(&ds, 16, 0);
+        let mut seen = vec![0usize; ds.classes];
+        for _ in 0..b.batches_per_epoch() {
+            let (x, y) = b.next_batch();
+            assert_eq!(x.shape()[0], 16);
+            for &l in y.as_i32().unwrap() {
+                seen[l as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let (ds, _) = generate(&SynthSpec::tiny(2));
+        let mut b = Batcher::new(&ds, ds.len(), 0);
+        let (x1, _) = b.next_batch();
+        let (x2, _) = b.next_batch();
+        assert_eq!(b.epoch, 1);
+        // same multiset of samples, different order with high probability
+        assert_ne!(x1.as_f32().unwrap()[..64], x2.as_f32().unwrap()[..64]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, _) = generate(&SynthSpec::tiny(2));
+        let (a, _) = Batcher::new(&ds, 8, 3).next_batch();
+        let (b, _) = Batcher::new(&ds, 8, 3).next_batch();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data pipeline substrate: synthetic image classification datasets,
+//! deterministic splits, shuffled batching, light augmentation.
+//!
+//! Substitution (DESIGN.md §3): CIFAR-10/ImageNet are not available in
+//! this environment; `synth` generates a procedurally-defined,
+//! capacity-sensitive classification task whose accuracy degrades with
+//! quantization bitwidth, preserving the orderings the paper's tables
+//! demonstrate.  Everything is seeded and replayable.
+
+pub mod batcher;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use synth::{Dataset, SynthSpec};

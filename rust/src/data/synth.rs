@@ -1,0 +1,308 @@
+//! Synthetic image classification task (the CIFAR/ImageNet stand-in).
+//!
+//! Each class owns a prototype built from a small bank of random 2D
+//! sinusoid textures — a mix of *coarse* (low frequency, high contrast)
+//! and *fine* (high frequency, low contrast) components.  Samples are
+//! prototypes under random cyclic shift, horizontal flip, per-sample
+//! brightness jitter and additive Gaussian noise.
+//!
+//! Why this preserves the paper's phenomena: class pairs that share
+//! coarse components differ only in their fine components, and fine,
+//! low-contrast structure is exactly what low-bitwidth activation
+//! quantization destroys — so accuracy degrades smoothly with bitwidth
+//! and layers differ in quantization sensitivity, which is what the
+//! bitwidth search exploits.
+
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+/// Generation parameters for one synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub classes: usize,
+    pub hw: usize,
+    pub channels: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Additive Gaussian pixel noise (std).
+    pub noise: f32,
+    /// Pairs of classes that share coarse structure (hardness knob):
+    /// fraction of the texture bank shared with the previous class.
+    pub confusability: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// CIFAR-10 stand-in matching `resnet20_synth`'s geometry.
+    pub fn cifar_like(seed: u64) -> SynthSpec {
+        SynthSpec {
+            classes: 10,
+            hw: 32,
+            channels: 3,
+            n_train: 2560,
+            n_test: 1280,
+            noise: 0.35,
+            confusability: 0.5,
+            seed,
+        }
+    }
+
+    /// 40-class ImageNet-subsample stand-in for `resnet18_synth`.
+    pub fn imagenet_like(seed: u64) -> SynthSpec {
+        SynthSpec {
+            classes: 40,
+            hw: 32,
+            channels: 3,
+            n_train: 5120,
+            n_test: 2560,
+            noise: 0.3,
+            confusability: 0.6,
+            seed,
+        }
+    }
+
+    /// Tiny task for unit/integration tests (`resnet8_tiny` geometry).
+    pub fn tiny(seed: u64) -> SynthSpec {
+        SynthSpec {
+            classes: 10,
+            hw: 16,
+            channels: 3,
+            n_train: 512,
+            n_test: 256,
+            noise: 0.25,
+            confusability: 0.4,
+            seed,
+        }
+    }
+}
+
+/// An in-memory labelled image set (NHWC f32).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    fn sample_size(&self) -> usize {
+        self.hw * self.hw * self.channels
+    }
+
+    /// Copy sample `i` into `out` (length `sample_size`).
+    pub fn copy_sample(&self, i: usize, out: &mut [f32]) {
+        let sz = self.sample_size();
+        out.copy_from_slice(&self.images[i * sz..(i + 1) * sz]);
+    }
+
+    /// Materialize an explicit index set as (x, y) tensors.
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let sz = self.sample_size();
+        let mut x = vec![0f32; idx.len() * sz];
+        let mut y = vec![0i32; idx.len()];
+        for (row, &i) in idx.iter().enumerate() {
+            self.copy_sample(i, &mut x[row * sz..(row + 1) * sz]);
+            y[row] = self.labels[i];
+        }
+        (
+            Tensor::from_f32(&[idx.len(), self.hw, self.hw, self.channels], x),
+            Tensor::from_i32(&[idx.len()], y),
+        )
+    }
+
+    /// Deterministic split into two disjoint subsets (first gets `frac`).
+    /// Stratified per class so both halves see every class — the paper
+    /// splits CIFAR's train set 50/50 into search-train/search-val.
+    pub fn split(&self, frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed ^ 0x5917);
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); self.classes];
+        for (i, &l) in self.labels.iter().enumerate() {
+            by_class[l as usize].push(i);
+        }
+        let (mut ia, mut ib) = (Vec::new(), Vec::new());
+        for mut idxs in by_class {
+            rng.shuffle(&mut idxs);
+            let k = ((idxs.len() as f64) * frac).round() as usize;
+            ia.extend_from_slice(&idxs[..k]);
+            ib.extend_from_slice(&idxs[k..]);
+        }
+        rng.shuffle(&mut ia);
+        rng.shuffle(&mut ib);
+        (self.subset(&ia), self.subset(&ib))
+    }
+
+    fn subset(&self, idx: &[usize]) -> Dataset {
+        let sz = self.sample_size();
+        let mut images = Vec::with_capacity(idx.len() * sz);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            images.extend_from_slice(&self.images[i * sz..(i + 1) * sz]);
+            labels.push(self.labels[i]);
+        }
+        Dataset { hw: self.hw, channels: self.channels, classes: self.classes, images, labels }
+    }
+}
+
+/// One sinusoidal texture component.
+#[derive(Clone)]
+struct Texture {
+    fx: f32,
+    fy: f32,
+    phase: f32,
+    amp: f32,
+    color: [f32; 3],
+}
+
+fn texture_bank(rng: &mut Rng, coarse: bool, count: usize) -> Vec<Texture> {
+    (0..count)
+        .map(|_| {
+            let (fmin, fmax, amp) = if coarse {
+                (1.0, 3.0, 1.0) // low frequency, high contrast
+            } else {
+                (5.0, 9.0, 0.35) // high frequency, low contrast
+            };
+            Texture {
+                fx: rng.uniform_in(fmin, fmax) * if rng.uniform() < 0.5 { -1.0 } else { 1.0 },
+                fy: rng.uniform_in(fmin, fmax),
+                phase: rng.uniform_in(0.0, std::f32::consts::TAU),
+                amp: amp * rng.uniform_in(0.7, 1.3),
+                color: [
+                    rng.uniform_in(-1.0, 1.0),
+                    rng.uniform_in(-1.0, 1.0),
+                    rng.uniform_in(-1.0, 1.0),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// Generate (train, test) datasets from a spec — fully deterministic.
+pub fn generate(spec: &SynthSpec) -> (Dataset, Dataset) {
+    let mut rng = Rng::new(spec.seed);
+    let n_coarse = 3;
+    let n_fine = 4;
+
+    // Per-class texture banks; with probability `confusability` a class
+    // inherits its coarse bank from the previous class, leaving only the
+    // fine (quantization-fragile) textures to separate the pair.
+    let mut class_textures: Vec<Vec<Texture>> = Vec::with_capacity(spec.classes);
+    for c in 0..spec.classes {
+        let coarse = if c > 0 && rng.uniform() < spec.confusability as f64 {
+            class_textures[c - 1][..n_coarse].to_vec()
+        } else {
+            texture_bank(&mut rng, true, n_coarse)
+        };
+        let mut bank = coarse;
+        bank.extend(texture_bank(&mut rng, false, n_fine));
+        class_textures.push(bank);
+    }
+
+    let make = |n: usize, rng: &mut Rng| -> Dataset {
+        let hw = spec.hw;
+        let sz = hw * hw * spec.channels;
+        let mut images = vec![0f32; n * sz];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let class = i % spec.classes; // balanced
+            labels[i] = class as i32;
+            let dx = rng.below(hw);
+            let dy = rng.below(hw);
+            let flip = rng.uniform() < 0.5;
+            let brightness = rng.uniform_in(0.85, 1.15);
+            let img = &mut images[i * sz..(i + 1) * sz];
+            for yy in 0..hw {
+                for xx in 0..hw {
+                    // cyclic shift + optional horizontal flip
+                    let sx = if flip { hw - 1 - xx } else { xx };
+                    let u = ((sx + dx) % hw) as f32 / hw as f32;
+                    let v = ((yy + dy) % hw) as f32 / hw as f32;
+                    for t in &class_textures[class] {
+                        let val = t.amp
+                            * (std::f32::consts::TAU * (t.fx * u + t.fy * v) + t.phase).sin();
+                        for ch in 0..spec.channels {
+                            img[(yy * hw + xx) * spec.channels + ch] +=
+                                brightness * val * t.color[ch % 3];
+                        }
+                    }
+                }
+            }
+            for px in img.iter_mut() {
+                *px += spec.noise * rng.normal();
+            }
+        }
+        Dataset {
+            hw,
+            channels: spec.channels,
+            classes: spec.classes,
+            images,
+            labels,
+        }
+    };
+
+    let train = make(spec.n_train, &mut rng);
+    let test = make(spec.n_test, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let spec = SynthSpec::tiny(9);
+        let (a, _) = generate(&spec);
+        let (b, _) = generate(&spec);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let mut counts = vec![0usize; spec.classes];
+        for &l in &a.labels {
+            counts[l as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "balanced classes: {counts:?}");
+    }
+
+    #[test]
+    fn pixels_are_normalized_scale(// roughly zero-mean, O(1) std
+    ) {
+        let (train, _) = generate(&SynthSpec::tiny(3));
+        let n = train.images.len() as f64;
+        let mean: f64 = train.images.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var: f64 =
+            train.images.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+        assert!(var > 0.05 && var < 10.0, "var {var}");
+    }
+
+    #[test]
+    fn split_is_disjoint_partition_and_stratified() {
+        let (train, _) = generate(&SynthSpec::tiny(5));
+        let (a, b) = train.split(0.5, 1);
+        assert_eq!(a.len() + b.len(), train.len());
+        let mut counts = vec![0usize; a.classes];
+        for &l in &a.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "stratified: {counts:?}");
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let (train, _) = generate(&SynthSpec::tiny(5));
+        let (x, y) = train.gather(&[0, 5, 9]);
+        assert_eq!(x.shape(), &[3, 16, 16, 3]);
+        assert_eq!(y.shape(), &[3]);
+    }
+}

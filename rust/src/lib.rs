@@ -1,0 +1,25 @@
+//! EBS: Efficient Bitwidth Search for practical mixed precision neural
+//! networks — Rust L3 coordinator, BD deployment engine, and experiment
+//! harness (see DESIGN.md for the paper→module map).
+//!
+//! Layering:
+//! * [`runtime`] — PJRT bridge: loads the AOT artifacts built by
+//!   `python/compile/aot.py` and executes step graphs.
+//! * [`coordinator`] — Algorithm 1 (bilevel search), training drivers,
+//!   FLOPs model, bitwidth selection, schedules.
+//! * [`bd`] — Binary Decomposition inference engine (Eq. 12-14) for
+//!   generic CPUs: bitplane packing + AND/popcount GEMM + shift-add.
+//! * [`data`] — synthetic dataset substrate + batching.
+//! * [`baselines`] — uniform precision, random search, DNAS supernet.
+//! * [`report`] — regenerators for every table/figure in the paper.
+
+pub mod baselines;
+pub mod bd;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod models;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;

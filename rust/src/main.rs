@@ -1,0 +1,252 @@
+//! `ebs` — the L3 coordinator CLI.
+//!
+//! Subcommands map onto the paper's pipeline (Fig. 1) and its evaluation
+//! section (DESIGN.md §6):
+//!
+//!   pipeline       FP pretrain → bilevel search → retrain → eval (Fig. 1)
+//!   search         bilevel bitwidth search only (Alg. 1)
+//!   deploy         run the retrained model on the BD engine + parity/latency
+//!   report-table1  Table 1 + Fig. 5 (also Tables 2/5 + Fig. 6 via config)
+//!   report-table3  Table 3 (EBS vs DNAS search efficiency)
+//!   report-table4  Table 4 (BD layer latency, W1-A1 vs W1-A2)
+//!   report-fig3    Fig. 3 (aggregated quantization function CSV)
+//!   report-fig7    Fig. 7 (per-layer precision distribution)
+//!
+//! Most subcommands take `--config configs/<name>.toml`; flags override.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use ebs::bd::{BdMode, BdNetwork};
+use ebs::config::RunConfig;
+use ebs::coordinator::{
+    run_pipeline, run_search, FlopsModel, PipelineCfg, RunLogger, Selection,
+};
+use ebs::data::synth::generate;
+use ebs::report;
+use ebs::runtime::{Engine, Manifest, StateVec};
+use ebs::util::cli::{split_csv, Args};
+
+const USAGE: &str = "\
+ebs — Efficient Bitwidth Search (mixed precision QNN) coordinator
+
+USAGE: ebs <subcommand> [--config <toml>] [flags]
+
+  pipeline        full Fig. 1 pipeline (pretrain → search → retrain → eval)
+  search          bilevel bitwidth search only; writes selection.json
+  deploy          BD-engine inference from a pipeline run directory
+  report-table1   Table 1 + Fig. 5 rows (Tables 2/5 via imagenet configs)
+  report-table3   Table 3 search-efficiency comparison [--models a,b] [--iters N]
+  report-table4   Table 4 BD latency [--reps N] [--extended]
+  report-fig3     Fig. 3 quantization-function CSV [--points N]
+  report-ablation λ-penalty ablation sweep [--lambdas 0.05,0.5,2,10]
+  report-fig7     Fig. 7 precision distribution --selection <json> [--model m]
+  info            print manifest / FLOPs summary for a model
+
+Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => RunConfig::load(Path::new(path))?,
+        None => RunConfig::from_doc(ebs::util::toml::parse("")?),
+    };
+    if let Some(m) = args.flag("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.flag("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(o) = args.flag("out") {
+        cfg.out_dir = PathBuf::from(o);
+    }
+    if let Some(t) = args.flag("target") {
+        cfg.search.target_mflops = t.parse().context("--target must be MFLOPs")?;
+    }
+    if args.has_switch("stochastic") {
+        cfg.search.stochastic = true;
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args(), &["stochastic", "extended", "two-stage", "help"])?;
+    if args.subcommand.is_empty() || args.has_switch("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "pipeline" => cmd_pipeline(&args),
+        "search" => cmd_search(&args),
+        "deploy" => cmd_deploy(&args),
+        "report-table1" => {
+            let cfg = load_config(&args)?;
+            report::table1::run(&cfg)
+        }
+        "report-table3" => {
+            let models = split_csv(args.flag_or("models", "resnet8_tiny"));
+            let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+            let out = PathBuf::from(args.flag_or("out", "runs/reports"));
+            report::table3::run(&models, &artifacts, &out, args.usize_flag("iters", 10)?)
+        }
+        "report-table4" => {
+            let out = PathBuf::from(args.flag_or("out", "runs/reports"));
+            report::table4::run(&out, args.usize_flag("reps", 7)?, args.has_switch("extended"))
+        }
+        "report-ablation" => {
+            let cfg = load_config(&args)?;
+            let lambdas = ebs::util::cli::parse_csv_f64(args.flag_or("lambdas", "0.05,0.5,2.0,10.0"))?;
+            report::ablation::run(&cfg, &lambdas)
+        }
+        "report-fig3" => {
+            let out = PathBuf::from(args.flag_or("out", "runs/reports"));
+            report::fig3::run(&out, args.usize_flag("points", 500)?)
+        }
+        "report-fig7" => {
+            let cfg = load_config(&args)?;
+            let manifest = Manifest::load(&cfg.model_dir())?;
+            let sel = PathBuf::from(args.req_flag("selection")?);
+            let out = PathBuf::from(args.flag_or("out", "runs/reports"));
+            report::fig7::run(&manifest, &sel, &out)
+        }
+        "info" => cmd_info(&args),
+        _ => Err(args.unknown_subcommand(&[
+            "pipeline", "search", "deploy", "report-table1", "report-table3",
+            "report-table4", "report-fig3", "report-fig7", "report-ablation", "info",
+        ])),
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut engine = Engine::open(&cfg.model_dir())?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let mut search = cfg.search.clone();
+    if search.target_mflops <= 0.0 {
+        search.target_mflops = flops.uniform_mflops(3);
+        eprintln!("[pipeline] no target set; defaulting to 3-bit cost = {:.2} MFLOPs", search.target_mflops);
+    }
+    let (train, test) = generate(&cfg.data.to_spec());
+    let run_dir = cfg.out_dir.join(format!("pipeline_{}", cfg.model));
+    let mut logger = RunLogger::new(&run_dir, true)?;
+    let pcfg = PipelineCfg {
+        pretrain: cfg.pretrain.clone(),
+        search,
+        retrain: cfg.retrain.clone(),
+        seed: cfg.seed,
+        save_artifacts: true,
+    };
+    let (result, _state) = run_pipeline(&mut engine, &train, &test, &pcfg, None, &mut logger)?;
+    println!(
+        "pipeline done: fp_acc={:.2}% → mixed({:.2} MFLOPs, {:.2}x saving) acc={:.2}%",
+        100.0 * result.fp_test_acc,
+        result.mflops,
+        result.saving,
+        100.0 * result.test_acc,
+    );
+    println!("run dir: {}", run_dir.display());
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut engine = Engine::open(&cfg.model_dir())?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let mut scfg = cfg.search.clone();
+    if scfg.target_mflops <= 0.0 {
+        scfg.target_mflops = flops.uniform_mflops(3);
+    }
+    let (train, _) = generate(&cfg.data.to_spec());
+    let (s_train, s_val) = train.split(0.5, scfg.seed ^ 0x51);
+    let run_dir = cfg.out_dir.join(format!("search_{}", cfg.model));
+    let mut logger = RunLogger::new(&run_dir, true)?;
+    let mut state = match args.flag("init-ckpt") {
+        Some(p) => StateVec::load(Path::new(p), &engine.manifest.state_spec)?,
+        None => engine.init_state(cfg.seed)?,
+    };
+    let res = run_search(&mut engine, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
+    res.selection.save(&run_dir.join("selection.json"))?;
+    state.save(&run_dir.join("search.ckpt"))?;
+    let (mw, mx) = res.selection.mean_bits();
+    println!(
+        "search done: {:.2} MFLOPs (target {:.2}), mean bits w={mw:.2} a={mx:.2}; \
+         selection → {}",
+        res.exact_mflops,
+        scfg.target_mflops,
+        run_dir.join("selection.json").display()
+    );
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let run_dir = PathBuf::from(
+        args.flag_or("run-dir", &format!("{}/pipeline_{}", cfg.out_dir.display(), cfg.model)),
+    );
+    let engine = Engine::open(&cfg.model_dir())?;
+    let state = StateVec::load(&run_dir.join("retrained.ckpt"), &engine.manifest.state_spec)
+        .context("deploy needs a pipeline run dir with retrained.ckpt")?;
+    let sel = Selection::load(&run_dir.join("selection.json"))?;
+    let mode = if args.has_switch("two-stage") { BdMode::TwoStage } else { BdMode::Fused };
+    let net = BdNetwork::from_state(&engine.manifest, &state, &sel, mode)?;
+
+    // Accuracy on the test set via the BD engine, plus parity vs HLO.
+    let (_, test) = generate(&cfg.data.to_spec());
+    let n = test.len().min(args.usize_flag("samples", 256)?);
+    let sz = test.hw * test.hw * test.channels;
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let logits = net.forward(&test.images[i * sz..(i + 1) * sz]);
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "BD deploy ({mode:?}): {}/{} correct ({:.2}%), {:.2} ms/image, packed weights {:.1} KiB",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        1e3 * dt / n as f64,
+        net.packed_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let manifest = Manifest::load(&cfg.model_dir())?;
+    let flops = FlopsModel::from_manifest(&manifest)?;
+    println!("model {}: {}×{}×{} → {} classes, batch {}",
+        manifest.model, manifest.image[0], manifest.image[1], manifest.image[2],
+        manifest.num_classes, manifest.batch_size);
+    println!("qconvs: {} | state: {} leaves, {:.1} MB | graphs: {:?}",
+        manifest.num_qconvs(),
+        manifest.state_spec.len(),
+        manifest.state_bytes() as f64 / 1e6,
+        {
+            let mut g: Vec<&String> = manifest.graphs.keys().collect();
+            g.sort();
+            g
+        });
+    println!("FP32 {:.2} MFLOPs; uniform costs:", flops.fp32_mflops);
+    for &b in &manifest.bits {
+        let mf = flops.uniform_mflops(b);
+        println!("  {b}-bit: {:>8.2} MFLOPs ({:.2}x saving)", mf, flops.saving(mf));
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Rust-side model topology (mirror of `python/compile/model.py`).
+//!
+//! Rebuilt from the manifest's stage list and parity-checked against the
+//! manifest's layer table, so the FLOPs model and the BD engine can
+//! never disagree with the exported graphs about layer shapes/ordering.
+
+pub mod resnet;
+
+pub use resnet::{BlockDesc, NetDesc};

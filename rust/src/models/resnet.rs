@@ -1,0 +1,158 @@
+//! ResNet topology reconstruction (basic blocks, projection shortcuts).
+//!
+//! `NetDesc::from_manifest` re-derives every conv of the network from the
+//! stage configuration using the *same* naming scheme as
+//! `model.conv_inventory` and verifies the result against the manifest's
+//! layer table — a structural parity test that runs on every load.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{LayerDesc, Manifest};
+
+/// One residual basic block, resolved to named convolutions.
+#[derive(Debug, Clone)]
+pub struct BlockDesc {
+    pub name: String, // e.g. "s1b0"
+    pub c1: LayerDesc,
+    pub c2: LayerDesc,
+    pub shortcut: Option<LayerDesc>,
+}
+
+/// Full network: stem conv → blocks → global-avg-pool → fc.
+#[derive(Debug, Clone)]
+pub struct NetDesc {
+    pub stem: LayerDesc,
+    pub blocks: Vec<BlockDesc>,
+    pub fc: LayerDesc,
+    /// Quantized conv names in manifest order.
+    pub qconv_names: Vec<String>,
+}
+
+fn conv(name: &str, kind: &str, in_ch: usize, out_ch: usize, k: usize, stride: usize, in_hw: usize) -> LayerDesc {
+    let out_hw = in_hw.div_ceil(stride);
+    let macs = if kind == "fc" {
+        (in_ch * out_ch) as u64
+    } else {
+        (k * k * in_ch * out_ch * out_hw * out_hw) as u64
+    };
+    LayerDesc {
+        name: name.to_string(),
+        kind: kind.to_string(),
+        in_ch,
+        out_ch,
+        ksize: k,
+        stride,
+        in_hw,
+        out_hw,
+        macs,
+    }
+}
+
+impl NetDesc {
+    /// Rebuild the topology from manifest geometry and parity-check it
+    /// against the manifest's own layer table.
+    pub fn from_manifest(m: &Manifest) -> Result<NetDesc> {
+        let mut hw = m.image[0];
+        let stem = conv("stem", "stem", m.image[2], m.stem_channels, 3, 1, hw);
+        let mut blocks = Vec::new();
+        let mut in_ch = m.stem_channels;
+        for (si, st) in m.stages.iter().enumerate() {
+            for bi in 0..st.blocks {
+                let stride = if bi == 0 { st.stride } else { 1 };
+                let base = format!("s{si}b{bi}");
+                let c1 = conv(&format!("{base}c1"), "qconv", in_ch, st.channels, 3, stride, hw);
+                let out_hw = hw.div_ceil(stride);
+                let c2 = conv(&format!("{base}c2"), "qconv", st.channels, st.channels, 3, 1, out_hw);
+                let shortcut = (stride != 1 || in_ch != st.channels).then(|| {
+                    conv(&format!("{base}sc"), "qconv", in_ch, st.channels, 1, stride, hw)
+                });
+                blocks.push(BlockDesc { name: base, c1, c2, shortcut });
+                hw = out_hw;
+                in_ch = st.channels;
+            }
+        }
+        let fc = conv("fc", "fc", in_ch, m.num_classes, 1, 1, 1);
+
+        let net = NetDesc {
+            qconv_names: blocks
+                .iter()
+                .flat_map(|b| {
+                    let mut v = vec![b.c1.name.clone(), b.c2.name.clone()];
+                    if let Some(sc) = &b.shortcut {
+                        v.push(sc.name.clone());
+                    }
+                    v
+                })
+                .collect(),
+            stem,
+            blocks,
+            fc,
+        };
+        net.verify(m)?;
+        Ok(net)
+    }
+
+    /// All convs in forward order (stem, blocks, fc) — mirror of
+    /// `model.conv_inventory`.
+    pub fn inventory(&self) -> Vec<&LayerDesc> {
+        let mut v = vec![&self.stem];
+        for b in &self.blocks {
+            v.push(&b.c1);
+            v.push(&b.c2);
+            if let Some(sc) = &b.shortcut {
+                v.push(sc);
+            }
+        }
+        v.push(&self.fc);
+        v
+    }
+
+    pub fn qconvs(&self) -> Vec<&LayerDesc> {
+        self.inventory().into_iter().filter(|l| l.kind == "qconv").collect()
+    }
+
+    fn verify(&self, m: &Manifest) -> Result<()> {
+        let inv = self.inventory();
+        if inv.len() != m.layers.len() {
+            bail!(
+                "topology mismatch: rebuilt {} layers, manifest has {}",
+                inv.len(),
+                m.layers.len()
+            );
+        }
+        for (mine, theirs) in inv.iter().zip(&m.layers) {
+            if mine.name != theirs.name
+                || mine.kind != theirs.kind
+                || mine.in_ch != theirs.in_ch
+                || mine.out_ch != theirs.out_ch
+                || mine.ksize != theirs.ksize
+                || mine.stride != theirs.stride
+                || mine.in_hw != theirs.in_hw
+                || mine.out_hw != theirs.out_hw
+                || mine.macs != theirs.macs
+            {
+                bail!(
+                    "layer parity failure: rebuilt {mine:?} != manifest {theirs:?} \
+                     (model.py and models/resnet.rs disagree)"
+                );
+            }
+        }
+        if self.qconv_names != m.qconv_layers {
+            bail!("qconv ordering mismatch vs manifest");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_matches_same_padding() {
+        // SAME padding output size for stride s is ceil(in/s).
+        let c = conv("x", "qconv", 16, 32, 3, 2, 17);
+        assert_eq!(c.out_hw, 9);
+        assert_eq!(c.macs, (3 * 3 * 16 * 32 * 81) as u64);
+    }
+}

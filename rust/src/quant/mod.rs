@@ -1,0 +1,121 @@
+//! Rust-side quantizers — Eq. 1a-1c replicated exactly (third
+//! implementation after `ref.py` and the Pallas kernels; cross-tested).
+//!
+//! The BD deployment engine works on raw integer codes; the affine maps
+//! back to real values are:
+//!   weights:      w = s_w · c_w + z_w,  s_w = 2/(2^M − 1),  z_w = −1
+//!   activations:  x = s_x · c_x,        s_x = α/(2^K − 1)
+//!
+//! Rounding is *half up* (`floor(v + 0.5)`), matching the paper's §3 and
+//! `ref.round_half_up` — NOT Rust's `f32::round` (half away from zero),
+//! which differs for negative halves that can occur after tanh
+//! normalization noise.
+
+/// Round half up, identical to `ref.round_half_up`.
+#[inline]
+pub fn round_half_up(v: f32) -> f32 {
+    (v + 0.5).floor()
+}
+
+/// Weight quantization result: integer codes + affine decode parameters.
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    /// Codes in 0..2^bits, flattened in the caller's layout.
+    pub codes: Vec<u8>,
+    pub bits: u32,
+    pub scale: f32, // s_w
+    pub zero: f32,  // z_w (−1)
+}
+
+/// Eq. 1a: tanh-normalize to [0,1], quantize to `bits`, return codes.
+pub fn quantize_weights(w: &[f32], bits: u32) -> QuantWeights {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut max_abs = 0f32;
+    let tanhs: Vec<f32> = w
+        .iter()
+        .map(|&v| {
+            let t = v.tanh();
+            max_abs = max_abs.max(t.abs());
+            t
+        })
+        .collect();
+    let denom = 2.0 * max_abs.max(f32::MIN_POSITIVE);
+    let codes = tanhs
+        .iter()
+        .map(|&t| {
+            let norm = t / denom + 0.5;
+            round_half_up(norm * levels).clamp(0.0, levels) as u8
+        })
+        .collect();
+    QuantWeights { codes, bits, scale: 2.0 / levels, zero: -1.0 }
+}
+
+/// Dequantized weight value for code `c`.
+#[inline]
+pub fn decode_weight(q: &QuantWeights, c: u8) -> f32 {
+    q.scale * c as f32 + q.zero
+}
+
+/// Eq. 1b: clip to [0, α], quantize to `bits`; returns codes into `out`.
+/// The decode scale is `alpha / (2^bits − 1)`.
+pub fn quantize_acts(x: &[f32], alpha: f32, bits: u32, out: &mut [u8]) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let clipped = v.clamp(0.0, alpha);
+        *o = round_half_up(clipped / alpha * levels).clamp(0.0, levels) as u8;
+    }
+    alpha / levels
+}
+
+/// Float fake-quantized weights (what the HLO graphs see) — used by the
+/// parity tests to compare the code path against the training path.
+pub fn fake_quant_weights(w: &[f32], bits: u32) -> Vec<f32> {
+    let q = quantize_weights(w, bits);
+    q.codes.iter().map(|&c| decode_weight(&q, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_up_ties() {
+        assert_eq!(round_half_up(0.5), 1.0);
+        assert_eq!(round_half_up(1.5), 2.0);
+        assert_eq!(round_half_up(-0.5), 0.0); // floor(-0.5+0.5) = 0, not -1
+        assert_eq!(round_half_up(2.4), 2.0);
+    }
+
+    #[test]
+    fn weight_codes_cover_range_and_decode_within_bounds() {
+        let w: Vec<f32> = (-20..=20).map(|i| i as f32 / 5.0).collect();
+        for bits in 1..=5 {
+            let q = quantize_weights(&w, bits);
+            let max_code = (1u32 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| (c as u32) <= max_code));
+            // extreme weights map to the extreme codes
+            assert_eq!(q.codes[0], 0);
+            assert_eq!(q.codes[w.len() - 1] as u32, max_code);
+            for &c in &q.codes {
+                let v = decode_weight(&q, c);
+                assert!((-1.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn binary_weights_are_sign_like() {
+        let w = [-0.9f32, -0.1, 0.1, 0.9];
+        let fq = fake_quant_weights(&w, 1);
+        assert_eq!(fq, vec![-1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn act_codes_clip_and_scale() {
+        let x = [-1.0f32, 0.0, 3.0, 6.0, 9.0];
+        let mut codes = vec![0u8; x.len()];
+        let scale = quantize_acts(&x, 6.0, 2, &mut codes);
+        assert_eq!(codes, vec![0, 0, 2, 3, 3]); // 3/6*3 = 1.5 → 2 (half up)
+        assert!((scale - 2.0).abs() < 1e-6);
+    }
+}

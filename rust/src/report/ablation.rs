@@ -1,0 +1,73 @@
+//! Ablation: the FLOPs-penalty trade-off λ (Eq. 9) — the design choice
+//! DESIGN.md §6 calls out for ablation.
+//!
+//! Sweeps λ over a fixed search budget and reports where the expected
+//! and discretized costs land relative to the target, plus the
+//! supernet's validation accuracy: λ too small ignores the budget,
+//! λ too large collapses precision below what accuracy needs.  Also
+//! ablates deterministic vs stochastic search on the same grid.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{run_search, FlopsModel, RunLogger, SearchCfg};
+use crate::data::synth::generate;
+use crate::runtime::Engine;
+
+use super::table_fmt::Table;
+
+/// Run the λ sweep.  Uses the tiny model unless the config overrides.
+pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
+    let mut engine = Engine::open(&cfg.model_dir())?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let target = if cfg.search.target_mflops > 0.0 {
+        cfg.search.target_mflops
+    } else {
+        flops.uniform_mflops(2)
+    };
+    let (train, _) = generate(&cfg.data.to_spec());
+    let out_dir = cfg.out_dir.join(format!("ablation_{}", cfg.model));
+    let mut logger = RunLogger::new(&out_dir, false)?;
+
+    let mut table = Table::new(
+        &format!(
+            "Ablation — FLOPs penalty λ (Eq. 9), {} @ target {:.2} MFLOPs",
+            cfg.model, target
+        ),
+        &[
+            "lambda", "mode", "E[FLOPs] (M)", "selected (M)", "over target",
+            "soft val acc (%)", "mean W bits", "mean A bits",
+        ],
+    );
+
+    for &stochastic in &[false, true] {
+        for &lam in lambdas {
+            let mut scfg = SearchCfg {
+                steps: cfg.search.steps,
+                lambda: lam as f32,
+                stochastic,
+                eval_every: cfg.search.eval_every,
+                log_every: 10_000,
+                seed: cfg.search.seed ^ ((lam * 100.0) as u64),
+                ..SearchCfg::defaults(target, cfg.search.steps)
+            };
+            scfg.target_mflops = target;
+            let (s_train, s_val) = train.split(0.5, scfg.seed ^ 0x51);
+            let mut state = engine.init_state(cfg.seed)?;
+            let res = run_search(&mut engine, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
+            let (mw, mx) = res.selection.mean_bits();
+            table.row(vec![
+                format!("{lam:.2}"),
+                if stochastic { "sto" } else { "det" }.into(),
+                format!("{:.3}", res.final_eflops),
+                format!("{:.3}", res.exact_mflops),
+                format!("{:+.1}%", 100.0 * (res.exact_mflops - target) / target),
+                format!("{:.1}", 100.0 * res.best_val_acc),
+                format!("{mw:.2}"),
+                format!("{mx:.2}"),
+            ]);
+        }
+    }
+    table.write(&out_dir, "ablation_lambda")?;
+    Ok(())
+}

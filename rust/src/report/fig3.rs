@@ -1,0 +1,101 @@
+//! Fig. 3 regenerator: the aggregated quantization function of Eq. 6.
+//!
+//! Sweeps w ∈ [-2.5, 2.5] and dumps the EBS aggregated quantized value
+//! for several strength settings — single precisions (step functions),
+//! the uniform mixture r=[0,0] over B={2,3}, and the skewed mixture
+//! r=[-1,1] — reproducing the paper's visualization that EBS interpolates
+//! between candidate step functions during search.
+
+use anyhow::Result;
+
+use crate::quant::round_half_up;
+
+use super::table_fmt::Table;
+
+/// quantize_b on the already-normalized [0,1] value (Eq. 1c).
+fn quantize_b(t: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    round_half_up(t * levels) / levels
+}
+
+/// Eq. 6 aggregated weight quantization at softmax(r) coefficients over
+/// candidate set `bits`, for a *population* of weights whose max |tanh|
+/// is `max_tanh` (we use the sweep's own max, as in training).
+fn ebs_value(w: f32, max_tanh: f32, bits: &[u32], r: &[f32]) -> f32 {
+    let norm = w.tanh() / (2.0 * max_tanh) + 0.5;
+    let mx = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = r.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    bits.iter()
+        .zip(&exps)
+        .map(|(&b, &e)| e / z * (2.0 * quantize_b(norm, b) - 1.0))
+        .sum()
+}
+
+/// Dump the Fig. 3 curves to CSV.
+pub fn run(out: &std::path::Path, points: usize) -> Result<()> {
+    let mut table = Table::new(
+        "Fig. 3 — aggregated quantization function (Eq. 6)",
+        &[
+            "w", "b2_only", "b3_only",
+            "mix_b23_r00",  // r = [0, 0]  → 0.5·Ŵ² + 0.5·Ŵ³
+            "mix_b23_rm1p1", // r = [-1, 1] → mostly 3-bit
+            "mix_b15_r0",   // full candidate set, uniform strengths
+        ],
+    );
+    let lim = 2.5f32;
+    let max_tanh = lim.tanh();
+    for i in 0..=points {
+        let w = -lim + 2.0 * lim * i as f32 / points as f32;
+        table.row(vec![
+            format!("{w:.4}"),
+            format!("{:.5}", ebs_value(w, max_tanh, &[2], &[0.0])),
+            format!("{:.5}", ebs_value(w, max_tanh, &[3], &[0.0])),
+            format!("{:.5}", ebs_value(w, max_tanh, &[2, 3], &[0.0, 0.0])),
+            format!("{:.5}", ebs_value(w, max_tanh, &[2, 3], &[-1.0, 1.0])),
+            format!("{:.5}", ebs_value(w, max_tanh, &[1, 2, 3, 4, 5], &[0.0; 5])),
+        ]);
+    }
+    table.write(out, "fig3")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mixture_has_finer_steps_than_either_branch() {
+        // The r=[0,0] mixture over {2,3} must take strictly more distinct
+        // values than the 3-bit step function alone (the paper's "larger
+        // capacity" argument).
+        let lim = 2.5f32;
+        let max_tanh = lim.tanh();
+        let distinct = |f: &dyn Fn(f32) -> f32| {
+            let mut vals: Vec<i64> = (0..=2000)
+                .map(|i| {
+                    let w = -lim + 2.0 * lim * i as f32 / 2000.0;
+                    (f(w) * 1e6).round() as i64
+                })
+                .collect();
+            vals.sort();
+            vals.dedup();
+            vals.len()
+        };
+        let mix = distinct(&|w| ebs_value(w, max_tanh, &[2, 3], &[0.0, 0.0]));
+        let b3 = distinct(&|w| ebs_value(w, max_tanh, &[3], &[0.0]));
+        assert!(mix > b3, "mixture {mix} levels vs 3-bit {b3}");
+    }
+
+    #[test]
+    fn skewed_mixture_approaches_dominant_branch() {
+        let lim = 2.5f32;
+        let max_tanh = lim.tanh();
+        for i in 0..50 {
+            let w = -lim + 2.0 * lim * i as f32 / 49.0;
+            let skew = ebs_value(w, max_tanh, &[2, 3], &[-4.0, 4.0]);
+            let b3 = ebs_value(w, max_tanh, &[3], &[0.0]);
+            assert!((skew - b3).abs() < 0.02, "at w={w}: {skew} vs {b3}");
+        }
+    }
+}

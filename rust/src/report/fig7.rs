@@ -1,0 +1,55 @@
+//! Fig. 7 regenerator: per-layer bitwidth distribution of a searched
+//! selection — weight bits vs activation bits per quantized conv, plus
+//! the Fig. 7 takeaway check (weights skew lower than activations in
+//! least-FLOPs searches).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::Selection;
+use crate::runtime::Manifest;
+
+use super::table_fmt::Table;
+
+/// Render a saved selection against its model manifest.
+pub fn run(manifest: &Manifest, selection_path: &Path, out: &Path) -> Result<()> {
+    let sel = Selection::load(selection_path)?;
+    anyhow::ensure!(
+        sel.w_bits.len() == manifest.num_qconvs(),
+        "selection has {} layers; model {} has {}",
+        sel.w_bits.len(),
+        manifest.model,
+        manifest.num_qconvs()
+    );
+    let mut table = Table::new(
+        &format!("Fig. 7 — precision distribution, {}", manifest.model),
+        &["Layer", "MACs (M)", "W bits", "A bits", "W bar", "A bar"],
+    );
+    for (i, name) in manifest.qconv_layers.iter().enumerate() {
+        let macs = manifest.qconv_macs[name] as f64 / 1e6;
+        table.row(vec![
+            name.clone(),
+            format!("{macs:.3}"),
+            sel.w_bits[i].to_string(),
+            sel.x_bits[i].to_string(),
+            "#".repeat(sel.w_bits[i] as usize),
+            "*".repeat(sel.x_bits[i] as usize),
+        ]);
+    }
+    let (mw, mx) = sel.mean_bits();
+    table.row(vec![
+        "(mean)".into(),
+        "-".into(),
+        format!("{mw:.2}"),
+        format!("{mx:.2}"),
+        String::new(),
+        String::new(),
+    ]);
+    table.write(out, "fig7")?;
+    println!(
+        "[fig7] mean weight bits {mw:.2} vs activation bits {mx:.2} — paper expects w ≤ a \
+         for least-FLOPs searches"
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Report generators — one module per table/figure of the paper's
+//! evaluation (DESIGN.md §6 experiment index).
+//!
+//! | paper artifact        | module    | CLI                         |
+//! |-----------------------|-----------|-----------------------------|
+//! | Table 1 + Fig. 5      | `table1`  | `ebs report-table1`         |
+//! | Table 2/5 + Fig. 6    | `table1`  | (imagenet-like config)      |
+//! | Table 3               | `table3`  | `ebs report-table3`         |
+//! | Table 4               | `table4`  | `ebs report-table4`         |
+//! | Fig. 3                | `fig3`    | `ebs report-fig3`           |
+//! | Fig. 7                | `fig7`    | `ebs report-fig7`           |
+//! | λ ablation (§6)       | `ablation`| `ebs report-ablation`       |
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig7;
+pub mod table1;
+pub mod table3;
+pub mod table4;
+pub mod table_fmt;
+
+pub use table_fmt::Table;

@@ -1,0 +1,195 @@
+//! Table 1 (+ Fig. 5 series) regenerator: accuracy / FLOPs / saving for
+//! uniform-precision QNNs vs EBS-Det vs EBS-Sto vs random search.
+//!
+//! The same generator produces Table 2 / Table 5 / Fig. 6 when pointed
+//! at an ImageNet-geometry config (`configs/table2_resnet18.toml`) — the
+//! paper's uniform baselines (PACT/LQ-Net/DSQ) are uniform-precision
+//! QNNs with learned clipping, which is exactly our `baselines::uniform`
+//! (DESIGN.md §10); the `[table] distill_rows = true` option adds the
+//! label-refinery comparison rows.
+//!
+//! Shape expectations (calibration): EBS ≥ uniform at matched FLOPs;
+//! random < EBS; weights skew to fewer bits than activations.
+
+use anyhow::Result;
+
+use crate::baselines::{run_random_search, run_uniform};
+use crate::config::RunConfig;
+use crate::coordinator::{
+    run_fp_train, FlopsModel, PipelineCfg, RunLogger,
+};
+use crate::data::synth::generate;
+use crate::runtime::Engine;
+
+use super::table_fmt::{mflops, pct, saving, Table};
+
+/// Run the full Table 1 protocol for one model config.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let mut engine = Engine::open(&cfg.model_dir())?;
+    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let (train, test) = generate(&cfg.data.to_spec());
+    let out_dir = cfg.out_dir.join(format!("table1_{}", cfg.model));
+    let mut logger = RunLogger::new(&out_dir, true)?;
+
+    let uniform_bits: Vec<u32> = {
+        let arr = cfg.doc.i64_array("table.uniform_bits").unwrap_or_default();
+        if arr.is_empty() {
+            vec![5, 4, 3, 2, 1]
+        } else {
+            arr.into_iter().map(|b| b as u32).collect()
+        }
+    };
+    let targets: Vec<f64> = if cfg.targets_mflops.is_empty() {
+        vec![
+            flops.uniform_mflops(4),
+            flops.uniform_mflops(3),
+            flops.uniform_mflops(2),
+        ]
+    } else {
+        cfg.targets_mflops.clone()
+    };
+    let with_sto = cfg.doc.bool_or("table.stochastic_rows", true);
+    let with_random = cfg.doc.bool_or("table.random_rows", true);
+    let distill_rows = cfg.doc.bool_or("table.distill_rows", false);
+
+    let mut table = Table::new(
+        &format!(
+            "Table 1 — accuracy & computational cost, {} on synthetic data",
+            cfg.model
+        ),
+        &["Method", "Precision", "Accuracy (%)", "FLOPs", "Saving"],
+    );
+    // Fig. 5 series: (method, mflops, acc) triples, one CSV.
+    let mut fig5 = Table::new(
+        &format!("Fig. 5 — accuracy-FLOPs curve data, {}", cfg.model),
+        &["method", "mflops", "accuracy"],
+    );
+
+    // ---- Full precision row (also the initialization for everything).
+    let mut fp_state = engine.init_state(cfg.seed)?;
+    let fp = run_fp_train(&mut engine, &mut fp_state, &train, &test, &cfg.pretrain, &mut logger)?;
+    table.row(vec![
+        "Full Prec.".into(),
+        "32-bit".into(),
+        pct(fp.best_test_acc),
+        mflops(flops.fp32_mflops),
+        "1.00x".into(),
+    ]);
+    fig5.row(vec!["fp32".into(), format!("{:.3}", flops.fp32_mflops), format!("{:.4}", fp.best_test_acc)]);
+
+    // ---- Uniform rows, progressive initialization high→low (§B.3).
+    let mut prev_state = fp_state.clone();
+    for &b in &uniform_bits {
+        let (res, _sel, mf, state) = run_uniform(
+            &mut engine, &prev_state, b, b, &train, &test, &cfg.retrain, &mut logger,
+        )?;
+        table.row(vec![
+            "Uniform QNN".into(),
+            format!("{b} bits"),
+            pct(res.best_test_acc),
+            mflops(mf),
+            saving(flops.saving(mf)),
+        ]);
+        fig5.row(vec![format!("uniform{b}"), format!("{mf:.3}"), format!("{:.4}", res.best_test_acc)]);
+        prev_state = state;
+    }
+
+    // ---- EBS rows (Det / Sto) per FLOPs target, then random search.
+    for (kind, stochastic) in [("EBS-Det", false), ("EBS-Sto", true)] {
+        if stochastic && !with_sto {
+            continue;
+        }
+        let mut prev: Option<crate::runtime::StateVec> = None;
+        for (ti, &target) in targets.iter().enumerate() {
+            let mut pcfg = PipelineCfg {
+                pretrain: cfg.pretrain.clone(),
+                search: cfg.search.clone(),
+                retrain: cfg.retrain.clone(),
+                seed: cfg.seed,
+                save_artifacts: false,
+            };
+            // Pretraining already done once above — reuse by shrinking
+            // the in-pipeline pretrain to a handful of steps is wasteful;
+            // instead run search/retrain directly here.
+            pcfg.search.target_mflops = target;
+            pcfg.search.stochastic = stochastic;
+            pcfg.search.seed = cfg.search.seed ^ (ti as u64) << 8;
+            if distill_rows {
+                pcfg.retrain.distill_mu = cfg.doc.f32_or("table.distill_mu", 0.5);
+            }
+
+            // search from FP init
+            let mut search_state = engine.init_state(cfg.seed)?;
+            search_state.transfer_from(&fp_state, "state/params/");
+            search_state.transfer_from(&fp_state, "state/bn/");
+            let (s_train, s_val) = train.split(0.5, pcfg.search.seed ^ 0x51);
+            let sres = crate::coordinator::run_search(
+                &mut engine, &mut search_state, &s_train, &s_val, &pcfg.search, &mut logger,
+            )?;
+            // retrain with progressive init
+            let mut rstate = engine.init_state(cfg.seed)?;
+            let init_src = prev.as_ref().unwrap_or(&fp_state);
+            rstate.transfer_from(init_src, "state/params/");
+            rstate.transfer_from(init_src, "state/bn/");
+            rstate.transfer_from(init_src, "state/alphas/");
+            let use_teacher = pcfg.retrain.distill_mu > 0.0;
+            let mut teacher_state = fp_state.clone();
+            let rres = crate::coordinator::run_retrain(
+                &mut engine, &mut rstate, &sres.selection, &train, &test, &pcfg.retrain,
+                use_teacher.then_some(&mut teacher_state), &mut logger,
+            )?;
+            let (mw, mx) = sres.selection.mean_bits();
+            logger.event(
+                "table1_row",
+                &[
+                    ("stochastic", stochastic as i32 as f64),
+                    ("target", target),
+                    ("mflops", sres.exact_mflops),
+                    ("test_acc", rres.best_test_acc),
+                    ("mean_w_bits", mw),
+                    ("mean_x_bits", mx),
+                ],
+            );
+            table.row(vec![
+                kind.into(),
+                "flexible".into(),
+                pct(rres.best_test_acc),
+                mflops(sres.exact_mflops),
+                saving(flops.saving(sres.exact_mflops)),
+            ]);
+            fig5.row(vec![
+                kind.to_lowercase(),
+                format!("{:.3}", sres.exact_mflops),
+                format!("{:.4}", rres.best_test_acc),
+            ]);
+            sres.selection
+                .save(&out_dir.join(format!("selection_{kind}_{target:.1}.json")))?;
+            prev = Some(rstate);
+        }
+    }
+
+    if with_random {
+        for (ti, &target) in targets.iter().enumerate() {
+            let (res, _sel, mf) = run_random_search(
+                &mut engine, &fp_state, target, &train, &test, &cfg.retrain,
+                cfg.search.seed ^ rand_seed(ti), &mut logger,
+            )?;
+            table.row(vec![
+                "Random Search".into(),
+                "flexible".into(),
+                pct(res.best_test_acc),
+                mflops(mf),
+                saving(flops.saving(mf)),
+            ]);
+            fig5.row(vec!["random".into(), format!("{mf:.3}"), format!("{:.4}", res.best_test_acc)]);
+        }
+    }
+
+    table.write(&out_dir, "table1")?;
+    fig5.write(&out_dir, "fig5")?;
+    Ok(())
+}
+
+fn rand_seed(i: usize) -> u64 {
+    0x9151 ^ ((i as u64) << 4)
+}

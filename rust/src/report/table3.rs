@@ -1,0 +1,141 @@
+//! Table 3 regenerator: search-stage memory & time — uniform QNN step
+//! vs EBS search step vs DNAS supernet step, 10 iterations each.
+//!
+//! The paper reports GPU GB + seconds at batch 16..128 and DNAS OOMs at
+//! ≥64 on an 11 GB card; on this CPU client we report measured
+//! wall-clock + peak RSS and the analytic weight-copy model that makes
+//! the O(1) vs O(N) gap structural (DESIGN.md §3).  Batch size is baked
+//! into the artifacts, so each batch point is a separate exported model
+//! variant; by default we run on whichever variants exist.
+
+use anyhow::Result;
+
+use crate::baselines::dnas::{run_dnas_steps, weight_copy_bytes};
+use crate::runtime::Engine;
+
+use super::table_fmt::Table;
+
+/// Run on one artifact directory; appends rows for that batch size.
+pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path, iters: usize) -> Result<()> {
+    let mut table = Table::new(
+        &format!("Table 3 — search efficiency, {iters} iterations (CPU PJRT)"),
+        &[
+            "Model", "Batch", "Method", "Time (s)", "s/iter",
+            "Peak RSS (GB)", "State (MB)", "Meta-weight copies (MB)",
+        ],
+    );
+    for model in models {
+        let dir = artifacts.join(model);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("[table3] skipping {model}: artifacts missing");
+            continue;
+        }
+        let mut engine = Engine::open(&dir)?;
+        let batch = engine.manifest.batch_size;
+        let n_bits = engine.manifest.bits.len();
+        let (one_copy, n_copies) = weight_copy_bytes(&engine, n_bits);
+
+        // Uniform QNN training step (the paper's first row): the retrain
+        // graph with a fixed one-hot selection.
+        let mut ustate = engine.init_state(1)?;
+        let ucost = uniform_step_cost(&mut engine, &mut ustate, iters)?;
+        table.row(vec![
+            model.clone(),
+            batch.to_string(),
+            "Uniform QNN".into(),
+            format!("{:.2}", ucost.0),
+            format!("{:.3}", ucost.0 / iters as f64),
+            format!("{:.2}", ucost.1 as f64 / 1e9),
+            format!("{:.1}", ustate.size_bytes() as f64 / 1e6),
+            format!("{:.2}", one_copy as f64 / 1e6),
+        ]);
+
+        let mut state = engine.init_state(1)?;
+        let ebs = run_dnas_steps(&mut engine, "search_det", &mut state, iters, 7)?;
+        table.row(vec![
+            model.clone(),
+            batch.to_string(),
+            "EBS".into(),
+            format!("{:.2}", ebs.total_seconds),
+            format!("{:.3}", ebs.total_seconds / iters as f64),
+            format!("{:.2}", ebs.peak_rss_bytes as f64 / 1e9),
+            format!("{:.1}", ebs.state_bytes as f64 / 1e6),
+            format!("{:.2}", one_copy as f64 / 1e6),
+        ]);
+
+        if engine.manifest.graphs.contains_key("dnas_search") {
+            let mut dstate = engine.init_dnas_state(1)?;
+            let dnas = run_dnas_steps(&mut engine, "dnas_search", &mut dstate, iters, 7)?;
+            table.row(vec![
+                model.clone(),
+                batch.to_string(),
+                "DNAS".into(),
+                format!("{:.2}", dnas.total_seconds),
+                format!("{:.3}", dnas.total_seconds / iters as f64),
+                format!("{:.2}", dnas.peak_rss_bytes as f64 / 1e9),
+                format!("{:.1}", dnas.state_bytes as f64 / 1e6),
+                format!("{:.2}", n_copies as f64 / 1e6),
+            ]);
+        } else {
+            table.row(vec![
+                model.clone(),
+                batch.to_string(),
+                "DNAS".into(),
+                "n/a (export with --dnas)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                format!("{:.2}", n_copies as f64 / 1e6),
+            ]);
+        }
+    }
+    table.write(out, "table3")?;
+    Ok(())
+}
+
+/// Time `iters` retrain steps with a 5-bit uniform selection.
+fn uniform_step_cost(
+    engine: &mut Engine,
+    state: &mut crate::runtime::StateVec,
+    iters: usize,
+) -> Result<(f64, u64)> {
+    use crate::coordinator::Selection;
+    use crate::runtime::Tensor;
+    use crate::util::{mem, Rng};
+    use std::time::Instant;
+
+    let mut rng = Rng::new(3);
+    let [h, w, c] = engine.manifest.image;
+    let (b, classes, l) = (
+        engine.manifest.batch_size,
+        engine.manifest.num_classes,
+        engine.manifest.num_qconvs(),
+    );
+    let sel = Selection::uniform(5, 5, l);
+    let (sw, sx) = sel.to_onehot(&engine.manifest)?;
+    let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
+    let make_io = |rng: &mut Rng| {
+        vec![
+            ("sel_w".to_string(), sw.clone()),
+            ("sel_x".to_string(), sx.clone()),
+            (
+                "x".to_string(),
+                Tensor::from_f32(&[b, h, w, c], (0..b * h * w * c).map(|_| rng.normal()).collect()),
+            ),
+            (
+                "y".to_string(),
+                Tensor::from_i32(&[b], (0..b).map(|_| rng.below(classes) as i32).collect()),
+            ),
+            ("teacher".to_string(), zero_teacher.clone()),
+            ("lr".to_string(), Tensor::scalar_f32(0.01)),
+            ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+            ("mu".to_string(), Tensor::scalar_f32(0.0)),
+        ]
+    };
+    engine.run("train", state, &make_io(&mut rng))?; // warmup + compile
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.run("train", state, &make_io(&mut rng))?;
+    }
+    Ok((t0.elapsed().as_secs_f64(), mem::peak_rss_bytes()))
+}

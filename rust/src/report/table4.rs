@@ -1,0 +1,143 @@
+//! Table 4 regenerator: Binary Decomposition latency per conv layer,
+//! W1-A1 vs W1-A2 (plus optional wider sweeps), and a Bi-Real-18-style
+//! end-to-end stack.
+//!
+//! The paper measures a Raspberry Pi 3B (ARM NEON, daBNN); we measure
+//! the same layer shapes on the x86-64 AND+POPCNT engine — the claim
+//! being reproduced is the *ratio* structure: latency scales ~linearly
+//! with M·K, so W1-A2 ≈ 2× W1-A1 (Eq. 2 operation count).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bd::BdConvLayer;
+use crate::util::Rng;
+
+use super::table_fmt::Table;
+
+/// One benchmark shape (from the paper's Table 4: ResNet-18 layers).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerShape {
+    pub k: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub stride: usize,
+    pub hw: usize,
+}
+
+/// The paper's Table 4 layer list; feature-map sizes follow the
+/// ResNet-18 positions of those channel counts (56/28/14/14/7 at 224²
+/// input, scaled 4× down here to keep single-core runtimes sane — the
+/// M·K ratio is size-independent).
+pub fn paper_layers() -> Vec<LayerShape> {
+    vec![
+        LayerShape { k: 3, ci: 64, co: 64, stride: 1, hw: 14 },
+        LayerShape { k: 3, ci: 128, co: 128, stride: 1, hw: 7 },
+        LayerShape { k: 3, ci: 256, co: 256, stride: 1, hw: 4 },
+        LayerShape { k: 3, ci: 256, co: 512, stride: 2, hw: 4 },
+        LayerShape { k: 3, ci: 512, co: 512, stride: 1, hw: 2 },
+    ]
+}
+
+/// Median-of-`reps` latency of one BD layer at (m_bits, k_bits).
+pub fn layer_latency_ms(shape: &LayerShape, m_bits: u32, k_bits: u32, reps: usize) -> f64 {
+    let mut rng = Rng::new(0x7AB4 ^ ((m_bits as u64) << 8) ^ k_bits as u64);
+    let wlen = shape.k * shape.k * shape.ci * shape.co;
+    let weights: Vec<f32> = (0..wlen).map(|_| rng.normal()).collect();
+    let layer = BdConvLayer::new(
+        "bench", &weights, shape.ci, shape.co, shape.k, shape.stride,
+        m_bits, k_bits, 4.0, None, true,
+    )
+    .expect("layer");
+    let x: Vec<f32> = (0..shape.hw * shape.hw * shape.ci).map(|_| rng.normal().abs()).collect();
+    let _ = layer.forward(&x, shape.hw, shape.hw); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(layer.forward(&x, shape.hw, shape.hw));
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Regenerate Table 4.
+pub fn run(out: &std::path::Path, reps: usize, extended: bool) -> Result<()> {
+    let mut table = Table::new(
+        "Table 4 — BD latency per layer (x86-64 AND+POPCNT engine)",
+        &[
+            "Kernel", "In ch", "Out ch", "Stride", "W1-A1 (ms)", "W1-A2 (ms)",
+            "ratio", "W2-A2 (ms)",
+        ],
+    );
+    for shape in paper_layers() {
+        let a = layer_latency_ms(&shape, 1, 1, reps);
+        let b = layer_latency_ms(&shape, 1, 2, reps);
+        let c = layer_latency_ms(&shape, 2, 2, reps);
+        table.row(vec![
+            shape.k.to_string(),
+            shape.ci.to_string(),
+            shape.co.to_string(),
+            shape.stride.to_string(),
+            format!("{a:.2}"),
+            format!("{b:.2}"),
+            format!("{:.2}x", b / a),
+            format!("{c:.2}"),
+        ]);
+    }
+
+    // Bi-Real-18-like stack: the quantized body of ResNet-18 (4 stages ×
+    // 2 blocks × 2 convs) at W1-A1 vs W1-A2 — the paper's last row.
+    let stack: Vec<LayerShape> = {
+        let mut v = Vec::new();
+        let stages = [(64usize, 14usize), (128, 7), (256, 4), (512, 2)];
+        for &(ch, hw) in &stages {
+            for _ in 0..4 {
+                v.push(LayerShape { k: 3, ci: ch, co: ch, stride: 1, hw });
+            }
+        }
+        v
+    };
+    let sum = |m: u32, k: u32| -> f64 {
+        stack.iter().map(|s| layer_latency_ms(s, m, k, reps.max(2) / 2)).sum()
+    };
+    let s11 = sum(1, 1);
+    let s12 = sum(1, 2);
+    table.row(vec![
+        "Bi-Real-18 body".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{s11:.1}"),
+        format!("{s12:.1}"),
+        format!("{:.2}x", s12 / s11),
+        "-".into(),
+    ]);
+    table.write(out, "table4")?;
+
+    if extended {
+        // Full M×K sweep on one representative layer: latency should be
+        // ~linear in M·K (Eq. 2).
+        let shape = LayerShape { k: 3, ci: 128, co: 128, stride: 1, hw: 7 };
+        let mut sweep = Table::new(
+            "Table 4b — latency vs M·K (128ch 3×3, Eq. 2 linearity)",
+            &["M", "K", "M*K", "ms", "ms/(M*K)"],
+        );
+        for m in 1..=5u32 {
+            for k in 1..=5u32 {
+                let ms = layer_latency_ms(&shape, m, k, reps);
+                sweep.row(vec![
+                    m.to_string(),
+                    k.to_string(),
+                    (m * k).to_string(),
+                    format!("{ms:.2}"),
+                    format!("{:.3}", ms / (m * k) as f64),
+                ]);
+            }
+        }
+        sweep.write(out, "table4_sweep")?;
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Table assembly: collect rows, emit aligned Markdown + CSV.
+//!
+//! Every report generator funnels through this so EXPERIMENTS.md can
+//! embed regenerated tables verbatim.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple string table with pre-formatted cells.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Aligned GitHub-flavoured Markdown.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                line.push(' ');
+                line.push_str(&cells[i]);
+                line.push_str(&" ".repeat(pad + 1));
+                line.push('|');
+            }
+            line
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write both `<stem>.md` and `<stem>.csv` and echo the Markdown.
+    pub fn write(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        println!("{}", self.to_markdown());
+        println!("[report] wrote {}/{{{stem}.md,{stem}.csv}}", dir.display());
+        Ok(())
+    }
+}
+
+/// Format helpers used across reports.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+pub fn mflops(x: f64) -> String {
+    format!("{x:.2} M")
+}
+
+pub fn saving(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_is_aligned_and_csv_parses() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a   | bb |"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

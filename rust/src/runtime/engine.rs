@@ -1,0 +1,184 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, run steps.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.  Graphs are
+//! compiled lazily on first use and cached for the process lifetime.
+//!
+//! The run protocol (DESIGN.md §7.1): the manifest lists each graph's
+//! flattened inputs/outputs; leaves whose path starts with `state/` are
+//! wired to the [`StateVec`], `in/...` leaves come from the per-call io
+//! map, `out/...` leaves are returned as metrics.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{GraphSpec, Manifest};
+use super::state::StateVec;
+use super::tensor::Tensor;
+
+/// Metrics returned by one graph execution.
+pub type Metrics = HashMap<String, Tensor>;
+
+/// Scalar-metric convenience view.
+pub fn metric_f32(m: &Metrics, key: &str) -> Result<f32> {
+    m.get(key)
+        .with_context(|| format!("metric '{key}' missing"))?
+        .item_f32()
+}
+
+/// One model's compiled artifact set.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative wall-clock spent inside `execute` per graph (profiling).
+    pub exec_time: HashMap<String, Duration>,
+    pub exec_count: HashMap<String, u64>,
+}
+
+impl Engine {
+    /// Open the artifact directory for one model (e.g. `artifacts/resnet20_synth`).
+    pub fn open(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            exec_time: HashMap::new(),
+            exec_count: HashMap::new(),
+        })
+    }
+
+    /// Compile (or fetch cached) a graph by name.
+    pub fn prepare(&mut self, graph: &str) -> Result<()> {
+        if self.executables.contains_key(graph) {
+            return Ok(());
+        }
+        let spec = self.manifest.graph(graph)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of graph '{graph}'"))?;
+        eprintln!(
+            "[engine] compiled {}/{} in {:.2}s",
+            self.manifest.model,
+            graph,
+            t0.elapsed().as_secs_f64()
+        );
+        self.executables.insert(graph.to_string(), exe);
+        Ok(())
+    }
+
+    /// Fresh state from the init graph.
+    pub fn init_state(&mut self, seed: i32) -> Result<StateVec> {
+        let spec = self.manifest.state_spec.clone();
+        let mut state = StateVec::zeros(&spec);
+        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
+        let m = self.run("init", &mut state, &io)?;
+        debug_assert!(m.is_empty());
+        Ok(state)
+    }
+
+    /// Fresh DNAS supernet state (requires artifacts exported with --dnas).
+    pub fn init_dnas_state(&mut self, seed: i32) -> Result<StateVec> {
+        let spec = self
+            .manifest
+            .dnas_state_spec
+            .clone()
+            .context("manifest has no dnas_state_spec; re-export with --dnas")?;
+        let mut state = StateVec::zeros(&spec);
+        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
+        self.run("dnas_init", &mut state, &io)?;
+        Ok(state)
+    }
+
+    /// Execute one graph: wire state + io inputs, write back state
+    /// outputs, return `out/...` metrics.
+    pub fn run(
+        &mut self,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        self.prepare(graph)?;
+        let spec: &GraphSpec = self.manifest.graph(graph)?;
+        let io_map: HashMap<&str, &Tensor> =
+            io.iter().map(|(k, v)| (k.as_str(), v)).collect();
+
+        let mut literals = Vec::with_capacity(spec.inputs.len());
+        for leaf in &spec.inputs {
+            let tensor = if let Some(stripped) = leaf.path.strip_prefix("state/") {
+                let _ = stripped;
+                &state.tensors[state.idx(&leaf.path)?]
+            } else if let Some(name) = leaf.path.strip_prefix("in/") {
+                *io_map
+                    .get(name)
+                    .with_context(|| format!("graph '{graph}' needs input '{name}'"))?
+            } else {
+                bail!("unknown input role for path '{}'", leaf.path);
+            };
+            if tensor.shape() != leaf.shape.as_slice() {
+                bail!(
+                    "input '{}' shape {:?} != spec {:?}",
+                    leaf.path,
+                    tensor.shape(),
+                    leaf.shape
+                );
+            }
+            literals.push(tensor.to_literal()?);
+        }
+
+        let exe = self.executables.get(graph).expect("prepared above");
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing graph '{graph}'"))?;
+        let root = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed();
+        *self.exec_time.entry(graph.to_string()).or_default() += dt;
+        *self.exec_count.entry(graph.to_string()).or_default() += 1;
+
+        // Graphs are lowered with return_tuple=True → single tuple root.
+        let leaves = root.to_tuple()?;
+        if leaves.len() != spec.outputs.len() {
+            bail!(
+                "graph '{graph}' returned {} leaves, manifest says {}",
+                leaves.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut metrics = Metrics::new();
+        for (leaf, lit) in spec.outputs.iter().zip(leaves.iter()) {
+            let t = Tensor::from_literal(lit, leaf.dtype, &leaf.shape)
+                .with_context(|| format!("reading output '{}'", leaf.path))?;
+            if leaf.path.starts_with("state/") {
+                let i = state.idx(&leaf.path)?;
+                state.tensors[i] = t;
+            } else if let Some(name) = leaf.path.strip_prefix("out/") {
+                metrics.insert(name.to_string(), t);
+            } else {
+                bail!("unknown output role for path '{}'", leaf.path);
+            }
+        }
+        Ok(metrics)
+    }
+
+    /// Mean execution wall-clock for a graph, if it has run.
+    pub fn mean_exec_time(&self, graph: &str) -> Option<Duration> {
+        let total = self.exec_time.get(graph)?;
+        let n = *self.exec_count.get(graph)? as u32;
+        (n > 0).then(|| *total / n)
+    }
+}

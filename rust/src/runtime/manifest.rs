@@ -1,0 +1,236 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! The manifest pins, for every exported graph, the exact flattened
+//! input/output leaf order (see DESIGN.md §7.1), plus the model geometry
+//! the Rust FLOPs model and BD engine rebuild (and parity-test against).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::tensor::DType;
+
+/// One flattened pytree leaf of a graph signature.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    /// Slash-separated pytree path, e.g. `state/params/s0b0c1/w` or `in/x`.
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    fn from_json(j: &Json) -> Result<LeafSpec> {
+        Ok(LeafSpec {
+            path: j.req("path")?.as_str()?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported graph (an `.hlo.txt` plus its io signature).
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+}
+
+/// One convolution/fc layer of the model (mirrors `model.ConvDesc`).
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: String, // "stem" | "qconv" | "fc"
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+    pub macs: u64,
+}
+
+/// One residual stage (mirrors `model.StageCfg`).
+#[derive(Debug, Clone)]
+pub struct StageDesc {
+    pub channels: usize,
+    pub blocks: usize,
+    pub stride: usize,
+}
+
+/// Fully parsed artifact manifest for one model variant.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub batch_size: usize,
+    pub image: [usize; 3], // H, W, C
+    pub num_classes: usize,
+    pub bits: Vec<u32>,
+    pub alpha_init: f32,
+    pub stem_channels: usize,
+    pub stages: Vec<StageDesc>,
+    pub qconv_layers: Vec<String>,
+    pub layers: Vec<LayerDesc>,
+    pub fp_macs: u64,
+    pub qconv_macs: HashMap<String, u64>,
+    pub fp32_mflops: f64,
+    pub uniform_mflops: HashMap<u32, f64>,
+    pub state_spec: Vec<LeafSpec>,
+    pub graphs: HashMap<String, GraphSpec>,
+    /// DNAS supernet extras (present when exported with --dnas).
+    pub dnas_state_spec: Option<Vec<LeafSpec>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        let j = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let leaf_list = |v: &Json| -> Result<Vec<LeafSpec>> {
+            v.as_arr()?.iter().map(LeafSpec::from_json).collect()
+        };
+
+        let mut graphs = HashMap::new();
+        for (name, g) in j.req("graphs")?.as_obj()? {
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name: name.clone(),
+                    file: dir.join(g.req("file")?.as_str()?),
+                    inputs: leaf_list(g.req("inputs")?)?,
+                    outputs: leaf_list(g.req("outputs")?)?,
+                },
+            );
+        }
+        // dnas_init/dnas_search are stored at top level by aot.py --dnas.
+        if let Some(g) = j.get("dnas_init") {
+            graphs.insert(
+                "dnas_init".into(),
+                GraphSpec {
+                    name: "dnas_init".into(),
+                    file: dir.join(g.req("file")?.as_str()?),
+                    inputs: leaf_list(g.req("inputs")?)?,
+                    outputs: leaf_list(g.req("outputs")?)?,
+                },
+            );
+        }
+
+        let image_v = j.req("image")?.as_arr()?;
+        if image_v.len() != 3 {
+            bail!("image spec must have 3 dims");
+        }
+
+        let layers = j
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerDesc {
+                    name: l.req("name")?.as_str()?.to_string(),
+                    kind: l.req("kind")?.as_str()?.to_string(),
+                    in_ch: l.req("in_ch")?.as_usize()?,
+                    out_ch: l.req("out_ch")?.as_usize()?,
+                    ksize: l.req("ksize")?.as_usize()?,
+                    stride: l.req("stride")?.as_usize()?,
+                    in_hw: l.req("in_hw")?.as_usize()?,
+                    out_hw: l.req("out_hw")?.as_usize()?,
+                    macs: l.req("macs")?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            model: j.req("model")?.as_str()?.to_string(),
+            dir: dir.to_path_buf(),
+            batch_size: j.req("batch_size")?.as_usize()?,
+            image: [
+                image_v[0].as_usize()?,
+                image_v[1].as_usize()?,
+                image_v[2].as_usize()?,
+            ],
+            num_classes: j.req("num_classes")?.as_usize()?,
+            bits: j
+                .req("bits")?
+                .as_arr()?
+                .iter()
+                .map(|b| Ok(b.as_usize()? as u32))
+                .collect::<Result<_>>()?,
+            alpha_init: j.req("alpha_init")?.as_f64()? as f32,
+            stem_channels: j.req("stem_channels")?.as_usize()?,
+            stages: j
+                .req("stages")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(StageDesc {
+                        channels: s.req("channels")?.as_usize()?,
+                        blocks: s.req("blocks")?.as_usize()?,
+                        stride: s.req("stride")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            qconv_layers: j
+                .req("qconv_layers")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            layers,
+            fp_macs: j.req("fp_macs")?.as_u64()?,
+            qconv_macs: j
+                .req("qconv_macs")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_u64()?)))
+                .collect::<Result<_>>()?,
+            fp32_mflops: j.req("fp32_mflops")?.as_f64()?,
+            uniform_mflops: j
+                .req("uniform_mflops")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.parse::<u32>()?, v.as_f64()?)))
+                .collect::<Result<_>>()?,
+            state_spec: leaf_list(j.req("state_spec")?)?,
+            graphs,
+            dnas_state_spec: match j.get("dnas_state_spec") {
+                Some(v) => Some(leaf_list(v)?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph '{name}' not in manifest (model {})", self.model))
+    }
+
+    /// Number of quantized conv layers (rows of the (L, N) selection matrices).
+    pub fn num_qconvs(&self) -> usize {
+        self.qconv_layers.len()
+    }
+
+    /// Total state size in bytes (all leaves are 4-byte elements).
+    pub fn state_bytes(&self) -> usize {
+        self.state_spec.iter().map(|l| l.num_elements() * 4).sum()
+    }
+}

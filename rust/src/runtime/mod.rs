@@ -1,0 +1,15 @@
+//! Runtime layer: PJRT client wrapper, artifact manifests, host tensors,
+//! and the canonical state-vector protocol (DESIGN.md §7.1).
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, per /opt/xla-example/load_hlo.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+pub mod tensor;
+
+pub use engine::{metric_f32, Engine, Metrics};
+pub use manifest::{GraphSpec, LayerDesc, LeafSpec, Manifest, StageDesc};
+pub use state::StateVec;
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,190 @@
+//! The canonical training-state vector (DESIGN.md §7.1).
+//!
+//! Every exported graph reads/writes the same flattened state layout;
+//! `StateVec` owns the host tensors in manifest order plus a path→index
+//! map so graph io specs can address leaves by pytree path.  Checkpoints
+//! are a straight binary dump of the leaves (plus a JSON sidecar of the
+//! spec for validation on load).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::LeafSpec;
+use super::tensor::{DType, Tensor};
+
+/// Flattened model/optimizer state in canonical manifest order.
+#[derive(Clone)]
+pub struct StateVec {
+    pub spec: Arc<Vec<LeafSpec>>,
+    pub index: Arc<HashMap<String, usize>>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl StateVec {
+    /// Allocate a zeroed state matching `spec` (filled by the init graph).
+    pub fn zeros(spec: &[LeafSpec]) -> StateVec {
+        let index = spec
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.path.clone(), i))
+            .collect::<HashMap<_, _>>();
+        StateVec {
+            spec: Arc::new(spec.to_vec()),
+            index: Arc::new(index),
+            tensors: spec.iter().map(|l| Tensor::zeros(l.dtype, &l.shape)).collect(),
+        }
+    }
+
+    pub fn idx(&self, path: &str) -> Result<usize> {
+        self.index
+            .get(path)
+            .copied()
+            .with_context(|| format!("state leaf '{path}' not found"))
+    }
+
+    pub fn get(&self, path: &str) -> Result<&Tensor> {
+        Ok(&self.tensors[self.idx(path)?])
+    }
+
+    pub fn get_mut(&mut self, path: &str) -> Result<&mut Tensor> {
+        let i = self.idx(path)?;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// Total bytes across all leaves.
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Copy the subset of leaves whose paths exist in both states
+    /// (e.g. FP-pretrained params → search state; progressive init).
+    /// Returns the number of leaves transferred.
+    pub fn transfer_from(&mut self, other: &StateVec, prefix: &str) -> usize {
+        let mut n = 0;
+        for (path, &j) in other.index.iter() {
+            if !path.starts_with(prefix) {
+                continue;
+            }
+            if let Some(&i) = self.index.get(path) {
+                if self.tensors[i].shape() == other.tensors[j].shape() {
+                    self.tensors[i] = other.tensors[j].clone();
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Binary checkpoint: magic, leaf count, then per-leaf path/shape/data.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"EBSCKPT1")?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (leaf, t) in self.spec.iter().zip(&self.tensors) {
+            let pb = leaf.path.as_bytes();
+            f.write_all(&(pb.len() as u64).to_le_bytes())?;
+            f.write_all(pb)?;
+            f.write_all(&[match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1u8,
+            }])?;
+            f.write_all(&(t.shape().len() as u64).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`StateVec::save`]; leaves are matched
+    /// by path against `spec` (order-independent, missing leaves error).
+    pub fn load(path: &Path, spec: &[LeafSpec]) -> Result<StateVec> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"EBSCKPT1" {
+            bail!("{} is not an EBS checkpoint", path.display());
+        }
+        let n = read_u64(&mut f)? as usize;
+        let mut by_path: HashMap<String, Tensor> = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let plen = read_u64(&mut f)? as usize;
+            let mut pb = vec![0u8; plen];
+            f.read_exact(&mut pb)?;
+            let pstr = String::from_utf8(pb)?;
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let rank = read_u64(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let t = match dt[0] {
+                0 => {
+                    let mut data = vec![0f32; count];
+                    let mut buf = [0u8; 4];
+                    for v in &mut data {
+                        f.read_exact(&mut buf)?;
+                        *v = f32::from_le_bytes(buf);
+                    }
+                    Tensor::F32 { shape, data }
+                }
+                1 => {
+                    let mut data = vec![0i32; count];
+                    let mut buf = [0u8; 4];
+                    for v in &mut data {
+                        f.read_exact(&mut buf)?;
+                        *v = i32::from_le_bytes(buf);
+                    }
+                    Tensor::I32 { shape, data }
+                }
+                d => bail!("bad dtype tag {d}"),
+            };
+            by_path.insert(pstr, t);
+        }
+        let mut sv = StateVec::zeros(spec);
+        for (i, leaf) in spec.iter().enumerate() {
+            let t = by_path
+                .remove(&leaf.path)
+                .with_context(|| format!("checkpoint missing leaf '{}'", leaf.path))?;
+            if t.shape() != leaf.shape.as_slice() {
+                bail!(
+                    "checkpoint leaf '{}' shape {:?} != spec {:?}",
+                    leaf.path,
+                    t.shape(),
+                    leaf.shape
+                );
+            }
+            sv.tensors[i] = t;
+        }
+        Ok(sv)
+    }
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}

@@ -1,0 +1,168 @@
+//! Host-side tensors — the coordinator's view of model state and batches.
+//!
+//! The CPU PJRT "device" shares host memory, so a plain `Vec`-backed
+//! tensor plus a per-call `Literal` conversion is the whole story; the
+//! conversion cost is one memcpy (measured in EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Result};
+
+/// Element type of a tensor (the manifests only emit these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+}
+
+/// Dense host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape: shape.to_vec(), data: vec![0; n] },
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (any rank-0/single-element tensor).
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("item_f32 on tensor of {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal, checking shape/dtype against a spec.
+    pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        let t = match dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                if v.len() != n {
+                    bail!("literal has {} elements, spec wants {n}", v.len());
+                }
+                Tensor::F32 { shape: shape.to_vec(), data: v }
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>()?;
+                if v.len() != n {
+                    bail!("literal has {} elements, spec wants {n}", v.len());
+                }
+                Tensor::I32 { shape: shape.to_vec(), data: v }
+            }
+        };
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_bytes() {
+        let t = Tensor::zeros(DType::F32, &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.size_bytes(), 96);
+    }
+
+    #[test]
+    fn scalar_roundtrip_shape() {
+        let t = Tensor::scalar_f32(1.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.item_f32().unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (offline substitute for `clap`; DESIGN.md §3).
+//!
+//! Grammar: `ebs <subcommand> [--flag value]... [--switch]... [positional]...`
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` given the set of boolean switch names
+    /// (flags that take no value).
+    pub fn parse(raw: impl Iterator<Item = String>, switch_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut raw = raw.skip(1).peekable(); // skip argv[0]
+        if let Some(first) = raw.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = raw.next().unwrap();
+            }
+        }
+        while let Some(a) = raw.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    args.switches.push(name.to_string());
+                } else {
+                    let v = raw
+                        .next()
+                        .with_context(|| format!("flag --{name} needs a value"))?;
+                    args.flags.insert(name.to_string(), v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn req_flag(&self, name: &str) -> Result<&str> {
+        self.flag(name)
+            .with_context(|| format!("required flag --{name} missing"))
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error out on an unknown subcommand, listing valid ones.
+    pub fn unknown_subcommand(&self, valid: &[&str]) -> anyhow::Error {
+        let cmd = &self.subcommand;
+        anyhow::anyhow!("unknown subcommand '{cmd}'; expected one of: {}", valid.join(", "))
+    }
+}
+
+/// `a,b,c` → vec of trimmed non-empty strings.
+pub fn split_csv(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+/// Parse `1,2,3`-style numeric lists.
+pub fn parse_csv_f64(s: &str) -> Result<Vec<f64>> {
+    split_csv(s)
+        .into_iter()
+        .map(|x| {
+            x.parse::<f64>()
+                .with_context(|| format!("'{x}' is not a number"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(
+            std::iter::once("ebs".to_string()).chain(v.iter().map(|s| s.to_string())),
+            &["verbose", "dnas"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        let a = args(&["search", "--config", "c.toml", "--verbose", "extra"]);
+        assert_eq!(a.subcommand, "search");
+        assert_eq!(a.flag("config"), Some("c.toml"));
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(
+            ["ebs", "run", "--config"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn csv_parsing() {
+        assert_eq!(split_csv("a, b,,c"), vec!["a", "b", "c"]);
+        assert_eq!(parse_csv_f64("1, 2.5").unwrap(), vec![1.0, 2.5]);
+    }
+}

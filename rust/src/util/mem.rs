@@ -1,0 +1,40 @@
+//! Process-memory probes for the Table 3 efficiency experiment.
+//!
+//! The paper reports GPU memory; on the CPU PJRT client the analogous
+//! quantity is resident set size.  We report both the measured RSS/HWM
+//! (from /proc/self/status) and the analytic activation/weight-copy
+//! model (see `report::table3`), since RSS includes allocator slack.
+
+/// Current resident set size in bytes (0 if unavailable).
+pub fn rss_bytes() -> u64 {
+    read_status_kb("VmRSS:") * 1024
+}
+
+/// Peak resident set size ("high water mark") in bytes.
+pub fn peak_rss_bytes() -> u64 {
+    read_status_kb("VmHWM:") * 1024
+}
+
+fn read_status_kb(key: &str) -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let num: String = rest.chars().filter(|c| c.is_ascii_digit()).collect();
+            return num.parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(rss_bytes() > 0);
+        assert!(peak_rss_bytes() >= rss_bytes());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utility substrates (this environment is offline; see
+//! DESIGN.md §3): JSON, a TOML subset, CLI parsing, PRNG, memory probes.
+
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod rng;
+pub mod toml;
+
+pub use rng::Rng;

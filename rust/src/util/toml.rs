@@ -1,0 +1,276 @@
+//! Minimal TOML-subset parser for config files (offline substitute for
+//! the `toml` crate; DESIGN.md §3).
+//!
+//! Supported grammar — everything `configs/*.toml` uses:
+//!   * `[section]` and `[nested.section]` headers
+//!   * `key = "string" | int | float | bool | [scalar, ...]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat map keyed by `section.key` dotted paths, which
+//! is all the typed accessors in `config/` need.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A scalar (or scalar-array) TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: dotted-path → value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub values: HashMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str().ok()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.i64_or(path, default as i64) as usize
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, path: &str, default: f32) -> f32 {
+        self.f64_or(path, default as f64) as f32
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    /// Required string field.
+    pub fn req_str(&self, path: &str) -> Result<&str> {
+        self.get(path)
+            .with_context(|| format!("config key '{path}' missing"))?
+            .as_str()
+    }
+
+    /// Array of i64 (e.g. FLOPs-target lists).
+    pub fn i64_array(&self, path: &str) -> Result<Vec<i64>> {
+        match self.get(path) {
+            Some(TomlValue::Array(xs)) => xs.iter().map(|v| v.as_i64()).collect(),
+            Some(v) => bail!("'{path}': expected array, got {v:?}"),
+            None => Ok(vec![]),
+        }
+    }
+
+    /// Array of f64, accepting ints.
+    pub fn f64_array(&self, path: &str) -> Result<Vec<f64>> {
+        match self.get(path) {
+            Some(TomlValue::Array(xs)) => xs.iter().map(|v| v.as_f64()).collect(),
+            Some(v) => bail!("'{path}': expected array, got {v:?}"),
+            None => Ok(vec![]),
+        }
+    }
+
+    /// Array of strings.
+    pub fn str_array(&self, path: &str) -> Result<Vec<String>> {
+        match self.get(path) {
+            Some(TomlValue::Array(xs)) => {
+                xs.iter().map(|v| Ok(v.as_str()?.to_string())).collect()
+            }
+            Some(v) => bail!("'{path}': expected array, got {v:?}"),
+            None => Ok(vec![]),
+        }
+    }
+}
+
+/// Parse TOML text.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let v = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value for '{path}'", lineno + 1))?;
+        doc.values.insert(path, v);
+    }
+    Ok(doc)
+}
+
+/// Load and parse a config file.
+pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .with_context(|| format!("unterminated string: {s}"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .with_context(|| format!("unterminated array: {s}"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("unparseable value: {s}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+name = "run1"
+[search]
+steps = 150
+lr_w = 0.01         # inline comment
+stochastic = false
+targets = [3.0, 6.7, 11.6]
+[search.nested]
+tags = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.req_str("name").unwrap(), "run1");
+        assert_eq!(doc.usize_or("search.steps", 0), 150);
+        assert!((doc.f32_or("search.lr_w", 0.0) - 0.01).abs() < 1e-9);
+        assert!(!doc.bool_or("search.stochastic", true));
+        assert_eq!(doc.f64_array("search.targets").unwrap().len(), 3);
+        assert_eq!(doc.str_array("search.nested.tags").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse(r#"label = "a#b""#).unwrap();
+        assert_eq!(doc.req_str("label").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.usize_or("x.y", 7), 7);
+    }
+}

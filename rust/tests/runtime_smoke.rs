@@ -1,0 +1,206 @@
+//! Integration: load the resnet8_tiny artifacts, round-trip state through
+//! init → fp_train → eval → search steps, and sanity-check the numerics.
+//!
+//! Requires `make artifacts` to have produced `artifacts/resnet8_tiny/`.
+
+use std::path::PathBuf;
+
+use ebs::runtime::{metric_f32, Engine, Tensor};
+use ebs::util::Rng;
+
+fn artifacts_dir(model: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
+}
+
+fn random_batch(engine: &Engine, rng: &mut Rng) -> (Tensor, Tensor) {
+    let m = &engine.manifest;
+    let [h, w, c] = m.image;
+    let b = m.batch_size;
+    let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal().abs()).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(m.num_classes) as i32).collect();
+    (
+        Tensor::from_f32(&[b, h, w, c], x),
+        Tensor::from_i32(&[b], y),
+    )
+}
+
+fn onehot_sel(engine: &Engine, bit_idx: usize) -> Tensor {
+    let l = engine.manifest.num_qconvs();
+    let n = engine.manifest.bits.len();
+    let mut data = vec![0f32; l * n];
+    for row in 0..l {
+        data[row * n + bit_idx] = 1.0;
+    }
+    Tensor::from_f32(&[l, n], data)
+}
+
+#[test]
+fn full_state_roundtrip_and_steps() {
+    let dir = artifacts_dir("resnet8_tiny");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let mut engine = Engine::open(&dir).unwrap();
+    let mut rng = Rng::new(0xEB5);
+
+    // init fills every state leaf; BN gammas must be exactly 1.
+    let mut state = engine.init_state(42).unwrap();
+    let gamma = state.get("state/params/bn_stem/gamma").unwrap();
+    assert!(gamma.as_f32().unwrap().iter().all(|&g| g == 1.0));
+    let alpha = state.get("state/alphas/s0b0c1").unwrap().item_f32().unwrap();
+    assert_eq!(alpha, 6.0, "PACT α init (paper §B.3)");
+
+    // Determinism: same seed → identical params.
+    let state2 = engine.init_state(42).unwrap();
+    assert_eq!(
+        state.get("state/params/stem/w").unwrap(),
+        state2.get("state/params/stem/w").unwrap()
+    );
+    let state3 = engine.init_state(43).unwrap();
+    assert_ne!(
+        state.get("state/params/stem/w").unwrap(),
+        state3.get("state/params/stem/w").unwrap()
+    );
+
+    // A few fp_train steps reduce training loss on a fixed batch.
+    let (x, y) = random_batch(&engine, &mut rng);
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let io = vec![
+            ("x".to_string(), x.clone()),
+            ("y".to_string(), y.clone()),
+            ("lr".to_string(), Tensor::scalar_f32(0.1)),
+            ("wd".to_string(), Tensor::scalar_f32(0.0)),
+        ];
+        let m = engine.run("fp_train", &mut state, &io).unwrap();
+        losses.push(metric_f32(&m, "loss").unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "losses: {losses:?}");
+    assert!(
+        losses[7] < losses[0],
+        "fp_train should overfit a fixed batch: {losses:?}"
+    );
+
+    // Quantized eval with a one-hot 5-bit selection runs and counts ≤ batch.
+    let sel = onehot_sel(&engine, engine.manifest.bits.len() - 1);
+    let io = vec![
+        ("sel_w".to_string(), sel.clone()),
+        ("sel_x".to_string(), sel.clone()),
+        ("x".to_string(), x.clone()),
+        ("y".to_string(), y.clone()),
+    ];
+    let m = engine.run("eval", &mut state, &io).unwrap();
+    let correct = metric_f32(&m, "correct").unwrap();
+    assert!(correct >= 0.0 && correct <= engine.manifest.batch_size as f32);
+
+    // One deterministic search step: eflops must be within the uniform
+    // 1-bit .. 5-bit bracket and arch strengths must move.
+    let r_before = state.get("state/arch/r/s0b0c1").unwrap().clone();
+    let (xv, yv) = random_batch(&engine, &mut rng);
+    let io = vec![
+        ("xt".to_string(), x.clone()),
+        ("yt".to_string(), y.clone()),
+        ("xv".to_string(), xv.clone()),
+        ("yv".to_string(), yv.clone()),
+        ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+        ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+        ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+        ("lam".to_string(), Tensor::scalar_f32(0.5)),
+        ("target".to_string(), Tensor::scalar_f32(0.1)),
+    ];
+    let m = engine.run("search_det", &mut state, &io).unwrap();
+    let eflops = metric_f32(&m, "eflops").unwrap();
+    let lo = engine.manifest.uniform_mflops[&1];
+    let hi = engine.manifest.uniform_mflops[&5];
+    assert!(
+        (eflops as f64) > lo * 0.9 && (eflops as f64) < hi * 1.1,
+        "eflops {eflops} outside [{lo}, {hi}]"
+    );
+    let r_after = state.get("state/arch/r/s0b0c1").unwrap();
+    assert_ne!(&r_before, r_after, "arch strengths should receive updates");
+
+    // Stochastic search step (Gumbel noise supplied by the coordinator).
+    let l = engine.manifest.num_qconvs();
+    let n = engine.manifest.bits.len();
+    let g: Vec<f32> = (0..l * n).map(|_| rng.gumbel()).collect();
+    let io = vec![
+        ("xt".to_string(), x.clone()),
+        ("yt".to_string(), y.clone()),
+        ("xv".to_string(), xv),
+        ("yv".to_string(), yv),
+        ("g_r".to_string(), Tensor::from_f32(&[l, n], g.clone())),
+        ("g_s".to_string(), Tensor::from_f32(&[l, n], g)),
+        ("tau".to_string(), Tensor::scalar_f32(1.0)),
+        ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+        ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+        ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+        ("lam".to_string(), Tensor::scalar_f32(0.5)),
+        ("target".to_string(), Tensor::scalar_f32(0.1)),
+    ];
+    let m = engine.run("search_sto", &mut state, &io).unwrap();
+    assert!(metric_f32(&m, "val_loss").unwrap().is_finite());
+}
+
+#[test]
+fn infer_matches_eval_logits_argmax() {
+    let dir = artifacts_dir("resnet8_tiny");
+    let mut engine = Engine::open(&dir).unwrap();
+    let mut rng = Rng::new(7);
+    let mut state = engine.init_state(1).unwrap();
+    let (x, y) = random_batch(&engine, &mut rng);
+    let sel = onehot_sel(&engine, 2);
+
+    let io = vec![
+        ("sel_w".to_string(), sel.clone()),
+        ("sel_x".to_string(), sel.clone()),
+        ("x".to_string(), x.clone()),
+    ];
+    let m = engine.run("infer", &mut state, &io).unwrap();
+    let logits = m.get("logits").unwrap();
+    assert_eq!(
+        logits.shape(),
+        &[engine.manifest.batch_size, engine.manifest.num_classes]
+    );
+
+    // Manually computed correct-count must equal the eval graph's.
+    let lg = logits.as_f32().unwrap();
+    let c = engine.manifest.num_classes;
+    let labels = y.as_i32().unwrap();
+    let manual: f32 = labels
+        .iter()
+        .enumerate()
+        .map(|(i, &lab)| {
+            let row = &lg[i * c..(i + 1) * c];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            (argmax == lab as usize) as i32 as f32
+        })
+        .sum();
+    let io = vec![
+        ("sel_w".to_string(), sel.clone()),
+        ("sel_x".to_string(), sel),
+        ("x".to_string(), x),
+        ("y".to_string(), y),
+    ];
+    let m = engine.run("eval", &mut state, &io).unwrap();
+    assert_eq!(metric_f32(&m, "correct").unwrap(), manual);
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let dir = artifacts_dir("resnet8_tiny");
+    let mut engine = Engine::open(&dir).unwrap();
+    let state = engine.init_state(5).unwrap();
+    let tmp = std::env::temp_dir().join("ebs_test_ckpt.bin");
+    state.save(&tmp).unwrap();
+    let loaded = ebs::runtime::StateVec::load(&tmp, &engine.manifest.state_spec).unwrap();
+    for (a, b) in state.tensors.iter().zip(loaded.tensors.iter()) {
+        assert_eq!(a, b);
+    }
+    std::fs::remove_file(&tmp).ok();
+}
