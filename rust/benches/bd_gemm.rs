@@ -1,17 +1,30 @@
 //! Bench: the BD GEMM hot path in isolation (perf-pass workbench).
 //!
-//! Compares the fused AND+POPCNT kernel against the two-stage
-//! (paper-literal) path and a naive integer matmul across bit pairs, on
-//! a representative layer-sized problem.  `cargo bench --bench bd_gemm`.
+//! Sweeps the serial fused AND+POPCNT kernel against the cache-blocked
+//! (tiled) and output-channel-parallel variants across bit pairs and
+//! batch sizes on a representative layer-sized problem (3×3 conv,
+//! 128→128 channels on a 14×14 map: co=128, s=1152, n=196·B), plus the
+//! two-stage (paper-literal) path at batch 1.
+//!
+//!   cargo bench --bench bd_gemm [-- --json BENCH_bd_gemm.json]
+//!
+//! Env: EBS_BENCH_REPS (median window, default 5), EBS_BENCH_THREADS
+//! (0 = machine parallelism).  The acceptance row for CI is
+//! (M,K)=(2,2) at batch 8 (n=1568): `par_speedup` vs the serial fused
+//! baseline.  JSON schema: DESIGN.md §9.
 
 use std::time::Instant;
 
-use ebs::bd::gemm::{binary_gemm_p, fused, naive_codes_matmul, recombine};
+use ebs::bd::gemm::{
+    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine,
+    resolve_threads, GemmTiles,
+};
 use ebs::bd::{pack_cols, pack_rows};
+use ebs::util::json::Json;
 use ebs::util::Rng;
 
 fn median_ms<F: FnMut()>(mut f: F, reps: usize) -> f64 {
-    let mut ts: Vec<f64> = (0..reps)
+    let mut ts: Vec<f64> = (0..reps.max(1))
         .map(|_| {
             let t0 = Instant::now();
             f();
@@ -22,37 +35,119 @@ fn median_ms<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     ts[ts.len() / 2]
 }
 
-fn main() {
-    let reps: usize = std::env::var("EBS_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
-    // 3×3 conv, 128→128 channels on a 14×14 map: co=128, s=1152, n=196.
-    let (co, s, n) = (128usize, 1152usize, 196usize);
-    println!("# BD GEMM bench — co={co} s={s} n={n}, median of {reps}");
-    println!("{:<8} {:>12} {:>12} {:>12} {:>8}", "M,K", "fused ms", "2stage ms", "naive ms", "GOP/s");
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps = env_usize("EBS_BENCH_REPS", 5);
+    let threads = resolve_threads(env_usize("EBS_BENCH_THREADS", 0));
+    let json_path = ebs::util::cli::argv_value_flag("--json", "BENCH_bd_gemm.json");
+    let tiles = GemmTiles::default();
+
+    // 3×3 conv, 128→128 channels on a 14×14 map.
+    let (co, s, n1) = (128usize, 1152usize, 196usize);
+    println!(
+        "# BD GEMM bench — co={co} s={s} n=196·B, median of {reps}, {threads} threads, \
+         tiles (co={}, n={})",
+        tiles.co_tile, tiles.n_tile
+    );
+    println!(
+        "{:<6} {:>6} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9}",
+        "M,K", "batch", "n", "serial ms", "tiled ms", "par ms", "par GOP/s", "speedup"
+    );
+
     let mut rng = Rng::new(1);
-    for &(mb, kb) in &[(1u32, 1u32), (1, 2), (2, 2), (3, 3), (5, 5)] {
+    let mut rows = Vec::new();
+    for &(mb, kb) in &[(1u32, 1u32), (2, 2), (3, 3), (5, 5)] {
+        for &batch in &[1usize, 8, 32] {
+            let n = n1 * batch;
+            let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+            let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+            let bw = pack_rows(&wq, co, s, mb);
+            let (bx, _) = pack_cols(&xq, s, n, kb);
+
+            let t_serial = median_ms(
+                || {
+                    std::hint::black_box(fused(&bw, &bx, co, n, mb, kb));
+                },
+                reps,
+            );
+            let t_tiled = median_ms(
+                || {
+                    std::hint::black_box(fused_tiled(&bw, &bx, co, n, mb, kb, tiles));
+                },
+                reps,
+            );
+            let t_par = median_ms(
+                || {
+                    std::hint::black_box(par_fused(&bw, &bx, co, n, mb, kb, tiles, threads));
+                },
+                reps,
+            );
+            // Eq. 2: s·n·co·M·K AND ops
+            let ops = s as f64 * n as f64 * co as f64 * (mb * kb) as f64;
+            let speedup = t_serial / t_par;
+            println!(
+                "{:<6} {:>6} {:>8} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>8.2}x",
+                format!("{mb},{kb}"),
+                batch,
+                n,
+                t_serial,
+                t_tiled,
+                t_par,
+                ops / (t_par * 1e6),
+                speedup
+            );
+            rows.push(Json::Obj(vec![
+                ("m_bits".into(), Json::Num(mb as f64)),
+                ("k_bits".into(), Json::Num(kb as f64)),
+                ("co".into(), Json::Num(co as f64)),
+                ("s".into(), Json::Num(s as f64)),
+                ("batch".into(), Json::Num(batch as f64)),
+                ("n".into(), Json::Num(n as f64)),
+                ("serial_ms".into(), Json::Num(t_serial)),
+                ("tiled_ms".into(), Json::Num(t_tiled)),
+                ("par_ms".into(), Json::Num(t_par)),
+                ("gops_par".into(), Json::Num(ops / (t_par * 1e6))),
+                ("par_speedup".into(), Json::Num(speedup)),
+            ]));
+        }
+    }
+
+    // Two-stage + naive reference at batch 1, (2,2) — context rows.
+    {
+        let (mb, kb, n) = (2u32, 2u32, n1);
         let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
         let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
         let bw = pack_rows(&wq, co, s, mb);
         let (bx, _) = pack_cols(&xq, s, n, kb);
-        let t_fused = median_ms(|| {
-            std::hint::black_box(fused(&bw, &bx, co, n, mb, kb));
-        }, reps);
-        let t_two = median_ms(|| {
-            let p = binary_gemm_p(&bw, &bx);
-            std::hint::black_box(recombine(&p, co, n, mb, kb));
-        }, reps);
-        let t_naive = median_ms(|| {
-            std::hint::black_box(naive_codes_matmul(&wq, &xq, co, s, n));
-        }, reps);
-        // Eq. 2: s·n·co·M·K AND ops
-        let ops = s as f64 * n as f64 * co as f64 * (mb * kb) as f64;
-        println!(
-            "{:<8} {:>12.2} {:>12.2} {:>12.2} {:>8.2}",
-            format!("{mb},{kb}"),
-            t_fused,
-            t_two,
-            t_naive,
-            ops / (t_fused * 1e6)
+        let t_two = median_ms(
+            || {
+                let p = binary_gemm_p(&bw, &bx);
+                std::hint::black_box(recombine(&p, co, n, mb, kb));
+            },
+            reps,
         );
+        let t_naive = median_ms(
+            || {
+                std::hint::black_box(naive_codes_matmul(&wq, &xq, co, s, n));
+            },
+            reps,
+        );
+        println!("# reference at (2,2) batch 1: two-stage {t_two:.2} ms, naive {t_naive:.2} ms");
     }
+
+    if let Some(path) = json_path {
+        ebs::util::json::write_bench_json(
+            std::path::Path::new(&path),
+            "bd_gemm",
+            reps,
+            threads,
+            (tiles.co_tile, tiles.n_tile),
+            rows,
+        )?;
+        println!("# wrote {path}");
+    }
+    Ok(())
 }

@@ -1,7 +1,13 @@
 //! Bench: Table 4 layer latencies (the paper's deployment experiment).
 //! Thin wrapper over `report::table4` so `cargo bench` regenerates the
-//! table directly.  `EBS_BENCH_REPS` controls the median window;
-//! `EBS_BENCH_EXTENDED=1` adds the M·K linearity sweep (Table 4b).
+//! tables — including the Table 4c serial/tiled/parallel batch sweep —
+//! directly.
+//!
+//!   cargo bench --bench bd_layers [-- --json BENCH_bd_layers.json]
+//!
+//! `EBS_BENCH_REPS` controls the median window; `EBS_BENCH_EXTENDED=1`
+//! adds the M·K linearity sweep (Table 4b); `EBS_BENCH_OUT` sets the
+//! report directory.  JSON schema: DESIGN.md §9.
 
 use std::path::PathBuf;
 
@@ -12,5 +18,7 @@ fn main() -> anyhow::Result<()> {
     let out = PathBuf::from(
         std::env::var("EBS_BENCH_OUT").unwrap_or_else(|_| "runs/reports".into()),
     );
-    ebs::report::table4::run(&out, reps, extended)
+    let json_path = ebs::util::cli::argv_value_flag("--json", "BENCH_bd_layers.json")
+        .map(PathBuf::from);
+    ebs::report::table4::run_full(&out, reps, extended, json_path.as_deref())
 }

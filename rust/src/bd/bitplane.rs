@@ -42,6 +42,21 @@ impl BitMatrix {
     pub fn size_bytes(&self) -> usize {
         self.words.len() * 8
     }
+
+    /// Reinitialize in place to a zeroed `rows × s` matrix, reusing the
+    /// word buffer.  Returns `true` if the buffer had to grow (used by
+    /// the `BdScratch` allocation-free regression counter).
+    pub fn reset(&mut self, rows: usize, s: usize) -> bool {
+        let wpr = s.div_ceil(64);
+        let need = rows * wpr;
+        let grew = need > self.words.capacity();
+        self.rows = rows;
+        self.s = s;
+        self.words_per_row = wpr;
+        self.words.clear();
+        self.words.resize(need, 0);
+        grew
+    }
 }
 
 /// Pack `bits` bitplanes of a codes matrix laid out `rows × s`
@@ -69,9 +84,28 @@ pub fn pack_rows(codes: &[u8], rows: usize, s: usize, bits: u32) -> BitMatrix {
 /// Also returns the per-column code sums needed by the affine decode
 /// (`Σ_s c_x`, see `ref.bd_conv_output`).
 pub fn pack_cols(codes: &[u8], s: usize, cols: usize, bits: u32) -> (BitMatrix, Vec<u32>) {
+    let mut bm = BitMatrix::zeros(0, 0);
+    let mut col_sums = Vec::new();
+    pack_cols_into(codes, s, cols, bits, &mut bm, &mut col_sums);
+    (bm, col_sums)
+}
+
+/// [`pack_cols`] into caller-provided buffers (the steady-state
+/// inference path — see `BdScratch`).  Returns per-buffer grow flags
+/// `(bitmatrix_grew, col_sums_grew)` for scratch accounting.
+pub fn pack_cols_into(
+    codes: &[u8],
+    s: usize,
+    cols: usize,
+    bits: u32,
+    bm: &mut BitMatrix,
+    col_sums: &mut Vec<u32>,
+) -> (bool, bool) {
     assert_eq!(codes.len(), s * cols);
-    let mut bm = BitMatrix::zeros(cols * bits as usize, s);
-    let mut col_sums = vec![0u32; cols];
+    let bm_grew = bm.reset(cols * bits as usize, s);
+    let sums_grew = cols > col_sums.capacity();
+    col_sums.clear();
+    col_sums.resize(cols, 0);
     for si in 0..s {
         let row = &codes[si * cols..(si + 1) * cols];
         for (j, &code) in row.iter().enumerate() {
@@ -83,7 +117,7 @@ pub fn pack_cols(codes: &[u8], s: usize, cols: usize, bits: u32) -> (BitMatrix, 
             }
         }
     }
-    (bm, col_sums)
+    (bm_grew, sums_grew)
 }
 
 #[cfg(test)]

@@ -1,17 +1,71 @@
 //! The Binary Decomposition GEMM (Eq. 13-14).
 //!
-//! Two equivalent implementations, both exact:
+//! Equivalent implementations, all exact (integer arithmetic — any
+//! evaluation order gives bit-identical results):
 //!
-//! * [`two_stage`] — the paper's literal structure: materialize
-//!   `P = B_w · B_x` with AND+popcount, then apply the stride-(M,K)
-//!   depthwise powers-of-two recombination of Eq. 14 (Fig. 4).
-//! * [`fused`] — the deployment hot path: the recombination is folded
+//! * [`two_stage`](binary_gemm_p) — the paper's literal structure:
+//!   materialize `P = B_w · B_x` with AND+popcount, then apply the
+//!   stride-(M,K) depthwise powers-of-two recombination of Eq. 14
+//!   (Fig. 4).
+//! * [`fused`] — the serial deployment path: the recombination is folded
 //!   into the popcount accumulation (`acc += popcnt << (m+k)`), so `P`
 //!   never materializes.  Same operation count, better locality.
+//! * [`fused_tiled`] — `fused` blocked over output channels and im2col
+//!   columns so the activation bitplanes of one column tile stay in
+//!   L1/L2 while the weight rows stream through (DESIGN.md §5).
+//! * [`par_fused`] — the tiled kernel sharded over contiguous
+//!   output-channel ranges across `std::thread::scope` workers.  Each
+//!   worker owns a disjoint slice of the output, so no synchronization
+//!   is needed beyond the scope join.
 //!
-//! Unit + property tests pin both against a naive integer matmul.
+//! Unit + property tests pin every path against a naive integer matmul
+//! (`tests/par_gemm.rs` additionally sweeps bit pairs, odd shapes and
+//! thread counts).
 
 use super::bitplane::BitMatrix;
+
+/// Cache-blocking configuration for the tiled/parallel kernels.
+///
+/// `n_tile` columns of activation bitplanes (`n_tile · K` rows of `B_x`,
+/// each `⌈s/64⌉` words) are kept hot while `co_tile` output channels
+/// stream through.  The defaults keep the activation tile ≈ 16-32 KiB
+/// for layer-sized `s`, i.e. L1-resident on current cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTiles {
+    pub co_tile: usize,
+    pub n_tile: usize,
+}
+
+impl Default for GemmTiles {
+    fn default() -> GemmTiles {
+        GemmTiles { co_tile: 64, n_tile: 48 }
+    }
+}
+
+impl GemmTiles {
+    pub fn new(co_tile: usize, n_tile: usize) -> GemmTiles {
+        GemmTiles { co_tile: co_tile.max(1), n_tile: n_tile.max(1) }
+    }
+}
+
+/// Worker count from the machine (what `threads = 0` resolves to).
+/// Cached: `available_parallelism` does syscalls/cgroup reads, and
+/// `Auto` dispatch consults this on every layer forward.
+pub fn auto_threads() -> usize {
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Resolve a requested thread count: `0` → [`auto_threads`].
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    }
+}
 
 /// Stage 1 of the paper's formulation: P[i, j] = popcount(AND(B_w[i], B_x[j])).
 /// `bw` has co·M rows, `bx` has n·K rows (column-major packing); P is
@@ -61,38 +115,184 @@ pub fn recombine(p: &[u32], co: usize, n: usize, m_bits: u32, k_bits: u32) -> Ve
 /// Perf notes (EXPERIMENTS.md §Perf): row slices are hoisted out of the
 /// (m, k) loops and the word loop runs on `zip` iterators so LLVM drops
 /// the bounds checks and keeps 4-wide POPCNT chains in flight; this is
-/// the deployment hot path (Table 4 / bd_layers bench).
+/// the serial deployment path (Table 4 / bd_layers bench).
 pub fn fused(bw: &BitMatrix, bx: &BitMatrix, co: usize, n: usize, m_bits: u32, k_bits: u32) -> Vec<i64> {
-    assert_eq!(bw.s, bx.s);
-    let (mb, kb) = (m_bits as usize, k_bits as usize);
-    assert_eq!(bw.rows, co * mb);
-    assert_eq!(bx.rows, n * kb);
     let mut out = vec![0i64; co * n];
+    fused_into(bw, bx, co, n, m_bits, k_bits, &mut out);
+    out
+}
+
+/// [`fused`] writing into a caller-provided buffer (`out.len() == co·n`)
+/// so steady-state inference is allocation-free (see `BdScratch`).
+pub fn fused_into(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    out: &mut [i64],
+) {
+    check_shapes(bw, bx, co, n, m_bits, k_bits, out);
+    // Degenerate full-size tiles reduce fused_block to exactly the
+    // untiled loop nest (single j/i tile), so there is one copy of the
+    // hot kernel.
+    let full = GemmTiles { co_tile: co.max(1), n_tile: n.max(1) };
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, full, out);
+}
+
+/// Cache-blocked fused kernel: columns are processed in `n_tile` blocks
+/// so one block's activation bitplanes stay resident while `co_tile`
+/// weight-row groups stream over them.
+pub fn fused_tiled(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    fused_tiled_into(bw, bx, co, n, m_bits, k_bits, tiles, &mut out);
+    out
+}
+
+/// [`fused_tiled`] into a caller-provided buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_tiled_into(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    out: &mut [i64],
+) {
+    check_shapes(bw, bx, co, n, m_bits, k_bits, out);
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, tiles, out);
+}
+
+/// Parallel tiled kernel: contiguous output-channel ranges are sharded
+/// across scoped threads (`threads = 0` → [`auto_threads`]).  Bit-exact
+/// with [`fused`]: every thread runs the same integer kernel on a
+/// disjoint output slice.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    threads: usize,
+) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    par_fused_into(bw, bx, co, n, m_bits, k_bits, tiles, threads, &mut out);
+    out
+}
+
+/// [`par_fused`] into a caller-provided buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_into(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    threads: usize,
+    out: &mut [i64],
+) {
+    check_shapes(bw, bx, co, n, m_bits, k_bits, out);
+    if co == 0 || n == 0 {
+        return;
+    }
+    let threads = resolve_threads(threads).clamp(1, co);
+    let (mb, kb) = (m_bits as usize, k_bits as usize);
+    if threads == 1 {
+        fused_block(bw, bx, 0, co, n, mb, kb, tiles, out);
+        return;
+    }
+    // Shard output channels into ≤ `threads` contiguous chunks; each
+    // worker gets the matching disjoint slice of `out`.
+    let chunk = co.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+            let c0 = t * chunk;
+            let c1 = (c0 + chunk).min(co);
+            scope.spawn(move || {
+                fused_block(bw, bx, c0, c1, n, mb, kb, tiles, out_chunk);
+            });
+        }
+    });
+}
+
+/// Shared serial kernel over output-channel range `[c0, c1)`; `out` is
+/// the `(c1-c0) × n` slice for that range.
+#[allow(clippy::too_many_arguments)]
+fn fused_block(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    c0: usize,
+    c1: usize,
+    n: usize,
+    mb: usize,
+    kb: usize,
+    tiles: GemmTiles,
+    out: &mut [i64],
+) {
+    let n_tile = tiles.n_tile.max(1);
+    let co_tile = tiles.co_tile.max(1);
     let mut wrows: Vec<&[u64]> = Vec::with_capacity(mb);
-    for i in 0..co {
-        wrows.clear();
-        wrows.extend((0..mb).map(|m| bw.row(i * mb + m)));
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let xbase = j * kb;
-            let mut acc = 0i64;
-            // k outer / m inner: each activation bitplane row is sliced
-            // once and reused across all M weight planes.
-            for k in 0..kb {
-                let xrow = bx.row(xbase + k);
-                for (m, wrow) in wrows.iter().enumerate() {
-                    let pop: u32 = wrow
-                        .iter()
-                        .zip(xrow)
-                        .map(|(a, b)| (a & b).count_ones())
-                        .sum();
-                    acc += (pop as i64) << (m + k);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + n_tile).min(n);
+        let mut i0 = c0;
+        while i0 < c1 {
+            let i1 = (i0 + co_tile).min(c1);
+            for i in i0..i1 {
+                wrows.clear();
+                wrows.extend((0..mb).map(|m| bw.row(i * mb + m)));
+                for j in j0..j1 {
+                    let xbase = j * kb;
+                    let mut acc = 0i64;
+                    for k in 0..kb {
+                        let xrow = bx.row(xbase + k);
+                        for (m, wrow) in wrows.iter().enumerate() {
+                            let pop: u32 = wrow
+                                .iter()
+                                .zip(xrow)
+                                .map(|(a, b)| (a & b).count_ones())
+                                .sum();
+                            acc += (pop as i64) << (m + k);
+                        }
+                    }
+                    out[(i - c0) * n + j] = acc;
                 }
             }
-            *o = acc;
+            i0 = i1;
         }
+        j0 = j1;
     }
-    out
+}
+
+fn check_shapes(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    out: &[i64],
+) {
+    assert_eq!(bw.s, bx.s, "contraction dims differ");
+    assert_eq!(bw.rows, co * m_bits as usize, "B_w row count");
+    assert_eq!(bx.rows, n * k_bits as usize, "B_x row count");
+    assert_eq!(out.len(), co * n, "output buffer size");
 }
 
 /// Naive reference: integer matmul of codes (`co × s` by `s × n`).
@@ -130,6 +330,22 @@ mod tests {
 
         // fused path
         assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "fused co={co} s={s} n={n} M={mb} K={kb}");
+
+        // tiled + parallel paths (odd tiles, a few thread counts)
+        for tiles in [GemmTiles::new(3, 5), GemmTiles::default()] {
+            assert_eq!(
+                fused_tiled(&bw, &bx, co, n, mb, kb, tiles),
+                expect,
+                "tiled co={co} s={s} n={n} M={mb} K={kb} {tiles:?}"
+            );
+            for threads in [1usize, 2, 8] {
+                assert_eq!(
+                    par_fused(&bw, &bx, co, n, mb, kb, tiles, threads),
+                    expect,
+                    "par co={co} s={s} n={n} M={mb} K={kb} T={threads} {tiles:?}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -154,5 +370,23 @@ mod tests {
         let p = binary_gemm_p(&bw, &bx);
         assert_eq!(p.len(), 4 * 4, "P is 4×4 as in Eq. 13");
         assert_eq!(recombine(&p, 2, 2, 2, 2), expect);
+    }
+
+    #[test]
+    fn thread_resolution() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn more_threads_than_channels_is_safe() {
+        let mut rng = Rng::new(9);
+        let (co, s, n) = (2usize, 70usize, 3usize);
+        let wq: Vec<u8> = (0..co * s).map(|_| rng.below(4) as u8).collect();
+        let xq: Vec<u8> = (0..s * n).map(|_| rng.below(4) as u8).collect();
+        let bw = pack_rows(&wq, co, s, 2);
+        let (bx, _) = pack_cols(&xq, s, n, 2);
+        let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+        assert_eq!(par_fused(&bw, &bx, co, n, 2, 2, GemmTiles::default(), 16), expect);
     }
 }

@@ -6,13 +6,29 @@
 //! artifact at the borders — the parity test pins this.
 
 /// Patch matrix layout: `s × n` row-major where `s = k·k·ci` (index
-/// order kh, kw, ci — matching HWIO weight flattening) and `n = oh·ow`.
+/// order kh, kw, ci — matching HWIO weight flattening) and `n = B·oh·ow`
+/// (`B` images packed side by side; column `b·oh·ow + oy·ow + ox`).
+/// `oh`/`ow` are per-image.
+#[derive(Debug, Clone)]
 pub struct Patches {
     pub s: usize,
     pub n: usize,
     pub oh: usize,
     pub ow: usize,
     pub data: Vec<f32>,
+}
+
+impl Patches {
+    /// An empty patch buffer for reuse via [`im2col_batch_into`].
+    pub fn empty() -> Patches {
+        Patches { s: 0, n: 0, oh: 0, ow: 0, data: Vec::new() }
+    }
+}
+
+impl Default for Patches {
+    fn default() -> Patches {
+        Patches::empty()
+    }
 }
 
 /// SAME-padding geometry for one spatial dim (XLA convention).
@@ -25,35 +41,71 @@ pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize, usize
 
 /// Extract im2col patches from an NHWC image (`n`=1): x is h×w×ci.
 pub fn im2col(x: &[f32], h: usize, w: usize, ci: usize, k: usize, stride: usize) -> Patches {
-    assert_eq!(x.len(), h * w * ci);
+    let mut p = Patches::empty();
+    im2col_batch_into(x, 1, h, w, ci, k, stride, &mut p);
+    p
+}
+
+/// Batched, allocation-free im2col: pack `batch` NHWC images (laid out
+/// contiguously in `xs`) into one `s × (batch·oh·ow)` patch matrix,
+/// reusing `p.data`'s capacity.  Returns `true` if the buffer had to
+/// grow (tracked by `BdScratch`'s reuse counter).
+///
+/// Packing B images into one matrix turns B small GEMMs into a single
+/// large one (n = B·oh·ow), which is what lets the tiled/parallel BD
+/// kernels amortize weight-row streaming across the batch (DESIGN.md §5).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch_into(
+    xs: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    k: usize,
+    stride: usize,
+    p: &mut Patches,
+) -> bool {
+    assert_eq!(xs.len(), batch * h * w * ci, "batch input size mismatch");
     let (oh, pad_top, _) = same_pad(h, k, stride);
     let (ow, pad_left, _) = same_pad(w, k, stride);
     let s = k * k * ci;
-    let n = oh * ow;
-    let mut data = vec![0f32; s * n];
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let col = oy * ow + ox;
-            for kh in 0..k {
-                let iy = (oy * stride + kh) as isize - pad_top as isize;
-                if iy < 0 || iy >= h as isize {
-                    continue; // zero padding
-                }
-                for kw in 0..k {
-                    let ix = (ox * stride + kw) as isize - pad_left as isize;
-                    if ix < 0 || ix >= w as isize {
-                        continue;
+    let n1 = oh * ow;
+    let n = batch * n1;
+    let grew = s * n > p.data.capacity();
+    p.s = s;
+    p.n = n;
+    p.oh = oh;
+    p.ow = ow;
+    p.data.clear();
+    p.data.resize(s * n, 0f32);
+    let img_sz = h * w * ci;
+    for b in 0..batch {
+        let x = &xs[b * img_sz..(b + 1) * img_sz];
+        let col_base = b * n1;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let col = col_base + oy * ow + ox;
+                for kh in 0..k {
+                    let iy = (oy * stride + kh) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding
                     }
-                    let src = ((iy as usize) * w + ix as usize) * ci;
-                    let dst_row = (kh * k + kw) * ci;
-                    for c in 0..ci {
-                        data[(dst_row + c) * n + col] = x[src + c];
+                    for kw in 0..k {
+                        let ix = (ox * stride + kw) as isize - pad_left as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize) * w + ix as usize) * ci;
+                        let dst_row = (kh * k + kw) * ci;
+                        for c in 0..ci {
+                            p.data[(dst_row + c) * n + col] = x[src + c];
+                        }
                     }
                 }
             }
         }
     }
-    Patches { s, n, oh, ow, data }
+    grew
 }
 
 #[cfg(test)]
@@ -83,6 +135,32 @@ mod tests {
                 assert_eq!(p.data[c * 16 + px], x[px * 2 + c]);
             }
         }
+    }
+
+    #[test]
+    fn batch_packing_matches_per_image() {
+        // The batched matrix is the per-image matrices side by side.
+        let (h, w, ci, k) = (5usize, 4usize, 2usize, 3usize);
+        let sz = h * w * ci;
+        let xs: Vec<f32> = (0..3 * sz).map(|i| (i as f32) * 0.25 - 7.0).collect();
+        let mut batched = Patches::empty();
+        im2col_batch_into(&xs, 3, h, w, ci, k, 1, &mut batched);
+        let n1 = batched.oh * batched.ow;
+        assert_eq!(batched.n, 3 * n1);
+        for b in 0..3 {
+            let single = im2col(&xs[b * sz..(b + 1) * sz], h, w, ci, k, 1);
+            for r in 0..single.s {
+                for j in 0..n1 {
+                    assert_eq!(
+                        batched.data[r * batched.n + b * n1 + j],
+                        single.data[r * n1 + j],
+                        "b={b} r={r} j={j}"
+                    );
+                }
+            }
+        }
+        // Reuse with the same shape must not grow the buffer.
+        assert!(!im2col_batch_into(&xs, 3, h, w, ci, k, 1, &mut batched));
     }
 
     #[test]

@@ -6,14 +6,21 @@
 //! Weights are packed once at build time (B_w is the *stored* format —
 //! the paper's memory argument: `s·co·M` bits ≈ the quantized weights
 //! themselves, plus M·K powers-of-two, §4.3 Complexities).
+//!
+//! Execution is configured per layer by [`BdEngineCfg`]: serial, tiled,
+//! or output-channel-parallel GEMM (all bit-exact — integer kernels),
+//! and batched forwards pack B images into one `n = B·oh·ow` GEMM
+//! instead of B small ones (DESIGN.md §5).  Steady-state inference is
+//! allocation-free via [`BdScratch`].
 
 use anyhow::Result;
 
 use crate::quant::{quantize_acts, quantize_weights};
 
-use super::bitplane::{pack_cols, pack_rows, BitMatrix};
-use super::gemm;
-use super::im2col::im2col;
+use super::bitplane::{pack_cols_into, pack_rows, BitMatrix};
+use super::gemm::{self, GemmTiles};
+use super::im2col::im2col_batch_into;
+use super::scratch::{ensure, BdScratch};
 
 /// Execution strategy — the paper-literal two-stage path keeps P
 /// materialized; the fused path folds Eq. 14 into the popcount loop.
@@ -23,6 +30,59 @@ pub enum BdMode {
     Fused,
     TwoStage,
 }
+
+/// Which fused kernel variant executes the GEMM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BdExec {
+    /// Pick parallel-tiled for large GEMMs, tiled otherwise (default).
+    #[default]
+    Auto,
+    /// The original single-threaded untiled kernel (baseline).
+    Serial,
+    /// Cache-blocked single-threaded kernel.
+    Tiled,
+    /// Cache-blocked kernel sharded over output channels.
+    Parallel,
+}
+
+impl BdExec {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Result<BdExec> {
+        Ok(match s {
+            "auto" => BdExec::Auto,
+            "serial" => BdExec::Serial,
+            "tiled" => BdExec::Tiled,
+            "parallel" | "par" => BdExec::Parallel,
+            other => anyhow::bail!("unknown bd exec '{other}' (auto|serial|tiled|parallel)"),
+        })
+    }
+}
+
+/// Full execution configuration of the BD engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BdEngineCfg {
+    pub exec: BdExec,
+    /// Worker threads for the parallel kernel; `0` = machine parallelism.
+    pub threads: usize,
+    pub tiles: GemmTiles,
+}
+
+impl Default for BdEngineCfg {
+    fn default() -> BdEngineCfg {
+        BdEngineCfg { exec: BdExec::Auto, threads: 0, tiles: GemmTiles::default() }
+    }
+}
+
+impl BdEngineCfg {
+    /// Explicit serial baseline (the pre-parallel engine behavior).
+    pub fn serial() -> BdEngineCfg {
+        BdEngineCfg { exec: BdExec::Serial, ..BdEngineCfg::default() }
+    }
+}
+
+/// Below this many u64 AND+POPCNT word-ops, `Auto` stays single-threaded
+/// (thread spawn would dominate; ~2M word-ops ≈ 1-2 ms serial).
+const AUTO_PAR_MIN_WORD_OPS: u64 = 2_000_000;
 
 /// A ready-to-run BD conv layer.
 pub struct BdConvLayer {
@@ -43,6 +103,7 @@ pub struct BdConvLayer {
     pub out_bias: Vec<f32>,
     pub relu: bool,
     pub mode: BdMode,
+    pub engine: BdEngineCfg,
 }
 
 impl BdConvLayer {
@@ -98,34 +159,72 @@ impl BdConvLayer {
             out_bias,
             relu,
             mode: BdMode::Fused,
+            engine: BdEngineCfg::default(),
         })
     }
 
     /// Forward one image (h×w×ci NHWC) → (oh·ow×co NHWC, oh, ow).
+    /// Allocates a fresh scratch — use [`Self::forward_batch_into`] for
+    /// steady-state serving.
     pub fn forward(&self, x: &[f32], h: usize, w: usize) -> (Vec<f32>, usize, usize) {
-        let p = im2col(x, h, w, self.ci, self.k, self.stride);
+        let mut scratch = BdScratch::new();
+        let mut out = Vec::new();
+        let (oh, ow) = self.forward_batch_into(x, 1, h, w, &mut scratch, &mut out);
+        (out, oh, ow)
+    }
+
+    /// Batched forward: `xs` holds `batch` contiguous h×w×ci images;
+    /// emits (batch·oh·ow)×co NHWC into `out` (resized as needed) and
+    /// returns the per-image (oh, ow).  All intermediates live in
+    /// `scratch`; after the first call at a given shape no allocation
+    /// occurs.
+    pub fn forward_batch_into(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        h: usize,
+        w: usize,
+        scratch: &mut BdScratch,
+        out: &mut Vec<f32>,
+    ) -> (usize, usize) {
+        scratch.stats.calls += 1;
+        if im2col_batch_into(xs, batch, h, w, self.ci, self.k, self.stride, &mut scratch.patches)
+        {
+            scratch.stats.grows += 1;
+        }
+        let (s, n, oh, ow) =
+            (scratch.patches.s, scratch.patches.n, scratch.patches.oh, scratch.patches.ow);
+
         // Activation quantization (Eq. 1b) on the patch matrix.
-        let mut codes = vec![0u8; p.data.len()];
-        let x_scale = quantize_acts(&p.data, self.alpha, self.k_bits, &mut codes);
-        let (bx, col_sums) = pack_cols(&codes, p.s, p.n, self.k_bits);
+        let stats = &mut scratch.stats;
+        ensure(&mut scratch.codes, scratch.patches.data.len(), stats);
+        let x_scale = quantize_acts(&scratch.patches.data, self.alpha, self.k_bits, &mut scratch.codes);
+        let (bx_grew, sums_grew) =
+            pack_cols_into(&scratch.codes, s, n, self.k_bits, &mut scratch.bx, &mut scratch.col_sums);
+        scratch.stats.calls += 2; // bx + col_sums buffer preps
+        scratch.stats.grows += bx_grew as u64 + sums_grew as u64;
 
         // Integer product via Binary Decomposition.
-        let prod = match self.mode {
-            BdMode::Fused => gemm::fused(&self.bw, &bx, self.co, p.n, self.m_bits, self.k_bits),
+        ensure(&mut scratch.prod, self.co * n, &mut scratch.stats);
+        match self.mode {
+            BdMode::Fused => self.run_gemm(&scratch.bx, n, &mut scratch.prod),
             BdMode::TwoStage => {
-                let pm = gemm::binary_gemm_p(&self.bw, &bx);
-                gemm::recombine(&pm, self.co, p.n, self.m_bits, self.k_bits)
+                // Paper-literal path (pedagogical; allocates P).
+                let pm = gemm::binary_gemm_p(&self.bw, &scratch.bx);
+                let prod = gemm::recombine(&pm, self.co, n, self.m_bits, self.k_bits);
+                scratch.prod.copy_from_slice(&prod);
             }
-        };
+        }
 
         // Affine decode + folded BN + ReLU, emitted NHWC.
-        let mut out = vec![0f32; p.n * self.co];
+        ensure(out, n * self.co, &mut scratch.stats);
         let sw_sx = self.w_scale * x_scale;
         let zw_sx = self.w_zero * x_scale;
         for i in 0..self.co {
             let (a, b) = (self.out_scale[i], self.out_bias[i]);
-            for j in 0..p.n {
-                let real = sw_sx * prod[i * p.n + j] as f32 + zw_sx * col_sums[j] as f32;
+            let prow = &scratch.prod[i * n..(i + 1) * n];
+            for (j, (&p, &cs)) in prow.iter().zip(&scratch.col_sums).enumerate() {
+                let real = sw_sx * p as f32 + zw_sx * cs as f32;
                 let mut v = a * real + b;
                 if self.relu && v < 0.0 {
                     v = 0.0;
@@ -133,7 +232,34 @@ impl BdConvLayer {
                 out[j * self.co + i] = v;
             }
         }
-        (out, p.oh, p.ow)
+        (oh, ow)
+    }
+
+    /// Dispatch the fused GEMM according to the engine config.
+    fn run_gemm(&self, bx: &BitMatrix, n: usize, prod: &mut [i64]) {
+        let (co, mb, kb) = (self.co, self.m_bits, self.k_bits);
+        let cfg = self.engine;
+        match cfg.exec {
+            BdExec::Serial => gemm::fused_into(&self.bw, bx, co, n, mb, kb, prod),
+            BdExec::Tiled => {
+                gemm::fused_tiled_into(&self.bw, bx, co, n, mb, kb, cfg.tiles, prod)
+            }
+            BdExec::Parallel => gemm::par_fused_into(
+                &self.bw, bx, co, n, mb, kb, cfg.tiles, cfg.threads, prod,
+            ),
+            BdExec::Auto => {
+                let word_ops = (co * n) as u64
+                    * (mb * kb) as u64
+                    * self.bw.words_per_row as u64;
+                if word_ops >= AUTO_PAR_MIN_WORD_OPS && gemm::resolve_threads(cfg.threads) > 1 {
+                    gemm::par_fused_into(
+                        &self.bw, bx, co, n, mb, kb, cfg.tiles, cfg.threads, prod,
+                    )
+                } else {
+                    gemm::fused_tiled_into(&self.bw, bx, co, n, mb, kb, cfg.tiles, prod)
+                }
+            }
+        }
     }
 
     /// Model size of the packed weights in bytes (Table 4 discussion).
@@ -202,6 +328,26 @@ mod tests {
         layer.mode = BdMode::TwoStage;
         let (b, _, _) = layer.forward(&x, h, w);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn exec_variants_are_bit_exact() {
+        let mut rng = Rng::new(0x9E);
+        let (ci, co, k, h, w) = (6, 10, 3, 9, 7);
+        let x: Vec<f32> = (0..h * w * ci).map(|_| rng.normal().abs()).collect();
+        let wts: Vec<f32> = (0..k * k * ci * co).map(|_| rng.normal()).collect();
+        let mut layer =
+            BdConvLayer::new("t", &wts, ci, co, k, 1, 2, 3, 4.0, None, true).unwrap();
+        layer.engine = BdEngineCfg::serial();
+        let (base, _, _) = layer.forward(&x, h, w);
+        for exec in [BdExec::Auto, BdExec::Tiled, BdExec::Parallel] {
+            for threads in [1usize, 2, 8] {
+                layer.engine =
+                    BdEngineCfg { exec, threads, tiles: GemmTiles::new(4, 7) };
+                let (got, _, _) = layer.forward(&x, h, w);
+                assert_eq!(got, base, "{exec:?} T={threads}");
+            }
+        }
     }
 
     #[test]

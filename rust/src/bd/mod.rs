@@ -7,6 +7,12 @@
 //! (DESIGN.md §7.4): `gemm` vs naive integer matmul (unit + property
 //! tests) → `layer` vs fake-quantized float conv → `network` vs the
 //! HLO `infer` artifact (integration test).
+//!
+//! Serving architecture (DESIGN.md §5): the fused GEMM has serial,
+//! cache-blocked, and output-channel-parallel variants (all bit-exact);
+//! layers batch B images into one `n = B·oh·ow` GEMM; and every
+//! intermediate buffer lives in a reusable [`BdScratch`]/`NetScratch`
+//! so steady-state inference is allocation-free.
 
 pub mod bitplane;
 pub mod gemm;
@@ -14,7 +20,10 @@ pub mod im2col;
 pub mod layer;
 pub mod network;
 pub mod reference;
+pub mod scratch;
 
-pub use bitplane::{pack_cols, pack_rows, BitMatrix};
-pub use layer::{BdConvLayer, BdMode};
-pub use network::BdNetwork;
+pub use bitplane::{pack_cols, pack_cols_into, pack_rows, BitMatrix};
+pub use gemm::GemmTiles;
+pub use layer::{BdConvLayer, BdEngineCfg, BdExec, BdMode};
+pub use network::{BdNetwork, NetScratch};
+pub use scratch::{BdScratch, ScratchStats};

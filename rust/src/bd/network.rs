@@ -5,6 +5,14 @@
 //! run on the integer AND/popcount path with their searched (M, K);
 //! the stem, residual adds, pooling and classifier stay full precision
 //! (paper §B.2 leaves first/last layers unquantized).
+//!
+//! Serving path (DESIGN.md §5): [`BdNetwork::classify_batch`] walks the
+//! whole network on batches of images — every conv packs its batch into
+//! ONE `n = B·oh·ow` GEMM (tiled/parallel per [`BdEngineCfg`]), the
+//! full-precision stem reuses one hoisted im2col scratch across images,
+//! and all intermediates live in a [`NetScratch`], so steady-state
+//! classification is allocation-free (regression-tested via the scratch
+//! reuse counter).
 
 use anyhow::{Context, Result};
 
@@ -12,10 +20,15 @@ use crate::coordinator::Selection;
 use crate::models::NetDesc;
 use crate::runtime::{Manifest, StateVec};
 
-use super::layer::{BdConvLayer, BdMode};
-use super::reference::conv2d_f32;
+use super::im2col::{im2col_batch_into, Patches};
+use super::layer::{BdConvLayer, BdEngineCfg, BdMode};
+use super::reference::conv2d_f32_patches;
+use super::scratch::{ensure, BdScratch, ScratchStats};
 
 const BN_EPS: f32 = 1e-5;
+
+/// Default images per [`BdNetwork::classify_batch`] chunk.
+pub const DEFAULT_BATCH_CHUNK: usize = 32;
 
 struct FpConv {
     weights: Vec<f32>,
@@ -43,6 +56,35 @@ pub struct BdNetwork {
     pub classes: usize,
     pub input_hw: usize,
     pub input_ch: usize,
+    /// Images per internal chunk of [`Self::classify_batch`].
+    pub batch_chunk: usize,
+    engine: BdEngineCfg,
+}
+
+/// All mutable buffers one serving thread needs: the shared BD layer
+/// scratch plus network-level activation ping-pong buffers.  Grows to
+/// the largest layer during the first batch, then stays put.
+#[derive(Default)]
+pub struct NetScratch {
+    pub bd: BdScratch,
+    stem_patches: Patches,
+    act: Vec<f32>,
+    y1: Vec<f32>,
+    y2: Vec<f32>,
+    ident: Vec<f32>,
+    pooled: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl NetScratch {
+    pub fn new() -> NetScratch {
+        NetScratch::default()
+    }
+
+    /// Combined reuse accounting (all buffers count into `bd.stats`).
+    pub fn stats(&self) -> ScratchStats {
+        self.bd.stats
+    }
 }
 
 fn bn_fold(state: &StateVec, name: &str, co: usize) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -143,73 +185,203 @@ impl BdNetwork {
             classes: manifest.num_classes,
             input_hw: manifest.image[0],
             input_ch: manifest.image[2],
+            batch_chunk: DEFAULT_BATCH_CHUNK,
+            engine: BdEngineCfg::default(),
         })
     }
 
-    /// Logits for one image (h×w×c NHWC).
+    /// Assemble a network directly from pre-built BD layers (synthetic
+    /// deployments + tests that have no artifact state).  The stem gets
+    /// an identity BN fold.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_layers(
+        stem_weights: Vec<f32>,
+        stem_ci: usize,
+        stem_co: usize,
+        stem_k: usize,
+        stem_stride: usize,
+        blocks: Vec<(BdConvLayer, BdConvLayer, Option<BdConvLayer>)>,
+        fc_w: Vec<f32>,
+        fc_b: Vec<f32>,
+        classes: usize,
+        input_hw: usize,
+    ) -> BdNetwork {
+        BdNetwork {
+            stem: FpConv {
+                weights: stem_weights,
+                ci: stem_ci,
+                co: stem_co,
+                k: stem_k,
+                stride: stem_stride,
+                bn_scale: vec![1.0; stem_co],
+                bn_bias: vec![0.0; stem_co],
+            },
+            blocks: blocks
+                .into_iter()
+                .map(|(c1, c2, shortcut)| BdBlock { c1, c2, shortcut })
+                .collect(),
+            fc_w,
+            fc_b,
+            classes,
+            input_hw,
+            input_ch: stem_ci,
+            batch_chunk: DEFAULT_BATCH_CHUNK,
+            engine: BdEngineCfg::default(),
+        }
+    }
+
+    /// Apply one execution configuration to every quantized layer.
+    pub fn set_engine_cfg(&mut self, cfg: BdEngineCfg) {
+        self.engine = cfg;
+        for b in &mut self.blocks {
+            b.c1.engine = cfg;
+            b.c2.engine = cfg;
+            if let Some(sc) = &mut b.shortcut {
+                sc.engine = cfg;
+            }
+        }
+    }
+
+    pub fn engine_cfg(&self) -> BdEngineCfg {
+        self.engine
+    }
+
+    /// Logits for one image (h×w×c NHWC).  Allocates a fresh scratch;
+    /// use [`Self::forward_batch_with`] for steady-state serving.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = NetScratch::new();
+        let mut logits = Vec::new();
+        self.forward_batch_with(x, 1, &mut scratch, &mut logits);
+        logits
+    }
+
+    /// Logits for `batch` images laid out (B, H, W, C) → `logits`
+    /// (B × classes, resized as needed).  All intermediates live in
+    /// `scratch`; after warmup at a given batch size no allocation
+    /// occurs (scratch-reuse counter).
+    pub fn forward_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        s: &mut NetScratch,
+        logits: &mut Vec<f32>,
+    ) {
         let hw = self.input_hw;
-        // Stem (full precision) + folded BN + ReLU.
-        let (mut h, mut ch_h, mut ch_w) = conv2d_f32(
-            x, hw, hw, self.input_ch, &self.stem.weights, self.stem.co, self.stem.k,
+        let img_sz = hw * hw * self.input_ch;
+        assert_eq!(xs.len(), batch * img_sz, "batch input size mismatch");
+
+        // Stem (full precision) + folded BN + ReLU — the whole batch
+        // packed into ONE im2col matrix and one GEMM, like the
+        // quantized layers, with a reused scratch.
+        s.bd.stats.calls += 1;
+        if im2col_batch_into(
+            xs,
+            batch,
+            hw,
+            hw,
+            self.input_ch,
+            self.stem.k,
             self.stem.stride,
-        );
-        for (j, v) in h.iter_mut().enumerate() {
+            &mut s.stem_patches,
+        ) {
+            s.bd.stats.grows += 1;
+        }
+        let (mut ch_h, mut ch_w) = (s.stem_patches.oh, s.stem_patches.ow);
+        ensure(&mut s.act, s.stem_patches.n * self.stem.co, &mut s.bd.stats);
+        conv2d_f32_patches(&s.stem_patches, &self.stem.weights, self.stem.co, &mut s.act);
+        for (j, v) in s.act.iter_mut().enumerate() {
             let c = j % self.stem.co;
             *v = (self.stem.bn_scale[c] * *v + self.stem.bn_bias[c]).max(0.0);
         }
 
+        // Quantized body: each conv runs ONE batched GEMM (n = B·oh·ow).
         for block in &self.blocks {
-            let (y1, oh, ow) = block.c1.forward(&h, ch_h, ch_w);
-            let (mut y2, oh2, ow2) = block.c2.forward(&y1, oh, ow);
-            let ident: Vec<f32> = match &block.shortcut {
-                Some(sc) => sc.forward(&h, ch_h, ch_w).0,
-                None => h.clone(),
+            let (oh1, ow1) =
+                block.c1.forward_batch_into(&s.act, batch, ch_h, ch_w, &mut s.bd, &mut s.y1);
+            let (oh2, ow2) =
+                block.c2.forward_batch_into(&s.y1, batch, oh1, ow1, &mut s.bd, &mut s.y2);
+            if let Some(sc) = &block.shortcut {
+                sc.forward_batch_into(&s.act, batch, ch_h, ch_w, &mut s.bd, &mut s.ident);
+            }
+            let ident: &[f32] = match &block.shortcut {
+                Some(_) => &s.ident,
+                None => &s.act,
             };
-            for (v, id) in y2.iter_mut().zip(&ident) {
+            debug_assert_eq!(s.y2.len(), ident.len());
+            for (v, id) in s.y2.iter_mut().zip(ident) {
                 *v = (*v + id).max(0.0); // residual add + ReLU
             }
-            h = y2;
+            std::mem::swap(&mut s.act, &mut s.y2);
             ch_h = oh2;
             ch_w = ow2;
         }
 
-        // Global average pool → fc.
+        // Global average pool → fc, per image.
         let co = self.blocks.last().map(|b| b.c2.co).unwrap_or(self.stem.co);
         let n = ch_h * ch_w;
-        let mut pooled = vec![0f32; co];
-        for j in 0..n {
-            for c in 0..co {
-                pooled[c] += h[j * co + c];
+        ensure(logits, batch * self.classes, &mut s.bd.stats);
+        ensure(&mut s.pooled, co, &mut s.bd.stats);
+        for b in 0..batch {
+            s.pooled.fill(0.0);
+            for j in 0..n {
+                let row = &s.act[(b * n + j) * co..(b * n + j + 1) * co];
+                for (p, &v) in s.pooled.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+            for p in s.pooled.iter_mut() {
+                *p /= n as f32;
+            }
+            let lrow = &mut logits[b * self.classes..(b + 1) * self.classes];
+            lrow.copy_from_slice(&self.fc_b);
+            for (c, &p) in s.pooled.iter().enumerate() {
+                let wrow = &self.fc_w[c * self.classes..(c + 1) * self.classes];
+                for (l, &wv) in lrow.iter_mut().zip(wrow) {
+                    *l += p * wv;
+                }
             }
         }
-        for p in pooled.iter_mut() {
-            *p /= n as f32;
-        }
-        let mut logits = self.fc_b.clone();
-        for (c, &p) in pooled.iter().enumerate() {
-            let row = &self.fc_w[c * self.classes..(c + 1) * self.classes];
-            for (l, &wv) in logits.iter_mut().zip(row) {
-                *l += p * wv;
-            }
-        }
-        logits
     }
 
     /// Classify a batch laid out (B, H, W, C); returns argmax labels.
+    /// Internally chunks by [`Self::batch_chunk`] and runs the batched
+    /// path with one scratch for the whole call.
     pub fn classify_batch(&self, xs: &[f32], batch: usize) -> Vec<usize> {
-        let sz = self.input_hw * self.input_hw * self.input_ch;
-        (0..batch)
-            .map(|i| {
-                let logits = self.forward(&xs[i * sz..(i + 1) * sz]);
-                logits
+        let mut scratch = NetScratch::new();
+        self.classify_batch_with(xs, batch, &mut scratch)
+    }
+
+    /// [`Self::classify_batch`] with a caller-held scratch (long-lived
+    /// serving loops reuse one scratch across calls).
+    pub fn classify_batch_with(
+        &self,
+        xs: &[f32],
+        batch: usize,
+        scratch: &mut NetScratch,
+    ) -> Vec<usize> {
+        let img_sz = self.input_hw * self.input_hw * self.input_ch;
+        let chunk = self.batch_chunk.max(1);
+        let mut preds = Vec::with_capacity(batch);
+        let mut logits = std::mem::take(&mut scratch.logits);
+        let mut b0 = 0;
+        while b0 < batch {
+            let b1 = (b0 + chunk).min(batch);
+            let nb = b1 - b0;
+            self.forward_batch_with(&xs[b0 * img_sz..b1 * img_sz], nb, scratch, &mut logits);
+            for i in 0..nb {
+                let row = &logits[i * self.classes..(i + 1) * self.classes];
+                let pred = row
                     .iter()
                     .enumerate()
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                     .map(|(c, _)| c)
-                    .unwrap()
-            })
-            .collect()
+                    .unwrap();
+                preds.push(pred);
+            }
+            b0 = b1;
+        }
+        scratch.logits = logits;
+        preds
     }
 
     /// Total packed-weight bytes (deployment model size).

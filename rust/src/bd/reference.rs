@@ -4,7 +4,7 @@
 
 use crate::quant::{fake_quant_weights, quantize_acts};
 
-use super::im2col::im2col;
+use super::im2col::{im2col, Patches};
 
 /// Direct f32 SAME conv, single image NHWC; weights HWIO-flattened
 /// (kh, kw, ci, co).  Returns (out NHWC, oh, ow).
@@ -18,10 +18,20 @@ pub fn conv2d_f32(
     k: usize,
     stride: usize,
 ) -> (Vec<f32>, usize, usize) {
-    assert_eq!(weights.len(), k * k * ci * co);
     let p = im2col(x, h, w, ci, k, stride);
     let mut out = vec![0f32; p.n * co];
-    // weights matrix W[s][co]; patches P[s][n]; out[n][co] = Pᵀ W
+    conv2d_f32_patches(&p, weights, co, &mut out);
+    (out, p.oh, p.ow)
+}
+
+/// Patch-matrix side of [`conv2d_f32`]: out[n][co] = Pᵀ W with W[s][co]
+/// (`out.len() == p.n · co`, zero-filled here).  The batched deployment
+/// stem pairs this with a reused `im2col_batch_into` scratch so B
+/// images become one GEMM with no per-image allocation.
+pub fn conv2d_f32_patches(p: &Patches, weights: &[f32], co: usize, out: &mut [f32]) {
+    assert_eq!(weights.len(), p.s * co);
+    assert_eq!(out.len(), p.n * co);
+    out.fill(0.0);
     for s_idx in 0..p.s {
         let wrow = &weights[s_idx * co..(s_idx + 1) * co];
         let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
@@ -36,7 +46,6 @@ pub fn conv2d_f32(
             }
         }
     }
-    (out, p.oh, p.ow)
 }
 
 /// Fake-quantized conv exactly as the retrain/eval graphs see it:

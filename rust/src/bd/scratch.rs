@@ -1,0 +1,98 @@
+//! Reusable inference scratch — the allocation-free steady state of the
+//! BD engine (DESIGN.md §5).
+//!
+//! One [`BdScratch`] holds every intermediate buffer a BD conv layer
+//! needs (im2col patches, activation codes, packed bitplanes, column
+//! sums, integer products).  Threaded through `forward_batch_into`, the
+//! buffers grow to the largest layer of the network during the first
+//! batch and are reused verbatim afterwards; [`ScratchStats::grows`]
+//! counts capacity growths so tests can assert that batch-N
+//! classification performs no per-image allocation after warmup.
+
+use super::bitplane::BitMatrix;
+use super::im2col::Patches;
+
+/// Reuse accounting: `calls` = buffer-prepare operations, `grows` =
+/// how many of them had to enlarge a buffer.  In steady state `grows`
+/// stays frozen while `calls` keeps climbing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    pub calls: u64,
+    pub grows: u64,
+}
+
+/// Per-layer-invocation scratch buffers (shared across all layers of a
+/// network; sized by the largest).
+pub struct BdScratch {
+    /// im2col patch matrix (`s × B·oh·ow`).
+    pub patches: Patches,
+    /// Quantized activation codes, same layout as `patches.data`.
+    pub codes: Vec<u8>,
+    /// Packed activation bitplanes B_x.
+    pub bx: BitMatrix,
+    /// Per-column code sums for the affine decode.
+    pub col_sums: Vec<u32>,
+    /// Integer product matrix (`co × n`).
+    pub prod: Vec<i64>,
+    pub stats: ScratchStats,
+}
+
+impl Default for BdScratch {
+    fn default() -> BdScratch {
+        BdScratch::new()
+    }
+}
+
+impl BdScratch {
+    pub fn new() -> BdScratch {
+        BdScratch {
+            patches: Patches::empty(),
+            codes: Vec::new(),
+            bx: BitMatrix::zeros(0, 0),
+            col_sums: Vec::new(),
+            prod: Vec::new(),
+            stats: ScratchStats::default(),
+        }
+    }
+}
+
+/// Size `v` to `len` elements, reusing capacity; records the operation
+/// in `stats`.  Existing contents are left UNSPECIFIED (no blanket
+/// re-zeroing — this sits on the per-forward hot path): callers must
+/// fully overwrite the buffer.  Only newly grown tail elements are
+/// zero-initialized.
+pub fn ensure<T: Copy + Default>(v: &mut Vec<T>, len: usize, stats: &mut ScratchStats) {
+    stats.calls += 1;
+    if len > v.capacity() {
+        stats.grows += 1;
+    }
+    if v.len() < len {
+        v.resize(len, T::default());
+    } else {
+        v.truncate(len);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_tracks_growth_only_beyond_capacity() {
+        let mut stats = ScratchStats::default();
+        let mut v: Vec<i64> = Vec::new();
+        ensure(&mut v, 100, &mut stats);
+        assert_eq!((stats.calls, stats.grows), (1, 1));
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0), "grown tail is zeroed");
+        v[7] = 42;
+        ensure(&mut v, 40, &mut stats); // shrink: reuse
+        assert_eq!(v.len(), 40);
+        ensure(&mut v, 100, &mut stats); // back to high-water: reuse
+        assert_eq!((stats.calls, stats.grows), (3, 1));
+        assert_eq!(v[7], 42, "no blanket re-zeroing on reuse");
+        ensure(&mut v, 101, &mut stats);
+        assert_eq!(stats.grows, 2);
+        assert_eq!(v.len(), 101);
+    }
+}

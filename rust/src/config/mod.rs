@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use crate::bd::{BdEngineCfg, BdExec, GemmTiles};
 use crate::coordinator::{SearchCfg, TrainCfg};
 use crate::data::SynthSpec;
 use crate::util::toml::{load, TomlDoc};
@@ -38,6 +39,43 @@ impl DataConfig {
     }
 }
 
+/// BD deployment-engine configuration (`[bd]` section; CLI flags
+/// `--exec/--threads/--batch` override — see `ebs deploy`).
+#[derive(Debug, Clone)]
+pub struct BdDeployConfig {
+    /// "auto" | "serial" | "tiled" | "parallel".
+    pub exec: BdExec,
+    /// Worker threads for the parallel GEMM; 0 = machine parallelism.
+    pub threads: usize,
+    pub tile_co: usize,
+    pub tile_n: usize,
+    /// Images per classify_batch chunk.
+    pub batch_chunk: usize,
+}
+
+impl BdDeployConfig {
+    pub fn engine_cfg(&self) -> BdEngineCfg {
+        BdEngineCfg {
+            exec: self.exec,
+            threads: self.threads,
+            tiles: GemmTiles::new(self.tile_co, self.tile_n),
+        }
+    }
+}
+
+impl Default for BdDeployConfig {
+    fn default() -> BdDeployConfig {
+        let tiles = GemmTiles::default();
+        BdDeployConfig {
+            exec: BdExec::Auto,
+            threads: 0,
+            tile_co: tiles.co_tile,
+            tile_n: tiles.n_tile,
+            batch_chunk: crate::bd::network::DEFAULT_BATCH_CHUNK,
+        }
+    }
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -52,6 +90,7 @@ pub struct RunConfig {
     /// FLOPs targets (MFLOPs) for multi-target table runs; empty → use
     /// `search.target_mflops` only.
     pub targets_mflops: Vec<f64>,
+    pub bd: BdDeployConfig,
     pub doc: TomlDoc,
 }
 
@@ -97,6 +136,20 @@ impl RunConfig {
             log_every: doc.usize_or("search.log_every", 10),
             seed: doc.i64_or("search.seed", 0) as u64,
         };
+        let bd_defaults = BdDeployConfig::default();
+        let bd = BdDeployConfig {
+            exec: BdExec::parse(doc.str_or("bd.exec", "auto")).unwrap_or_else(|e| {
+                // from_doc is infallible by design (unknown keys fall
+                // back to defaults), but a present-yet-invalid value
+                // must not silently change the engine — warn loudly.
+                eprintln!("[config] {e}; falling back to bd.exec = auto");
+                BdExec::Auto
+            }),
+            threads: doc.usize_or("bd.threads", bd_defaults.threads),
+            tile_co: doc.usize_or("bd.tile_co", bd_defaults.tile_co),
+            tile_n: doc.usize_or("bd.tile_n", bd_defaults.tile_n),
+            batch_chunk: doc.usize_or("bd.batch_chunk", bd_defaults.batch_chunk),
+        };
         RunConfig {
             model: model.clone(),
             artifacts_dir: PathBuf::from(doc.str_or("run.artifacts", "artifacts")),
@@ -107,6 +160,7 @@ impl RunConfig {
             search,
             retrain: train_cfg(&doc, "retrain", 400, 0.04),
             targets_mflops: doc.f64_array("search.targets_mflops").unwrap_or_default(),
+            bd,
             doc,
         }
     }
@@ -155,5 +209,31 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.data.n_train, 256);
         assert!(cfg.search.stochastic);
         assert_eq!(cfg.targets_mflops, vec![0.10, 0.16]);
+    }
+
+    #[test]
+    fn bd_section_parses_and_defaults() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.bd.exec, BdExec::Auto);
+        assert_eq!(cfg.bd.threads, 0);
+        assert_eq!(cfg.bd.batch_chunk, 32);
+        let cfg = RunConfig::from_doc(
+            parse(
+                r#"
+[bd]
+exec = "parallel"
+threads = 4
+tile_co = 16
+tile_n = 96
+batch_chunk = 8
+"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.bd.exec, BdExec::Parallel);
+        assert_eq!(cfg.bd.threads, 4);
+        let ec = cfg.bd.engine_cfg();
+        assert_eq!(ec.tiles, crate::bd::GemmTiles::new(16, 96));
+        assert_eq!(cfg.bd.batch_chunk, 8);
     }
 }

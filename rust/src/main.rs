@@ -18,7 +18,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use ebs::bd::{BdMode, BdNetwork};
+use ebs::bd::{BdExec, BdMode, BdNetwork};
 use ebs::config::RunConfig;
 use ebs::coordinator::{
     run_pipeline, run_search, FlopsModel, PipelineCfg, RunLogger, Selection,
@@ -36,9 +36,10 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
   pipeline        full Fig. 1 pipeline (pretrain → search → retrain → eval)
   search          bilevel bitwidth search only; writes selection.json
   deploy          BD-engine inference from a pipeline run directory
+                  [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
   report-table1   Table 1 + Fig. 5 rows (Tables 2/5 via imagenet configs)
   report-table3   Table 3 search-efficiency comparison [--models a,b] [--iters N]
-  report-table4   Table 4 BD latency [--reps N] [--extended]
+  report-table4   Table 4 BD latency [--reps N] [--extended] [--json file]
   report-fig3     Fig. 3 quantization-function CSV [--points N]
   report-ablation λ-penalty ablation sweep [--lambdas 0.05,0.5,2,10]
   report-fig7     Fig. 7 precision distribution --selection <json> [--model m]
@@ -98,7 +99,13 @@ fn run() -> Result<()> {
         }
         "report-table4" => {
             let out = PathBuf::from(args.flag_or("out", "runs/reports"));
-            report::table4::run(&out, args.usize_flag("reps", 7)?, args.has_switch("extended"))
+            let json = args.flag("json").map(PathBuf::from);
+            report::table4::run_full(
+                &out,
+                args.usize_flag("reps", 7)?,
+                args.has_switch("extended"),
+                json.as_deref(),
+            )
         }
         "report-ablation" => {
             let cfg = load_config(&args)?;
@@ -195,33 +202,42 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         .context("deploy needs a pipeline run dir with retrained.ckpt")?;
     let sel = Selection::load(&run_dir.join("selection.json"))?;
     let mode = if args.has_switch("two-stage") { BdMode::TwoStage } else { BdMode::Fused };
-    let net = BdNetwork::from_state(&engine.manifest, &state, &sel, mode)?;
+    let mut net = BdNetwork::from_state(&engine.manifest, &state, &sel, mode)?;
 
-    // Accuracy on the test set via the BD engine, plus parity vs HLO.
+    // Engine configuration: config `[bd]` section, overridable by flags.
+    let mut bd_cfg = cfg.bd.clone();
+    if let Some(e) = args.flag("exec") {
+        bd_cfg.exec = BdExec::parse(e)?;
+    }
+    if let Some(t) = args.flag("threads") {
+        bd_cfg.threads = t.parse().context("--threads must be an integer")?;
+    }
+    bd_cfg.batch_chunk = args.usize_flag("batch", bd_cfg.batch_chunk)?;
+    net.set_engine_cfg(bd_cfg.engine_cfg());
+    net.batch_chunk = bd_cfg.batch_chunk.max(1);
+
+    // Accuracy on the test set via the batched BD engine.
     let (_, test) = generate(&cfg.data.to_spec());
     let n = test.len().min(args.usize_flag("samples", 256)?);
     let sz = test.hw * test.hw * test.channels;
     let t0 = std::time::Instant::now();
-    let mut correct = 0usize;
-    for i in 0..n {
-        let logits = net.forward(&test.images[i * sz..(i + 1) * sz]);
-        let pred = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if pred == test.labels[i] as usize {
-            correct += 1;
-        }
-    }
+    let preds = net.classify_batch(&test.images[..n * sz], n);
     let dt = t0.elapsed().as_secs_f64();
+    let correct = preds
+        .iter()
+        .zip(&test.labels[..n])
+        .filter(|(p, &l)| **p == l as usize)
+        .count();
     println!(
-        "BD deploy ({mode:?}): {}/{} correct ({:.2}%), {:.2} ms/image, packed weights {:.1} KiB",
+        "BD deploy ({mode:?}, {:?} exec, batch {}): {}/{} correct ({:.2}%), \
+         {:.2} ms/image ({:.0} img/s), packed weights {:.1} KiB",
+        bd_cfg.exec,
+        net.batch_chunk,
         correct,
         n,
         100.0 * correct as f64 / n as f64,
         1e3 * dt / n as f64,
+        n as f64 / dt,
         net.packed_bytes() as f64 / 1024.0
     );
     Ok(())

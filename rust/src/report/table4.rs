@@ -1,17 +1,25 @@
 //! Table 4 regenerator: Binary Decomposition latency per conv layer,
-//! W1-A1 vs W1-A2 (plus optional wider sweeps), and a Bi-Real-18-style
-//! end-to-end stack.
+//! W1-A1 vs W1-A2 (plus optional wider sweeps), a Bi-Real-18-style
+//! end-to-end stack, and the serial vs tiled vs parallel engine sweep
+//! at batch 1/8/32 (Table 4c — the practical-deployment claim at scale).
 //!
 //! The paper measures a Raspberry Pi 3B (ARM NEON, daBNN); we measure
 //! the same layer shapes on the x86-64 AND+POPCNT engine — the claim
 //! being reproduced is the *ratio* structure: latency scales ~linearly
 //! with M·K, so W1-A2 ≈ 2× W1-A1 (Eq. 2 operation count).
+//!
+//! `run_full` additionally emits a machine-readable JSON document
+//! (schema in DESIGN.md §9) consumed by CI as the perf trajectory
+//! artifact (`BENCH_bd_layers.json`).
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::bd::BdConvLayer;
+use crate::bd::gemm::auto_threads;
+use crate::bd::{BdConvLayer, BdEngineCfg, BdExec, BdScratch};
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::table_fmt::Table;
@@ -40,22 +48,48 @@ pub fn paper_layers() -> Vec<LayerShape> {
     ]
 }
 
-/// Median-of-`reps` latency of one BD layer at (m_bits, k_bits).
-pub fn layer_latency_ms(shape: &LayerShape, m_bits: u32, k_bits: u32, reps: usize) -> f64 {
+fn build_layer(shape: &LayerShape, m_bits: u32, k_bits: u32, cfg: BdEngineCfg) -> BdConvLayer {
     let mut rng = Rng::new(0x7AB4 ^ ((m_bits as u64) << 8) ^ k_bits as u64);
     let wlen = shape.k * shape.k * shape.ci * shape.co;
     let weights: Vec<f32> = (0..wlen).map(|_| rng.normal()).collect();
-    let layer = BdConvLayer::new(
+    let mut layer = BdConvLayer::new(
         "bench", &weights, shape.ci, shape.co, shape.k, shape.stride,
         m_bits, k_bits, 4.0, None, true,
     )
     .expect("layer");
-    let x: Vec<f32> = (0..shape.hw * shape.hw * shape.ci).map(|_| rng.normal().abs()).collect();
-    let _ = layer.forward(&x, shape.hw, shape.hw); // warmup
-    let mut times: Vec<f64> = (0..reps)
+    layer.engine = cfg;
+    layer
+}
+
+/// Median-of-`reps` latency of one BD layer at (m_bits, k_bits) on the
+/// serial engine, batch 1 (the original Table 4 measurement).
+pub fn layer_latency_ms(shape: &LayerShape, m_bits: u32, k_bits: u32, reps: usize) -> f64 {
+    layer_latency_ms_cfg(shape, m_bits, k_bits, reps, 1, BdEngineCfg::serial())
+}
+
+/// Median-of-`reps` latency of one *batched* BD layer forward under an
+/// explicit engine configuration.  Scratch buffers are reused across
+/// reps, so this measures the allocation-free steady state.
+pub fn layer_latency_ms_cfg(
+    shape: &LayerShape,
+    m_bits: u32,
+    k_bits: u32,
+    reps: usize,
+    batch: usize,
+    cfg: BdEngineCfg,
+) -> f64 {
+    let layer = build_layer(shape, m_bits, k_bits, cfg);
+    let mut rng = Rng::new(0xDA7A ^ batch as u64);
+    let x: Vec<f32> =
+        (0..batch * shape.hw * shape.hw * shape.ci).map(|_| rng.normal().abs()).collect();
+    let mut scratch = BdScratch::new();
+    let mut out = Vec::new();
+    layer.forward_batch_into(&x, batch, shape.hw, shape.hw, &mut scratch, &mut out); // warmup
+    let mut times: Vec<f64> = (0..reps.max(1))
         .map(|_| {
             let t0 = Instant::now();
-            std::hint::black_box(layer.forward(&x, shape.hw, shape.hw));
+            layer.forward_batch_into(&x, batch, shape.hw, shape.hw, &mut scratch, &mut out);
+            std::hint::black_box(&out);
             t0.elapsed().as_secs_f64() * 1e3
         })
         .collect();
@@ -63,8 +97,14 @@ pub fn layer_latency_ms(shape: &LayerShape, m_bits: u32, k_bits: u32, reps: usiz
     times[times.len() / 2]
 }
 
-/// Regenerate Table 4.
-pub fn run(out: &std::path::Path, reps: usize, extended: bool) -> Result<()> {
+/// Regenerate Table 4 (original serial measurements only).
+pub fn run(out: &Path, reps: usize, extended: bool) -> Result<()> {
+    run_full(out, reps, extended, None)
+}
+
+/// Regenerate Table 4 plus the engine sweep (Table 4c); optionally emit
+/// the machine-readable JSON at `json_path`.
+pub fn run_full(out: &Path, reps: usize, extended: bool, json_path: Option<&Path>) -> Result<()> {
     let mut table = Table::new(
         "Table 4 — BD latency per layer (x86-64 AND+POPCNT engine)",
         &[
@@ -116,6 +156,73 @@ pub fn run(out: &std::path::Path, reps: usize, extended: bool) -> Result<()> {
         "-".into(),
     ]);
     table.write(out, "table4")?;
+
+    // Table 4c: serial vs tiled vs parallel at batch 1/8/32 — the
+    // batched serving claim.  Per-image latencies so rows are comparable.
+    let threads = auto_threads();
+    let mut sweep = Table::new(
+        &format!("Table 4c — batched engine, serial vs tiled vs parallel ({threads} threads)"),
+        &[
+            "Shape", "M,K", "Batch", "serial ms/img", "tiled ms/img", "par ms/img",
+            "par speedup",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    let sweep_shapes =
+        [LayerShape { k: 3, ci: 64, co: 64, stride: 1, hw: 14 }, LayerShape {
+            k: 3,
+            ci: 128,
+            co: 128,
+            stride: 1,
+            hw: 7,
+        }];
+    let (mb, kb) = (2u32, 2u32);
+    for shape in sweep_shapes {
+        for batch in [1usize, 8, 32] {
+            let cfg = |exec: BdExec| BdEngineCfg { exec, ..BdEngineCfg::default() };
+            let serial = layer_latency_ms_cfg(&shape, mb, kb, reps, batch, cfg(BdExec::Serial));
+            let tiled = layer_latency_ms_cfg(&shape, mb, kb, reps, batch, cfg(BdExec::Tiled));
+            let par = layer_latency_ms_cfg(&shape, mb, kb, reps, batch, cfg(BdExec::Parallel));
+            let bf = batch as f64;
+            sweep.row(vec![
+                format!("{}x{} {}→{} @{}²", shape.k, shape.k, shape.ci, shape.co, shape.hw),
+                format!("{mb},{kb}"),
+                batch.to_string(),
+                format!("{:.3}", serial / bf),
+                format!("{:.3}", tiled / bf),
+                format!("{:.3}", par / bf),
+                format!("{:.2}x", serial / par),
+            ]);
+            json_rows.push(Json::Obj(vec![
+                ("k".into(), Json::Num(shape.k as f64)),
+                ("ci".into(), Json::Num(shape.ci as f64)),
+                ("co".into(), Json::Num(shape.co as f64)),
+                ("stride".into(), Json::Num(shape.stride as f64)),
+                ("hw".into(), Json::Num(shape.hw as f64)),
+                ("m_bits".into(), Json::Num(mb as f64)),
+                ("k_bits".into(), Json::Num(kb as f64)),
+                ("batch".into(), Json::Num(batch as f64)),
+                ("serial_ms".into(), Json::Num(serial)),
+                ("tiled_ms".into(), Json::Num(tiled)),
+                ("par_ms".into(), Json::Num(par)),
+                ("par_speedup".into(), Json::Num(serial / par)),
+            ]));
+        }
+    }
+    sweep.write(out, "table4c")?;
+
+    if let Some(path) = json_path {
+        let tiles = BdEngineCfg::default().tiles;
+        crate::util::json::write_bench_json(
+            path,
+            "bd_layers",
+            reps,
+            threads,
+            (tiles.co_tile, tiles.n_tile),
+            json_rows,
+        )?;
+        println!("[report] wrote {}", path.display());
+    }
 
     if extended {
         // Full M×K sweep on one representative layer: latency should be

@@ -22,6 +22,14 @@ use super::tensor::Tensor;
 /// Metrics returned by one graph execution.
 pub type Metrics = HashMap<String, Tensor>;
 
+/// Whether this build links a real PJRT backend.  The offline CI
+/// workspace links the API stub at `rust/xla-stub` (DESIGN.md §3), so
+/// artifact-driven tests/benches check this and skip gracefully instead
+/// of failing on [`Engine::open`].
+pub fn backend_available() -> bool {
+    xla::BACKEND_AVAILABLE
+}
+
 /// Scalar-metric convenience view.
 pub fn metric_f32(m: &Metrics, key: &str) -> Result<f32> {
     m.get(key)
@@ -41,6 +49,8 @@ pub struct Engine {
 
 impl Engine {
     /// Open the artifact directory for one model (e.g. `artifacts/resnet20_synth`).
+    /// Fails fast with a self-describing error when this build links the
+    /// offline `xla` stub — check [`backend_available`] to skip instead.
     pub fn open(dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;

@@ -9,7 +9,7 @@ pub mod manifest;
 pub mod state;
 pub mod tensor;
 
-pub use engine::{metric_f32, Engine, Metrics};
+pub use engine::{backend_available, metric_f32, Engine, Metrics};
 pub use manifest::{GraphSpec, LayerDesc, LeafSpec, Manifest, StageDesc};
 pub use state::StateVec;
 pub use tensor::{DType, Tensor};

