@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json medians against the committed baseline.
+
+Usage: compare_bench.py <baseline.json> <fresh.json> [ratio]
+
+Both files use the DESIGN.md §9 envelope `{bench, reps, threads,
+tile_co, tile_n, rows}`.  Rows are matched on every non-latency field
+(shape, bits, batch, exec, ...); every numeric field ending in `_ms` is
+compared, and a GitHub Actions `::warning::` annotation is emitted when
+fresh/baseline exceeds the ratio (default 1.3).  Always exits 0 — the
+perf gate is advisory by design (CI runners are noisy; the trajectory
+artifact is the source of truth).  A missing baseline is not an error:
+commit one from a trusted run's `bench-json` artifact to
+`ci/bench-baseline/` to arm the comparison.
+"""
+
+import json
+import sys
+
+
+def is_derived(field):
+    """Measurement-derived fields (differ run to run) vs row identity."""
+    return (
+        field.endswith("_ms")
+        or field.endswith("_speedup")
+        or field.startswith("gops")
+    )
+
+
+def row_key(row):
+    return tuple(sorted((k, v) for k, v in row.items() if not is_derived(k)))
+
+
+def main():
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 0
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"[bench-diff] no committed baseline at {baseline_path}; "
+              "commit one from a trusted run's bench-json artifact to arm the check")
+        return 0
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    base_rows = {row_key(r): r for r in baseline.get("rows", [])}
+    checked = regressed = 0
+    for row in fresh.get("rows", []):
+        ref = base_rows.get(row_key(row))
+        if ref is None:
+            continue
+        for field, value in row.items():
+            if not field.endswith("_ms") or not isinstance(value, (int, float)):
+                continue  # compare latency medians only (gops/speedup are derived)
+            old = ref.get(field)
+            if not isinstance(old, (int, float)) or old <= 0:
+                continue
+            checked += 1
+            if value / old > ratio:
+                regressed += 1
+                ident = {k: v for k, v in row.items() if not k.endswith("_ms")}
+                print(
+                    f"::warning file={fresh_path}::bench regression in "
+                    f"{fresh.get('bench', '?')} {ident}: {field} "
+                    f"{old:.3f}ms -> {value:.3f}ms ({value / old:.2f}x > {ratio}x)"
+                )
+    print(
+        f"[bench-diff] {fresh.get('bench', '?')}: compared {checked} medians "
+        f"against {baseline_path}; {regressed} above {ratio}x"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

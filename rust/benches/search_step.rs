@@ -17,11 +17,16 @@ fn main() -> anyhow::Result<()> {
     let iters: usize =
         std::env::var("EBS_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
-    if !dir.join("manifest.json").exists() {
-        eprintln!("[bench:search_step] artifacts for {model} missing — run `make artifacts`; skipping");
+    if !dir.join("manifest.json").exists() && ebs::native::lookup(&model).is_none() {
+        eprintln!(
+            "[bench:search_step] artifacts for {model} missing and model not in the \
+             native registry — run `make artifacts`; skipping"
+        );
         return Ok(());
     }
+    // auto: PJRT artifacts when present, otherwise the native backend
     let mut engine = Engine::open(&dir)?;
+    eprintln!("[bench:search_step] backend: {}", engine.backend_name());
     let n_bits = engine.manifest.bits.len();
     println!(
         "# Table 3 bench — model={model}, {iters} iterations, batch={}",

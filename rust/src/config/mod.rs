@@ -82,6 +82,9 @@ pub struct RunConfig {
     pub model: String,
     pub artifacts_dir: PathBuf,
     pub out_dir: PathBuf,
+    /// Execution backend: `auto` (PJRT if artifacts + real bindings,
+    /// else native), `native`, or `pjrt` (`run.backend` / `--backend`).
+    pub backend: crate::runtime::BackendKind,
     pub seed: i32,
     pub data: DataConfig,
     pub pretrain: TrainCfg,
@@ -150,10 +153,18 @@ impl RunConfig {
             tile_n: doc.usize_or("bd.tile_n", bd_defaults.tile_n),
             batch_chunk: doc.usize_or("bd.batch_chunk", bd_defaults.batch_chunk),
         };
+        let backend = crate::runtime::BackendKind::parse(doc.str_or("run.backend", "auto"))
+            .unwrap_or_else(|e| {
+                // from_doc is infallible by design; an invalid value must
+                // not silently change the execution path — warn loudly.
+                eprintln!("[config] {e}; falling back to run.backend = auto");
+                crate::runtime::BackendKind::Auto
+            });
         RunConfig {
             model: model.clone(),
             artifacts_dir: PathBuf::from(doc.str_or("run.artifacts", "artifacts")),
             out_dir: PathBuf::from(doc.str_or("run.out", "runs").to_string()),
+            backend,
             seed: doc.i64_or("run.seed", 42) as i32,
             data,
             pretrain: train_cfg(&doc, "pretrain", 300, 0.05),
@@ -183,6 +194,15 @@ mod tests {
         assert_eq!(cfg.retrain.lr, 0.04); // §B.3 retrain lr
         assert_eq!(cfg.search.tau1, 0.4); // §B.2 temperature floor
         assert_eq!(cfg.model, "resnet20_synth");
+        assert_eq!(cfg.backend, crate::runtime::BackendKind::Auto);
+    }
+
+    #[test]
+    fn backend_key_parses_and_bad_value_falls_back() {
+        let cfg = RunConfig::from_doc(parse("[run]\nbackend = \"native\"\n").unwrap());
+        assert_eq!(cfg.backend, crate::runtime::BackendKind::Native);
+        let cfg = RunConfig::from_doc(parse("[run]\nbackend = \"gpu\"\n").unwrap());
+        assert_eq!(cfg.backend, crate::runtime::BackendKind::Auto);
     }
 
     #[test]

@@ -57,8 +57,9 @@ impl SearchCfg {
     }
 }
 
-/// Outcome of a search run.
-#[derive(Debug, Clone)]
+/// Outcome of a search run.  `PartialEq` so determinism tests can
+/// assert bit-identical results across same-seed runs.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SearchResult {
     pub selection: Selection,
     pub best_val_acc: f64,

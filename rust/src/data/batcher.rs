@@ -1,8 +1,19 @@
 //! Epoch-shuffled batch iterator over a [`Dataset`].
 //!
-//! Fixed batch size (artifacts are compiled for one batch shape); the
-//! tail of each epoch that doesn't fill a batch is carried into the next
-//! epoch's shuffle, so every sample is seen with equal frequency.
+//! Fixed batch size (artifacts are compiled for one batch shape).  The
+//! iterator is a *stream of epoch permutations*: draws `[k·n, (k+1)·n)`
+//! (n = dataset size) always form one complete permutation, so every
+//! sample appears exactly once per `n` draws regardless of whether the
+//! batch size divides `n`.  A batch that spans an epoch boundary is
+//! additionally guaranteed duplicate-free: the next epoch's shuffle is
+//! repaired so none of the indices already drawn into the partial batch
+//! reappear before it completes.
+//!
+//! (The previous implementation prepended the carried tail to a fresh
+//! full permutation, growing `order` beyond `n` — `batches_per_epoch()`
+//! undercounted actual delivery and a tail sample could repeat within
+//! the carried batch window.  Regression tests:
+//! `every_sample_exactly_once_per_len_draws`, `no_duplicates_within_a_batch`.)
 
 use crate::runtime::Tensor;
 use crate::util::Rng;
@@ -28,26 +39,52 @@ impl<'a> Batcher<'a> {
         Batcher { ds, batch, order, pos: 0, rng, epoch: 0 }
     }
 
-    /// Number of full batches per epoch.
+    /// Full batches delivered per `ds.len()` draws, on average: the
+    /// floor when `batch` divides the dataset exactly; with a carried
+    /// tail the boundary batch draws from two adjacent permutations, so
+    /// long-run delivery is `len/batch` batches per epoch exactly.
     pub fn batches_per_epoch(&self) -> usize {
         self.ds.len() / self.batch
     }
 
+    /// Draw the next `batch` sample indices from the permutation stream;
+    /// reshuffles (and advances `epoch`) at each permutation boundary.
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        let n = self.ds.len();
+        let mut idx = Vec::with_capacity(self.batch);
+        while idx.len() < self.batch {
+            if self.pos == n {
+                self.rng.shuffle(&mut self.order);
+                self.pos = 0;
+                self.epoch += 1;
+                // Repair: keep indices already drawn into this partial
+                // batch out of the slots that will complete it, so no
+                // batch ever contains a duplicate.  Feasible because
+                // batch ≤ n: there are ≥ `need` candidates outside the
+                // partial batch.
+                let need = self.batch - idx.len();
+                let mut swap_from = need;
+                for i in 0..need {
+                    if idx.contains(&self.order[i]) {
+                        while swap_from < n && idx.contains(&self.order[swap_from]) {
+                            swap_from += 1;
+                        }
+                        debug_assert!(swap_from < n, "no duplicate-free slot");
+                        self.order.swap(i, swap_from);
+                        swap_from += 1;
+                    }
+                }
+            }
+            idx.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+        idx
+    }
+
     /// Next (x, y) batch; reshuffles on epoch boundary.
     pub fn next_batch(&mut self) -> (Tensor, Tensor) {
-        if self.pos + self.batch > self.order.len() {
-            // carry the unused tail into the next epoch's shuffle
-            let tail: Vec<usize> = self.order[self.pos..].to_vec();
-            let mut fresh: Vec<usize> = (0..self.ds.len()).collect();
-            self.rng.shuffle(&mut fresh);
-            self.order = tail;
-            self.order.extend(fresh);
-            self.pos = 0;
-            self.epoch += 1;
-        }
-        let idx = &self.order[self.pos..self.pos + self.batch];
-        self.pos += self.batch;
-        self.ds.gather(idx)
+        let idx = self.next_indices();
+        self.ds.gather(&idx)
     }
 }
 
@@ -88,5 +125,44 @@ mod tests {
         let (a, _) = Batcher::new(&ds, 8, 3).next_batch();
         let (b, _) = Batcher::new(&ds, 8, 3).next_batch();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_sample_exactly_once_per_len_draws() {
+        // Regression for the tail-carry bug: with batch ∤ len, each
+        // window of len consecutive draws must be a permutation.
+        let (ds, _) = generate(&SynthSpec::tiny(4));
+        let n = ds.len();
+        for batch in [48usize, 100, 7] {
+            let mut b = Batcher::new(&ds, batch, 9);
+            let mut draws = Vec::new();
+            while draws.len() < 3 * n {
+                draws.extend(b.next_indices());
+            }
+            for (epoch, window) in draws.chunks_exact(n).take(3).enumerate() {
+                let mut counts = vec![0usize; n];
+                for &i in window {
+                    counts[i] += 1;
+                }
+                assert!(
+                    counts.iter().all(|&c| c == 1),
+                    "batch {batch}, epoch {epoch}: uneven coverage"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicates_within_a_batch() {
+        let (ds, _) = generate(&SynthSpec::tiny(6));
+        // 512 % 48 != 0 → plenty of boundary-spanning batches.
+        let mut b = Batcher::new(&ds, 48, 1);
+        for _ in 0..40 {
+            let idx = b.next_indices();
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), idx.len(), "duplicate inside one batch: {idx:?}");
+        }
     }
 }

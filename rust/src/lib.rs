@@ -3,8 +3,12 @@
 //! harness (see DESIGN.md for the paper→module map).
 //!
 //! Layering:
-//! * [`runtime`] — PJRT bridge: loads the AOT artifacts built by
-//!   `python/compile/aot.py` and executes step graphs.
+//! * [`runtime`] — `Backend` trait + engine front-end: the PJRT bridge
+//!   for AOT artifacts built by `python/compile/aot.py`, with per-graph
+//!   dispatch and profiling.
+//! * [`native`] — pure-Rust CPU backend: interprets the same step
+//!   graphs (forward + hand-written backward with STE) so Algorithm 1
+//!   runs end-to-end without artifacts or a PJRT runtime.
 //! * [`coordinator`] — Algorithm 1 (bilevel search), training drivers,
 //!   FLOPs model, bitwidth selection, schedules.
 //! * [`bd`] — Binary Decomposition inference engine (Eq. 12-14) for
@@ -19,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod models;
+pub mod native;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -45,7 +45,9 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
   report-fig7     Fig. 7 precision distribution --selection <json> [--model m]
   info            print manifest / FLOPs summary for a model
 
-Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>";
+Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>
+              --backend auto|native|pjrt   (auto = PJRT with artifacts,
+              else the pure-Rust native interpreter — no artifacts needed)";
 
 fn main() {
     if let Err(e) = run() {
@@ -71,10 +73,22 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(t) = args.flag("target") {
         cfg.search.target_mflops = t.parse().context("--target must be MFLOPs")?;
     }
+    if let Some(b) = args.flag("backend") {
+        cfg.backend = ebs::runtime::BackendKind::parse(b)?;
+    }
     if args.has_switch("stochastic") {
         cfg.search.stochastic = true;
     }
     Ok(cfg)
+}
+
+/// Open the configured model on the configured backend (`auto` →
+/// native when no PJRT artifact is present, so every subcommand works
+/// without `make artifacts`).
+fn open_engine(cfg: &RunConfig) -> Result<Engine> {
+    let engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
+    eprintln!("[engine] {} on '{}' backend", engine.manifest.model, engine.backend_name());
+    Ok(engine)
 }
 
 fn run() -> Result<()> {
@@ -133,7 +147,7 @@ fn run() -> Result<()> {
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let mut engine = Engine::open(&cfg.model_dir())?;
+    let mut engine = open_engine(&cfg)?;
     let flops = FlopsModel::from_manifest(&engine.manifest)?;
     let mut search = cfg.search.clone();
     if search.target_mflops <= 0.0 {
@@ -164,7 +178,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let mut engine = Engine::open(&cfg.model_dir())?;
+    let mut engine = open_engine(&cfg)?;
     let flops = FlopsModel::from_manifest(&engine.manifest)?;
     let mut scfg = cfg.search.clone();
     if scfg.target_mflops <= 0.0 {
@@ -197,7 +211,7 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     let run_dir = PathBuf::from(
         args.flag_or("run-dir", &format!("{}/pipeline_{}", cfg.out_dir.display(), cfg.model)),
     );
-    let engine = Engine::open(&cfg.model_dir())?;
+    let engine = open_engine(&cfg)?;
     let state = StateVec::load(&run_dir.join("retrained.ckpt"), &engine.manifest.state_spec)
         .context("deploy needs a pipeline run dir with retrained.ckpt")?;
     let sel = Selection::load(&run_dir.join("selection.json"))?;
@@ -245,11 +259,14 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let manifest = Manifest::load(&cfg.model_dir())?;
-    let flops = FlopsModel::from_manifest(&manifest)?;
-    println!("model {}: {}×{}×{} → {} classes, batch {}",
-        manifest.model, manifest.image[0], manifest.image[1], manifest.image[2],
-        manifest.num_classes, manifest.batch_size);
+    // Engine::open_with synthesizes the manifest for registered models
+    // when no artifacts exist, so `info` works on a bare checkout.
+    let engine = open_engine(&cfg)?;
+    let manifest = &engine.manifest;
+    let flops = FlopsModel::from_manifest(manifest)?;
+    println!("model {} [{} backend]: {}×{}×{} → {} classes, batch {}",
+        manifest.model, engine.backend_name(), manifest.image[0], manifest.image[1],
+        manifest.image[2], manifest.num_classes, manifest.batch_size);
     println!("qconvs: {} | state: {} leaves, {:.1} MB | graphs: {:?}",
         manifest.num_qconvs(),
         manifest.state_spec.len(),

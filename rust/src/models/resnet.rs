@@ -49,14 +49,21 @@ fn conv(name: &str, kind: &str, in_ch: usize, out_ch: usize, k: usize, stride: u
 }
 
 impl NetDesc {
-    /// Rebuild the topology from manifest geometry and parity-check it
-    /// against the manifest's own layer table.
-    pub fn from_manifest(m: &Manifest) -> Result<NetDesc> {
-        let mut hw = m.image[0];
-        let stem = conv("stem", "stem", m.image[2], m.stem_channels, 3, 1, hw);
+    /// Build the topology directly from geometry (no manifest needed) —
+    /// the shared constructor behind both artifact-backed engines
+    /// ([`NetDesc::from_manifest`]) and the native backend's synthesized
+    /// manifests (`native::models`).
+    pub fn from_geometry(
+        image: [usize; 3],
+        stem_channels: usize,
+        stages: &[crate::runtime::StageDesc],
+        num_classes: usize,
+    ) -> NetDesc {
+        let mut hw = image[0];
+        let stem = conv("stem", "stem", image[2], stem_channels, 3, 1, hw);
         let mut blocks = Vec::new();
-        let mut in_ch = m.stem_channels;
-        for (si, st) in m.stages.iter().enumerate() {
+        let mut in_ch = stem_channels;
+        for (si, st) in stages.iter().enumerate() {
             for bi in 0..st.blocks {
                 let stride = if bi == 0 { st.stride } else { 1 };
                 let base = format!("s{si}b{bi}");
@@ -71,9 +78,8 @@ impl NetDesc {
                 in_ch = st.channels;
             }
         }
-        let fc = conv("fc", "fc", in_ch, m.num_classes, 1, 1, 1);
-
-        let net = NetDesc {
+        let fc = conv("fc", "fc", in_ch, num_classes, 1, 1, 1);
+        NetDesc {
             qconv_names: blocks
                 .iter()
                 .flat_map(|b| {
@@ -87,7 +93,13 @@ impl NetDesc {
             stem,
             blocks,
             fc,
-        };
+        }
+    }
+
+    /// Rebuild the topology from manifest geometry and parity-check it
+    /// against the manifest's own layer table.
+    pub fn from_manifest(m: &Manifest) -> Result<NetDesc> {
+        let net = NetDesc::from_geometry(m.image, m.stem_channels, &m.stages, m.num_classes);
         net.verify(m)?;
         Ok(net)
     }

@@ -1,0 +1,451 @@
+//! The native CPU [`Backend`]: interprets every step graph the PJRT
+//! artifacts export — `init`, `fp_train`, `fp_eval`, `fp_infer`,
+//! `train`, `eval`, `infer`, `search_det`, `search_sto` — in pure Rust
+//! (DESIGN.md §11).
+//!
+//! Bilevel semantics follow `python/compile/steps.py` exactly: the
+//! weight phase (Eq. 10) runs SGD-momentum over (params, α) on the
+//! train batch and commits the BN running-stat updates; the arch phase
+//! (Eq. 9) runs Adam over (r, s) on the validation batch with the
+//! relative-overshoot FLOPs hinge `λ·relu(E[FLOPs] − target)/target`,
+//! using batch statistics but *not* committing them (DARTS practice).
+//! Gumbel noise arrives as graph inputs (`g_r`, `g_s`, `tau`) so the
+//! coordinator keeps ownership of all randomness.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::flops::{FlopsModel, MIXED_DIVISOR};
+use crate::runtime::{Backend, Manifest, Metrics, StateVec, Tensor};
+use crate::util::Rng;
+
+use super::graph::{Coeffs, NativeNet};
+use super::ops;
+use super::optim;
+use super::quant;
+
+/// Pure-Rust interpreter for one model's step graphs.
+pub struct NativeBackend {
+    net: NativeNet,
+    flops: FlopsModel,
+    alpha_init: f32,
+    num_classes: usize,
+}
+
+/// Gumbel-noise inputs of one stochastic step: ((L,N) rows for r and s,
+/// temperature τ).
+struct StoInputs<'a> {
+    g_r: &'a [f32],
+    g_s: &'a [f32],
+    tau: f32,
+}
+
+fn io_get<'a>(io: &'a [(String, Tensor)], name: &str) -> Result<&'a Tensor> {
+    io.iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, t)| t)
+        .with_context(|| format!("native graph needs input '{name}'"))
+}
+
+fn io_f32<'a>(io: &'a [(String, Tensor)], name: &str) -> Result<&'a [f32]> {
+    io_get(io, name)?.as_f32()
+}
+
+fn io_scalar(io: &[(String, Tensor)], name: &str) -> Result<f32> {
+    io_get(io, name)?.item_f32()
+}
+
+impl NativeBackend {
+    pub fn from_manifest(m: &Manifest) -> Result<NativeBackend> {
+        Ok(NativeBackend {
+            net: NativeNet::from_manifest(m)?,
+            flops: FlopsModel::from_manifest(m)?,
+            alpha_init: m.alpha_init,
+            num_classes: m.num_classes,
+        })
+    }
+
+    /// Split (L, N) selection/coefficient matrices into per-layer rows.
+    fn coeff_rows(&self, flat: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let l = self.net.desc.qconv_names.len();
+        let n = self.net.bits.len();
+        ensure!(flat.len() == l * n, "coefficient matrix is {} not {l}×{n}", flat.len());
+        Ok(flat.chunks_exact(n).map(|r| r.to_vec()).collect())
+    }
+
+    /// Branch coefficients from the state strengths: softmax (Eq. 5) or
+    /// Gumbel-softmax (Eq. 8) when noise is supplied.
+    fn coeffs_from_state(&self, state: &StateVec, sto: Option<&StoInputs>) -> Result<Coeffs> {
+        let n = self.net.bits.len();
+        let mut cw = Vec::new();
+        let mut cx = Vec::new();
+        for (i, name) in self.net.desc.qconv_names.iter().enumerate() {
+            let r = state.get(&format!("state/arch/r/{name}"))?.as_f32()?;
+            let s = state.get(&format!("state/arch/s/{name}"))?.as_f32()?;
+            let (mut pw, mut px) = (Vec::new(), Vec::new());
+            match sto {
+                None => {
+                    quant::softmax(r, &mut pw);
+                    quant::softmax(s, &mut px);
+                }
+                Some(g) => {
+                    quant::gumbel_softmax(r, &g.g_r[i * n..(i + 1) * n], g.tau, &mut pw);
+                    quant::gumbel_softmax(s, &g.g_s[i * n..(i + 1) * n], g.tau, &mut px);
+                }
+            }
+            cw.push(pw);
+            cx.push(px);
+        }
+        Ok(Coeffs { cw, cx })
+    }
+
+    /// Eq. 11 expected cost of a coefficient assignment, in MFLOPs.
+    fn expected_mflops(&self, c: &Coeffs) -> f64 {
+        let n = self.net.bits.len();
+        let flat = |rows: &[Vec<f32>]| -> Vec<f32> {
+            let mut v = Vec::with_capacity(rows.len() * n);
+            for r in rows {
+                v.extend_from_slice(r);
+            }
+            v
+        };
+        self.flops.expected_mflops(&flat(&c.cw), &flat(&c.cx))
+    }
+
+    /// Eq. 10: one SGD-momentum update of (params, α) on a batch.
+    /// Returns (loss, batch accuracy); loss/acc are computed at the
+    /// pre-update parameters, as in the exported graphs.
+    #[allow(clippy::too_many_arguments)]
+    fn weight_phase(
+        &self,
+        state: &mut StateVec,
+        coeffs: Option<&Coeffs>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        wd: f32,
+        teacher: Option<(&[f32], f32)>,
+    ) -> Result<(f32, f32)> {
+        let batch = y.len();
+        let classes = self.num_classes;
+        let (tape, bn_updates) = self.net.forward(state, coeffs, x, batch, true)?;
+        let ce = ops::cross_entropy(&tape.logits, y, classes);
+        let mut probs = Vec::new();
+        ops::softmax_rows(&tape.logits, batch, classes, &mut probs);
+
+        let (loss, mu, pt) = match teacher {
+            Some((t_logits, mu)) if mu > 0.0 => {
+                let kl = ops::distill_loss(&tape.logits, t_logits, batch, classes);
+                let mut pt = Vec::new();
+                ops::softmax_rows(t_logits, batch, classes, &mut pt);
+                ((1.0 - mu) * ce + mu * kl, mu, Some(pt))
+            }
+            _ => (ce, 0.0, None),
+        };
+
+        let inv_b = 1.0 / batch as f32;
+        let mut dlogits = vec![0f32; batch * classes];
+        for b in 0..batch {
+            for c in 0..classes {
+                let i = b * classes + c;
+                let hard = probs[i] - if y[b] as usize == c { 1.0 } else { 0.0 };
+                let soft = match &pt {
+                    Some(pt) => probs[i] - pt[i],
+                    None => 0.0,
+                };
+                dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
+            }
+        }
+
+        let grads = self.net.backward(state, coeffs, &tape, &dlogits)?;
+        bn_updates.apply(state)?;
+        optim::sgd_momentum_step(state, &grads.by_path, lr, wd)?;
+        let acc = ops::correct_count(&tape.logits, y, classes) * inv_b;
+        Ok((loss, acc))
+    }
+
+    /// Eq. 9: one Adam update of (r, s) on the validation batch with
+    /// the FLOPs hinge.  Returns (val CE, correct count, E[FLOPs]).
+    #[allow(clippy::too_many_arguments)]
+    fn arch_phase(
+        &self,
+        state: &mut StateVec,
+        sto: Option<&StoInputs>,
+        xv: &[f32],
+        yv: &[i32],
+        lr_arch: f32,
+        lam: f32,
+        target: f32,
+    ) -> Result<(f32, f32, f32)> {
+        let batch = yv.len();
+        let classes = self.num_classes;
+        let coeffs = self.coeffs_from_state(state, sto)?;
+        // validation forward with batch statistics; BN updates dropped.
+        let (tape, _bn) = self.net.forward(state, Some(&coeffs), xv, batch, true)?;
+        let val_ce = ops::cross_entropy(&tape.logits, yv, classes);
+        let correct = ops::correct_count(&tape.logits, yv, classes);
+        let eflops = self.expected_mflops(&coeffs);
+
+        let mut probs = Vec::new();
+        ops::softmax_rows(&tape.logits, batch, classes, &mut probs);
+        let inv_b = 1.0 / batch as f32;
+        let mut dlogits = vec![0f32; batch * classes];
+        for b in 0..batch {
+            for c in 0..classes {
+                let i = b * classes + c;
+                dlogits[i] = (probs[i] - if yv[b] as usize == c { 1.0 } else { 0.0 }) * inv_b;
+            }
+        }
+        let mut grads = self.net.backward(state, Some(&coeffs), &tape, &dlogits)?;
+
+        // FLOPs-hinge gradient (zero at or below target, like relu').
+        if eflops > target as f64 && target > 0.0 {
+            let scale = lam as f64 / target as f64;
+            let bits = &self.net.bits;
+            for (l, (_, macs)) in self.flops.qconv_macs.iter().enumerate() {
+                let e_m: f64 = (0..bits.len())
+                    .map(|j| coeffs.cw[l][j] as f64 * bits[j] as f64)
+                    .sum();
+                let e_k: f64 = (0..bits.len())
+                    .map(|j| coeffs.cx[l][j] as f64 * bits[j] as f64)
+                    .sum();
+                let base = *macs as f64 / (MIXED_DIVISOR * 1e6);
+                for j in 0..bits.len() {
+                    grads.dcw[l][j] += (scale * base * bits[j] as f64 * e_k) as f32;
+                    grads.dcx[l][j] += (scale * base * bits[j] as f64 * e_m) as f32;
+                }
+            }
+        }
+
+        // coefficients → strengths (softmax / Gumbel-softmax VJP)
+        let n = self.net.bits.len();
+        let mut arch_grads: HashMap<String, Vec<f32>> = HashMap::new();
+        for (i, name) in self.net.desc.qconv_names.iter().enumerate() {
+            let r = state.get(&format!("state/arch/r/{name}"))?.as_f32()?;
+            let s = state.get(&format!("state/arch/s/{name}"))?.as_f32()?;
+            let mut gr = vec![0f32; n];
+            let mut gs = vec![0f32; n];
+            match sto {
+                None => {
+                    quant::softmax_backward(&coeffs.cw[i], &grads.dcw[i], &mut gr);
+                    quant::softmax_backward(&coeffs.cx[i], &grads.dcx[i], &mut gs);
+                }
+                Some(g) => {
+                    quant::gumbel_softmax_backward(
+                        r, &coeffs.cw[i], &grads.dcw[i], g.tau, &mut gr,
+                    );
+                    quant::gumbel_softmax_backward(
+                        s, &coeffs.cx[i], &grads.dcx[i], g.tau, &mut gs,
+                    );
+                }
+            }
+            arch_grads.insert(format!("state/arch/r/{name}"), gr);
+            arch_grads.insert(format!("state/arch/s/{name}"), gs);
+        }
+        optim::adam_step(state, &arch_grads, lr_arch)?;
+        Ok((val_ce, correct, eflops as f32))
+    }
+
+    fn eval_graph(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        let x = io_f32(io, "x")?;
+        let y = io_get(io, "y")?.as_i32()?;
+        let (tape, _) = self.net.forward(state, coeffs, x, y.len(), false)?;
+        let mut m = Metrics::new();
+        m.insert("loss".into(), Tensor::scalar_f32(ops::cross_entropy(&tape.logits, y, self.num_classes)));
+        m.insert(
+            "correct".into(),
+            Tensor::scalar_f32(ops::correct_count(&tape.logits, y, self.num_classes)),
+        );
+        Ok(m)
+    }
+
+    fn infer_graph(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        let x = io_get(io, "x")?;
+        ensure!(x.shape().len() == 4, "infer input must be (B,H,W,C), got {:?}", x.shape());
+        let batch = x.shape()[0];
+        let (tape, _) = self.net.forward(state, coeffs, x.as_f32()?, batch, false)?;
+        let mut m = Metrics::new();
+        m.insert(
+            "logits".into(),
+            Tensor::from_f32(&[batch, self.num_classes], tape.logits),
+        );
+        Ok(m)
+    }
+
+    fn search_graph(
+        &self,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+        stochastic: bool,
+    ) -> Result<Metrics> {
+        let xt = io_f32(io, "xt")?;
+        let yt = io_get(io, "yt")?.as_i32()?;
+        let xv = io_f32(io, "xv")?;
+        let yv = io_get(io, "yv")?.as_i32()?;
+        let lr_w = io_scalar(io, "lr_w")?;
+        let lr_arch = io_scalar(io, "lr_arch")?;
+        let wd = io_scalar(io, "wd")?;
+        let lam = io_scalar(io, "lam")?;
+        let target = io_scalar(io, "target")?;
+        let sto_inputs;
+        let sto = if stochastic {
+            sto_inputs = StoInputs {
+                g_r: io_f32(io, "g_r")?,
+                g_s: io_f32(io, "g_s")?,
+                tau: io_scalar(io, "tau")?,
+            };
+            Some(&sto_inputs)
+        } else {
+            None
+        };
+
+        // One Gumbel sample (or the softmax coefficients) is shared by
+        // both phases; arch is untouched by the weight phase, so the
+        // coefficient values agree with steps.py's single computation.
+        let coeffs = self.coeffs_from_state(state, sto)?;
+        let (train_loss, _) =
+            self.weight_phase(state, Some(&coeffs), xt, yt, lr_w, wd, None)?;
+        let (val_loss, correct, eflops) =
+            self.arch_phase(state, sto, xv, yv, lr_arch, lam, target)?;
+
+        let mut m = Metrics::new();
+        m.insert("eflops".into(), Tensor::scalar_f32(eflops));
+        m.insert("train_loss".into(), Tensor::scalar_f32(train_loss));
+        m.insert("val_loss".into(), Tensor::scalar_f32(val_loss));
+        m.insert(
+            "val_acc".into(),
+            Tensor::scalar_f32(correct / yv.len() as f32),
+        );
+        Ok(m)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    /// Mirror of `model.init_state`: He-normal conv weights, uniform fc,
+    /// BN affine at (1, 0), running stats at (0, 1), α at its §B.3 init,
+    /// strengths and optimizer slots at zero.  Driven by `util::Rng`
+    /// instead of `jax.random`, so native and artifact initializations
+    /// are distribution-equal but not bit-equal (DESIGN.md §11).
+    fn init_state(&mut self, manifest: &Manifest, seed: i32) -> Result<StateVec> {
+        let mut state = StateVec::zeros(&manifest.state_spec);
+        let mut rng = Rng::new((seed as i64 as u64) ^ 0x0EB51417);
+        for l in self.net.desc.inventory() {
+            if l.kind == "fc" {
+                let scale = 1.0 / (l.in_ch as f32).sqrt();
+                let w = state.get_mut(&format!("state/params/{}/w", l.name))?.as_f32_mut()?;
+                for v in w.iter_mut() {
+                    *v = rng.uniform_in(-scale, scale);
+                }
+                continue;
+            }
+            let fan_in = (l.ksize * l.ksize * l.in_ch) as f32;
+            let std = (2.0 / fan_in).sqrt();
+            let w = state.get_mut(&format!("state/params/{}/w", l.name))?.as_f32_mut()?;
+            for v in w.iter_mut() {
+                *v = std * rng.normal();
+            }
+            state
+                .get_mut(&format!("state/params/bn_{}/gamma", l.name))?
+                .as_f32_mut()?
+                .fill(1.0);
+            state.get_mut(&format!("state/bn/{}/var", l.name))?.as_f32_mut()?.fill(1.0);
+            if l.kind == "qconv" {
+                state
+                    .get_mut(&format!("state/alphas/{}", l.name))?
+                    .as_f32_mut()?
+                    .fill(self.alpha_init);
+            }
+        }
+        Ok(state)
+    }
+
+    fn prepare(&mut self, _manifest: &Manifest, _graph: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        _manifest: &Manifest,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<(Metrics, std::time::Duration)> {
+        // The interpreter has no marshalling/compile phases — the whole
+        // dispatch IS the execution, so that is what gets reported.
+        let t0 = std::time::Instant::now();
+        let metrics = match graph {
+            "fp_train" => {
+                let x = io_f32(io, "x")?;
+                let y = io_get(io, "y")?.as_i32()?;
+                let (loss, acc) = self.weight_phase(
+                    state, None, x, y, io_scalar(io, "lr")?, io_scalar(io, "wd")?, None,
+                )?;
+                let mut m = Metrics::new();
+                m.insert("loss".into(), Tensor::scalar_f32(loss));
+                m.insert("acc".into(), Tensor::scalar_f32(acc));
+                Ok(m)
+            }
+            "train" => {
+                let coeffs = Coeffs {
+                    cw: self.coeff_rows(io_f32(io, "sel_w")?)?,
+                    cx: self.coeff_rows(io_f32(io, "sel_x")?)?,
+                };
+                let x = io_f32(io, "x")?;
+                let y = io_get(io, "y")?.as_i32()?;
+                let mu = io_scalar(io, "mu")?;
+                let teacher = io_f32(io, "teacher")?;
+                let (loss, acc) = self.weight_phase(
+                    state,
+                    Some(&coeffs),
+                    x,
+                    y,
+                    io_scalar(io, "lr")?,
+                    io_scalar(io, "wd")?,
+                    Some((teacher, mu)),
+                )?;
+                let mut m = Metrics::new();
+                m.insert("loss".into(), Tensor::scalar_f32(loss));
+                m.insert("acc".into(), Tensor::scalar_f32(acc));
+                Ok(m)
+            }
+            "fp_eval" => self.eval_graph(state, None, io),
+            "eval" => {
+                let coeffs = Coeffs {
+                    cw: self.coeff_rows(io_f32(io, "sel_w")?)?,
+                    cx: self.coeff_rows(io_f32(io, "sel_x")?)?,
+                };
+                self.eval_graph(state, Some(&coeffs), io)
+            }
+            "fp_infer" => self.infer_graph(state, None, io),
+            "infer" => {
+                let coeffs = Coeffs {
+                    cw: self.coeff_rows(io_f32(io, "sel_w")?)?,
+                    cx: self.coeff_rows(io_f32(io, "sel_x")?)?,
+                };
+                self.infer_graph(state, Some(&coeffs), io)
+            }
+            "search_det" => self.search_graph(state, io, false),
+            "search_sto" => self.search_graph(state, io, true),
+            other => bail!(
+                "native backend does not implement graph '{other}' \
+                 (supported: init/fp_train/fp_eval/fp_infer/train/eval/infer/search_det/search_sto)"
+            ),
+        }?;
+        Ok((metrics, t0.elapsed()))
+    }
+}

@@ -1,0 +1,454 @@
+//! Native supernet forward/backward — the pure-Rust reimplementation of
+//! `python/compile/model.py::forward` plus the exact vector-Jacobian
+//! products `jax.grad` derives from it in `steps.py`.
+//!
+//! Forward (per block): qconv (Eq. 6/17 aggregated quantization → SAME
+//! conv) → train-mode BN → ReLU → qconv → BN, plus the projection
+//! shortcut when shape changes, residual add → ReLU; stem and classifier
+//! stay full precision (§B.2).  The tape stores exactly what the
+//! backward needs: pre-quant inputs, aggregated-quantized inputs,
+//! aggregated weights, the weight-normalization statistics, and the BN
+//! normalized values.
+//!
+//! Backward: STE through both quantizers (`native::quant`), true
+//! gradients through tanh/max/clip, BN gradients through the batch
+//! statistics (`native::ops`), and exact (linear) gradients for the
+//! per-layer branch coefficients — the inputs to Eq. 9/10's strength
+//! update.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::bd::im2col::Patches;
+use crate::models::NetDesc;
+use crate::runtime::{LayerDesc, Manifest, StateVec};
+
+use super::ops;
+use super::quant::{self, WTape};
+
+/// Per-qconv branch coefficient vectors, manifest qconv order.
+#[derive(Debug, Clone)]
+pub struct Coeffs {
+    pub cw: Vec<Vec<f32>>,
+    pub cx: Vec<Vec<f32>>,
+}
+
+/// BN running-stat updates produced by a train-mode forward
+/// (`layer name → (new_mean, new_var)`); the caller decides whether to
+/// apply them (weight phase) or drop them (arch phase, DARTS practice).
+#[derive(Debug, Default)]
+pub struct BnUpdates(pub Vec<(String, Vec<f32>, Vec<f32>)>);
+
+impl BnUpdates {
+    /// Write the updates into `state/bn/<name>/{mean,var}`.
+    pub fn apply(&self, state: &mut StateVec) -> Result<()> {
+        for (name, mean, var) in &self.0 {
+            state
+                .get_mut(&format!("state/bn/{name}/mean"))?
+                .as_f32_mut()?
+                .copy_from_slice(mean);
+            state
+                .get_mut(&format!("state/bn/{name}/var"))?
+                .as_f32_mut()?
+                .copy_from_slice(var);
+        }
+        Ok(())
+    }
+}
+
+#[derive(Default)]
+struct ConvTape {
+    /// Pre-quantization input (B·h·w·ci NHWC).
+    x: Vec<f32>,
+    /// Aggregated-quantized conv input; empty when the layer ran FP.
+    xq: Vec<f32>,
+    /// Weights the conv actually used (aggregated-quantized or raw copy).
+    wq: Vec<f32>,
+    wtape: WTape,
+    alpha: f32,
+    bn: ops::BnTape,
+    in_h: usize,
+    in_w: usize,
+    oh: usize,
+    ow: usize,
+    quantized: bool,
+}
+
+struct BlockTape {
+    c1: ConvTape,
+    c2: ConvTape,
+    sc: Option<ConvTape>,
+    /// Post-residual-ReLU block output (the next block's input).
+    out: Vec<f32>,
+}
+
+/// Forward tape for one batch.
+pub struct Tape {
+    pub batch: usize,
+    stem: ConvTape,
+    blocks: Vec<BlockTape>,
+    pooled: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+/// Gradients of one loss evaluation.
+#[derive(Debug, Default)]
+pub struct Grads {
+    /// Dense grads keyed by full state path (`state/params/...`,
+    /// `state/alphas/...`); alpha grads are length-1 vectors.
+    pub by_path: HashMap<String, Vec<f32>>,
+    /// Branch-coefficient grads per qconv (empty in FP mode).
+    pub dcw: Vec<Vec<f32>>,
+    pub dcx: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    fn add(&mut self, path: String, g: Vec<f32>) {
+        match self.by_path.get_mut(&path) {
+            Some(acc) => {
+                for (a, v) in acc.iter_mut().zip(&g) {
+                    *a += v;
+                }
+            }
+            None => {
+                self.by_path.insert(path, g);
+            }
+        }
+    }
+}
+
+/// The native network: topology + candidate bits.
+pub struct NativeNet {
+    pub desc: NetDesc,
+    pub bits: Vec<u32>,
+    pub num_classes: usize,
+}
+
+impl NativeNet {
+    pub fn from_manifest(m: &Manifest) -> Result<NativeNet> {
+        Ok(NativeNet {
+            desc: NetDesc::from_manifest(m)?,
+            bits: m.bits.clone(),
+            num_classes: m.num_classes,
+        })
+    }
+
+    fn qconv_index(&self, name: &str) -> usize {
+        self.desc
+            .qconv_names
+            .iter()
+            .position(|n| n == name)
+            .expect("qconv name from own topology")
+    }
+
+    /// One conv → BN (→ ReLU) layer forward.  `coeffs` present ⇒ run the
+    /// EBS aggregated-quantized path (Eq. 6/17); absent ⇒ full precision.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_layer_forward(
+        &self,
+        state: &StateVec,
+        desc: &LayerDesc,
+        coeffs: Option<&Coeffs>,
+        input: &[f32],
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        train: bool,
+        relu: bool,
+        bn_updates: &mut BnUpdates,
+    ) -> Result<(Vec<f32>, ConvTape)> {
+        let name = &desc.name;
+        let w = state.get(&format!("state/params/{name}/w"))?.as_f32()?;
+        let mut tape = ConvTape {
+            x: input.to_vec(),
+            in_h,
+            in_w,
+            ..ConvTape::default()
+        };
+        let quant = coeffs.is_some() && desc.kind == "qconv";
+        tape.quantized = quant;
+        let conv_in: &[f32] = if quant {
+            let c = coeffs.unwrap();
+            let qi = self.qconv_index(name);
+            tape.alpha = state.get(&format!("state/alphas/{name}"))?.as_f32()?[0];
+            quant::ebs_act_forward(input, &c.cx[qi], tape.alpha, &self.bits, &mut tape.xq);
+            quant::ebs_weight_forward(w, &c.cw[qi], &self.bits, &mut tape.wq, &mut tape.wtape);
+            &tape.xq
+        } else {
+            tape.wq = w.to_vec();
+            &tape.x
+        };
+
+        let mut patches = Patches::empty();
+        ops::patches_of(conv_in, batch, in_h, in_w, desc.in_ch, desc.ksize, desc.stride, &mut patches);
+        tape.oh = patches.oh;
+        tape.ow = patches.ow;
+        let mut conv_out = Vec::new();
+        ops::conv_forward(&patches, &tape.wq, desc.out_ch, &mut conv_out);
+
+        let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?;
+        let beta = state.get(&format!("state/params/bn_{name}/beta"))?.as_f32()?;
+        let rmean = state.get(&format!("state/bn/{name}/mean"))?.as_f32()?;
+        let rvar = state.get(&format!("state/bn/{name}/var"))?.as_f32()?;
+        let mut y = Vec::new();
+        if train {
+            let (mut nm, mut nv) = (Vec::new(), Vec::new());
+            ops::bn_forward_train(
+                &conv_out, desc.out_ch, gamma, beta, rmean, rvar, &mut y, &mut tape.bn, &mut nm,
+                &mut nv,
+            );
+            bn_updates.0.push((name.clone(), nm, nv));
+        } else {
+            ops::bn_forward_eval(&conv_out, desc.out_ch, gamma, beta, rmean, rvar, &mut y);
+        }
+        if relu {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        Ok((y, tape))
+    }
+
+    /// Full forward pass; `coeffs = None` runs the FP network.  Returns
+    /// the tape (logits inside) and the BN running-stat updates (empty
+    /// unless `train`).
+    pub fn forward(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        x: &[f32],
+        batch: usize,
+        train: bool,
+    ) -> Result<(Tape, BnUpdates)> {
+        let stem_d = &self.desc.stem;
+        ensure!(
+            x.len() == batch * stem_d.in_hw * stem_d.in_hw * stem_d.in_ch,
+            "input size {} != batch {batch} × {}×{}×{}",
+            x.len(),
+            stem_d.in_hw,
+            stem_d.in_hw,
+            stem_d.in_ch
+        );
+        if let Some(c) = coeffs {
+            ensure!(
+                c.cw.len() == self.desc.qconv_names.len()
+                    && c.cx.len() == self.desc.qconv_names.len(),
+                "coefficient rows {} != qconvs {}",
+                c.cw.len(),
+                self.desc.qconv_names.len()
+            );
+        }
+        let mut bn_updates = BnUpdates::default();
+        let (h, stem_tape) = self.conv_layer_forward(
+            state, stem_d, None, x, batch, stem_d.in_hw, stem_d.in_hw, train, true, &mut bn_updates,
+        )?;
+        let (mut ch_h, mut ch_w) = (stem_tape.oh, stem_tape.ow);
+
+        // Each block reads the previous block's tape output in place —
+        // no per-block activation copies beyond the tape's own caches.
+        let mut blocks: Vec<BlockTape> = Vec::with_capacity(self.desc.blocks.len());
+        for b in &self.desc.blocks {
+            let block_in: &[f32] = match blocks.last() {
+                Some(bt) => &bt.out,
+                None => &h,
+            };
+            let (y1, c1) = self.conv_layer_forward(
+                state, &b.c1, coeffs, block_in, batch, ch_h, ch_w, train, true, &mut bn_updates,
+            )?;
+            let (mut y2, c2) = self.conv_layer_forward(
+                state, &b.c2, coeffs, &y1, batch, c1.oh, c1.ow, train, false, &mut bn_updates,
+            )?;
+            let sc = match &b.shortcut {
+                Some(sd) => {
+                    let (ident, sct) = self.conv_layer_forward(
+                        state, sd, coeffs, block_in, batch, ch_h, ch_w, train, false,
+                        &mut bn_updates,
+                    )?;
+                    for (v, id) in y2.iter_mut().zip(&ident) {
+                        *v = (*v + id).max(0.0);
+                    }
+                    Some(sct)
+                }
+                None => {
+                    for (v, id) in y2.iter_mut().zip(block_in) {
+                        *v = (*v + id).max(0.0);
+                    }
+                    None
+                }
+            };
+            ch_h = c2.oh;
+            ch_w = c2.ow;
+            blocks.push(BlockTape { c1, c2, sc, out: y2 });
+        }
+
+        let co = self.desc.blocks.last().map(|b| b.c2.out_ch).unwrap_or(self.desc.stem.out_ch);
+        let n = ch_h * ch_w;
+        let feat: &[f32] = match blocks.last() {
+            Some(bt) => &bt.out,
+            None => &h,
+        };
+        let mut pooled = Vec::new();
+        ops::gap_forward(feat, batch, n, co, &mut pooled);
+        let fc_w = state.get("state/params/fc/w")?.as_f32()?;
+        let fc_b = state.get("state/params/fc/b")?.as_f32()?;
+        let mut logits = Vec::new();
+        ops::fc_forward(&pooled, batch, co, self.num_classes, fc_w, fc_b, &mut logits);
+
+        Ok((
+            Tape { batch, stem: stem_tape, blocks, pooled, logits },
+            if train { bn_updates } else { BnUpdates::default() },
+        ))
+    }
+
+    /// Backward through one conv→BN layer.  `dy` is the gradient at the
+    /// BN output (ReLU already unmasked by the caller).  Returns the
+    /// gradient at the layer's pre-quantization input, or `None` when
+    /// `need_dx` is false (the stem).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_layer_backward(
+        &self,
+        state: &StateVec,
+        desc: &LayerDesc,
+        coeffs: Option<&Coeffs>,
+        tape: &ConvTape,
+        dy: &[f32],
+        batch: usize,
+        need_dx: bool,
+        grads: &mut Grads,
+    ) -> Result<Option<Vec<f32>>> {
+        let name = &desc.name;
+        let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?;
+        let mut dgamma = vec![0f32; desc.out_ch];
+        let mut dbeta = vec![0f32; desc.out_ch];
+        let mut dconv = Vec::new();
+        ops::bn_backward_train(dy, desc.out_ch, gamma, &tape.bn, &mut dconv, &mut dgamma, &mut dbeta);
+        grads.add(format!("state/params/bn_{name}/gamma"), dgamma);
+        grads.add(format!("state/params/bn_{name}/beta"), dbeta);
+
+        let conv_in: &[f32] = if tape.quantized { &tape.xq } else { &tape.x };
+        let mut patches = Patches::empty();
+        ops::patches_of(
+            conv_in, batch, tape.in_h, tape.in_w, desc.in_ch, desc.ksize, desc.stride, &mut patches,
+        );
+        let mut gwq = vec![0f32; tape.wq.len()];
+        ops::conv_backward_w(&patches, &dconv, desc.out_ch, &mut gwq);
+        let mut dxq = vec![0f32; conv_in.len()];
+        ops::conv_backward_x(
+            &dconv, &tape.wq, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch, desc.ksize,
+            desc.stride, &mut dxq,
+        );
+
+        if tape.quantized {
+            let c = coeffs.expect("quantized layer has coeffs");
+            let qi = self.qconv_index(name);
+            // weight path: STE + tanh/max backward, coefficient grads
+            let mut dw = vec![0f32; tape.wq.len()];
+            quant::ebs_weight_backward(&gwq, &c.cw[qi], &self.bits, &tape.wtape, &mut dw, &mut grads.dcw[qi]);
+            grads.add(format!("state/params/{name}/w"), dw);
+            // activation path: STE + clip backward, α + coefficient grads
+            let mut dx = Vec::new();
+            let mut dalpha = 0f32;
+            quant::ebs_act_backward(
+                &dxq, &tape.x, &tape.xq, &c.cx[qi], tape.alpha, &self.bits, &mut dx, &mut dalpha,
+                &mut grads.dcx[qi],
+            );
+            grads.add(format!("state/alphas/{name}"), vec![dalpha]);
+            Ok(need_dx.then_some(dx))
+        } else {
+            grads.add(format!("state/params/{name}/w"), gwq);
+            Ok(need_dx.then_some(dxq))
+        }
+    }
+
+    /// Full backward from `dlogits`; returns parameter/α grads by state
+    /// path plus per-layer branch-coefficient grads.
+    pub fn backward(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        tape: &Tape,
+        dlogits: &[f32],
+    ) -> Result<Grads> {
+        let l = self.desc.qconv_names.len();
+        let n = self.bits.len();
+        let mut grads = Grads {
+            by_path: HashMap::new(),
+            dcw: vec![vec![0f32; n]; if coeffs.is_some() { l } else { 0 }],
+            dcx: vec![vec![0f32; n]; if coeffs.is_some() { l } else { 0 }],
+        };
+        let batch = tape.batch;
+        let co = self.desc.blocks.last().map(|b| b.c2.out_ch).unwrap_or(self.desc.stem.out_ch);
+        let last = tape.blocks.last().expect("network has blocks");
+        let (feat_h, feat_w) = (last.c2.oh, last.c2.ow);
+        let npos = feat_h * feat_w;
+
+        // classifier
+        let fc_w = state.get("state/params/fc/w")?.as_f32()?;
+        let mut dfc_w = vec![0f32; fc_w.len()];
+        let mut dfc_b = vec![0f32; self.num_classes];
+        let mut dpooled = Vec::new();
+        ops::fc_backward(
+            dlogits, &tape.pooled, batch, co, self.num_classes, fc_w, &mut dfc_w, &mut dfc_b,
+            &mut dpooled,
+        );
+        grads.add("state/params/fc/w".into(), dfc_w);
+        grads.add("state/params/fc/b".into(), dfc_b);
+        let mut dh = Vec::new();
+        ops::gap_backward(&dpooled, batch, npos, co, &mut dh);
+
+        // residual blocks, reverse order
+        for (bi, b) in self.desc.blocks.iter().enumerate().rev() {
+            let bt = &tape.blocks[bi];
+            // ReLU at the block output
+            for (d, &o) in dh.iter_mut().zip(&bt.out) {
+                if o <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            let dsum = dh; // gradient at (y2 + ident)
+            // c2 branch
+            let mut dy1 = self
+                .conv_layer_backward(state, &b.c2, coeffs, &bt.c2, &dsum, batch, true, &mut grads)?
+                .expect("dx requested");
+            // ReLU between c1 and c2 (c2's input is c1's post-ReLU output)
+            for (d, &o) in dy1.iter_mut().zip(&bt.c2.x) {
+                if o <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            let mut dx_block = self
+                .conv_layer_backward(state, &b.c1, coeffs, &bt.c1, &dy1, batch, true, &mut grads)?
+                .expect("dx requested");
+            // identity branch
+            match (&b.shortcut, &bt.sc) {
+                (Some(sd), Some(sct)) => {
+                    let dsc = self
+                        .conv_layer_backward(state, sd, coeffs, sct, &dsum, batch, true, &mut grads)?
+                        .expect("dx requested");
+                    for (d, g) in dx_block.iter_mut().zip(&dsc) {
+                        *d += g;
+                    }
+                }
+                _ => {
+                    for (d, g) in dx_block.iter_mut().zip(&dsum) {
+                        *d += g;
+                    }
+                }
+            }
+            dh = dx_block;
+        }
+
+        // stem: ReLU mask (stem output is the first block's c1 input)
+        let stem_out = &tape.blocks[0].c1.x;
+        for (d, &o) in dh.iter_mut().zip(stem_out) {
+            if o <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        self.conv_layer_backward(
+            state, &self.desc.stem, None, &tape.stem, &dh, batch, false, &mut grads,
+        )?;
+        Ok(grads)
+    }
+}

@@ -1,0 +1,32 @@
+//! Native CPU search backend (DESIGN.md §11).
+//!
+//! A pure-Rust implementation of the step-graph semantics that
+//! `python/compile/steps.py` exports as HLO artifacts, so the paper's
+//! Algorithm 1 — EBS meta-weight sharing with strengths optimized
+//! directly against Eq. 9/10 — runs (and is CI-verified) end-to-end on
+//! machines with no PJRT runtime and no artifacts.
+//!
+//! Module map (paper equation → implementation):
+//!
+//! | module      | implements                                                |
+//! |-------------|-----------------------------------------------------------|
+//! | [`models`]  | model registry + synthesized [`Manifest`]s (geometry, FLOPs tables, state spec) |
+//! | [`quant`]   | Eq. 1a-1c/3/6/17 aggregated quantization fwd + STE backward; Eq. 5/8 softmax & Gumbel-softmax coefficient maps |
+//! | [`ops`]     | SAME conv fwd/bwd (im2col adjoints), train-mode BN through batch stats, GAP, classifier, CE + label-refinery KL |
+//! | [`graph`]   | the supernet forward tape + full hand-written backward (Eq. 7 network, Eq. 18-19 gradients) |
+//! | [`optim`]   | Eq. 10 SGD-momentum (decay-masked) and Eq. 9 Adam on [`StateVec`] leaves |
+//! | [`backend`] | graph-name dispatch implementing [`crate::runtime::Backend`] |
+//!
+//! [`Manifest`]: crate::runtime::Manifest
+//! [`StateVec`]: crate::runtime::StateVec
+
+pub mod backend;
+pub mod graph;
+pub mod models;
+pub mod ops;
+pub mod optim;
+pub mod quant;
+
+pub use backend::NativeBackend;
+pub use graph::{Coeffs, NativeNet};
+pub use models::{lookup, registry_names, synthesize_manifest, NativeModelCfg};

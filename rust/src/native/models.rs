@@ -1,0 +1,318 @@
+//! Rust-side model registry + manifest synthesis for the native backend.
+//!
+//! Mirrors `python/compile/model.py::MODELS` so the native CPU backend
+//! can run without any exported artifact directory: geometry is looked
+//! up by name, the layer table is rebuilt with the exact
+//! `model.conv_inventory` logic ([`NetDesc::from_geometry`]), and a
+//! full [`Manifest`] — including the FLOPs tables the coordinator and
+//! reports read — is synthesized in memory.  The synthesized manifest
+//! carries no `graphs` entries (there are no HLO files); the native
+//! backend interprets graph names directly.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use crate::coordinator::flops::MIXED_DIVISOR;
+use crate::models::NetDesc;
+use crate::runtime::{LeafSpec, Manifest, StageDesc};
+
+/// The paper's candidate bitwidth set B = {1,…,5} (§5 Implementation).
+pub const DEFAULT_BITS: [u32; 5] = [1, 2, 3, 4, 5];
+
+/// PACT clip initialization (paper §B.3).
+pub const DEFAULT_ALPHA_INIT: f32 = 6.0;
+
+/// Static description of one model variant (mirror of `model.ModelCfg`).
+#[derive(Debug, Clone)]
+pub struct NativeModelCfg {
+    pub name: &'static str,
+    pub image: [usize; 3],
+    pub num_classes: usize,
+    pub stem_channels: usize,
+    pub stages: Vec<StageDesc>,
+    pub batch_size: usize,
+}
+
+fn stage(channels: usize, blocks: usize, stride: usize) -> StageDesc {
+    StageDesc { channels, blocks, stride }
+}
+
+fn cifar_resnet(name: &'static str, n: usize, batch: usize) -> NativeModelCfg {
+    NativeModelCfg {
+        name,
+        image: [32, 32, 3],
+        num_classes: 10,
+        stem_channels: 16,
+        stages: vec![stage(16, n, 1), stage(32, n, 2), stage(64, n, 2)],
+        batch_size: batch,
+    }
+}
+
+/// Look up a model variant by name (`model.py` registry parity).
+pub fn lookup(name: &str) -> Option<NativeModelCfg> {
+    Some(match name {
+        "resnet8_tiny" => NativeModelCfg {
+            name: "resnet8_tiny",
+            image: [16, 16, 3],
+            num_classes: 10,
+            stem_channels: 8,
+            stages: vec![stage(8, 1, 1), stage(16, 1, 2), stage(32, 1, 2)],
+            batch_size: 16,
+        },
+        "resnet20_synth" => cifar_resnet("resnet20_synth", 3, 32),
+        "resnet32_synth" => cifar_resnet("resnet32_synth", 5, 32),
+        "resnet56_synth" => cifar_resnet("resnet56_synth", 9, 32),
+        "resnet18_synth" => NativeModelCfg {
+            name: "resnet18_synth",
+            image: [32, 32, 3],
+            num_classes: 40,
+            stem_channels: 32,
+            stages: vec![stage(32, 2, 1), stage(64, 2, 2), stage(128, 2, 2), stage(256, 2, 2)],
+            batch_size: 16,
+        },
+        "resnet34_synth" => NativeModelCfg {
+            name: "resnet34_synth",
+            image: [32, 32, 3],
+            num_classes: 40,
+            stem_channels: 32,
+            stages: vec![stage(32, 3, 1), stage(64, 4, 2), stage(128, 6, 2), stage(256, 3, 2)],
+            batch_size: 16,
+        },
+        _ => return None,
+    })
+}
+
+/// Every registered variant name; [`lookup`] must resolve each (unit
+/// tested below, so the list and the match arms cannot drift apart).
+const REGISTRY: [&str; 6] = [
+    "resnet8_tiny",
+    "resnet20_synth",
+    "resnet32_synth",
+    "resnet56_synth",
+    "resnet18_synth",
+    "resnet34_synth",
+];
+
+/// Names of all registered variants (for error messages / docs).
+pub fn registry_names() -> &'static [&'static str] {
+    &REGISTRY
+}
+
+/// State-spec construction: the canonical flattened leaf order mirrors
+/// `aot.py`'s pytree flattening (sorted dict keys at every level), so a
+/// native checkpoint and an artifact checkpoint of the same model list
+/// leaves in the same order.
+fn state_spec(net: &NetDesc, n_bits: usize) -> Vec<LeafSpec> {
+    let f32_leaf = |path: String, shape: Vec<usize>| LeafSpec {
+        path,
+        shape,
+        dtype: crate::runtime::DType::F32,
+    };
+
+    let mut qnames: Vec<String> = net.qconv_names.clone();
+    qnames.sort();
+
+    // params group keys: every conv/fc + "bn_<conv>" for non-fc layers.
+    struct P {
+        key: String,
+        leaves: Vec<(String, Vec<usize>)>,
+    }
+    let mut params: Vec<P> = Vec::new();
+    for l in net.inventory() {
+        if l.kind == "fc" {
+            params.push(P {
+                key: l.name.clone(),
+                leaves: vec![
+                    ("b".into(), vec![l.out_ch]),
+                    ("w".into(), vec![l.in_ch, l.out_ch]),
+                ],
+            });
+            continue;
+        }
+        params.push(P {
+            key: l.name.clone(),
+            leaves: vec![("w".into(), vec![l.ksize, l.ksize, l.in_ch, l.out_ch])],
+        });
+        params.push(P {
+            key: format!("bn_{}", l.name),
+            leaves: vec![("beta".into(), vec![l.out_ch]), ("gamma".into(), vec![l.out_ch])],
+        });
+    }
+    params.sort_by(|a, b| a.key.cmp(&b.key));
+
+    let mut bn: Vec<(String, usize)> = net
+        .inventory()
+        .iter()
+        .filter(|l| l.kind != "fc")
+        .map(|l| (l.name.clone(), l.out_ch))
+        .collect();
+    bn.sort();
+
+    let mut spec = Vec::new();
+    // 1. alphas (scalar per qconv, sorted by name)
+    for n in &qnames {
+        spec.push(f32_leaf(format!("state/alphas/{n}"), vec![]));
+    }
+    // 2. arch: r then s (sorted keys "r" < "s"), each sorted by layer
+    for group in ["r", "s"] {
+        for n in &qnames {
+            spec.push(f32_leaf(format!("state/arch/{group}/{n}"), vec![n_bits]));
+        }
+    }
+    // 3. bn running stats: per conv sorted, leaves mean < var
+    for (n, ch) in &bn {
+        spec.push(f32_leaf(format!("state/bn/{n}/mean"), vec![*ch]));
+        spec.push(f32_leaf(format!("state/bn/{n}/var"), vec![*ch]));
+    }
+    // 4. opt: adam ("m" < "t" < "v") then mom — "adam" < "mom".
+    for group in ["r", "s"] {
+        for n in &qnames {
+            spec.push(f32_leaf(format!("state/opt/adam/m/{group}/{n}"), vec![n_bits]));
+        }
+    }
+    spec.push(f32_leaf("state/opt/adam/t".into(), vec![]));
+    for group in ["r", "s"] {
+        for n in &qnames {
+            spec.push(f32_leaf(format!("state/opt/adam/v/{group}/{n}"), vec![n_bits]));
+        }
+    }
+    for n in &qnames {
+        spec.push(f32_leaf(format!("state/opt/mom/alphas/{n}"), vec![]));
+    }
+    for p in &params {
+        for (leaf, shape) in &p.leaves {
+            spec.push(f32_leaf(
+                format!("state/opt/mom/params/{}/{leaf}", p.key),
+                shape.clone(),
+            ));
+        }
+    }
+    // 5. params
+    for p in &params {
+        for (leaf, shape) in &p.leaves {
+            spec.push(f32_leaf(format!("state/params/{}/{leaf}", p.key), shape.clone()));
+        }
+    }
+    spec
+}
+
+/// Synthesize a full [`Manifest`] for a registered model.  Semantically
+/// identical to loading `manifest.json` produced by `aot.py` for the
+/// same variant, minus the `graphs` table (the native backend needs no
+/// HLO files) and the python-side RNG (native init uses `util::Rng`).
+pub fn synthesize_manifest(cfg: &NativeModelCfg) -> Result<Manifest> {
+    let net = NetDesc::from_geometry(cfg.image, cfg.stem_channels, &cfg.stages, cfg.num_classes);
+    let layers: Vec<_> = net.inventory().into_iter().cloned().collect();
+    let fp_macs: u64 = layers.iter().filter(|l| l.kind != "qconv").map(|l| l.macs).sum();
+    let qconv_macs: HashMap<String, u64> = layers
+        .iter()
+        .filter(|l| l.kind == "qconv")
+        .map(|l| (l.name.clone(), l.macs))
+        .collect();
+    let total_macs: u64 = layers.iter().map(|l| l.macs).sum();
+    let qmac_sum: u64 = qconv_macs.values().sum();
+    let bits: Vec<u32> = DEFAULT_BITS.to_vec();
+    let uniform_mflops: HashMap<u32, f64> = bits
+        .iter()
+        .map(|&b| {
+            let cost = fp_macs as f64 + qmac_sum as f64 * (b * b) as f64 / MIXED_DIVISOR;
+            (b, cost / 1e6)
+        })
+        .collect();
+    if net.qconv_names.is_empty() {
+        bail!("model {} has no quantized convs", cfg.name);
+    }
+    let spec = state_spec(&net, bits.len());
+    Ok(Manifest {
+        model: cfg.name.to_string(),
+        dir: std::path::PathBuf::new(),
+        batch_size: cfg.batch_size,
+        image: cfg.image,
+        num_classes: cfg.num_classes,
+        bits,
+        alpha_init: DEFAULT_ALPHA_INIT,
+        stem_channels: cfg.stem_channels,
+        stages: cfg.stages.clone(),
+        qconv_layers: net.qconv_names.clone(),
+        layers,
+        fp_macs,
+        qconv_macs,
+        fp32_mflops: total_macs as f64 / 1e6,
+        uniform_mflops,
+        state_spec: spec,
+        graphs: HashMap::new(),
+        dnas_state_spec: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FlopsModel;
+
+    #[test]
+    fn every_registry_name_resolves_and_roundtrips() {
+        for name in registry_names() {
+            let cfg = lookup(name)
+                .unwrap_or_else(|| panic!("registry_names lists '{name}' but lookup misses it"));
+            assert_eq!(cfg.name, *name);
+        }
+    }
+
+    #[test]
+    fn synthesized_manifest_passes_topology_parity() {
+        for name in registry_names() {
+            let cfg = lookup(name).unwrap();
+            let m = synthesize_manifest(&cfg).unwrap();
+            // NetDesc::from_manifest runs the structural parity check.
+            let net = NetDesc::from_manifest(&m).unwrap();
+            assert_eq!(net.qconv_names, m.qconv_layers, "{name}");
+            assert!(m.fp_macs > 0 && m.fp32_mflops > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn uniform_mflops_table_matches_flops_model() {
+        let m = synthesize_manifest(&lookup("resnet8_tiny").unwrap()).unwrap();
+        let f = FlopsModel::from_manifest(&m).unwrap();
+        for &b in &m.bits {
+            let got = m.uniform_mflops[&b];
+            let want = f.uniform_mflops(b);
+            assert!((got - want).abs() < 1e-9, "bit {b}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn state_spec_is_complete_and_unique() {
+        let m = synthesize_manifest(&lookup("resnet8_tiny").unwrap()).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for l in &m.state_spec {
+            assert!(seen.insert(l.path.clone()), "duplicate leaf {}", l.path);
+        }
+        // every qconv owns alpha, arch r/s, adam m/v, momentum, weights, bn
+        for n in &m.qconv_layers {
+            for p in [
+                format!("state/alphas/{n}"),
+                format!("state/arch/r/{n}"),
+                format!("state/arch/s/{n}"),
+                format!("state/opt/adam/m/r/{n}"),
+                format!("state/opt/adam/v/s/{n}"),
+                format!("state/opt/mom/alphas/{n}"),
+                format!("state/opt/mom/params/{n}/w"),
+                format!("state/params/{n}/w"),
+                format!("state/params/bn_{n}/gamma"),
+                format!("state/bn/{n}/mean"),
+            ] {
+                assert!(seen.contains(&p), "missing leaf {p}");
+            }
+        }
+        for p in [
+            "state/params/stem/w",
+            "state/params/fc/w",
+            "state/params/fc/b",
+            "state/opt/adam/t",
+        ] {
+            assert!(seen.contains(p), "missing leaf {p}");
+        }
+    }
+}

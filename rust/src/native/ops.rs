@@ -1,0 +1,516 @@
+//! Dense f32 forward/backward primitives for the native backend.
+//!
+//! Layout conventions match the HLO graphs and the BD engine: NHWC
+//! activations, HWIO weights (flattened `s × co`, `s = k·k·ci` in
+//! (kh, kw, ci) order), XLA SAME padding via [`same_pad`].  Backward
+//! passes are the exact transposes the autodiff of `steps.py` produces:
+//! convolution (dX via col2im of dY·Wᵀ, dW via P·dY), train-mode batch
+//! norm with gradients *through* the batch statistics, global average
+//! pooling, the linear classifier, and softmax cross-entropy (+ the
+//! label-refinery KL term of §B.2).
+
+use crate::bd::im2col::{im2col_batch_into, same_pad, Patches};
+
+/// out[n][co] = Σ_s patches[s][n] · w[s][co] (the conv-as-GEMM forward).
+pub fn conv_forward(p: &Patches, w: &[f32], co: usize, out: &mut Vec<f32>) {
+    assert_eq!(w.len(), p.s * co);
+    out.clear();
+    out.resize(p.n * co, 0.0);
+    for s_idx in 0..p.s {
+        let wrow = &w[s_idx * co..(s_idx + 1) * co];
+        let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
+        for j in 0..p.n {
+            let pv = prow[j];
+            if pv == 0.0 {
+                continue;
+            }
+            let orow = &mut out[j * co..(j + 1) * co];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += pv * wv;
+            }
+        }
+    }
+}
+
+/// dW[s][co] = Σ_j patches[s][j] · dY[j][co].
+pub fn conv_backward_w(p: &Patches, dy: &[f32], co: usize, dw: &mut [f32]) {
+    assert_eq!(dy.len(), p.n * co);
+    assert_eq!(dw.len(), p.s * co);
+    for s_idx in 0..p.s {
+        let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
+        let drow = &mut dw[s_idx * co..(s_idx + 1) * co];
+        for j in 0..p.n {
+            let pv = prow[j];
+            if pv == 0.0 {
+                continue;
+            }
+            let dyrow = &dy[j * co..(j + 1) * co];
+            for (d, &g) in drow.iter_mut().zip(dyrow) {
+                *d += pv * g;
+            }
+        }
+    }
+}
+
+/// dX from dY: dPatch[s][j] = Σ_co w[s][co]·dY[j][co], scattered back
+/// through the im2col geometry (the exact adjoint of
+/// [`im2col_batch_into`]'s gather, including SAME padding drops).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_backward_x(
+    dy: &[f32],
+    w: &[f32],
+    batch: usize,
+    h: usize,
+    wd: usize,
+    ci: usize,
+    co: usize,
+    k: usize,
+    stride: usize,
+    dx: &mut [f32],
+) {
+    let (oh, pad_top, _) = same_pad(h, k, stride);
+    let (ow, pad_left, _) = same_pad(wd, k, stride);
+    let n1 = oh * ow;
+    assert_eq!(dy.len(), batch * n1 * co);
+    assert_eq!(dx.len(), batch * h * wd * ci);
+    dx.fill(0.0);
+    let img_sz = h * wd * ci;
+    for b in 0..batch {
+        let dxi = &mut dx[b * img_sz..(b + 1) * img_sz];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let col = b * n1 + oy * ow + ox;
+                let dyrow = &dy[col * co..(col + 1) * co];
+                for kh in 0..k {
+                    let iy = (oy * stride + kh) as isize - pad_top as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let ix = (ox * stride + kw) as isize - pad_left as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let dst = ((iy as usize) * wd + ix as usize) * ci;
+                        let wrow_base = (kh * k + kw) * ci;
+                        for c in 0..ci {
+                            let wrow = &w[(wrow_base + c) * co..(wrow_base + c + 1) * co];
+                            let mut acc = 0f32;
+                            for (&wv, &g) in wrow.iter().zip(dyrow) {
+                                acc += wv * g;
+                            }
+                            dxi[dst + c] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gather im2col patches (shared scratch-friendly wrapper).
+#[allow(clippy::too_many_arguments)]
+pub fn patches_of(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    k: usize,
+    stride: usize,
+    p: &mut Patches,
+) {
+    im2col_batch_into(x, batch, h, w, ci, k, stride, p);
+}
+
+pub const BN_MOMENTUM: f32 = 0.9;
+pub const BN_EPS: f32 = 1e-5;
+
+/// Train-mode batch-norm tape: normalized values + per-channel inv-std.
+#[derive(Debug, Clone, Default)]
+pub struct BnTape {
+    pub xhat: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+/// Train-mode BN over an NHWC buffer laid out `n × co` (n = B·H·W).
+/// Writes y in place of nothing — returns y; fills the tape and the new
+/// running stats (momentum 0.9, biased batch variance, matching
+/// `layers.batch_norm`).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_forward_train(
+    x: &[f32],
+    co: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    run_mean: &[f32],
+    run_var: &[f32],
+    y: &mut Vec<f32>,
+    tape: &mut BnTape,
+    new_mean: &mut Vec<f32>,
+    new_var: &mut Vec<f32>,
+) {
+    let n = x.len() / co;
+    assert_eq!(x.len(), n * co);
+    let mut mean = vec![0f64; co];
+    for row in x.chunks_exact(co) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut var = vec![0f64; co];
+    for row in x.chunks_exact(co) {
+        for c in 0..co {
+            let d = row[c] as f64 - mean[c];
+            var[c] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= n as f64;
+    }
+    tape.inv_std.clear();
+    tape.inv_std
+        .extend(var.iter().map(|&v| 1.0 / ((v as f32 + BN_EPS).sqrt())));
+    tape.xhat.clear();
+    tape.xhat.resize(x.len(), 0.0);
+    y.clear();
+    y.resize(x.len(), 0.0);
+    for (i, row) in x.chunks_exact(co).enumerate() {
+        for c in 0..co {
+            let xh = (row[c] - mean[c] as f32) * tape.inv_std[c];
+            tape.xhat[i * co + c] = xh;
+            y[i * co + c] = gamma[c] * xh + beta[c];
+        }
+    }
+    new_mean.clear();
+    new_var.clear();
+    for c in 0..co {
+        new_mean.push(BN_MOMENTUM * run_mean[c] + (1.0 - BN_MOMENTUM) * mean[c] as f32);
+        new_var.push(BN_MOMENTUM * run_var[c] + (1.0 - BN_MOMENTUM) * var[c] as f32);
+    }
+}
+
+/// Eval-mode BN with running statistics (no tape).
+pub fn bn_forward_eval(
+    x: &[f32],
+    co: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    run_mean: &[f32],
+    run_var: &[f32],
+    y: &mut Vec<f32>,
+) {
+    y.clear();
+    y.resize(x.len(), 0.0);
+    let mut scale = vec![0f32; co];
+    let mut bias = vec![0f32; co];
+    for c in 0..co {
+        let g = gamma[c] / (run_var[c] + BN_EPS).sqrt();
+        scale[c] = g;
+        bias[c] = beta[c] - g * run_mean[c];
+    }
+    for (yrow, xrow) in y.chunks_exact_mut(co).zip(x.chunks_exact(co)) {
+        for c in 0..co {
+            yrow[c] = scale[c] * xrow[c] + bias[c];
+        }
+    }
+}
+
+/// Train-mode BN backward *through the batch statistics*:
+/// dx = γ·σ⁻¹·(dy − mean(dy) − x̂·mean(dy·x̂)); dγ = Σ dy·x̂; dβ = Σ dy.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_train(
+    dy: &[f32],
+    co: usize,
+    gamma: &[f32],
+    tape: &BnTape,
+    dx: &mut Vec<f32>,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let n = dy.len() / co;
+    let mut sum_dy = vec![0f64; co];
+    let mut sum_dyxh = vec![0f64; co];
+    for (i, row) in dy.chunks_exact(co).enumerate() {
+        for c in 0..co {
+            sum_dy[c] += row[c] as f64;
+            sum_dyxh[c] += row[c] as f64 * tape.xhat[i * co + c] as f64;
+        }
+    }
+    for c in 0..co {
+        dgamma[c] += sum_dyxh[c] as f32;
+        dbeta[c] += sum_dy[c] as f32;
+    }
+    let inv_n = 1.0 / n as f32;
+    dx.clear();
+    dx.resize(dy.len(), 0.0);
+    for (i, row) in dy.chunks_exact(co).enumerate() {
+        for c in 0..co {
+            let term = row[c]
+                - inv_n * sum_dy[c] as f32
+                - tape.xhat[i * co + c] * inv_n * sum_dyxh[c] as f32;
+            dx[i * co + c] = gamma[c] * tape.inv_std[c] * term;
+        }
+    }
+}
+
+/// Global average pool over each image's `n = oh·ow` positions:
+/// (B·n) × co activations → B × co pooled features.
+pub fn gap_forward(x: &[f32], batch: usize, n: usize, co: usize, pooled: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * n * co);
+    pooled.clear();
+    pooled.resize(batch * co, 0.0);
+    for b in 0..batch {
+        let prow = &mut pooled[b * co..(b + 1) * co];
+        for j in 0..n {
+            let row = &x[(b * n + j) * co..(b * n + j + 1) * co];
+            for (p, &v) in prow.iter_mut().zip(row) {
+                *p += v;
+            }
+        }
+        for p in prow.iter_mut() {
+            *p /= n as f32;
+        }
+    }
+}
+
+/// GAP backward: broadcast dpooled/n over the positions.
+pub fn gap_backward(dpooled: &[f32], batch: usize, n: usize, co: usize, dx: &mut Vec<f32>) {
+    dx.clear();
+    dx.resize(batch * n * co, 0.0);
+    let inv_n = 1.0 / n as f32;
+    for b in 0..batch {
+        let prow = &dpooled[b * co..(b + 1) * co];
+        for j in 0..n {
+            let row = &mut dx[(b * n + j) * co..(b * n + j + 1) * co];
+            for (d, &g) in row.iter_mut().zip(prow) {
+                *d = g * inv_n;
+            }
+        }
+    }
+}
+
+/// logits = pooled · W + b, W (in, classes) row-major.
+pub fn fc_forward(
+    pooled: &[f32],
+    batch: usize,
+    inf: usize,
+    classes: usize,
+    w: &[f32],
+    b: &[f32],
+    logits: &mut Vec<f32>,
+) {
+    logits.clear();
+    logits.resize(batch * classes, 0.0);
+    for bi in 0..batch {
+        let lrow = &mut logits[bi * classes..(bi + 1) * classes];
+        lrow.copy_from_slice(b);
+        let prow = &pooled[bi * inf..(bi + 1) * inf];
+        for (c, &p) in prow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let wrow = &w[c * classes..(c + 1) * classes];
+            for (l, &wv) in lrow.iter_mut().zip(wrow) {
+                *l += p * wv;
+            }
+        }
+    }
+}
+
+/// FC backward: dW += pooledᵀ·dlogits, db += Σ dlogits, dpooled = dlogits·Wᵀ.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_backward(
+    dlogits: &[f32],
+    pooled: &[f32],
+    batch: usize,
+    inf: usize,
+    classes: usize,
+    w: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dpooled: &mut Vec<f32>,
+) {
+    dpooled.clear();
+    dpooled.resize(batch * inf, 0.0);
+    for bi in 0..batch {
+        let drow = &dlogits[bi * classes..(bi + 1) * classes];
+        for (d, &g) in db.iter_mut().zip(drow) {
+            *d += g;
+        }
+        let prow = &pooled[bi * inf..(bi + 1) * inf];
+        let dprow = &mut dpooled[bi * inf..(bi + 1) * inf];
+        for c in 0..inf {
+            let wrow = &w[c * classes..(c + 1) * classes];
+            let dwrow = &mut dw[c * classes..(c + 1) * classes];
+            let p = prow[c];
+            let mut acc = 0f32;
+            for i in 0..classes {
+                dwrow[i] += p * drow[i];
+                acc += wrow[i] * drow[i];
+            }
+            dprow[c] = acc;
+        }
+    }
+}
+
+/// Row-wise softmax probabilities (max-subtracted for stability).
+pub fn softmax_rows(logits: &[f32], batch: usize, classes: usize, probs: &mut Vec<f32>) {
+    probs.clear();
+    probs.resize(batch * classes, 0.0);
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let prow = &mut probs[b * classes..(b + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for (p, &l) in prow.iter_mut().zip(row) {
+            *p = (l - m).exp();
+            z += *p;
+        }
+        for p in prow.iter_mut() {
+            *p /= z;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy with integer labels (`layers.cross_entropy`).
+pub fn cross_entropy(logits: &[f32], labels: &[i32], classes: usize) -> f32 {
+    let batch = labels.len();
+    let mut total = 0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln();
+        total += (lse - row[labels[b] as usize]) as f64;
+    }
+    (total / batch as f64) as f32
+}
+
+/// KL(teacher ‖ student) averaged over the batch (`layers.distill_loss`).
+pub fn distill_loss(logits: &[f32], teacher: &[f32], batch: usize, classes: usize) -> f32 {
+    let mut ps = Vec::new();
+    let mut pt = Vec::new();
+    softmax_rows(logits, batch, classes, &mut ps);
+    softmax_rows(teacher, batch, classes, &mut pt);
+    let mut total = 0f64;
+    for i in 0..batch * classes {
+        if pt[i] > 0.0 {
+            total += (pt[i] as f64) * ((pt[i] as f64).ln() - (ps[i] as f64).max(1e-30).ln());
+        }
+    }
+    (total / batch as f64) as f32
+}
+
+/// Number of correct top-1 predictions.
+pub fn correct_count(logits: &[f32], labels: &[i32], classes: usize) -> f32 {
+    labels
+        .iter()
+        .enumerate()
+        .filter(|(b, &lab)| {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let am = row
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            am == lab as usize
+        })
+        .count() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bn_train_normalizes_and_backprops_zero_for_uniform_dy() {
+        // x with per-channel mean 2 / values {1,3}; gamma=1, beta=0.
+        let x = vec![1.0f32, 3.0, 3.0, 1.0]; // n=4 rows? co=1, n=4
+        let (mut y, mut tape) = (Vec::new(), BnTape::default());
+        let (mut nm, mut nv) = (Vec::new(), Vec::new());
+        bn_forward_train(&x, 1, &[1.0], &[0.0], &[0.0], &[1.0], &mut y, &mut tape, &mut nm, &mut nv);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((nm[0] - 0.1 * 2.0).abs() < 1e-6); // 0.9·0 + 0.1·2
+        // constant upstream gradient is annihilated by the mean-subtraction
+        let dy = vec![0.7f32; 4];
+        let mut dx = Vec::new();
+        let (mut dg, mut db) = (vec![0f32], vec![0f32]);
+        bn_backward_train(&dy, 1, &[1.0], &tape, &mut dx, &mut dg, &mut db);
+        assert!(dx.iter().all(|d| d.abs() < 1e-6), "{dx:?}");
+        assert!((db[0] - 2.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_backward_x_is_adjoint_of_forward() {
+        // <conv(x), dy> == <x, conv_backward_x(dy)> — the defining
+        // property of the transpose, checked on random small shapes.
+        let mut rng = crate::util::Rng::new(0xADJ0);
+        for _ in 0..10 {
+            let (b, h, w, ci, co, k) = (2usize, 5usize, 4usize, 3usize, 2usize, 3usize);
+            let stride = 1 + rng.below(2);
+            let x: Vec<f32> = (0..b * h * w * ci).map(|_| rng.normal()).collect();
+            let wts: Vec<f32> = (0..k * k * ci * co).map(|_| rng.normal()).collect();
+            let mut p = Patches::empty();
+            patches_of(&x, b, h, w, ci, k, stride, &mut p);
+            let mut y = Vec::new();
+            conv_forward(&p, &wts, co, &mut y);
+            let dy: Vec<f32> = (0..y.len()).map(|_| rng.normal()).collect();
+            let mut dx = vec![0f32; x.len()];
+            conv_backward_x(&dy, &wts, b, h, w, ci, co, k, stride, &mut dx);
+            let lhs: f64 = y.iter().zip(&dy).map(|(&a, &g)| (a * g) as f64).sum();
+            let rhs: f64 = x.iter().zip(&dx).map(|(&a, &g)| (a * g) as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0),
+                "adjoint mismatch {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_backward_w_matches_finite_difference() {
+        let mut rng = crate::util::Rng::new(0xD1FF);
+        let (b, h, w, ci, co, k, stride) = (1usize, 4usize, 4usize, 2usize, 2usize, 3usize, 1usize);
+        let x: Vec<f32> = (0..b * h * w * ci).map(|_| rng.normal()).collect();
+        let wts: Vec<f32> = (0..k * k * ci * co).map(|_| 0.5 * rng.normal()).collect();
+        let dy: Vec<f32> = (0..b * h * w * co).map(|_| rng.normal()).collect();
+        let mut p = Patches::empty();
+        patches_of(&x, b, h, w, ci, k, stride, &mut p);
+        let mut dw = vec![0f32; wts.len()];
+        conv_backward_w(&p, &dy, co, &mut dw);
+        let loss = |wv: &[f32]| -> f64 {
+            let mut y = Vec::new();
+            conv_forward(&p, wv, co, &mut y);
+            y.iter().zip(&dy).map(|(&a, &g)| (a * g) as f64).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, 3, 7, wts.len() - 1] {
+            let mut wp = wts.clone();
+            wp[idx] += eps;
+            let mut wm = wts.clone();
+            wm[idx] -= eps;
+            let num = (loss(&wp) - loss(&wm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dw[idx] as f64).abs() < 1e-2 * num.abs().max(1.0),
+                "dw[{idx}] {num} vs {}",
+                dw[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn ce_and_softmax_consistency() {
+        let logits = vec![1.0f32, 2.0, 3.0, 0.0, 0.0, 0.0];
+        let labels = vec![2i32, 1];
+        let loss = cross_entropy(&logits, &labels, 3);
+        let mut probs = Vec::new();
+        softmax_rows(&logits, 2, 3, &mut probs);
+        let manual = -((probs[2]).ln() + (probs[4]).ln()) / 2.0;
+        assert!((loss - manual).abs() < 1e-5);
+        assert_eq!(correct_count(&logits, &labels, 3), 1.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Native optimizers — Rust mirror of `python/compile/optim.py`,
+//! operating directly on [`StateVec`] leaves so the native backend's
+//! state layout stays interchangeable with artifact checkpoints.
+//!
+//! * Weight phase (Eq. 10): heavy-ball SGD `v' = 0.9·v + (g + wd·mask·p)`,
+//!   `p' = p − lr·v'` over every `state/params/*` and `state/alphas/*`
+//!   leaf.  The decay mask follows `model.decay_mask`: 1.0 on conv/fc
+//!   `w` leaves, 0.0 on BN affine and the fc bias; α leaves are decayed
+//!   (python applies `sgd_momentum` to them with the default all-ones
+//!   mask).
+//! * Arch phase (Eq. 9): Adam(β₁=0.9, β₂=0.999, ε=1e-8) with bias
+//!   correction over `state/arch/{r,s}/*`, moments in
+//!   `state/opt/adam/{m,v}/...` and the shared f32 step counter
+//!   `state/opt/adam/t`.
+//!
+//! Leaves without a gradient entry still receive the weight-decay +
+//! momentum update (their gradient is zero), exactly like `jax.grad`
+//! returning zero cotangents.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::StateVec;
+
+pub const MOMENTUM: f32 = 0.9;
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// `model.decay_mask` parity: decay conv/fc weights, skip BN affine and
+/// biases; every α is decayed.
+fn decay_factor(path: &str) -> f32 {
+    if let Some(rest) = path.strip_prefix("state/params/") {
+        let mut it = rest.rsplitn(2, '/');
+        let leaf = it.next().unwrap_or("");
+        let group = it.next().unwrap_or("");
+        if !group.starts_with("bn_") && leaf == "w" {
+            return 1.0;
+        }
+        return 0.0;
+    }
+    if path.starts_with("state/alphas/") {
+        return 1.0;
+    }
+    0.0
+}
+
+/// SGD-momentum update of all `state/params/*` + `state/alphas/*`
+/// leaves.  `grads` maps state paths to dense gradients (missing ⇒ 0).
+pub fn sgd_momentum_step(
+    state: &mut StateVec,
+    grads: &HashMap<String, Vec<f32>>,
+    lr: f32,
+    weight_decay: f32,
+) -> Result<()> {
+    let paths: Vec<String> = state
+        .spec
+        .iter()
+        .filter(|l| l.path.starts_with("state/params/") || l.path.starts_with("state/alphas/"))
+        .map(|l| l.path.clone())
+        .collect();
+    for path in paths {
+        let vel_path = if let Some(rest) = path.strip_prefix("state/params/") {
+            format!("state/opt/mom/params/{rest}")
+        } else {
+            let rest = path.strip_prefix("state/alphas/").unwrap();
+            format!("state/opt/mom/alphas/{rest}")
+        };
+        let mask = decay_factor(&path);
+        let g = grads.get(&path);
+        let vi = state.idx(&vel_path)?;
+        let pi = state.idx(&path)?;
+        // split-borrow the two leaves
+        let (a, b) = if vi < pi {
+            let (lo, hi) = state.tensors.split_at_mut(pi);
+            (&mut lo[vi], &mut hi[0])
+        } else {
+            let (lo, hi) = state.tensors.split_at_mut(vi);
+            (&mut hi[0], &mut lo[pi])
+        };
+        let vel = a.as_f32_mut()?;
+        let p = b.as_f32_mut()?;
+        for j in 0..p.len() {
+            let gj = g.map(|v| v[j]).unwrap_or(0.0) + weight_decay * mask * p[j];
+            let v_new = MOMENTUM * vel[j] + gj;
+            vel[j] = v_new;
+            p[j] -= lr * v_new;
+        }
+    }
+    Ok(())
+}
+
+/// Adam update of the architecture strengths.  `grads` maps
+/// `state/arch/{r,s}/<name>` paths to gradients; leaves without an
+/// entry get a zero gradient (their moments still decay).
+pub fn adam_step(
+    state: &mut StateVec,
+    grads: &HashMap<String, Vec<f32>>,
+    lr: f32,
+) -> Result<()> {
+    let t_new = {
+        let t = state.get_mut("state/opt/adam/t")?.as_f32_mut()?;
+        t[0] += 1.0;
+        t[0]
+    };
+    let bc1 = 1.0 - ADAM_B1.powf(t_new);
+    let bc2 = 1.0 - ADAM_B2.powf(t_new);
+    let paths: Vec<String> = state
+        .spec
+        .iter()
+        .filter(|l| l.path.starts_with("state/arch/"))
+        .map(|l| l.path.clone())
+        .collect();
+    for path in paths {
+        let rest = path.strip_prefix("state/arch/").unwrap().to_string();
+        let m_path = format!("state/opt/adam/m/{rest}");
+        let v_path = format!("state/opt/adam/v/{rest}");
+        let g = grads.get(&path).cloned();
+        let n = state.get(&path)?.len();
+        let g = g.unwrap_or_else(|| vec![0.0; n]);
+        // three disjoint leaves: update moments first, then the param.
+        let (m_new, v_new): (Vec<f32>, Vec<f32>) = {
+            let m = state.get_mut(&m_path)?.as_f32_mut()?;
+            let m_new: Vec<f32> = m
+                .iter()
+                .zip(&g)
+                .map(|(&mv, &gv)| ADAM_B1 * mv + (1.0 - ADAM_B1) * gv)
+                .collect();
+            m.copy_from_slice(&m_new);
+            let v = state.get_mut(&v_path)?.as_f32_mut()?;
+            let v_new: Vec<f32> = v
+                .iter()
+                .zip(&g)
+                .map(|(&vv, &gv)| ADAM_B2 * vv + (1.0 - ADAM_B2) * gv * gv)
+                .collect();
+            v.copy_from_slice(&v_new);
+            (m_new, v_new)
+        };
+        let p = state.get_mut(&path)?.as_f32_mut()?;
+        for j in 0..p.len() {
+            let m_hat = m_new[j] / bc1;
+            let v_hat = v_new[j] / bc2;
+            p[j] -= lr * m_hat / (v_hat.sqrt() + ADAM_EPS);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_mask_parity() {
+        assert_eq!(decay_factor("state/params/s0b0c1/w"), 1.0);
+        assert_eq!(decay_factor("state/params/stem/w"), 1.0);
+        assert_eq!(decay_factor("state/params/fc/w"), 1.0);
+        assert_eq!(decay_factor("state/params/fc/b"), 0.0);
+        assert_eq!(decay_factor("state/params/bn_s0b0c1/gamma"), 0.0);
+        assert_eq!(decay_factor("state/params/bn_stem/beta"), 0.0);
+        assert_eq!(decay_factor("state/alphas/s0b0c1"), 1.0);
+        assert_eq!(decay_factor("state/arch/r/s0b0c1"), 0.0);
+    }
+}

@@ -1,0 +1,433 @@
+//! EBS aggregated quantization for the native backend — Eq. 6/17
+//! forward, hand-written backward with the straight-through estimator
+//! (Eq. 3), and the softmax / Gumbel-softmax coefficient maps (Eq. 5/8).
+//!
+//! Semantics are pinned to `python/compile/kernels/ref.py` (the repo's
+//! quantization oracle):
+//!
+//! * `quantize_b` rounds half *up* and rescales by `1/(2^b − 1)`; its
+//!   STE gradient is 1 everywhere.
+//! * Weight normalization (Eq. 1a) is `tanh(w)/(2·max|tanh(w)|) + 0.5`;
+//!   the backward differentiates *through* the max (a rank-1 correction
+//!   at the argmax element), exactly as `jax.grad` of the reference.
+//! * Activation quantization (Eq. 1b/16) clips to `[0, α]` with a
+//!   learnable PACT α; the α gradient is `Σp·q(u) + P·([x>α] − u)` per
+//!   element, which reduces to PACT's `1[x>α]` for exact codes.
+//! * The branch coefficients enter *linearly* (Eq. 6/17), so their
+//!   gradients are exact inner products against the per-branch
+//!   quantized views — no STE needed.
+
+use crate::quant::round_half_up;
+
+/// Eq. 1c with de-quantize rescale: `round_half_up(u·levels)/levels`.
+#[inline]
+pub fn quantize_b(u: f32, bits: u32) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    round_half_up(u * levels) / levels
+}
+
+/// Tape for the weight-quantization backward.
+#[derive(Debug, Clone, Default)]
+pub struct WTape {
+    /// tanh(w) per element.
+    pub t: Vec<f32>,
+    /// max |tanh(w)| (denominator of Eq. 1a), floored at f32::MIN_POSITIVE.
+    pub t_max: f32,
+    /// index of the element attaining the max (gradient routing).
+    pub argmax: usize,
+}
+
+/// Eq. 6: wq = Σ_i p_i · (2·quantize_b(norm(w), b_i) − 1).
+pub fn ebs_weight_forward(
+    w: &[f32],
+    p: &[f32],
+    bits: &[u32],
+    wq: &mut Vec<f32>,
+    tape: &mut WTape,
+) {
+    assert_eq!(p.len(), bits.len());
+    tape.t.clear();
+    tape.t.reserve(w.len());
+    let (mut t_max, mut argmax) = (0f32, 0usize);
+    for (j, &v) in w.iter().enumerate() {
+        let t = v.tanh();
+        if t.abs() > t_max {
+            t_max = t.abs();
+            argmax = j;
+        }
+        tape.t.push(t);
+    }
+    tape.t_max = t_max.max(f32::MIN_POSITIVE);
+    tape.argmax = argmax;
+    wq.clear();
+    wq.reserve(w.len());
+    let denom = 2.0 * tape.t_max;
+    for &t in &tape.t {
+        let norm = t / denom + 0.5;
+        let mut agg = 0f32;
+        for (i, &b) in bits.iter().enumerate() {
+            agg += p[i] * (2.0 * quantize_b(norm, b) - 1.0);
+        }
+        wq.push(agg);
+    }
+}
+
+/// Backward of [`ebs_weight_forward`]: STE through `quantize_b`, true
+/// gradients through tanh and the max.  Accumulates into `dw`/`dp`.
+pub fn ebs_weight_backward(
+    gwq: &[f32],
+    p: &[f32],
+    bits: &[u32],
+    tape: &WTape,
+    dw: &mut [f32],
+    dp: &mut [f32],
+) {
+    let p_sum: f32 = p.iter().sum();
+    let denom = 2.0 * tape.t_max;
+    // branch-coefficient gradients: dp_i = Σ_j gwq_j · (2 q_i(norm_j) − 1)
+    for (j, &g) in gwq.iter().enumerate() {
+        if g == 0.0 {
+            continue;
+        }
+        let norm = tape.t[j] / denom + 0.5;
+        for (i, &b) in bits.iter().enumerate() {
+            dp[i] += g * (2.0 * quantize_b(norm, b) - 1.0);
+        }
+    }
+    // gnorm_j = 2·P·gwq_j ;  g_t_j = gnorm_j / (2T) ;  max correction.
+    let mut g_t_dot_t = 0f64; // Σ_j gnorm_j · t_j  (for the dT term)
+    for (j, &g) in gwq.iter().enumerate() {
+        let gnorm = 2.0 * p_sum * g;
+        g_t_dot_t += (gnorm * tape.t[j]) as f64;
+        let g_t = gnorm / denom;
+        dw[j] += g_t * (1.0 - tape.t[j] * tape.t[j]);
+    }
+    // dT = −Σ gnorm·t / (2T²), routed to the argmax element via sign(t*).
+    let g_t_max = -(g_t_dot_t as f32) / (2.0 * tape.t_max * tape.t_max);
+    let j = tape.argmax;
+    let sign = if tape.t[j] >= 0.0 { 1.0 } else { -1.0 };
+    dw[j] += sign * g_t_max * (1.0 - tape.t[j] * tape.t[j]);
+}
+
+/// Eq. 17: xq = α · Σ_i p_i · quantize_b(clip(x,0,α)/α, b_i).
+///
+/// A non-positive α (possible transiently under SGD) clips everything
+/// to zero instead of producing NaNs — the same convention as
+/// `quant::quantize_acts`.
+pub fn ebs_act_forward(x: &[f32], p: &[f32], alpha: f32, bits: &[u32], xq: &mut Vec<f32>) {
+    assert_eq!(p.len(), bits.len());
+    xq.clear();
+    if alpha <= 0.0 {
+        xq.resize(x.len(), 0.0);
+        return;
+    }
+    xq.reserve(x.len());
+    for &v in x {
+        let u = v.clamp(0.0, alpha) / alpha;
+        let mut agg = 0f32;
+        for (i, &b) in bits.iter().enumerate() {
+            agg += p[i] * quantize_b(u, b);
+        }
+        xq.push(alpha * agg);
+    }
+}
+
+/// Backward of [`ebs_act_forward`].  `xq` is the forward output (the
+/// Σp·q sum is recovered as xq/α instead of being stored per branch).
+/// Accumulates into `dalpha`/`dp`; overwrites `dx`.
+#[allow(clippy::too_many_arguments)]
+pub fn ebs_act_backward(
+    gxq: &[f32],
+    x: &[f32],
+    xq: &[f32],
+    p: &[f32],
+    alpha: f32,
+    bits: &[u32],
+    dx: &mut Vec<f32>,
+    dalpha: &mut f32,
+    dp: &mut [f32],
+) {
+    let p_sum: f32 = p.iter().sum();
+    dx.clear();
+    dx.resize(x.len(), 0.0);
+    if alpha <= 0.0 {
+        // forward was identically zero — nothing differentiates.
+        return;
+    }
+    let mut da = 0f64;
+    for (j, &g) in gxq.iter().enumerate() {
+        let v = x[j];
+        let inside = v > 0.0 && v < alpha;
+        if inside {
+            dx[j] = g * p_sum;
+        }
+        if g != 0.0 {
+            let u = v.clamp(0.0, alpha) / alpha;
+            let over = if v > alpha { 1.0 } else { 0.0 };
+            let s = xq[j] / alpha; // Σ_i p_i q_i(u)
+            da += (g * (s + p_sum * (over - u))) as f64;
+            for (i, &b) in bits.iter().enumerate() {
+                dp[i] += g * alpha * quantize_b(u, b);
+            }
+        }
+    }
+    *dalpha += da as f32;
+}
+
+/// Stable softmax into `out`.
+pub fn softmax(v: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(v.len());
+    let m = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0f32;
+    for &x in v {
+        let e = (x - m).exp();
+        out.push(e);
+        z += e;
+    }
+    for o in out.iter_mut() {
+        *o /= z;
+    }
+}
+
+/// Softmax VJP: gv += p ⊙ (gp − ⟨gp, p⟩).
+pub fn softmax_backward(p: &[f32], gp: &[f32], gv: &mut [f32]) {
+    let dot: f32 = p.iter().zip(gp).map(|(&a, &b)| a * b).sum();
+    for i in 0..p.len() {
+        gv[i] += p[i] * (gp[i] - dot);
+    }
+}
+
+/// Eq. 8: softmax((log_softmax(r) + g)/τ).
+pub fn gumbel_softmax(r: &[f32], g: &[f32], tau: f32, out: &mut Vec<f32>) {
+    let mut sm = Vec::new();
+    softmax(r, &mut sm);
+    let z: Vec<f32> = sm
+        .iter()
+        .zip(g)
+        .map(|(&p, &gi)| (p.max(f32::MIN_POSITIVE).ln() + gi) / tau)
+        .collect();
+    softmax(&z, out);
+}
+
+/// VJP of [`gumbel_softmax`] w.r.t. `r`: through softmax(z), the 1/τ
+/// scale, and log_softmax(r).  `p` is the forward output.
+pub fn gumbel_softmax_backward(r: &[f32], p: &[f32], gp: &[f32], tau: f32, gr: &mut [f32]) {
+    // gz = p ⊙ (gp − ⟨gp, p⟩)
+    let n = r.len();
+    let mut gz = vec![0f32; n];
+    softmax_backward(p, gp, &mut gz);
+    // ga = gz / τ ; log_softmax backward: gr += ga − softmax(r)·Σga
+    let mut sm = Vec::new();
+    softmax(r, &mut sm);
+    let sum_ga: f32 = gz.iter().map(|&v| v / tau).sum();
+    for i in 0..n {
+        gr[i] += gz[i] / tau - sm[i] * sum_ga;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant_weights, quantize_acts};
+
+    const BITS: [u32; 5] = [1, 2, 3, 4, 5];
+
+    #[test]
+    fn onehot_weight_agg_matches_fake_quant() {
+        let mut rng = crate::util::Rng::new(0x3B);
+        let w: Vec<f32> = (0..200).map(|_| rng.normal()).collect();
+        for (i, &b) in BITS.iter().enumerate() {
+            let mut p = [0f32; 5];
+            p[i] = 1.0;
+            let (mut wq, mut tape) = (Vec::new(), WTape::default());
+            ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+            let reference = fake_quant_weights(&w, b);
+            for (a, r) in wq.iter().zip(&reference) {
+                assert!((a - r).abs() < 1e-6, "bit {b}: {a} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn onehot_act_agg_matches_code_path() {
+        let mut rng = crate::util::Rng::new(0x77);
+        let alpha = 4.0f32;
+        let x: Vec<f32> = (0..200).map(|_| rng.normal() * 3.0).collect();
+        for (i, &b) in BITS.iter().enumerate() {
+            let mut p = [0f32; 5];
+            p[i] = 1.0;
+            let mut xq = Vec::new();
+            ebs_act_forward(&x, &p, alpha, &BITS, &mut xq);
+            let mut codes = vec![0u8; x.len()];
+            let scale = quantize_acts(&x, alpha, b, &mut codes);
+            for (a, &c) in xq.iter().zip(&codes) {
+                assert!((a - c as f32 * scale).abs() < 1e-5, "bit {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_backward_matches_ste_surrogate_numerically() {
+        // With STE, the analytic dw equals the true gradient of the
+        // smooth surrogate L(w) = Σ_j gwq_j · P · (2·norm_j(w) − 1).
+        let mut rng = crate::util::Rng::new(0x5E5);
+        let w: Vec<f32> = (0..24).map(|_| rng.normal()).collect();
+        let p = [0.1f32, 0.2, 0.3, 0.25, 0.15];
+        let gwq: Vec<f32> = (0..w.len()).map(|_| rng.normal()).collect();
+        let (mut wq, mut tape) = (Vec::new(), WTape::default());
+        ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+        let mut dw = vec![0f32; w.len()];
+        let mut dp = vec![0f32; 5];
+        ebs_weight_backward(&gwq, &p, &BITS, &tape, &mut dw, &mut dp);
+        let p_sum: f32 = p.iter().sum();
+        let surrogate = |wv: &[f32]| -> f64 {
+            let mut t_max = 0f32;
+            let t: Vec<f32> = wv.iter().map(|&v| v.tanh()).collect();
+            for &tv in &t {
+                t_max = t_max.max(tv.abs());
+            }
+            t.iter()
+                .zip(&gwq)
+                .map(|(&tv, &g)| {
+                    let norm = tv / (2.0 * t_max) + 0.5;
+                    (g * p_sum * (2.0 * norm - 1.0)) as f64
+                })
+                .sum()
+        };
+        let eps = 1e-3f32;
+        for idx in 0..w.len() {
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let num = (surrogate(&wp) - surrogate(&wm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dw[idx] as f64).abs() < 2e-2 * num.abs().max(1.0),
+                "dw[{idx}] numeric {num} vs analytic {}",
+                dw[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn coefficient_gradients_are_exact_inner_products() {
+        // wq and xq are linear in p → central differences are exact.
+        let mut rng = crate::util::Rng::new(0xC0EF);
+        let w: Vec<f32> = (0..30).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..30).map(|_| rng.normal() * 2.0).collect();
+        let p = [0.3f32, 0.1, 0.2, 0.25, 0.15];
+        let gout: Vec<f32> = (0..30).map(|_| rng.normal()).collect();
+        let alpha = 3.0f32;
+
+        let (mut wq, mut tape) = (Vec::new(), WTape::default());
+        ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+        let (mut dw, mut dpw) = (vec![0f32; 30], vec![0f32; 5]);
+        ebs_weight_backward(&gout, &p, &BITS, &tape, &mut dw, &mut dpw);
+
+        let mut xq = Vec::new();
+        ebs_act_forward(&x, &p, alpha, &BITS, &mut xq);
+        let (mut dx, mut da, mut dpx) = (Vec::new(), 0f32, vec![0f32; 5]);
+        ebs_act_backward(&gout, &x, &xq, &p, alpha, &BITS, &mut dx, &mut da, &mut dpx);
+
+        let eps = 1e-3f32;
+        for i in 0..5 {
+            let mut pp = p;
+            pp[i] += eps;
+            let mut pm = p;
+            pm[i] -= eps;
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            let mut tp = WTape::default();
+            ebs_weight_forward(&w, &pp, &BITS, &mut a, &mut tp);
+            ebs_weight_forward(&w, &pm, &BITS, &mut b, &mut tp);
+            let num_w: f64 = a
+                .iter()
+                .zip(&b)
+                .zip(&gout)
+                .map(|((&hi, &lo), &g)| ((hi - lo) * g) as f64)
+                .sum::<f64>()
+                / (2.0 * eps as f64);
+            assert!((num_w - dpw[i] as f64).abs() < 1e-3 * num_w.abs().max(1.0), "dpw[{i}]");
+
+            ebs_act_forward(&x, &pp, alpha, &BITS, &mut a);
+            ebs_act_forward(&x, &pm, alpha, &BITS, &mut b);
+            let num_x: f64 = a
+                .iter()
+                .zip(&b)
+                .zip(&gout)
+                .map(|((&hi, &lo), &g)| ((hi - lo) * g) as f64)
+                .sum::<f64>()
+                / (2.0 * eps as f64);
+            assert!((num_x - dpx[i] as f64).abs() < 1e-3 * num_x.abs().max(1.0), "dpx[{i}]");
+        }
+    }
+
+    #[test]
+    fn act_alpha_gradient_hand_case() {
+        // bits=[2], p onehot on 2 bits, α=2, x = [−1, 0.3, 2.5, 1.0]:
+        //   u = [0, 0.15, 1, 0.5], q(u) = [0, 0, 1, 2/3]
+        //   dα_j = q(u)·1 + ([x>α] − u) → [0, −0.15, 1, 1/6]
+        let x = [-1.0f32, 0.3, 2.5, 1.0];
+        let p = [0.0f32, 1.0, 0.0, 0.0, 0.0];
+        let mut xq = Vec::new();
+        ebs_act_forward(&x, &p, 2.0, &BITS, &mut xq);
+        assert_eq!(xq, vec![0.0, 0.0, 2.0, 2.0 * 2.0 / 3.0]);
+        let gxq = [1.0f32; 4];
+        let (mut dx, mut da, mut dp) = (Vec::new(), 0f32, vec![0f32; 5]);
+        ebs_act_backward(&gxq, &x, &xq, &p, 2.0, &BITS, &mut dx, &mut da, &mut dp);
+        assert_eq!(dx, vec![0.0, 1.0, 0.0, 1.0]);
+        let want = 0.0 + (0.0 - 0.15) + 1.0 + (2.0 / 3.0 - 0.5);
+        assert!((da - want).abs() < 1e-6, "dα {da} vs {want}");
+    }
+
+    #[test]
+    fn gumbel_softmax_reduces_to_softmax_at_zero_noise() {
+        let r = [0.5f32, -1.0, 2.0, 0.0, 0.3];
+        let g = [0f32; 5];
+        let mut sm = Vec::new();
+        softmax(&r, &mut sm);
+        let mut gs = Vec::new();
+        gumbel_softmax(&r, &g, 1.0, &mut gs);
+        for (a, b) in gs.iter().zip(&sm) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_and_gumbel_backward_match_numeric() {
+        let r = [0.2f32, -0.7, 1.1, 0.0, 0.4];
+        let g = [0.3f32, -0.2, 0.5, 1.0, -0.8];
+        let gp = [1.0f32, -2.0, 0.5, 0.0, 0.7];
+        let tau = 0.7f32;
+        let loss_sm = |rv: &[f32]| -> f64 {
+            let mut p = Vec::new();
+            softmax(rv, &mut p);
+            p.iter().zip(&gp).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let loss_gs = |rv: &[f32]| -> f64 {
+            let mut p = Vec::new();
+            gumbel_softmax(rv, &g, tau, &mut p);
+            p.iter().zip(&gp).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let mut p = Vec::new();
+        softmax(&r, &mut p);
+        let mut gr_sm = vec![0f32; 5];
+        softmax_backward(&p, &gp, &mut gr_sm);
+        let mut pg = Vec::new();
+        gumbel_softmax(&r, &g, tau, &mut pg);
+        let mut gr_gs = vec![0f32; 5];
+        gumbel_softmax_backward(&r, &pg, &gp, tau, &mut gr_gs);
+        let eps = 1e-3f32;
+        for i in 0..5 {
+            let mut rp = r;
+            rp[i] += eps;
+            let mut rm = r;
+            rm[i] -= eps;
+            let n1 = (loss_sm(&rp) - loss_sm(&rm)) / (2.0 * eps as f64);
+            assert!((n1 - gr_sm[i] as f64).abs() < 2e-3, "softmax d[{i}] {n1} vs {}", gr_sm[i]);
+            let n2 = (loss_gs(&rp) - loss_gs(&rm)) / (2.0 * eps as f64);
+            assert!((n2 - gr_gs[i] as f64).abs() < 2e-3, "gumbel d[{i}] {n2} vs {}", gr_gs[i]);
+        }
+    }
+}

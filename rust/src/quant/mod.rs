@@ -58,8 +58,19 @@ pub fn decode_weight(q: &QuantWeights, c: u8) -> f32 {
 
 /// Eq. 1b: clip to [0, α], quantize to `bits`; returns codes into `out`.
 /// The decode scale is `alpha / (2^bits − 1)`.
+///
+/// Edge case: `alpha <= 0` (a collapsed or still-uninitialized PACT
+/// clip) would divide by zero — `0/0 → NaN` codes at α = 0, and a
+/// panicking `clamp(0, α)` for α < 0.  The clip window is empty in both
+/// cases, so every activation maps to code 0 and the scale is 0.0
+/// (decode of every code is exactly 0); regression-tested in
+/// `tests/props.rs`.
 pub fn quantize_acts(x: &[f32], alpha: f32, bits: u32, out: &mut [u8]) -> f32 {
     let levels = ((1u32 << bits) - 1) as f32;
+    if alpha <= 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
     for (o, &v) in out.iter_mut().zip(x) {
         let clipped = v.clamp(0.0, alpha);
         *o = round_half_up(clipped / alpha * levels).clamp(0.0, levels) as u8;
@@ -117,5 +128,16 @@ mod tests {
         let scale = quantize_acts(&x, 6.0, 2, &mut codes);
         assert_eq!(codes, vec![0, 0, 2, 3, 3]); // 3/6*3 = 1.5 → 2 (half up)
         assert!((scale - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn act_codes_degenerate_alpha_is_all_zero_not_nan() {
+        let x = [-1.0f32, 0.5, 2.0];
+        for alpha in [0.0f32, -0.5] {
+            let mut codes = vec![7u8; x.len()];
+            let scale = quantize_acts(&x, alpha, 3, &mut codes);
+            assert_eq!(codes, vec![0, 0, 0], "alpha={alpha}");
+            assert_eq!(scale, 0.0, "alpha={alpha}");
+        }
     }
 }

@@ -16,9 +16,45 @@ use crate::runtime::Engine;
 
 use super::table_fmt::Table;
 
+/// Ablation table skeleton — shared by [`run`] and the golden
+/// formatting tests.
+pub fn skeleton(model: &str, target: f64) -> Table {
+    Table::new(
+        &format!("Ablation — FLOPs penalty λ (Eq. 9), {model} @ target {target:.2} MFLOPs"),
+        &[
+            "lambda", "mode", "E[FLOPs] (M)", "selected (M)", "over target",
+            "soft val acc (%)", "mean W bits", "mean A bits",
+        ],
+    )
+}
+
+/// One ablation row's formatted cells (pure; golden-tested).
+#[allow(clippy::too_many_arguments)]
+pub fn row_cells(
+    lam: f64,
+    stochastic: bool,
+    final_eflops: f64,
+    exact_mflops: f64,
+    target: f64,
+    best_val_acc: f64,
+    mean_w: f64,
+    mean_x: f64,
+) -> Vec<String> {
+    vec![
+        format!("{lam:.2}"),
+        if stochastic { "sto" } else { "det" }.into(),
+        format!("{final_eflops:.3}"),
+        format!("{exact_mflops:.3}"),
+        format!("{:+.1}%", 100.0 * (exact_mflops - target) / target),
+        format!("{:.1}", 100.0 * best_val_acc),
+        format!("{mean_w:.2}"),
+        format!("{mean_x:.2}"),
+    ]
+}
+
 /// Run the λ sweep.  Uses the tiny model unless the config overrides.
 pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
-    let mut engine = Engine::open(&cfg.model_dir())?;
+    let mut engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
     let flops = FlopsModel::from_manifest(&engine.manifest)?;
     let target = if cfg.search.target_mflops > 0.0 {
         cfg.search.target_mflops
@@ -29,16 +65,7 @@ pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
     let out_dir = cfg.out_dir.join(format!("ablation_{}", cfg.model));
     let mut logger = RunLogger::new(&out_dir, false)?;
 
-    let mut table = Table::new(
-        &format!(
-            "Ablation — FLOPs penalty λ (Eq. 9), {} @ target {:.2} MFLOPs",
-            cfg.model, target
-        ),
-        &[
-            "lambda", "mode", "E[FLOPs] (M)", "selected (M)", "over target",
-            "soft val acc (%)", "mean W bits", "mean A bits",
-        ],
-    );
+    let mut table = skeleton(&cfg.model, target);
 
     for &stochastic in &[false, true] {
         for &lam in lambdas {
@@ -56,16 +83,16 @@ pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
             let mut state = engine.init_state(cfg.seed)?;
             let res = run_search(&mut engine, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
             let (mw, mx) = res.selection.mean_bits();
-            table.row(vec![
-                format!("{lam:.2}"),
-                if stochastic { "sto" } else { "det" }.into(),
-                format!("{:.3}", res.final_eflops),
-                format!("{:.3}", res.exact_mflops),
-                format!("{:+.1}%", 100.0 * (res.exact_mflops - target) / target),
-                format!("{:.1}", 100.0 * res.best_val_acc),
-                format!("{mw:.2}"),
-                format!("{mx:.2}"),
-            ]);
+            table.row(row_cells(
+                lam,
+                stochastic,
+                res.final_eflops,
+                res.exact_mflops,
+                target,
+                res.best_val_acc,
+                mw,
+                mx,
+            ));
         }
     }
     table.write(&out_dir, "ablation_lambda")?;

@@ -23,9 +23,26 @@ use crate::runtime::Engine;
 
 use super::table_fmt::{mflops, pct, saving, Table};
 
+/// Table 1 skeleton (title + headers) — shared by [`run`] and the
+/// golden-file formatting tests in `tests/golden_reports.rs`.
+pub fn skeleton(model: &str) -> Table {
+    Table::new(
+        &format!("Table 1 — accuracy & computational cost, {model} on synthetic data"),
+        &["Method", "Precision", "Accuracy (%)", "FLOPs", "Saving"],
+    )
+}
+
+/// Fig. 5 series skeleton (method, mflops, accuracy triples).
+pub fn fig5_skeleton(model: &str) -> Table {
+    Table::new(
+        &format!("Fig. 5 — accuracy-FLOPs curve data, {model}"),
+        &["method", "mflops", "accuracy"],
+    )
+}
+
 /// Run the full Table 1 protocol for one model config.
 pub fn run(cfg: &RunConfig) -> Result<()> {
-    let mut engine = Engine::open(&cfg.model_dir())?;
+    let mut engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
     let flops = FlopsModel::from_manifest(&engine.manifest)?;
     let (train, test) = generate(&cfg.data.to_spec());
     let out_dir = cfg.out_dir.join(format!("table1_{}", cfg.model));
@@ -52,18 +69,9 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
     let with_random = cfg.doc.bool_or("table.random_rows", true);
     let distill_rows = cfg.doc.bool_or("table.distill_rows", false);
 
-    let mut table = Table::new(
-        &format!(
-            "Table 1 — accuracy & computational cost, {} on synthetic data",
-            cfg.model
-        ),
-        &["Method", "Precision", "Accuracy (%)", "FLOPs", "Saving"],
-    );
+    let mut table = skeleton(&cfg.model);
     // Fig. 5 series: (method, mflops, acc) triples, one CSV.
-    let mut fig5 = Table::new(
-        &format!("Fig. 5 — accuracy-FLOPs curve data, {}", cfg.model),
-        &["method", "mflops", "accuracy"],
-    );
+    let mut fig5 = fig5_skeleton(&cfg.model);
 
     // ---- Full precision row (also the initialization for everything).
     let mut fp_state = engine.init_state(cfg.seed)?;

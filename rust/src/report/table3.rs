@@ -15,22 +15,32 @@ use crate::runtime::Engine;
 
 use super::table_fmt::Table;
 
-/// Run on one artifact directory; appends rows for that batch size.
-pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path, iters: usize) -> Result<()> {
-    let mut table = Table::new(
-        &format!("Table 3 — search efficiency, {iters} iterations (CPU PJRT)"),
+/// Table 3 skeleton — shared by [`run`] and the golden formatting
+/// tests.  The execution backend is recorded per row (the Model
+/// column), since each model may resolve to PJRT artifacts or the
+/// native interpreter independently.
+pub fn skeleton(iters: usize) -> Table {
+    Table::new(
+        &format!("Table 3 — search efficiency, {iters} iterations (CPU)"),
         &[
             "Model", "Batch", "Method", "Time (s)", "s/iter",
             "Peak RSS (GB)", "State (MB)", "Meta-weight copies (MB)",
         ],
-    );
+    )
+}
+
+/// Run on one artifact directory; appends rows for that batch size.
+pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path, iters: usize) -> Result<()> {
+    let mut table = skeleton(iters);
     for model in models {
         let dir = artifacts.join(model);
-        if !dir.join("manifest.json").exists() {
-            eprintln!("[table3] skipping {model}: artifacts missing");
+        if !dir.join("manifest.json").exists() && crate::native::lookup(model).is_none() {
+            eprintln!("[table3] skipping {model}: artifacts missing and not in native registry");
             continue;
         }
+        // auto: PJRT artifacts when present, otherwise the native backend
         let mut engine = Engine::open(&dir)?;
+        let model_label = format!("{model} [{}]", engine.backend_name());
         let batch = engine.manifest.batch_size;
         let n_bits = engine.manifest.bits.len();
         let (one_copy, n_copies) = weight_copy_bytes(&engine, n_bits);
@@ -40,7 +50,7 @@ pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path
         let mut ustate = engine.init_state(1)?;
         let ucost = uniform_step_cost(&mut engine, &mut ustate, iters)?;
         table.row(vec![
-            model.clone(),
+            model_label.clone(),
             batch.to_string(),
             "Uniform QNN".into(),
             format!("{:.2}", ucost.0),
@@ -53,7 +63,7 @@ pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path
         let mut state = engine.init_state(1)?;
         let ebs = run_dnas_steps(&mut engine, "search_det", &mut state, iters, 7)?;
         table.row(vec![
-            model.clone(),
+            model_label.clone(),
             batch.to_string(),
             "EBS".into(),
             format!("{:.2}", ebs.total_seconds),
@@ -67,7 +77,7 @@ pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path
             let mut dstate = engine.init_dnas_state(1)?;
             let dnas = run_dnas_steps(&mut engine, "dnas_search", &mut dstate, iters, 7)?;
             table.row(vec![
-                model.clone(),
+                model_label.clone(),
                 batch.to_string(),
                 "DNAS".into(),
                 format!("{:.2}", dnas.total_seconds),
@@ -78,7 +88,7 @@ pub fn run(models: &[String], artifacts: &std::path::Path, out: &std::path::Path
             ]);
         } else {
             table.row(vec![
-                model.clone(),
+                model_label.clone(),
                 batch.to_string(),
                 "DNAS".into(),
                 "n/a (export with --dnas)".into(),

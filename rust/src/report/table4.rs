@@ -102,16 +102,33 @@ pub fn run(out: &Path, reps: usize, extended: bool) -> Result<()> {
     run_full(out, reps, extended, None)
 }
 
-/// Regenerate Table 4 plus the engine sweep (Table 4c); optionally emit
-/// the machine-readable JSON at `json_path`.
-pub fn run_full(out: &Path, reps: usize, extended: bool, json_path: Option<&Path>) -> Result<()> {
-    let mut table = Table::new(
+/// Table 4 skeleton — shared by [`run_full`] and the golden formatting
+/// tests in `tests/golden_reports.rs`.
+pub fn skeleton() -> Table {
+    Table::new(
         "Table 4 — BD latency per layer (x86-64 AND+POPCNT engine)",
         &[
             "Kernel", "In ch", "Out ch", "Stride", "W1-A1 (ms)", "W1-A2 (ms)",
             "ratio", "W2-A2 (ms)",
         ],
-    );
+    )
+}
+
+/// Table 4c (batched engine sweep) skeleton.
+pub fn sweep_skeleton(threads: usize) -> Table {
+    Table::new(
+        &format!("Table 4c — batched engine, serial vs tiled vs parallel ({threads} threads)"),
+        &[
+            "Shape", "M,K", "Batch", "serial ms/img", "tiled ms/img", "par ms/img",
+            "par speedup",
+        ],
+    )
+}
+
+/// Regenerate Table 4 plus the engine sweep (Table 4c); optionally emit
+/// the machine-readable JSON at `json_path`.
+pub fn run_full(out: &Path, reps: usize, extended: bool, json_path: Option<&Path>) -> Result<()> {
+    let mut table = skeleton();
     for shape in paper_layers() {
         let a = layer_latency_ms(&shape, 1, 1, reps);
         let b = layer_latency_ms(&shape, 1, 2, reps);
@@ -160,13 +177,7 @@ pub fn run_full(out: &Path, reps: usize, extended: bool, json_path: Option<&Path
     // Table 4c: serial vs tiled vs parallel at batch 1/8/32 — the
     // batched serving claim.  Per-image latencies so rows are comparable.
     let threads = auto_threads();
-    let mut sweep = Table::new(
-        &format!("Table 4c — batched engine, serial vs tiled vs parallel ({threads} threads)"),
-        &[
-            "Shape", "M,K", "Batch", "serial ms/img", "tiled ms/img", "par ms/img",
-            "par speedup",
-        ],
-    );
+    let mut sweep = sweep_skeleton(threads);
     let mut json_rows = Vec::new();
     let sweep_shapes =
         [LayerShape { k: 3, ci: 64, co: 64, stride: 1, hw: 14 }, LayerShape {

@@ -1,0 +1,96 @@
+//! The execution-backend abstraction (DESIGN.md §11).
+//!
+//! The coordinator drives step graphs through [`crate::runtime::Engine`];
+//! `Engine` owns the [`Manifest`] and dispatches every call to a
+//! [`Backend`]:
+//!
+//! * **pjrt** — compiles and executes the AOT HLO artifacts
+//!   (`runtime::engine::PjrtBackend`); requires real `xla` bindings.
+//! * **native** — interprets the same graph names in pure Rust
+//!   (`native::NativeBackend`); needs no artifacts at all, so Algorithm 1
+//!   runs (and is CI-tested) on any machine.
+//!
+//! `auto` resolution: PJRT when both the real bindings and an artifact
+//! directory are present, native otherwise.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::engine::Metrics;
+use super::manifest::Manifest;
+use super::state::StateVec;
+use super::tensor::Tensor;
+
+/// One execution backend for the step-graph protocol (DESIGN.md §7.1).
+pub trait Backend {
+    /// Short identifier shown in logs ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+
+    /// Fresh training state from a seed (the `init` graph).
+    fn init_state(&mut self, manifest: &Manifest, seed: i32) -> Result<StateVec>;
+
+    /// Fresh DNAS supernet state (artifacts exported with `--dnas`).
+    fn init_dnas_state(&mut self, manifest: &Manifest, seed: i32) -> Result<StateVec> {
+        let _ = seed;
+        bail!(
+            "backend '{}' has no DNAS supernet for model {}",
+            self.name(),
+            manifest.model
+        )
+    }
+
+    /// Warm a graph (compile/cache); a no-op for interpreters.
+    fn prepare(&mut self, manifest: &Manifest, graph: &str) -> Result<()>;
+
+    /// Execute one step graph against the state (+ io inputs), returning
+    /// `out/...` metrics plus the *execution-only* wall-clock the
+    /// backend measured — PJRT reports the device execute + readback
+    /// (excluding host-side input marshalling), native reports the
+    /// interpreter dispatch.  `Engine` accumulates this into
+    /// `exec_time`, keeping Table 3's s/iter comparable across PRs and
+    /// backends.
+    fn run(
+        &mut self,
+        manifest: &Manifest,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<(Metrics, Duration)>;
+}
+
+/// Backend selection for [`crate::runtime::Engine::open_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when available + artifacts exist, otherwise native.
+    #[default]
+    Auto,
+    /// Pure-Rust interpreter (no artifacts needed).
+    Native,
+    /// Compiled HLO artifacts via the PJRT bindings.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            other => bail!("unknown backend '{other}' (expected auto|native|pjrt)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+}

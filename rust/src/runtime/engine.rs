@@ -1,13 +1,18 @@
-//! PJRT execution engine: load HLO-text artifacts, compile once, run steps.
+//! Execution engine front-end: owns the manifest, dispatches to a
+//! [`Backend`] (PJRT artifacts or the native Rust interpreter), and
+//! keeps per-graph wall-clock accounting.
 //!
-//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! PJRT path mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `compile` → `execute`.  Graphs are
 //! compiled lazily on first use and cached for the process lifetime.
 //!
 //! The run protocol (DESIGN.md §7.1): the manifest lists each graph's
 //! flattened inputs/outputs; leaves whose path starts with `state/` are
 //! wired to the [`StateVec`], `in/...` leaves come from the per-call io
-//! map, `out/...` leaves are returned as metrics.
+//! map, `out/...` leaves are returned as metrics.  The native backend
+//! interprets the same graph names directly (DESIGN.md §11), so
+//! `Engine::open` works — and the full pipeline runs — on machines with
+//! neither artifacts nor a real PJRT runtime.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -15,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{Backend, BackendKind};
 use super::manifest::{GraphSpec, Manifest};
 use super::state::StateVec;
 use super::tensor::Tensor;
@@ -23,9 +29,10 @@ use super::tensor::Tensor;
 pub type Metrics = HashMap<String, Tensor>;
 
 /// Whether this build links a real PJRT backend.  The offline CI
-/// workspace links the API stub at `rust/xla-stub` (DESIGN.md §3), so
-/// artifact-driven tests/benches check this and skip gracefully instead
-/// of failing on [`Engine::open`].
+/// workspace links the API stub at `rust/xla-stub` (DESIGN.md §3);
+/// artifact-driven tests/benches (BD ↔ HLO parity at full fidelity)
+/// check this and skip, while everything step-graph-shaped now runs on
+/// the native backend instead.
 pub fn backend_available() -> bool {
     xla::BACKEND_AVAILABLE
 }
@@ -37,38 +44,170 @@ pub fn metric_f32(m: &Metrics, key: &str) -> Result<f32> {
         .item_f32()
 }
 
-/// One model's compiled artifact set.
+/// One model's execution engine: manifest + backend + profiling.
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative wall-clock spent inside `execute` per graph (profiling).
+    backend: Box<dyn Backend>,
+    /// Cumulative wall-clock spent inside `run` per graph (profiling).
     pub exec_time: HashMap<String, Duration>,
     pub exec_count: HashMap<String, u64>,
 }
 
 impl Engine {
-    /// Open the artifact directory for one model (e.g. `artifacts/resnet20_synth`).
-    /// Fails fast with a self-describing error when this build links the
-    /// offline `xla` stub — check [`backend_available`] to skip instead.
+    /// Open an engine for one model directory (e.g.
+    /// `artifacts/resnet20_synth`) with `auto` backend resolution:
+    /// PJRT when the real bindings and `manifest.json` are both
+    /// present, the native interpreter otherwise (synthesizing the
+    /// manifest from the model registry when no artifacts exist).
     pub fn open(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            manifest,
-            client,
-            executables: HashMap::new(),
-            exec_time: HashMap::new(),
-            exec_count: HashMap::new(),
-        })
+        Engine::open_with(dir, BackendKind::Auto)
     }
 
-    /// Compile (or fetch cached) a graph by name.
+    /// [`Engine::open`] with an explicit backend choice.
+    pub fn open_with(dir: &Path, kind: BackendKind) -> Result<Engine> {
+        let has_artifacts = dir.join("manifest.json").exists();
+        if has_artifacts {
+            let manifest = Manifest::load(dir)?;
+            let use_pjrt = match kind {
+                BackendKind::Pjrt => true,
+                BackendKind::Native => false,
+                BackendKind::Auto => backend_available(),
+            };
+            let backend: Box<dyn Backend> = if use_pjrt {
+                Box::new(PjrtBackend::new()?)
+            } else {
+                Box::new(crate::native::NativeBackend::from_manifest(&manifest)?)
+            };
+            return Ok(Engine::from_parts(manifest, backend));
+        }
+        if kind == BackendKind::Pjrt {
+            bail!(
+                "backend 'pjrt' requested but {} has no manifest.json — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let model = dir
+            .file_name()
+            .and_then(|s| s.to_str())
+            .with_context(|| format!("cannot infer model name from {}", dir.display()))?;
+        Engine::native(model)
+    }
+
+    /// Native engine straight from the model registry (no artifacts, no
+    /// files touched): `ebs search --backend native`, CI integration
+    /// tests, and any machine without a PJRT runtime.
+    pub fn native(model: &str) -> Result<Engine> {
+        let cfg = crate::native::models::lookup(model).with_context(|| {
+            format!(
+                "model '{model}' not in the native registry (known: {}); \
+                 export artifacts for custom geometries",
+                crate::native::models::registry_names().join(", ")
+            )
+        })?;
+        let manifest = crate::native::models::synthesize_manifest(&cfg)?;
+        let backend = Box::new(crate::native::NativeBackend::from_manifest(&manifest)?);
+        Ok(Engine::from_parts(manifest, backend))
+    }
+
+    fn from_parts(manifest: Manifest, backend: Box<dyn Backend>) -> Engine {
+        Engine {
+            manifest,
+            backend,
+            exec_time: HashMap::new(),
+            exec_count: HashMap::new(),
+        }
+    }
+
+    /// Which backend this engine dispatches to ("pjrt" / "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Compile (or fetch cached) a graph by name; no-op on native.
     pub fn prepare(&mut self, graph: &str) -> Result<()> {
+        self.backend.prepare(&self.manifest, graph)
+    }
+
+    /// Fresh state from the init graph.
+    pub fn init_state(&mut self, seed: i32) -> Result<StateVec> {
+        self.backend.init_state(&self.manifest, seed)
+    }
+
+    /// Fresh DNAS supernet state (requires artifacts exported with --dnas).
+    pub fn init_dnas_state(&mut self, seed: i32) -> Result<StateVec> {
+        self.backend.init_dnas_state(&self.manifest, seed)
+    }
+
+    /// Execute one graph: wire state + io inputs, write back state
+    /// outputs, return `out/...` metrics.  `exec_time` accumulates the
+    /// backend-reported execution-only duration (compilation and input
+    /// marshalling excluded — the pre-refactor profiling contract).
+    pub fn run(
+        &mut self,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        self.backend.prepare(&self.manifest, graph)?;
+        let (metrics, dt) = self.backend.run(&self.manifest, graph, state, io)?;
+        *self.exec_time.entry(graph.to_string()).or_default() += dt;
+        *self.exec_count.entry(graph.to_string()).or_default() += 1;
+        Ok(metrics)
+    }
+
+    /// Mean execution wall-clock for a graph, if it has run.
+    pub fn mean_exec_time(&self, graph: &str) -> Option<Duration> {
+        let total = self.exec_time.get(graph)?;
+        let n = *self.exec_count.get(graph)? as u32;
+        (n > 0).then(|| *total / n)
+    }
+}
+
+/// The compiled-artifact backend (real `xla` bindings required; with
+/// the offline stub every entry point fails fast with a self-describing
+/// error — check [`backend_available`]).
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client, executables: HashMap::new() })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn init_state(&mut self, manifest: &Manifest, seed: i32) -> Result<StateVec> {
+        let spec = manifest.state_spec.clone();
+        let mut state = StateVec::zeros(&spec);
+        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
+        let (m, _) = self.run(manifest, "init", &mut state, &io)?;
+        debug_assert!(m.is_empty());
+        Ok(state)
+    }
+
+    fn init_dnas_state(&mut self, manifest: &Manifest, seed: i32) -> Result<StateVec> {
+        let spec = manifest
+            .dnas_state_spec
+            .clone()
+            .context("manifest has no dnas_state_spec; re-export with --dnas")?;
+        let mut state = StateVec::zeros(&spec);
+        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
+        self.run(manifest, "dnas_init", &mut state, &io)?;
+        Ok(state)
+    }
+
+    fn prepare(&mut self, manifest: &Manifest, graph: &str) -> Result<()> {
         if self.executables.contains_key(graph) {
             return Ok(());
         }
-        let spec = self.manifest.graph(graph)?.clone();
+        let spec = manifest.graph(graph)?.clone();
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             spec.file
@@ -83,7 +222,7 @@ impl Engine {
             .with_context(|| format!("XLA compile of graph '{graph}'"))?;
         eprintln!(
             "[engine] compiled {}/{} in {:.2}s",
-            self.manifest.model,
+            manifest.model,
             graph,
             t0.elapsed().as_secs_f64()
         );
@@ -91,46 +230,21 @@ impl Engine {
         Ok(())
     }
 
-    /// Fresh state from the init graph.
-    pub fn init_state(&mut self, seed: i32) -> Result<StateVec> {
-        let spec = self.manifest.state_spec.clone();
-        let mut state = StateVec::zeros(&spec);
-        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
-        let m = self.run("init", &mut state, &io)?;
-        debug_assert!(m.is_empty());
-        Ok(state)
-    }
-
-    /// Fresh DNAS supernet state (requires artifacts exported with --dnas).
-    pub fn init_dnas_state(&mut self, seed: i32) -> Result<StateVec> {
-        let spec = self
-            .manifest
-            .dnas_state_spec
-            .clone()
-            .context("manifest has no dnas_state_spec; re-export with --dnas")?;
-        let mut state = StateVec::zeros(&spec);
-        let io = [("seed".to_string(), Tensor::scalar_i32(seed))];
-        self.run("dnas_init", &mut state, &io)?;
-        Ok(state)
-    }
-
-    /// Execute one graph: wire state + io inputs, write back state
-    /// outputs, return `out/...` metrics.
-    pub fn run(
+    fn run(
         &mut self,
+        manifest: &Manifest,
         graph: &str,
         state: &mut StateVec,
         io: &[(String, Tensor)],
-    ) -> Result<Metrics> {
-        self.prepare(graph)?;
-        let spec: &GraphSpec = self.manifest.graph(graph)?;
+    ) -> Result<(Metrics, std::time::Duration)> {
+        self.prepare(manifest, graph)?;
+        let spec: &GraphSpec = manifest.graph(graph)?;
         let io_map: HashMap<&str, &Tensor> =
             io.iter().map(|(k, v)| (k.as_str(), v)).collect();
 
         let mut literals = Vec::with_capacity(spec.inputs.len());
         for leaf in &spec.inputs {
-            let tensor = if let Some(stripped) = leaf.path.strip_prefix("state/") {
-                let _ = stripped;
+            let tensor = if leaf.path.starts_with("state/") {
                 &state.tensors[state.idx(&leaf.path)?]
             } else if let Some(name) = leaf.path.strip_prefix("in/") {
                 *io_map
@@ -150,15 +264,15 @@ impl Engine {
             literals.push(tensor.to_literal()?);
         }
 
+        // Execution-only region: device execute + root readback (input
+        // marshalling above stays outside, as it always has).
         let exe = self.executables.get(graph).expect("prepared above");
         let t0 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing graph '{graph}'"))?;
         let root = result[0][0].to_literal_sync()?;
-        let dt = t0.elapsed();
-        *self.exec_time.entry(graph.to_string()).or_default() += dt;
-        *self.exec_count.entry(graph.to_string()).or_default() += 1;
+        let exec_dt = t0.elapsed();
 
         // Graphs are lowered with return_tuple=True → single tuple root.
         let leaves = root.to_tuple()?;
@@ -182,13 +296,6 @@ impl Engine {
                 bail!("unknown output role for path '{}'", leaf.path);
             }
         }
-        Ok(metrics)
-    }
-
-    /// Mean execution wall-clock for a graph, if it has run.
-    pub fn mean_exec_time(&self, graph: &str) -> Option<Duration> {
-        let total = self.exec_time.get(graph)?;
-        let n = *self.exec_count.get(graph)? as u32;
-        (n > 0).then(|| *total / n)
+        Ok((metrics, exec_dt))
     }
 }

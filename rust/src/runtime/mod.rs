@@ -4,11 +4,13 @@
 //! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
 //! `client.compile` → `execute`, per /opt/xla-example/load_hlo.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod state;
 pub mod tensor;
 
+pub use backend::{Backend, BackendKind};
 pub use engine::{backend_available, metric_f32, Engine, Metrics};
 pub use manifest::{GraphSpec, LayerDesc, LeafSpec, Manifest, StageDesc};
 pub use state::StateVec;

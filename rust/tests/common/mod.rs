@@ -1,4 +1,4 @@
-//! Shared helpers for the artifact-driven integration tests.
+//! Shared helpers for the integration tests.
 
 use std::path::PathBuf;
 
@@ -8,13 +8,22 @@ pub fn artifacts_dir(model: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
 }
 
-/// Artifact-driven tests need both exported artifacts and a real PJRT
-/// backend; offline/CI builds link the `xla` stub (DESIGN.md §3), so
-/// skip gracefully in that case.
+/// Open an engine for `model` on whatever backend this build supports:
+/// PJRT when real bindings + artifacts exist, otherwise the native
+/// interpreter (synthesized manifest, no artifacts needed).  Never
+/// skips — the step-graph integration tests run everywhere since the
+/// native backend landed (DESIGN.md §11).
 #[allow(dead_code)]
-pub fn open_or_skip(model: &str) -> Option<Engine> {
+pub fn open_engine(model: &str) -> Engine {
+    Engine::open(&artifacts_dir(model)).expect("open engine (native fallback)")
+}
+
+/// Artifact-only entry point for tests that specifically need the real
+/// PJRT path (full-fidelity HLO execution); skips under the stub.
+#[allow(dead_code)]
+pub fn open_pjrt_or_skip(model: &str) -> Option<Engine> {
     if !ebs::runtime::backend_available() {
-        eprintln!("[skip] XLA backend unavailable (offline stub build)");
+        eprintln!("[skip] real XLA backend unavailable (offline stub build)");
         return None;
     }
     let dir = artifacts_dir(model);

@@ -1,0 +1,165 @@
+//! Golden-file tests for the report layer: the rendered Markdown/CSV of
+//! table1/table3/table4/ablation — titles, headers, alignment, and the
+//! shared cell formatters — are pinned against committed fixtures in
+//! `tests/golden/`, so formatting regressions show up as diffs instead
+//! of silently corrupting EXPERIMENTS.md regenerations.
+//!
+//! Regenerate after an intentional change with:
+//! `UPDATE_GOLDEN=1 cargo test --test golden_reports`
+
+use std::path::PathBuf;
+
+use ebs::report::table_fmt::{mflops, pct, saving, Table};
+use ebs::report::{ablation, table1, table3, table4};
+
+fn check_or_update(name: &str, content: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
+    if std::env::var("UPDATE_GOLDEN").ok().as_deref() == Some("1") {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, content).unwrap();
+        eprintln!("[golden] wrote {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden fixture {} ({e}); regenerate with UPDATE_GOLDEN=1",
+            path.display()
+        )
+    });
+    assert_eq!(
+        content,
+        want,
+        "rendered output for {name} drifted from the committed fixture; \
+         if intentional, regenerate with UPDATE_GOLDEN=1 cargo test --test golden_reports"
+    );
+}
+
+/// Representative Table 1 content (fixed values, production formatters).
+fn table1_sample() -> Table {
+    let mut t = table1::skeleton("resnet20_synth");
+    t.row(vec!["Full Prec.".into(), "32-bit".into(), pct(0.9012), mflops(41.22), "1.00x".into()]);
+    t.row(vec![
+        "Uniform QNN".into(),
+        "4 bits".into(),
+        pct(0.8907),
+        mflops(10.36),
+        saving(3.98),
+    ]);
+    t.row(vec!["EBS-Det".into(), "flexible".into(), pct(0.8984), mflops(6.21), saving(6.64)]);
+    t.row(vec![
+        "Random Search".into(),
+        "flexible".into(),
+        pct(0.8733),
+        mflops(6.42),
+        saving(6.42),
+    ]);
+    t
+}
+
+#[test]
+fn golden_table1_markdown_and_csv() {
+    let t = table1_sample();
+    check_or_update("table1.md", &t.to_markdown());
+    check_or_update("table1.csv", &t.to_csv());
+}
+
+#[test]
+fn golden_fig5_markdown() {
+    let mut t = table1::fig5_skeleton("resnet20_synth");
+    t.row(vec!["fp32".into(), "41.220".into(), "0.9012".into()]);
+    t.row(vec!["uniform4".into(), "10.360".into(), "0.8907".into()]);
+    t.row(vec!["ebs-det".into(), "6.210".into(), "0.8984".into()]);
+    check_or_update("fig5.md", &t.to_markdown());
+}
+
+#[test]
+fn golden_table3_markdown() {
+    let mut t = table3::skeleton(10);
+    t.row(vec![
+        "resnet8_tiny [native]".into(),
+        "16".into(),
+        "Uniform QNN".into(),
+        "1.92".into(),
+        "0.192".into(),
+        "0.41".into(),
+        "1.2".into(),
+        "0.09".into(),
+    ]);
+    t.row(vec![
+        "resnet8_tiny [native]".into(),
+        "16".into(),
+        "EBS".into(),
+        "2.48".into(),
+        "0.248".into(),
+        "0.44".into(),
+        "1.2".into(),
+        "0.09".into(),
+    ]);
+    t.row(vec![
+        "resnet8_tiny [native]".into(),
+        "16".into(),
+        "DNAS".into(),
+        "11.07".into(),
+        "1.107".into(),
+        "0.96".into(),
+        "5.8".into(),
+        "0.46".into(),
+    ]);
+    check_or_update("table3.md", &t.to_markdown());
+}
+
+#[test]
+fn golden_table4_markdown() {
+    let mut t = table4::skeleton();
+    t.row(vec![
+        "3".into(),
+        "64".into(),
+        "64".into(),
+        "1".into(),
+        "1.84".into(),
+        "3.61".into(),
+        "1.96x".into(),
+        "7.22".into(),
+    ]);
+    t.row(vec![
+        "3".into(),
+        "128".into(),
+        "128".into(),
+        "1".into(),
+        "1.77".into(),
+        "3.52".into(),
+        "1.99x".into(),
+        "7.04".into(),
+    ]);
+    t.row(vec![
+        "Bi-Real-18 body".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "30.1".into(),
+        "59.8".into(),
+        "1.99x".into(),
+        "-".into(),
+    ]);
+    check_or_update("table4.md", &t.to_markdown());
+
+    let mut sweep = table4::sweep_skeleton(8);
+    sweep.row(vec![
+        "3x3 64→64 @14²".into(),
+        "2,2".into(),
+        "8".into(),
+        "0.412".into(),
+        "0.287".into(),
+        "0.106".into(),
+        "3.89x".into(),
+    ]);
+    check_or_update("table4c.md", &sweep.to_markdown());
+}
+
+#[test]
+fn golden_ablation_markdown() {
+    let mut t = ablation::skeleton("resnet8_tiny", 0.16);
+    t.row(ablation::row_cells(0.05, false, 0.3012, 0.3371, 0.16, 0.4012, 4.21, 4.63));
+    t.row(ablation::row_cells(2.0, true, 0.1581, 0.1703, 0.16, 0.3807, 2.84, 3.12));
+    check_or_update("ablation_lambda.md", &t.to_markdown());
+}

@@ -1,0 +1,357 @@
+//! Native-backend correctness: finite-difference verification of the
+//! hand-written backward passes at the whole-network level, plus
+//! step-graph semantic invariants that pin the Rust interpreter to
+//! `python/compile/steps.py`.
+//!
+//! Gradient-check strategy: the FP path (no quantizers) is smooth
+//! almost everywhere, so full-vector central differences against the
+//! analytic gradient must agree to high cosine similarity (individual
+//! coordinates may straddle a ReLU kink; vector-level metrics are
+//! robust to that).  For the arch path, the branch coefficients enter
+//! the aggregation *linearly* (their own quantize inputs don't move
+//! with p), so dL/dr of the last block's conv is numerically checkable
+//! despite the STE.
+
+use ebs::coordinator::FlopsModel;
+use ebs::native::graph::Coeffs;
+use ebs::native::{quant, NativeNet};
+use ebs::runtime::{metric_f32, Engine, StateVec, Tensor};
+use ebs::util::Rng;
+
+mod common;
+use common::open_engine;
+
+fn small_batch(engine: &Engine, batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let [h, w, c] = engine.manifest.image;
+    let x: Vec<f32> = (0..batch * h * w * c).map(|_| rng.normal().abs()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(engine.manifest.num_classes) as i32).collect();
+    (x, y)
+}
+
+fn cosine(a: &[f32], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&y| y * y).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-30)
+}
+
+/// CE loss of an FP forward at the given state (batch statistics mode,
+/// updates discarded) — the scalar function the FP grad-check probes.
+fn fp_loss(net: &NativeNet, state: &StateVec, x: &[f32], y: &[i32], classes: usize) -> f64 {
+    let (tape, _) = net.forward(state, None, x, y.len(), true).unwrap();
+    ebs::native::ops::cross_entropy(&tape.logits, y, classes) as f64
+}
+
+/// Central differences at `indices` of one state leaf (strided subsets
+/// keep the wall-clock sane on the bigger conv tensors — the cosine
+/// over ~100 coordinates is signal enough).
+#[allow(clippy::too_many_arguments)]
+fn numeric_grad_at(
+    net: &NativeNet,
+    state: &StateVec,
+    path: &str,
+    indices: &[usize],
+    x: &[f32],
+    y: &[i32],
+    classes: usize,
+    eps: f32,
+) -> Vec<f64> {
+    let mut s = state.clone();
+    let mut out = Vec::with_capacity(indices.len());
+    for &j in indices {
+        let orig = s.get(path).unwrap().as_f32().unwrap()[j];
+        s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig + eps;
+        let hi = fp_loss(net, &s, x, y, classes);
+        s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig - eps;
+        let lo = fp_loss(net, &s, x, y, classes);
+        s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig;
+        out.push((hi - lo) / (2.0 * eps as f64));
+    }
+    out
+}
+
+/// Up to `cap` indices covering a leaf with an even stride.
+fn strided_indices(len: usize, cap: usize) -> Vec<usize> {
+    let stride = len.div_ceil(cap).max(1);
+    (0..len).step_by(stride).collect()
+}
+
+#[test]
+fn fp_backward_matches_finite_differences() {
+    let mut engine = open_engine("resnet8_tiny");
+    let net = NativeNet::from_manifest(&engine.manifest).unwrap();
+    let classes = engine.manifest.num_classes;
+    let state = engine.init_state(3).unwrap();
+    let mut rng = Rng::new(0xFD01);
+    let (x, y) = small_batch(&engine, 4, &mut rng);
+
+    // analytic: forward → dlogits = (softmax − onehot)/B → backward
+    let (tape, _) = net.forward(&state, None, &x, y.len(), true).unwrap();
+    let mut probs = Vec::new();
+    ebs::native::ops::softmax_rows(&tape.logits, y.len(), classes, &mut probs);
+    let inv_b = 1.0 / y.len() as f32;
+    let mut dlogits = vec![0f32; y.len() * classes];
+    for (b, &lab) in y.iter().enumerate() {
+        for c in 0..classes {
+            let i = b * classes + c;
+            dlogits[i] =
+                (probs[i] - if lab as usize == c { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    let grads = net.backward(&state, None, &tape, &dlogits).unwrap();
+
+    // numeric checks across every layer family the backward touches:
+    // conv stem, a mid-network qconv (FP mode here), BN affine, and the
+    // classifier.  Large leaves are probed on an even-strided subset.
+    for (path, min_cos) in [
+        ("state/params/stem/w", 0.995),
+        ("state/params/s1b0c1/w", 0.995),
+        ("state/params/bn_s0b0c2/gamma", 0.995),
+        ("state/params/bn_s2b0c1/beta", 0.995),
+        ("state/params/fc/w", 0.999),
+        ("state/params/fc/b", 0.999),
+    ] {
+        let analytic_full =
+            grads.by_path.get(path).unwrap_or_else(|| panic!("no grad for {path}"));
+        let idx = strided_indices(analytic_full.len(), 120);
+        let analytic: Vec<f32> = idx.iter().map(|&j| analytic_full[j]).collect();
+        let numeric = numeric_grad_at(&net, &state, path, &idx, &x, &y, classes, 1e-2);
+        let cos = cosine(&analytic, &numeric);
+        assert!(
+            cos > min_cos,
+            "{path}: analytic/numeric gradient cosine {cos:.4} < {min_cos}"
+        );
+        let na: f64 = analytic.iter().map(|&v| (v as f64).abs()).sum();
+        let nn: f64 = numeric.iter().map(|v| v.abs()).sum();
+        assert!(
+            (na - nn).abs() < 0.15 * na.max(nn).max(1e-8),
+            "{path}: gradient mass mismatch analytic {na:.5} vs numeric {nn:.5}"
+        );
+    }
+}
+
+#[test]
+fn arch_gradient_of_last_conv_matches_finite_differences() {
+    // dL/dr for the last block's c2 conv: its own quantizer inputs do
+    // not move with the coefficients, so central differences are valid.
+    let mut engine = open_engine("resnet8_tiny");
+    let net = NativeNet::from_manifest(&engine.manifest).unwrap();
+    let classes = engine.manifest.num_classes;
+    let state = engine.init_state(7).unwrap();
+    let mut rng = Rng::new(0xA12C);
+    let (x, y) = small_batch(&engine, 4, &mut rng);
+
+    let names = net.desc.qconv_names.clone();
+    let li = names.iter().position(|n| n == "s2b0c2").unwrap();
+    let n_bits = net.bits.len();
+
+    // give the strengths non-trivial values so softmax isn't uniform
+    let mut state = state;
+    {
+        let r = state.get_mut("state/arch/r/s2b0c2").unwrap().as_f32_mut().unwrap();
+        r.copy_from_slice(&[0.3, -0.2, 0.5, 0.0, -0.4]);
+        let s = state.get_mut("state/arch/s/s2b0c2").unwrap().as_f32_mut().unwrap();
+        s.copy_from_slice(&[-0.1, 0.4, 0.2, -0.3, 0.0]);
+    }
+
+    let coeffs_of = |state: &StateVec| -> Coeffs {
+        let mut cw = Vec::new();
+        let mut cx = Vec::new();
+        for name in &names {
+            let r = state.get(&format!("state/arch/r/{name}")).unwrap().as_f32().unwrap();
+            let s = state.get(&format!("state/arch/s/{name}")).unwrap().as_f32().unwrap();
+            let (mut pw, mut px) = (Vec::new(), Vec::new());
+            quant::softmax(r, &mut pw);
+            quant::softmax(s, &mut px);
+            cw.push(pw);
+            cx.push(px);
+        }
+        Coeffs { cw, cx }
+    };
+    let loss_at = |state: &StateVec| -> f64 {
+        let coeffs = coeffs_of(state);
+        let (tape, _) = net.forward(state, Some(&coeffs), &x, y.len(), true).unwrap();
+        ebs::native::ops::cross_entropy(&tape.logits, &y, classes) as f64
+    };
+
+    // analytic dL/dr, dL/ds via backward + softmax VJP
+    let coeffs = coeffs_of(&state);
+    let (tape, _) = net.forward(&state, Some(&coeffs), &x, y.len(), true).unwrap();
+    let mut probs = Vec::new();
+    ebs::native::ops::softmax_rows(&tape.logits, y.len(), classes, &mut probs);
+    let inv_b = 1.0 / y.len() as f32;
+    let mut dlogits = vec![0f32; y.len() * classes];
+    for (b, &lab) in y.iter().enumerate() {
+        for c in 0..classes {
+            let i = b * classes + c;
+            dlogits[i] = (probs[i] - if lab as usize == c { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    let grads = net.backward(&state, Some(&coeffs), &tape, &dlogits).unwrap();
+    let mut gr = vec![0f32; n_bits];
+    let mut gs = vec![0f32; n_bits];
+    quant::softmax_backward(&coeffs.cw[li], &grads.dcw[li], &mut gr);
+    quant::softmax_backward(&coeffs.cx[li], &grads.dcx[li], &mut gs);
+
+    // eps large enough that f32 forward rounding stays ≪ the loss
+    // delta, small enough that curvature (and ReLU-kink crossings)
+    // stay negligible.
+    let eps = 2e-2f32;
+    for (path, analytic) in [("state/arch/r/s2b0c2", &gr), ("state/arch/s/s2b0c2", &gs)] {
+        let mut numeric = Vec::new();
+        let mut s = state.clone();
+        for j in 0..n_bits {
+            let orig = s.get(path).unwrap().as_f32().unwrap()[j];
+            s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig + eps;
+            let hi = loss_at(&s);
+            s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig - eps;
+            let lo = loss_at(&s);
+            s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig;
+            numeric.push((hi - lo) / (2.0 * eps as f64));
+        }
+        let cos = cosine(analytic, &numeric);
+        assert!(cos > 0.97, "{path}: cosine {cos:.4}, analytic {analytic:?} numeric {numeric:?}");
+    }
+}
+
+#[test]
+fn train_step_overfits_a_fixed_batch_under_onehot_selection() {
+    let mut engine = open_engine("resnet8_tiny");
+    let mut state = engine.init_state(1).unwrap();
+    let mut rng = Rng::new(0x0F17);
+    let b = engine.manifest.batch_size;
+    let classes = engine.manifest.num_classes;
+    let (x, y) = small_batch(&engine, b, &mut rng);
+    let l = engine.manifest.num_qconvs();
+    let n = engine.manifest.bits.len();
+    let mut sel = vec![0f32; l * n];
+    for row in 0..l {
+        sel[row * n + n - 1] = 1.0; // 5-bit everywhere
+    }
+    let sel = Tensor::from_f32(&[l, n], sel);
+    let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let io = vec![
+            ("sel_w".to_string(), sel.clone()),
+            ("sel_x".to_string(), sel.clone()),
+            ("x".to_string(), Tensor::from_f32(&[b, 16, 16, 3], x.clone())),
+            ("y".to_string(), Tensor::from_i32(&[b], y.clone())),
+            ("teacher".to_string(), zero_teacher.clone()),
+            ("lr".to_string(), Tensor::scalar_f32(0.05)),
+            ("wd".to_string(), Tensor::scalar_f32(0.0)),
+            ("mu".to_string(), Tensor::scalar_f32(0.0)),
+        ];
+        let m = engine.run("train", &mut state, &io).unwrap();
+        losses.push(metric_f32(&m, "loss").unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        losses[11] < losses[0],
+        "quantized train step should overfit a fixed batch: {losses:?}"
+    );
+}
+
+#[test]
+fn search_penalty_drives_bits_down() {
+    // With a tiny target and a large λ, repeated search steps must push
+    // the argmax selection toward fewer bits — Eq. 9's penalty at work.
+    let mut engine = open_engine("resnet8_tiny");
+    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut state = engine.init_state(2).unwrap();
+    let mut rng = Rng::new(0xBEEF);
+    let b = engine.manifest.batch_size;
+    let start = ebs::coordinator::Selection::from_state(&state, &engine.manifest).unwrap();
+    let (sw0, sx0) = start.mean_bits();
+
+    let mut eflops_first = None;
+    let mut eflops_last = 0.0;
+    for _ in 0..30 {
+        let (xt, yt) = small_batch(&engine, b, &mut rng);
+        let (xv, yv) = small_batch(&engine, b, &mut rng);
+        let io = vec![
+            ("xt".to_string(), Tensor::from_f32(&[b, 16, 16, 3], xt)),
+            ("yt".to_string(), Tensor::from_i32(&[b], yt)),
+            ("xv".to_string(), Tensor::from_f32(&[b, 16, 16, 3], xv)),
+            ("yv".to_string(), Tensor::from_i32(&[b], yv)),
+            ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+            ("lr_arch".to_string(), Tensor::scalar_f32(0.05)),
+            ("wd".to_string(), Tensor::scalar_f32(0.0)),
+            ("lam".to_string(), Tensor::scalar_f32(8.0)),
+            ("target".to_string(), Tensor::scalar_f32(flops.uniform_mflops(1) as f32)),
+        ];
+        let m = engine.run("search_det", &mut state, &io).unwrap();
+        let e = metric_f32(&m, "eflops").unwrap() as f64;
+        eflops_first.get_or_insert(e);
+        eflops_last = e;
+    }
+    let sel = ebs::coordinator::Selection::from_state(&state, &engine.manifest).unwrap();
+    let (sw, sx) = sel.mean_bits();
+    assert!(
+        sw + sx < sw0 + sx0,
+        "penalty should reduce mean bits: {sw0:.2}+{sx0:.2} → {sw:.2}+{sx:.2}"
+    );
+    assert!(
+        eflops_last < eflops_first.unwrap(),
+        "expected FLOPs should fall: {:?} → {eflops_last}",
+        eflops_first
+    );
+}
+
+#[test]
+fn first_search_step_eflops_matches_uniform_coefficient_cost() {
+    // Fresh state → zero strengths → uniform softmax → E[M]=E[K]=3 →
+    // the eflops metric must equal the analytic Eq. 11 value.
+    let mut engine = open_engine("resnet8_tiny");
+    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut state = engine.init_state(4).unwrap();
+    let mut rng = Rng::new(0xE1F);
+    let b = engine.manifest.batch_size;
+    let (xt, yt) = small_batch(&engine, b, &mut rng);
+    let (xv, yv) = small_batch(&engine, b, &mut rng);
+    let io = vec![
+        ("xt".to_string(), Tensor::from_f32(&[b, 16, 16, 3], xt)),
+        ("yt".to_string(), Tensor::from_i32(&[b], yt)),
+        ("xv".to_string(), Tensor::from_f32(&[b, 16, 16, 3], xv)),
+        ("yv".to_string(), Tensor::from_i32(&[b], yv)),
+        ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+        ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+        ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+        ("lam".to_string(), Tensor::scalar_f32(0.5)),
+        ("target".to_string(), Tensor::scalar_f32(1.0)),
+    ];
+    let m = engine.run("search_det", &mut state, &io).unwrap();
+    let eflops = metric_f32(&m, "eflops").unwrap() as f64;
+    let l = flops.num_layers();
+    let n = flops.bits.len();
+    let uniform = vec![1.0 / n as f32; l * n];
+    let want = flops.expected_mflops(&uniform, &uniform);
+    assert!(
+        (eflops - want).abs() < 1e-4 * want,
+        "first-step eflops {eflops} != analytic uniform-coefficient cost {want}"
+    );
+}
+
+#[test]
+fn fp_train_decays_alpha_through_momentum() {
+    // steps.py applies sgd_momentum to α even in FP mode (zero grad +
+    // weight decay) — a subtle semantic the native backend must keep.
+    let mut engine = open_engine("resnet8_tiny");
+    let mut state = engine.init_state(6).unwrap();
+    let mut rng = Rng::new(0xA1FA);
+    let b = engine.manifest.batch_size;
+    let (x, y) = small_batch(&engine, b, &mut rng);
+    let io = vec![
+        ("x".to_string(), Tensor::from_f32(&[b, 16, 16, 3], x)),
+        ("y".to_string(), Tensor::from_i32(&[b], y)),
+        ("lr".to_string(), Tensor::scalar_f32(0.1)),
+        ("wd".to_string(), Tensor::scalar_f32(0.1)),
+    ];
+    engine.run("fp_train", &mut state, &io).unwrap();
+    let alpha = state.get("state/alphas/s0b0c1").unwrap().as_f32().unwrap()[0];
+    // v = wd·α = 0.6; α' = 6 − 0.1·0.6 = 5.94
+    assert!((alpha - 5.94).abs() < 1e-4, "α after decayed FP step: {alpha}");
+    // BN running stats moved off their init
+    let mean = state.get("state/bn/stem/mean").unwrap().as_f32().unwrap();
+    assert!(mean.iter().any(|&m| m != 0.0), "BN running mean should update");
+}

@@ -8,7 +8,7 @@ use ebs::bd::{pack_cols, pack_rows};
 use ebs::coordinator::{FlopsModel, Selection};
 use ebs::data::synth::{generate, SynthSpec};
 use ebs::data::Batcher;
-use ebs::quant::{decode_weight, quantize_acts, quantize_weights};
+use ebs::quant::{decode_weight, fake_quant_weights, quantize_acts, quantize_weights};
 use ebs::util::json::{parse, Json};
 use ebs::util::Rng;
 
@@ -154,6 +154,59 @@ fn prop_quantizer_bounds() {
         for &c in &q.codes {
             let v = decode_weight(&q, c);
             assert!((-1.0 - 1e-6..=1.0 + 1e-6).contains(&v), "seed {seed}");
+        }
+    }
+}
+
+/// Cross-validation of the two quantized-weight representations: the
+/// training-path `fake_quant_weights` floats must equal the BD-path
+/// decode of the same codes after a full bitplane decomposition →
+/// recomposition round trip, for every candidate bitwidth.  This pins
+/// Eq. 1a's affine (scale 2/(2^M−1), zero −1) to Eq. 12's B_w layout.
+#[test]
+fn prop_fake_quant_matches_bitplane_recompose() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xB17);
+        let rows = 1 + rng.below(6);
+        let s = 1 + rng.below(80);
+        let w: Vec<f32> = (0..rows * s).map(|_| rng.normal()).collect();
+        for bits in 1..=5u32 {
+            let q = quantize_weights(&w, bits);
+            let fq = fake_quant_weights(&w, bits);
+            // decompose codes into bitplanes, then recompose each code
+            // from its planes and decode through the affine map
+            let bm = pack_rows(&q.codes, rows, s, bits);
+            for r in 0..rows {
+                for c in 0..s {
+                    let mut code = 0u8;
+                    for m in 0..bits as usize {
+                        code |= (bm.get(r * bits as usize + m, c) as u8) << m;
+                    }
+                    assert_eq!(code, q.codes[r * s + c], "seed {seed} bits {bits}");
+                    let decoded = decode_weight(&q, code);
+                    let reference = fq[r * s + c];
+                    assert!(
+                        (decoded - reference).abs() < 1e-6,
+                        "seed {seed} bits {bits}: bitplane decode {decoded} != fake quant {reference}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `quantize_acts` degenerate-α regression (clamp + document): α ≤ 0
+/// must yield all-zero codes and scale 0, never NaN codes or a panic.
+#[test]
+fn prop_quantize_acts_degenerate_alpha_safe() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xA0);
+        let xs: Vec<f32> = (0..64).map(|_| rng.normal() * 4.0).collect();
+        for alpha in [0.0f32, -1.0, -rng.uniform_in(0.0, 5.0)] {
+            let mut codes = vec![0xFFu8; xs.len()];
+            let scale = quantize_acts(&xs, alpha, 1 + rng.below(5) as u32, &mut codes);
+            assert!(codes.iter().all(|&c| c == 0), "seed {seed} alpha {alpha}");
+            assert_eq!(scale, 0.0, "seed {seed} alpha {alpha}");
         }
     }
 }

@@ -1,13 +1,13 @@
-//! Integration: load the resnet8_tiny artifacts, round-trip state through
-//! init → fp_train → eval → search steps, and sanity-check the numerics.
-//!
-//! Requires `make artifacts` to have produced `artifacts/resnet8_tiny/`.
+//! Integration: open resnet8_tiny (PJRT artifacts when present, native
+//! backend otherwise), round-trip state through init → fp_train → eval
+//! → search steps, and sanity-check the numerics.  Runs — not skips —
+//! on machines with no PJRT runtime.
 
 use ebs::runtime::{metric_f32, Engine, Tensor};
 use ebs::util::Rng;
 
 mod common;
-use common::open_or_skip;
+use common::open_engine;
 
 fn random_batch(engine: &Engine, rng: &mut Rng) -> (Tensor, Tensor) {
     let m = &engine.manifest;
@@ -33,7 +33,7 @@ fn onehot_sel(engine: &Engine, bit_idx: usize) -> Tensor {
 
 #[test]
 fn full_state_roundtrip_and_steps() {
-    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
+    let mut engine = open_engine("resnet8_tiny");
     let mut rng = Rng::new(0xEB5);
 
     // init fills every state leaf; BN gammas must be exactly 1.
@@ -136,7 +136,7 @@ fn full_state_roundtrip_and_steps() {
 
 #[test]
 fn infer_matches_eval_logits_argmax() {
-    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
+    let mut engine = open_engine("resnet8_tiny");
     let mut rng = Rng::new(7);
     let mut state = engine.init_state(1).unwrap();
     let (x, y) = random_batch(&engine, &mut rng);
@@ -184,7 +184,7 @@ fn infer_matches_eval_logits_argmax() {
 
 #[test]
 fn checkpoint_roundtrip() {
-    let Some(mut engine) = open_or_skip("resnet8_tiny") else { return };
+    let mut engine = open_engine("resnet8_tiny");
     let state = engine.init_state(5).unwrap();
     let tmp = std::env::temp_dir().join("ebs_test_ckpt.bin");
     state.save(&tmp).unwrap();
