@@ -1,17 +1,19 @@
 #!/usr/bin/env python3
 """Compare fresh BENCH_*.json medians against the committed baseline.
 
-Usage: compare_bench.py <baseline.json> <fresh.json> [ratio]
+Usage: compare_bench.py <baseline.json> <fresh.json> [warn_ratio] [fail_ratio]
 
 Both files use the DESIGN.md §9 envelope `{bench, reps, threads,
 tile_co, tile_n, rows}`.  Rows are matched on every non-latency field
-(shape, bits, batch, exec, ...); every numeric field ending in `_ms` is
-compared, and a GitHub Actions `::warning::` annotation is emitted when
-fresh/baseline exceeds the ratio (default 1.3).  Always exits 0 — the
-perf gate is advisory by design (CI runners are noisy; the trajectory
-artifact is the source of truth).  A missing baseline is not an error:
-commit one from a trusted run's `bench-json` artifact to
-`ci/bench-baseline/` to arm the comparison.
+(shape, bits, batch, exec, threads, ...); every numeric field ending in
+`_ms` is compared.  A GitHub Actions `::warning::` annotation is
+emitted when fresh/baseline exceeds `warn_ratio` (default 1.3); an
+`::error::` annotation is emitted — and the script exits non-zero — when
+it exceeds `fail_ratio` (default 1.5).  The soft band exists because CI
+runners are noisy; the hard gate catches real step-time regressions
+(the bench-json artifact remains the full trajectory).  A missing
+baseline is not an error: commit one from a trusted run's `bench-json`
+artifact to `ci/bench-baseline/` to arm the comparison.
 """
 
 import json
@@ -36,7 +38,8 @@ def main():
         print(__doc__)
         return 0
     baseline_path, fresh_path = sys.argv[1], sys.argv[2]
-    ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
+    warn_ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
+    fail_ratio = float(sys.argv[4]) if len(sys.argv) > 4 else 1.5
     try:
         with open(baseline_path) as f:
             baseline = json.load(f)
@@ -48,7 +51,7 @@ def main():
         fresh = json.load(f)
 
     base_rows = {row_key(r): r for r in baseline.get("rows", [])}
-    checked = regressed = 0
+    checked = warned = failed = 0
     for row in fresh.get("rows", []):
         ref = base_rows.get(row_key(row))
         if ref is None:
@@ -60,19 +63,26 @@ def main():
             if not isinstance(old, (int, float)) or old <= 0:
                 continue
             checked += 1
-            if value / old > ratio:
-                regressed += 1
-                ident = {k: v for k, v in row.items() if not k.endswith("_ms")}
-                print(
-                    f"::warning file={fresh_path}::bench regression in "
-                    f"{fresh.get('bench', '?')} {ident}: {field} "
-                    f"{old:.3f}ms -> {value:.3f}ms ({value / old:.2f}x > {ratio}x)"
-                )
+            ratio = value / old
+            if ratio <= warn_ratio:
+                continue
+            ident = {k: v for k, v in row.items() if not is_derived(k)}
+            detail = (
+                f"bench regression in {fresh.get('bench', '?')} {ident}: {field} "
+                f"{old:.3f}ms -> {value:.3f}ms ({ratio:.2f}x)"
+            )
+            if ratio > fail_ratio:
+                failed += 1
+                print(f"::error file={fresh_path}::{detail} > {fail_ratio}x hard limit")
+            else:
+                warned += 1
+                print(f"::warning file={fresh_path}::{detail} > {warn_ratio}x")
     print(
         f"[bench-diff] {fresh.get('bench', '?')}: compared {checked} medians "
-        f"against {baseline_path}; {regressed} above {ratio}x"
+        f"against {baseline_path}; {warned} above {warn_ratio}x, "
+        f"{failed} above the {fail_ratio}x hard limit"
     )
-    return 0
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

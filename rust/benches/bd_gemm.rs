@@ -16,9 +16,9 @@
 use std::time::Instant;
 
 use ebs::bd::gemm::{
-    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine,
-    resolve_threads, GemmTiles,
+    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine, GemmTiles,
 };
+use ebs::kernels::resolve_threads;
 use ebs::bd::{pack_cols, pack_rows};
 use ebs::util::json::Json;
 use ebs::util::Rng;

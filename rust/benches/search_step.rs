@@ -1,21 +1,37 @@
-//! Bench: search-step efficiency (paper Table 3).
+//! Bench: search-step efficiency (paper Table 3) + the native-backend
+//! threads sweep.
 //!
-//! Times N iterations of the EBS `search_det` graph vs the DNAS
+//! Part 1 times N iterations of the EBS `search_det` graph vs the DNAS
 //! supernet `dnas_search` graph (N weight copies, N² convs) on the same
 //! model and random data, and reports wall-clock + peak RSS + the
-//! analytic weight-copy memory model.  `cargo bench --bench search_step`.
+//! analytic weight-copy memory model.
 //!
-//! Env knobs: EBS_BENCH_MODEL (default resnet8_tiny), EBS_BENCH_ITERS.
+//! Part 2 sweeps the native backend's `search_det` step at
+//! `threads ∈ {1, auto}` (the parallel kernel layer of DESIGN.md §12 —
+//! bit-identical results, wall-clock only) and emits the §9 JSON
+//! envelope for `ci/compare_bench.py`:
+//!
+//!   cargo bench --bench search_step [-- --json BENCH_native_search.json]
+//!
+//! Env knobs: EBS_BENCH_MODEL (default resnet8_tiny), EBS_BENCH_ITERS
+//! (steps per rep, default 10), EBS_BENCH_REPS (median window for the
+//! native sweep, default 3).
 
 use std::path::PathBuf;
 
 use ebs::baselines::dnas::{run_dnas_steps, weight_copy_bytes};
 use ebs::runtime::Engine;
+use ebs::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::var("EBS_BENCH_MODEL").unwrap_or_else(|_| "resnet8_tiny".into());
-    let iters: usize =
-        std::env::var("EBS_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let iters = env_usize("EBS_BENCH_ITERS", 10);
+    let reps = env_usize("EBS_BENCH_REPS", 3);
+    let json_path = ebs::util::cli::argv_value_flag("--json", "BENCH_native_search.json");
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
     if !dir.join("manifest.json").exists() && ebs::native::lookup(&model).is_none() {
         eprintln!(
@@ -28,10 +44,8 @@ fn main() -> anyhow::Result<()> {
     let mut engine = Engine::open(&dir)?;
     eprintln!("[bench:search_step] backend: {}", engine.backend_name());
     let n_bits = engine.manifest.bits.len();
-    println!(
-        "# Table 3 bench — model={model}, {iters} iterations, batch={}",
-        engine.manifest.batch_size
-    );
+    let batch = engine.manifest.batch_size;
+    println!("# Table 3 bench — model={model}, {iters} iterations, batch={batch}");
 
     // EBS
     let mut state = engine.init_state(1)?;
@@ -65,6 +79,61 @@ fn main() -> anyhow::Result<()> {
         );
     } else {
         println!("DNAS   : artifacts not exported for {model} (aot.py --dnas); EBS-only run");
+    }
+
+    // Native-backend threads sweep: the search-step hot path on the
+    // shared parallel kernel layer.  threads is a row-identity field
+    // (0 = auto); step_ms is the compared median; *_speedup is derived.
+    if ebs::native::lookup(&model).is_none() {
+        eprintln!("[bench:search_step] {model} not in the native registry; skipping threads sweep");
+        return Ok(());
+    }
+    println!("# native search_det threads sweep — median of {reps} × {iters} steps");
+    println!("{:<8} {:>12} {:>9}", "threads", "step ms", "speedup");
+    let mut rows = Vec::new();
+    let mut serial_ms = 0f64;
+    for &threads in &[1usize, 0] {
+        let mut step_ms: Vec<f64> = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let mut engine = Engine::native(&model)?;
+            engine.set_threads(threads);
+            let mut state = engine.init_state(1)?;
+            let cost = run_dnas_steps(&mut engine, "search_det", &mut state, iters, 7)?;
+            step_ms.push(cost.total_seconds * 1e3 / iters as f64);
+        }
+        step_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = step_ms[step_ms.len() / 2];
+        if threads == 1 {
+            serial_ms = med;
+        }
+        let speedup = serial_ms / med;
+        println!(
+            "{:<8} {:>12.2} {:>8.2}x",
+            if threads == 0 { "auto".to_string() } else { threads.to_string() },
+            med,
+            speedup
+        );
+        rows.push(Json::Obj(vec![
+            ("backend".into(), Json::Str("native".into())),
+            ("model".into(), Json::Str(model.clone())),
+            ("batch".into(), Json::Num(batch as f64)),
+            ("iters".into(), Json::Num(iters as f64)),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("step_ms".into(), Json::Num(med)),
+            ("par_speedup".into(), Json::Num(speedup)),
+        ]));
+    }
+
+    if let Some(path) = json_path {
+        ebs::util::json::write_bench_json(
+            std::path::Path::new(&path),
+            "native_search",
+            reps,
+            0,
+            (0, 0),
+            rows,
+        )?;
+        println!("# wrote {path}");
     }
     Ok(())
 }

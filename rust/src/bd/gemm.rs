@@ -14,13 +14,15 @@
 //!   columns so the activation bitplanes of one column tile stay in
 //!   L1/L2 while the weight rows stream through (DESIGN.md §5).
 //! * [`par_fused`] — the tiled kernel sharded over contiguous
-//!   output-channel ranges across `std::thread::scope` workers.  Each
-//!   worker owns a disjoint slice of the output, so no synchronization
-//!   is needed beyond the scope join.
+//!   output-channel ranges via the shared [`crate::kernels`] row
+//!   partitioner.  Each worker owns a disjoint slice of the output, so
+//!   no synchronization is needed beyond the scope join.
 //!
 //! Unit + property tests pin every path against a naive integer matmul
 //! (`tests/par_gemm.rs` additionally sweeps bit pairs, odd shapes and
 //! thread counts).
+
+use crate::kernels::par_row_chunks;
 
 use super::bitplane::BitMatrix;
 
@@ -45,25 +47,6 @@ impl Default for GemmTiles {
 impl GemmTiles {
     pub fn new(co_tile: usize, n_tile: usize) -> GemmTiles {
         GemmTiles { co_tile: co_tile.max(1), n_tile: n_tile.max(1) }
-    }
-}
-
-/// Worker count from the machine (what `threads = 0` resolves to).
-/// Cached: `available_parallelism` does syscalls/cgroup reads, and
-/// `Auto` dispatch consults this on every layer forward.
-pub fn auto_threads() -> usize {
-    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *AUTO.get_or_init(|| {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    })
-}
-
-/// Resolve a requested thread count: `0` → [`auto_threads`].
-pub fn resolve_threads(requested: usize) -> usize {
-    if requested == 0 {
-        auto_threads()
-    } else {
-        requested
     }
 }
 
@@ -175,9 +158,10 @@ pub fn fused_tiled_into(
 }
 
 /// Parallel tiled kernel: contiguous output-channel ranges are sharded
-/// across scoped threads (`threads = 0` → [`auto_threads`]).  Bit-exact
-/// with [`fused`]: every thread runs the same integer kernel on a
-/// disjoint output slice.
+/// across scoped threads (`threads = 0` → machine parallelism, see
+/// [`crate::kernels::resolve_threads`]).  Bit-exact with [`fused`]:
+/// every thread runs the same integer kernel on a disjoint output
+/// slice.
 #[allow(clippy::too_many_arguments)]
 pub fn par_fused(
     bw: &BitMatrix,
@@ -208,26 +192,11 @@ pub fn par_fused_into(
     out: &mut [i64],
 ) {
     check_shapes(bw, bx, co, n, m_bits, k_bits, out);
-    if co == 0 || n == 0 {
-        return;
-    }
-    let threads = resolve_threads(threads).clamp(1, co);
     let (mb, kb) = (m_bits as usize, k_bits as usize);
-    if threads == 1 {
-        fused_block(bw, bx, 0, co, n, mb, kb, tiles, out);
-        return;
-    }
     // Shard output channels into ≤ `threads` contiguous chunks; each
     // worker gets the matching disjoint slice of `out`.
-    let chunk = co.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
-            let c0 = t * chunk;
-            let c1 = (c0 + chunk).min(co);
-            scope.spawn(move || {
-                fused_block(bw, bx, c0, c1, n, mb, kb, tiles, out_chunk);
-            });
-        }
+    par_row_chunks(out, co, n, threads, |c0, chunk| {
+        fused_block(bw, bx, c0, c0 + chunk.len() / n, n, mb, kb, tiles, chunk);
     });
 }
 
@@ -370,12 +339,6 @@ mod tests {
         let p = binary_gemm_p(&bw, &bx);
         assert_eq!(p.len(), 4 * 4, "P is 4×4 as in Eq. 13");
         assert_eq!(recombine(&p, 2, 2, 2, 2), expect);
-    }
-
-    #[test]
-    fn thread_resolution() {
-        assert!(resolve_threads(0) >= 1);
-        assert_eq!(resolve_threads(3), 3);
     }
 
     #[test]

@@ -251,7 +251,7 @@ impl BdConvLayer {
                 let word_ops = (co * n) as u64
                     * (mb * kb) as u64
                     * self.bw.words_per_row as u64;
-                if word_ops >= AUTO_PAR_MIN_WORD_OPS && gemm::resolve_threads(cfg.threads) > 1 {
+                if word_ops >= AUTO_PAR_MIN_WORD_OPS && crate::kernels::resolve_threads(cfg.threads) > 1 {
                     gemm::par_fused_into(
                         &self.bw, bx, co, n, mb, kb, cfg.tiles, cfg.threads, prod,
                     )

@@ -76,6 +76,17 @@ impl Default for BdDeployConfig {
     }
 }
 
+/// Native-backend execution configuration (`[native]` section; the
+/// `--threads` CLI flag overrides — mirroring how `[bd]`/`ebs deploy`
+/// configure the deployment engine).
+#[derive(Debug, Clone, Default)]
+pub struct NativeConfig {
+    /// Worker threads for the native training/search kernels; 0 =
+    /// machine parallelism.  Results are bit-identical at any value
+    /// (DESIGN.md §12), so this only moves wall-clock.
+    pub threads: usize,
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -94,6 +105,7 @@ pub struct RunConfig {
     /// `search.target_mflops` only.
     pub targets_mflops: Vec<f64>,
     pub bd: BdDeployConfig,
+    pub native: NativeConfig,
     pub doc: TomlDoc,
 }
 
@@ -172,6 +184,7 @@ impl RunConfig {
             retrain: train_cfg(&doc, "retrain", 400, 0.04),
             targets_mflops: doc.f64_array("search.targets_mflops").unwrap_or_default(),
             bd,
+            native: NativeConfig { threads: doc.usize_or("native.threads", 0) },
             doc,
         }
     }
@@ -229,6 +242,14 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.data.n_train, 256);
         assert!(cfg.search.stochastic);
         assert_eq!(cfg.targets_mflops, vec![0.10, 0.16]);
+    }
+
+    #[test]
+    fn native_section_parses_and_defaults() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.native.threads, 0, "default is machine parallelism");
+        let cfg = RunConfig::from_doc(parse("[native]\nthreads = 3\n").unwrap());
+        assert_eq!(cfg.native.threads, 3);
     }
 
     #[test]

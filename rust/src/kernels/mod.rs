@@ -1,0 +1,260 @@
+//! Shared parallel kernel substrate (DESIGN.md §12).
+//!
+//! Both engines — the BD deployment GEMM (`bd/gemm.rs`) and the native
+//! training kernels (`native/{ops,quant}.rs`) — shard work across
+//! `std::thread::scope` workers the same way: the output buffer is
+//! split into contiguous chunks of whole rows, each worker owns exactly
+//! one disjoint chunk, and the inner loop a worker runs is the *same
+//! code in the same order* the serial path runs.  This module is that
+//! shared plumbing, extracted so every kernel inherits the one
+//! determinism argument:
+//!
+//! **Partition outputs, never reductions.**  Every output element is
+//! produced by exactly one worker, and the sequence of floating-point
+//! operations that produces it does not depend on the worker count or
+//! the chunk boundaries.  Integer kernels (BD) are exact under any
+//! order; f32/f64 kernels are non-associative, so bit-identical results
+//! at `threads = 1` and `threads = N` — the same-seed replay guarantee
+//! the search pipeline tests pin — hold *only* under this rule.
+//! Whole-tensor reductions that cannot be split into per-output-element
+//! serial sums (e.g. the quantizer's coefficient-gradient inner
+//! products) therefore stay single-threaded.
+//!
+//! The one sanctioned exception is [`par_max_abs`]: a max is exact
+//! under any grouping, and the argmax combine is ordered so tie-breaks
+//! match the serial left-to-right scan at any chunk size.
+
+/// Worker count from the machine (what `threads = 0` resolves to).
+/// Cached: `available_parallelism` does syscalls/cgroup reads, and
+/// dispatch consults this on every kernel launch.
+pub fn auto_threads() -> usize {
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Resolve a requested thread count: `0` → [`auto_threads`].
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    }
+}
+
+/// Minimum scalar ops a worker should amortize one thread spawn over
+/// (spawn ≈ 10-20 µs; this is ≈ 100-250 µs of arithmetic).
+const MIN_WORK_PER_THREAD: u64 = 262_144;
+
+/// Resolve `auto` (0) against both the machine and the available work,
+/// so small kernels (tiny layers, coefficient vectors) don't pay spawn
+/// latency; an *explicit* `threads = N` is honored literally (tests
+/// rely on that to force sharding on small inputs).  `work` is the
+/// kernel's total scalar-op estimate.  Results are bit-identical at any
+/// thread count (see module docs), so adapting the count to the problem
+/// size is numerically free.
+pub fn gate_threads(requested: usize, work: u64) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    ((work / MIN_WORK_PER_THREAD).max(1) as usize).min(auto_threads())
+}
+
+/// Shard `out` (`rows × row_len`, row-major) into at most `threads`
+/// contiguous chunks of whole rows and run `f(first_row, chunk)` on a
+/// scoped worker per chunk.  `threads = 0` resolves to the machine
+/// count; a resolved count of 1 (or a single row) runs `f` inline with
+/// no spawn.  Workers own disjoint `&mut` chunks, so no synchronization
+/// exists beyond the scope join — and no worker can observe another's
+/// rows.
+pub fn par_row_chunks<T, F>(out: &mut [T], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), rows * row_len, "output is not rows × row_len");
+    if out.is_empty() {
+        return;
+    }
+    let threads = resolve_threads(threads).clamp(1, rows);
+    if threads == 1 {
+        f(0, out);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, out_chunk) in out.chunks_mut(chunk * row_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(t * chunk, out_chunk));
+        }
+    });
+}
+
+/// [`par_row_chunks`] over two output buffers partitioned in lockstep:
+/// row `r` of `a` (`a_row` elements) and row `r` of `b` (`b_row`
+/// elements) always land on the same worker.  Used where one pass fills
+/// two outputs (BN's x̂ + y, or its two per-channel gradient sums).
+#[allow(clippy::too_many_arguments)]
+pub fn par_row_chunks_zip<A, B, F>(
+    a: &mut [A],
+    b: &mut [B],
+    rows: usize,
+    a_row: usize,
+    b_row: usize,
+    threads: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), rows * a_row, "a is not rows × a_row");
+    assert_eq!(b.len(), rows * b_row, "b is not rows × b_row");
+    if a.is_empty() || b.is_empty() {
+        if !(a.is_empty() && b.is_empty()) {
+            f(0, a, b);
+        }
+        return;
+    }
+    let threads = resolve_threads(threads).clamp(1, rows);
+    if threads == 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, (ac, bc)) in a
+            .chunks_mut(chunk * a_row)
+            .zip(b.chunks_mut(chunk * b_row))
+            .enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || f(t * chunk, ac, bc));
+        }
+    });
+}
+
+/// Chunked `(max |v|, argmax)` that reproduces the serial strict-`>`
+/// scan at any thread count: each chunk reports the *first* index
+/// attaining its maximum, and chunks combine left to right with
+/// strict `>`, so ties always resolve to the lowest index.  f32
+/// comparisons are exact, making the result chunk-boundary-independent.
+pub fn par_max_abs(v: &[f32], threads: usize) -> (f32, usize) {
+    if v.is_empty() {
+        return (0.0, 0);
+    }
+    let threads = resolve_threads(threads).clamp(1, v.len());
+    let chunk = v.len().div_ceil(threads);
+    let scan = |base: usize, seg: &[f32]| -> (f32, usize) {
+        let (mut m, mut am) = (0f32, base);
+        for (j, &x) in seg.iter().enumerate() {
+            if x.abs() > m {
+                m = x.abs();
+                am = base + j;
+            }
+        }
+        (m, am)
+    };
+    if threads == 1 {
+        return scan(0, v);
+    }
+    let mut partials = vec![(0f32, 0usize); v.len().div_ceil(chunk)];
+    std::thread::scope(|scope| {
+        for (i, (part, seg)) in partials.iter_mut().zip(v.chunks(chunk)).enumerate() {
+            scope.spawn(move || *part = scan(i * chunk, seg));
+        }
+    });
+    let (mut best, mut arg) = (0f32, 0usize);
+    for &(m, am) in &partials {
+        if m > best {
+            best = m;
+            arg = am;
+        }
+    }
+    (best, arg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_resolution() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn work_gate_scales_auto_and_honors_explicit_requests() {
+        assert_eq!(gate_threads(0, 0), 1);
+        assert_eq!(gate_threads(0, MIN_WORK_PER_THREAD), 1);
+        assert!(gate_threads(0, u64::MAX / 2) <= auto_threads(), "auto caps at the machine");
+        assert_eq!(gate_threads(3, 0), 3, "explicit requests are literal");
+        assert_eq!(gate_threads(2, u64::MAX / 2), 2, "never exceeds the request");
+    }
+
+    #[test]
+    fn row_chunks_cover_every_row_exactly_once() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let (rows, row_len) = (10usize, 3usize);
+            let mut out = vec![0u32; rows * row_len];
+            par_row_chunks(&mut out, rows, row_len, threads, |r0, chunk| {
+                for (i, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + i + 1) as u32;
+                    }
+                }
+            });
+            let want: Vec<u32> =
+                (0..rows * row_len).map(|i| (i / row_len) as u32 + 1).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zip_chunks_stay_in_lockstep() {
+        for threads in [1usize, 2, 5, 16] {
+            let rows = 9usize;
+            let mut a = vec![0u32; rows * 2];
+            let mut b = vec![0u64; rows];
+            par_row_chunks_zip(&mut a, &mut b, rows, 2, 1, threads, |r0, ac, bc| {
+                for i in 0..bc.len() {
+                    let r = (r0 + i) as u32;
+                    ac[i * 2..(i + 1) * 2].fill(r);
+                    bc[i] = r as u64 * 10;
+                }
+            });
+            for r in 0..rows {
+                assert_eq!(a[r * 2], r as u32, "threads={threads}");
+                assert_eq!(b[r], r as u64 * 10, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let mut out: Vec<f32> = Vec::new();
+        par_row_chunks(&mut out, 0, 4, 8, |_, _| panic!("no work expected"));
+        assert_eq!(par_max_abs(&[], 8), (0.0, 0));
+    }
+
+    #[test]
+    fn max_abs_matches_serial_scan_at_any_thread_count() {
+        let mut rng = crate::util::Rng::new(0x3AA);
+        let v: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let want = par_max_abs(&v, 1);
+        for threads in [2usize, 3, 7, 33, 1000] {
+            assert_eq!(par_max_abs(&v, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn max_abs_tie_breaks_to_first_index_across_chunkings() {
+        // |v| ties at indices 1 and 5; the serial scan keeps index 1.
+        let v = [0.5f32, -2.0, 1.0, 0.25, -1.5, 2.0, 0.0];
+        for threads in [1usize, 2, 3, 7] {
+            assert_eq!(par_max_abs(&v, threads), (2.0, 1), "threads={threads}");
+        }
+    }
+}

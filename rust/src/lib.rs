@@ -13,6 +13,9 @@
 //!   FLOPs model, bitwidth selection, schedules.
 //! * [`bd`] — Binary Decomposition inference engine (Eq. 12-14) for
 //!   generic CPUs: bitplane packing + AND/popcount GEMM + shift-add.
+//! * [`kernels`] — shared threaded-kernel substrate: deterministic
+//!   row-partitioned `std::thread::scope` dispatch used by both the BD
+//!   GEMM and the native training kernels (DESIGN.md §12).
 //! * [`data`] — synthetic dataset substrate + batching.
 //! * [`baselines`] — uniform precision, random search, DNAS supernet.
 //! * [`report`] — regenerators for every table/figure in the paper.
@@ -22,6 +25,7 @@ pub mod bd;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod models;
 pub mod native;
 pub mod quant;

@@ -47,7 +47,9 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
 
 Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>
               --backend auto|native|pjrt   (auto = PJRT with artifacts,
-              else the pure-Rust native interpreter — no artifacts needed)";
+              else the pure-Rust native interpreter — no artifacts needed)
+              --threads N   (native-backend kernel workers; 0 = machine
+              parallelism; bit-identical results at any count)";
 
 fn main() {
     if let Err(e) = run() {
@@ -76,6 +78,9 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(b) = args.flag("backend") {
         cfg.backend = ebs::runtime::BackendKind::parse(b)?;
     }
+    if let Some(t) = args.flag("threads") {
+        cfg.native.threads = t.parse().context("--threads must be an integer")?;
+    }
     if args.has_switch("stochastic") {
         cfg.search.stochastic = true;
     }
@@ -86,7 +91,8 @@ fn load_config(args: &Args) -> Result<RunConfig> {
 /// native when no PJRT artifact is present, so every subcommand works
 /// without `make artifacts`).
 fn open_engine(cfg: &RunConfig) -> Result<Engine> {
-    let engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
+    let mut engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
+    engine.set_threads(cfg.native.threads);
     eprintln!("[engine] {} on '{}' backend", engine.manifest.model, engine.backend_name());
     Ok(engine)
 }

@@ -11,6 +11,14 @@
 //! using batch statistics but *not* committing them (DARTS practice).
 //! Gumbel noise arrives as graph inputs (`g_r`, `g_s`, `tau`) so the
 //! coordinator keeps ownership of all randomness.
+//!
+//! The backend owns one step-persistent [`TapeArena`]/[`Grads`] pair
+//! (DESIGN.md §12): every graph dispatch reuses the same grow-once
+//! buffers, so the steady-state search step performs no tape/gradient
+//! allocation.  `set_threads` fans the conv/BN/quant kernels out over
+//! the shared `kernels` partitioner — results are bit-identical at any
+//! thread count, so threading never perturbs the same-seed replay
+//! guarantee.
 
 use std::collections::HashMap;
 
@@ -20,7 +28,7 @@ use crate::coordinator::flops::{FlopsModel, MIXED_DIVISOR};
 use crate::runtime::{Backend, Manifest, Metrics, StateVec, Tensor};
 use crate::util::Rng;
 
-use super::graph::{Coeffs, NativeNet};
+use super::graph::{Coeffs, Grads, NativeNet, TapeArena};
 use super::ops;
 use super::optim;
 use super::quant;
@@ -31,6 +39,12 @@ pub struct NativeBackend {
     flops: FlopsModel,
     alpha_init: f32,
     num_classes: usize,
+    arena: TapeArena,
+    grads: Grads,
+    /// Step-persistent softmax / logit-gradient buffers (B × classes).
+    probs: Vec<f32>,
+    teacher_probs: Vec<f32>,
+    dlogits: Vec<f32>,
 }
 
 /// Gumbel-noise inputs of one stochastic step: ((L,N) rows for r and s,
@@ -63,7 +77,18 @@ impl NativeBackend {
             flops: FlopsModel::from_manifest(m)?,
             alpha_init: m.alpha_init,
             num_classes: m.num_classes,
+            arena: TapeArena::new(),
+            grads: Grads::default(),
+            probs: Vec::new(),
+            teacher_probs: Vec::new(),
+            dlogits: Vec::new(),
         })
+    }
+
+    /// Arena reuse accounting (tests assert `grows` freezes after the
+    /// first step at a given shape).
+    pub fn scratch_stats(&self) -> crate::bd::ScratchStats {
+        self.arena.stats
     }
 
     /// Split (L, N) selection/coefficient matrices into per-layer rows.
@@ -118,7 +143,7 @@ impl NativeBackend {
     /// pre-update parameters, as in the exported graphs.
     #[allow(clippy::too_many_arguments)]
     fn weight_phase(
-        &self,
+        &mut self,
         state: &mut StateVec,
         coeffs: Option<&Coeffs>,
         x: &[f32],
@@ -129,39 +154,40 @@ impl NativeBackend {
     ) -> Result<(f32, f32)> {
         let batch = y.len();
         let classes = self.num_classes;
-        let (tape, bn_updates) = self.net.forward(state, coeffs, x, batch, true)?;
-        let ce = ops::cross_entropy(&tape.logits, y, classes);
-        let mut probs = Vec::new();
-        ops::softmax_rows(&tape.logits, batch, classes, &mut probs);
+        self.net.forward(state, coeffs, x, batch, true, &mut self.arena)?;
+        let logits = &self.arena.tape.logits;
+        let ce = ops::cross_entropy(logits, y, classes);
+        ops::softmax_rows(logits, batch, classes, &mut self.probs);
 
-        let (loss, mu, pt) = match teacher {
+        let (loss, mu, have_teacher) = match teacher {
             Some((t_logits, mu)) if mu > 0.0 => {
-                let kl = ops::distill_loss(&tape.logits, t_logits, batch, classes);
-                let mut pt = Vec::new();
-                ops::softmax_rows(t_logits, batch, classes, &mut pt);
-                ((1.0 - mu) * ce + mu * kl, mu, Some(pt))
+                let kl = ops::distill_loss(logits, t_logits, batch, classes);
+                ops::softmax_rows(t_logits, batch, classes, &mut self.teacher_probs);
+                ((1.0 - mu) * ce + mu * kl, mu, true)
             }
-            _ => (ce, 0.0, None),
+            _ => (ce, 0.0, false),
         };
 
         let inv_b = 1.0 / batch as f32;
-        let mut dlogits = vec![0f32; batch * classes];
+        self.dlogits.clear();
+        self.dlogits.resize(batch * classes, 0.0);
         for b in 0..batch {
             for c in 0..classes {
                 let i = b * classes + c;
-                let hard = probs[i] - if y[b] as usize == c { 1.0 } else { 0.0 };
-                let soft = match &pt {
-                    Some(pt) => probs[i] - pt[i],
-                    None => 0.0,
+                let hard = self.probs[i] - if y[b] as usize == c { 1.0 } else { 0.0 };
+                let soft = if have_teacher {
+                    self.probs[i] - self.teacher_probs[i]
+                } else {
+                    0.0
                 };
-                dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
+                self.dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
             }
         }
 
-        let grads = self.net.backward(state, coeffs, &tape, &dlogits)?;
-        bn_updates.apply(state)?;
-        optim::sgd_momentum_step(state, &grads.by_path, lr, wd)?;
-        let acc = ops::correct_count(&tape.logits, y, classes) * inv_b;
+        self.net.backward(state, coeffs, &mut self.arena, &self.dlogits, &mut self.grads)?;
+        self.arena.bn_updates.apply(state)?;
+        optim::sgd_momentum_step(state, &self.grads.by_path, lr, wd)?;
+        let acc = ops::correct_count(&self.arena.tape.logits, y, classes) * inv_b;
         Ok((loss, acc))
     }
 
@@ -169,7 +195,7 @@ impl NativeBackend {
     /// the FLOPs hinge.  Returns (val CE, correct count, E[FLOPs]).
     #[allow(clippy::too_many_arguments)]
     fn arch_phase(
-        &self,
+        &mut self,
         state: &mut StateVec,
         sto: Option<&StoInputs>,
         xv: &[f32],
@@ -182,22 +208,24 @@ impl NativeBackend {
         let classes = self.num_classes;
         let coeffs = self.coeffs_from_state(state, sto)?;
         // validation forward with batch statistics; BN updates dropped.
-        let (tape, _bn) = self.net.forward(state, Some(&coeffs), xv, batch, true)?;
-        let val_ce = ops::cross_entropy(&tape.logits, yv, classes);
-        let correct = ops::correct_count(&tape.logits, yv, classes);
+        self.net.forward(state, Some(&coeffs), xv, batch, true, &mut self.arena)?;
+        let logits = &self.arena.tape.logits;
+        let val_ce = ops::cross_entropy(logits, yv, classes);
+        let correct = ops::correct_count(logits, yv, classes);
         let eflops = self.expected_mflops(&coeffs);
 
-        let mut probs = Vec::new();
-        ops::softmax_rows(&tape.logits, batch, classes, &mut probs);
+        ops::softmax_rows(logits, batch, classes, &mut self.probs);
         let inv_b = 1.0 / batch as f32;
-        let mut dlogits = vec![0f32; batch * classes];
+        self.dlogits.clear();
+        self.dlogits.resize(batch * classes, 0.0);
         for b in 0..batch {
             for c in 0..classes {
                 let i = b * classes + c;
-                dlogits[i] = (probs[i] - if yv[b] as usize == c { 1.0 } else { 0.0 }) * inv_b;
+                self.dlogits[i] =
+                    (self.probs[i] - if yv[b] as usize == c { 1.0 } else { 0.0 }) * inv_b;
             }
         }
-        let mut grads = self.net.backward(state, Some(&coeffs), &tape, &dlogits)?;
+        self.net.backward(state, Some(&coeffs), &mut self.arena, &self.dlogits, &mut self.grads)?;
 
         // FLOPs-hinge gradient (zero at or below target, like relu').
         if eflops > target as f64 && target > 0.0 {
@@ -212,8 +240,8 @@ impl NativeBackend {
                     .sum();
                 let base = *macs as f64 / (MIXED_DIVISOR * 1e6);
                 for j in 0..bits.len() {
-                    grads.dcw[l][j] += (scale * base * bits[j] as f64 * e_k) as f32;
-                    grads.dcx[l][j] += (scale * base * bits[j] as f64 * e_m) as f32;
+                    self.grads.dcw[l][j] += (scale * base * bits[j] as f64 * e_k) as f32;
+                    self.grads.dcx[l][j] += (scale * base * bits[j] as f64 * e_m) as f32;
                 }
             }
         }
@@ -228,15 +256,15 @@ impl NativeBackend {
             let mut gs = vec![0f32; n];
             match sto {
                 None => {
-                    quant::softmax_backward(&coeffs.cw[i], &grads.dcw[i], &mut gr);
-                    quant::softmax_backward(&coeffs.cx[i], &grads.dcx[i], &mut gs);
+                    quant::softmax_backward(&coeffs.cw[i], &self.grads.dcw[i], &mut gr);
+                    quant::softmax_backward(&coeffs.cx[i], &self.grads.dcx[i], &mut gs);
                 }
                 Some(g) => {
                     quant::gumbel_softmax_backward(
-                        r, &coeffs.cw[i], &grads.dcw[i], g.tau, &mut gr,
+                        r, &coeffs.cw[i], &self.grads.dcw[i], g.tau, &mut gr,
                     );
                     quant::gumbel_softmax_backward(
-                        s, &coeffs.cx[i], &grads.dcx[i], g.tau, &mut gs,
+                        s, &coeffs.cx[i], &self.grads.dcx[i], g.tau, &mut gs,
                     );
                 }
             }
@@ -248,25 +276,29 @@ impl NativeBackend {
     }
 
     fn eval_graph(
-        &self,
+        &mut self,
         state: &StateVec,
         coeffs: Option<&Coeffs>,
         io: &[(String, Tensor)],
     ) -> Result<Metrics> {
         let x = io_f32(io, "x")?;
         let y = io_get(io, "y")?.as_i32()?;
-        let (tape, _) = self.net.forward(state, coeffs, x, y.len(), false)?;
+        self.net.forward(state, coeffs, x, y.len(), false, &mut self.arena)?;
+        let logits = &self.arena.tape.logits;
         let mut m = Metrics::new();
-        m.insert("loss".into(), Tensor::scalar_f32(ops::cross_entropy(&tape.logits, y, self.num_classes)));
+        m.insert(
+            "loss".into(),
+            Tensor::scalar_f32(ops::cross_entropy(logits, y, self.num_classes)),
+        );
         m.insert(
             "correct".into(),
-            Tensor::scalar_f32(ops::correct_count(&tape.logits, y, self.num_classes)),
+            Tensor::scalar_f32(ops::correct_count(logits, y, self.num_classes)),
         );
         Ok(m)
     }
 
     fn infer_graph(
-        &self,
+        &mut self,
         state: &StateVec,
         coeffs: Option<&Coeffs>,
         io: &[(String, Tensor)],
@@ -274,17 +306,17 @@ impl NativeBackend {
         let x = io_get(io, "x")?;
         ensure!(x.shape().len() == 4, "infer input must be (B,H,W,C), got {:?}", x.shape());
         let batch = x.shape()[0];
-        let (tape, _) = self.net.forward(state, coeffs, x.as_f32()?, batch, false)?;
+        self.net.forward(state, coeffs, x.as_f32()?, batch, false, &mut self.arena)?;
         let mut m = Metrics::new();
         m.insert(
             "logits".into(),
-            Tensor::from_f32(&[batch, self.num_classes], tape.logits),
+            Tensor::from_f32(&[batch, self.num_classes], self.arena.tape.logits.clone()),
         );
         Ok(m)
     }
 
     fn search_graph(
-        &self,
+        &mut self,
         state: &mut StateVec,
         io: &[(String, Tensor)],
         stochastic: bool,
@@ -334,6 +366,10 @@ impl NativeBackend {
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.net.threads = threads;
     }
 
     /// Mirror of `model.init_state`: He-normal conv weights, uniform fc,
@@ -392,9 +428,9 @@ impl Backend for NativeBackend {
             "fp_train" => {
                 let x = io_f32(io, "x")?;
                 let y = io_get(io, "y")?.as_i32()?;
-                let (loss, acc) = self.weight_phase(
-                    state, None, x, y, io_scalar(io, "lr")?, io_scalar(io, "wd")?, None,
-                )?;
+                let lr = io_scalar(io, "lr")?;
+                let wd = io_scalar(io, "wd")?;
+                let (loss, acc) = self.weight_phase(state, None, x, y, lr, wd, None)?;
                 let mut m = Metrics::new();
                 m.insert("loss".into(), Tensor::scalar_f32(loss));
                 m.insert("acc".into(), Tensor::scalar_f32(acc));
@@ -409,13 +445,15 @@ impl Backend for NativeBackend {
                 let y = io_get(io, "y")?.as_i32()?;
                 let mu = io_scalar(io, "mu")?;
                 let teacher = io_f32(io, "teacher")?;
+                let lr = io_scalar(io, "lr")?;
+                let wd = io_scalar(io, "wd")?;
                 let (loss, acc) = self.weight_phase(
                     state,
                     Some(&coeffs),
                     x,
                     y,
-                    io_scalar(io, "lr")?,
-                    io_scalar(io, "wd")?,
+                    lr,
+                    wd,
                     Some((teacher, mu)),
                 )?;
                 let mut m = Metrics::new();

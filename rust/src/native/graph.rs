@@ -6,21 +6,35 @@
 //! conv) → train-mode BN → ReLU → qconv → BN, plus the projection
 //! shortcut when shape changes, residual add → ReLU; stem and classifier
 //! stay full precision (§B.2).  The tape stores exactly what the
-//! backward needs: pre-quant inputs, aggregated-quantized inputs,
-//! aggregated weights, the weight-normalization statistics, and the BN
-//! normalized values.
+//! backward needs: aggregated-quantized inputs, aggregated weights, the
+//! weight-normalization statistics, and the BN normalized values; raw
+//! layer inputs are *not* duplicated per layer — each layer's input is
+//! the previous layer's tape output (or the one arena-held copy of the
+//! batch), read by reference.
 //!
 //! Backward: STE through both quantizers (`native::quant`), true
 //! gradients through tanh/max/clip, BN gradients through the batch
 //! statistics (`native::ops`), and exact (linear) gradients for the
 //! per-layer branch coefficients — the inputs to Eq. 9/10's strength
 //! update.
+//!
+//! **Arena discipline (DESIGN.md §12).**  Every buffer either run
+//! touches — tape caches, im2col patches, BN scratch, the backward flow
+//! buffers, gradient leaves — lives in a step-persistent [`TapeArena`]
+//! / [`Grads`] pair owned by the caller.  Buffers are sized through
+//! `bd::scratch::ensure`, grow to the model's high-water mark during
+//! the first step, and are reused verbatim afterwards:
+//! [`TapeArena::stats`]`.grows` freezes after step one (regression
+//! tested) while the search loop runs thousands of steps.  Buffer
+//! contents between steps are unspecified; every kernel fully
+//! overwrites its output, which is what keeps reuse bit-deterministic.
 
 use std::collections::HashMap;
 
 use anyhow::{ensure, Result};
 
 use crate::bd::im2col::Patches;
+use crate::bd::scratch::{ensure as ensure_buf, ScratchStats};
 use crate::models::NetDesc;
 use crate::runtime::{LayerDesc, Manifest, StateVec};
 
@@ -34,36 +48,69 @@ pub struct Coeffs {
     pub cx: Vec<Vec<f32>>,
 }
 
-/// BN running-stat updates produced by a train-mode forward
-/// (`layer name → (new_mean, new_var)`); the caller decides whether to
-/// apply them (weight phase) or drop them (arch phase, DARTS practice).
+/// BN running-stat updates produced by a train-mode forward; the caller
+/// decides whether to apply them (weight phase) or drop them (arch
+/// phase, DARTS practice).  Slots are persistent: the layer order is
+/// fixed per model, so after the first step each slot — path Strings
+/// included — is reused in place and a step allocates nothing here.
 #[derive(Debug, Default)]
-pub struct BnUpdates(pub Vec<(String, Vec<f32>, Vec<f32>)>);
+pub struct BnUpdates {
+    entries: Vec<BnSlot>,
+    live: usize,
+}
+
+#[derive(Debug)]
+struct BnSlot {
+    mean_path: String,
+    var_path: String,
+    mean: Vec<f32>,
+    var: Vec<f32>,
+}
 
 impl BnUpdates {
+    fn begin_step(&mut self) {
+        self.live = 0;
+    }
+
+    /// The persistent (mean, var) destination slot for the layer with
+    /// the given state paths, allocated on first use (model layer order
+    /// is deterministic).
+    fn slot(
+        &mut self,
+        paths: &LayerPaths,
+        stats: &mut ScratchStats,
+    ) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        if self.live == self.entries.len() {
+            stats.grows += 1;
+            self.entries.push(BnSlot {
+                mean_path: paths.bn_mean.clone(),
+                var_path: paths.bn_var.clone(),
+                mean: Vec::new(),
+                var: Vec::new(),
+            });
+        }
+        let e = &mut self.entries[self.live];
+        debug_assert_eq!(e.mean_path, paths.bn_mean, "BN slot order must match layer order");
+        self.live += 1;
+        (&mut e.mean, &mut e.var)
+    }
+
     /// Write the updates into `state/bn/<name>/{mean,var}`.
     pub fn apply(&self, state: &mut StateVec) -> Result<()> {
-        for (name, mean, var) in &self.0 {
-            state
-                .get_mut(&format!("state/bn/{name}/mean"))?
-                .as_f32_mut()?
-                .copy_from_slice(mean);
-            state
-                .get_mut(&format!("state/bn/{name}/var"))?
-                .as_f32_mut()?
-                .copy_from_slice(var);
+        for e in &self.entries[..self.live] {
+            state.get_mut(&e.mean_path)?.as_f32_mut()?.copy_from_slice(&e.mean);
+            state.get_mut(&e.var_path)?.as_f32_mut()?.copy_from_slice(&e.var);
         }
         Ok(())
     }
 }
 
-#[derive(Default)]
+#[derive(Debug, Default)]
 struct ConvTape {
-    /// Pre-quantization input (B·h·w·ci NHWC).
-    x: Vec<f32>,
-    /// Aggregated-quantized conv input; empty when the layer ran FP.
+    /// Aggregated-quantized conv input; untouched when the layer ran FP.
     xq: Vec<f32>,
-    /// Weights the conv actually used (aggregated-quantized or raw copy).
+    /// Aggregated-quantized weights; untouched when the layer ran FP
+    /// (the backward re-reads the raw weights from the state).
     wq: Vec<f32>,
     wtape: WTape,
     alpha: f32,
@@ -75,75 +122,209 @@ struct ConvTape {
     quantized: bool,
 }
 
+#[derive(Debug, Default)]
 struct BlockTape {
     c1: ConvTape,
+    /// c1's post-ReLU output — c2's input (kept for the ReLU mask).
+    y1: Vec<f32>,
     c2: ConvTape,
     sc: Option<ConvTape>,
     /// Post-residual-ReLU block output (the next block's input).
     out: Vec<f32>,
 }
 
-/// Forward tape for one batch.
+/// Forward products of one batch, persisted inside [`TapeArena`].
+#[derive(Debug, Default)]
 pub struct Tape {
     pub batch: usize,
+    /// Arena-held copy of the batch input (stem backward + ReLU masks).
+    input: Vec<f32>,
     stem: ConvTape,
+    stem_out: Vec<f32>,
     blocks: Vec<BlockTape>,
     pooled: Vec<f32>,
     pub logits: Vec<f32>,
 }
 
-/// Gradients of one loss evaluation.
+/// Shared per-step scratch: one im2col patch matrix and the backward
+/// temporaries, all sized to the largest layer.
+#[derive(Debug, Default)]
+struct StepScratch {
+    patches: Patches,
+    conv_out: Vec<f32>,
+    bn: ops::BnScratch,
+    dconv: Vec<f32>,
+    gwq: Vec<f32>,
+    dxq: Vec<f32>,
+    dpooled: Vec<f32>,
+    dga: Vec<f32>,
+    dbe: Vec<f32>,
+    dfc_w: Vec<f32>,
+    dfc_b: Vec<f32>,
+}
+
+/// Activation-sized buffers that carry the forward shortcut branch and
+/// the backward gradient flow (kept apart from [`StepScratch`] so a
+/// flow buffer can be read while the scratch is mutably borrowed).
+#[derive(Debug, Default)]
+struct FlowBufs {
+    /// Forward: shortcut-branch output before the residual add.
+    ident: Vec<f32>,
+    /// Backward: gradient at the current block output.
+    dh: Vec<f32>,
+    /// Backward: gradient at c1's post-ReLU output.
+    dy1: Vec<f32>,
+    /// Backward: gradient at the block input (becomes the next `dh`).
+    dxb: Vec<f32>,
+    /// Backward: shortcut-branch input gradient.
+    dsc: Vec<f32>,
+}
+
+/// Step-persistent arena: the forward tape, the shared scratch, and the
+/// BN running-stat updates of the last train-mode forward.  Create once
+/// per engine (or test) and thread through every
+/// [`NativeNet::forward`]/[`NativeNet::backward`] call; after the first
+/// step at a given shape, no call allocates.
+#[derive(Debug, Default)]
+pub struct TapeArena {
+    pub tape: Tape,
+    scratch: StepScratch,
+    flow: FlowBufs,
+    pub bn_updates: BnUpdates,
+    pub stats: ScratchStats,
+}
+
+impl TapeArena {
+    pub fn new() -> TapeArena {
+        TapeArena::default()
+    }
+}
+
+/// Gradients of one loss evaluation.  Persistent like the arena: leaf
+/// vectors are allocated on first touch and zeroed-then-accumulated on
+/// every later step.
 #[derive(Debug, Default)]
 pub struct Grads {
     /// Dense grads keyed by full state path (`state/params/...`,
     /// `state/alphas/...`); alpha grads are length-1 vectors.
     pub by_path: HashMap<String, Vec<f32>>,
-    /// Branch-coefficient grads per qconv (empty in FP mode).
+    /// Branch-coefficient grads per qconv (zeroed but unused in FP mode).
     pub dcw: Vec<Vec<f32>>,
     pub dcx: Vec<Vec<f32>>,
 }
 
 impl Grads {
-    fn add(&mut self, path: String, g: Vec<f32>) {
-        match self.by_path.get_mut(&path) {
-            Some(acc) => {
-                for (a, v) in acc.iter_mut().zip(&g) {
-                    *a += v;
-                }
-            }
-            None => {
-                self.by_path.insert(path, g);
-            }
+    /// Zero every persistent leaf and size the coefficient rows.
+    fn begin_step(&mut self, layers: usize, n_bits: usize) {
+        for v in self.by_path.values_mut() {
+            v.fill(0.0);
+        }
+        for row in self.dcw.iter_mut().chain(self.dcx.iter_mut()) {
+            row.fill(0.0);
+        }
+        while self.dcw.len() < layers {
+            self.dcw.push(vec![0.0; n_bits]);
+        }
+        while self.dcx.len() < layers {
+            self.dcx.push(vec![0.0; n_bits]);
         }
     }
 }
 
-/// The native network: topology + candidate bits.
+/// The persistent, pre-zeroed gradient leaf for `path` (allocating only
+/// on the first step).  A free function over the map so callers can
+/// hold `dcw`/`dcx` borrows at the same time.
+fn grad_leaf<'a>(
+    map: &'a mut HashMap<String, Vec<f32>>,
+    path: &str,
+    len: usize,
+    stats: &mut ScratchStats,
+) -> &'a mut [f32] {
+    stats.calls += 1;
+    if !map.contains_key(path) {
+        stats.grows += 1;
+        map.insert(path.to_string(), vec![0.0; len]);
+    }
+    map.get_mut(path).unwrap().as_mut_slice()
+}
+
+/// Accumulate `src` into the persistent leaf for `path`.
+fn grad_accum(
+    map: &mut HashMap<String, Vec<f32>>,
+    path: &str,
+    src: &[f32],
+    stats: &mut ScratchStats,
+) {
+    let dst = grad_leaf(map, path, src.len(), stats);
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d += v;
+    }
+}
+
+/// State paths of one conv layer, composed once at construction so the
+/// step loop never formats path strings.
+#[derive(Debug, Clone)]
+struct LayerPaths {
+    w: String,
+    bn_gamma: String,
+    bn_beta: String,
+    bn_mean: String,
+    bn_var: String,
+    alpha: String,
+    /// Index into the qconv tables (None for the FP stem).
+    qi: Option<usize>,
+}
+
+/// The native network: topology + candidate bits + execution config.
 pub struct NativeNet {
     pub desc: NetDesc,
     pub bits: Vec<u32>,
     pub num_classes: usize,
+    /// Worker threads for the parallel kernels; `0` = machine
+    /// parallelism (results are bit-identical at any value).
+    pub threads: usize,
+    paths: HashMap<String, LayerPaths>,
 }
 
 impl NativeNet {
     pub fn from_manifest(m: &Manifest) -> Result<NativeNet> {
+        let desc = NetDesc::from_manifest(m)?;
+        let mut paths = HashMap::new();
+        for l in desc.inventory() {
+            if l.kind == "fc" {
+                continue;
+            }
+            let name = &l.name;
+            paths.insert(
+                name.clone(),
+                LayerPaths {
+                    w: format!("state/params/{name}/w"),
+                    bn_gamma: format!("state/params/bn_{name}/gamma"),
+                    bn_beta: format!("state/params/bn_{name}/beta"),
+                    bn_mean: format!("state/bn/{name}/mean"),
+                    bn_var: format!("state/bn/{name}/var"),
+                    alpha: format!("state/alphas/{name}"),
+                    qi: desc.qconv_names.iter().position(|n| n == name),
+                },
+            );
+        }
         Ok(NativeNet {
-            desc: NetDesc::from_manifest(m)?,
+            desc,
             bits: m.bits.clone(),
             num_classes: m.num_classes,
+            threads: 0,
+            paths,
         })
     }
 
-    fn qconv_index(&self, name: &str) -> usize {
-        self.desc
-            .qconv_names
-            .iter()
-            .position(|n| n == name)
-            .expect("qconv name from own topology")
+    fn layer_paths(&self, name: &str) -> &LayerPaths {
+        self.paths.get(name).expect("layer name from own topology")
     }
 
     /// One conv → BN (→ ReLU) layer forward.  `coeffs` present ⇒ run the
     /// EBS aggregated-quantized path (Eq. 6/17); absent ⇒ full precision.
+    /// `out` and `tape` are persistent arena slots; `scratch` holds the
+    /// shared patch matrix and conv output.
     #[allow(clippy::too_many_arguments)]
     fn conv_layer_forward(
         &self,
@@ -156,63 +337,70 @@ impl NativeNet {
         in_w: usize,
         train: bool,
         relu: bool,
+        tape: &mut ConvTape,
+        out: &mut Vec<f32>,
+        scratch: &mut StepScratch,
         bn_updates: &mut BnUpdates,
-    ) -> Result<(Vec<f32>, ConvTape)> {
-        let name = &desc.name;
-        let w = state.get(&format!("state/params/{name}/w"))?.as_f32()?;
-        let mut tape = ConvTape {
-            x: input.to_vec(),
-            in_h,
-            in_w,
-            ..ConvTape::default()
-        };
-        let quant = coeffs.is_some() && desc.kind == "qconv";
-        tape.quantized = quant;
-        let conv_in: &[f32] = if quant {
+        stats: &mut ScratchStats,
+    ) -> Result<()> {
+        let paths = self.layer_paths(&desc.name);
+        let w = state.get(&paths.w)?.as_f32()?;
+        tape.in_h = in_h;
+        tape.in_w = in_w;
+        let quantized = coeffs.is_some() && desc.kind == "qconv";
+        tape.quantized = quantized;
+        if quantized {
             let c = coeffs.unwrap();
-            let qi = self.qconv_index(name);
-            tape.alpha = state.get(&format!("state/alphas/{name}"))?.as_f32()?[0];
-            quant::ebs_act_forward(input, &c.cx[qi], tape.alpha, &self.bits, &mut tape.xq);
-            quant::ebs_weight_forward(w, &c.cw[qi], &self.bits, &mut tape.wq, &mut tape.wtape);
-            &tape.xq
-        } else {
-            tape.wq = w.to_vec();
-            &tape.x
-        };
+            let qi = paths.qi.expect("qconv has a coefficient row");
+            tape.alpha = state.get(&paths.alpha)?.as_f32()?[0];
+            ensure_buf(&mut tape.xq, input.len(), stats);
+            quant::ebs_act_forward(input, &c.cx[qi], tape.alpha, &self.bits, self.threads, &mut tape.xq);
+            ensure_buf(&mut tape.wq, w.len(), stats);
+            ensure_buf(&mut tape.wtape.t, w.len(), stats);
+            quant::ebs_weight_forward(w, &c.cw[qi], &self.bits, self.threads, &mut tape.wq, &mut tape.wtape);
+        }
+        {
+            let conv_in: &[f32] = if quantized { &tape.xq } else { input };
+            stats.calls += 1;
+            if ops::patches_of(
+                conv_in, batch, in_h, in_w, desc.in_ch, desc.ksize, desc.stride,
+                &mut scratch.patches,
+            ) {
+                stats.grows += 1;
+            }
+        }
+        tape.oh = scratch.patches.oh;
+        tape.ow = scratch.patches.ow;
+        ensure_buf(&mut scratch.conv_out, scratch.patches.n * desc.out_ch, stats);
+        let w_used: &[f32] = if quantized { &tape.wq } else { w };
+        ops::conv_forward(&scratch.patches, w_used, desc.out_ch, self.threads, &mut scratch.conv_out);
 
-        let mut patches = Patches::empty();
-        ops::patches_of(conv_in, batch, in_h, in_w, desc.in_ch, desc.ksize, desc.stride, &mut patches);
-        tape.oh = patches.oh;
-        tape.ow = patches.ow;
-        let mut conv_out = Vec::new();
-        ops::conv_forward(&patches, &tape.wq, desc.out_ch, &mut conv_out);
-
-        let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?;
-        let beta = state.get(&format!("state/params/bn_{name}/beta"))?.as_f32()?;
-        let rmean = state.get(&format!("state/bn/{name}/mean"))?.as_f32()?;
-        let rvar = state.get(&format!("state/bn/{name}/var"))?.as_f32()?;
-        let mut y = Vec::new();
+        let gamma = state.get(&paths.bn_gamma)?.as_f32()?;
+        let beta = state.get(&paths.bn_beta)?.as_f32()?;
+        let rmean = state.get(&paths.bn_mean)?.as_f32()?;
+        let rvar = state.get(&paths.bn_var)?.as_f32()?;
+        ensure_buf(out, scratch.conv_out.len(), stats);
         if train {
-            let (mut nm, mut nv) = (Vec::new(), Vec::new());
+            ensure_buf(&mut tape.bn.xhat, scratch.conv_out.len(), stats);
+            let (nm, nv) = bn_updates.slot(paths, stats);
             ops::bn_forward_train(
-                &conv_out, desc.out_ch, gamma, beta, rmean, rvar, &mut y, &mut tape.bn, &mut nm,
-                &mut nv,
+                &scratch.conv_out, desc.out_ch, gamma, beta, rmean, rvar, self.threads, out,
+                &mut tape.bn, nm, nv, &mut scratch.bn,
             );
-            bn_updates.0.push((name.clone(), nm, nv));
         } else {
-            ops::bn_forward_eval(&conv_out, desc.out_ch, gamma, beta, rmean, rvar, &mut y);
+            ops::bn_forward_eval(&scratch.conv_out, desc.out_ch, gamma, beta, rmean, rvar, out);
         }
         if relu {
-            for v in y.iter_mut() {
+            for v in out.iter_mut() {
                 *v = v.max(0.0);
             }
         }
-        Ok((y, tape))
+        Ok(())
     }
 
-    /// Full forward pass; `coeffs = None` runs the FP network.  Returns
-    /// the tape (logits inside) and the BN running-stat updates (empty
-    /// unless `train`).
+    /// Full forward pass into the arena; `coeffs = None` runs the FP
+    /// network.  Logits land in `arena.tape.logits`; BN running-stat
+    /// updates (empty unless `train`) in `arena.bn_updates`.
     pub fn forward(
         &self,
         state: &StateVec,
@@ -220,7 +408,8 @@ impl NativeNet {
         x: &[f32],
         batch: usize,
         train: bool,
-    ) -> Result<(Tape, BnUpdates)> {
+        arena: &mut TapeArena,
+    ) -> Result<()> {
         let stem_d = &self.desc.stem;
         ensure!(
             x.len() == batch * stem_d.in_hw * stem_d.in_hw * stem_d.in_ch,
@@ -239,72 +428,81 @@ impl NativeNet {
                 self.desc.qconv_names.len()
             );
         }
-        let mut bn_updates = BnUpdates::default();
-        let (h, stem_tape) = self.conv_layer_forward(
-            state, stem_d, None, x, batch, stem_d.in_hw, stem_d.in_hw, train, true, &mut bn_updates,
-        )?;
-        let (mut ch_h, mut ch_w) = (stem_tape.oh, stem_tape.ow);
+        let TapeArena { tape, scratch, flow, bn_updates, stats } = arena;
+        bn_updates.begin_step();
+        tape.batch = batch;
+        ensure_buf(&mut tape.input, x.len(), stats);
+        tape.input.copy_from_slice(x);
 
-        // Each block reads the previous block's tape output in place —
-        // no per-block activation copies beyond the tape's own caches.
-        let mut blocks: Vec<BlockTape> = Vec::with_capacity(self.desc.blocks.len());
-        for b in &self.desc.blocks {
-            let block_in: &[f32] = match blocks.last() {
-                Some(bt) => &bt.out,
-                None => &h,
+        self.conv_layer_forward(
+            state, stem_d, None, &tape.input, batch, stem_d.in_hw, stem_d.in_hw, train, true,
+            &mut tape.stem, &mut tape.stem_out, scratch, bn_updates, stats,
+        )?;
+        let (mut ch_h, mut ch_w) = (tape.stem.oh, tape.stem.ow);
+
+        if tape.blocks.len() != self.desc.blocks.len() {
+            stats.grows += 1;
+            tape.blocks.clear();
+            tape.blocks.resize_with(self.desc.blocks.len(), BlockTape::default);
+        }
+        for (i, b) in self.desc.blocks.iter().enumerate() {
+            // Each block reads the previous block's tape output in
+            // place — no per-block activation copies.
+            let (done, rest) = tape.blocks.split_at_mut(i);
+            let bt = &mut rest[0];
+            let block_in: &[f32] = match done.last() {
+                Some(prev) => &prev.out,
+                None => &tape.stem_out,
             };
-            let (y1, c1) = self.conv_layer_forward(
-                state, &b.c1, coeffs, block_in, batch, ch_h, ch_w, train, true, &mut bn_updates,
+            self.conv_layer_forward(
+                state, &b.c1, coeffs, block_in, batch, ch_h, ch_w, train, true, &mut bt.c1,
+                &mut bt.y1, scratch, bn_updates, stats,
             )?;
-            let (mut y2, c2) = self.conv_layer_forward(
-                state, &b.c2, coeffs, &y1, batch, c1.oh, c1.ow, train, false, &mut bn_updates,
+            self.conv_layer_forward(
+                state, &b.c2, coeffs, &bt.y1, batch, bt.c1.oh, bt.c1.ow, train, false, &mut bt.c2,
+                &mut bt.out, scratch, bn_updates, stats,
             )?;
-            let sc = match &b.shortcut {
+            match &b.shortcut {
                 Some(sd) => {
-                    let (ident, sct) = self.conv_layer_forward(
-                        state, sd, coeffs, block_in, batch, ch_h, ch_w, train, false,
-                        &mut bn_updates,
+                    let sct = bt.sc.get_or_insert_with(ConvTape::default);
+                    self.conv_layer_forward(
+                        state, sd, coeffs, block_in, batch, ch_h, ch_w, train, false, sct,
+                        &mut flow.ident, scratch, bn_updates, stats,
                     )?;
-                    for (v, id) in y2.iter_mut().zip(&ident) {
+                    for (v, id) in bt.out.iter_mut().zip(&flow.ident) {
                         *v = (*v + id).max(0.0);
                     }
-                    Some(sct)
                 }
                 None => {
-                    for (v, id) in y2.iter_mut().zip(block_in) {
+                    for (v, id) in bt.out.iter_mut().zip(block_in) {
                         *v = (*v + id).max(0.0);
                     }
-                    None
                 }
-            };
-            ch_h = c2.oh;
-            ch_w = c2.ow;
-            blocks.push(BlockTape { c1, c2, sc, out: y2 });
+            }
+            ch_h = bt.c2.oh;
+            ch_w = bt.c2.ow;
         }
 
         let co = self.desc.blocks.last().map(|b| b.c2.out_ch).unwrap_or(self.desc.stem.out_ch);
         let n = ch_h * ch_w;
-        let feat: &[f32] = match blocks.last() {
+        let feat: &[f32] = match tape.blocks.last() {
             Some(bt) => &bt.out,
-            None => &h,
+            None => &tape.stem_out,
         };
-        let mut pooled = Vec::new();
-        ops::gap_forward(feat, batch, n, co, &mut pooled);
+        ensure_buf(&mut tape.pooled, batch * co, stats);
+        ops::gap_forward(feat, batch, n, co, &mut tape.pooled);
         let fc_w = state.get("state/params/fc/w")?.as_f32()?;
         let fc_b = state.get("state/params/fc/b")?.as_f32()?;
-        let mut logits = Vec::new();
-        ops::fc_forward(&pooled, batch, co, self.num_classes, fc_w, fc_b, &mut logits);
-
-        Ok((
-            Tape { batch, stem: stem_tape, blocks, pooled, logits },
-            if train { bn_updates } else { BnUpdates::default() },
-        ))
+        ensure_buf(&mut tape.logits, batch * self.num_classes, stats);
+        ops::fc_forward(&tape.pooled, batch, co, self.num_classes, fc_w, fc_b, &mut tape.logits);
+        Ok(())
     }
 
     /// Backward through one conv→BN layer.  `dy` is the gradient at the
-    /// BN output (ReLU already unmasked by the caller).  Returns the
-    /// gradient at the layer's pre-quantization input, or `None` when
-    /// `need_dx` is false (the stem).
+    /// BN output (ReLU already unmasked by the caller); `x` is the
+    /// layer's pre-quantization input (a tape/arena borrow, never a
+    /// copy).  Writes the gradient at that input into `dx_out` when
+    /// requested (the stem passes `None`).
     #[allow(clippy::too_many_arguments)]
     fn conv_layer_backward(
         &self,
@@ -312,143 +510,168 @@ impl NativeNet {
         desc: &LayerDesc,
         coeffs: Option<&Coeffs>,
         tape: &ConvTape,
+        x: &[f32],
         dy: &[f32],
         batch: usize,
-        need_dx: bool,
+        dx_out: Option<&mut Vec<f32>>,
+        scratch: &mut StepScratch,
         grads: &mut Grads,
-    ) -> Result<Option<Vec<f32>>> {
-        let name = &desc.name;
-        let gamma = state.get(&format!("state/params/bn_{name}/gamma"))?.as_f32()?;
-        let mut dgamma = vec![0f32; desc.out_ch];
-        let mut dbeta = vec![0f32; desc.out_ch];
-        let mut dconv = Vec::new();
-        ops::bn_backward_train(dy, desc.out_ch, gamma, &tape.bn, &mut dconv, &mut dgamma, &mut dbeta);
-        grads.add(format!("state/params/bn_{name}/gamma"), dgamma);
-        grads.add(format!("state/params/bn_{name}/beta"), dbeta);
+        stats: &mut ScratchStats,
+    ) -> Result<()> {
+        let paths = self.layer_paths(&desc.name);
+        let gamma = state.get(&paths.bn_gamma)?.as_f32()?;
+        ensure_buf(&mut scratch.dga, desc.out_ch, stats);
+        scratch.dga.fill(0.0);
+        ensure_buf(&mut scratch.dbe, desc.out_ch, stats);
+        scratch.dbe.fill(0.0);
+        ensure_buf(&mut scratch.dconv, dy.len(), stats);
+        ops::bn_backward_train(
+            dy, desc.out_ch, gamma, &tape.bn, self.threads, &mut scratch.dconv,
+            &mut scratch.dga, &mut scratch.dbe, &mut scratch.bn,
+        );
+        grad_accum(&mut grads.by_path, &paths.bn_gamma, &scratch.dga, stats);
+        grad_accum(&mut grads.by_path, &paths.bn_beta, &scratch.dbe, stats);
 
-        let conv_in: &[f32] = if tape.quantized { &tape.xq } else { &tape.x };
-        let mut patches = Patches::empty();
-        ops::patches_of(
-            conv_in, batch, tape.in_h, tape.in_w, desc.in_ch, desc.ksize, desc.stride, &mut patches,
-        );
-        let mut gwq = vec![0f32; tape.wq.len()];
-        ops::conv_backward_w(&patches, &dconv, desc.out_ch, &mut gwq);
-        let mut dxq = vec![0f32; conv_in.len()];
-        ops::conv_backward_x(
-            &dconv, &tape.wq, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch, desc.ksize,
-            desc.stride, &mut dxq,
-        );
+        {
+            let conv_in: &[f32] = if tape.quantized { &tape.xq } else { x };
+            stats.calls += 1;
+            if ops::patches_of(
+                conv_in, batch, tape.in_h, tape.in_w, desc.in_ch, desc.ksize, desc.stride,
+                &mut scratch.patches,
+            ) {
+                stats.grows += 1;
+            }
+        }
 
         if tape.quantized {
             let c = coeffs.expect("quantized layer has coeffs");
-            let qi = self.qconv_index(name);
+            let qi = paths.qi.expect("qconv has a coefficient row");
             // weight path: STE + tanh/max backward, coefficient grads
-            let mut dw = vec![0f32; tape.wq.len()];
-            quant::ebs_weight_backward(&gwq, &c.cw[qi], &self.bits, &tape.wtape, &mut dw, &mut grads.dcw[qi]);
-            grads.add(format!("state/params/{name}/w"), dw);
+            ensure_buf(&mut scratch.gwq, tape.wq.len(), stats);
+            scratch.gwq.fill(0.0);
+            ops::conv_backward_w(&scratch.patches, &scratch.dconv, desc.out_ch, self.threads, &mut scratch.gwq);
+            let dw = grad_leaf(&mut grads.by_path, &paths.w, tape.wq.len(), stats);
+            quant::ebs_weight_backward(&scratch.gwq, &c.cw[qi], &self.bits, &tape.wtape, dw, &mut grads.dcw[qi]);
             // activation path: STE + clip backward, α + coefficient grads
-            let mut dx = Vec::new();
+            ensure_buf(&mut scratch.dxq, tape.xq.len(), stats);
+            ops::conv_backward_x(
+                &scratch.dconv, &tape.wq, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch,
+                desc.ksize, desc.stride, self.threads, &mut scratch.dxq,
+            );
+            let dx = dx_out.expect("quantized layers always propagate dx");
+            ensure_buf(dx, x.len(), stats);
             let mut dalpha = 0f32;
             quant::ebs_act_backward(
-                &dxq, &tape.x, &tape.xq, &c.cx[qi], tape.alpha, &self.bits, &mut dx, &mut dalpha,
+                &scratch.dxq, x, &tape.xq, &c.cx[qi], tape.alpha, &self.bits, dx, &mut dalpha,
                 &mut grads.dcx[qi],
             );
-            grads.add(format!("state/alphas/{name}"), vec![dalpha]);
-            Ok(need_dx.then_some(dx))
+            grad_accum(&mut grads.by_path, &paths.alpha, &[dalpha], stats);
         } else {
-            grads.add(format!("state/params/{name}/w"), gwq);
-            Ok(need_dx.then_some(dxq))
+            let w = state.get(&paths.w)?.as_f32()?;
+            let dw = grad_leaf(&mut grads.by_path, &paths.w, w.len(), stats);
+            ops::conv_backward_w(&scratch.patches, &scratch.dconv, desc.out_ch, self.threads, dw);
+            if let Some(dx) = dx_out {
+                ensure_buf(dx, x.len(), stats);
+                ops::conv_backward_x(
+                    &scratch.dconv, w, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch,
+                    desc.ksize, desc.stride, self.threads, dx,
+                );
+            }
         }
+        Ok(())
     }
 
-    /// Full backward from `dlogits`; returns parameter/α grads by state
-    /// path plus per-layer branch-coefficient grads.
+    /// Full backward from `dlogits` over the arena's tape.  Parameter/α
+    /// grads land in `grads.by_path` (zeroed and re-accumulated each
+    /// step), per-layer branch-coefficient grads in `grads.dcw`/`dcx`.
     pub fn backward(
         &self,
         state: &StateVec,
         coeffs: Option<&Coeffs>,
-        tape: &Tape,
+        arena: &mut TapeArena,
         dlogits: &[f32],
-    ) -> Result<Grads> {
-        let l = self.desc.qconv_names.len();
-        let n = self.bits.len();
-        let mut grads = Grads {
-            by_path: HashMap::new(),
-            dcw: vec![vec![0f32; n]; if coeffs.is_some() { l } else { 0 }],
-            dcx: vec![vec![0f32; n]; if coeffs.is_some() { l } else { 0 }],
-        };
+        grads: &mut Grads,
+    ) -> Result<()> {
+        grads.begin_step(self.desc.qconv_names.len(), self.bits.len());
+        let TapeArena { tape, scratch, flow, stats, .. } = arena;
         let batch = tape.batch;
         let co = self.desc.blocks.last().map(|b| b.c2.out_ch).unwrap_or(self.desc.stem.out_ch);
         let last = tape.blocks.last().expect("network has blocks");
-        let (feat_h, feat_w) = (last.c2.oh, last.c2.ow);
-        let npos = feat_h * feat_w;
+        let npos = last.c2.oh * last.c2.ow;
 
         // classifier
         let fc_w = state.get("state/params/fc/w")?.as_f32()?;
-        let mut dfc_w = vec![0f32; fc_w.len()];
-        let mut dfc_b = vec![0f32; self.num_classes];
-        let mut dpooled = Vec::new();
+        ensure_buf(&mut scratch.dfc_w, fc_w.len(), stats);
+        scratch.dfc_w.fill(0.0);
+        ensure_buf(&mut scratch.dfc_b, self.num_classes, stats);
+        scratch.dfc_b.fill(0.0);
+        ensure_buf(&mut scratch.dpooled, batch * co, stats);
         ops::fc_backward(
-            dlogits, &tape.pooled, batch, co, self.num_classes, fc_w, &mut dfc_w, &mut dfc_b,
-            &mut dpooled,
+            dlogits, &tape.pooled, batch, co, self.num_classes, fc_w, &mut scratch.dfc_w,
+            &mut scratch.dfc_b, &mut scratch.dpooled,
         );
-        grads.add("state/params/fc/w".into(), dfc_w);
-        grads.add("state/params/fc/b".into(), dfc_b);
-        let mut dh = Vec::new();
-        ops::gap_backward(&dpooled, batch, npos, co, &mut dh);
+        grad_accum(&mut grads.by_path, "state/params/fc/w", &scratch.dfc_w, stats);
+        grad_accum(&mut grads.by_path, "state/params/fc/b", &scratch.dfc_b, stats);
+        ensure_buf(&mut flow.dh, batch * npos * co, stats);
+        ops::gap_backward(&scratch.dpooled, batch, npos, co, &mut flow.dh);
 
         // residual blocks, reverse order
+        let FlowBufs { dh, dy1, dxb, dsc, .. } = flow;
         for (bi, b) in self.desc.blocks.iter().enumerate().rev() {
             let bt = &tape.blocks[bi];
-            // ReLU at the block output
+            let block_in: &[f32] = if bi == 0 { &tape.stem_out } else { &tape.blocks[bi - 1].out };
+            // ReLU at the block output; dh then holds the gradient at
+            // (y2 + ident).
             for (d, &o) in dh.iter_mut().zip(&bt.out) {
                 if o <= 0.0 {
                     *d = 0.0;
                 }
             }
-            let dsum = dh; // gradient at (y2 + ident)
-            // c2 branch
-            let mut dy1 = self
-                .conv_layer_backward(state, &b.c2, coeffs, &bt.c2, &dsum, batch, true, &mut grads)?
-                .expect("dx requested");
-            // ReLU between c1 and c2 (c2's input is c1's post-ReLU output)
-            for (d, &o) in dy1.iter_mut().zip(&bt.c2.x) {
+            // c2 branch (input = c1's post-ReLU output y1)
+            self.conv_layer_backward(
+                state, &b.c2, coeffs, &bt.c2, &bt.y1, dh, batch, Some(&mut *dy1), scratch, grads,
+                stats,
+            )?;
+            // ReLU between c1 and c2
+            for (d, &o) in dy1.iter_mut().zip(&bt.y1) {
                 if o <= 0.0 {
                     *d = 0.0;
                 }
             }
-            let mut dx_block = self
-                .conv_layer_backward(state, &b.c1, coeffs, &bt.c1, &dy1, batch, true, &mut grads)?
-                .expect("dx requested");
+            self.conv_layer_backward(
+                state, &b.c1, coeffs, &bt.c1, block_in, dy1, batch, Some(&mut *dxb), scratch,
+                grads, stats,
+            )?;
             // identity branch
             match (&b.shortcut, &bt.sc) {
                 (Some(sd), Some(sct)) => {
-                    let dsc = self
-                        .conv_layer_backward(state, sd, coeffs, sct, &dsum, batch, true, &mut grads)?
-                        .expect("dx requested");
-                    for (d, g) in dx_block.iter_mut().zip(&dsc) {
+                    self.conv_layer_backward(
+                        state, sd, coeffs, sct, block_in, dh, batch, Some(&mut *dsc), scratch,
+                        grads, stats,
+                    )?;
+                    for (d, g) in dxb.iter_mut().zip(&**dsc) {
                         *d += g;
                     }
                 }
                 _ => {
-                    for (d, g) in dx_block.iter_mut().zip(&dsum) {
+                    for (d, g) in dxb.iter_mut().zip(&**dh) {
                         *d += g;
                     }
                 }
             }
-            dh = dx_block;
+            std::mem::swap(dh, dxb);
         }
 
         // stem: ReLU mask (stem output is the first block's c1 input)
-        let stem_out = &tape.blocks[0].c1.x;
-        for (d, &o) in dh.iter_mut().zip(stem_out) {
+        for (d, &o) in dh.iter_mut().zip(&tape.stem_out) {
             if o <= 0.0 {
                 *d = 0.0;
             }
         }
         self.conv_layer_backward(
-            state, &self.desc.stem, None, &tape.stem, &dh, batch, false, &mut grads,
+            state, &self.desc.stem, None, &tape.stem, &tape.input, dh, batch, None, scratch,
+            grads, stats,
         )?;
-        Ok(grads)
+        Ok(())
     }
 }

@@ -13,7 +13,7 @@
 //! | [`models`]  | model registry + synthesized [`Manifest`]s (geometry, FLOPs tables, state spec) |
 //! | [`quant`]   | Eq. 1a-1c/3/6/17 aggregated quantization fwd + STE backward; Eq. 5/8 softmax & Gumbel-softmax coefficient maps |
 //! | [`ops`]     | SAME conv fwd/bwd (im2col adjoints), train-mode BN through batch stats, GAP, classifier, CE + label-refinery KL |
-//! | [`graph`]   | the supernet forward tape + full hand-written backward (Eq. 7 network, Eq. 18-19 gradients) |
+//! | [`graph`]   | the supernet forward tape + full hand-written backward (Eq. 7 network, Eq. 18-19 gradients), step-persistent [`TapeArena`]/[`Grads`] (DESIGN.md §12) |
 //! | [`optim`]   | Eq. 10 SGD-momentum (decay-masked) and Eq. 9 Adam on [`StateVec`] leaves |
 //! | [`backend`] | graph-name dispatch implementing [`crate::runtime::Backend`] |
 //!
@@ -28,5 +28,5 @@ pub mod optim;
 pub mod quant;
 
 pub use backend::NativeBackend;
-pub use graph::{Coeffs, NativeNet};
+pub use graph::{Coeffs, Grads, NativeNet, TapeArena};
 pub use models::{lookup, registry_names, synthesize_manifest, NativeModelCfg};

@@ -8,53 +8,85 @@
 //! norm with gradients *through* the batch statistics, global average
 //! pooling, the linear classifier, and softmax cross-entropy (+ the
 //! label-refinery KL term of §B.2).
+//!
+//! The conv and BN kernels take a `threads` argument and shard across
+//! the shared [`crate::kernels`] row partitioner.  Partitioning is
+//! always over *disjoint output slices* (conv columns, dW rows, dX
+//! images, BN channels/rows) and each element's reduction runs in the
+//! same serial order at any worker count, so every kernel is
+//! bit-identical at `threads = 1` and `threads = N` (DESIGN.md §12) —
+//! the property the same-seed search-replay guarantee stands on.
+//! GAP/classifier/softmax stay serial: they are single-pass O(B·co)
+//! tails that never show up in the step profile.
 
 use crate::bd::im2col::{im2col_batch_into, same_pad, Patches};
+use crate::kernels::{gate_threads, par_row_chunks, par_row_chunks_zip};
 
-/// out[n][co] = Σ_s patches[s][n] · w[s][co] (the conv-as-GEMM forward).
-pub fn conv_forward(p: &Patches, w: &[f32], co: usize, out: &mut Vec<f32>) {
+/// Columns per cache tile of the threaded conv forward: a tile of
+/// `CONV_N_TILE × co` outputs stays L1/L2-resident while the `s`
+/// patch rows stream through.
+const CONV_N_TILE: usize = 64;
+
+/// out[n][co] = Σ_s patches[s][n] · w[s][co] (the conv-as-GEMM forward),
+/// sharded over column ranges of the output; the accumulation over `s`
+/// is ascending per output element regardless of tiling or threads.
+pub fn conv_forward(p: &Patches, w: &[f32], co: usize, threads: usize, out: &mut Vec<f32>) {
     assert_eq!(w.len(), p.s * co);
     out.clear();
     out.resize(p.n * co, 0.0);
-    for s_idx in 0..p.s {
-        let wrow = &w[s_idx * co..(s_idx + 1) * co];
-        let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
-        for j in 0..p.n {
-            let pv = prow[j];
-            if pv == 0.0 {
-                continue;
+    let (s, n) = (p.s, p.n);
+    let threads = gate_threads(threads, (s * n * co) as u64);
+    par_row_chunks(out, n, co, threads, |j0, chunk| {
+        let jn = chunk.len() / co;
+        let mut t0 = 0;
+        while t0 < jn {
+            let t1 = (t0 + CONV_N_TILE).min(jn);
+            let tile = &mut chunk[t0 * co..t1 * co];
+            for s_idx in 0..s {
+                let wrow = &w[s_idx * co..(s_idx + 1) * co];
+                let prow = &p.data[s_idx * n + j0 + t0..s_idx * n + j0 + t1];
+                for (&pv, orow) in prow.iter().zip(tile.chunks_exact_mut(co)) {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += pv * wv;
+                    }
+                }
             }
-            let orow = &mut out[j * co..(j + 1) * co];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += pv * wv;
-            }
+            t0 = t1;
         }
-    }
+    });
 }
 
-/// dW[s][co] = Σ_j patches[s][j] · dY[j][co].
-pub fn conv_backward_w(p: &Patches, dy: &[f32], co: usize, dw: &mut [f32]) {
+/// dW[s][co] = Σ_j patches[s][j] · dY[j][co], accumulated into `dw`
+/// (callers zero it), sharded over rows of dW.
+pub fn conv_backward_w(p: &Patches, dy: &[f32], co: usize, threads: usize, dw: &mut [f32]) {
     assert_eq!(dy.len(), p.n * co);
     assert_eq!(dw.len(), p.s * co);
-    for s_idx in 0..p.s {
-        let prow = &p.data[s_idx * p.n..(s_idx + 1) * p.n];
-        let drow = &mut dw[s_idx * co..(s_idx + 1) * co];
-        for j in 0..p.n {
-            let pv = prow[j];
-            if pv == 0.0 {
-                continue;
-            }
-            let dyrow = &dy[j * co..(j + 1) * co];
-            for (d, &g) in drow.iter_mut().zip(dyrow) {
-                *d += pv * g;
+    let (s, n) = (p.s, p.n);
+    let threads = gate_threads(threads, (s * n * co) as u64);
+    par_row_chunks(dw, s, co, threads, |s0, chunk| {
+        for (si, drow) in chunk.chunks_exact_mut(co).enumerate() {
+            let prow = &p.data[(s0 + si) * n..(s0 + si + 1) * n];
+            for (j, &pv) in prow.iter().enumerate() {
+                if pv == 0.0 {
+                    continue;
+                }
+                let dyrow = &dy[j * co..(j + 1) * co];
+                for (d, &g) in drow.iter_mut().zip(dyrow) {
+                    *d += pv * g;
+                }
             }
         }
-    }
+    });
 }
 
 /// dX from dY: dPatch[s][j] = Σ_co w[s][co]·dY[j][co], scattered back
 /// through the im2col geometry (the exact adjoint of
 /// [`im2col_batch_into`]'s gather, including SAME padding drops).
+/// Sharded over images — each worker owns the disjoint dX slice of its
+/// batch range, so the overlapping-window scatter never races.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_backward_x(
     dy: &[f32],
@@ -66,6 +98,7 @@ pub fn conv_backward_x(
     co: usize,
     k: usize,
     stride: usize,
+    threads: usize,
     dx: &mut [f32],
 ) {
     let (oh, pad_top, _) = same_pad(h, k, stride);
@@ -73,42 +106,46 @@ pub fn conv_backward_x(
     let n1 = oh * ow;
     assert_eq!(dy.len(), batch * n1 * co);
     assert_eq!(dx.len(), batch * h * wd * ci);
-    dx.fill(0.0);
     let img_sz = h * wd * ci;
-    for b in 0..batch {
-        let dxi = &mut dx[b * img_sz..(b + 1) * img_sz];
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let col = b * n1 + oy * ow + ox;
-                let dyrow = &dy[col * co..(col + 1) * co];
-                for kh in 0..k {
-                    let iy = (oy * stride + kh) as isize - pad_top as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let ix = (ox * stride + kw) as isize - pad_left as isize;
-                        if ix < 0 || ix >= wd as isize {
+    let threads = gate_threads(threads, (batch * n1 * k * k * ci * co) as u64);
+    par_row_chunks(dx, batch, img_sz, threads, |b0, chunk| {
+        for (bi, dxi) in chunk.chunks_exact_mut(img_sz).enumerate() {
+            let b = b0 + bi;
+            dxi.fill(0.0);
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let col = b * n1 + oy * ow + ox;
+                    let dyrow = &dy[col * co..(col + 1) * co];
+                    for kh in 0..k {
+                        let iy = (oy * stride + kh) as isize - pad_top as isize;
+                        if iy < 0 || iy >= h as isize {
                             continue;
                         }
-                        let dst = ((iy as usize) * wd + ix as usize) * ci;
-                        let wrow_base = (kh * k + kw) * ci;
-                        for c in 0..ci {
-                            let wrow = &w[(wrow_base + c) * co..(wrow_base + c + 1) * co];
-                            let mut acc = 0f32;
-                            for (&wv, &g) in wrow.iter().zip(dyrow) {
-                                acc += wv * g;
+                        for kw in 0..k {
+                            let ix = (ox * stride + kw) as isize - pad_left as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
                             }
-                            dxi[dst + c] += acc;
+                            let dst = ((iy as usize) * wd + ix as usize) * ci;
+                            let wrow_base = (kh * k + kw) * ci;
+                            for c in 0..ci {
+                                let wrow = &w[(wrow_base + c) * co..(wrow_base + c + 1) * co];
+                                let mut acc = 0f32;
+                                for (&wv, &g) in wrow.iter().zip(dyrow) {
+                                    acc += wv * g;
+                                }
+                                dxi[dst + c] += acc;
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
 }
 
-/// Gather im2col patches (shared scratch-friendly wrapper).
+/// Gather im2col patches (shared scratch-friendly wrapper); returns
+/// `true` when the patch buffer had to grow (arena accounting).
 #[allow(clippy::too_many_arguments)]
 pub fn patches_of(
     x: &[f32],
@@ -119,8 +156,8 @@ pub fn patches_of(
     k: usize,
     stride: usize,
     p: &mut Patches,
-) {
-    im2col_batch_into(x, batch, h, w, ci, k, stride, p);
+) -> bool {
+    im2col_batch_into(x, batch, h, w, ci, k, stride, p)
 }
 
 pub const BN_MOMENTUM: f32 = 0.9;
@@ -133,10 +170,21 @@ pub struct BnTape {
     pub inv_std: Vec<f32>,
 }
 
+/// Reusable f64 per-channel accumulators for the BN kernels (mean/var
+/// on the forward, Σdy/Σdy·x̂ on the backward) — arena-owned so the
+/// train step allocates nothing in steady state.
+#[derive(Debug, Clone, Default)]
+pub struct BnScratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+}
+
 /// Train-mode BN over an NHWC buffer laid out `n × co` (n = B·H·W).
-/// Writes y in place of nothing — returns y; fills the tape and the new
-/// running stats (momentum 0.9, biased batch variance, matching
-/// `layers.batch_norm`).
+/// Returns y; fills the tape and the new running stats (momentum 0.9,
+/// biased batch variance, matching `layers.batch_norm`).  The
+/// per-channel statistics shard over channel ranges — each channel's
+/// f64 sum runs rows-ascending on one worker, identical to the serial
+/// order — and the normalize pass shards over rows.
 #[allow(clippy::too_many_arguments)]
 pub fn bn_forward_train(
     x: &[f32],
@@ -145,28 +193,41 @@ pub fn bn_forward_train(
     beta: &[f32],
     run_mean: &[f32],
     run_var: &[f32],
+    threads: usize,
     y: &mut Vec<f32>,
     tape: &mut BnTape,
     new_mean: &mut Vec<f32>,
     new_var: &mut Vec<f32>,
+    scratch: &mut BnScratch,
 ) {
     let n = x.len() / co;
     assert_eq!(x.len(), n * co);
-    let mut mean = vec![0f64; co];
-    for row in x.chunks_exact(co) {
-        for (m, &v) in mean.iter_mut().zip(row) {
-            *m += v as f64;
+    let stat_threads = gate_threads(threads, 2 * x.len() as u64).min(co);
+    let BnScratch { a: mean, b: var } = scratch;
+    mean.clear();
+    mean.resize(co, 0.0);
+    par_row_chunks(mean, co, 1, stat_threads, |c0, mchunk| {
+        for row in x.chunks_exact(co) {
+            for (m, &v) in mchunk.iter_mut().zip(&row[c0..c0 + mchunk.len()]) {
+                *m += v as f64;
+            }
         }
-    }
+    });
     for m in mean.iter_mut() {
         *m /= n as f64;
     }
-    let mut var = vec![0f64; co];
-    for row in x.chunks_exact(co) {
-        for c in 0..co {
-            let d = row[c] as f64 - mean[c];
-            var[c] += d * d;
-        }
+    var.clear();
+    var.resize(co, 0.0);
+    {
+        let mean = &*mean;
+        par_row_chunks(var, co, 1, stat_threads, |c0, vchunk| {
+            for row in x.chunks_exact(co) {
+                for (j, v) in vchunk.iter_mut().enumerate() {
+                    let d = row[c0 + j] as f64 - mean[c0 + j];
+                    *v += d * d;
+                }
+            }
+        });
     }
     for v in var.iter_mut() {
         *v /= n as f64;
@@ -178,12 +239,21 @@ pub fn bn_forward_train(
     tape.xhat.resize(x.len(), 0.0);
     y.clear();
     y.resize(x.len(), 0.0);
-    for (i, row) in x.chunks_exact(co).enumerate() {
-        for c in 0..co {
-            let xh = (row[c] - mean[c] as f32) * tape.inv_std[c];
-            tape.xhat[i * co + c] = xh;
-            y[i * co + c] = gamma[c] * xh + beta[c];
-        }
+    {
+        let (mean, inv_std) = (&*mean, &tape.inv_std);
+        let norm_threads = gate_threads(threads, 2 * x.len() as u64);
+        par_row_chunks_zip(&mut tape.xhat, y, n, co, co, norm_threads, |i0, xh, yc| {
+            for (r, (xh_row, y_row)) in
+                xh.chunks_exact_mut(co).zip(yc.chunks_exact_mut(co)).enumerate()
+            {
+                let row = &x[(i0 + r) * co..(i0 + r + 1) * co];
+                for c in 0..co {
+                    let v = (row[c] - mean[c] as f32) * inv_std[c];
+                    xh_row[c] = v;
+                    y_row[c] = gamma[c] * v + beta[c];
+                }
+            }
+        });
     }
     new_mean.clear();
     new_var.clear();
@@ -220,25 +290,39 @@ pub fn bn_forward_eval(
 }
 
 /// Train-mode BN backward *through the batch statistics*:
-/// dx = γ·σ⁻¹·(dy − mean(dy) − x̂·mean(dy·x̂)); dγ = Σ dy·x̂; dβ = Σ dy.
+/// dx = γ·σ⁻¹·(dy − mean(dy) − x̂·mean(dy·x̂)); dγ += Σ dy·x̂; dβ += Σ dy.
+/// The two per-channel sums shard over channel ranges (rows-ascending
+/// per channel, as in the forward); the dx pass shards over rows.
 #[allow(clippy::too_many_arguments)]
 pub fn bn_backward_train(
     dy: &[f32],
     co: usize,
     gamma: &[f32],
     tape: &BnTape,
+    threads: usize,
     dx: &mut Vec<f32>,
     dgamma: &mut [f32],
     dbeta: &mut [f32],
+    scratch: &mut BnScratch,
 ) {
     let n = dy.len() / co;
-    let mut sum_dy = vec![0f64; co];
-    let mut sum_dyxh = vec![0f64; co];
-    for (i, row) in dy.chunks_exact(co).enumerate() {
-        for c in 0..co {
-            sum_dy[c] += row[c] as f64;
-            sum_dyxh[c] += row[c] as f64 * tape.xhat[i * co + c] as f64;
-        }
+    let BnScratch { a: sum_dy, b: sum_dyxh } = scratch;
+    sum_dy.clear();
+    sum_dy.resize(co, 0.0);
+    sum_dyxh.clear();
+    sum_dyxh.resize(co, 0.0);
+    let stat_threads = gate_threads(threads, 2 * dy.len() as u64).min(co);
+    {
+        let xhat = &tape.xhat;
+        par_row_chunks_zip(sum_dy, sum_dyxh, co, 1, 1, stat_threads, |c0, sa, sb| {
+            for (i, row) in dy.chunks_exact(co).enumerate() {
+                for j in 0..sa.len() {
+                    let c = c0 + j;
+                    sa[j] += row[c] as f64;
+                    sb[j] += row[c] as f64 * xhat[i * co + c] as f64;
+                }
+            }
+        });
     }
     for c in 0..co {
         dgamma[c] += sum_dyxh[c] as f32;
@@ -247,14 +331,20 @@ pub fn bn_backward_train(
     let inv_n = 1.0 / n as f32;
     dx.clear();
     dx.resize(dy.len(), 0.0);
-    for (i, row) in dy.chunks_exact(co).enumerate() {
-        for c in 0..co {
-            let term = row[c]
-                - inv_n * sum_dy[c] as f32
-                - tape.xhat[i * co + c] * inv_n * sum_dyxh[c] as f32;
-            dx[i * co + c] = gamma[c] * tape.inv_std[c] * term;
+    let (sum_dy, sum_dyxh) = (&*sum_dy, &*sum_dyxh);
+    let row_threads = gate_threads(threads, 2 * dy.len() as u64);
+    par_row_chunks(dx, n, co, row_threads, |i0, chunk| {
+        for (r, drow) in chunk.chunks_exact_mut(co).enumerate() {
+            let i = i0 + r;
+            let row = &dy[i * co..(i + 1) * co];
+            for c in 0..co {
+                let term = row[c]
+                    - inv_n * sum_dy[c] as f32
+                    - tape.xhat[i * co + c] * inv_n * sum_dyxh[c] as f32;
+                drow[c] = gamma[c] * tape.inv_std[c] * term;
+            }
         }
-    }
+    });
 }
 
 /// Global average pool over each image's `n = oh·ow` positions:
@@ -429,10 +519,14 @@ mod tests {
     #[test]
     fn bn_train_normalizes_and_backprops_zero_for_uniform_dy() {
         // x with per-channel mean 2 / values {1,3}; gamma=1, beta=0.
-        let x = vec![1.0f32, 3.0, 3.0, 1.0]; // n=4 rows? co=1, n=4
+        let x = vec![1.0f32, 3.0, 3.0, 1.0]; // co=1, n=4
         let (mut y, mut tape) = (Vec::new(), BnTape::default());
         let (mut nm, mut nv) = (Vec::new(), Vec::new());
-        bn_forward_train(&x, 1, &[1.0], &[0.0], &[0.0], &[1.0], &mut y, &mut tape, &mut nm, &mut nv);
+        let mut bns = BnScratch::default();
+        bn_forward_train(
+            &x, 1, &[1.0], &[0.0], &[0.0], &[1.0], 1, &mut y, &mut tape, &mut nm, &mut nv,
+            &mut bns,
+        );
         let mean: f32 = y.iter().sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
         assert!((nm[0] - 0.1 * 2.0).abs() < 1e-6); // 0.9·0 + 0.1·2
@@ -440,7 +534,7 @@ mod tests {
         let dy = vec![0.7f32; 4];
         let mut dx = Vec::new();
         let (mut dg, mut db) = (vec![0f32], vec![0f32]);
-        bn_backward_train(&dy, 1, &[1.0], &tape, &mut dx, &mut dg, &mut db);
+        bn_backward_train(&dy, 1, &[1.0], &tape, 1, &mut dx, &mut dg, &mut db, &mut bns);
         assert!(dx.iter().all(|d| d.abs() < 1e-6), "{dx:?}");
         assert!((db[0] - 2.8).abs() < 1e-6);
     }
@@ -449,7 +543,7 @@ mod tests {
     fn conv_backward_x_is_adjoint_of_forward() {
         // <conv(x), dy> == <x, conv_backward_x(dy)> — the defining
         // property of the transpose, checked on random small shapes.
-        let mut rng = crate::util::Rng::new(0xADJ0);
+        let mut rng = crate::util::Rng::new(0xAD70);
         for _ in 0..10 {
             let (b, h, w, ci, co, k) = (2usize, 5usize, 4usize, 3usize, 2usize, 3usize);
             let stride = 1 + rng.below(2);
@@ -458,10 +552,10 @@ mod tests {
             let mut p = Patches::empty();
             patches_of(&x, b, h, w, ci, k, stride, &mut p);
             let mut y = Vec::new();
-            conv_forward(&p, &wts, co, &mut y);
+            conv_forward(&p, &wts, co, 1, &mut y);
             let dy: Vec<f32> = (0..y.len()).map(|_| rng.normal()).collect();
             let mut dx = vec![0f32; x.len()];
-            conv_backward_x(&dy, &wts, b, h, w, ci, co, k, stride, &mut dx);
+            conv_backward_x(&dy, &wts, b, h, w, ci, co, k, stride, 1, &mut dx);
             let lhs: f64 = y.iter().zip(&dy).map(|(&a, &g)| (a * g) as f64).sum();
             let rhs: f64 = x.iter().zip(&dx).map(|(&a, &g)| (a * g) as f64).sum();
             assert!(
@@ -481,10 +575,10 @@ mod tests {
         let mut p = Patches::empty();
         patches_of(&x, b, h, w, ci, k, stride, &mut p);
         let mut dw = vec![0f32; wts.len()];
-        conv_backward_w(&p, &dy, co, &mut dw);
+        conv_backward_w(&p, &dy, co, 1, &mut dw);
         let loss = |wv: &[f32]| -> f64 {
             let mut y = Vec::new();
-            conv_forward(&p, wv, co, &mut y);
+            conv_forward(&p, wv, co, 1, &mut y);
             y.iter().zip(&dy).map(|(&a, &g)| (a * g) as f64).sum()
         };
         let eps = 1e-2f32;

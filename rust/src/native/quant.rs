@@ -16,7 +16,16 @@
 //! * The branch coefficients enter *linearly* (Eq. 6/17), so their
 //!   gradients are exact inner products against the per-branch
 //!   quantized views — no STE needed.
+//!
+//! The two forward aggregations take a `threads` argument: they are
+//! purely element-wise (plus one exact max/argmax reduction, see
+//! [`crate::kernels::par_max_abs`]), so sharding them over element
+//! ranges is bit-identical at any worker count (DESIGN.md §12).  The
+//! backward passes stay single-threaded on purpose: their coefficient
+//! and α gradients are whole-tensor serial f64 reductions whose
+//! summation order the same-seed replay guarantee pins.
 
+use crate::kernels::{gate_threads, par_max_abs, par_row_chunks};
 use crate::quant::round_half_up;
 
 /// Eq. 1c with de-quantize rescale: `round_half_up(u·levels)/levels`.
@@ -38,38 +47,42 @@ pub struct WTape {
 }
 
 /// Eq. 6: wq = Σ_i p_i · (2·quantize_b(norm(w), b_i) − 1).
+/// Element-sharded; the max|tanh| reduction is exact under chunking and
+/// its argmax tie-break matches the serial scan ([`par_max_abs`]).
 pub fn ebs_weight_forward(
     w: &[f32],
     p: &[f32],
     bits: &[u32],
+    threads: usize,
     wq: &mut Vec<f32>,
     tape: &mut WTape,
 ) {
     assert_eq!(p.len(), bits.len());
+    let threads = gate_threads(threads, (w.len() * (4 + 2 * bits.len())) as u64);
     tape.t.clear();
-    tape.t.reserve(w.len());
-    let (mut t_max, mut argmax) = (0f32, 0usize);
-    for (j, &v) in w.iter().enumerate() {
-        let t = v.tanh();
-        if t.abs() > t_max {
-            t_max = t.abs();
-            argmax = j;
+    tape.t.resize(w.len(), 0.0);
+    par_row_chunks(&mut tape.t, w.len(), 1, threads, |j0, chunk| {
+        for (j, t) in chunk.iter_mut().enumerate() {
+            *t = w[j0 + j].tanh();
         }
-        tape.t.push(t);
-    }
+    });
+    let (t_max, argmax) = par_max_abs(&tape.t, threads);
     tape.t_max = t_max.max(f32::MIN_POSITIVE);
     tape.argmax = argmax;
     wq.clear();
-    wq.reserve(w.len());
+    wq.resize(w.len(), 0.0);
     let denom = 2.0 * tape.t_max;
-    for &t in &tape.t {
-        let norm = t / denom + 0.5;
-        let mut agg = 0f32;
-        for (i, &b) in bits.iter().enumerate() {
-            agg += p[i] * (2.0 * quantize_b(norm, b) - 1.0);
+    let t = &tape.t;
+    par_row_chunks(wq, w.len(), 1, threads, |j0, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let norm = t[j0 + j] / denom + 0.5;
+            let mut agg = 0f32;
+            for (i, &b) in bits.iter().enumerate() {
+                agg += p[i] * (2.0 * quantize_b(norm, b) - 1.0);
+            }
+            *o = agg;
         }
-        wq.push(agg);
-    }
+    });
 }
 
 /// Backward of [`ebs_weight_forward`]: STE through `quantize_b`, true
@@ -110,26 +123,37 @@ pub fn ebs_weight_backward(
 }
 
 /// Eq. 17: xq = α · Σ_i p_i · quantize_b(clip(x,0,α)/α, b_i).
+/// Element-sharded (purely element-wise, so bit-identical at any
+/// thread count).
 ///
 /// A non-positive α (possible transiently under SGD) clips everything
 /// to zero instead of producing NaNs — the same convention as
 /// `quant::quantize_acts`.
-pub fn ebs_act_forward(x: &[f32], p: &[f32], alpha: f32, bits: &[u32], xq: &mut Vec<f32>) {
+pub fn ebs_act_forward(
+    x: &[f32],
+    p: &[f32],
+    alpha: f32,
+    bits: &[u32],
+    threads: usize,
+    xq: &mut Vec<f32>,
+) {
     assert_eq!(p.len(), bits.len());
     xq.clear();
+    xq.resize(x.len(), 0.0);
     if alpha <= 0.0 {
-        xq.resize(x.len(), 0.0);
         return;
     }
-    xq.reserve(x.len());
-    for &v in x {
-        let u = v.clamp(0.0, alpha) / alpha;
-        let mut agg = 0f32;
-        for (i, &b) in bits.iter().enumerate() {
-            agg += p[i] * quantize_b(u, b);
+    let threads = gate_threads(threads, (x.len() * 2 * bits.len()) as u64);
+    par_row_chunks(xq, x.len(), 1, threads, |j0, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let u = x[j0 + j].clamp(0.0, alpha) / alpha;
+            let mut agg = 0f32;
+            for (i, &b) in bits.iter().enumerate() {
+                agg += p[i] * quantize_b(u, b);
+            }
+            *o = alpha * agg;
         }
-        xq.push(alpha * agg);
-    }
+    });
 }
 
 /// Backward of [`ebs_act_forward`].  `xq` is the forward output (the
@@ -241,7 +265,7 @@ mod tests {
             let mut p = [0f32; 5];
             p[i] = 1.0;
             let (mut wq, mut tape) = (Vec::new(), WTape::default());
-            ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+            ebs_weight_forward(&w, &p, &BITS, 1, &mut wq, &mut tape);
             let reference = fake_quant_weights(&w, b);
             for (a, r) in wq.iter().zip(&reference) {
                 assert!((a - r).abs() < 1e-6, "bit {b}: {a} vs {r}");
@@ -258,7 +282,7 @@ mod tests {
             let mut p = [0f32; 5];
             p[i] = 1.0;
             let mut xq = Vec::new();
-            ebs_act_forward(&x, &p, alpha, &BITS, &mut xq);
+            ebs_act_forward(&x, &p, alpha, &BITS, 1, &mut xq);
             let mut codes = vec![0u8; x.len()];
             let scale = quantize_acts(&x, alpha, b, &mut codes);
             for (a, &c) in xq.iter().zip(&codes) {
@@ -276,7 +300,7 @@ mod tests {
         let p = [0.1f32, 0.2, 0.3, 0.25, 0.15];
         let gwq: Vec<f32> = (0..w.len()).map(|_| rng.normal()).collect();
         let (mut wq, mut tape) = (Vec::new(), WTape::default());
-        ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+        ebs_weight_forward(&w, &p, &BITS, 1, &mut wq, &mut tape);
         let mut dw = vec![0f32; w.len()];
         let mut dp = vec![0f32; 5];
         ebs_weight_backward(&gwq, &p, &BITS, &tape, &mut dw, &mut dp);
@@ -321,12 +345,12 @@ mod tests {
         let alpha = 3.0f32;
 
         let (mut wq, mut tape) = (Vec::new(), WTape::default());
-        ebs_weight_forward(&w, &p, &BITS, &mut wq, &mut tape);
+        ebs_weight_forward(&w, &p, &BITS, 1, &mut wq, &mut tape);
         let (mut dw, mut dpw) = (vec![0f32; 30], vec![0f32; 5]);
         ebs_weight_backward(&gout, &p, &BITS, &tape, &mut dw, &mut dpw);
 
         let mut xq = Vec::new();
-        ebs_act_forward(&x, &p, alpha, &BITS, &mut xq);
+        ebs_act_forward(&x, &p, alpha, &BITS, 1, &mut xq);
         let (mut dx, mut da, mut dpx) = (Vec::new(), 0f32, vec![0f32; 5]);
         ebs_act_backward(&gout, &x, &xq, &p, alpha, &BITS, &mut dx, &mut da, &mut dpx);
 
@@ -339,8 +363,8 @@ mod tests {
             let mut a = Vec::new();
             let mut b = Vec::new();
             let mut tp = WTape::default();
-            ebs_weight_forward(&w, &pp, &BITS, &mut a, &mut tp);
-            ebs_weight_forward(&w, &pm, &BITS, &mut b, &mut tp);
+            ebs_weight_forward(&w, &pp, &BITS, 1, &mut a, &mut tp);
+            ebs_weight_forward(&w, &pm, &BITS, 1, &mut b, &mut tp);
             let num_w: f64 = a
                 .iter()
                 .zip(&b)
@@ -350,8 +374,8 @@ mod tests {
                 / (2.0 * eps as f64);
             assert!((num_w - dpw[i] as f64).abs() < 1e-3 * num_w.abs().max(1.0), "dpw[{i}]");
 
-            ebs_act_forward(&x, &pp, alpha, &BITS, &mut a);
-            ebs_act_forward(&x, &pm, alpha, &BITS, &mut b);
+            ebs_act_forward(&x, &pp, alpha, &BITS, 1, &mut a);
+            ebs_act_forward(&x, &pm, alpha, &BITS, 1, &mut b);
             let num_x: f64 = a
                 .iter()
                 .zip(&b)
@@ -371,7 +395,7 @@ mod tests {
         let x = [-1.0f32, 0.3, 2.5, 1.0];
         let p = [0.0f32, 1.0, 0.0, 0.0, 0.0];
         let mut xq = Vec::new();
-        ebs_act_forward(&x, &p, 2.0, &BITS, &mut xq);
+        ebs_act_forward(&x, &p, 2.0, &BITS, 1, &mut xq);
         assert_eq!(xq, vec![0.0, 0.0, 2.0, 2.0 * 2.0 / 3.0]);
         let gxq = [1.0f32; 4];
         let (mut dx, mut da, mut dp) = (Vec::new(), 0f32, vec![0f32; 5]);

@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::bd::gemm::auto_threads;
+use crate::kernels::auto_threads;
 use crate::bd::{BdConvLayer, BdEngineCfg, BdExec, BdScratch};
 use crate::util::json::Json;
 use crate::util::Rng;

@@ -40,6 +40,15 @@ pub trait Backend {
         )
     }
 
+    /// Configure the backend's worker-thread count (`0` = machine
+    /// parallelism).  Backends whose kernels are not threaded ignore
+    /// this; the native backend fans its conv/BN/quant kernels out over
+    /// `crate::kernels` — with bit-identical results at any count
+    /// (DESIGN.md §12), so this is purely a performance knob.
+    fn set_threads(&mut self, threads: usize) {
+        let _ = threads;
+    }
+
     /// Warm a graph (compile/cache); a no-op for interpreters.
     fn prepare(&mut self, manifest: &Manifest, graph: &str) -> Result<()>;
 

@@ -123,6 +123,13 @@ impl Engine {
         self.backend.name()
     }
 
+    /// Worker threads for the backend's kernels (`0` = machine
+    /// parallelism; `run.threads`/`--threads`).  Bit-identical results
+    /// at any count — a pure wall-clock knob.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.backend.set_threads(threads);
+    }
+
     /// Compile (or fetch cached) a graph by name; no-op on native.
     pub fn prepare(&mut self, graph: &str) -> Result<()> {
         self.backend.prepare(&self.manifest, graph)

@@ -14,7 +14,7 @@
 
 use ebs::coordinator::FlopsModel;
 use ebs::native::graph::Coeffs;
-use ebs::native::{quant, NativeNet};
+use ebs::native::{quant, Grads, NativeNet, TapeArena};
 use ebs::runtime::{metric_f32, Engine, StateVec, Tensor};
 use ebs::util::Rng;
 
@@ -37,9 +37,16 @@ fn cosine(a: &[f32], b: &[f64]) -> f64 {
 
 /// CE loss of an FP forward at the given state (batch statistics mode,
 /// updates discarded) — the scalar function the FP grad-check probes.
-fn fp_loss(net: &NativeNet, state: &StateVec, x: &[f32], y: &[i32], classes: usize) -> f64 {
-    let (tape, _) = net.forward(state, None, x, y.len(), true).unwrap();
-    ebs::native::ops::cross_entropy(&tape.logits, y, classes) as f64
+fn fp_loss(
+    net: &NativeNet,
+    arena: &mut TapeArena,
+    state: &StateVec,
+    x: &[f32],
+    y: &[i32],
+    classes: usize,
+) -> f64 {
+    net.forward(state, None, x, y.len(), true, arena).unwrap();
+    ebs::native::ops::cross_entropy(&arena.tape.logits, y, classes) as f64
 }
 
 /// Central differences at `indices` of one state leaf (strided subsets
@@ -57,13 +64,14 @@ fn numeric_grad_at(
     eps: f32,
 ) -> Vec<f64> {
     let mut s = state.clone();
+    let mut arena = TapeArena::new();
     let mut out = Vec::with_capacity(indices.len());
     for &j in indices {
         let orig = s.get(path).unwrap().as_f32().unwrap()[j];
         s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig + eps;
-        let hi = fp_loss(net, &s, x, y, classes);
+        let hi = fp_loss(net, &mut arena, &s, x, y, classes);
         s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig - eps;
-        let lo = fp_loss(net, &s, x, y, classes);
+        let lo = fp_loss(net, &mut arena, &s, x, y, classes);
         s.get_mut(path).unwrap().as_f32_mut().unwrap()[j] = orig;
         out.push((hi - lo) / (2.0 * eps as f64));
     }
@@ -86,9 +94,10 @@ fn fp_backward_matches_finite_differences() {
     let (x, y) = small_batch(&engine, 4, &mut rng);
 
     // analytic: forward → dlogits = (softmax − onehot)/B → backward
-    let (tape, _) = net.forward(&state, None, &x, y.len(), true).unwrap();
+    let mut arena = TapeArena::new();
+    net.forward(&state, None, &x, y.len(), true, &mut arena).unwrap();
     let mut probs = Vec::new();
-    ebs::native::ops::softmax_rows(&tape.logits, y.len(), classes, &mut probs);
+    ebs::native::ops::softmax_rows(&arena.tape.logits, y.len(), classes, &mut probs);
     let inv_b = 1.0 / y.len() as f32;
     let mut dlogits = vec![0f32; y.len() * classes];
     for (b, &lab) in y.iter().enumerate() {
@@ -98,7 +107,8 @@ fn fp_backward_matches_finite_differences() {
                 (probs[i] - if lab as usize == c { 1.0 } else { 0.0 }) * inv_b;
         }
     }
-    let grads = net.backward(&state, None, &tape, &dlogits).unwrap();
+    let mut grads = Grads::default();
+    net.backward(&state, None, &mut arena, &dlogits, &mut grads).unwrap();
 
     // numeric checks across every layer family the backward touches:
     // conv stem, a mid-network qconv (FP mode here), BN affine, and the
@@ -170,15 +180,17 @@ fn arch_gradient_of_last_conv_matches_finite_differences() {
     };
     let loss_at = |state: &StateVec| -> f64 {
         let coeffs = coeffs_of(state);
-        let (tape, _) = net.forward(state, Some(&coeffs), &x, y.len(), true).unwrap();
-        ebs::native::ops::cross_entropy(&tape.logits, &y, classes) as f64
+        let mut arena = TapeArena::new();
+        net.forward(state, Some(&coeffs), &x, y.len(), true, &mut arena).unwrap();
+        ebs::native::ops::cross_entropy(&arena.tape.logits, &y, classes) as f64
     };
 
     // analytic dL/dr, dL/ds via backward + softmax VJP
     let coeffs = coeffs_of(&state);
-    let (tape, _) = net.forward(&state, Some(&coeffs), &x, y.len(), true).unwrap();
+    let mut arena = TapeArena::new();
+    net.forward(&state, Some(&coeffs), &x, y.len(), true, &mut arena).unwrap();
     let mut probs = Vec::new();
-    ebs::native::ops::softmax_rows(&tape.logits, y.len(), classes, &mut probs);
+    ebs::native::ops::softmax_rows(&arena.tape.logits, y.len(), classes, &mut probs);
     let inv_b = 1.0 / y.len() as f32;
     let mut dlogits = vec![0f32; y.len() * classes];
     for (b, &lab) in y.iter().enumerate() {
@@ -187,7 +199,8 @@ fn arch_gradient_of_last_conv_matches_finite_differences() {
             dlogits[i] = (probs[i] - if lab as usize == c { 1.0 } else { 0.0 }) * inv_b;
         }
     }
-    let grads = net.backward(&state, Some(&coeffs), &tape, &dlogits).unwrap();
+    let mut grads = Grads::default();
+    net.backward(&state, Some(&coeffs), &mut arena, &dlogits, &mut grads).unwrap();
     let mut gr = vec![0f32; n_bits];
     let mut gs = vec![0f32; n_bits];
     quant::softmax_backward(&coeffs.cw[li], &grads.dcw[li], &mut gr);

@@ -1,0 +1,231 @@
+//! Determinism + reuse contracts of the threaded native kernels
+//! (DESIGN.md §12).
+//!
+//! The parallel conv/BN/quant kernels shard *outputs* and keep every
+//! element's reduction order fixed, so they must be **bit-identical**
+//! to their single-threaded runs — not merely close.  These tests pin
+//! that with `assert_eq!` on raw f32 buffers across thread counts,
+//! random shapes (stride 2, odd spatial dims → asymmetric SAME-pad edge
+//! rows), and the whole-network forward/backward.  The last test pins
+//! the arena contract: after the first step, the tape arena stops
+//! allocating.
+
+use ebs::bd::im2col::Patches;
+use ebs::native::graph::Coeffs;
+use ebs::native::ops::{self, BnScratch, BnTape};
+use ebs::native::{quant, Grads, NativeNet, TapeArena};
+use ebs::util::Rng;
+
+mod common;
+use common::open_engine;
+
+const THREADS: [usize; 3] = [2, 3, 8];
+
+/// Random conv shapes: (batch, h, w, ci, co, k, stride).  Odd dims with
+/// stride 2 exercise the asymmetric XLA SAME padding (lo ≠ hi) rows.
+const SHAPES: [(usize, usize, usize, usize, usize, usize, usize); 4] = [
+    (2, 8, 8, 3, 5, 3, 1),
+    (3, 7, 5, 4, 6, 3, 2),
+    (1, 9, 9, 2, 4, 1, 2),
+    (4, 6, 10, 5, 3, 3, 2),
+];
+
+#[test]
+fn conv_kernels_are_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0x7EAD);
+    for &(b, h, w, ci, co, k, stride) in &SHAPES {
+        let x: Vec<f32> = (0..b * h * w * ci).map(|_| rng.normal()).collect();
+        let wts: Vec<f32> = (0..k * k * ci * co).map(|_| rng.normal()).collect();
+        let mut p = Patches::empty();
+        ops::patches_of(&x, b, h, w, ci, k, stride, &mut p);
+
+        let mut y1 = Vec::new();
+        ops::conv_forward(&p, &wts, co, 1, &mut y1);
+        let dy: Vec<f32> = (0..y1.len()).map(|_| rng.normal()).collect();
+        let mut dw1 = vec![0f32; wts.len()];
+        ops::conv_backward_w(&p, &dy, co, 1, &mut dw1);
+        let mut dx1 = vec![0f32; x.len()];
+        ops::conv_backward_x(&dy, &wts, b, h, w, ci, co, k, stride, 1, &mut dx1);
+
+        for &t in &THREADS {
+            let mut yt = Vec::new();
+            ops::conv_forward(&p, &wts, co, t, &mut yt);
+            assert_eq!(yt, y1, "conv_forward b={b} h={h} w={w} s={stride} T={t}");
+            let mut dwt = vec![0f32; wts.len()];
+            ops::conv_backward_w(&p, &dy, co, t, &mut dwt);
+            assert_eq!(dwt, dw1, "conv_backward_w b={b} h={h} w={w} s={stride} T={t}");
+            let mut dxt = vec![0f32; x.len()];
+            ops::conv_backward_x(&dy, &wts, b, h, w, ci, co, k, stride, t, &mut dxt);
+            assert_eq!(dxt, dx1, "conv_backward_x b={b} h={h} w={w} s={stride} T={t}");
+        }
+    }
+}
+
+#[test]
+fn bn_kernels_are_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xB17);
+    let (n, co) = (37usize, 6usize);
+    let x: Vec<f32> = (0..n * co).map(|_| rng.normal() * 2.0).collect();
+    let gamma: Vec<f32> = (0..co).map(|_| 0.5 + rng.normal().abs()).collect();
+    let beta: Vec<f32> = (0..co).map(|_| rng.normal()).collect();
+    let rmean = vec![0.1f32; co];
+    let rvar = vec![1.2f32; co];
+    let dy: Vec<f32> = (0..n * co).map(|_| rng.normal()).collect();
+
+    let run = |threads: usize| {
+        let (mut y, mut tape, mut bns) = (Vec::new(), BnTape::default(), BnScratch::default());
+        let (mut nm, mut nv) = (Vec::new(), Vec::new());
+        ops::bn_forward_train(
+            &x, co, &gamma, &beta, &rmean, &rvar, threads, &mut y, &mut tape, &mut nm, &mut nv,
+            &mut bns,
+        );
+        let mut dx = Vec::new();
+        let (mut dg, mut db) = (vec![0f32; co], vec![0f32; co]);
+        ops::bn_backward_train(&dy, co, &gamma, &tape, threads, &mut dx, &mut dg, &mut db, &mut bns);
+        (y, tape.xhat, tape.inv_std, nm, nv, dx, dg, db)
+    };
+    let base = run(1);
+    for &t in &THREADS {
+        assert_eq!(run(t), base, "bn kernels T={t}");
+    }
+}
+
+#[test]
+fn quant_forwards_are_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0x0AC7);
+    let bits = [1u32, 2, 3, 4, 5];
+    let p = [0.3f32, 0.1, 0.25, 0.2, 0.15];
+    let w: Vec<f32> = (0..777).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..777).map(|_| rng.normal() * 3.0).collect();
+
+    let (mut wq1, mut tape1) = (Vec::new(), quant::WTape::default());
+    quant::ebs_weight_forward(&w, &p, &bits, 1, &mut wq1, &mut tape1);
+    let mut xq1 = Vec::new();
+    quant::ebs_act_forward(&x, &p, 2.5, &bits, 1, &mut xq1);
+    for &t in &THREADS {
+        let (mut wqt, mut tapet) = (Vec::new(), quant::WTape::default());
+        quant::ebs_weight_forward(&w, &p, &bits, t, &mut wqt, &mut tapet);
+        assert_eq!(wqt, wq1, "weight agg T={t}");
+        assert_eq!(
+            (tapet.t_max, tapet.argmax),
+            (tape1.t_max, tape1.argmax),
+            "weight-norm max T={t}"
+        );
+        let mut xqt = Vec::new();
+        quant::ebs_act_forward(&x, &p, 2.5, &bits, t, &mut xqt);
+        assert_eq!(xqt, xq1, "act agg T={t}");
+    }
+
+    // |tanh| ties (±v have equal |tanh|): the argmax must resolve to
+    // the first occurrence at every chunking, like the serial scan.
+    let tie: Vec<f32> = vec![0.3, -1.5, 0.7, 1.5, -1.5, 0.1];
+    for &t in &[1usize, 2, 3, 6] {
+        let (mut wq, mut tape) = (Vec::new(), quant::WTape::default());
+        quant::ebs_weight_forward(&tie, &p, &bits, t, &mut wq, &mut tape);
+        assert_eq!(tape.argmax, 1, "tie must resolve to first index, T={t}");
+    }
+}
+
+/// Whole-network: forward + backward at threads=1 and threads=4 must
+/// produce bit-identical logits, parameter grads, and coefficient
+/// grads — the invariant the same-seed search-replay guarantee needs
+/// once the backend defaults to machine parallelism.
+#[test]
+fn whole_net_forward_backward_bit_identical_across_threads() {
+    let mut engine = open_engine("resnet8_tiny");
+    let classes = engine.manifest.num_classes;
+    let mut rng = Rng::new(0x90D);
+    let b = 4usize;
+    let [h, w, c] = engine.manifest.image;
+    let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal().abs()).collect();
+
+    let mut net = NativeNet::from_manifest(&engine.manifest).unwrap();
+    let mut state = engine.init_state(11).unwrap();
+    // non-trivial strengths so the coefficient path is exercised
+    for name in net.desc.qconv_names.clone() {
+        let r = state.get_mut(&format!("state/arch/r/{name}")).unwrap().as_f32_mut().unwrap();
+        for (i, v) in r.iter_mut().enumerate() {
+            *v = (i as f32 - 2.0) * 0.3;
+        }
+    }
+    let coeffs = {
+        let mut cw = Vec::new();
+        let mut cx = Vec::new();
+        for name in &net.desc.qconv_names {
+            let r = state.get(&format!("state/arch/r/{name}")).unwrap().as_f32().unwrap();
+            let s = state.get(&format!("state/arch/s/{name}")).unwrap().as_f32().unwrap();
+            let (mut pw, mut px) = (Vec::new(), Vec::new());
+            quant::softmax(r, &mut pw);
+            quant::softmax(s, &mut px);
+            cw.push(pw);
+            cx.push(px);
+        }
+        Coeffs { cw, cx }
+    };
+    let dlogits: Vec<f32> = (0..b * classes).map(|_| rng.normal() * 0.1).collect();
+
+    let mut run = |threads: usize| {
+        net.threads = threads;
+        let mut arena = TapeArena::new();
+        let mut grads = Grads::default();
+        net.forward(&state, Some(&coeffs), &x, b, true, &mut arena).unwrap();
+        net.backward(&state, Some(&coeffs), &mut arena, &dlogits, &mut grads).unwrap();
+        let logits = arena.tape.logits.clone();
+        let mut by_path: Vec<(String, Vec<f32>)> =
+            grads.by_path.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        by_path.sort_by(|a, b| a.0.cmp(&b.0));
+        (logits, by_path, grads.dcw.clone(), grads.dcx.clone())
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.0, parallel.0, "logits must be bit-identical");
+    assert_eq!(serial.2, parallel.2, "dcw must be bit-identical");
+    assert_eq!(serial.3, parallel.3, "dcx must be bit-identical");
+    assert_eq!(serial.1.len(), parallel.1.len(), "grad leaf sets must match");
+    for ((pa, ga), (pb, gb)) in serial.1.iter().zip(&parallel.1) {
+        assert_eq!(pa, pb, "grad leaf sets must match");
+        assert_eq!(ga, gb, "grad for {pa} must be bit-identical");
+    }
+}
+
+/// Arena contract: buffer growth freezes after the first step — the
+/// thousands of later search steps allocate nothing in the tape,
+/// scratch, BN-update, or gradient storage.
+#[test]
+fn tape_arena_stops_growing_after_first_step() {
+    let mut engine = open_engine("resnet8_tiny");
+    let classes = engine.manifest.num_classes;
+    let b = engine.manifest.batch_size;
+    let [h, w, c] = engine.manifest.image;
+    let net = NativeNet::from_manifest(&engine.manifest).unwrap();
+    let state = engine.init_state(3).unwrap();
+    let l = net.desc.qconv_names.len();
+    let n = net.bits.len();
+    let uniform = Coeffs {
+        cw: vec![vec![1.0 / n as f32; n]; l],
+        cx: vec![vec![1.0 / n as f32; n]; l],
+    };
+
+    let mut rng = Rng::new(0xA3EA);
+    let mut arena = TapeArena::new();
+    let mut grads = Grads::default();
+    let mut grows_after_first = 0;
+    for step in 0..4 {
+        let x: Vec<f32> = (0..b * h * w * c).map(|_| rng.normal().abs()).collect();
+        let dlogits: Vec<f32> = (0..b * classes).map(|_| rng.normal() * 0.1).collect();
+        net.forward(&state, Some(&uniform), &x, b, true, &mut arena).unwrap();
+        net.backward(&state, Some(&uniform), &mut arena, &dlogits, &mut grads).unwrap();
+        // an FP eval forward at the same shape must also reuse buffers
+        net.forward(&state, None, &x, b, false, &mut arena).unwrap();
+        if step == 0 {
+            grows_after_first = arena.stats.grows;
+            assert!(grows_after_first > 0, "first step must size the arena");
+        } else {
+            assert_eq!(
+                arena.stats.grows, grows_after_first,
+                "arena grew again on step {step} — per-step allocation regressed"
+            );
+        }
+    }
+    assert!(arena.stats.calls > 3 * grows_after_first, "calls keep climbing while grows freeze");
+}

@@ -111,10 +111,12 @@ fn search_respects_different_targets() {
     );
 }
 
-/// One seeded Algorithm 1 run on the native backend, with the JSONL
-/// event stream captured so loss trajectories can be asserted.
-fn seeded_search(seed: u64, tag: &str) -> (SearchResult, Vec<(f64, f64)>) {
+/// One seeded Algorithm 1 run on the native backend at the given
+/// kernel thread count, with the JSONL event stream captured so loss
+/// trajectories can be asserted.
+fn seeded_search(seed: u64, tag: &str, threads: usize) -> (SearchResult, Vec<(f64, f64)>) {
     let mut engine = open_engine("resnet8_tiny");
+    engine.set_threads(threads);
     let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
     let target = flops.uniform_mflops(3);
     let mut spec = SynthSpec::tiny(11);
@@ -163,7 +165,7 @@ fn native_search_end_to_end_learns_hits_target_and_is_deterministic() {
     let target = flops.uniform_mflops(3);
     drop(engine);
 
-    let (res, losses) = seeded_search(42, "a");
+    let (res, losses) = seeded_search(42, "a", 1);
 
     // (a) the supernet trains: mean loss over the last quarter of the
     // run is below the mean over the first quarter.
@@ -187,12 +189,20 @@ fn native_search_end_to_end_learns_hits_target_and_is_deterministic() {
     );
 
     // (c) bit-identical SearchResult across two runs with the same seed.
-    let (res2, losses2) = seeded_search(42, "b");
+    let (res2, losses2) = seeded_search(42, "b", 1);
     assert_eq!(res, res2, "same-seed search must be bit-identical");
     assert_eq!(losses, losses2, "same-seed loss trajectories must be bit-identical");
 
+    // (d) thread count must not perturb the result: the parallel
+    // kernels shard disjoint outputs with fixed per-element reduction
+    // order (DESIGN.md §12), so 4 workers replay the 1-worker run
+    // bit-for-bit.
+    let (res4, losses4) = seeded_search(42, "d", 4);
+    assert_eq!(res, res4, "threads=4 must replay threads=1 bit-identically");
+    assert_eq!(losses, losses4, "threads=4 loss trajectory must match threads=1");
+
     // and a different seed produces a different trajectory (the
     // determinism above isn't vacuous).
-    let (_res3, losses3) = seeded_search(43, "c");
+    let (_res3, losses3) = seeded_search(43, "c", 1);
     assert_ne!(losses, losses3, "different seeds should differ");
 }
