@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Smoke-test the `ebs serve` binary end to end.
+
+Starts the release binary on an ephemeral port with the deterministic
+synthetic network, discovers the input geometry via a `stats` request,
+fires a small concurrent load from several connections, asserts every
+response is well-formed, then requests graceful shutdown and requires
+the process to drain and exit 0.
+
+Usage: serve_smoke.py <path-to-ebs-binary>
+
+Wire format (DESIGN.md §13): every frame is [u32 LE len][payload];
+payloads are [u8 opcode][u32 LE request id][...].
+"""
+
+import json
+import struct
+import subprocess
+import sys
+import threading
+
+OP_CLASSIFY, OP_STATS, OP_SHUTDOWN, OP_ERROR = 1, 2, 3, 0xFF
+
+CLIENTS = 4
+REQS_PER_CLIENT = 8
+
+
+def frame(payload):
+    return struct.pack("<I", len(payload)) + payload
+
+
+def classify_req(rid, count, floats):
+    body = struct.pack("<BII", OP_CLASSIFY, rid, count)
+    body += struct.pack(f"<{len(floats)}f", *floats)
+    return frame(body)
+
+
+def simple_req(op, rid):
+    return frame(struct.pack("<BI", op, rid))
+
+
+def recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError("server hung up mid-frame")
+        buf += chunk
+    return buf
+
+
+def read_frame(sock):
+    (ln,) = struct.unpack("<I", recv_exact(sock, 4))
+    return recv_exact(sock, ln)
+
+
+def fetch_stats(sock, rid):
+    sock.sendall(simple_req(OP_STATS, rid))
+    payload = read_frame(sock)
+    op, got = struct.unpack("<BI", payload[:5])
+    assert op == OP_STATS and got == rid, (op, got)
+    return json.loads(payload[5:].decode())
+
+
+def client_load(host, port, t, img_sz, classes, errors):
+    import socket
+
+    try:
+        with socket.create_connection((host, port), timeout=30) as c:
+            c.settimeout(30)
+            for i in range(REQS_PER_CLIENT):
+                rid = t * 1000 + i
+                # deterministic pseudo-image; values in [0, 1)
+                floats = [((t * 31 + i * 7 + j) % 97) / 97.0 for j in range(img_sz)]
+                c.sendall(classify_req(rid, 1, floats))
+                payload = read_frame(c)
+                op, got, count = struct.unpack("<BII", payload[:9])
+                assert op == OP_CLASSIFY, f"opcode {op:#x} for request {rid}"
+                assert got == rid and count == 1, (got, count)
+                (label,) = struct.unpack("<I", payload[9:13])
+                assert 0 <= label < classes, f"label {label} out of range"
+    except Exception as e:  # noqa: BLE001 — collected and reported below
+        errors.append((t, repr(e)))
+
+
+def main():
+    import socket
+
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    proc = subprocess.Popen(
+        [
+            sys.argv[1], "serve", "--synthetic",
+            "--addr", "127.0.0.1:0", "--workers", "2", "--max-batch", "8",
+        ],
+        stdout=subprocess.PIPE,
+    )
+    try:
+        line = proc.stdout.readline().decode()
+        assert line.startswith("serving on "), f"unexpected banner: {line!r}"
+        host, port = line.strip().rsplit(" ", 1)[-1].rsplit(":", 1)
+        port = int(port)
+
+        with socket.create_connection((host, port), timeout=30) as ctl:
+            ctl.settimeout(30)
+            stats = fetch_stats(ctl, 1)
+            img_sz = int(stats["input_hw"]) ** 2 * int(stats["input_ch"])
+            classes = int(stats["classes"])
+
+            errors = []
+            threads = [
+                threading.Thread(target=client_load, args=(host, port, t, img_sz, classes, errors))
+                for t in range(CLIENTS)
+            ]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            assert not errors, f"client failures: {errors}"
+
+            stats = fetch_stats(ctl, 2)
+            want = CLIENTS * REQS_PER_CLIENT
+            assert int(stats["completed"]) >= want, stats
+            assert int(stats["batch_images_max"]) <= 8, stats
+
+            ctl.sendall(simple_req(OP_SHUTDOWN, 3))
+            payload = read_frame(ctl)
+            op, got = struct.unpack("<BI", payload[:5])
+            assert (op, got) == (OP_SHUTDOWN, 3), (op, got)
+
+        rc = proc.wait(timeout=60)
+        assert rc == 0, f"server exited {rc} after graceful shutdown"
+        print(
+            f"[serve-smoke] OK: {want} concurrent requests answered, "
+            f"max batch {stats['batch_images_max']}, clean drain + exit 0"
+        )
+        return 0
+    except BaseException:
+        proc.kill()
+        raise
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=10)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

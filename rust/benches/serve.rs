@@ -1,0 +1,164 @@
+//! Bench: serve-layer throughput/latency — micro-batch coalescing
+//! on/off × worker counts (DESIGN.md §13).
+//!
+//! Drives the serving core directly (no sockets — the wire layer is
+//! O(KB) memcpy and would only add runner noise): C closed-loop client
+//! threads each submit single-image requests against a deterministic
+//! synthetic BD network and wait for every reply.  "off" pins
+//! `max_batch = 1` (every request rides its own GEMM); "on" lets the
+//! micro-batcher coalesce up to 32 images with a 200 µs open-batch
+//! deadline.  The coalesced configuration must beat single-request
+//! mode at concurrency ≥ 8 — that is the acceptance line this bench
+//! prints.
+//!
+//! Emits the §9 JSON envelope for `ci/compare_bench.py`:
+//!
+//!   cargo bench --bench serve [-- --json BENCH_serve.json]
+//!
+//! Env knobs: EBS_BENCH_REPS (median window, default 3),
+//! EBS_BENCH_REQS (total requests per config, default 512),
+//! EBS_BENCH_CLIENTS (concurrency, default 8).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ebs::bd::BdNetwork;
+use ebs::serve::{ServeCfg, ServeHandle};
+use ebs::util::json::Json;
+use ebs::util::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One measured run; returns (total_ms, p50_ms, p99_ms).
+fn run_once(
+    workers: usize,
+    coalesce: bool,
+    clients: usize,
+    per_client: usize,
+    images: &Arc<Vec<f32>>,
+    img_sz: usize,
+) -> (f64, f64, f64) {
+    let net = BdNetwork::synthetic(0xEB5);
+    let cfg = ServeCfg {
+        addr: String::new(), // core-level bench; no socket is bound
+        workers,
+        max_batch: if coalesce { 32 } else { 1 },
+        max_wait_us: if coalesce { 200 } else { 0 },
+        queue_depth: 1024,
+    };
+    let handle = Arc::new(ServeHandle::start(net, cfg));
+    let n_pool = images.len() / img_sz;
+    let t0 = Instant::now();
+    let mut joins = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let h = Arc::clone(&handle);
+        let imgs = Arc::clone(images);
+        joins.push(std::thread::spawn(move || {
+            let mut lats = Vec::with_capacity(per_client);
+            for i in 0..per_client {
+                let off = ((c * per_client + i) % n_pool) * img_sz;
+                let t = Instant::now();
+                let preds = h.classify(imgs[off..off + img_sz].to_vec(), 1).unwrap();
+                assert_eq!(preds.len(), 1);
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::new();
+    for j in joins {
+        lats.extend(j.join().unwrap());
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+    (total_ms, pct(0.50), pct(0.99))
+}
+
+fn main() -> anyhow::Result<()> {
+    let reps = env_usize("EBS_BENCH_REPS", 3).max(1);
+    let requests = env_usize("EBS_BENCH_REQS", 512);
+    let clients = env_usize("EBS_BENCH_CLIENTS", 8).max(1);
+    let per_client = (requests / clients).max(1);
+    let json_path = ebs::util::cli::argv_value_flag("--json", "BENCH_serve.json");
+
+    // Shared request pool: 64 deterministic synthetic "images".
+    let probe = BdNetwork::synthetic(0xEB5);
+    let img_sz = probe.input_hw * probe.input_hw * probe.input_ch;
+    drop(probe);
+    let mut rng = Rng::new(0x5E12);
+    let images: Arc<Vec<f32>> =
+        Arc::new((0..64 * img_sz).map(|_| rng.normal().abs()).collect());
+
+    println!(
+        "# serve bench — {clients} closed-loop clients × {per_client} reqs, median of {reps} reps"
+    );
+    println!(
+        "{:<10} {:<8} {:>10} {:>9} {:>9} {:>12}",
+        "coalesce", "workers", "total ms", "p50 ms", "p99 ms", "req/s"
+    );
+    let mut rows = Vec::new();
+    let mut off_total = std::collections::HashMap::new();
+    for &workers in &[1usize, 2, 4] {
+        for &coalesce in &[false, true] {
+            let mut runs: Vec<(f64, f64, f64)> = (0..reps)
+                .map(|_| run_once(workers, coalesce, clients, per_client, &images, img_sz))
+                .collect();
+            runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (total_ms, p50_ms, p99_ms) = runs[runs.len() / 2];
+            let rps = (clients * per_client) as f64 / (total_ms / 1e3);
+            // coalesced-vs-off throughput ratio at this worker count
+            // (derived field; the acceptance line of the serve layer).
+            let speedup = if coalesce {
+                off_total.get(&workers).map_or(1.0, |off: &f64| off / total_ms)
+            } else {
+                off_total.insert(workers, total_ms);
+                1.0
+            };
+            println!(
+                "{:<10} {:<8} {:>10.1} {:>9.3} {:>9.3} {:>12.0}",
+                if coalesce { "on" } else { "off" },
+                workers,
+                total_ms,
+                p50_ms,
+                p99_ms,
+                rps
+            );
+            rows.push(Json::Obj(vec![
+                ("coalesce".into(), Json::Str(if coalesce { "on" } else { "off" }.into())),
+                ("workers".into(), Json::Num(workers as f64)),
+                ("clients".into(), Json::Num(clients as f64)),
+                ("requests".into(), Json::Num((clients * per_client) as f64)),
+                ("total_ms".into(), Json::Num(total_ms)),
+                ("p50_ms".into(), Json::Num(p50_ms)),
+                ("p99_ms".into(), Json::Num(p99_ms)),
+                ("coalesce_speedup".into(), Json::Num(speedup)),
+            ]));
+            if coalesce {
+                println!(
+                    "#   acceptance: coalesced {speedup:.2}x single-request throughput at \
+                     concurrency {clients} ({})",
+                    if speedup > 1.0 { "PASS: strictly above" } else { "BELOW — investigate" }
+                );
+            }
+        }
+    }
+
+    if let Some(path) = json_path {
+        ebs::util::json::write_bench_json(
+            std::path::Path::new(&path),
+            "serve",
+            reps,
+            0,
+            (0, 0),
+            rows,
+        )?;
+        println!("# wrote {path}");
+    }
+    Ok(())
+}

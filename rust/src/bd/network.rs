@@ -230,6 +230,30 @@ impl BdNetwork {
         }
     }
 
+    /// Small deterministic synthetic network — two residual blocks,
+    /// 8×8×3 input, 10 classes — for serve smoke runs, benches, and
+    /// tests that need a deployable net without artifacts.  Same seed
+    /// → bit-identical weights, hence bit-identical predictions.
+    pub fn synthetic(seed: u64) -> BdNetwork {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut layer = |ci: usize, co: usize, k: usize, stride: usize, mb: u32, kb: u32, relu: bool| {
+            let wts: Vec<f32> = (0..k * k * ci * co).map(|_| 0.5 * rng.normal()).collect();
+            BdConvLayer::new("synth", &wts, ci, co, k, stride, mb, kb, 4.0, None, relu)
+                .expect("synthetic layer shapes are valid")
+        };
+        let b0 = (layer(8, 8, 3, 1, 2, 2, true), layer(8, 8, 3, 1, 3, 2, false), None);
+        let b1 = (
+            layer(8, 16, 3, 2, 2, 3, true),
+            layer(16, 16, 3, 1, 1, 2, false),
+            Some(layer(8, 16, 1, 2, 2, 2, false)),
+        );
+        let (input_hw, classes) = (8usize, 10usize);
+        let stem_w: Vec<f32> = (0..3 * 3 * 3 * 8).map(|_| 0.4 * rng.normal()).collect();
+        let fc_w: Vec<f32> = (0..16 * classes).map(|_| 0.3 * rng.normal()).collect();
+        let fc_b: Vec<f32> = (0..classes).map(|_| 0.1 * rng.normal()).collect();
+        BdNetwork::from_layers(stem_w, 3, 8, 3, 1, vec![b0, b1], fc_w, fc_b, classes, input_hw)
+    }
+
     /// Apply one execution configuration to every quantized layer.
     pub fn set_engine_cfg(&mut self, cfg: BdEngineCfg) {
         self.engine = cfg;

@@ -87,6 +87,20 @@ pub struct NativeConfig {
     pub threads: usize,
 }
 
+/// Serve-layer configuration (`[serve]` section; `ebs serve` flags
+/// `--addr/--workers/--max-batch/--max-wait-us/--queue-depth`
+/// override).  Defaults live on [`crate::serve::ServeCfg`].
+fn serve_cfg(doc: &TomlDoc) -> crate::serve::ServeCfg {
+    let d = crate::serve::ServeCfg::default();
+    crate::serve::ServeCfg {
+        addr: doc.str_or("serve.addr", &d.addr).to_string(),
+        workers: doc.usize_or("serve.workers", d.workers),
+        max_batch: doc.usize_or("serve.max_batch", d.max_batch),
+        max_wait_us: doc.i64_or("serve.max_wait_us", d.max_wait_us as i64).max(0) as u64,
+        queue_depth: doc.usize_or("serve.queue_depth", d.queue_depth),
+    }
+}
+
 /// A full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -106,6 +120,7 @@ pub struct RunConfig {
     pub targets_mflops: Vec<f64>,
     pub bd: BdDeployConfig,
     pub native: NativeConfig,
+    pub serve: crate::serve::ServeCfg,
     pub doc: TomlDoc,
 }
 
@@ -185,6 +200,7 @@ impl RunConfig {
             targets_mflops: doc.f64_array("search.targets_mflops").unwrap_or_default(),
             bd,
             native: NativeConfig { threads: doc.usize_or("native.threads", 0) },
+            serve: serve_cfg(&doc),
             doc,
         }
     }
@@ -250,6 +266,34 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.native.threads, 0, "default is machine parallelism");
         let cfg = RunConfig::from_doc(parse("[native]\nthreads = 3\n").unwrap());
         assert_eq!(cfg.native.threads, 3);
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.serve.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.serve.workers, 0, "default is machine parallelism");
+        assert_eq!(cfg.serve.max_batch, 32);
+        assert_eq!(cfg.serve.max_wait_us, 500);
+        assert_eq!(cfg.serve.queue_depth, 256);
+        let cfg = RunConfig::from_doc(
+            parse(
+                r#"
+[serve]
+addr = "0.0.0.0:9000"
+workers = 2
+max_batch = 8
+max_wait_us = 1500
+queue_depth = 64
+"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(cfg.serve.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.serve.workers, 2);
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.max_wait_us, 1500);
+        assert_eq!(cfg.serve.queue_depth, 64);
     }
 
     #[test]

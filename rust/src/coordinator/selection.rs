@@ -19,6 +19,29 @@ pub struct Selection {
     pub x_bits: Vec<u32>,
 }
 
+/// First-max argmax: index of the first element strictly greater than
+/// everything before it that is never beaten later — i.e. the serial
+/// strict-`>` scan the shared kernel layer pins (DESIGN.md §12).  NaN
+/// entries never win (NaN loses every `>` comparison) and an all-NaN
+/// (or empty) slice falls back to index 0, matching
+/// [`crate::kernels::par_max_abs`]'s empty-input convention.
+pub fn first_max_index(v: &[f32]) -> usize {
+    let mut best = f32::NEG_INFINITY;
+    let mut idx = 0usize;
+    let mut found = false;
+    for (i, &x) in v.iter().enumerate() {
+        if !found && !x.is_nan() {
+            best = x;
+            idx = i;
+            found = true;
+        } else if x > best {
+            best = x;
+            idx = i;
+        }
+    }
+    idx
+}
+
 impl Selection {
     /// Uniform-precision selection (baseline rows of Tables 1/2).
     pub fn uniform(w: u32, x: u32, layers: usize) -> Selection {
@@ -26,6 +49,15 @@ impl Selection {
     }
 
     /// Eq. 4: argmax over the learned strengths in a search state.
+    ///
+    /// Deterministic by the same convention as the native quant
+    /// kernels ([`crate::kernels::par_max_abs`]): a strict-`>`
+    /// left-to-right scan, so ties resolve to the *first* (lowest-bit)
+    /// candidate and NaN strengths are skipped instead of panicking
+    /// (NaN never wins a `>` comparison).  The old `max_by` +
+    /// `partial_cmp().unwrap()` kept the *last* max and panicked on
+    /// NaN — same-seed replays could disagree with the kernel-side
+    /// argmax on tied strengths.
     pub fn from_state(state: &StateVec, manifest: &Manifest) -> Result<Selection> {
         let argmax_bits = |prefix: &str| -> Result<Vec<u32>> {
             manifest
@@ -34,13 +66,14 @@ impl Selection {
                 .map(|name| {
                     let t = state.get(&format!("state/arch/{prefix}/{name}"))?;
                     let v = t.as_f32()?;
-                    let idx = v
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    Ok(manifest.bits[idx])
+                    if v.len() != manifest.bits.len() {
+                        bail!(
+                            "strength vector for {name} has {} entries, {} candidates",
+                            v.len(),
+                            manifest.bits.len()
+                        );
+                    }
+                    Ok(manifest.bits[first_max_index(v)])
                 })
                 .collect()
         };
@@ -67,7 +100,10 @@ impl Selection {
                 return Ok(sel);
             }
         }
-        bail!("no random selection hit {target_mflops:.2} MFLOPs (±{tol:.0?}) in {max_tries} tries")
+        bail!(
+            "no random selection hit {target_mflops:.2} MFLOPs (±{:.0}%) in {max_tries} tries",
+            tol * 100.0
+        )
     }
 
     /// One-hot (L, N) coefficient tensors for the train/eval/infer graphs.
@@ -158,6 +194,66 @@ mod tests {
             let mf = f.exact_mflops(&s.w_bits, &s.x_bits);
             assert!((mf - target).abs() / target <= 0.1);
         }
+    }
+
+    /// Bail path: an unreachable target must produce the corrected
+    /// human-readable message — a *percentage*, not the old malformed
+    /// `±{tol:.0?}` debug-format that printed the raw fraction.
+    #[test]
+    fn random_search_bails_with_percentage_tolerance() {
+        let f = toy_flops();
+        let mut rng = Rng::new(2);
+        // fp32 cost alone exceeds any quantized config by orders of
+        // magnitude below this target, so no sample can land ±10%.
+        let err = Selection::random_within(&mut rng, &f, 1e12, 0.1, 50).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("±10%"), "tolerance must render as a percentage: {msg}");
+        assert!(msg.contains("in 50 tries"), "try budget must be reported: {msg}");
+        assert!(!msg.contains("±0.1"), "old debug-format fraction must be gone: {msg}");
+    }
+
+    /// Eq. 4 argmax determinism: ties resolve to the first (lowest-bit)
+    /// candidate — matching the chunk-order-stable kernel argmax — and
+    /// NaN strengths are skipped, not panicked on.
+    #[test]
+    fn first_max_index_is_first_max_and_nan_safe() {
+        assert_eq!(first_max_index(&[0.1, 0.5, 0.5, 0.2]), 1, "tie keeps the first max");
+        assert_eq!(first_max_index(&[0.7, 0.1, 0.7]), 0);
+        assert_eq!(first_max_index(&[0.3, 0.9, 0.1]), 1);
+        assert_eq!(first_max_index(&[f32::NAN, 0.2, 0.9]), 2, "NaN never wins");
+        assert_eq!(first_max_index(&[0.4, f32::NAN, 0.4]), 0, "NaN between ties is skipped");
+        assert_eq!(
+            first_max_index(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            0,
+            "degenerate -inf tie keeps the first"
+        );
+        assert_eq!(first_max_index(&[f32::NAN, f32::NAN]), 0, "all-NaN falls back to index 0");
+        assert_eq!(first_max_index(&[]), 0);
+    }
+
+    /// End-to-end: a search state with tied and NaN strengths yields a
+    /// deterministic first-max selection instead of a panic or a
+    /// last-max pick.
+    #[test]
+    fn from_state_selects_first_max_and_survives_nan() {
+        let mut engine = crate::runtime::Engine::native("resnet8_tiny").unwrap();
+        let manifest = engine.manifest.clone();
+        let mut state = engine.init_state(3).unwrap();
+        let n = manifest.bits.len();
+        let first = manifest.qconv_layers[0].clone();
+        {
+            let r = state.get_mut(&format!("state/arch/r/{first}")).unwrap().as_f32_mut().unwrap();
+            r.fill(0.25); // exact all-way tie → first candidate
+        }
+        {
+            let s = state.get_mut(&format!("state/arch/s/{first}")).unwrap().as_f32_mut().unwrap();
+            s.fill(0.0);
+            s[0] = f32::NAN; // poisoned leader slot → skipped
+            s[n - 1] = 1.0;
+        }
+        let sel = Selection::from_state(&state, &manifest).unwrap();
+        assert_eq!(sel.w_bits[0], manifest.bits[0], "tied strengths keep the first candidate");
+        assert_eq!(sel.x_bits[0], manifest.bits[n - 1], "NaN is skipped, real max wins");
     }
 
     #[test]

@@ -26,7 +26,12 @@
 
 /// Worker count from the machine (what `threads = 0` resolves to).
 /// Cached: `available_parallelism` does syscalls/cgroup reads, and
-/// dispatch consults this on every kernel launch.
+/// dispatch consults this on every kernel launch.  Besides kernel
+/// dispatch, the serve layer's worker pool (`serve::worker`) and the
+/// Eq. 4 selection argmax convention (`coordinator::selection::
+/// first_max_index` mirrors [`par_max_abs`]'s first-max tie-break)
+/// resolve through here, so "0 = machine parallelism" and
+/// "ties keep the lowest index" mean the same thing everywhere.
 pub fn auto_threads() -> usize {
     static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *AUTO.get_or_init(|| {

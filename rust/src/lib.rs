@@ -16,6 +16,9 @@
 //! * [`kernels`] — shared threaded-kernel substrate: deterministic
 //!   row-partitioned `std::thread::scope` dispatch used by both the BD
 //!   GEMM and the native training kernels (DESIGN.md §12).
+//! * [`serve`] — concurrent micro-batching serve layer over the BD
+//!   engine: bounded request queue, dynamic coalescer, worker pool,
+//!   length-prefixed TCP/stdin front-end (DESIGN.md §13).
 //! * [`data`] — synthetic dataset substrate + batching.
 //! * [`baselines`] — uniform precision, random search, DNAS supernet.
 //! * [`report`] — regenerators for every table/figure in the paper.
@@ -31,4 +34,5 @@ pub mod native;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

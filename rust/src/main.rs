@@ -37,6 +37,9 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
   search          bilevel bitwidth search only; writes selection.json
   deploy          BD-engine inference from a pipeline run directory
                   [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
+  serve           long-lived micro-batching BD inference server (DESIGN.md §13)
+                  [--addr H:P] [--workers N] [--max-batch N] [--max-wait-us N]
+                  [--queue-depth N] [--synthetic] [--stdin] [--exec ...]
   report-table1   Table 1 + Fig. 5 rows (Tables 2/5 via imagenet configs)
   report-table3   Table 3 search-efficiency comparison [--models a,b] [--iters N]
   report-table4   Table 4 BD latency [--reps N] [--extended] [--json file]
@@ -98,7 +101,10 @@ fn open_engine(cfg: &RunConfig) -> Result<Engine> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args(), &["stochastic", "extended", "two-stage", "help"])?;
+    let args = Args::parse(
+        std::env::args(),
+        &["stochastic", "extended", "two-stage", "help", "synthetic", "stdin"],
+    )?;
     if args.subcommand.is_empty() || args.has_switch("help") {
         println!("{USAGE}");
         return Ok(());
@@ -107,6 +113,7 @@ fn run() -> Result<()> {
         "pipeline" => cmd_pipeline(&args),
         "search" => cmd_search(&args),
         "deploy" => cmd_deploy(&args),
+        "serve" => cmd_serve(&args),
         "report-table1" => {
             let cfg = load_config(&args)?;
             report::table1::run(&cfg)
@@ -145,7 +152,7 @@ fn run() -> Result<()> {
         }
         "info" => cmd_info(&args),
         _ => Err(args.unknown_subcommand(&[
-            "pipeline", "search", "deploy", "report-table1", "report-table3",
+            "pipeline", "search", "deploy", "serve", "report-table1", "report-table3",
             "report-table4", "report-fig3", "report-fig7", "report-ablation", "info",
         ])),
     }
@@ -212,17 +219,24 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_deploy(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+/// Assemble the deployable BD network from a pipeline run directory
+/// (`--run-dir`, default `<out>/pipeline_<model>`) — shared by
+/// `deploy` and `serve` so the checkpoint layout lives in one place.
+fn load_bd_network(args: &Args, cfg: &RunConfig, mode: BdMode, who: &str) -> Result<BdNetwork> {
     let run_dir = PathBuf::from(
         args.flag_or("run-dir", &format!("{}/pipeline_{}", cfg.out_dir.display(), cfg.model)),
     );
-    let engine = open_engine(&cfg)?;
+    let engine = open_engine(cfg)?;
     let state = StateVec::load(&run_dir.join("retrained.ckpt"), &engine.manifest.state_spec)
-        .context("deploy needs a pipeline run dir with retrained.ckpt")?;
+        .with_context(|| format!("{who} needs a pipeline run dir with retrained.ckpt"))?;
     let sel = Selection::load(&run_dir.join("selection.json"))?;
+    BdNetwork::from_state(&engine.manifest, &state, &sel, mode)
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
     let mode = if args.has_switch("two-stage") { BdMode::TwoStage } else { BdMode::Fused };
-    let mut net = BdNetwork::from_state(&engine.manifest, &state, &sel, mode)?;
+    let mut net = load_bd_network(args, &cfg, mode, "deploy")?;
 
     // Engine configuration: config `[bd]` section, overridable by flags.
     let mut bd_cfg = cfg.bd.clone();
@@ -261,6 +275,61 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         net.packed_bytes() as f64 / 1024.0
     );
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut scfg = cfg.serve.clone();
+    if let Some(a) = args.flag("addr") {
+        scfg.addr = a.to_string();
+    }
+    if let Some(w) = args.flag("workers") {
+        scfg.workers = w.parse().context("--workers must be an integer")?;
+    }
+    scfg.max_batch = args.usize_flag("max-batch", scfg.max_batch)?.max(1);
+    scfg.max_wait_us = args.usize_flag("max-wait-us", scfg.max_wait_us as usize)? as u64;
+    scfg.queue_depth = args.usize_flag("queue-depth", scfg.queue_depth)?;
+
+    // Model: a retrained pipeline run dir, or --synthetic for a
+    // deterministic artifact-free smoke network (CI uses this).
+    let mut net = if args.has_switch("synthetic") {
+        eprintln!("[serve] synthetic network (seed {})", cfg.seed);
+        BdNetwork::synthetic(cfg.seed as u64)
+    } else {
+        load_bd_network(args, &cfg, BdMode::Fused, "serve (or pass --synthetic)")?
+    };
+
+    // BD engine knobs ride the same `[bd]` config/flags as `deploy`,
+    // with one serve-specific rule: the serve workers are already the
+    // concurrency, so an `auto` per-worker GEMM thread count is capped
+    // at machine/workers — otherwise N workers × N GEMM threads
+    // oversubscribe the host and inflate tail latency.  An explicit
+    // `[bd] threads` is honored literally.
+    let workers = ebs::kernels::resolve_threads(scfg.workers).max(1);
+    let mut bd_cfg = cfg.bd.clone();
+    if let Some(e) = args.flag("exec") {
+        bd_cfg.exec = BdExec::parse(e)?;
+    }
+    if bd_cfg.threads == 0 {
+        bd_cfg.threads = (ebs::kernels::auto_threads() / workers).max(1);
+    }
+    net.set_engine_cfg(bd_cfg.engine_cfg());
+    net.batch_chunk = bd_cfg.batch_chunk.max(1);
+
+    eprintln!(
+        "[serve] workers={workers} max_batch={} max_wait_us={} queue_depth={} \
+         ({} exec, {} GEMM threads/worker)",
+        scfg.max_batch,
+        scfg.max_wait_us,
+        scfg.queue_depth,
+        format!("{:?}", bd_cfg.exec).to_lowercase(),
+        bd_cfg.threads,
+    );
+    if args.has_switch("stdin") {
+        ebs::serve::server::run_stdio(net, scfg)
+    } else {
+        ebs::serve::server::Server::bind(net, scfg)?.run()
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,0 +1,143 @@
+//! Dynamic micro-batcher — the coalescing policy of the serve layer
+//! (DESIGN.md §13).
+//!
+//! A worker opens a batch by blocking on the queue; once the first
+//! request is in hand it extends the batch with further *whole*
+//! requests until the image budget (`max_batch`) is met, the front
+//! request no longer fits, or `max_wait` elapses.  Requests are never
+//! split across batches (each reply maps to one `classify_batch_with`
+//! slice), and an oversized request (count > `max_batch`) opens a
+//! batch of its own — `BdNetwork` chunks internally by `batch_chunk`,
+//! so nothing breaks, the coalescer just stops extending.
+//!
+//! Coalescing is off when `max_batch == 1` (every request rides alone;
+//! the serve bench sweeps this on/off axis).
+
+use std::time::{Duration, Instant};
+
+use super::queue::{ClassifyRequest, PopFit, RequestQueue};
+
+/// One coalesced unit of work: whole requests, concatenated in arrival
+/// order, `images` total images.
+pub struct MicroBatch {
+    pub requests: Vec<ClassifyRequest>,
+    pub images: usize,
+}
+
+/// Blockingly assemble the next batch.  `None` means the queue is
+/// closed and fully drained — the worker should exit.
+pub fn next_batch(queue: &RequestQueue, max_batch: usize, max_wait: Duration) -> Option<MicroBatch> {
+    let first = queue.pop_blocking()?;
+    let max_batch = max_batch.max(1);
+    let mut images = first.count;
+    let mut requests = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while images < max_batch {
+        match queue.pop_fitting_deadline(max_batch - images, deadline) {
+            PopFit::Got(req) => {
+                images += req.count;
+                requests.push(req);
+            }
+            PopFit::TooBig | PopFit::Empty => break,
+        }
+    }
+    Some(MicroBatch { requests, images })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(count: usize) -> ClassifyRequest {
+        ClassifyRequest {
+            images: vec![0.0; count],
+            count,
+            enqueued: Instant::now(),
+            reply: Box::new(|_| {}),
+        }
+    }
+
+    fn counts(b: &MicroBatch) -> Vec<usize> {
+        b.requests.iter().map(|r| r.count).collect()
+    }
+
+    /// A backlog coalesces to exactly `max_batch` and the request that
+    /// arrives at the boundary starts the next batch — never split,
+    /// never dropped.
+    #[test]
+    fn backlog_fills_to_exactly_max_batch_and_boundary_request_waits() {
+        let q = RequestQueue::new(16);
+        for _ in 0..4 {
+            q.push(req(1)).unwrap();
+        }
+        q.push(req(1)).unwrap(); // the boundary request
+        let b = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(b.images, 4, "batch closes exactly at max_batch");
+        assert_eq!(counts(&b), vec![1, 1, 1, 1]);
+        let b2 = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(counts(&b2), vec![1], "boundary request rides the next batch");
+    }
+
+    /// A multi-image request that does not fit the remaining budget is
+    /// left whole for the next batch.
+    #[test]
+    fn never_splits_a_request() {
+        let q = RequestQueue::new(16);
+        q.push(req(1)).unwrap();
+        q.push(req(1)).unwrap();
+        q.push(req(3)).unwrap();
+        let b = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(counts(&b), vec![1, 1], "count-3 request must not be split into budget 2");
+        let b2 = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(counts(&b2), vec![3]);
+    }
+
+    /// An oversized request (> max_batch images) is served alone.
+    #[test]
+    fn oversized_request_rides_alone() {
+        let q = RequestQueue::new(16);
+        q.push(req(7)).unwrap();
+        q.push(req(1)).unwrap();
+        let b = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(counts(&b), vec![7]);
+        let b2 = next_batch(&q, 4, Duration::ZERO).unwrap();
+        assert_eq!(counts(&b2), vec![1]);
+    }
+
+    /// max_batch = 1 disables coalescing entirely.
+    #[test]
+    fn max_batch_one_is_single_request_mode() {
+        let q = RequestQueue::new(16);
+        q.push(req(1)).unwrap();
+        q.push(req(1)).unwrap();
+        let b = next_batch(&q, 1, Duration::from_millis(50)).unwrap();
+        assert_eq!(counts(&b), vec![1]);
+        assert_eq!(q.len(), 1, "second request untouched");
+    }
+
+    /// The deadline actually gathers requests that arrive while the
+    /// batch is open.
+    #[test]
+    fn open_batch_waits_for_late_arrivals() {
+        let q = std::sync::Arc::new(RequestQueue::new(16));
+        q.push(req(1)).unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push(req(2)).unwrap();
+        });
+        let b = next_batch(&q, 8, Duration::from_millis(500)).unwrap();
+        h.join().unwrap();
+        assert_eq!(counts(&b), vec![1, 2], "late arrival joined the open batch");
+    }
+
+    /// Closed + drained queue ends the worker loop.
+    #[test]
+    fn closed_drained_queue_returns_none() {
+        let q = RequestQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.close();
+        assert!(next_batch(&q, 4, Duration::ZERO).is_some(), "queued request still served");
+        assert!(next_batch(&q, 4, Duration::ZERO).is_none(), "then the loop ends");
+    }
+}

@@ -1,0 +1,295 @@
+//! `ebs serve` — long-lived concurrent micro-batching serve layer for
+//! the BD deployment engine (DESIGN.md §13).
+//!
+//! The PR 1 batched engine made one `classify_batch` call cheap; this
+//! layer makes it *shared*: concurrent callers submit independent
+//! classification requests, a dynamic micro-batcher coalesces them
+//! into batches of up to [`ServeCfg::max_batch`] images (waiting at
+//! most [`ServeCfg::max_wait_us`] once a batch is open), and a pool of
+//! workers — each holding the long-lived [`BdNetwork`] plus its own
+//! [`NetScratch`] — runs each coalesced batch through
+//! [`BdNetwork::classify_batch_with`], so steady-state serving is
+//! allocation-free inside the network exactly like the one-shot path
+//! (DESIGN.md §5).
+//!
+//! Layering (one module per stage):
+//! * [`queue`]    — bounded MPMC request queue: admission control
+//!   (reject-on-full backpressure) + close-and-drain shutdown.
+//! * [`batcher`]  — the coalescing policy: whole-request packing up to
+//!   `max_batch` images with a deadline, never splitting a request.
+//! * [`worker`]   — the worker pool; thread counts resolve through
+//!   [`crate::kernels::resolve_threads`] like every other pool here.
+//! * [`protocol`] — the length-prefixed wire format (classify / stats
+//!   / shutdown), transport-agnostic (TCP or stdin/stdout).
+//! * [`server`]   — the front-end: TCP accept loop or a single
+//!   stdin/stdout session, graceful drain on shutdown.
+//!
+//! Determinism: a coalesced batch is the concatenation of whole
+//! requests, and the batched forward is bit-identical per image at any
+//! batch composition and worker count (tests/par_gemm.rs), so served
+//! predictions are bit-identical to a direct [`BdNetwork::classify_batch`]
+//! call on the same inputs — regression-tested in tests/serve.rs.
+
+pub mod batcher;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod worker;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::bd::BdNetwork;
+use crate::util::json::Json;
+
+use queue::{ClassifyRequest, PushError, ReplyFn, RequestQueue};
+use worker::WorkerPool;
+
+/// Serve-layer configuration (`[serve]` TOML section; `ebs serve`
+/// flags override).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Listen address for the TCP front-end (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads, each holding its own [`NetScratch`]; 0 resolves
+    /// to the machine count ([`crate::kernels::resolve_threads`]).
+    pub workers: usize,
+    /// Max images per coalesced batch (1 disables coalescing).
+    pub max_batch: usize,
+    /// How long a worker holds an open batch waiting for more requests
+    /// once the first one arrived, in microseconds (0 = take only what
+    /// is already queued).
+    pub max_wait_us: u64,
+    /// Bounded queue depth in *requests*; pushes beyond this are
+    /// rejected with an overloaded error (admission control).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            addr: "127.0.0.1:7878".into(),
+            workers: 0,
+            max_batch: 32,
+            max_wait_us: 500,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Why a submission was refused at the door (queued requests are never
+/// refused — shutdown drains them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at `queue_depth`: shed load, client should back off.
+    Overloaded,
+    /// Server is draining; no new admissions.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "queue full (admission control)"),
+            SubmitError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+/// Per-request latency + throughput counters (lock-free; snapshot via
+/// the `stats` protocol request or [`ServeStats::to_json`]).
+#[derive(Debug)]
+pub struct ServeStats {
+    /// Requests admitted into the queue.
+    pub admitted: AtomicU64,
+    /// Requests rejected by admission control (queue full).
+    pub rejected_full: AtomicU64,
+    /// Requests rejected because shutdown had begun.
+    pub rejected_shutdown: AtomicU64,
+    /// Requests answered.
+    pub completed: AtomicU64,
+    /// Images classified.
+    pub images: AtomicU64,
+    /// Coalesced batches executed.
+    pub batches: AtomicU64,
+    /// Largest coalesced batch observed (images).
+    pub batch_images_max: AtomicU64,
+    /// Sum of enqueue→reply latencies, µs.
+    pub latency_us_sum: AtomicU64,
+    /// Max enqueue→reply latency, µs.
+    pub latency_us_max: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> ServeStats {
+        ServeStats {
+            admitted: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_shutdown: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            images: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_images_max: AtomicU64::new(0),
+            latency_us_sum: AtomicU64::new(0),
+            latency_us_max: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ServeStats {
+    /// Record one executed batch of `images` images over `requests`
+    /// requests.
+    pub fn record_batch(&self, images: usize, requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.images.fetch_add(images as u64, Ordering::Relaxed);
+        self.completed.fetch_add(requests as u64, Ordering::Relaxed);
+        self.batch_images_max.fetch_max(images as u64, Ordering::Relaxed);
+    }
+
+    /// Record one answered request's enqueue→reply latency.
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+        self.latency_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Counters + derived throughput/means as the `stats` response
+    /// payload.  `model` rows let wire clients discover the input
+    /// geometry (the smoke client sizes its requests from this).
+    pub fn to_json(&self, net: &BdNetwork) -> Json {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let images = self.images.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let lat_sum = self.latency_us_sum.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        Json::Obj(vec![
+            ("input_hw".into(), Json::Num(net.input_hw as f64)),
+            ("input_ch".into(), Json::Num(net.input_ch as f64)),
+            ("classes".into(), Json::Num(net.classes as f64)),
+            ("admitted".into(), Json::Num(self.admitted.load(Ordering::Relaxed) as f64)),
+            (
+                "rejected_full".into(),
+                Json::Num(self.rejected_full.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected_shutdown".into(),
+                Json::Num(self.rejected_shutdown.load(Ordering::Relaxed) as f64),
+            ),
+            ("completed".into(), Json::Num(completed as f64)),
+            ("images".into(), Json::Num(images as f64)),
+            ("batches".into(), Json::Num(batches as f64)),
+            (
+                "batch_images_max".into(),
+                Json::Num(self.batch_images_max.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "mean_batch_images".into(),
+                Json::Num(if batches == 0 { 0.0 } else { images as f64 / batches as f64 }),
+            ),
+            (
+                "mean_latency_us".into(),
+                Json::Num(if completed == 0 { 0.0 } else { lat_sum as f64 / completed as f64 }),
+            ),
+            (
+                "max_latency_us".into(),
+                Json::Num(self.latency_us_max.load(Ordering::Relaxed) as f64),
+            ),
+            ("uptime_s".into(), Json::Num(uptime)),
+            ("images_per_s".into(), Json::Num(images as f64 / uptime)),
+        ])
+    }
+}
+
+/// The serving core: network + queue + stats, shared by every
+/// connection and worker.  Transport-free — tests drive it directly.
+pub struct ServeCore {
+    pub net: Arc<BdNetwork>,
+    pub queue: Arc<RequestQueue>,
+    pub stats: Arc<ServeStats>,
+    pub cfg: ServeCfg,
+}
+
+impl ServeCore {
+    /// Bytes→images conversion factor of the served model.
+    pub fn image_size(&self) -> usize {
+        self.net.input_hw * self.net.input_hw * self.net.input_ch
+    }
+
+    /// Admission control + enqueue.  `reply` is invoked exactly once
+    /// with the per-image predictions when the batch containing this
+    /// request completes; on `Err` it is never invoked (the caller
+    /// still holds whatever it needs to report the rejection).
+    pub fn submit_with(&self, images: Vec<f32>, count: usize, reply: ReplyFn) -> Result<(), SubmitError> {
+        debug_assert_eq!(images.len(), count * self.image_size());
+        let req = ClassifyRequest { images, count, enqueued: Instant::now(), reply };
+        match self.queue.push(req) {
+            Ok(()) => {
+                self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err((_, PushError::Full)) => {
+                self.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err((_, PushError::Closed)) => {
+                self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::ShuttingDown)
+            }
+        }
+    }
+
+    /// [`Self::submit_with`] wired to a channel: returns a receiver
+    /// that yields the predictions once the request's batch ran.
+    pub fn submit(&self, images: Vec<f32>, count: usize) -> Result<mpsc::Receiver<Vec<usize>>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(images, count, Box::new(move |preds| {
+            let _ = tx.send(preds);
+        }))?;
+        Ok(rx)
+    }
+}
+
+/// A started serving instance: core + running worker pool.
+pub struct ServeHandle {
+    pub core: Arc<ServeCore>,
+    pool: WorkerPool,
+}
+
+impl ServeHandle {
+    /// Spawn the worker pool over `net`.  The network's engine config
+    /// (exec/threads/tiles) should be set before starting.
+    pub fn start(net: BdNetwork, cfg: ServeCfg) -> ServeHandle {
+        let core = Arc::new(ServeCore {
+            net: Arc::new(net),
+            queue: Arc::new(RequestQueue::new(cfg.queue_depth)),
+            stats: Arc::new(ServeStats::default()),
+            cfg: cfg.clone(),
+        });
+        let pool = WorkerPool::spawn(&core);
+        ServeHandle { core, pool }
+    }
+
+    /// Blocking convenience path: submit and wait for predictions.
+    pub fn classify(&self, images: Vec<f32>, count: usize) -> Result<Vec<usize>> {
+        let rx = match self.core.submit(images, count) {
+            Ok(rx) => rx,
+            Err(e) => bail!("request rejected: {e}"),
+        };
+        match rx.recv() {
+            Ok(preds) => Ok(preds),
+            Err(_) => bail!("serve worker dropped the request (pool shut down?)"),
+        }
+    }
+
+    /// Graceful shutdown: stop admissions, drain every queued request
+    /// (all of them get answered), join the workers.
+    pub fn shutdown(self) {
+        self.core.queue.close();
+        self.pool.join();
+    }
+}

@@ -1,0 +1,278 @@
+//! Length-prefixed wire protocol of `ebs serve` (DESIGN.md §13).
+//!
+//! Transport-agnostic: the same frames flow over TCP or stdin/stdout.
+//! Every message is `[u32 LE payload_len][payload]`; payloads start
+//! with a one-byte opcode and a `u32 LE` client-chosen request id that
+//! the matching response echoes (responses to pipelined requests may
+//! arrive out of order — different micro-batches complete at different
+//! times).
+//!
+//! Requests:
+//! * `0x01` classify — `[op][id][count u32][count·H·W·C f32 LE]`
+//! * `0x02` stats    — `[op][id]`
+//! * `0x03` shutdown — `[op][id]` (graceful: queued work drains first)
+//!
+//! Responses:
+//! * `0x01` classify — `[op][id][count u32][count u32-labels]`
+//! * `0x02` stats    — `[op][id][UTF-8 JSON]` (includes `input_hw` /
+//!   `input_ch` / `classes`, so clients can size requests)
+//! * `0x03` shutdown ack — `[op][id]`
+//! * `0xFF` error    — `[op][id][code u8][UTF-8 message]`
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Hard cap on a frame payload (a 32×32×3 float image is 12 KiB; this
+/// allows ~5k of them per request while bounding a bad header's damage).
+pub const MAX_FRAME: usize = 64 << 20;
+
+pub const OP_CLASSIFY: u8 = 0x01;
+pub const OP_STATS: u8 = 0x02;
+pub const OP_SHUTDOWN: u8 = 0x03;
+pub const OP_ERROR: u8 = 0xFF;
+
+/// Error codes carried by `0xFF` responses.
+pub const ERR_OVERLOADED: u8 = 1;
+pub const ERR_SHUTTING_DOWN: u8 = 2;
+pub const ERR_BAD_REQUEST: u8 = 3;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Classify { id: u32, count: u32, images: Vec<f32> },
+    Stats { id: u32 },
+    Shutdown { id: u32 },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Classify { id: u32, labels: Vec<u32> },
+    Stats { id: u32, json: String },
+    ShutdownAck { id: u32 },
+    Error { id: u32, code: u8, msg: String },
+}
+
+/// Read one frame's payload; `Ok(None)` on clean EOF at a frame
+/// boundary (client hung up between requests).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("truncated frame header ({got} of 4 length bytes)"),
+            Ok(n) => got += n,
+            // retry EINTR like read_exact does — a signal mid-header
+            // must not kill a healthy connection
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Write `[len][payload]` (no flush — callers batch and flush).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)
+}
+
+fn take_u32(b: &[u8], at: usize, what: &str) -> Result<u32> {
+    match b.get(at..at + 4) {
+        Some(s) => Ok(u32::from_le_bytes(s.try_into().unwrap())),
+        None => bail!("frame too short for {what}"),
+    }
+}
+
+/// Decode a request payload (geometry validation — does `count` match
+/// the served model — happens in the session layer, which knows the
+/// image size).
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let Some(&op) = payload.first() else { bail!("empty frame") };
+    let id = take_u32(payload, 1, "request id")?;
+    match op {
+        OP_CLASSIFY => {
+            let count = take_u32(payload, 5, "image count")?;
+            let body = &payload[9..];
+            if body.len() % 4 != 0 {
+                bail!("classify body of {} bytes is not f32-aligned", body.len());
+            }
+            let images: Vec<f32> = body
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Request::Classify { id, count, images })
+        }
+        OP_STATS => Ok(Request::Stats { id }),
+        OP_SHUTDOWN => Ok(Request::Shutdown { id }),
+        other => bail!("unknown request opcode 0x{other:02x}"),
+    }
+}
+
+/// Encode a full request frame (length prefix included) — the client
+/// half, used by tests, the bench, and the CI smoke driver.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut p = Vec::new();
+    match req {
+        Request::Classify { id, count, images } => {
+            p.push(OP_CLASSIFY);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&count.to_le_bytes());
+            for v in images {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Request::Stats { id } => {
+            p.push(OP_STATS);
+            p.extend_from_slice(&id.to_le_bytes());
+        }
+        Request::Shutdown { id } => {
+            p.push(OP_SHUTDOWN);
+            p.extend_from_slice(&id.to_le_bytes());
+        }
+    }
+    frame(p)
+}
+
+/// Encode a full response frame (length prefix included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut p = Vec::new();
+    match resp {
+        Response::Classify { id, labels } => {
+            p.push(OP_CLASSIFY);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+            for l in labels {
+                p.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+        Response::Stats { id, json } => {
+            p.push(OP_STATS);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(json.as_bytes());
+        }
+        Response::ShutdownAck { id } => {
+            p.push(OP_SHUTDOWN);
+            p.extend_from_slice(&id.to_le_bytes());
+        }
+        Response::Error { id, code, msg } => {
+            p.push(OP_ERROR);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.push(*code);
+            p.extend_from_slice(msg.as_bytes());
+        }
+    }
+    frame(p)
+}
+
+/// Decode a response payload — the client half.
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let Some(&op) = payload.first() else { bail!("empty frame") };
+    let id = take_u32(payload, 1, "response id")?;
+    match op {
+        OP_CLASSIFY => {
+            let count = take_u32(payload, 5, "label count")? as usize;
+            let body = &payload[9..];
+            if body.len() != count * 4 {
+                bail!("classify response body {} bytes, want {}", body.len(), count * 4);
+            }
+            let labels = body
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Response::Classify { id, labels })
+        }
+        OP_STATS => Ok(Response::Stats { id, json: String::from_utf8(payload[5..].to_vec())? }),
+        OP_SHUTDOWN => Ok(Response::ShutdownAck { id }),
+        OP_ERROR => {
+            let Some(&code) = payload.get(5) else { bail!("error frame missing code") };
+            Ok(Response::Error {
+                id,
+                code,
+                msg: String::from_utf8_lossy(&payload[6..]).into_owned(),
+            })
+        }
+        other => bail!("unknown response opcode 0x{other:02x}"),
+    }
+}
+
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let frame = encode_request(req);
+        let mut cursor = &frame[..];
+        let payload = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(cursor.is_empty(), "frame length prefix must cover the payload exactly");
+        decode_request(&payload).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let frame = encode_response(resp);
+        let mut cursor = &frame[..];
+        let payload = read_frame(&mut cursor).unwrap().unwrap();
+        decode_response(&payload).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for req in [
+            Request::Classify { id: 7, count: 2, images: vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE] },
+            Request::Stats { id: 0xFFFF_FFFF },
+            Request::Shutdown { id: 0 },
+        ] {
+            assert_eq!(roundtrip_request(&req), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in [
+            Response::Classify { id: 9, labels: vec![3, 0, 7] },
+            Response::Stats { id: 1, json: "{\"images\": 4}".into() },
+            Response::ShutdownAck { id: 2 },
+            Response::Error { id: 3, code: ERR_OVERLOADED, msg: "queue full".into() },
+        ] {
+            assert_eq!(roundtrip_response(&resp), resp);
+        }
+    }
+
+    #[test]
+    fn clean_eof_and_truncation_are_distinguished() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty).unwrap().is_none(), "EOF at a boundary is clean");
+        let mut torn: &[u8] = &[5, 0];
+        assert!(read_frame(&mut torn).is_err(), "torn header is an error");
+        let mut short: &[u8] = &[8, 0, 0, 0, 1, 2];
+        assert!(read_frame(&mut short).is_err(), "payload shorter than the prefix is an error");
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut r: &[u8] = &huge;
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_fail_to_decode() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[0x42, 0, 0, 0, 0]).is_err(), "unknown opcode");
+        assert!(decode_request(&[OP_CLASSIFY, 1, 0, 0, 0, 2, 0, 0, 0, 9]).is_err(), "unaligned body");
+        assert!(decode_response(&[OP_ERROR, 1, 0, 0, 0]).is_err(), "error frame missing code");
+    }
+}

@@ -1,0 +1,222 @@
+//! Bounded MPMC request queue — the admission-control stage of the
+//! serve layer (DESIGN.md §13).
+//!
+//! Backpressure rule: a push beyond `capacity` is refused *at the
+//! door* ([`PushError::Full`]) and the request handed back to the
+//! caller, which reports the rejection to the client synchronously.
+//! Shutdown rule: [`RequestQueue::close`] stops admissions
+//! ([`PushError::Closed`]) but pops keep draining — a request that was
+//! ever admitted is always answered, never dropped (tests/serve.rs
+//! pins this).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Completion callback: invoked exactly once with the per-image
+/// predicted labels of a request once its coalesced batch ran.
+pub type ReplyFn = Box<dyn FnOnce(Vec<usize>) + Send>;
+
+/// One admitted classification request.
+pub struct ClassifyRequest {
+    /// `count` images, (count, H, W, C) row-major.
+    pub images: Vec<f32>,
+    pub count: usize,
+    /// Admission timestamp (latency accounting).
+    pub enqueued: Instant,
+    pub reply: ReplyFn,
+}
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    Full,
+    Closed,
+}
+
+/// Outcome of a deadline-bounded, size-constrained pop (the
+/// micro-batcher's "extend an open batch" primitive).
+pub enum PopFit {
+    /// Front request fit the remaining batch budget and was popped.
+    Got(ClassifyRequest),
+    /// Front request exists but exceeds the budget; left in place for
+    /// the next batch (requests are never split).
+    TooBig,
+    /// Nothing arrived before the deadline (or the queue is closed and
+    /// drained).
+    Empty,
+}
+
+struct Inner {
+    deque: VecDeque<ClassifyRequest>,
+    closed: bool,
+}
+
+/// The bounded queue itself; all waiting is condvar-based, no spinning.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl RequestQueue {
+    /// `capacity` is in requests (not images); clamped to ≥ 1.
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { deque: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit a request, or hand it back with the refusal reason.
+    pub fn push(&self, req: ClassifyRequest) -> Result<(), (ClassifyRequest, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((req, PushError::Closed));
+        }
+        if g.deque.len() >= self.capacity {
+            return Err((req, PushError::Full));
+        }
+        g.deque.push_back(req);
+        drop(g);
+        // notify_all: waiters have per-call size budgets (PopFit), so
+        // the "right" waiter for this request is not knowable here.
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Pop the oldest request, blocking until one arrives; `None` once
+    /// the queue is closed *and* drained (worker exit signal).
+    pub fn pop_blocking(&self) -> Option<ClassifyRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(req) = g.deque.pop_front() {
+                return Some(req);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop the oldest request if it carries ≤ `max_count` images,
+    /// waiting until `deadline` for one to arrive.  Never waits past
+    /// the deadline and never pops an oversized request.
+    pub fn pop_fitting_deadline(&self, max_count: usize, deadline: Instant) -> PopFit {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(front) = g.deque.front() {
+                if front.count <= max_count {
+                    return PopFit::Got(g.deque.pop_front().unwrap());
+                }
+                return PopFit::TooBig;
+            }
+            if g.closed {
+                return PopFit::Empty;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopFit::Empty;
+            }
+            let (g2, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Stop admissions; wakes every waiter so drained workers can exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Requests currently queued (racy — monitoring only).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().deque.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(count: usize) -> ClassifyRequest {
+        ClassifyRequest {
+            images: vec![0.0; count],
+            count,
+            enqueued: Instant::now(),
+            reply: Box::new(|_| {}),
+        }
+    }
+
+    #[test]
+    fn push_pop_fifo_and_capacity_rejection() {
+        let q = RequestQueue::new(2);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        match q.push(req(3)) {
+            Err((r, PushError::Full)) => assert_eq!(r.count, 3, "rejected request handed back"),
+            _ => panic!("third push must be rejected"),
+        }
+        assert_eq!(q.pop_blocking().unwrap().count, 1, "FIFO order");
+        assert_eq!(q.pop_blocking().unwrap().count, 2);
+    }
+
+    #[test]
+    fn close_rejects_new_but_drains_queued() {
+        let q = RequestQueue::new(8);
+        q.push(req(1)).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        match q.push(req(2)) {
+            Err((_, PushError::Closed)) => {}
+            _ => panic!("push after close must be rejected"),
+        }
+        assert_eq!(q.pop_blocking().unwrap().count, 1, "queued request drains");
+        assert!(q.pop_blocking().is_none(), "closed + drained → None");
+    }
+
+    #[test]
+    fn fitting_pop_respects_budget_deadline_and_close() {
+        let q = RequestQueue::new(8);
+        q.push(req(3)).unwrap();
+        let deadline = Instant::now();
+        match q.pop_fitting_deadline(2, deadline) {
+            PopFit::TooBig => {}
+            _ => panic!("count 3 must not fit budget 2"),
+        }
+        match q.pop_fitting_deadline(3, deadline) {
+            PopFit::Got(r) => assert_eq!(r.count, 3),
+            _ => panic!("count 3 fits budget 3"),
+        }
+        // Empty queue + already-expired deadline → Empty, no blocking.
+        match q.pop_fitting_deadline(4, deadline) {
+            PopFit::Empty => {}
+            _ => panic!("expired deadline on empty queue must return Empty"),
+        }
+        q.close();
+        match q.pop_fitting_deadline(4, Instant::now() + std::time::Duration::from_secs(5)) {
+            PopFit::Empty => {}
+            _ => panic!("closed + drained must return Empty immediately"),
+        }
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push_from_another_thread() {
+        let q = std::sync::Arc::new(RequestQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_blocking().map(|r| r.count));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(req(5)).unwrap();
+        assert_eq!(h.join().unwrap(), Some(5));
+    }
+}

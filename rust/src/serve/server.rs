@@ -1,0 +1,187 @@
+//! Serve front-end (DESIGN.md §13): a TCP accept loop (or a single
+//! stdin/stdout session) feeding the queue → micro-batcher → worker
+//! pipeline, with graceful drain on shutdown.
+//!
+//! Threading: one reader thread per connection decodes frames and
+//! submits classify requests; completions write the response frame
+//! straight from the worker under the connection's write mutex (no
+//! per-connection writer thread — a slow client briefly blocks one
+//! worker, acceptable at this scale and it makes the drain trivially
+//! correct: once the pool joins, every response has been written).
+//!
+//! Shutdown protocol: on a shutdown request the session acks, closes
+//! the queue (no new admissions anywhere — concurrent submissions get
+//! `ERR_SHUTTING_DOWN` frames), and flips the accept loop's flag; the
+//! front-end then joins the worker pool, which by the queue's
+//! drain-on-close contract answers every admitted request first.
+//! EOF on stdin (stdio mode) triggers the same drain.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::bd::BdNetwork;
+
+use super::protocol::{
+    self, Request, Response, ERR_BAD_REQUEST, ERR_OVERLOADED, ERR_SHUTTING_DOWN,
+};
+use super::{ServeCfg, ServeCore, ServeHandle, SubmitError};
+
+/// A bound-but-not-yet-serving TCP front-end (bind is separate from
+/// run so callers can learn the ephemeral port before serving).
+pub struct Server {
+    listener: TcpListener,
+    handle: ServeHandle,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and spawn the worker pool; serving starts at
+    /// [`Server::run`].
+    pub fn bind(net: BdNetwork, cfg: ServeCfg) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serve address {}", cfg.addr))?;
+        let handle = ServeHandle::start(net, cfg);
+        Ok(Server { listener, handle, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept-and-serve until a shutdown request arrives, then drain
+    /// and return.  Prints `serving on <addr>` to stdout first (the CI
+    /// smoke driver parses it to find the ephemeral port).
+    pub fn run(self) -> Result<()> {
+        let Server { listener, handle, shutdown } = self;
+        let addr = listener.local_addr()?;
+        println!("serving on {addr}");
+        std::io::stdout().flush().ok();
+        listener.set_nonblocking(true).context("nonblocking accept loop")?;
+        while !shutdown.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(false).ok();
+                    stream.set_nodelay(true).ok();
+                    let reader = match stream.try_clone() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("[serve] dropping {peer}: {e}");
+                            continue;
+                        }
+                    };
+                    let core = Arc::clone(&handle.core);
+                    let writer = Arc::new(Mutex::new(stream));
+                    let flag = Arc::clone(&shutdown);
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_session(&core, reader, &writer, &flag) {
+                            eprintln!("[serve] session {peer}: {e:#}");
+                        }
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("[serve] accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        let stats = Arc::clone(&handle.core.stats);
+        let net = Arc::clone(&handle.core.net);
+        handle.shutdown(); // drain: every admitted request is answered
+        eprintln!("[serve] drained; final stats: {}", stats.to_json(&net));
+        Ok(())
+    }
+}
+
+/// Single-session mode over stdin/stdout (`ebs serve --stdin`): same
+/// frames, no sockets.  EOF or a shutdown request drains and returns.
+pub fn run_stdio(net: BdNetwork, cfg: ServeCfg) -> Result<()> {
+    let handle = ServeHandle::start(net, cfg);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let writer = Arc::new(Mutex::new(std::io::stdout()));
+    let result = handle_session(&handle.core, std::io::stdin().lock(), &writer, &shutdown);
+    let stats = Arc::clone(&handle.core.stats);
+    let net = Arc::clone(&handle.core.net);
+    handle.shutdown();
+    writer.lock().unwrap().flush().ok();
+    eprintln!("[serve] drained; final stats: {}", stats.to_json(&net));
+    result
+}
+
+/// Decode-dispatch loop for one connection.  Returns on clean EOF, a
+/// transport error, or a shutdown request (after acking + flipping
+/// `shutdown`).
+pub fn handle_session<R: Read, W: Write + Send + 'static>(
+    core: &Arc<ServeCore>,
+    mut reader: R,
+    writer: &Arc<Mutex<W>>,
+    shutdown: &AtomicBool,
+) -> Result<()> {
+    let img_sz = core.image_size();
+    loop {
+        let Some(payload) = protocol::read_frame(&mut reader)? else {
+            return Ok(()); // client hung up between frames
+        };
+        let req = match protocol::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                send(writer, &Response::Error { id: 0, code: ERR_BAD_REQUEST, msg: format!("{e:#}") })?;
+                continue;
+            }
+        };
+        match req {
+            Request::Classify { id, count, images } => {
+                let count = count as usize;
+                if count == 0 || images.len() != count * img_sz {
+                    let msg = format!(
+                        "classify request {id}: {} floats for count {count} (image size {img_sz})",
+                        images.len()
+                    );
+                    send(writer, &Response::Error { id, code: ERR_BAD_REQUEST, msg })?;
+                    continue;
+                }
+                let w = Arc::clone(writer);
+                let submitted = core.submit_with(
+                    images,
+                    count,
+                    Box::new(move |preds| {
+                        let labels = preds.iter().map(|&p| p as u32).collect();
+                        let _ = send(&w, &Response::Classify { id, labels });
+                    }),
+                );
+                if let Err(e) = submitted {
+                    let code = match e {
+                        SubmitError::Overloaded => ERR_OVERLOADED,
+                        SubmitError::ShuttingDown => ERR_SHUTTING_DOWN,
+                    };
+                    send(writer, &Response::Error { id, code, msg: e.to_string() })?;
+                }
+            }
+            Request::Stats { id } => {
+                let json = core.stats.to_json(&core.net).to_string();
+                send(writer, &Response::Stats { id, json })?;
+            }
+            Request::Shutdown { id } => {
+                send(writer, &Response::ShutdownAck { id })?;
+                core.queue.close();
+                shutdown.store(true, Ordering::Release);
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn send<W: Write>(writer: &Arc<Mutex<W>>, resp: &Response) -> std::io::Result<()> {
+    let frame = protocol::encode_response(resp);
+    let mut g = writer.lock().unwrap();
+    g.write_all(&frame)?;
+    g.flush()
+}

@@ -1,0 +1,84 @@
+//! Serve worker pool (DESIGN.md §13): N threads, each holding the
+//! shared [`BdNetwork`] plus its *own* [`NetScratch`] and input
+//! concatenation buffer, so steady-state serving performs no per-batch
+//! network allocation (the §5 scratch-reuse argument, per worker).
+//!
+//! Worker counts resolve through [`crate::kernels::resolve_threads`]
+//! (0 = machine parallelism), the same plumbing every other thread
+//! pool in the tree uses.  Workers exit when the queue reports closed
+//! *and* drained, which is what makes shutdown graceful: every
+//! admitted request is answered before `join` returns.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::bd::NetScratch;
+use crate::kernels::resolve_threads;
+
+use super::batcher;
+use super::ServeCore;
+
+/// Handles of the running pool; [`WorkerPool::join`] blocks until the
+/// queue is drained and every worker exited.
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.workers` threads (0 = machine count) over the core.
+    pub fn spawn(core: &Arc<ServeCore>) -> WorkerPool {
+        let n = resolve_threads(core.cfg.workers).max(1);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let core = Arc::clone(core);
+            let h = std::thread::Builder::new()
+                .name(format!("ebs-serve-{i}"))
+                .spawn(move || worker_loop(&core))
+                .expect("spawning serve worker");
+            handles.push(h);
+        }
+        WorkerPool { handles }
+    }
+
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Wait for the drain to finish (call after `queue.close()`).
+    pub fn join(self) {
+        for h in self.handles {
+            // A panicked worker already aborted its batch; joining the
+            // rest still drains everything they can reach.
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(core: &ServeCore) {
+    let mut scratch = NetScratch::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let max_wait = Duration::from_micros(core.cfg.max_wait_us);
+    while let Some(batch) = batcher::next_batch(&core.queue, core.cfg.max_batch, max_wait) {
+        // Concatenate whole requests in arrival order; the batched
+        // forward is bit-identical per image at any composition, so
+        // this equals a direct classify_batch on the same inputs.
+        xs.clear();
+        for r in &batch.requests {
+            xs.extend_from_slice(&r.images);
+        }
+        let preds = core.net.classify_batch_with(&xs, batch.images, &mut scratch);
+        debug_assert_eq!(preds.len(), batch.images);
+        // Counters update BEFORE any reply goes out: a client that
+        // just received its answer must never observe stats that don't
+        // include it (the CI smoke asserts on this ordering).
+        core.stats.record_batch(batch.images, batch.requests.len());
+        let mut off = 0;
+        for r in batch.requests {
+            let labels = preds[off..off + r.count].to_vec();
+            off += r.count;
+            let us = r.enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64;
+            core.stats.record_latency_us(us);
+            (r.reply)(labels);
+        }
+    }
+}

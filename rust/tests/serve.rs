@@ -1,0 +1,220 @@
+//! Serve-layer integration tests (DESIGN.md §13): bit-identical
+//! served predictions, graceful shutdown drain, admission control,
+//! and the TCP front-end under concurrent load.
+//!
+//! The deterministic boundary behavior of the coalescer itself
+//! (exactly-at-max_batch, never-split, oversized-alone) is pinned by
+//! the unit tests in `serve::batcher`; these tests cover the threaded
+//! end of the same contracts.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use ebs::bd::BdNetwork;
+use ebs::serve::protocol::{self, Request, Response};
+use ebs::serve::queue::RequestQueue;
+use ebs::serve::server::Server;
+use ebs::serve::{ServeCfg, ServeCore, ServeHandle, ServeStats, SubmitError};
+use ebs::util::Rng;
+
+fn test_cfg(workers: usize, max_batch: usize, max_wait_us: u64) -> ServeCfg {
+    ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        max_batch,
+        max_wait_us,
+        queue_depth: 256,
+    }
+}
+
+/// Shared image pool + the ground-truth predictions of a direct
+/// `classify_batch` call on the whole pool.
+fn pool(seed: u64, n: usize) -> (Vec<f32>, Vec<usize>, usize) {
+    let net = BdNetwork::synthetic(seed);
+    let img_sz = net.input_hw * net.input_hw * net.input_ch;
+    let mut rng = Rng::new(seed ^ 0x1111);
+    let xs: Vec<f32> = (0..n * img_sz).map(|_| rng.normal().abs()).collect();
+    let direct = net.classify_batch(&xs, n);
+    (xs, direct, img_sz)
+}
+
+/// Carve `n` images into requests of cycling sizes 1, 2, 3, ...
+fn request_plan(n: usize) -> Vec<(usize, usize)> {
+    let mut plan = Vec::new();
+    let (mut off, mut k) = (0usize, 1usize);
+    while off < n {
+        let count = k.min(n - off);
+        plan.push((off, count));
+        off += count;
+        k = if k == 3 { 1 } else { k + 1 };
+    }
+    plan
+}
+
+/// Served predictions must be bit-identical to a direct
+/// `classify_batch` on the same inputs, at any worker count and under
+/// concurrent submission (coalescing on).
+#[test]
+fn served_predictions_bit_identical_to_direct_classify_batch() {
+    let n = 24;
+    let (xs, direct, img_sz) = pool(7, n);
+    for workers in [1usize, 3] {
+        let handle =
+            Arc::new(ServeHandle::start(BdNetwork::synthetic(7), test_cfg(workers, 8, 2000)));
+        let mut joins = Vec::new();
+        for (off, count) in request_plan(n) {
+            let h = Arc::clone(&handle);
+            let req = xs[off * img_sz..(off + count) * img_sz].to_vec();
+            let want = direct[off..off + count].to_vec();
+            joins.push(std::thread::spawn(move || {
+                let got = h.classify(req, count).unwrap();
+                assert_eq!(got, want, "request at offset {off} (count {count})");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let core = Arc::clone(&handle.core);
+        match Arc::try_unwrap(handle) {
+            Ok(h) => h.shutdown(),
+            Err(_) => panic!("all clients joined; handle must be unique"),
+        }
+        let stats = &core.stats;
+        let images = stats.images.load(std::sync::atomic::Ordering::Relaxed);
+        let batch_max = stats.batch_images_max.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(images as usize, n, "workers={workers}");
+        assert!(batch_max <= 8, "coalescer must respect max_batch (saw {batch_max})");
+    }
+}
+
+/// Graceful shutdown: every admitted request is answered — including
+/// ones still queued when shutdown begins — and later submissions are
+/// cleanly rejected, never silently dropped.
+#[test]
+fn shutdown_answers_all_queued_requests_and_rejects_new_ones() {
+    let n = 40;
+    let (xs, direct, img_sz) = pool(11, n);
+    let handle = ServeHandle::start(BdNetwork::synthetic(11), test_cfg(1, 4, 0));
+    let core = Arc::clone(&handle.core);
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            core.submit(xs[i * img_sz..(i + 1) * img_sz].to_vec(), 1)
+                .expect("queue_depth 256 admits the whole burst")
+        })
+        .collect();
+    // Close with (most of) the burst still queued behind one worker.
+    handle.shutdown();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let preds = rx.recv().expect("admitted request must be answered, not dropped");
+        assert_eq!(preds, &direct[i..i + 1], "request {i}");
+    }
+    match core.submit(xs[..img_sz].to_vec(), 1) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("post-shutdown submit must be rejected, got {other:?}"),
+    }
+    let admitted = core.stats.admitted.load(std::sync::atomic::Ordering::Relaxed);
+    let completed = core.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!((admitted, completed), (n as u64, n as u64));
+}
+
+/// Admission control: with no workers draining, the bounded queue
+/// rejects exactly the overflow — and hands rejections out
+/// synchronously (backpressure, not buffering).
+#[test]
+fn bounded_queue_rejects_overflow_synchronously() {
+    let net = BdNetwork::synthetic(3);
+    let img_sz = net.input_hw * net.input_hw * net.input_ch;
+    let core = ServeCore {
+        net: Arc::new(net),
+        queue: Arc::new(RequestQueue::new(2)),
+        stats: Arc::new(ServeStats::default()),
+        cfg: test_cfg(1, 8, 0),
+    };
+    let img = vec![0.5f32; img_sz];
+    assert!(core.submit(img.clone(), 1).is_ok());
+    assert!(core.submit(img.clone(), 1).is_ok());
+    match core.submit(img.clone(), 1) {
+        Err(SubmitError::Overloaded) => {}
+        other => panic!("third submit must hit admission control, got {other:?}"),
+    }
+    let rejected = core.stats.rejected_full.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(rejected, 1);
+}
+
+fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
+    use std::io::Write;
+    stream.write_all(&protocol::encode_request(req)).unwrap();
+    let payload = protocol::read_frame(stream).unwrap().expect("server hung up mid-request");
+    protocol::decode_response(&payload).unwrap()
+}
+
+/// Full TCP stack: concurrent connections, pipelined mixed-size
+/// requests, stats introspection, graceful shutdown, clean exit.
+#[test]
+fn tcp_server_serves_concurrent_load_and_shuts_down_cleanly() {
+    let n = 24;
+    let (xs, direct, img_sz) = pool(9, n);
+    let server = Server::bind(BdNetwork::synthetic(9), test_cfg(2, 8, 500)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_join = std::thread::spawn(move || server.run());
+
+    let xs = Arc::new(xs);
+    let direct = Arc::new(direct);
+    let mut clients = Vec::new();
+    for t in 0..4usize {
+        let (xs, direct) = (Arc::clone(&xs), Arc::clone(&direct));
+        clients.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // Each client owns every 4th request of the shared plan.
+            for (i, (off, count)) in request_plan(n).into_iter().enumerate() {
+                if i % 4 != t {
+                    continue;
+                }
+                let id = (t * 1000 + i) as u32;
+                let req = Request::Classify {
+                    id,
+                    count: count as u32,
+                    images: xs[off * img_sz..(off + count) * img_sz].to_vec(),
+                };
+                match roundtrip(&mut stream, &req) {
+                    Response::Classify { id: rid, labels } => {
+                        assert_eq!(rid, id);
+                        let want: Vec<u32> =
+                            direct[off..off + count].iter().map(|&p| p as u32).collect();
+                        assert_eq!(labels, want, "served ≠ direct at offset {off}");
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // Control connection: malformed frame → error; stats; shutdown.
+    let mut ctl = TcpStream::connect(addr).unwrap();
+    match roundtrip(&mut ctl, &Request::Classify { id: 5, count: 3, images: vec![0.0; 7] }) {
+        Response::Error { id, code, .. } => {
+            assert_eq!((id, code), (5, protocol::ERR_BAD_REQUEST));
+        }
+        other => panic!("bad geometry must be rejected, got {other:?}"),
+    }
+    match roundtrip(&mut ctl, &Request::Stats { id: 6 }) {
+        Response::Stats { id, json } => {
+            assert_eq!(id, 6);
+            assert!(json.contains("\"input_hw\""), "stats must expose geometry: {json}");
+            assert!(json.contains("\"batches\""), "stats must expose counters: {json}");
+        }
+        other => panic!("unexpected stats response {other:?}"),
+    }
+    match roundtrip(&mut ctl, &Request::Shutdown { id: 7 }) {
+        Response::ShutdownAck { id } => assert_eq!(id, 7),
+        other => panic!("unexpected shutdown response {other:?}"),
+    }
+    server_join.join().unwrap().unwrap();
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "listener must be gone after a clean shutdown"
+    );
+}
