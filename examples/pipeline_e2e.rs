@@ -15,6 +15,7 @@ use ebs::coordinator::{
     run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
 };
 use ebs::data::synth::{generate, SynthSpec};
+use ebs::exec::StepExecutor;
 use ebs::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
@@ -22,12 +23,15 @@ fn main() -> anyhow::Result<()> {
     let steps = |base: usize| ((base as f64 * scale) as usize).max(10);
 
     let dir = std::path::Path::new("artifacts/resnet20_synth");
-    let mut engine = Engine::open(dir)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    // Wrap the engine in the (serial) step executor; pass
+    // ShardSpec::new(N, 0) instead to fan search/train steps over N
+    // data-parallel replicas (DESIGN.md §14).
+    let mut exec = StepExecutor::serial(Engine::open(dir)?);
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let target = flops.uniform_mflops(3);
     println!(
         "== e2e: {} on synthetic CIFAR | FP32 {:.2} MFLOPs, target {:.2} MFLOPs (3-bit point) ==",
-        engine.manifest.model, flops.fp32_mflops, target
+        exec.manifest.model, flops.fp32_mflops, target
     );
 
     let (train, test) = generate(&SynthSpec::cifar_like(1234));
@@ -41,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         save_artifacts: true,
     };
     let t0 = std::time::Instant::now();
-    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger)?;
+    let (result, state) = run_pipeline(&mut exec, &train, &test, &cfg, None, &mut logger)?;
     println!(
         "\npipeline wall-clock: {:.1}s | loss curve + summary in {}",
         t0.elapsed().as_secs_f64(),
@@ -58,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Deployment stage: BD engine accuracy must match the HLO eval path.
-    let net = BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused)?;
+    let net = BdNetwork::from_state(&exec.manifest, &state, &result.selection, BdMode::Fused)?;
     let n = 256.min(test.len());
     let sz = test.hw * test.hw * test.channels;
     let preds = net.classify_batch(&test.images[..n * sz], n);

@@ -12,16 +12,20 @@ use ebs::coordinator::{
     run_pipeline, FlopsModel, PipelineCfg, RunLogger, SearchCfg, TrainCfg,
 };
 use ebs::data::synth::{generate, SynthSpec};
+use ebs::exec::StepExecutor;
 use ebs::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new("artifacts/resnet8_tiny");
-    let mut engine = Engine::open(dir)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    // Wrap the engine in the (serial) step executor; pass
+    // ShardSpec::new(N, 0) instead to fan search/train steps over N
+    // data-parallel replicas (DESIGN.md §14).
+    let mut exec = StepExecutor::serial(Engine::open(dir)?);
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let target = flops.uniform_mflops(3); // aim for the 3-bit cost point
     println!(
         "== EBS quickstart: {} | FP32 {:.2} MFLOPs, target {:.2} MFLOPs ==",
-        engine.manifest.model, flops.fp32_mflops, target
+        exec.manifest.model, flops.fp32_mflops, target
     );
 
     let (train, test) = generate(&SynthSpec::tiny(7));
@@ -33,10 +37,10 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         save_artifacts: false,
     };
-    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger)?;
+    let (result, state) = run_pipeline(&mut exec, &train, &test, &cfg, None, &mut logger)?;
 
     println!("\nper-layer bitwidths (Eq. 4 argmax):");
-    for (i, name) in engine.manifest.qconv_layers.iter().enumerate() {
+    for (i, name) in exec.manifest.qconv_layers.iter().enumerate() {
         println!(
             "  {name:<8} W{} A{}",
             result.selection.w_bits[i], result.selection.x_bits[i]
@@ -51,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Deploy on the Binary Decomposition engine and sanity-check parity.
-    let net = BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused)?;
+    let net = BdNetwork::from_state(&exec.manifest, &state, &result.selection, BdMode::Fused)?;
     let n = 64.min(test.len());
     let sz = test.hw * test.hw * test.channels;
     let mut correct = 0;

@@ -135,5 +135,55 @@ fn main() -> anyhow::Result<()> {
         )?;
         println!("# wrote {path}");
     }
+
+    // Sharded-executor sweep (DESIGN.md §14): the same search_det step
+    // fanned over {1, 2, 4} data-parallel replicas at a fixed canonical
+    // chunk count — results are bit-identical across the sweep, so
+    // step_ms is the only axis.  Runs when --shard-json asks for it
+    // (the search-shard CI lane does).
+    if let Some(path) = ebs::util::cli::argv_value_flag("--shard-json", "BENCH_shard_search.json") {
+        use ebs::exec::{ShardSpec, StepExecutor};
+        println!("# native search_det shards sweep — median of {reps} × {iters} steps");
+        println!("{:<8} {:>8} {:>12} {:>9}", "shards", "chunks", "step ms", "speedup");
+        let mut shard_rows = Vec::new();
+        let mut serial_ms = 0f64;
+        for &shards in &[1usize, 2, 4] {
+            let spec = ShardSpec::new(shards, 0); // chunks → max(shards, 4) = 4
+            let mut step_ms: Vec<f64> = Vec::with_capacity(reps);
+            for _ in 0..reps.max(1) {
+                let mut exec = StepExecutor::new(Engine::native(&model)?, spec);
+                let mut state = exec.init_state(1)?;
+                let cost =
+                    ebs::baselines::dnas::run_sharded_search_steps(&mut exec, &mut state, iters, 7)?;
+                step_ms.push(cost.total_seconds * 1e3 / iters as f64);
+            }
+            step_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = step_ms[step_ms.len() / 2];
+            if shards == 1 {
+                serial_ms = med;
+            }
+            let speedup = serial_ms / med;
+            println!("{:<8} {:>8} {:>12.2} {:>8.2}x", shards, spec.chunks, med, speedup);
+            shard_rows.push(Json::Obj(vec![
+                ("backend".into(), Json::Str("native".into())),
+                ("model".into(), Json::Str(model.clone())),
+                ("batch".into(), Json::Num(batch as f64)),
+                ("iters".into(), Json::Num(iters as f64)),
+                ("shards".into(), Json::Num(shards as f64)),
+                ("chunks".into(), Json::Num(spec.chunks as f64)),
+                ("step_ms".into(), Json::Num(med)),
+                ("shard_speedup".into(), Json::Num(speedup)),
+            ]));
+        }
+        ebs::util::json::write_bench_json(
+            std::path::Path::new(&path),
+            "shard_search",
+            reps,
+            0,
+            (0, 0),
+            shard_rows,
+        )?;
+        println!("# wrote {path}");
+    }
     Ok(())
 }

@@ -23,6 +23,57 @@ pub struct StepCost {
     pub state_bytes: usize,
 }
 
+/// Shared body of the search-step timing harness (Table 3 and the
+/// shards sweep ride the same protocol): a seeded random-batch stream,
+/// the fixed step-io literal, one untimed warmup step, then `iters`
+/// timed steps through `step`.  One copy of the io keys and
+/// hyperparameters, however the step is dispatched.
+fn timed_search_steps(
+    image: [usize; 3],
+    batch: usize,
+    classes: usize,
+    iters: usize,
+    seed: u64,
+    step: &mut dyn FnMut(&[(String, Tensor)]) -> Result<()>,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed);
+    let [h, w, c] = image;
+    let draw = move |rng: &mut Rng| -> (Tensor, Tensor) {
+        (
+            Tensor::from_f32(
+                &[batch, h, w, c],
+                (0..batch * h * w * c).map(|_| rng.normal()).collect(),
+            ),
+            Tensor::from_i32(&[batch], (0..batch).map(|_| rng.below(classes) as i32).collect()),
+        )
+    };
+    let io = |xt: Tensor, yt: Tensor, xv: Tensor, yv: Tensor| {
+        vec![
+            ("xt".to_string(), xt),
+            ("yt".to_string(), yt),
+            ("xv".to_string(), xv),
+            ("yv".to_string(), yv),
+            ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+            ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+            ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+            ("lam".to_string(), Tensor::scalar_f32(0.5)),
+            ("target".to_string(), Tensor::scalar_f32(1.0)),
+        ]
+    };
+    // Warmup (compile on PJRT, arena/replica growth on native) outside
+    // the timed region.
+    let (xt, yt) = draw(&mut rng);
+    let (xv, yv) = draw(&mut rng);
+    step(&io(xt, yt, xv, yv))?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let (xt, yt) = draw(&mut rng);
+        let (xv, yv) = draw(&mut rng);
+        step(&io(xt, yt, xv, yv))?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
 /// Execute `iters` steps of `graph` ("search_det" or "dnas_search") with
 /// random batches; returns wall-clock + memory accounting.
 pub fn run_dnas_steps(
@@ -32,44 +83,41 @@ pub fn run_dnas_steps(
     iters: usize,
     seed: u64,
 ) -> Result<StepCost> {
-    let mut rng = Rng::new(seed);
-    let [h, w, c] = engine.manifest.image;
-    let b = engine.manifest.batch_size;
-    let classes = engine.manifest.num_classes;
-    let batch = move |rng: &mut Rng| -> (Tensor, Tensor) {
-        (
-            Tensor::from_f32(&[b, h, w, c], (0..b * h * w * c).map(|_| rng.normal()).collect()),
-            Tensor::from_i32(&[b], (0..b).map(|_| rng.below(classes) as i32).collect()),
-        )
-    };
-    // Compile + one warmup step outside the timed region.
     engine.prepare(graph)?;
-    let (xt, yt) = batch(&mut rng);
-    let (xv, yv) = batch(&mut rng);
-    let io = |xt: &Tensor, yt: &Tensor, xv: &Tensor, yv: &Tensor| {
-        vec![
-            ("xt".to_string(), xt.clone()),
-            ("yt".to_string(), yt.clone()),
-            ("xv".to_string(), xv.clone()),
-            ("yv".to_string(), yv.clone()),
-            ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
-            ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
-            ("wd".to_string(), Tensor::scalar_f32(5e-4)),
-            ("lam".to_string(), Tensor::scalar_f32(0.5)),
-            ("target".to_string(), Tensor::scalar_f32(1.0)),
-        ]
-    };
-    engine.run(graph, state, &io(&xt, &yt, &xv, &yv))?;
-
-    let t0 = Instant::now();
-    for _ in 0..iters {
-        let (xt, yt) = batch(&mut rng);
-        let (xv, yv) = batch(&mut rng);
-        engine.run(graph, state, &io(&xt, &yt, &xv, &yv))?;
-    }
-    let total_seconds = t0.elapsed().as_secs_f64();
+    let (image, b, classes) =
+        (engine.manifest.image, engine.manifest.batch_size, engine.manifest.num_classes);
+    let total_seconds = timed_search_steps(image, b, classes, iters, seed, &mut |io| {
+        engine.run(graph, state, io)?;
+        Ok(())
+    })?;
     Ok(StepCost {
         graph: graph.to_string(),
+        iters,
+        total_seconds,
+        peak_rss_bytes: mem::peak_rss_bytes(),
+        state_bytes: state.size_bytes(),
+    })
+}
+
+/// [`run_dnas_steps`] through the sharded step executor — the
+/// shards-sweep half of the `search_step` bench (DESIGN.md §14): the
+/// identical step protocol, each step dispatched via
+/// [`crate::exec::StepExecutor::step`] so it fans out over the
+/// configured replicas.
+pub fn run_sharded_search_steps(
+    exec: &mut crate::exec::StepExecutor,
+    state: &mut StateVec,
+    iters: usize,
+    seed: u64,
+) -> Result<StepCost> {
+    let (image, b, classes) =
+        (exec.manifest.image, exec.manifest.batch_size, exec.manifest.num_classes);
+    let total_seconds = timed_search_steps(image, b, classes, iters, seed, &mut |io| {
+        exec.step("search_det", state, io)?;
+        Ok(())
+    })?;
+    Ok(StepCost {
+        graph: "search_det".to_string(),
         iters,
         total_seconds,
         peak_rss_bytes: mem::peak_rss_bytes(),

@@ -8,13 +8,14 @@ use anyhow::Result;
 
 use crate::coordinator::{run_retrain, FlopsModel, RunLogger, Selection, TrainCfg, TrainResult};
 use crate::data::Dataset;
-use crate::runtime::{Engine, StateVec};
+use crate::exec::StepExecutor;
+use crate::runtime::StateVec;
 use crate::util::Rng;
 
 /// Sample-and-retrain one random mixed precision QNN near the target.
 #[allow(clippy::too_many_arguments)]
 pub fn run_random_search(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     init_from: &StateVec,
     target_mflops: f64,
     train: &Dataset,
@@ -23,7 +24,7 @@ pub fn run_random_search(
     seed: u64,
     logger: &mut RunLogger,
 ) -> Result<(TrainResult, Selection, f64)> {
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let mut rng = Rng::new(seed ^ 0x9A4D);
     let sel = Selection::random_within(&mut rng, &flops, target_mflops, 0.08, 200_000)?;
     let mflops = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
@@ -32,11 +33,11 @@ pub fn run_random_search(
         "random_start",
         &[("target", target_mflops), ("mflops", mflops), ("mean_w", mw), ("mean_x", mx)],
     );
-    let mut state = engine.init_state(cfg.seed as i32)?;
+    let mut state = exec.init_state(cfg.seed as i32)?;
     state.transfer_from(init_from, "state/params/");
     state.transfer_from(init_from, "state/bn/");
     state.transfer_from(init_from, "state/alphas/");
-    let res = run_retrain(engine, &mut state, &sel, train, test, cfg, None, logger)?;
+    let res = run_retrain(exec, &mut state, &sel, train, test, cfg, None, logger)?;
     logger.event(
         "random_done",
         &[("mflops", mflops), ("test_acc", res.best_test_acc)],

@@ -7,14 +7,15 @@ use anyhow::Result;
 
 use crate::coordinator::{run_retrain, FlopsModel, RunLogger, Selection, TrainCfg, TrainResult};
 use crate::data::Dataset;
-use crate::runtime::{Engine, StateVec};
+use crate::exec::StepExecutor;
+use crate::runtime::StateVec;
 
 /// Train + evaluate a w-bit/x-bit uniform QNN starting from `init_from`
 /// (usually the FP-pretrained state, or the previous — higher-precision —
 /// model for progressive initialization, §B.3).
 #[allow(clippy::too_many_arguments)]
 pub fn run_uniform(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     init_from: &StateVec,
     w_bits: u32,
     x_bits: u32,
@@ -23,10 +24,10 @@ pub fn run_uniform(
     cfg: &TrainCfg,
     logger: &mut RunLogger,
 ) -> Result<(TrainResult, Selection, f64, StateVec)> {
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
-    let sel = Selection::uniform(w_bits, x_bits, engine.manifest.num_qconvs());
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
+    let sel = Selection::uniform(w_bits, x_bits, exec.manifest.num_qconvs());
     let mflops = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
-    let mut state = engine.init_state(cfg.seed as i32)?;
+    let mut state = exec.init_state(cfg.seed as i32)?;
     state.transfer_from(init_from, "state/params/");
     state.transfer_from(init_from, "state/bn/");
     state.transfer_from(init_from, "state/alphas/");
@@ -34,7 +35,7 @@ pub fn run_uniform(
         "uniform_start",
         &[("w_bits", w_bits as f64), ("x_bits", x_bits as f64), ("mflops", mflops)],
     );
-    let res = run_retrain(engine, &mut state, &sel, train, test, cfg, None, logger)?;
+    let res = run_retrain(exec, &mut state, &sel, train, test, cfg, None, logger)?;
     logger.event(
         "uniform_done",
         &[

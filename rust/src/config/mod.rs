@@ -133,6 +133,7 @@ fn train_cfg(doc: &TomlDoc, section: &str, default_steps: usize, default_lr: f32
         eval_every: doc.usize_or(&format!("{section}.eval_every"), 100),
         log_every: doc.usize_or(&format!("{section}.log_every"), 20),
         seed: doc.i64_or(&format!("{section}.seed"), 0) as u64,
+        ckpt_every: doc.usize_or(&format!("{section}.ckpt_every"), 0),
     }
 }
 
@@ -165,6 +166,12 @@ impl RunConfig {
             eval_every: doc.usize_or("search.eval_every", 50),
             log_every: doc.usize_or("search.log_every", 10),
             seed: doc.i64_or("search.seed", 0) as u64,
+            // Data-parallel sharded execution (DESIGN.md §14): shards=0
+            // keeps the legacy serial step; `--shards` overrides.
+            shards: doc.usize_or("search.shards", 0),
+            shard_chunks: doc.usize_or("search.shard_chunks", 0),
+            ckpt_every: doc.usize_or("search.ckpt_every", 0),
+            resume_from: None,
         };
         let bd_defaults = BdDeployConfig::default();
         let bd = BdDeployConfig {
@@ -258,6 +265,23 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.data.n_train, 256);
         assert!(cfg.search.stochastic);
         assert_eq!(cfg.targets_mflops, vec![0.10, 0.16]);
+    }
+
+    #[test]
+    fn shard_and_ckpt_keys_parse_and_default_off() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.search.shards, 0, "sharding defaults off");
+        assert_eq!(cfg.search.shard_chunks, 0);
+        assert_eq!(cfg.search.ckpt_every, 0);
+        assert_eq!(cfg.pretrain.ckpt_every, 0);
+        let cfg = RunConfig::from_doc(
+            parse("[search]\nshards = 2\nshard_chunks = 8\nckpt_every = 50\n[retrain]\nckpt_every = 25\n")
+                .unwrap(),
+        );
+        assert_eq!(cfg.search.shards, 2);
+        assert_eq!(cfg.search.shard_chunks, 8);
+        assert_eq!(cfg.search.ckpt_every, 50);
+        assert_eq!(cfg.retrain.ckpt_every, 25);
     }
 
     #[test]

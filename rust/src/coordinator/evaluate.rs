@@ -7,7 +7,8 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+use crate::exec::StepExecutor;
+use crate::runtime::{metric_f32, StateVec, Tensor};
 
 use super::selection::Selection;
 
@@ -21,28 +22,28 @@ pub struct EvalResult {
 
 /// Evaluate a quantized network under `sel` over `ds`.
 pub fn eval_quantized(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     sel: &Selection,
     ds: &Dataset,
 ) -> Result<EvalResult> {
-    let (sel_w, sel_x) = sel.to_onehot(&engine.manifest)?;
-    eval_graph(engine, state, ds, "eval", Some((sel_w, sel_x)))
+    let (sel_w, sel_x) = sel.to_onehot(&exec.manifest)?;
+    eval_graph(exec, state, ds, "eval", Some((sel_w, sel_x)))
 }
 
 /// Evaluate the full-precision network over `ds`.
-pub fn eval_fp(engine: &mut Engine, state: &mut StateVec, ds: &Dataset) -> Result<EvalResult> {
-    eval_graph(engine, state, ds, "fp_eval", None)
+pub fn eval_fp(exec: &mut StepExecutor, state: &mut StateVec, ds: &Dataset) -> Result<EvalResult> {
+    eval_graph(exec, state, ds, "fp_eval", None)
 }
 
 fn eval_graph(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     ds: &Dataset,
     graph: &str,
     sel: Option<(Tensor, Tensor)>,
 ) -> Result<EvalResult> {
-    let b = engine.manifest.batch_size;
+    let b = exec.manifest.batch_size;
     let n_batches = ds.len() / b;
     assert!(n_batches > 0, "dataset smaller than one batch");
     let mut total_loss = 0.0f64;
@@ -55,7 +56,7 @@ fn eval_graph(
             io.push(("sel_w".to_string(), sw.clone()));
             io.push(("sel_x".to_string(), sx.clone()));
         }
-        let m = engine.run(graph, state, &io)?;
+        let m = exec.step(graph, state, &io)?;
         total_loss += metric_f32(&m, "loss")? as f64;
         total_correct += metric_f32(&m, "correct")? as f64;
     }
@@ -68,13 +69,14 @@ fn eval_graph(
 }
 
 /// Teacher logits for one batch via the FP graph (label refinery, §B.2).
+/// Inference has no sharded lowering — this rides the serial engine path.
 pub fn teacher_logits(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     fp_state: &mut StateVec,
     x: &Tensor,
 ) -> Result<Tensor> {
     let io = vec![("x".to_string(), x.clone())];
-    let m = engine.run("fp_infer", fp_state, &io)?;
+    let m = exec.run("fp_infer", fp_state, &io)?;
     m.get("logits")
         .cloned()
         .ok_or_else(|| anyhow::anyhow!("fp_infer returned no logits"))

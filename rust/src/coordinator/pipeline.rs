@@ -7,7 +7,8 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::runtime::{Engine, StateVec};
+use crate::exec::StepExecutor;
+use crate::runtime::StateVec;
 use crate::util::json::Json;
 
 use super::evaluate::eval_quantized;
@@ -45,27 +46,27 @@ pub struct PipelineResult {
 /// starts from the FP-pretrained weights, as the paper does for the
 /// first model.
 pub fn run_pipeline(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     train: &Dataset,
     test: &Dataset,
     cfg: &PipelineCfg,
     retrain_from: Option<&StateVec>,
     logger: &mut RunLogger,
 ) -> Result<(PipelineResult, StateVec)> {
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
 
     // Stage 0: FP pre-training (also the teacher for label refinery).
-    let mut fp_state = engine.init_state(cfg.seed)?;
-    let fp_res = run_fp_train(engine, &mut fp_state, train, test, &cfg.pretrain, logger)?;
+    let mut fp_state = exec.init_state(cfg.seed)?;
+    let fp_res = run_fp_train(exec, &mut fp_state, train, test, &cfg.pretrain, logger)?;
     logger.event("pipeline_fp_done", &[("fp_test_acc", fp_res.best_test_acc)]);
 
     // Stage 1: bilevel search on a stratified 50/50 split (§B.2).
     let (search_train, search_val) = train.split(0.5, cfg.search.seed ^ 0x51);
-    let mut search_state = engine.init_state(cfg.seed)?;
+    let mut search_state = exec.init_state(cfg.seed)?;
     search_state.transfer_from(&fp_state, "state/params/");
     search_state.transfer_from(&fp_state, "state/bn/");
     let search_res = run_search(
-        engine,
+        exec,
         &mut search_state,
         &search_train,
         &search_val,
@@ -74,14 +75,14 @@ pub fn run_pipeline(
     )?;
 
     // Stage 2: retrain the selected mixed precision QNN on the full set.
-    let mut retrain_state = engine.init_state(cfg.seed)?;
+    let mut retrain_state = exec.init_state(cfg.seed)?;
     let init_src = retrain_from.unwrap_or(&fp_state);
     retrain_state.transfer_from(init_src, "state/params/");
     retrain_state.transfer_from(init_src, "state/bn/");
     retrain_state.transfer_from(init_src, "state/alphas/");
     let use_teacher = cfg.retrain.distill_mu > 0.0;
     let retrain_res = run_retrain(
-        engine,
+        exec,
         &mut retrain_state,
         &search_res.selection,
         train,
@@ -92,7 +93,7 @@ pub fn run_pipeline(
     )?;
 
     // Stage 3: final evaluation + bookkeeping.
-    let final_eval = eval_quantized(engine, &mut retrain_state, &search_res.selection, test)?;
+    let final_eval = eval_quantized(exec, &mut retrain_state, &search_res.selection, test)?;
     let test_acc = final_eval.accuracy.max(retrain_res.best_test_acc);
     let mflops = search_res.exact_mflops;
     let saving = flops.saving(mflops);
@@ -112,7 +113,7 @@ pub fn run_pipeline(
         retrain_state.save(&logger.dir.join("retrained.ckpt"))?;
         selection.save(&logger.dir.join("selection.json"))?;
         logger.summary(&Json::Obj(vec![
-            ("model".into(), Json::Str(engine.manifest.model.clone())),
+            ("model".into(), Json::Str(exec.manifest.model.clone())),
             ("fp_test_acc".into(), Json::Num(fp_res.best_test_acc)),
             ("test_acc".into(), Json::Num(test_acc)),
             ("mflops".into(), Json::Num(mflops)),

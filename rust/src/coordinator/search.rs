@@ -5,13 +5,25 @@
 //! for the weight phase, constant-Adam LR for the strengths, the FLOPs
 //! target, the linear Gumbel-temperature anneal (stochastic mode), and
 //! the "keep the strengths with the best validation accuracy" rule.
-//! Each iteration executes ONE compiled `search_det`/`search_sto` graph,
-//! which internally performs both phases of Eq. 9-10.
+//! Each iteration executes ONE `search_det`/`search_sto` step through
+//! the [`StepExecutor`], which fans it out over data-parallel replicas
+//! when sharding is enabled (DESIGN.md §14) — bit-identical results at
+//! any shard count, so the driver logic is shard-oblivious.
+//!
+//! Crash recovery: with `ckpt_every > 0` (and a run directory) the
+//! driver periodically writes `search_resume.ckpt` + a meta sidecar;
+//! `resume_from` reloads them and fast-forwards the deterministic
+//! batch/noise streams, so a resumed run replays the uninterrupted
+//! trajectory bit-for-bit (regression-tested).
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
 
-use crate::data::{Batcher, Dataset};
-use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+use anyhow::{ensure, Context, Result};
+
+use crate::data::{Dataset, EpochBatcher};
+use crate::exec::StepExecutor;
+use crate::runtime::{metric_f32, StateVec, Tensor};
+use crate::util::json::{parse as json_parse, Json};
 use crate::util::Rng;
 
 use super::evaluate::eval_quantized;
@@ -36,6 +48,19 @@ pub struct SearchCfg {
     pub eval_every: usize,
     pub log_every: usize,
     pub seed: u64,
+    /// Data-parallel replicas for the step executor (`[search] shards`
+    /// / `--shards`; 0 = sharding off).  Pure wall-clock knob: results
+    /// are bit-identical for any value ≤ the chunk count.
+    pub shards: usize,
+    /// Canonical reduction chunks (`[search] shard_chunks`; 0 = auto →
+    /// `max(shards, 4)`).  The numerics-defining knob — hold it fixed
+    /// across runs that must agree bit-for-bit.
+    pub shard_chunks: usize,
+    /// Write `search_resume.ckpt` into the run directory every N steps
+    /// (0 = off) so a crashed long search loses at most N steps.
+    pub ckpt_every: usize,
+    /// Resume a previous run from its `search_resume.ckpt`.
+    pub resume_from: Option<PathBuf>,
 }
 
 impl SearchCfg {
@@ -53,6 +78,10 @@ impl SearchCfg {
             eval_every: 50,
             log_every: 10,
             seed: 0,
+            shards: 0,
+            shard_chunks: 0,
+            ckpt_every: 0,
+            resume_from: None,
         }
     }
 }
@@ -68,29 +97,111 @@ pub struct SearchResult {
     pub steps: usize,
 }
 
+/// Canonical resume-checkpoint path inside a run directory.
+pub fn resume_ckpt_path(dir: &Path) -> PathBuf {
+    dir.join("search_resume.ckpt")
+}
+
+fn meta_path(ckpt: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.meta.json", ckpt.display()))
+}
+
+fn sel_path(ckpt: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.sel.json", ckpt.display()))
+}
+
+/// f64 → lossless hex round-trip (JSON numbers would truncate the
+/// mantissa and break bit-exact resume).
+fn bits_str(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn bits_of(j: &Json, key: &str) -> Result<f64> {
+    let s = j.req(key)?.as_str()?;
+    Ok(f64::from_bits(
+        u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits in '{key}'"))?,
+    ))
+}
+
+/// Mid-run tracker state that must survive a crash for the resumed
+/// trajectory to replay bit-for-bit.
+struct ResumePoint {
+    step: usize,
+    soft_acc_ema: f64,
+    best_val_acc: f64,
+    last_eflops: f64,
+}
+
+/// FNV-1a over a file's bytes — the meta sidecar fingerprints the state
+/// checkpoint so a torn multi-file commit is *detected* at resume time.
+fn file_fingerprint(path: &Path) -> Result<(u64, u64)> {
+    let bytes = std::fs::read(path)?;
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in &bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok((bytes.len() as u64, h))
+}
+
+/// Checkpoint commit protocol: every file is written to a `.tmp` and
+/// renamed (atomic within one directory), with the meta sidecar renamed
+/// **last** — it is the commit point, and it carries the state file's
+/// length + FNV fingerprint.  A crash at any boundary therefore leaves
+/// either a fully old set, a fully new set, or a mismatched pair that
+/// resume rejects with a clear error — never a silent wrong-trajectory
+/// replay.
+fn write_resume(
+    dir: &Path,
+    state: &StateVec,
+    point: &ResumePoint,
+    best_selection: &Selection,
+) -> Result<()> {
+    let ckpt = resume_ckpt_path(dir);
+    let state_tmp = dir.join("search_resume.ckpt.tmp");
+    state.save(&state_tmp)?;
+    let (state_len, state_fnv) = file_fingerprint(&state_tmp)?;
+    let sel_tmp = dir.join("search_resume.ckpt.sel.json.tmp");
+    best_selection.save(&sel_tmp)?;
+    let meta = Json::Obj(vec![
+        ("step".into(), Json::Num(point.step as f64)),
+        ("ema_bits".into(), bits_str(point.soft_acc_ema)),
+        ("best_bits".into(), bits_str(point.best_val_acc)),
+        ("eflops_bits".into(), bits_str(point.last_eflops)),
+        ("state_len".into(), Json::Num(state_len as f64)),
+        ("state_fnv".into(), Json::Str(format!("{state_fnv:016x}"))),
+    ]);
+    let meta_tmp = dir.join("search_resume.ckpt.meta.json.tmp");
+    std::fs::write(&meta_tmp, meta.to_string())?;
+    std::fs::rename(&state_tmp, &ckpt)?;
+    std::fs::rename(&sel_tmp, sel_path(&ckpt))?;
+    std::fs::rename(&meta_tmp, meta_path(&ckpt))?;
+    Ok(())
+}
+
 /// Run Algorithm 1.  `state` should be FP-pretrained (§B.2); it is
 /// mutated in place and holds the final meta weights + strengths.
 pub fn run_search(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     train: &Dataset,
     valid: &Dataset,
     cfg: &SearchCfg,
     logger: &mut RunLogger,
 ) -> Result<SearchResult> {
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let graph = if cfg.stochastic { "search_sto" } else { "search_det" };
-    let l = engine.manifest.num_qconvs();
-    let n = engine.manifest.bits.len();
+    let l = exec.manifest.num_qconvs();
+    let n = exec.manifest.bits.len();
 
-    let mut train_batches = Batcher::new(train, engine.manifest.batch_size, cfg.seed ^ 0x7214);
-    let mut val_batches = Batcher::new(valid, engine.manifest.batch_size, cfg.seed ^ 0x88AA);
+    let mut train_batches = EpochBatcher::new(train, exec.manifest.batch_size, cfg.seed ^ 0x7214);
+    let mut val_batches = EpochBatcher::new(valid, exec.manifest.batch_size, cfg.seed ^ 0x88AA);
     let lr_sched = CosineLr::new(cfg.lr_w, cfg.steps);
     let tau_sched = LinearSchedule::new(cfg.tau0, cfg.tau1, cfg.steps);
     let mut rng = Rng::new(cfg.seed ^ 0x6B31);
 
     let mut best_val_acc = f64::NEG_INFINITY;
-    let mut best_selection = Selection::from_state(state, &engine.manifest)?;
+    let mut best_selection = Selection::from_state(state, &exec.manifest)?;
     let mut last_eflops = 0.0f64;
     // Running mean of the supernet's per-step validation accuracy — the
     // §B.3 "highest validation accuracy" checkpoint signal.  (The hard
@@ -99,7 +210,52 @@ pub fn run_search(
     let mut soft_acc_ema = 0.0f64;
     let ema_beta = 0.9f64;
 
-    for step in 0..cfg.steps {
+    // ---- resume: reload state + trackers, then fast-forward every
+    // deterministic stream (batch permutations, Gumbel noise) to the
+    // checkpointed step so the continuation replays the uninterrupted
+    // trajectory bit-for-bit.
+    let mut start_step = 0usize;
+    if let Some(ckpt) = &cfg.resume_from {
+        let meta_text = std::fs::read_to_string(meta_path(ckpt))
+            .with_context(|| format!("resume checkpoint {} has no meta sidecar", ckpt.display()))?;
+        let meta = json_parse(&meta_text)?;
+        // Torn-commit guard: the meta fingerprints the state file it was
+        // written with; a crash between the checkpoint renames leaves a
+        // mismatched pair that must error, not silently diverge.
+        let (state_len, state_fnv) = file_fingerprint(ckpt)?;
+        let want_len = meta.req("state_len")?.as_u64()?;
+        let want_fnv = u64::from_str_radix(meta.req("state_fnv")?.as_str()?, 16)
+            .context("bad state fingerprint in resume meta")?;
+        ensure!(
+            state_len == want_len && state_fnv == want_fnv,
+            "resume checkpoint {} does not match its meta sidecar (torn checkpoint from a \
+             crash mid-write?) — cannot resume safely",
+            ckpt.display()
+        );
+        *state = StateVec::load(ckpt, &exec.manifest.state_spec)?;
+        start_step = meta.req("step")?.as_usize()?;
+        ensure!(
+            start_step <= cfg.steps,
+            "checkpoint is at step {start_step} but the run has only {} steps",
+            cfg.steps
+        );
+        soft_acc_ema = bits_of(&meta, "ema_bits")?;
+        best_val_acc = bits_of(&meta, "best_bits")?;
+        last_eflops = bits_of(&meta, "eflops_bits")?;
+        best_selection = Selection::load(&sel_path(ckpt))?;
+        for _ in 0..start_step {
+            train_batches.next_indices();
+            val_batches.next_indices();
+            if cfg.stochastic {
+                for _ in 0..2 * l * n {
+                    rng.gumbel();
+                }
+            }
+        }
+        logger.event("search_resume", &[("step", start_step as f64)]);
+    }
+
+    for step in start_step..cfg.steps {
         let (xt, yt) = train_batches.next_batch();
         let (xv, yv) = val_batches.next_batch();
         let mut io = vec![
@@ -121,7 +277,7 @@ pub fn run_search(
             io.push(("g_s".to_string(), gumbel(&mut rng)));
             io.push(("tau".to_string(), Tensor::scalar_f32(tau_sched.at(step))));
         }
-        let m = engine.run(graph, state, &io)?;
+        let m = exec.step(graph, state, &io)?;
         last_eflops = metric_f32(&m, "eflops")? as f64;
         let step_val_acc = metric_f32(&m, "val_acc")? as f64;
         soft_acc_ema = ema_beta * soft_acc_ema + (1.0 - ema_beta) * step_val_acc;
@@ -144,12 +300,12 @@ pub fn run_search(
         // Periodic full-validation eval with the *discretized* selection:
         // the checkpointing rule of §B.3.
         if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
-            let sel = Selection::from_state(state, &engine.manifest)?;
+            let sel = Selection::from_state(state, &exec.manifest)?;
             let exact = flops.exact_mflops(&sel.w_bits, &sel.x_bits);
             let res = {
                 // evaluate on a snapshot so BN stats are not disturbed
                 let mut snap = state.clone();
-                eval_quantized(engine, &mut snap, &sel, valid)?
+                eval_quantized(exec, &mut snap, &sel, valid)?
             };
             logger.event(
                 "search_eval",
@@ -170,11 +326,28 @@ pub fn run_search(
                 best_selection = sel;
             }
         }
+
+        // Periodic crash checkpoint (skipped on the last step — the
+        // caller persists the final state itself).
+        if cfg.ckpt_every > 0
+            && !logger.dir.as_os_str().is_empty()
+            && (step + 1) % cfg.ckpt_every == 0
+            && step + 1 < cfg.steps
+        {
+            let point = ResumePoint {
+                step: step + 1,
+                soft_acc_ema,
+                best_val_acc,
+                last_eflops,
+            };
+            write_resume(&logger.dir, state, &point, &best_selection)?;
+            logger.event("search_ckpt", &[("step", (step + 1) as f64)]);
+        }
     }
 
     // Fall back to the final selection if no eval was feasible.
     if best_val_acc == f64::NEG_INFINITY {
-        best_selection = Selection::from_state(state, &engine.manifest)?;
+        best_selection = Selection::from_state(state, &exec.manifest)?;
         best_val_acc = 0.0;
     }
     let exact_mflops = flops.exact_mflops(&best_selection.w_bits, &best_selection.x_bits);

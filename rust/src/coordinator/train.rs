@@ -5,8 +5,9 @@
 
 use anyhow::Result;
 
-use crate::data::{Batcher, Dataset};
-use crate::runtime::{metric_f32, Engine, StateVec, Tensor};
+use crate::data::{Dataset, EpochBatcher};
+use crate::exec::StepExecutor;
+use crate::runtime::{metric_f32, StateVec, Tensor};
 
 use super::evaluate::{eval_fp, eval_quantized, teacher_logits, EvalResult};
 use super::metrics::RunLogger;
@@ -25,6 +26,11 @@ pub struct TrainCfg {
     pub eval_every: usize,
     pub log_every: usize,
     pub seed: u64,
+    /// Write a crash checkpoint (`fp_resume.ckpt` / `retrain_resume.ckpt`)
+    /// into the run directory every N steps (0 = off); a crashed long run
+    /// restarts from it via `ebs search --init-ckpt` or the pipeline's
+    /// `transfer_from`.
+    pub ckpt_every: usize,
 }
 
 impl TrainCfg {
@@ -37,8 +43,21 @@ impl TrainCfg {
             eval_every: 100,
             log_every: 20,
             seed: 0,
+            ckpt_every: 0,
         }
     }
+}
+
+/// Atomic crash checkpoint: write-then-rename so an interrupted save
+/// never clobbers the previous good checkpoint.
+fn write_train_ckpt(logger: &RunLogger, name: &str, state: &StateVec) -> Result<()> {
+    if logger.dir.as_os_str().is_empty() {
+        return Ok(());
+    }
+    let tmp = logger.dir.join(format!("{name}.tmp"));
+    state.save(&tmp)?;
+    std::fs::rename(&tmp, logger.dir.join(name))?;
+    Ok(())
 }
 
 /// Outcome of a training run: best test accuracy seen at eval points.
@@ -50,14 +69,14 @@ pub struct TrainResult {
 
 /// Full-precision pre-training (initializes search; FP table rows).
 pub fn run_fp_train(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     train: &Dataset,
     test: &Dataset,
     cfg: &TrainCfg,
     logger: &mut RunLogger,
 ) -> Result<TrainResult> {
-    let mut batches = Batcher::new(train, engine.manifest.batch_size, cfg.seed ^ 0xF9);
+    let mut batches = EpochBatcher::new(train, exec.manifest.batch_size, cfg.seed ^ 0xF9);
     let lr = CosineLr::new(cfg.lr, cfg.steps);
     let mut best = f64::NEG_INFINITY;
     let mut last_loss = f64::NAN;
@@ -69,7 +88,7 @@ pub fn run_fp_train(
             ("lr".to_string(), Tensor::scalar_f32(lr.at(step))),
             ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
         ];
-        let m = engine.run("fp_train", state, &io)?;
+        let m = exec.step("fp_train", state, &io)?;
         last_loss = metric_f32(&m, "loss")? as f64;
         if step % cfg.log_every == 0 {
             logger.event(
@@ -82,12 +101,15 @@ pub fn run_fp_train(
             );
         }
         if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
-            let res = eval_fp(engine, state, test)?;
+            let res = eval_fp(exec, state, test)?;
             logger.event(
                 "fp_eval",
                 &[("step", step as f64), ("test_acc", res.accuracy), ("test_loss", res.loss)],
             );
             best = best.max(res.accuracy);
+        }
+        if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 && step + 1 < cfg.steps {
+            write_train_ckpt(logger, "fp_resume.ckpt", state)?;
         }
     }
     Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })
@@ -98,7 +120,7 @@ pub fn run_fp_train(
 /// `teacher`: optional FP state used as a label-refinery teacher — its
 /// logits are fed with mix μ (`cfg.distill_mu`).
 pub fn run_retrain(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     selection: &Selection,
     train: &Dataset,
@@ -107,10 +129,10 @@ pub fn run_retrain(
     mut teacher: Option<&mut StateVec>,
     logger: &mut RunLogger,
 ) -> Result<TrainResult> {
-    let (sel_w, sel_x) = selection.to_onehot(&engine.manifest)?;
-    let b = engine.manifest.batch_size;
-    let classes = engine.manifest.num_classes;
-    let mut batches = Batcher::new(train, b, cfg.seed ^ 0x3C);
+    let (sel_w, sel_x) = selection.to_onehot(&exec.manifest)?;
+    let b = exec.manifest.batch_size;
+    let classes = exec.manifest.num_classes;
+    let mut batches = EpochBatcher::new(train, b, cfg.seed ^ 0x3C);
     let lr = CosineLr::new(cfg.lr, cfg.steps);
     let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
     let mut best = f64::NEG_INFINITY;
@@ -120,7 +142,7 @@ pub fn run_retrain(
         let (x, y) = batches.next_batch();
         let (t_logits, mu) = match teacher.as_deref_mut() {
             Some(fp_state) if cfg.distill_mu > 0.0 => {
-                (teacher_logits(engine, fp_state, &x)?, cfg.distill_mu)
+                (teacher_logits(exec, fp_state, &x)?, cfg.distill_mu)
             }
             _ => (zero_teacher.clone(), 0.0),
         };
@@ -134,7 +156,7 @@ pub fn run_retrain(
             ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
             ("mu".to_string(), Tensor::scalar_f32(mu)),
         ];
-        let m = engine.run("train", state, &io)?;
+        let m = exec.step("train", state, &io)?;
         last_loss = metric_f32(&m, "loss")? as f64;
         if step % cfg.log_every == 0 {
             logger.event(
@@ -148,12 +170,15 @@ pub fn run_retrain(
             );
         }
         if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
-            let res = eval_quantized(engine, state, selection, test)?;
+            let res = eval_quantized(exec, state, selection, test)?;
             logger.event(
                 "retrain_eval",
                 &[("step", step as f64), ("test_acc", res.accuracy), ("test_loss", res.loss)],
             );
             best = best.max(res.accuracy);
+        }
+        if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 && step + 1 < cfg.steps {
+            write_train_ckpt(logger, "retrain_resume.ckpt", state)?;
         }
     }
     Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })
@@ -162,10 +187,10 @@ pub fn run_retrain(
 /// Re-export for driver callers.
 pub use super::evaluate::EvalResult as Eval;
 pub fn final_eval(
-    engine: &mut Engine,
+    exec: &mut StepExecutor,
     state: &mut StateVec,
     selection: &Selection,
     test: &Dataset,
 ) -> Result<EvalResult> {
-    eval_quantized(engine, state, selection, test)
+    eval_quantized(exec, state, selection, test)
 }

@@ -1,4 +1,8 @@
-//! Epoch-shuffled batch iterator over a [`Dataset`].
+//! Epoch-shuffled batch iterator over a [`Dataset`] — the *epoch*
+//! batcher (`EpochBatcher`), as opposed to the serve layer's request
+//! micro-batcher (`serve::batcher`): this one owns training-data order,
+//! that one coalesces inference requests.  The rename keeps both
+//! importable side by side from the sharded executor without aliases.
 //!
 //! Fixed batch size (artifacts are compiled for one batch shape).  The
 //! iterator is a *stream of epoch permutations*: draws `[k·n, (k+1)·n)`
@@ -21,7 +25,15 @@ use crate::util::Rng;
 use super::synth::Dataset;
 
 /// Shuffled mini-batch source with a deterministic RNG.
-pub struct Batcher<'a> {
+///
+/// **Sharding contract (DESIGN.md §14).**  The sharded step executor
+/// consumes ONE global batcher and splits each drawn batch into
+/// contiguous example ranges via `ShardPlan` — per-shard batchers (and
+/// thus per-shard seed derivation) never exist, so the epoch guarantees
+/// below (every sample exactly once per `len` draws, no duplicate
+/// within a batch) hold for the union of the shards by construction,
+/// and the draw stream is identical at any shard count.
+pub struct EpochBatcher<'a> {
     ds: &'a Dataset,
     batch: usize,
     order: Vec<usize>,
@@ -30,13 +42,13 @@ pub struct Batcher<'a> {
     pub epoch: usize,
 }
 
-impl<'a> Batcher<'a> {
-    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Batcher<'a> {
+impl<'a> EpochBatcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> EpochBatcher<'a> {
         assert!(batch <= ds.len(), "batch {} > dataset {}", batch, ds.len());
         let mut rng = Rng::new(seed ^ 0xBA7C4);
         let mut order: Vec<usize> = (0..ds.len()).collect();
         rng.shuffle(&mut order);
-        Batcher { ds, batch, order, pos: 0, rng, epoch: 0 }
+        EpochBatcher { ds, batch, order, pos: 0, rng, epoch: 0 }
     }
 
     /// Full batches delivered per `ds.len()` draws, on average: the
@@ -96,7 +108,7 @@ mod tests {
     #[test]
     fn batches_have_fixed_shape_and_cover_dataset() {
         let (ds, _) = generate(&SynthSpec::tiny(2));
-        let mut b = Batcher::new(&ds, 16, 0);
+        let mut b = EpochBatcher::new(&ds, 16, 0);
         let mut seen = vec![0usize; ds.classes];
         for _ in 0..b.batches_per_epoch() {
             let (x, y) = b.next_batch();
@@ -111,7 +123,7 @@ mod tests {
     #[test]
     fn epoch_advances_and_reshuffles() {
         let (ds, _) = generate(&SynthSpec::tiny(2));
-        let mut b = Batcher::new(&ds, ds.len(), 0);
+        let mut b = EpochBatcher::new(&ds, ds.len(), 0);
         let (x1, _) = b.next_batch();
         let (x2, _) = b.next_batch();
         assert_eq!(b.epoch, 1);
@@ -122,8 +134,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (ds, _) = generate(&SynthSpec::tiny(2));
-        let (a, _) = Batcher::new(&ds, 8, 3).next_batch();
-        let (b, _) = Batcher::new(&ds, 8, 3).next_batch();
+        let (a, _) = EpochBatcher::new(&ds, 8, 3).next_batch();
+        let (b, _) = EpochBatcher::new(&ds, 8, 3).next_batch();
         assert_eq!(a, b);
     }
 
@@ -134,7 +146,7 @@ mod tests {
         let (ds, _) = generate(&SynthSpec::tiny(4));
         let n = ds.len();
         for batch in [48usize, 100, 7] {
-            let mut b = Batcher::new(&ds, batch, 9);
+            let mut b = EpochBatcher::new(&ds, batch, 9);
             let mut draws = Vec::new();
             while draws.len() < 3 * n {
                 draws.extend(b.next_indices());
@@ -153,10 +165,51 @@ mod tests {
     }
 
     #[test]
+    fn sharded_epoch_draws_every_example_exactly_once_with_disjoint_shards() {
+        // The executor's batch-sharding contract: splitting each drawn
+        // batch by a fixed ShardPlan yields (a) pairwise-disjoint shard
+        // index sets inside every batch and (b) exactly-once coverage of
+        // the dataset per epoch by the union of the shards — at every
+        // shard count, because the draw stream is shard-independent.
+        use crate::exec::{ShardPlan, ShardSpec};
+        let (ds, _) = generate(&SynthSpec::tiny(8));
+        let n = ds.len();
+        for batch in [16usize, 48, 100] {
+            for shards in [1usize, 2, 4] {
+                let plan = ShardPlan::new(batch, ShardSpec::new(shards, 4));
+                let mut b = EpochBatcher::new(&ds, batch, 77);
+                let mut counts = vec![0usize; n];
+                let mut drawn = 0usize;
+                while drawn < n {
+                    let idx = b.next_indices();
+                    drawn += idx.len();
+                    let mut seen_in_batch = std::collections::HashSet::new();
+                    for s in 0..plan.shards {
+                        for &i in &idx[plan.shard_examples(s)] {
+                            assert!(
+                                seen_in_batch.insert(i),
+                                "shards overlap within a batch (batch {batch}, shards {shards})"
+                            );
+                            counts[i] += 1;
+                        }
+                    }
+                    assert_eq!(seen_in_batch.len(), batch, "shards must cover the whole batch");
+                }
+                if n % batch == 0 {
+                    assert!(
+                        counts.iter().all(|&c| c == 1),
+                        "epoch coverage broken at batch {batch}, shards {shards}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn no_duplicates_within_a_batch() {
         let (ds, _) = generate(&SynthSpec::tiny(6));
         // 512 % 48 != 0 → plenty of boundary-spanning batches.
-        let mut b = Batcher::new(&ds, 48, 1);
+        let mut b = EpochBatcher::new(&ds, 48, 1);
         for _ in 0..40 {
             let idx = b.next_indices();
             let mut sorted = idx.clone();

@@ -10,5 +10,5 @@
 pub mod batcher;
 pub mod synth;
 
-pub use batcher::Batcher;
+pub use batcher::EpochBatcher;
 pub use synth::{Dataset, SynthSpec};

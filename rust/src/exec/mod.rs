@@ -1,0 +1,328 @@
+//! Data-parallel sharded step execution (DESIGN.md §14).
+//!
+//! A search/train step fans out over N replicas, each running the full
+//! forward+backward on a contiguous shard of the global batch with its
+//! own tape arena and gradient buffers; gradients, losses, and sync-BN
+//! batch moments are then combined by a single-threaded canonical
+//! reduction.  The module owns the three pieces that make the fan-out
+//! *shard-invariant*:
+//!
+//! * [`ShardPlan`] — the shard planner.  The global batch is cut into a
+//!   fixed number of contiguous **chunks** whose boundaries depend only
+//!   on `(batch, chunks)`; shards are assigned whole chunks.  Chunk
+//!   geometry never depends on the shard count, which is what lets the
+//!   reductions below be replayed bit-for-bit at any `shards ≤ chunks`.
+//! * [`MomentHub`] (in [`sync`]) — the cross-replica rendezvous for
+//!   sync-BN: replicas submit per-chunk f64 moment partials, the last
+//!   arriver combines them left-to-right in canonical chunk order, and
+//!   every replica normalizes with the *global* batch statistics.
+//! * [`reduce`] — the deterministic all-reduce over gradient leaves
+//!   (`state/...`-keyed dense vectors, the same shape [`StateVec`]
+//!   holds): per-chunk partials summed in canonical chunk order.
+//!
+//! **The shard-invariance rule** (extending DESIGN.md §12's "partition
+//! outputs, never reductions" across replicas): every cross-example
+//! reduction is computed as per-chunk partials by code whose behavior
+//! depends only on the chunk's own examples, and partials combine in
+//! global chunk order on a single thread.  f32/f64 addition is
+//! non-associative, so this fixed association — not thread or shard
+//! count — defines the numerics: a same-seed run is bit-identical at
+//! shards {1, 2, 4} as long as `chunks` is held fixed.
+//!
+//! [`StepExecutor`] is the coordinator-facing front-end: it owns the
+//! [`Engine`], carries the [`ShardSpec`], and routes step graphs through
+//! the engine's sharded path when sharding is enabled.
+//!
+//! [`StateVec`]: crate::runtime::StateVec
+
+pub mod reduce;
+pub mod sync;
+
+pub use reduce::{accumulate_grads, zero_grads};
+pub use sync::MomentHub;
+
+use std::ops::{Deref, DerefMut, Range};
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Metrics, StateVec, Tensor};
+
+/// Default canonical chunk count — equal to the largest shard count the
+/// invariance tests pin, so `--shards 1|2|4` all reduce over the same
+/// four chunks and agree bit-for-bit.
+pub const DEFAULT_CHUNKS: usize = 4;
+
+/// Sharding request: how many replicas to fan a step over, and how many
+/// canonical reduction chunks the batch is cut into.  `chunks` is the
+/// numerics-defining knob — runs that should be comparable bit-for-bit
+/// must share it; `shards` is then a pure wall-clock knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shards: usize,
+    pub chunks: usize,
+}
+
+impl Default for ShardSpec {
+    fn default() -> ShardSpec {
+        ShardSpec::serial()
+    }
+}
+
+impl ShardSpec {
+    /// The legacy single-replica path: no chunking, numerics identical
+    /// to the pre-sharding step implementation.
+    pub fn serial() -> ShardSpec {
+        ShardSpec { shards: 1, chunks: 1 }
+    }
+
+    /// Normalize a `(--shards, [search] shard_chunks)` request:
+    /// `shards == 0` means sharding is off entirely (serial legacy
+    /// path); otherwise `chunks == 0` resolves to
+    /// `max(shards, DEFAULT_CHUNKS)` so that every shard count up to
+    /// [`DEFAULT_CHUNKS`] shares one canonical chunking, and an explicit
+    /// `chunks` is floored at `shards` (a shard must own ≥ 1 chunk).
+    pub fn new(shards: usize, chunks: usize) -> ShardSpec {
+        if shards == 0 {
+            return ShardSpec::serial();
+        }
+        let chunks = if chunks == 0 { shards.max(DEFAULT_CHUNKS) } else { chunks.max(shards) };
+        ShardSpec { shards, chunks }
+    }
+
+    /// Whether the sharded (chunked-reduction) step path is in effect.
+    pub fn active(&self) -> bool {
+        self.shards > 1 || self.chunks > 1
+    }
+}
+
+/// Resolved shard layout for one concrete global batch.
+///
+/// Invariant: chunk boundaries are a function of `(batch, spec.chunks)`
+/// only.  Shards own contiguous runs of whole chunks, so changing the
+/// shard count moves *work*, never reduction boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Global batch size (examples).
+    pub batch: usize,
+    /// Examples per chunk (last chunk may be short).
+    pub chunk_size: usize,
+    /// Number of non-empty chunks.
+    pub chunks: usize,
+    /// Number of non-empty shards (≤ requested).
+    pub shards: usize,
+    /// Chunks per shard (last shard may own fewer).
+    pub chunks_per_shard: usize,
+}
+
+impl ShardPlan {
+    pub fn new(batch: usize, spec: ShardSpec) -> ShardPlan {
+        assert!(batch > 0, "cannot plan an empty batch");
+        let chunks = spec.chunks.clamp(1, batch);
+        let chunk_size = batch.div_ceil(chunks);
+        let chunks = batch.div_ceil(chunk_size);
+        let shards = spec.shards.clamp(1, chunks);
+        let chunks_per_shard = chunks.div_ceil(shards);
+        let shards = chunks.div_ceil(chunks_per_shard);
+        ShardPlan { batch, chunk_size, chunks, shards, chunks_per_shard }
+    }
+
+    /// Example range of global chunk `c`.
+    pub fn chunk_examples(&self, c: usize) -> Range<usize> {
+        let start = c * self.chunk_size;
+        start..((c + 1) * self.chunk_size).min(self.batch)
+    }
+
+    /// Global chunk ids owned by shard `s`.
+    pub fn shard_chunks(&self, s: usize) -> Range<usize> {
+        let start = s * self.chunks_per_shard;
+        start..((s + 1) * self.chunks_per_shard).min(self.chunks)
+    }
+
+    /// Example range of shard `s` (the union of its chunks; contiguous).
+    pub fn shard_examples(&self, s: usize) -> Range<usize> {
+        let c = self.shard_chunks(s);
+        self.chunk_examples(c.start).start..self.chunk_examples(c.end - 1).end
+    }
+}
+
+/// Run `f(shard_index, slot)` once per shard on the scoped worker pool
+/// (the same `kernels::par_row_chunks` partitioner every parallel
+/// kernel rides — one worker per slot, disjoint `&mut` ownership).  A
+/// single slot runs inline with no spawn.  Errors poison `hub` (so no
+/// replica blocks forever at a sync point waiting for the failed one)
+/// and the first error is returned after the join; a replica panic also
+/// poisons the hub, then propagates from the scope join.
+pub fn run_replicas<T, F>(slots: &mut [T], hub: Option<&MomentHub>, f: F) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut T) -> Result<()> + Sync,
+{
+    if slots.len() == 1 {
+        return f(0, &mut slots[0]);
+    }
+    let first_err: std::sync::Mutex<Option<anyhow::Error>> = std::sync::Mutex::new(None);
+    let n = slots.len();
+    crate::kernels::par_row_chunks(slots, n, 1, n, |r0, chunk| {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(r0, &mut chunk[0])
+        }));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if let Some(h) = hub {
+                    h.poison();
+                }
+                let mut slot = first_err.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+            Err(payload) => {
+                if let Some(h) = hub {
+                    h.poison();
+                }
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+    match first_err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Coordinator-facing step executor: the [`Engine`] plus the sharding
+/// policy.  `Deref`s to the engine so manifest access, state
+/// initialization, and non-step graph execution read exactly as before;
+/// step-shaped graphs go through [`StepExecutor::step`], which routes to
+/// the backend's sharded path when sharding is enabled.
+pub struct StepExecutor {
+    pub engine: Engine,
+    spec: ShardSpec,
+}
+
+impl Deref for StepExecutor {
+    type Target = Engine;
+    fn deref(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl DerefMut for StepExecutor {
+    fn deref_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}
+
+impl StepExecutor {
+    pub fn new(mut engine: Engine, spec: ShardSpec) -> StepExecutor {
+        engine.set_shards(spec);
+        StepExecutor { engine, spec }
+    }
+
+    /// The legacy single-replica executor (bit-identical to the
+    /// pre-sharding coordinator).
+    pub fn serial(engine: Engine) -> StepExecutor {
+        StepExecutor::new(engine, ShardSpec::serial())
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Execute one step graph under the executor's sharding policy.
+    pub fn step(
+        &mut self,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        if self.spec.active() {
+            self.engine.run_sharded(graph, state, io)
+        } else {
+            self.engine.run(graph, state, io)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_normalization() {
+        assert_eq!(ShardSpec::new(0, 0), ShardSpec::serial());
+        assert!(!ShardSpec::serial().active());
+        let s1 = ShardSpec::new(1, 0);
+        assert_eq!(s1.chunks, DEFAULT_CHUNKS);
+        assert!(s1.active());
+        assert_eq!(ShardSpec::new(2, 0).chunks, DEFAULT_CHUNKS);
+        assert_eq!(ShardSpec::new(8, 0).chunks, 8);
+        assert_eq!(ShardSpec::new(4, 2).chunks, 4, "chunks floored at shards");
+    }
+
+    #[test]
+    fn plan_covers_batch_with_disjoint_contiguous_shards() {
+        for (batch, shards, chunks) in
+            [(16, 1, 4), (16, 2, 4), (16, 4, 4), (17, 3, 5), (5, 8, 8), (32, 3, 4), (1, 4, 4)]
+        {
+            let plan = ShardPlan::new(batch, ShardSpec::new(shards, chunks));
+            // chunks tile the batch exactly, in order
+            let mut next = 0usize;
+            for c in 0..plan.chunks {
+                let r = plan.chunk_examples(c);
+                assert_eq!(r.start, next, "batch {batch} shards {shards}");
+                assert!(!r.is_empty());
+                next = r.end;
+            }
+            assert_eq!(next, batch);
+            // shards tile the chunks exactly, in order
+            let mut nextc = 0usize;
+            for s in 0..plan.shards {
+                let r = plan.shard_chunks(s);
+                assert_eq!(r.start, nextc);
+                assert!(!r.is_empty());
+                nextc = r.end;
+                let ex = plan.shard_examples(s);
+                assert_eq!(ex.start, plan.chunk_examples(r.start).start);
+                assert_eq!(ex.end, plan.chunk_examples(r.end - 1).end);
+            }
+            assert_eq!(nextc, plan.chunks);
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_do_not_depend_on_shard_count() {
+        // The invariance precondition: at fixed `chunks`, every shard
+        // count yields the identical chunk decomposition.
+        for batch in [8usize, 16, 17, 64, 100] {
+            let reference = ShardPlan::new(batch, ShardSpec::new(1, 4));
+            for shards in [2usize, 3, 4, 7] {
+                let plan = ShardPlan::new(batch, ShardSpec::new(shards, 4));
+                assert_eq!(plan.chunks, reference.chunks);
+                for c in 0..plan.chunks {
+                    assert_eq!(plan.chunk_examples(c), reference.chunk_examples(c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replica_pool_runs_every_slot_and_propagates_errors() {
+        let mut slots = vec![0usize; 4];
+        run_replicas(&mut slots, None, |r, s| {
+            *s = r + 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(slots, vec![1, 2, 3, 4]);
+
+        let err = run_replicas(&mut slots, None, |r, _| {
+            if r == 2 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        assert!(err.is_err());
+    }
+}

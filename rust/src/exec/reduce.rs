@@ -1,0 +1,81 @@
+//! Deterministic all-reduce over gradient leaves (DESIGN.md §14).
+//!
+//! The sharded backward produces one [`Grads`] per canonical chunk
+//! (dense vectors keyed by the same `state/...` paths a
+//! [`crate::runtime::StateVec`] holds, plus the per-layer branch
+//! coefficient rows).  The combine is a plain left-to-right sum over
+//! chunk partials in global chunk order, executed on one thread: the
+//! association is fixed by the chunking alone, so the result is
+//! bit-identical at any shard count.  HashMap iteration order is
+//! irrelevant here — distinct leaves have independent accumulators, and
+//! within a leaf the parts arrive in chunk order.
+//!
+//! Steady state performs no allocation: the accumulator's leaves are
+//! grown on the first step and zeroed-then-summed afterwards.
+
+use crate::native::graph::Grads;
+
+/// Zero `total`'s persistent leaves and size its coefficient rows —
+/// the accumulator identity for [`accumulate_grads`].  Delegates to
+/// `Grads::begin_step` so the reset invariant is defined once.
+pub fn zero_grads(total: &mut Grads, layers: usize, n_bits: usize) {
+    total.begin_step(layers, n_bits);
+}
+
+/// `total += part`, element-wise over every leaf and coefficient row.
+/// Call once per chunk in global chunk order.
+pub fn accumulate_grads(total: &mut Grads, part: &Grads) {
+    for (path, src) in &part.by_path {
+        match total.by_path.get_mut(path) {
+            Some(dst) => {
+                debug_assert_eq!(dst.len(), src.len(), "grad leaf '{path}' size drift");
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d += v;
+                }
+            }
+            None => {
+                total.by_path.insert(path.clone(), src.clone());
+            }
+        }
+    }
+    for (dst, src) in total.dcw.iter_mut().zip(&part.dcw) {
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d += v;
+        }
+    }
+    for (dst, src) in total.dcx.iter_mut().zip(&part.dcx) {
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(scale: f32) -> Grads {
+        Grads {
+            by_path: [("state/params/w".to_string(), vec![scale, 2.0 * scale])]
+                .into_iter()
+                .collect(),
+            dcw: vec![vec![scale; 3]],
+            dcx: vec![vec![-scale; 3]],
+        }
+    }
+
+    #[test]
+    fn combine_is_the_chunk_ordered_sum() {
+        let mut total = Grads::default();
+        zero_grads(&mut total, 1, 3);
+        for p in [part(1.0), part(0.5), part(0.25)] {
+            accumulate_grads(&mut total, &p);
+        }
+        assert_eq!(total.by_path["state/params/w"], vec![1.75, 3.5]);
+        assert_eq!(total.dcw[0], vec![1.75; 3]);
+        assert_eq!(total.dcx[0], vec![-1.75; 3]);
+        // reuse: zeroing brings the accumulator back to identity
+        zero_grads(&mut total, 1, 3);
+        assert_eq!(total.by_path["state/params/w"], vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Cross-replica moment rendezvous for sync-BN (DESIGN.md §14).
+//!
+//! Every replica reaches each BN reduction point in the same order (the
+//! network topology is fixed), so sync points need no tags: a call to
+//! [`MomentHub::reduce`] is matched with the same call on every other
+//! replica purely by sequence.  Each replica submits per-chunk f64
+//! partial vectors for the chunks it owns; the *last* arriver combines
+//! all chunk slots left-to-right in canonical chunk order — the fixed
+//! association the shard-invariance rule requires — and every replica
+//! leaves with a copy of the combined vector.
+//!
+//! Error discipline: a replica that fails mid-step calls
+//! [`MomentHub::poison`] (the pool wrapper does this), which wakes every
+//! waiter with an error instead of leaving them blocked at the barrier.
+
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{ensure, Result};
+
+/// Rendezvous + canonical combine for per-chunk f64 partials.
+pub struct MomentHub {
+    shards: usize,
+    chunks: usize,
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+struct HubState {
+    /// Completed rendezvous count (generation counter for the wait).
+    round: u64,
+    /// Replicas that have submitted in the current round.
+    arrived: usize,
+    /// Per-chunk partial vectors, indexed by global chunk id.
+    slots: Vec<Vec<f64>>,
+    /// Chunk-ordered sum of all slots (valid for the previous round).
+    combined: Vec<f64>,
+    poisoned: bool,
+}
+
+impl MomentHub {
+    pub fn new(shards: usize, chunks: usize) -> MomentHub {
+        assert!(shards >= 1 && chunks >= shards);
+        MomentHub {
+            shards,
+            chunks,
+            state: Mutex::new(HubState {
+                round: 0,
+                arrived: 0,
+                slots: vec![Vec::new(); chunks],
+                combined: Vec::new(),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Submit this replica's per-chunk partials and block until every
+    /// replica has done the same.  `parts` holds `k` chunk vectors of
+    /// `m` elements each, chunk-major (`parts[i·m..(i+1)·m]` is global
+    /// chunk `chunk0 + i`); `out` receives the combined vector.
+    pub fn reduce(&self, chunk0: usize, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()> {
+        ensure!(m > 0 && parts.len() % m == 0, "malformed moment submission");
+        let k = parts.len() / m;
+        ensure!(chunk0 + k <= self.chunks, "chunk submission out of range");
+        let mut st = self.state.lock().unwrap();
+        ensure!(!st.poisoned, "sharded step aborted by a failed replica");
+        let round = st.round;
+        for (i, part) in parts.chunks_exact(m).enumerate() {
+            let slot = &mut st.slots[chunk0 + i];
+            slot.clear();
+            slot.extend_from_slice(part);
+        }
+        st.arrived += 1;
+        if st.arrived == self.shards {
+            let HubState { slots, combined, .. } = &mut *st;
+            combined.clear();
+            combined.resize(m, 0.0);
+            for slot in slots.iter() {
+                debug_assert_eq!(slot.len(), m, "sync point disagreement across replicas");
+                for (o, &v) in combined.iter_mut().zip(slot) {
+                    *o += v;
+                }
+            }
+            st.arrived = 0;
+            st.round += 1;
+            self.cv.notify_all();
+        } else {
+            while st.round == round && !st.poisoned {
+                st = self.cv.wait(st).unwrap();
+            }
+            ensure!(!st.poisoned, "sharded step aborted by a failed replica");
+        }
+        out.clear();
+        out.extend_from_slice(&st.combined);
+        Ok(())
+    }
+
+    /// Wake every waiter with an error; further `reduce` calls fail
+    /// fast.  Idempotent.
+    pub fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The no-hub (single-replica) combine: the caller owns every chunk, so
+/// the canonical chunk-ordered sum runs locally.  Kept next to the hub
+/// so both paths share one definition of the combine order.
+pub fn combine_local(m: usize, parts: &[f64], out: &mut Vec<f64>) {
+    debug_assert!(m > 0 && parts.len() % m == 0);
+    out.clear();
+    out.resize(m, 0.0);
+    for part in parts.chunks_exact(m) {
+        for (o, &v) in out.iter_mut().zip(part) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_combines_in_chunk_order_regardless_of_arrival() {
+        // 2 shards × 2 chunks each; combined must equal the local
+        // 4-chunk combine no matter which replica arrives last.
+        let parts: Vec<Vec<f64>> = (0..4).map(|c| vec![c as f64 + 0.5, 10.0 * c as f64]).collect();
+        let flat: Vec<f64> = parts.iter().flatten().copied().collect();
+        let mut want = Vec::new();
+        combine_local(2, &flat, &mut want);
+
+        let hub = MomentHub::new(2, 4);
+        let mut got = [Vec::new(), Vec::new()];
+        std::thread::scope(|s| {
+            let hub = &hub;
+            let (g0, g1) = got.split_at_mut(1);
+            let p01: Vec<f64> = parts[0].iter().chain(&parts[1]).copied().collect();
+            let p23: Vec<f64> = parts[2].iter().chain(&parts[3]).copied().collect();
+            s.spawn(move || hub.reduce(0, 2, &p01, &mut g0[0]).unwrap());
+            s.spawn(move || hub.reduce(2, 2, &p23, &mut g1[0]).unwrap());
+        });
+        assert_eq!(got[0], want);
+        assert_eq!(got[1], want);
+    }
+
+    #[test]
+    fn hub_handles_sequential_rounds_and_poison() {
+        // Two replicas, each running several back-to-back sync points:
+        // round r's combine must never be clobbered before every
+        // replica has read it.
+        let hub = MomentHub::new(2, 2);
+        std::thread::scope(|s| {
+            let hub = &hub;
+            for rep in 0..2usize {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for round in 0..50u32 {
+                        let mine = (rep as f64 + 1.0) * (round as f64 + 1.0);
+                        hub.reduce(rep, 1, &[mine], &mut out).unwrap();
+                        assert_eq!(out, vec![3.0 * (round as f64 + 1.0)], "round {round}");
+                    }
+                });
+            }
+        });
+        hub.poison();
+        let mut out = Vec::new();
+        assert!(hub.reduce(0, 1, &[1.0], &mut out).is_err());
+    }
+}

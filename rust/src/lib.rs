@@ -16,6 +16,10 @@
 //! * [`kernels`] — shared threaded-kernel substrate: deterministic
 //!   row-partitioned `std::thread::scope` dispatch used by both the BD
 //!   GEMM and the native training kernels (DESIGN.md §12).
+//! * [`exec`] — data-parallel sharded step executor: shard planner,
+//!   replica pool, sync-BN moment hub, and the deterministic
+//!   chunk-ordered all-reduce that keeps same-seed runs bit-identical
+//!   at any shard count (DESIGN.md §14).
 //! * [`serve`] — concurrent micro-batching serve layer over the BD
 //!   engine: bounded request queue, dynamic coalescer, worker pool,
 //!   length-prefixed TCP/stdin front-end (DESIGN.md §13).
@@ -28,6 +32,7 @@ pub mod bd;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod kernels;
 pub mod models;
 pub mod native;

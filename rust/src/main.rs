@@ -23,6 +23,7 @@ use ebs::config::RunConfig;
 use ebs::coordinator::{
     run_pipeline, run_search, FlopsModel, PipelineCfg, RunLogger, Selection,
 };
+use ebs::exec::{ShardSpec, StepExecutor};
 use ebs::data::synth::generate;
 use ebs::report;
 use ebs::runtime::{Engine, Manifest, StateVec};
@@ -35,6 +36,7 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
 
   pipeline        full Fig. 1 pipeline (pretrain → search → retrain → eval)
   search          bilevel bitwidth search only; writes selection.json
+                  [--shards N] [--ckpt-every N] [--resume <search_resume.ckpt>]
   deploy          BD-engine inference from a pipeline run directory
                   [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
   serve           long-lived micro-batching BD inference server (DESIGN.md §13)
@@ -52,7 +54,11 @@ Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>
               --backend auto|native|pjrt   (auto = PJRT with artifacts,
               else the pure-Rust native interpreter — no artifacts needed)
               --threads N   (native-backend kernel workers; 0 = machine
-              parallelism; bit-identical results at any count)";
+              parallelism; bit-identical results at any count)
+              --shards N    (data-parallel step replicas, native backend;
+              results bit-identical for any N up to the chunk count —
+              see DESIGN.md §14; 0 = off)
+              --ckpt-every N  (crash checkpoints every N steps)";
 
 fn main() {
     if let Err(e) = run() {
@@ -84,6 +90,15 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(t) = args.flag("threads") {
         cfg.native.threads = t.parse().context("--threads must be an integer")?;
     }
+    if let Some(n) = args.flag("shards") {
+        cfg.search.shards = n.parse().context("--shards must be an integer")?;
+    }
+    if let Some(n) = args.flag("ckpt-every") {
+        let every: usize = n.parse().context("--ckpt-every must be an integer")?;
+        cfg.search.ckpt_every = every;
+        cfg.pretrain.ckpt_every = every;
+        cfg.retrain.ckpt_every = every;
+    }
     if args.has_switch("stochastic") {
         cfg.search.stochastic = true;
     }
@@ -98,6 +113,16 @@ fn open_engine(cfg: &RunConfig) -> Result<Engine> {
     engine.set_threads(cfg.native.threads);
     eprintln!("[engine] {} on '{}' backend", engine.manifest.model, engine.backend_name());
     Ok(engine)
+}
+
+/// [`open_engine`] wrapped in the step executor configured by
+/// `[search] shards` / `--shards` (serial when sharding is off).
+fn open_exec(cfg: &RunConfig) -> Result<StepExecutor> {
+    let spec = ShardSpec::new(cfg.search.shards, cfg.search.shard_chunks);
+    if spec.active() {
+        eprintln!("[exec] sharded steps: {} replicas × {} chunks", spec.shards, spec.chunks);
+    }
+    Ok(StepExecutor::new(open_engine(cfg)?, spec))
 }
 
 fn run() -> Result<()> {
@@ -160,8 +185,8 @@ fn run() -> Result<()> {
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let mut engine = open_engine(&cfg)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let mut exec = open_exec(&cfg)?;
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let mut search = cfg.search.clone();
     if search.target_mflops <= 0.0 {
         search.target_mflops = flops.uniform_mflops(3);
@@ -177,7 +202,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         seed: cfg.seed,
         save_artifacts: true,
     };
-    let (result, _state) = run_pipeline(&mut engine, &train, &test, &pcfg, None, &mut logger)?;
+    let (result, _state) = run_pipeline(&mut exec, &train, &test, &pcfg, None, &mut logger)?;
     println!(
         "pipeline done: fp_acc={:.2}% → mixed({:.2} MFLOPs, {:.2}x saving) acc={:.2}%",
         100.0 * result.fp_test_acc,
@@ -191,21 +216,26 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let mut engine = open_engine(&cfg)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let mut exec = open_exec(&cfg)?;
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let mut scfg = cfg.search.clone();
     if scfg.target_mflops <= 0.0 {
         scfg.target_mflops = flops.uniform_mflops(3);
+    }
+    if let Some(p) = args.flag("resume") {
+        scfg.resume_from = Some(PathBuf::from(p));
     }
     let (train, _) = generate(&cfg.data.to_spec());
     let (s_train, s_val) = train.split(0.5, scfg.seed ^ 0x51);
     let run_dir = cfg.out_dir.join(format!("search_{}", cfg.model));
     let mut logger = RunLogger::new(&run_dir, true)?;
+    // --resume reloads the checkpointed state inside run_search; the
+    // init here only sizes the leaves.
     let mut state = match args.flag("init-ckpt") {
-        Some(p) => StateVec::load(Path::new(p), &engine.manifest.state_spec)?,
-        None => engine.init_state(cfg.seed)?,
+        Some(p) => StateVec::load(Path::new(p), &exec.manifest.state_spec)?,
+        None => exec.init_state(cfg.seed)?,
     };
-    let res = run_search(&mut engine, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
+    let res = run_search(&mut exec, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
     res.selection.save(&run_dir.join("selection.json"))?;
     state.save(&run_dir.join("search.ckpt"))?;
     let (mw, mx) = res.selection.mean_bits();

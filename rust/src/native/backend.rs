@@ -19,16 +19,26 @@
 //! the shared `kernels` partitioner — results are bit-identical at any
 //! thread count, so threading never perturbs the same-seed replay
 //! guarantee.
+//!
+//! `set_shards` additionally fans whole train/search/eval *steps* out
+//! over data-parallel replicas (`run_sharded`, DESIGN.md §14): each
+//! replica owns a persistent [`Replica`] context (arena + one grad sink
+//! per canonical chunk), runs its contiguous shard with sync-BN moments
+//! exchanged through an [`MomentHub`], and the combiner reduces
+//! per-chunk partials in canonical chunk order before the single
+//! optimizer update — bit-identical results at any shard count under a
+//! fixed chunking.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::flops::{FlopsModel, MIXED_DIVISOR};
+use crate::exec::{accumulate_grads, run_replicas, zero_grads, MomentHub, ShardPlan, ShardSpec};
 use crate::runtime::{Backend, Manifest, Metrics, StateVec, Tensor};
 use crate::util::Rng;
 
-use super::graph::{Coeffs, Grads, NativeNet, TapeArena};
+use super::graph::{Coeffs, ExecCtx, Grads, NativeNet, TapeArena};
 use super::ops;
 use super::optim;
 use super::quant;
@@ -45,6 +55,31 @@ pub struct NativeBackend {
     probs: Vec<f32>,
     teacher_probs: Vec<f32>,
     dlogits: Vec<f32>,
+    /// Data-parallel sharding of the step graphs (DESIGN.md §14);
+    /// inactive spec ⇒ the serial path below runs unchanged.
+    shards: ShardSpec,
+    /// Per-replica shard contexts (arena + per-chunk grad sinks),
+    /// persistent across steps like the serial arena.
+    replicas: Vec<Replica>,
+}
+
+/// One data-parallel replica: everything a shard-local forward+backward
+/// touches.  `grads[k]` is the sink of the replica's k-th local chunk;
+/// the scalar vectors hold one per-chunk partial each, combined by the
+/// single-threaded canonical reduction after the join.
+#[derive(Default)]
+struct Replica {
+    arena: TapeArena,
+    grads: Vec<Grads>,
+    probs: Vec<f32>,
+    teacher_probs: Vec<f32>,
+    dlogits: Vec<f32>,
+    /// Per-chunk Σ cross-entropy (f64, example-sum not mean).
+    ce: Vec<f64>,
+    /// Per-chunk Σ distillation KL (example-sum; empty without teacher).
+    kl: Vec<f64>,
+    /// Per-chunk correct-prediction counts (exact under any order).
+    correct: Vec<f32>,
 }
 
 /// Gumbel-noise inputs of one stochastic step: ((L,N) rows for r and s,
@@ -82,7 +117,31 @@ impl NativeBackend {
             probs: Vec::new(),
             teacher_probs: Vec::new(),
             dlogits: Vec::new(),
+            shards: ShardSpec::serial(),
+            replicas: Vec::new(),
         })
+    }
+
+    /// Size the persistent replica contexts for a plan (grow-once, like
+    /// the serial arena).
+    fn ensure_replicas(&mut self, plan: &ShardPlan) {
+        while self.replicas.len() < plan.shards {
+            self.replicas.push(Replica::default());
+        }
+        for (r, rep) in self.replicas.iter_mut().enumerate().take(plan.shards) {
+            let k = plan.shard_chunks(r).len();
+            while rep.grads.len() < k {
+                rep.grads.push(Grads::default());
+            }
+        }
+    }
+
+    /// Kernel worker threads per replica: the configured budget divided
+    /// across the shard workers (auto resolves to the machine first) —
+    /// N replicas × the full machine would oversubscribe the host.
+    /// Thread count never changes results (DESIGN.md §12).
+    fn replica_threads(&self, shards: usize) -> usize {
+        (crate::kernels::resolve_threads(self.net.threads) / shards.max(1)).max(1)
     }
 
     /// Arena reuse accounting (tests assert `grows` freezes after the
@@ -227,7 +286,17 @@ impl NativeBackend {
         }
         self.net.backward(state, Some(&coeffs), &mut self.arena, &self.dlogits, &mut self.grads)?;
 
-        // FLOPs-hinge gradient (zero at or below target, like relu').
+        self.apply_flops_hinge(&coeffs, eflops, lam, target);
+        self.arch_strength_update(state, sto, &coeffs, lr_arch)?;
+        Ok((val_ce, correct, eflops as f32))
+    }
+
+    /// Eq. 9's FLOPs-hinge gradient (zero at or below target, like
+    /// relu'), accumulated into the combined coefficient grads.  Shared
+    /// by the serial and sharded arch phases — the hinge depends only on
+    /// the coefficients, never on the batch, so it runs once on the
+    /// combiner after the data-gradient reduction.
+    fn apply_flops_hinge(&mut self, coeffs: &Coeffs, eflops: f64, lam: f32, target: f32) {
         if eflops > target as f64 && target > 0.0 {
             let scale = lam as f64 / target as f64;
             let bits = &self.net.bits;
@@ -245,8 +314,18 @@ impl NativeBackend {
                 }
             }
         }
+    }
 
-        // coefficients → strengths (softmax / Gumbel-softmax VJP)
+    /// Coefficients → strengths (softmax / Gumbel-softmax VJP) over the
+    /// combined `dcw`/`dcx`, then one Adam update of (r, s).  Shared by
+    /// the serial and sharded arch phases.
+    fn arch_strength_update(
+        &mut self,
+        state: &mut StateVec,
+        sto: Option<&StoInputs>,
+        coeffs: &Coeffs,
+        lr_arch: f32,
+    ) -> Result<()> {
         let n = self.net.bits.len();
         let mut arch_grads: HashMap<String, Vec<f32>> = HashMap::new();
         for (i, name) in self.net.desc.qconv_names.iter().enumerate() {
@@ -272,7 +351,187 @@ impl NativeBackend {
             arch_grads.insert(format!("state/arch/s/{name}"), gs);
         }
         optim::adam_step(state, &arch_grads, lr_arch)?;
+        Ok(())
+    }
+
+    /// Chunk-ordered gradient combine into the backend's accumulator:
+    /// replicas in shard order, each replica's sinks in local-chunk
+    /// order — i.e. global chunk order (DESIGN.md §14).
+    fn combine_shard_grads(&mut self, plan: &ShardPlan) {
+        zero_grads(&mut self.grads, self.net.desc.qconv_names.len(), self.net.bits.len());
+        for r in 0..plan.shards {
+            let k = plan.shard_chunks(r).len();
+            for g in &self.replicas[r].grads[..k] {
+                accumulate_grads(&mut self.grads, g);
+            }
+        }
+    }
+
+    /// Sharded Eq. 10 weight phase: replicas run shard-local
+    /// forward+backward (sync-BN moments exchanged through the hub),
+    /// then the combiner sums grads in canonical chunk order, commits
+    /// the BN running-stat updates (identical on every replica — they
+    /// are a function of the combined global moments), and applies one
+    /// SGD-momentum update to the global state.
+    #[allow(clippy::too_many_arguments)]
+    fn weight_phase_sharded(
+        &mut self,
+        state: &mut StateVec,
+        coeffs: Option<&Coeffs>,
+        plan: &ShardPlan,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        wd: f32,
+        teacher: Option<(&[f32], f32)>,
+    ) -> Result<(f32, f32)> {
+        let batch = y.len();
+        self.ensure_replicas(plan);
+        let hub = (plan.shards > 1).then(|| MomentHub::new(plan.shards, plan.chunks));
+        let threads = self.replica_threads(plan.shards);
+        shard_fwd_bwd(
+            &self.net, &mut self.replicas, plan, hub.as_ref(), threads, self.num_classes,
+            state, coeffs, x, y, teacher,
+        )?;
+        self.combine_shard_grads(plan);
+        let (ce_sum, kl_sum, correct) = combine_scalars(&self.replicas, plan.shards);
+        let ce = (ce_sum / batch as f64) as f32;
+        let loss = match teacher {
+            Some((_, mu)) if mu > 0.0 => (1.0 - mu) * ce + mu * (kl_sum / batch as f64) as f32,
+            _ => ce,
+        };
+        self.replicas[0].arena.bn_updates.apply(state)?;
+        optim::sgd_momentum_step(state, &self.grads.by_path, lr, wd)?;
+        Ok((loss, correct / batch as f32))
+    }
+
+    /// Sharded Eq. 9 arch phase: the validation forward+backward fans
+    /// out like the weight phase (batch statistics, updates dropped);
+    /// the FLOPs hinge and the softmax VJP + Adam update run once on
+    /// the combiner over the combined coefficient grads.
+    #[allow(clippy::too_many_arguments)]
+    fn arch_phase_sharded(
+        &mut self,
+        state: &mut StateVec,
+        sto: Option<&StoInputs>,
+        plan: &ShardPlan,
+        xv: &[f32],
+        yv: &[i32],
+        lr_arch: f32,
+        lam: f32,
+        target: f32,
+    ) -> Result<(f32, f32, f32)> {
+        let batch = yv.len();
+        let coeffs = self.coeffs_from_state(state, sto)?;
+        self.ensure_replicas(plan);
+        let hub = (plan.shards > 1).then(|| MomentHub::new(plan.shards, plan.chunks));
+        let threads = self.replica_threads(plan.shards);
+        shard_fwd_bwd(
+            &self.net, &mut self.replicas, plan, hub.as_ref(), threads, self.num_classes,
+            state, Some(&coeffs), xv, yv, None,
+        )?;
+        self.combine_shard_grads(plan);
+        let (ce_sum, _, correct) = combine_scalars(&self.replicas, plan.shards);
+        let val_ce = (ce_sum / batch as f64) as f32;
+        let eflops = self.expected_mflops(&coeffs);
+        self.apply_flops_hinge(&coeffs, eflops, lam, target);
+        self.arch_strength_update(state, sto, &coeffs, lr_arch)?;
         Ok((val_ce, correct, eflops as f32))
+    }
+
+    /// Sharded eval forward (eval-mode BN — no moment exchange needed):
+    /// per-chunk loss/correct partials combined in chunk order.
+    fn eval_graph_sharded(
+        &mut self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        let x = io_f32(io, "x")?;
+        let y = io_get(io, "y")?.as_i32()?;
+        let batch = y.len();
+        let plan = ShardPlan::new(batch, self.shards);
+        self.ensure_replicas(&plan);
+        let threads = self.replica_threads(plan.shards);
+        let classes = self.num_classes;
+        let img = x.len() / batch;
+        let (net, replicas) = (&self.net, &mut self.replicas);
+        run_replicas(&mut replicas[..plan.shards], None, |r, rep| {
+            let ex = plan.shard_examples(r);
+            let sb = ex.len();
+            let ctx = ExecCtx {
+                global_batch: batch,
+                chunk_size: plan.chunk_size,
+                chunk0: plan.shard_chunks(r).start,
+                total_chunks: plan.chunks,
+                hub: None,
+                threads,
+            };
+            net.forward_ctx(
+                state, coeffs, &x[ex.start * img..ex.end * img], sb, false, &mut rep.arena, &ctx,
+            )?;
+            rep.ce.clear();
+            rep.kl.clear();
+            rep.correct.clear();
+            for lex in ctx.local_chunks(sb) {
+                let ly = &y[ex.start + lex.start..ex.start + lex.end];
+                let ll = &rep.arena.tape.logits[lex.start * classes..lex.end * classes];
+                rep.ce.push(ops::cross_entropy(ll, ly, classes) as f64 * ly.len() as f64);
+                rep.correct.push(ops::correct_count(ll, ly, classes));
+            }
+            Ok(())
+        })?;
+        let (ce_sum, _, correct) = combine_scalars(&self.replicas, plan.shards);
+        let mut m = Metrics::new();
+        m.insert("loss".into(), Tensor::scalar_f32((ce_sum / batch as f64) as f32));
+        m.insert("correct".into(), Tensor::scalar_f32(correct));
+        Ok(m)
+    }
+
+    /// The sharded search step: both bilevel phases fan out; every
+    /// state mutation (BN commit, SGD, Adam) happens on the combiner
+    /// between phases, so replicas only ever read the state.
+    fn search_graph_sharded(
+        &mut self,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+        stochastic: bool,
+    ) -> Result<Metrics> {
+        let xt = io_f32(io, "xt")?;
+        let yt = io_get(io, "yt")?.as_i32()?;
+        let xv = io_f32(io, "xv")?;
+        let yv = io_get(io, "yv")?.as_i32()?;
+        let lr_w = io_scalar(io, "lr_w")?;
+        let lr_arch = io_scalar(io, "lr_arch")?;
+        let wd = io_scalar(io, "wd")?;
+        let lam = io_scalar(io, "lam")?;
+        let target = io_scalar(io, "target")?;
+        let sto_inputs;
+        let sto = if stochastic {
+            sto_inputs = StoInputs {
+                g_r: io_f32(io, "g_r")?,
+                g_s: io_f32(io, "g_s")?,
+                tau: io_scalar(io, "tau")?,
+            };
+            Some(&sto_inputs)
+        } else {
+            None
+        };
+
+        let coeffs = self.coeffs_from_state(state, sto)?;
+        let plan_t = ShardPlan::new(yt.len(), self.shards);
+        let (train_loss, _) =
+            self.weight_phase_sharded(state, Some(&coeffs), &plan_t, xt, yt, lr_w, wd, None)?;
+        let plan_v = ShardPlan::new(yv.len(), self.shards);
+        let (val_loss, correct, eflops) =
+            self.arch_phase_sharded(state, sto, &plan_v, xv, yv, lr_arch, lam, target)?;
+
+        let mut m = Metrics::new();
+        m.insert("eflops".into(), Tensor::scalar_f32(eflops));
+        m.insert("train_loss".into(), Tensor::scalar_f32(train_loss));
+        m.insert("val_loss".into(), Tensor::scalar_f32(val_loss));
+        m.insert("val_acc".into(), Tensor::scalar_f32(correct / yv.len() as f32));
+        Ok(m)
     }
 
     fn eval_graph(
@@ -363,6 +622,106 @@ impl NativeBackend {
     }
 }
 
+/// One sharded forward+backward over `plan`: each replica runs its
+/// contiguous shard through the ctx-aware graph (sync-BN moments
+/// exchanged through `hub`), fills its per-chunk scalar partials
+/// (CE/correct, KL with a teacher), and lands per-chunk weight
+/// gradients in its sinks.  Pure shard-local compute over a read-only
+/// state — every state mutation belongs to the combiner.
+#[allow(clippy::too_many_arguments)]
+fn shard_fwd_bwd(
+    net: &NativeNet,
+    replicas: &mut [Replica],
+    plan: &ShardPlan,
+    hub: Option<&MomentHub>,
+    threads: usize,
+    classes: usize,
+    state: &StateVec,
+    coeffs: Option<&Coeffs>,
+    x: &[f32],
+    y: &[i32],
+    teacher: Option<(&[f32], f32)>,
+) -> Result<()> {
+    let batch = y.len();
+    let img = x.len() / batch;
+    let (mu, t_logits) = match teacher {
+        Some((t, m)) if m > 0.0 => (m, Some(t)),
+        _ => (0.0, None),
+    };
+    run_replicas(&mut replicas[..plan.shards], hub, |r, rep| {
+        let ex = plan.shard_examples(r);
+        let sb = ex.len();
+        let xs = &x[ex.start * img..ex.end * img];
+        let ys = &y[ex.clone()];
+        let ctx = ExecCtx {
+            global_batch: batch,
+            chunk_size: plan.chunk_size,
+            chunk0: plan.shard_chunks(r).start,
+            total_chunks: plan.chunks,
+            hub,
+            threads,
+        };
+        net.forward_ctx(state, coeffs, xs, sb, true, &mut rep.arena, &ctx)?;
+        ops::softmax_rows(&rep.arena.tape.logits, sb, classes, &mut rep.probs);
+        if let Some(t) = t_logits {
+            ops::softmax_rows(
+                &t[ex.start * classes..ex.end * classes], sb, classes, &mut rep.teacher_probs,
+            );
+        }
+        rep.ce.clear();
+        rep.kl.clear();
+        rep.correct.clear();
+        for lex in ctx.local_chunks(sb) {
+            let ly = &ys[lex.clone()];
+            let ll = &rep.arena.tape.logits[lex.start * classes..lex.end * classes];
+            rep.ce.push(ops::cross_entropy(ll, ly, classes) as f64 * ly.len() as f64);
+            rep.correct.push(ops::correct_count(ll, ly, classes));
+            if let Some(t) = t_logits {
+                let tl = &t[(ex.start + lex.start) * classes..(ex.start + lex.end) * classes];
+                rep.kl.push(ops::distill_loss(ll, tl, lex.len(), classes) as f64 * lex.len() as f64);
+            }
+        }
+        // dlogits over the shard rows, scaled by 1/global-batch
+        let inv_b = 1.0 / batch as f32;
+        rep.dlogits.clear();
+        rep.dlogits.resize(sb * classes, 0.0);
+        for b in 0..sb {
+            for c in 0..classes {
+                let i = b * classes + c;
+                let hard = rep.probs[i] - if ys[b] as usize == c { 1.0 } else { 0.0 };
+                let soft = if t_logits.is_some() {
+                    rep.probs[i] - rep.teacher_probs[i]
+                } else {
+                    0.0
+                };
+                rep.dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
+            }
+        }
+        let k = sb.div_ceil(plan.chunk_size);
+        net.backward_ctx(state, coeffs, &mut rep.arena, &rep.dlogits, &mut rep.grads[..k], &ctx)?;
+        Ok(())
+    })
+}
+
+/// Combine the replicas' per-chunk scalar partials in canonical chunk
+/// order: (Σ CE, Σ KL, Σ correct).  Correct counts are exact under any
+/// order; the f64 sums follow the fixed chunk association.
+fn combine_scalars(replicas: &[Replica], shards: usize) -> (f64, f64, f32) {
+    let (mut ce, mut kl, mut correct) = (0f64, 0f64, 0f32);
+    for rep in &replicas[..shards] {
+        for &v in &rep.ce {
+            ce += v;
+        }
+        for &v in &rep.kl {
+            kl += v;
+        }
+        for &v in &rep.correct {
+            correct += v;
+        }
+    }
+    (ce, kl, correct)
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -370,6 +729,74 @@ impl Backend for NativeBackend {
 
     fn set_threads(&mut self, threads: usize) {
         self.net.threads = threads;
+    }
+
+    fn set_shards(&mut self, spec: ShardSpec) {
+        self.shards = spec;
+    }
+
+    /// The sharded-step dispatch (DESIGN.md §14).  Train/search/eval
+    /// graphs fan out over the configured replicas with shard-invariant
+    /// chunked reductions; graphs without a sharded lowering (infer),
+    /// and an inactive spec, fall back to the serial interpreter.
+    fn run_sharded(
+        &mut self,
+        manifest: &Manifest,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<(Metrics, std::time::Duration)> {
+        if !self.shards.active() {
+            return self.run(manifest, graph, state, io);
+        }
+        let t0 = std::time::Instant::now();
+        let metrics = match graph {
+            "fp_train" => {
+                let x = io_f32(io, "x")?;
+                let y = io_get(io, "y")?.as_i32()?;
+                let lr = io_scalar(io, "lr")?;
+                let wd = io_scalar(io, "wd")?;
+                let plan = ShardPlan::new(y.len(), self.shards);
+                let (loss, acc) =
+                    self.weight_phase_sharded(state, None, &plan, x, y, lr, wd, None)?;
+                let mut m = Metrics::new();
+                m.insert("loss".into(), Tensor::scalar_f32(loss));
+                m.insert("acc".into(), Tensor::scalar_f32(acc));
+                Ok(m)
+            }
+            "train" => {
+                let coeffs = Coeffs {
+                    cw: self.coeff_rows(io_f32(io, "sel_w")?)?,
+                    cx: self.coeff_rows(io_f32(io, "sel_x")?)?,
+                };
+                let x = io_f32(io, "x")?;
+                let y = io_get(io, "y")?.as_i32()?;
+                let mu = io_scalar(io, "mu")?;
+                let teacher = io_f32(io, "teacher")?;
+                let lr = io_scalar(io, "lr")?;
+                let wd = io_scalar(io, "wd")?;
+                let plan = ShardPlan::new(y.len(), self.shards);
+                let (loss, acc) = self.weight_phase_sharded(
+                    state, Some(&coeffs), &plan, x, y, lr, wd, Some((teacher, mu)),
+                )?;
+                let mut m = Metrics::new();
+                m.insert("loss".into(), Tensor::scalar_f32(loss));
+                m.insert("acc".into(), Tensor::scalar_f32(acc));
+                Ok(m)
+            }
+            "search_det" => self.search_graph_sharded(state, io, false),
+            "search_sto" => self.search_graph_sharded(state, io, true),
+            "fp_eval" => self.eval_graph_sharded(state, None, io),
+            "eval" => {
+                let coeffs = Coeffs {
+                    cw: self.coeff_rows(io_f32(io, "sel_w")?)?,
+                    cx: self.coeff_rows(io_f32(io, "sel_x")?)?,
+                };
+                self.eval_graph_sharded(state, Some(&coeffs), io)
+            }
+            _ => return self.run(manifest, graph, state, io),
+        }?;
+        Ok((metrics, t0.elapsed()))
     }
 
     /// Mirror of `model.init_state`: He-normal conv weights, uniform fc,

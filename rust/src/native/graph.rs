@@ -30,16 +30,86 @@
 //! overwrites its output, which is what keeps reuse bit-deterministic.
 
 use std::collections::HashMap;
+use std::ops::Range;
 
 use anyhow::{ensure, Result};
 
 use crate::bd::im2col::Patches;
 use crate::bd::scratch::{ensure as ensure_buf, ScratchStats};
+use crate::exec::sync::combine_local;
+use crate::exec::MomentHub;
 use crate::models::NetDesc;
 use crate::runtime::{LayerDesc, Manifest, StateVec};
 
 use super::ops;
 use super::quant::{self, WTape};
+
+/// Execution context of one forward/backward call (DESIGN.md §14).
+///
+/// The serial path ([`ExecCtx::serial`]) covers the whole batch with a
+/// single chunk and no hub — bit-identical to the pre-sharding step
+/// implementation.  The sharded path hands each replica a ctx whose
+/// chunking mirrors the global [`crate::exec::ShardPlan`]: every
+/// cross-example reduction inside forward/backward is computed as
+/// per-chunk partials (chunk boundaries fixed by the plan, never by the
+/// shard count) and combined in canonical chunk order — through the
+/// [`MomentHub`] when replicas must exchange sync-BN moments mid-pass,
+/// locally otherwise.
+pub struct ExecCtx<'a> {
+    /// Global batch size (BN statistics denominator; the replica's own
+    /// batch is the shard it was handed).
+    pub global_batch: usize,
+    /// Examples per canonical chunk (== global batch when serial).
+    pub chunk_size: usize,
+    /// Global index of this replica's first chunk.
+    pub chunk0: usize,
+    /// Total canonical chunks in the plan.
+    pub total_chunks: usize,
+    /// Cross-replica moment exchange; `None` when this call owns every
+    /// chunk (serial, or a single-shard chunked run).
+    pub hub: Option<&'a MomentHub>,
+    /// Kernel worker threads for this replica.
+    pub threads: usize,
+}
+
+impl ExecCtx<'_> {
+    /// The legacy single-chunk context: whole-batch reductions, no hub.
+    pub fn serial(batch: usize, threads: usize) -> ExecCtx<'static> {
+        ExecCtx {
+            global_batch: batch,
+            chunk_size: batch.max(1),
+            chunk0: 0,
+            total_chunks: 1,
+            hub: None,
+            threads,
+        }
+    }
+
+    /// Local chunk example-ranges of a shard holding `n` examples
+    /// (shards start on chunk boundaries, so relative boundaries are
+    /// multiples of `chunk_size`).
+    pub fn local_chunks(&self, n: usize) -> impl Iterator<Item = Range<usize>> + '_ {
+        let cs = self.chunk_size;
+        (0..n.div_ceil(cs)).map(move |k| k * cs..((k + 1) * cs).min(n))
+    }
+
+    /// Combine per-chunk f64 partials (`k` chunks × `m` values,
+    /// chunk-major) into the canonical chunk-ordered sum — through the
+    /// hub when present, locally when this ctx owns every chunk.
+    fn reduce(&self, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()> {
+        match self.hub {
+            Some(h) => h.reduce(self.chunk0, m, parts, out),
+            None => {
+                ensure!(
+                    self.chunk0 == 0 && parts.len() / m == self.total_chunks,
+                    "multi-shard reduction requires a moment hub"
+                );
+                combine_local(m, parts, out);
+                Ok(())
+            }
+        }
+    }
+}
 
 /// Per-qconv branch coefficient vectors, manifest qconv order.
 #[derive(Debug, Clone)]
@@ -152,11 +222,19 @@ pub struct Tape {
 struct StepScratch {
     patches: Patches,
     conv_out: Vec<f32>,
-    bn: ops::BnScratch,
+    /// Per-chunk f64 moment/gradient-sum partials (chunk-major) fed to
+    /// the canonical chunk-ordered combine (DESIGN.md §14).
+    bn_parts: Vec<f64>,
+    /// Combined (global) BN moments — and, on the backward, the
+    /// combined (Σdy ‖ Σdy·x̂) pair — of the current layer.
+    bn_mean: Vec<f64>,
+    bn_var: Vec<f64>,
     dconv: Vec<f32>,
     gwq: Vec<f32>,
     dxq: Vec<f32>,
     dpooled: Vec<f32>,
+    /// One chunk's dpooled rows (fc backward runs per chunk).
+    dpooled_chunk: Vec<f32>,
     dga: Vec<f32>,
     dbe: Vec<f32>,
     dfc_w: Vec<f32>,
@@ -214,8 +292,11 @@ pub struct Grads {
 }
 
 impl Grads {
-    /// Zero every persistent leaf and size the coefficient rows.
-    fn begin_step(&mut self, layers: usize, n_bits: usize) {
+    /// Zero every persistent leaf and size the coefficient rows — both
+    /// the per-sink step reset here and the sharded combiner's
+    /// accumulator identity (`exec::reduce::zero_grads`) go through
+    /// this one function, so the reset invariant lives in one place.
+    pub(crate) fn begin_step(&mut self, layers: usize, n_bits: usize) {
         for v in self.by_path.values_mut() {
             v.fill(0.0);
         }
@@ -324,7 +405,12 @@ impl NativeNet {
     /// One conv → BN (→ ReLU) layer forward.  `coeffs` present ⇒ run the
     /// EBS aggregated-quantized path (Eq. 6/17); absent ⇒ full precision.
     /// `out` and `tape` are persistent arena slots; `scratch` holds the
-    /// shared patch matrix and conv output.
+    /// shared patch matrix and conv output.  Train-mode BN statistics
+    /// follow the shard-invariance rule: per-chunk f64 partials combined
+    /// in canonical chunk order (across replicas through `ctx`'s hub),
+    /// then every row normalizes with the *global* batch moments —
+    /// sync-BN semantics at any shard count, and bit-identical to the
+    /// pre-sharding kernel under the serial single-chunk ctx.
     #[allow(clippy::too_many_arguments)]
     fn conv_layer_forward(
         &self,
@@ -342,6 +428,7 @@ impl NativeNet {
         scratch: &mut StepScratch,
         bn_updates: &mut BnUpdates,
         stats: &mut ScratchStats,
+        ctx: &ExecCtx,
     ) -> Result<()> {
         let paths = self.layer_paths(&desc.name);
         let w = state.get(&paths.w)?.as_f32()?;
@@ -354,10 +441,10 @@ impl NativeNet {
             let qi = paths.qi.expect("qconv has a coefficient row");
             tape.alpha = state.get(&paths.alpha)?.as_f32()?[0];
             ensure_buf(&mut tape.xq, input.len(), stats);
-            quant::ebs_act_forward(input, &c.cx[qi], tape.alpha, &self.bits, self.threads, &mut tape.xq);
+            quant::ebs_act_forward(input, &c.cx[qi], tape.alpha, &self.bits, ctx.threads, &mut tape.xq);
             ensure_buf(&mut tape.wq, w.len(), stats);
             ensure_buf(&mut tape.wtape.t, w.len(), stats);
-            quant::ebs_weight_forward(w, &c.cw[qi], &self.bits, self.threads, &mut tape.wq, &mut tape.wtape);
+            quant::ebs_weight_forward(w, &c.cw[qi], &self.bits, ctx.threads, &mut tape.wq, &mut tape.wtape);
         }
         {
             let conv_in: &[f32] = if quantized { &tape.xq } else { input };
@@ -373,7 +460,7 @@ impl NativeNet {
         tape.ow = scratch.patches.ow;
         ensure_buf(&mut scratch.conv_out, scratch.patches.n * desc.out_ch, stats);
         let w_used: &[f32] = if quantized { &tape.wq } else { w };
-        ops::conv_forward(&scratch.patches, w_used, desc.out_ch, self.threads, &mut scratch.conv_out);
+        ops::conv_forward(&scratch.patches, w_used, desc.out_ch, ctx.threads, &mut scratch.conv_out);
 
         let gamma = state.get(&paths.bn_gamma)?.as_f32()?;
         let beta = state.get(&paths.bn_beta)?.as_f32()?;
@@ -381,12 +468,53 @@ impl NativeNet {
         let rvar = state.get(&paths.bn_var)?.as_f32()?;
         ensure_buf(out, scratch.conv_out.len(), stats);
         if train {
+            let co = desc.out_ch;
+            let npos = tape.oh * tape.ow;
+            let k = batch.div_ceil(ctx.chunk_size);
+            // pass 1: per-chunk Σx → global mean
+            ensure_buf(&mut scratch.bn_parts, k * co, stats);
+            for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+                ops::bn_col_sums(
+                    &scratch.conv_out, co, ex.start * npos, ex.end * npos, ctx.threads,
+                    &mut scratch.bn_parts[ki * co..(ki + 1) * co],
+                );
+            }
+            ctx.reduce(co, &scratch.bn_parts[..k * co], &mut scratch.bn_mean)?;
+            let global_rows = (ctx.global_batch * npos) as f64;
+            for m in scratch.bn_mean.iter_mut() {
+                *m /= global_rows;
+            }
+            // pass 2: per-chunk Σ(x − mean)² → global variance
+            for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+                ops::bn_col_sqdev_sums(
+                    &scratch.conv_out, co, &scratch.bn_mean, ex.start * npos, ex.end * npos,
+                    ctx.threads, &mut scratch.bn_parts[ki * co..(ki + 1) * co],
+                );
+            }
+            ctx.reduce(co, &scratch.bn_parts[..k * co], &mut scratch.bn_var)?;
+            for v in scratch.bn_var.iter_mut() {
+                *v /= global_rows;
+            }
+            ops::bn_inv_std(&scratch.bn_var, &mut tape.bn.inv_std);
             ensure_buf(&mut tape.bn.xhat, scratch.conv_out.len(), stats);
-            let (nm, nv) = bn_updates.slot(paths, stats);
-            ops::bn_forward_train(
-                &scratch.conv_out, desc.out_ch, gamma, beta, rmean, rvar, self.threads, out,
-                &mut tape.bn, nm, nv, &mut scratch.bn,
+            ops::bn_normalize(
+                &scratch.conv_out, co, &scratch.bn_mean, &tape.bn.inv_std, gamma, beta,
+                ctx.threads, &mut tape.bn.xhat, out,
             );
+            // Running-stat update from the combined moments — identical
+            // on every replica, applied once by the combiner.
+            let (nm, nv) = bn_updates.slot(paths, stats);
+            nm.clear();
+            nv.clear();
+            for c in 0..co {
+                nm.push(
+                    ops::BN_MOMENTUM * rmean[c]
+                        + (1.0 - ops::BN_MOMENTUM) * scratch.bn_mean[c] as f32,
+                );
+                nv.push(
+                    ops::BN_MOMENTUM * rvar[c] + (1.0 - ops::BN_MOMENTUM) * scratch.bn_var[c] as f32,
+                );
+            }
         } else {
             ops::bn_forward_eval(&scratch.conv_out, desc.out_ch, gamma, beta, rmean, rvar, out);
         }
@@ -400,7 +528,8 @@ impl NativeNet {
 
     /// Full forward pass into the arena; `coeffs = None` runs the FP
     /// network.  Logits land in `arena.tape.logits`; BN running-stat
-    /// updates (empty unless `train`) in `arena.bn_updates`.
+    /// updates (empty unless `train`) in `arena.bn_updates`.  Serial
+    /// single-chunk execution — the pre-sharding numerics.
     pub fn forward(
         &self,
         state: &StateVec,
@@ -409,6 +538,23 @@ impl NativeNet {
         batch: usize,
         train: bool,
         arena: &mut TapeArena,
+    ) -> Result<()> {
+        self.forward_ctx(state, coeffs, x, batch, train, arena, &ExecCtx::serial(batch, self.threads))
+    }
+
+    /// [`NativeNet::forward`] under an explicit [`ExecCtx`]: `x` holds
+    /// this replica's shard (`batch` examples) and every cross-example
+    /// reduction follows the ctx's canonical chunking (DESIGN.md §14).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_ctx(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        x: &[f32],
+        batch: usize,
+        train: bool,
+        arena: &mut TapeArena,
+        ctx: &ExecCtx,
     ) -> Result<()> {
         let stem_d = &self.desc.stem;
         ensure!(
@@ -436,7 +582,7 @@ impl NativeNet {
 
         self.conv_layer_forward(
             state, stem_d, None, &tape.input, batch, stem_d.in_hw, stem_d.in_hw, train, true,
-            &mut tape.stem, &mut tape.stem_out, scratch, bn_updates, stats,
+            &mut tape.stem, &mut tape.stem_out, scratch, bn_updates, stats, ctx,
         )?;
         let (mut ch_h, mut ch_w) = (tape.stem.oh, tape.stem.ow);
 
@@ -456,18 +602,18 @@ impl NativeNet {
             };
             self.conv_layer_forward(
                 state, &b.c1, coeffs, block_in, batch, ch_h, ch_w, train, true, &mut bt.c1,
-                &mut bt.y1, scratch, bn_updates, stats,
+                &mut bt.y1, scratch, bn_updates, stats, ctx,
             )?;
             self.conv_layer_forward(
                 state, &b.c2, coeffs, &bt.y1, batch, bt.c1.oh, bt.c1.ow, train, false, &mut bt.c2,
-                &mut bt.out, scratch, bn_updates, stats,
+                &mut bt.out, scratch, bn_updates, stats, ctx,
             )?;
             match &b.shortcut {
                 Some(sd) => {
                     let sct = bt.sc.get_or_insert_with(ConvTape::default);
                     self.conv_layer_forward(
                         state, sd, coeffs, block_in, batch, ch_h, ch_w, train, false, sct,
-                        &mut flow.ident, scratch, bn_updates, stats,
+                        &mut flow.ident, scratch, bn_updates, stats, ctx,
                     )?;
                     for (v, id) in bt.out.iter_mut().zip(&flow.ident) {
                         *v = (*v + id).max(0.0);
@@ -503,6 +649,14 @@ impl NativeNet {
     /// layer's pre-quantization input (a tape/arena borrow, never a
     /// copy).  Writes the gradient at that input into `dx_out` when
     /// requested (the stem passes `None`).
+    ///
+    /// Weight-space gradients (dW, dγ, dβ, dα, coefficient rows) are
+    /// cross-example reductions, so they land as per-chunk partials in
+    /// `gsink` (one [`Grads`] per local chunk) for the canonical
+    /// chunk-ordered combine; activation-space gradients (dx) are
+    /// per-example and fill the shard buffer directly.  The BN backward
+    /// sums are exchanged through the ctx like the forward moments —
+    /// the dx formula needs the *global* Σdy / Σdy·x̂.
     #[allow(clippy::too_many_arguments)]
     fn conv_layer_backward(
         &self,
@@ -515,22 +669,44 @@ impl NativeNet {
         batch: usize,
         dx_out: Option<&mut Vec<f32>>,
         scratch: &mut StepScratch,
-        grads: &mut Grads,
+        gsink: &mut [Grads],
         stats: &mut ScratchStats,
+        ctx: &ExecCtx,
     ) -> Result<()> {
         let paths = self.layer_paths(&desc.name);
         let gamma = state.get(&paths.bn_gamma)?.as_f32()?;
-        ensure_buf(&mut scratch.dga, desc.out_ch, stats);
-        scratch.dga.fill(0.0);
-        ensure_buf(&mut scratch.dbe, desc.out_ch, stats);
-        scratch.dbe.fill(0.0);
+        let co = desc.out_ch;
+        let npos = tape.oh * tape.ow;
+        let k = batch.div_ceil(ctx.chunk_size);
+        // per-chunk (Σdy ‖ Σdy·x̂) partials → global sums
+        ensure_buf(&mut scratch.bn_parts, k * 2 * co, stats);
+        for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+            let (sa, sb) = scratch.bn_parts[ki * 2 * co..(ki + 1) * 2 * co].split_at_mut(co);
+            ops::bn_backward_col_sums(
+                dy, &tape.bn.xhat, co, ex.start * npos, ex.end * npos, ctx.threads, sa, sb,
+            );
+        }
+        ctx.reduce(2 * co, &scratch.bn_parts[..k * 2 * co], &mut scratch.bn_mean)?;
+        // chunk-partial dγ/dβ into the chunk's grad sink
+        ensure_buf(&mut scratch.dga, co, stats);
+        ensure_buf(&mut scratch.dbe, co, stats);
+        for ki in 0..k {
+            let part = &scratch.bn_parts[ki * 2 * co..(ki + 1) * 2 * co];
+            for c in 0..co {
+                scratch.dbe[c] = part[c] as f32;
+                scratch.dga[c] = part[co + c] as f32;
+            }
+            grad_accum(&mut gsink[ki].by_path, &paths.bn_gamma, &scratch.dga, stats);
+            grad_accum(&mut gsink[ki].by_path, &paths.bn_beta, &scratch.dbe, stats);
+        }
+        // dx through the global batch statistics
+        let inv_n = 1.0 / (ctx.global_batch * npos) as f32;
+        let (sum_dy, sum_dyxh) = scratch.bn_mean.split_at(co);
         ensure_buf(&mut scratch.dconv, dy.len(), stats);
-        ops::bn_backward_train(
-            dy, desc.out_ch, gamma, &tape.bn, self.threads, &mut scratch.dconv,
-            &mut scratch.dga, &mut scratch.dbe, &mut scratch.bn,
+        ops::bn_backward_dx(
+            dy, &tape.bn.xhat, &tape.bn.inv_std, gamma, sum_dy, sum_dyxh, inv_n, ctx.threads,
+            &mut scratch.dconv,
         );
-        grad_accum(&mut grads.by_path, &paths.bn_gamma, &scratch.dga, stats);
-        grad_accum(&mut grads.by_path, &paths.bn_beta, &scratch.dbe, stats);
 
         {
             let conv_in: &[f32] = if tape.quantized { &tape.xq } else { x };
@@ -546,35 +722,54 @@ impl NativeNet {
         if tape.quantized {
             let c = coeffs.expect("quantized layer has coeffs");
             let qi = paths.qi.expect("qconv has a coefficient row");
-            // weight path: STE + tanh/max backward, coefficient grads
-            ensure_buf(&mut scratch.gwq, tape.wq.len(), stats);
-            scratch.gwq.fill(0.0);
-            ops::conv_backward_w(&scratch.patches, &scratch.dconv, desc.out_ch, self.threads, &mut scratch.gwq);
-            let dw = grad_leaf(&mut grads.by_path, &paths.w, tape.wq.len(), stats);
-            quant::ebs_weight_backward(&scratch.gwq, &c.cw[qi], &self.bits, &tape.wtape, dw, &mut grads.dcw[qi]);
-            // activation path: STE + clip backward, α + coefficient grads
+            // weight path: STE + tanh/max backward, coefficient grads —
+            // one dW/dp partial per chunk (columns of that chunk only).
+            for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+                ensure_buf(&mut scratch.gwq, tape.wq.len(), stats);
+                scratch.gwq.fill(0.0);
+                ops::conv_backward_w_cols(
+                    &scratch.patches, &scratch.dconv, co, ex.start * npos, ex.end * npos,
+                    ctx.threads, &mut scratch.gwq,
+                );
+                let g = &mut gsink[ki];
+                let dw = grad_leaf(&mut g.by_path, &paths.w, tape.wq.len(), stats);
+                quant::ebs_weight_backward(
+                    &scratch.gwq, &c.cw[qi], &self.bits, &tape.wtape, dw, &mut g.dcw[qi],
+                );
+            }
+            // activation path: STE + clip backward, α + coefficient
+            // grads per chunk; dx rows are per-example.
             ensure_buf(&mut scratch.dxq, tape.xq.len(), stats);
             ops::conv_backward_x(
                 &scratch.dconv, &tape.wq, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch,
-                desc.ksize, desc.stride, self.threads, &mut scratch.dxq,
+                desc.ksize, desc.stride, ctx.threads, &mut scratch.dxq,
             );
             let dx = dx_out.expect("quantized layers always propagate dx");
             ensure_buf(dx, x.len(), stats);
-            let mut dalpha = 0f32;
-            quant::ebs_act_backward(
-                &scratch.dxq, x, &tape.xq, &c.cx[qi], tape.alpha, &self.bits, dx, &mut dalpha,
-                &mut grads.dcx[qi],
-            );
-            grad_accum(&mut grads.by_path, &paths.alpha, &[dalpha], stats);
+            let in_sz = tape.in_h * tape.in_w * desc.in_ch;
+            for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+                let r = ex.start * in_sz..ex.end * in_sz;
+                let mut dalpha = 0f32;
+                quant::ebs_act_backward_into(
+                    &scratch.dxq[r.clone()], &x[r.clone()], &tape.xq[r.clone()], &c.cx[qi],
+                    tape.alpha, &self.bits, &mut dx[r], &mut dalpha, &mut gsink[ki].dcx[qi],
+                );
+                grad_accum(&mut gsink[ki].by_path, &paths.alpha, &[dalpha], stats);
+            }
         } else {
             let w = state.get(&paths.w)?.as_f32()?;
-            let dw = grad_leaf(&mut grads.by_path, &paths.w, w.len(), stats);
-            ops::conv_backward_w(&scratch.patches, &scratch.dconv, desc.out_ch, self.threads, dw);
+            for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+                let dw = grad_leaf(&mut gsink[ki].by_path, &paths.w, w.len(), stats);
+                ops::conv_backward_w_cols(
+                    &scratch.patches, &scratch.dconv, co, ex.start * npos, ex.end * npos,
+                    ctx.threads, dw,
+                );
+            }
             if let Some(dx) = dx_out {
                 ensure_buf(dx, x.len(), stats);
                 ops::conv_backward_x(
                     &scratch.dconv, w, batch, tape.in_h, tape.in_w, desc.in_ch, desc.out_ch,
-                    desc.ksize, desc.stride, self.threads, dx,
+                    desc.ksize, desc.stride, ctx.threads, dx,
                 );
             }
         }
@@ -584,6 +779,7 @@ impl NativeNet {
     /// Full backward from `dlogits` over the arena's tape.  Parameter/α
     /// grads land in `grads.by_path` (zeroed and re-accumulated each
     /// step), per-layer branch-coefficient grads in `grads.dcw`/`dcx`.
+    /// Serial single-chunk execution — the pre-sharding numerics.
     pub fn backward(
         &self,
         state: &StateVec,
@@ -592,26 +788,58 @@ impl NativeNet {
         dlogits: &[f32],
         grads: &mut Grads,
     ) -> Result<()> {
-        grads.begin_step(self.desc.qconv_names.len(), self.bits.len());
+        let ctx = ExecCtx::serial(arena.tape.batch, self.threads);
+        self.backward_ctx(state, coeffs, arena, dlogits, std::slice::from_mut(grads), &ctx)
+    }
+
+    /// [`NativeNet::backward`] under an explicit [`ExecCtx`]: `gsink`
+    /// holds one [`Grads`] per local chunk of this replica's shard;
+    /// every weight-space gradient lands in its chunk's sink as a
+    /// partial for the canonical chunk-ordered combine (DESIGN.md §14).
+    pub fn backward_ctx(
+        &self,
+        state: &StateVec,
+        coeffs: Option<&Coeffs>,
+        arena: &mut TapeArena,
+        dlogits: &[f32],
+        gsink: &mut [Grads],
+        ctx: &ExecCtx,
+    ) -> Result<()> {
         let TapeArena { tape, scratch, flow, stats, .. } = arena;
         let batch = tape.batch;
+        let k = batch.div_ceil(ctx.chunk_size);
+        ensure!(gsink.len() == k, "need one grad sink per local chunk ({} != {k})", gsink.len());
+        for g in gsink.iter_mut() {
+            g.begin_step(self.desc.qconv_names.len(), self.bits.len());
+        }
         let co = self.desc.blocks.last().map(|b| b.c2.out_ch).unwrap_or(self.desc.stem.out_ch);
         let last = tape.blocks.last().expect("network has blocks");
         let npos = last.c2.oh * last.c2.ow;
+        let classes = self.num_classes;
 
-        // classifier
+        // classifier: dW/db are cross-example sums → per-chunk partials
         let fc_w = state.get("state/params/fc/w")?.as_f32()?;
-        ensure_buf(&mut scratch.dfc_w, fc_w.len(), stats);
-        scratch.dfc_w.fill(0.0);
-        ensure_buf(&mut scratch.dfc_b, self.num_classes, stats);
-        scratch.dfc_b.fill(0.0);
         ensure_buf(&mut scratch.dpooled, batch * co, stats);
-        ops::fc_backward(
-            dlogits, &tape.pooled, batch, co, self.num_classes, fc_w, &mut scratch.dfc_w,
-            &mut scratch.dfc_b, &mut scratch.dpooled,
-        );
-        grad_accum(&mut grads.by_path, "state/params/fc/w", &scratch.dfc_w, stats);
-        grad_accum(&mut grads.by_path, "state/params/fc/b", &scratch.dfc_b, stats);
+        for (ki, ex) in ctx.local_chunks(batch).enumerate() {
+            ensure_buf(&mut scratch.dfc_w, fc_w.len(), stats);
+            scratch.dfc_w.fill(0.0);
+            ensure_buf(&mut scratch.dfc_b, classes, stats);
+            scratch.dfc_b.fill(0.0);
+            ops::fc_backward(
+                &dlogits[ex.start * classes..ex.end * classes],
+                &tape.pooled[ex.start * co..ex.end * co],
+                ex.len(),
+                co,
+                classes,
+                fc_w,
+                &mut scratch.dfc_w,
+                &mut scratch.dfc_b,
+                &mut scratch.dpooled_chunk,
+            );
+            scratch.dpooled[ex.start * co..ex.end * co].copy_from_slice(&scratch.dpooled_chunk);
+            grad_accum(&mut gsink[ki].by_path, "state/params/fc/w", &scratch.dfc_w, stats);
+            grad_accum(&mut gsink[ki].by_path, "state/params/fc/b", &scratch.dfc_b, stats);
+        }
         ensure_buf(&mut flow.dh, batch * npos * co, stats);
         ops::gap_backward(&scratch.dpooled, batch, npos, co, &mut flow.dh);
 
@@ -629,8 +857,8 @@ impl NativeNet {
             }
             // c2 branch (input = c1's post-ReLU output y1)
             self.conv_layer_backward(
-                state, &b.c2, coeffs, &bt.c2, &bt.y1, dh, batch, Some(&mut *dy1), scratch, grads,
-                stats,
+                state, &b.c2, coeffs, &bt.c2, &bt.y1, dh, batch, Some(&mut *dy1), scratch, gsink,
+                stats, ctx,
             )?;
             // ReLU between c1 and c2
             for (d, &o) in dy1.iter_mut().zip(&bt.y1) {
@@ -640,14 +868,14 @@ impl NativeNet {
             }
             self.conv_layer_backward(
                 state, &b.c1, coeffs, &bt.c1, block_in, dy1, batch, Some(&mut *dxb), scratch,
-                grads, stats,
+                gsink, stats, ctx,
             )?;
             // identity branch
             match (&b.shortcut, &bt.sc) {
                 (Some(sd), Some(sct)) => {
                     self.conv_layer_backward(
                         state, sd, coeffs, sct, block_in, dh, batch, Some(&mut *dsc), scratch,
-                        grads, stats,
+                        gsink, stats, ctx,
                     )?;
                     for (d, g) in dxb.iter_mut().zip(&**dsc) {
                         *d += g;
@@ -670,7 +898,7 @@ impl NativeNet {
         }
         self.conv_layer_backward(
             state, &self.desc.stem, None, &tape.stem, &tape.input, dh, batch, None, scratch,
-            grads, stats,
+            gsink, stats, ctx,
         )?;
         Ok(())
     }

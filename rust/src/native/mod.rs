@@ -15,7 +15,7 @@
 //! | [`ops`]     | SAME conv fwd/bwd (im2col adjoints), train-mode BN through batch stats, GAP, classifier, CE + label-refinery KL |
 //! | [`graph`]   | the supernet forward tape + full hand-written backward (Eq. 7 network, Eq. 18-19 gradients), step-persistent [`TapeArena`]/[`Grads`] (DESIGN.md §12) |
 //! | [`optim`]   | Eq. 10 SGD-momentum (decay-masked) and Eq. 9 Adam on [`StateVec`] leaves |
-//! | [`backend`] | graph-name dispatch implementing [`crate::runtime::Backend`] |
+//! | [`backend`] | graph-name dispatch implementing [`crate::runtime::Backend`], incl. the data-parallel sharded step path over [`crate::exec`] (DESIGN.md §14) |
 //!
 //! [`Manifest`]: crate::runtime::Manifest
 //! [`StateVec`]: crate::runtime::StateVec

@@ -62,17 +62,37 @@ pub fn conv_forward(p: &Patches, w: &[f32], co: usize, threads: usize, out: &mut
 /// dW[s][co] = Σ_j patches[s][j] · dY[j][co], accumulated into `dw`
 /// (callers zero it), sharded over rows of dW.
 pub fn conv_backward_w(p: &Patches, dy: &[f32], co: usize, threads: usize, dw: &mut [f32]) {
+    conv_backward_w_cols(p, dy, co, 0, p.n, threads, dw)
+}
+
+/// [`conv_backward_w`] restricted to output columns `[j0, j1)` — the
+/// per-chunk partial of the dW reduction (DESIGN.md §14): the column
+/// range is a canonical-chunk row range of the batch, the accumulation
+/// over `j` runs ascending within it, and partials combine in chunk
+/// order outside.  The full range reproduces the whole-batch kernel
+/// bit-for-bit.
+pub fn conv_backward_w_cols(
+    p: &Patches,
+    dy: &[f32],
+    co: usize,
+    j0: usize,
+    j1: usize,
+    threads: usize,
+    dw: &mut [f32],
+) {
     assert_eq!(dy.len(), p.n * co);
     assert_eq!(dw.len(), p.s * co);
+    assert!(j0 <= j1 && j1 <= p.n);
     let (s, n) = (p.s, p.n);
-    let threads = gate_threads(threads, (s * n * co) as u64);
+    let threads = gate_threads(threads, (s * (j1 - j0) * co) as u64);
     par_row_chunks(dw, s, co, threads, |s0, chunk| {
         for (si, drow) in chunk.chunks_exact_mut(co).enumerate() {
-            let prow = &p.data[(s0 + si) * n..(s0 + si + 1) * n];
-            for (j, &pv) in prow.iter().enumerate() {
+            let prow = &p.data[(s0 + si) * n + j0..(s0 + si) * n + j1];
+            for (jj, &pv) in prow.iter().enumerate() {
                 if pv == 0.0 {
                     continue;
                 }
+                let j = j0 + jj;
                 let dyrow = &dy[j * co..(j + 1) * co];
                 for (d, &g) in drow.iter_mut().zip(dyrow) {
                     *d += pv * g;
@@ -261,6 +281,159 @@ pub fn bn_forward_train(
         new_mean.push(BN_MOMENTUM * run_mean[c] + (1.0 - BN_MOMENTUM) * mean[c] as f32);
         new_var.push(BN_MOMENTUM * run_var[c] + (1.0 - BN_MOMENTUM) * var[c] as f32);
     }
+}
+
+/// Per-channel Σx (f64) over rows `[r0, r1)` of an `n × co` buffer —
+/// one canonical chunk's partial of the sync-BN mean reduction
+/// (DESIGN.md §14).  Channel-sharded like [`bn_forward_train`]'s mean
+/// pass; each channel's sum runs rows-ascending, so the full range
+/// reproduces the whole-batch pass bit-for-bit.
+pub fn bn_col_sums(x: &[f32], co: usize, r0: usize, r1: usize, threads: usize, out: &mut [f64]) {
+    assert_eq!(out.len(), co);
+    assert!(r0 <= r1 && r1 * co <= x.len());
+    out.fill(0.0);
+    let stat_threads = gate_threads(threads, 2 * (r1 - r0) as u64 * co as u64).min(co.max(1));
+    par_row_chunks(out, co, 1, stat_threads, |c0, mchunk| {
+        for row in x[r0 * co..r1 * co].chunks_exact(co) {
+            for (m, &v) in mchunk.iter_mut().zip(&row[c0..c0 + mchunk.len()]) {
+                *m += v as f64;
+            }
+        }
+    });
+}
+
+/// Per-channel Σ(x − mean)² (f64) over rows `[r0, r1)` — one chunk's
+/// partial of the sync-BN variance reduction (`mean` is the combined
+/// global mean, already divided).
+pub fn bn_col_sqdev_sums(
+    x: &[f32],
+    co: usize,
+    mean: &[f64],
+    r0: usize,
+    r1: usize,
+    threads: usize,
+    out: &mut [f64],
+) {
+    assert_eq!(out.len(), co);
+    assert!(r0 <= r1 && r1 * co <= x.len());
+    out.fill(0.0);
+    let stat_threads = gate_threads(threads, 2 * (r1 - r0) as u64 * co as u64).min(co.max(1));
+    par_row_chunks(out, co, 1, stat_threads, |c0, vchunk| {
+        for row in x[r0 * co..r1 * co].chunks_exact(co) {
+            for (j, v) in vchunk.iter_mut().enumerate() {
+                let d = row[c0 + j] as f64 - mean[c0 + j];
+                *v += d * d;
+            }
+        }
+    });
+}
+
+/// Normalize with externally supplied (global) moments: fills x̂ and
+/// y = γ·x̂ + β.  Row-sharded; purely element-wise given the moments,
+/// so bit-identical at any thread count.  `inv_std` comes from
+/// [`bn_inv_std`].
+#[allow(clippy::too_many_arguments)]
+pub fn bn_normalize(
+    x: &[f32],
+    co: usize,
+    mean: &[f64],
+    inv_std: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    threads: usize,
+    xhat: &mut [f32],
+    y: &mut [f32],
+) {
+    let n = x.len() / co;
+    assert_eq!(x.len(), n * co);
+    assert_eq!(xhat.len(), x.len());
+    assert_eq!(y.len(), x.len());
+    let norm_threads = gate_threads(threads, 2 * x.len() as u64);
+    par_row_chunks_zip(xhat, y, n, co, co, norm_threads, |i0, xh, yc| {
+        for (r, (xh_row, y_row)) in xh.chunks_exact_mut(co).zip(yc.chunks_exact_mut(co)).enumerate()
+        {
+            let row = &x[(i0 + r) * co..(i0 + r + 1) * co];
+            for c in 0..co {
+                let v = (row[c] - mean[c] as f32) * inv_std[c];
+                xh_row[c] = v;
+                y_row[c] = gamma[c] * v + beta[c];
+            }
+        }
+    });
+}
+
+/// Per-channel inverse standard deviation from an f64 variance vector —
+/// the exact expression [`bn_forward_train`] uses.
+pub fn bn_inv_std(var: &[f64], inv_std: &mut Vec<f32>) {
+    inv_std.clear();
+    inv_std.extend(var.iter().map(|&v| 1.0 / ((v as f32 + BN_EPS).sqrt())));
+}
+
+/// Per-channel (Σdy, Σdy·x̂) f64 partials over rows `[r0, r1)` — one
+/// chunk's partial of the BN backward reductions.  Channel-sharded in
+/// lockstep like [`bn_backward_train`]'s sum pass.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_col_sums(
+    dy: &[f32],
+    xhat: &[f32],
+    co: usize,
+    r0: usize,
+    r1: usize,
+    threads: usize,
+    sum_dy: &mut [f64],
+    sum_dyxh: &mut [f64],
+) {
+    assert_eq!(sum_dy.len(), co);
+    assert_eq!(sum_dyxh.len(), co);
+    assert!(r0 <= r1 && r1 * co <= dy.len());
+    sum_dy.fill(0.0);
+    sum_dyxh.fill(0.0);
+    let stat_threads = gate_threads(threads, 2 * (r1 - r0) as u64 * co as u64).min(co.max(1));
+    par_row_chunks_zip(sum_dy, sum_dyxh, co, 1, 1, stat_threads, |c0, sa, sb| {
+        for (i, row) in dy[r0 * co..r1 * co].chunks_exact(co).enumerate() {
+            for j in 0..sa.len() {
+                let c = c0 + j;
+                sa[j] += row[c] as f64;
+                sb[j] += row[c] as f64 * xhat[(r0 + i) * co + c] as f64;
+            }
+        }
+    });
+}
+
+/// BN backward dx pass with externally supplied (global) sums:
+/// dx = γ·σ⁻¹·(dy − Σdy/n − x̂·Σdy·x̂/n), where `inv_n = 1/n` counts the
+/// *global* batch rows the statistics were computed over.  Row-sharded
+/// exactly like [`bn_backward_train`]'s dx pass.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_dx(
+    dy: &[f32],
+    xhat: &[f32],
+    inv_std: &[f32],
+    gamma: &[f32],
+    sum_dy: &[f64],
+    sum_dyxh: &[f64],
+    inv_n: f32,
+    threads: usize,
+    dx: &mut Vec<f32>,
+) {
+    let co = gamma.len();
+    let n = dy.len() / co;
+    assert_eq!(dy.len(), n * co);
+    dx.clear();
+    dx.resize(dy.len(), 0.0);
+    let row_threads = gate_threads(threads, 2 * dy.len() as u64);
+    par_row_chunks(dx, n, co, row_threads, |i0, chunk| {
+        for (r, drow) in chunk.chunks_exact_mut(co).enumerate() {
+            let i = i0 + r;
+            let row = &dy[i * co..(i + 1) * co];
+            for c in 0..co {
+                let term = row[c]
+                    - inv_n * sum_dy[c] as f32
+                    - xhat[i * co + c] * inv_n * sum_dyxh[c] as f32;
+                drow[c] = gamma[c] * inv_std[c] * term;
+            }
+        }
+    });
 }
 
 /// Eval-mode BN with running statistics (no tape).
@@ -593,6 +766,92 @@ mod tests {
                 "dw[{idx}] {num} vs {}",
                 dw[idx]
             );
+        }
+    }
+
+    #[test]
+    fn split_bn_primitives_reproduce_monolithic_kernels_on_full_range() {
+        // The ctx-aware graph path computes BN through the split
+        // primitives; at one chunk covering the whole batch they must
+        // be bit-identical to the monolithic kernels (serial parity).
+        let mut rng = crate::util::Rng::new(0xB127);
+        let (n, co) = (37usize, 5usize);
+        let x: Vec<f32> = (0..n * co).map(|_| rng.normal() * 2.0 + 0.3).collect();
+        let gamma: Vec<f32> = (0..co).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let beta: Vec<f32> = (0..co).map(|_| 0.2 * rng.normal()).collect();
+        let (rm, rv) = (vec![0.1f32; co], vec![0.9f32; co]);
+
+        let (mut y, mut tape) = (Vec::new(), BnTape::default());
+        let (mut nm, mut nv) = (Vec::new(), Vec::new());
+        let mut bns = BnScratch::default();
+        bn_forward_train(&x, co, &gamma, &beta, &rm, &rv, 1, &mut y, &mut tape, &mut nm, &mut nv, &mut bns);
+
+        let mut mean = vec![0f64; co];
+        bn_col_sums(&x, co, 0, n, 1, &mut mean);
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0f64; co];
+        bn_col_sqdev_sums(&x, co, &mean, 0, n, 1, &mut var);
+        for v in var.iter_mut() {
+            *v /= n as f64;
+        }
+        let mut inv_std = Vec::new();
+        bn_inv_std(&var, &mut inv_std);
+        assert_eq!(inv_std, tape.inv_std);
+        let mut xhat2 = vec![0f32; x.len()];
+        let mut y2 = vec![0f32; x.len()];
+        bn_normalize(&x, co, &mean, &inv_std, &gamma, &beta, 1, &mut xhat2, &mut y2);
+        assert_eq!(xhat2, tape.xhat);
+        assert_eq!(y2, y);
+        for c in 0..co {
+            assert_eq!(BN_MOMENTUM * rm[c] + (1.0 - BN_MOMENTUM) * mean[c] as f32, nm[c]);
+            assert_eq!(BN_MOMENTUM * rv[c] + (1.0 - BN_MOMENTUM) * var[c] as f32, nv[c]);
+        }
+
+        // backward parity
+        let dy: Vec<f32> = (0..n * co).map(|_| rng.normal()).collect();
+        let mut dx = Vec::new();
+        let (mut dg, mut db) = (vec![0f32; co], vec![0f32; co]);
+        bn_backward_train(&dy, co, &gamma, &tape, 1, &mut dx, &mut dg, &mut db, &mut bns);
+        let (mut sdy, mut sdyxh) = (vec![0f64; co], vec![0f64; co]);
+        bn_backward_col_sums(&dy, &tape.xhat, co, 0, n, 1, &mut sdy, &mut sdyxh);
+        for c in 0..co {
+            assert_eq!(sdyxh[c] as f32, dg[c]);
+            assert_eq!(sdy[c] as f32, db[c]);
+        }
+        let mut dx2 = Vec::new();
+        bn_backward_dx(
+            &dy, &tape.xhat, &tape.inv_std, &gamma, &sdy, &sdyxh, 1.0 / n as f32, 1, &mut dx2,
+        );
+        assert_eq!(dx2, dx);
+    }
+
+    #[test]
+    fn conv_backward_w_cols_partials_sum_to_full_and_full_matches_whole() {
+        let mut rng = crate::util::Rng::new(0xC015);
+        let (b, h, w, ci, co, k, stride) = (4usize, 5usize, 5usize, 2usize, 3usize, 3usize, 1usize);
+        let x: Vec<f32> = (0..b * h * w * ci).map(|_| rng.normal()).collect();
+        let dy: Vec<f32> = (0..b * h * w * co).map(|_| rng.normal()).collect();
+        let mut p = Patches::empty();
+        patches_of(&x, b, h, w, ci, k, stride, &mut p);
+        let mut full = vec![0f32; k * k * ci * co];
+        conv_backward_w(&p, &dy, co, 1, &mut full);
+        let mut ranged = vec![0f32; full.len()];
+        conv_backward_w_cols(&p, &dy, co, 0, p.n, 1, &mut ranged);
+        assert_eq!(ranged, full, "full-range cols variant must be bit-identical");
+        // chunked partials combined in order approximate the serial sum
+        let npos = p.n / b;
+        let mut combined = vec![0f32; full.len()];
+        for chunk in 0..b {
+            let mut part = vec![0f32; full.len()];
+            conv_backward_w_cols(&p, &dy, co, chunk * npos, (chunk + 1) * npos, 1, &mut part);
+            for (c, &v) in combined.iter_mut().zip(&part) {
+                *c += v;
+            }
+        }
+        for (a, b_) in combined.iter().zip(&full) {
+            assert!((a - b_).abs() <= 1e-4 * b_.abs().max(1.0), "{a} vs {b_}");
         }
     }
 

@@ -171,9 +171,32 @@ pub fn ebs_act_backward(
     dalpha: &mut f32,
     dp: &mut [f32],
 ) {
-    let p_sum: f32 = p.iter().sum();
     dx.clear();
     dx.resize(x.len(), 0.0);
+    ebs_act_backward_into(gxq, x, xq, p, alpha, bits, dx, dalpha, dp)
+}
+
+/// [`ebs_act_backward`] over a pre-sized `dx` slice, so the sharded
+/// backward can run it per canonical chunk on sub-ranges of a shard's
+/// activation buffers (the α and coefficient gradients are the
+/// whole-tensor serial f64 reductions whose per-chunk partials the
+/// chunk-ordered combine sums — DESIGN.md §14).  `dx` is fully
+/// overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn ebs_act_backward_into(
+    gxq: &[f32],
+    x: &[f32],
+    xq: &[f32],
+    p: &[f32],
+    alpha: f32,
+    bits: &[u32],
+    dx: &mut [f32],
+    dalpha: &mut f32,
+    dp: &mut [f32],
+) {
+    assert_eq!(dx.len(), x.len());
+    let p_sum: f32 = p.iter().sum();
+    dx.fill(0.0);
     if alpha <= 0.0 {
         // forward was identically zero — nothing differentiates.
         return;

@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::config::RunConfig;
 use crate::coordinator::{run_search, FlopsModel, RunLogger, SearchCfg};
 use crate::data::synth::generate;
+use crate::exec::{ShardSpec, StepExecutor};
 use crate::runtime::Engine;
 
 use super::table_fmt::Table;
@@ -54,8 +55,12 @@ pub fn row_cells(
 
 /// Run the λ sweep.  Uses the tiny model unless the config overrides.
 pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
-    let mut engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
+    let mut exec = StepExecutor::new(
+        engine,
+        ShardSpec::new(cfg.search.shards, cfg.search.shard_chunks),
+    );
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let target = if cfg.search.target_mflops > 0.0 {
         cfg.search.target_mflops
     } else {
@@ -80,8 +85,8 @@ pub fn run(cfg: &RunConfig, lambdas: &[f64]) -> Result<()> {
             };
             scfg.target_mflops = target;
             let (s_train, s_val) = train.split(0.5, scfg.seed ^ 0x51);
-            let mut state = engine.init_state(cfg.seed)?;
-            let res = run_search(&mut engine, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
+            let mut state = exec.init_state(cfg.seed)?;
+            let res = run_search(&mut exec, &mut state, &s_train, &s_val, &scfg, &mut logger)?;
             let (mw, mx) = res.selection.mean_bits();
             table.row(row_cells(
                 lam,

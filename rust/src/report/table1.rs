@@ -19,6 +19,7 @@ use crate::coordinator::{
     run_fp_train, FlopsModel, PipelineCfg, RunLogger,
 };
 use crate::data::synth::generate;
+use crate::exec::{ShardSpec, StepExecutor};
 use crate::runtime::Engine;
 
 use super::table_fmt::{mflops, pct, saving, Table};
@@ -42,8 +43,12 @@ pub fn fig5_skeleton(model: &str) -> Table {
 
 /// Run the full Table 1 protocol for one model config.
 pub fn run(cfg: &RunConfig) -> Result<()> {
-    let mut engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
-    let flops = FlopsModel::from_manifest(&engine.manifest)?;
+    let engine = Engine::open_with(&cfg.model_dir(), cfg.backend)?;
+    let mut exec = StepExecutor::new(
+        engine,
+        ShardSpec::new(cfg.search.shards, cfg.search.shard_chunks),
+    );
+    let flops = FlopsModel::from_manifest(&exec.manifest)?;
     let (train, test) = generate(&cfg.data.to_spec());
     let out_dir = cfg.out_dir.join(format!("table1_{}", cfg.model));
     let mut logger = RunLogger::new(&out_dir, true)?;
@@ -74,8 +79,8 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
     let mut fig5 = fig5_skeleton(&cfg.model);
 
     // ---- Full precision row (also the initialization for everything).
-    let mut fp_state = engine.init_state(cfg.seed)?;
-    let fp = run_fp_train(&mut engine, &mut fp_state, &train, &test, &cfg.pretrain, &mut logger)?;
+    let mut fp_state = exec.init_state(cfg.seed)?;
+    let fp = run_fp_train(&mut exec, &mut fp_state, &train, &test, &cfg.pretrain, &mut logger)?;
     table.row(vec![
         "Full Prec.".into(),
         "32-bit".into(),
@@ -89,7 +94,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
     let mut prev_state = fp_state.clone();
     for &b in &uniform_bits {
         let (res, _sel, mf, state) = run_uniform(
-            &mut engine, &prev_state, b, b, &train, &test, &cfg.retrain, &mut logger,
+            &mut exec, &prev_state, b, b, &train, &test, &cfg.retrain, &mut logger,
         )?;
         table.row(vec![
             "Uniform QNN".into(),
@@ -127,15 +132,15 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             }
 
             // search from FP init
-            let mut search_state = engine.init_state(cfg.seed)?;
+            let mut search_state = exec.init_state(cfg.seed)?;
             search_state.transfer_from(&fp_state, "state/params/");
             search_state.transfer_from(&fp_state, "state/bn/");
             let (s_train, s_val) = train.split(0.5, pcfg.search.seed ^ 0x51);
             let sres = crate::coordinator::run_search(
-                &mut engine, &mut search_state, &s_train, &s_val, &pcfg.search, &mut logger,
+                &mut exec, &mut search_state, &s_train, &s_val, &pcfg.search, &mut logger,
             )?;
             // retrain with progressive init
-            let mut rstate = engine.init_state(cfg.seed)?;
+            let mut rstate = exec.init_state(cfg.seed)?;
             let init_src = prev.as_ref().unwrap_or(&fp_state);
             rstate.transfer_from(init_src, "state/params/");
             rstate.transfer_from(init_src, "state/bn/");
@@ -143,7 +148,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             let use_teacher = pcfg.retrain.distill_mu > 0.0;
             let mut teacher_state = fp_state.clone();
             let rres = crate::coordinator::run_retrain(
-                &mut engine, &mut rstate, &sres.selection, &train, &test, &pcfg.retrain,
+                &mut exec, &mut rstate, &sres.selection, &train, &test, &pcfg.retrain,
                 use_teacher.then_some(&mut teacher_state), &mut logger,
             )?;
             let (mw, mx) = sres.selection.mean_bits();
@@ -179,7 +184,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
     if with_random {
         for (ti, &target) in targets.iter().enumerate() {
             let (res, _sel, mf) = run_random_search(
-                &mut engine, &fp_state, target, &train, &test, &cfg.retrain,
+                &mut exec, &fp_state, target, &train, &test, &cfg.retrain,
                 cfg.search.seed ^ rand_seed(ti), &mut logger,
             )?;
             table.row(vec![

@@ -17,6 +17,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::exec::ShardSpec;
+
 use super::engine::Metrics;
 use super::manifest::Manifest;
 use super::state::StateVec;
@@ -47,6 +49,32 @@ pub trait Backend {
     /// (DESIGN.md §12), so this is purely a performance knob.
     fn set_threads(&mut self, threads: usize) {
         let _ = threads;
+    }
+
+    /// Configure data-parallel sharding for the step graphs
+    /// (DESIGN.md §14).  Backends without a sharded execution path
+    /// ignore the spec and keep running every step on one replica —
+    /// [`Backend::run_sharded`]'s default falls back to [`Backend::run`]
+    /// — so sharding is a per-backend capability, not part of the graph
+    /// protocol.  The native backend fans train/search/eval steps out
+    /// over `spec.shards` replicas with shard-invariant chunked
+    /// reductions.
+    fn set_shards(&mut self, spec: ShardSpec) {
+        let _ = spec;
+    }
+
+    /// Execute one step graph under the sharding configured via
+    /// [`Backend::set_shards`].  Same contract as [`Backend::run`];
+    /// backends that cannot shard (or graphs that have no sharded
+    /// lowering) execute serially.
+    fn run_sharded(
+        &mut self,
+        manifest: &Manifest,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<(Metrics, Duration)> {
+        self.run(manifest, graph, state, io)
     }
 
     /// Warm a graph (compile/cache); a no-op for interpreters.

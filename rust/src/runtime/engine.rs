@@ -130,6 +130,14 @@ impl Engine {
         self.backend.set_threads(threads);
     }
 
+    /// Data-parallel sharding for the step graphs (`[search] shards` /
+    /// `--shards`; DESIGN.md §14).  With a fixed chunk count, results
+    /// are bit-identical at any shard count on backends that implement
+    /// the sharded path (native); other backends run serially.
+    pub fn set_shards(&mut self, spec: crate::exec::ShardSpec) {
+        self.backend.set_shards(spec);
+    }
+
     /// Compile (or fetch cached) a graph by name; no-op on native.
     pub fn prepare(&mut self, graph: &str) -> Result<()> {
         self.backend.prepare(&self.manifest, graph)
@@ -157,6 +165,24 @@ impl Engine {
     ) -> Result<Metrics> {
         self.backend.prepare(&self.manifest, graph)?;
         let (metrics, dt) = self.backend.run(&self.manifest, graph, state, io)?;
+        *self.exec_time.entry(graph.to_string()).or_default() += dt;
+        *self.exec_count.entry(graph.to_string()).or_default() += 1;
+        Ok(metrics)
+    }
+
+    /// [`Engine::run`] through the backend's sharded-step dispatch
+    /// ([`Backend::run_sharded`]): same io protocol and profiling
+    /// accounting, with the step fanned out over the replicas configured
+    /// by [`Engine::set_shards`] (serial fallback on backends or graphs
+    /// without a sharded lowering).
+    pub fn run_sharded(
+        &mut self,
+        graph: &str,
+        state: &mut StateVec,
+        io: &[(String, Tensor)],
+    ) -> Result<Metrics> {
+        self.backend.prepare(&self.manifest, graph)?;
+        let (metrics, dt) = self.backend.run_sharded(&self.manifest, graph, state, io)?;
         *self.exec_time.entry(graph.to_string()).or_default() += dt;
         *self.exec_count.entry(graph.to_string()).or_default() += 1;
         Ok(metrics)

@@ -12,14 +12,15 @@ use ebs::coordinator::{
     TrainCfg,
 };
 use ebs::data::synth::{generate, SynthSpec};
+use ebs::exec::StepExecutor;
 
 mod common;
 use common::open_engine;
 
 #[test]
 fn tiny_pipeline_end_to_end() {
-    let mut engine = open_engine("resnet8_tiny");
-    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut exec = StepExecutor::serial(open_engine("resnet8_tiny"));
+    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
     let target = flops.uniform_mflops(3);
 
     let mut spec = SynthSpec::tiny(5);
@@ -40,7 +41,7 @@ fn tiny_pipeline_end_to_end() {
         seed: 5,
         save_artifacts: false,
     };
-    let (result, state) = run_pipeline(&mut engine, &train, &test, &cfg, None, &mut logger).unwrap();
+    let (result, state) = run_pipeline(&mut exec, &train, &test, &cfg, None, &mut logger).unwrap();
 
     // Learning happened: better than chance (10 classes → 10%).
     assert!(result.fp_test_acc > 0.15, "fp acc {}", result.fp_test_acc);
@@ -60,7 +61,7 @@ fn tiny_pipeline_end_to_end() {
     // Deployment parity: BD accuracy within a few samples of the
     // training-path eval.
     let net =
-        BdNetwork::from_state(&engine.manifest, &state, &result.selection, BdMode::Fused).unwrap();
+        BdNetwork::from_state(&exec.manifest, &state, &result.selection, BdMode::Fused).unwrap();
     let n = 64;
     let sz = test.hw * test.hw * test.channels;
     let preds = net.classify_batch(&test.images[..n * sz], n);
@@ -81,8 +82,8 @@ fn tiny_pipeline_end_to_end() {
 fn search_respects_different_targets() {
     // Monotone knob: a tighter FLOPs target must produce a cheaper
     // selection (the core property behind Table 1's three rows).
-    let mut engine = open_engine("resnet8_tiny");
-    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut exec = StepExecutor::serial(open_engine("resnet8_tiny"));
+    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
     let mut spec = SynthSpec::tiny(6);
     spec.n_train = 256;
     spec.n_test = 128;
@@ -91,7 +92,7 @@ fn search_respects_different_targets() {
     let mut logger = RunLogger::ephemeral();
 
     let mut run_with_target = |target: f64| -> f64 {
-        let mut state = engine.init_state(3).unwrap();
+        let mut state = exec.init_state(3).unwrap();
         let cfg = SearchCfg {
             steps: 50,
             eval_every: 25,
@@ -100,7 +101,7 @@ fn search_respects_different_targets() {
             ..SearchCfg::defaults(target, 0)
         };
         let res =
-            run_search(&mut engine, &mut state, &s_train, &s_val, &cfg, &mut logger).unwrap();
+            run_search(&mut exec, &mut state, &s_train, &s_val, &cfg, &mut logger).unwrap();
         res.exact_mflops
     };
     let loose = run_with_target(flops.uniform_mflops(4));
@@ -115,9 +116,9 @@ fn search_respects_different_targets() {
 /// kernel thread count, with the JSONL event stream captured so loss
 /// trajectories can be asserted.
 fn seeded_search(seed: u64, tag: &str, threads: usize) -> (SearchResult, Vec<(f64, f64)>) {
-    let mut engine = open_engine("resnet8_tiny");
-    engine.set_threads(threads);
-    let flops = FlopsModel::from_manifest(&engine.manifest).unwrap();
+    let mut exec = StepExecutor::serial(open_engine("resnet8_tiny"));
+    exec.set_threads(threads);
+    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
     let target = flops.uniform_mflops(3);
     let mut spec = SynthSpec::tiny(11);
     spec.n_train = 256;
@@ -139,8 +140,8 @@ fn seeded_search(seed: u64, tag: &str, threads: usize) -> (SearchResult, Vec<(f6
         seed,
         ..SearchCfg::defaults(target, 0)
     };
-    let mut state = engine.init_state(9).unwrap();
-    let res = run_search(&mut engine, &mut state, &s_train, &s_val, &cfg, &mut logger).unwrap();
+    let mut state = exec.init_state(9).unwrap();
+    let res = run_search(&mut exec, &mut state, &s_train, &s_val, &cfg, &mut logger).unwrap();
 
     // parse (step, train_loss) pairs back out of log.jsonl
     let text = std::fs::read_to_string(dir.join("log.jsonl")).unwrap();

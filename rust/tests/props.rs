@@ -7,7 +7,7 @@ use ebs::bd::im2col::{im2col, same_pad};
 use ebs::bd::{pack_cols, pack_rows};
 use ebs::coordinator::{FlopsModel, Selection};
 use ebs::data::synth::{generate, SynthSpec};
-use ebs::data::Batcher;
+use ebs::data::EpochBatcher;
 use ebs::quant::{decode_weight, fake_quant_weights, quantize_acts, quantize_weights};
 use ebs::util::json::{parse, Json};
 use ebs::util::Rng;
@@ -118,7 +118,7 @@ fn prop_batcher_equal_coverage() {
         let mut rng = Rng::new(seed);
         let (ds, _) = generate(&SynthSpec::tiny(seed));
         let batch = 8 + 8 * rng.below(3);
-        let mut b = Batcher::new(&ds, batch, seed);
+        let mut b = EpochBatcher::new(&ds, batch, seed);
         let epochs = 3;
         // identify samples by their label + first-pixel fingerprint
         let total_batches = epochs * ds.len() / batch;
