@@ -33,6 +33,7 @@ DEFAULT_THRESHOLDS = (1.3, 1.5)
 # `bench` field).
 PER_BENCH_THRESHOLDS = {
     "serve": (1.6, 2.0),
+    "serve_gateway": (1.6, 2.0),
     "shard_search": (1.5, 2.0),
 }
 

@@ -1,16 +1,20 @@
 #!/usr/bin/env python3
-"""Smoke-test the `ebs serve` binary end to end.
+"""Smoke-test the `ebs serve` binary end to end (gateway tier).
 
-Starts the release binary on an ephemeral port with the deterministic
-synthetic network, discovers the input geometry via a `stats` request,
-fires a small concurrent load from several connections, asserts every
-response is well-formed, then requests graceful shutdown and requires
-the process to drain and exit 0.
+Starts the release binary on ephemeral ports with TWO deterministic
+synthetic models resident, discovers the input geometry via per-model
+`stats` requests, fires a small concurrent load against both models,
+performs one hot swap under that load (asserting the generation
+advances and nothing is dropped), scrapes the Prometheus endpoint over
+HTTP, asserts a v1 frame is refused with the versioned error, then
+requests graceful shutdown and requires the process to drain and
+exit 0.
 
 Usage: serve_smoke.py <path-to-ebs-binary>
 
-Wire format (DESIGN.md §13): every frame is [u32 LE len][payload];
-payloads are [u8 opcode][u32 LE request id][...].
+Wire format (DESIGN.md §15, protocol v2): every frame is
+[0xEB][0x02][u32 LE len][payload]; payloads are
+[u8 opcode][u32 LE request id][...]; strings are [u16 LE len][UTF-8].
 """
 
 import json
@@ -19,20 +23,37 @@ import subprocess
 import sys
 import threading
 
-OP_CLASSIFY, OP_STATS, OP_SHUTDOWN, OP_ERROR = 1, 2, 3, 0xFF
+MAGIC, VERSION = 0xEB, 0x02
+OP_CLASSIFY, OP_STATS, OP_SHUTDOWN, OP_METRICS, OP_LOAD, OP_ERROR = 1, 2, 3, 4, 5, 0xFF
+ERR_UNSUPPORTED_VERSION = 4
 
 CLIENTS = 4
 REQS_PER_CLIENT = 8
+MODELS = ["a", "b"]
 
 
 def frame(payload):
-    return struct.pack("<I", len(payload)) + payload
+    return struct.pack("<BBI", MAGIC, VERSION, len(payload)) + payload
 
 
-def classify_req(rid, count, floats):
-    body = struct.pack("<BII", OP_CLASSIFY, rid, count)
+def wire_str(s):
+    b = s.encode()
+    return struct.pack("<H", len(b)) + b
+
+
+def classify_req(rid, model, count, floats):
+    body = struct.pack("<BI", OP_CLASSIFY, rid) + wire_str(model)
+    body += struct.pack("<I", count)
     body += struct.pack(f"<{len(floats)}f", *floats)
     return frame(body)
+
+
+def stats_req(rid, model):
+    return frame(struct.pack("<BI", OP_STATS, rid) + wire_str(model))
+
+
+def load_req(rid, model, source):
+    return frame(struct.pack("<BI", OP_LOAD, rid) + wire_str(model) + wire_str(source))
 
 
 def simple_req(op, rid):
@@ -50,12 +71,13 @@ def recv_exact(sock, n):
 
 
 def read_frame(sock):
-    (ln,) = struct.unpack("<I", recv_exact(sock, 4))
+    magic, version, ln = struct.unpack("<BBI", recv_exact(sock, 6))
+    assert (magic, version) == (MAGIC, VERSION), f"bad response header {magic:#x}/{version:#x}"
     return recv_exact(sock, ln)
 
 
-def fetch_stats(sock, rid):
-    sock.sendall(simple_req(OP_STATS, rid))
+def fetch_stats(sock, rid, model):
+    sock.sendall(stats_req(rid, model))
     payload = read_frame(sock)
     op, got = struct.unpack("<BI", payload[:5])
     assert op == OP_STATS and got == rid, (op, got)
@@ -70,9 +92,10 @@ def client_load(host, port, t, img_sz, classes, errors):
             c.settimeout(30)
             for i in range(REQS_PER_CLIENT):
                 rid = t * 1000 + i
+                model = MODELS[(t + i) % len(MODELS)]
                 # deterministic pseudo-image; values in [0, 1)
                 floats = [((t * 31 + i * 7 + j) % 97) / 97.0 for j in range(img_sz)]
-                c.sendall(classify_req(rid, 1, floats))
+                c.sendall(classify_req(rid, model, 1, floats))
                 payload = read_frame(c)
                 op, got, count = struct.unpack("<BII", payload[:9])
                 assert op == OP_CLASSIFY, f"opcode {op:#x} for request {rid}"
@@ -83,6 +106,38 @@ def client_load(host, port, t, img_sz, classes, errors):
         errors.append((t, repr(e)))
 
 
+def check_v1_rejection(host, port):
+    """A bare length-prefixed (v1) frame must earn a versioned error."""
+    import socket
+
+    with socket.create_connection((host, port), timeout=30) as c:
+        c.settimeout(30)
+        c.sendall(struct.pack("<I", 5) + struct.pack("<BI", OP_STATS, 1))
+        payload = read_frame(c)
+        op, rid = struct.unpack("<BI", payload[:5])
+        code = payload[5]
+        assert (op, rid, code) == (OP_ERROR, 0, ERR_UNSUPPORTED_VERSION), (op, rid, code)
+        msg = payload[6:].decode()
+        assert "magic" in msg, f"error must carry the cause: {msg!r}"
+
+
+def scrape_metrics(host, port):
+    import socket
+
+    with socket.create_connection((host, port), timeout=30) as c:
+        c.settimeout(30)
+        c.sendall(b"GET /metrics HTTP/1.1\r\nHost: smoke\r\n\r\n")
+        buf = b""
+        while True:
+            chunk = c.recv(4096)
+            if not chunk:
+                break
+            buf += chunk
+    text = buf.decode()
+    assert text.startswith("HTTP/1.1 200 OK"), text[:100]
+    return text.split("\r\n\r\n", 1)[1]
+
+
 def main():
     import socket
 
@@ -91,22 +146,34 @@ def main():
         return 2
     proc = subprocess.Popen(
         [
-            sys.argv[1], "serve", "--synthetic",
-            "--addr", "127.0.0.1:0", "--workers", "2", "--max-batch", "8",
+            sys.argv[1], "serve",
+            "--model", "a=synthetic:11,b=synthetic:22",
+            "--addr", "127.0.0.1:0", "--metrics-addr", "127.0.0.1:0",
+            "--workers", "2", "--max-batch", "8",
         ],
         stdout=subprocess.PIPE,
     )
     try:
-        line = proc.stdout.readline().decode()
-        assert line.startswith("serving on "), f"unexpected banner: {line!r}"
-        host, port = line.strip().rsplit(" ", 1)[-1].rsplit(":", 1)
-        port = int(port)
+        # Banner order: "metrics on H:P" (when enabled), "serving on H:P".
+        metrics_hp = None
+        while True:
+            line = proc.stdout.readline().decode()
+            assert line, "server exited before printing its banner"
+            if line.startswith("metrics on "):
+                mh, mp = line.strip().rsplit(" ", 1)[-1].rsplit(":", 1)
+                metrics_hp = (mh, int(mp))
+            elif line.startswith("serving on "):
+                host, port = line.strip().rsplit(" ", 1)[-1].rsplit(":", 1)
+                port = int(port)
+                break
+        assert metrics_hp, "metrics banner must precede the serving banner"
 
         with socket.create_connection((host, port), timeout=30) as ctl:
             ctl.settimeout(30)
-            stats = fetch_stats(ctl, 1)
-            img_sz = int(stats["input_hw"]) ** 2 * int(stats["input_ch"])
-            classes = int(stats["classes"])
+            stats_a = fetch_stats(ctl, 1, "a")
+            img_sz = int(stats_a["input_hw"]) ** 2 * int(stats_a["input_ch"])
+            classes = int(stats_a["classes"])
+            assert int(stats_a["generation"]) >= 1, stats_a
 
             errors = []
             threads = [
@@ -115,25 +182,46 @@ def main():
             ]
             for th in threads:
                 th.start()
+            # Hot swap model "a" while the clients are firing.
+            ctl.sendall(load_req(2, "a", "synthetic:33"))
+            payload = read_frame(ctl)
+            op, rid = struct.unpack("<BI", payload[:5])
+            assert (op, rid) == (OP_LOAD, 2), (op, rid)
+            (generation,) = struct.unpack("<Q", payload[5:13])
+            assert generation >= 3, f"swap generation {generation} must exceed both publishes"
             for th in threads:
                 th.join()
             assert not errors, f"client failures: {errors}"
 
-            stats = fetch_stats(ctl, 2)
+            # Global stats: both models answered everything admitted.
+            total = fetch_stats(ctl, 3, "")
             want = CLIENTS * REQS_PER_CLIENT
-            assert int(stats["completed"]) >= want, stats
-            assert int(stats["batch_images_max"]) <= 8, stats
+            assert int(total["completed"]) >= want, total
+            assert int(total["admitted"]) == int(total["completed"]), total
+            assert int(total["batch_images_max"]) <= 8, total
+            assert set(MODELS) <= set(total["models"]), total["models"].keys()
+            swapped = fetch_stats(ctl, 4, "a")
+            assert int(swapped["swaps"]) == 1, swapped
+            assert int(swapped["generation"]) == generation, swapped
 
-            ctl.sendall(simple_req(OP_SHUTDOWN, 3))
+            # Prometheus scrape over HTTP.
+            body = scrape_metrics(*metrics_hp)
+            assert 'ebs_serve_swaps_total{model="a"} 1' in body, body
+            assert 'ebs_serve_requests_total{model="b",outcome="completed"}' in body, body
+
+            check_v1_rejection(host, port)
+
+            ctl.sendall(simple_req(OP_SHUTDOWN, 5))
             payload = read_frame(ctl)
-            op, got = struct.unpack("<BI", payload[:5])
-            assert (op, got) == (OP_SHUTDOWN, 3), (op, got)
+            op, rid = struct.unpack("<BI", payload[:5])
+            assert (op, rid) == (OP_SHUTDOWN, 5), (op, rid)
 
         rc = proc.wait(timeout=60)
         assert rc == 0, f"server exited {rc} after graceful shutdown"
         print(
-            f"[serve-smoke] OK: {want} concurrent requests answered, "
-            f"max batch {stats['batch_images_max']}, clean drain + exit 0"
+            f"[serve-smoke] OK: {want} requests over {len(MODELS)} models, "
+            f"1 hot swap (gen {generation}), metrics scraped, v1 frame refused, "
+            f"clean drain + exit 0"
         )
         return 0
     except BaseException:

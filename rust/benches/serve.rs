@@ -1,19 +1,27 @@
 //! Bench: serve-layer throughput/latency — micro-batch coalescing
-//! on/off × worker counts (DESIGN.md §13).
+//! on/off × worker counts, plus the gateway tier (multi-model fleets,
+//! hot swaps under load) (DESIGN.md §13, §15).
 //!
 //! Drives the serving core directly (no sockets — the wire layer is
 //! O(KB) memcpy and would only add runner noise): C closed-loop client
-//! threads each submit single-image requests against a deterministic
-//! synthetic BD network and wait for every reply.  "off" pins
+//! threads each submit single-image requests against deterministic
+//! synthetic BD networks and wait for every reply.  "off" pins
 //! `max_batch = 1` (every request rides its own GEMM); "on" lets the
 //! micro-batcher coalesce up to 32 images with a 200 µs open-batch
 //! deadline.  The coalesced configuration must beat single-request
 //! mode at concurrency ≥ 8 — that is the acceptance line this bench
 //! prints.
 //!
-//! Emits the §9 JSON envelope for `ci/compare_bench.py`:
+//! The gateway section sweeps resident-model counts {1, 2, 4} (clients
+//! round-robin across the fleet — worst case for the same-generation
+//! coalescer) and one configuration with 8 hot swaps fired mid-load;
+//! the swap row's acceptance line is zero dropped requests.
+//!
+//! Emits the §9 JSON envelope for `ci/compare_bench.py`, one file per
+//! bench name:
 //!
 //!   cargo bench --bench serve [-- --json BENCH_serve.json]
+//!                             [--json-gateway BENCH_serve_gateway.json]
 //!
 //! Env knobs: EBS_BENCH_REPS (median window, default 3),
 //! EBS_BENCH_REQS (total requests per config, default 512),
@@ -22,8 +30,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use ebs::bd::BdNetwork;
-use ebs::serve::{ServeCfg, ServeHandle};
+use ebs::serve::{no_loader, ServeCfg, ServeCore, ServeHandle};
 use ebs::util::json::Json;
 use ebs::util::Rng;
 
@@ -31,36 +38,43 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
-/// One measured run; returns (total_ms, p50_ms, p99_ms).
-fn run_once(
-    workers: usize,
-    coalesce: bool,
+fn bench_cfg(workers: usize, max_batch: usize, max_wait_us: u64) -> ServeCfg {
+    ServeCfg {
+        addr: String::new(), // core-level bench; no socket is bound
+        workers,
+        max_batch,
+        max_wait_us,
+        queue_depth: 2048,
+        metrics_addr: String::new(),
+    }
+}
+
+/// Closed-loop client sweep over a started handle; returns
+/// (total_ms, p50_ms, p99_ms).  `model_of(client, request)` names the
+/// target model per request (the single-model section pins it to the
+/// sole resident).
+fn drive(
+    handle: &Arc<ServeHandle>,
     clients: usize,
     per_client: usize,
     images: &Arc<Vec<f32>>,
     img_sz: usize,
+    model_of: impl Fn(usize, usize) -> String + Send + Sync + 'static,
 ) -> (f64, f64, f64) {
-    let net = BdNetwork::synthetic(0xEB5);
-    let cfg = ServeCfg {
-        addr: String::new(), // core-level bench; no socket is bound
-        workers,
-        max_batch: if coalesce { 32 } else { 1 },
-        max_wait_us: if coalesce { 200 } else { 0 },
-        queue_depth: 1024,
-    };
-    let handle = Arc::new(ServeHandle::start(net, cfg));
+    let model_of = Arc::new(model_of);
     let n_pool = images.len() / img_sz;
     let t0 = Instant::now();
     let mut joins = Vec::with_capacity(clients);
     for c in 0..clients {
-        let h = Arc::clone(&handle);
+        let h = Arc::clone(handle);
         let imgs = Arc::clone(images);
+        let model_of = Arc::clone(&model_of);
         joins.push(std::thread::spawn(move || {
             let mut lats = Vec::with_capacity(per_client);
             for i in 0..per_client {
                 let off = ((c * per_client + i) % n_pool) * img_sz;
                 let t = Instant::now();
-                let preds = h.classify(imgs[off..off + img_sz].to_vec(), 1).unwrap();
+                let preds = h.classify(&model_of(c, i), imgs[off..off + img_sz].to_vec(), 1).unwrap();
                 assert_eq!(preds.len(), 1);
                 lats.push(t.elapsed().as_secs_f64() * 1e3);
             }
@@ -72,12 +86,72 @@ fn run_once(
         lats.extend(j.join().unwrap());
     }
     let total_ms = t0.elapsed().as_secs_f64() * 1e3;
-    if let Ok(h) = Arc::try_unwrap(handle) {
-        h.shutdown();
-    }
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
     (total_ms, pct(0.50), pct(0.99))
+}
+
+/// One single-model run (the original §13 coalescing sweep).
+fn run_once(
+    workers: usize,
+    coalesce: bool,
+    clients: usize,
+    per_client: usize,
+    images: &Arc<Vec<f32>>,
+    img_sz: usize,
+) -> (f64, f64, f64) {
+    let cfg = bench_cfg(
+        workers,
+        if coalesce { 32 } else { 1 },
+        if coalesce { 200 } else { 0 },
+    );
+    let handle = Arc::new(ServeHandle::start_synthetic(0xEB5, cfg));
+    let result = drive(&handle, clients, per_client, images, img_sz, |_, _| String::new());
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
+    }
+    result
+}
+
+/// One gateway run: `models` residents, clients round-robin across
+/// them, optionally `swaps` hot swaps of model 0 fired mid-load.
+/// Returns (total_ms, p50_ms, p99_ms, dropped).
+fn run_gateway(
+    models: usize,
+    swaps: usize,
+    clients: usize,
+    per_client: usize,
+    images: &Arc<Vec<f32>>,
+    img_sz: usize,
+) -> (f64, f64, f64, u64) {
+    let core = ServeCore::new(bench_cfg(4, 32, 200), no_loader());
+    for m in 0..models {
+        core.registry.publish_synthetic(&format!("m{m}"), 0xEB5 + m as u64);
+    }
+    let handle = Arc::new(ServeHandle::start(Arc::clone(&core)));
+    let swapper = (swaps > 0).then(|| {
+        let core = Arc::clone(&core);
+        std::thread::spawn(move || {
+            for s in 0..swaps {
+                // Alternate generations so every swap really replaces
+                // the resident network.
+                core.load_model("m0", &format!("synthetic:{}", 0x5A50 + (s % 2) as u64)).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        })
+    });
+    let (total_ms, p50, p99) = drive(&handle, clients, per_client, images, img_sz, move |c, i| {
+        format!("m{}", (c + i) % models)
+    });
+    if let Some(j) = swapper {
+        j.join().unwrap();
+    }
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
+    }
+    let admitted = core.stats.admitted.load(std::sync::atomic::Ordering::Relaxed);
+    let completed = core.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
+    (total_ms, p50, p99, admitted - completed)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -86,9 +160,12 @@ fn main() -> anyhow::Result<()> {
     let clients = env_usize("EBS_BENCH_CLIENTS", 8).max(1);
     let per_client = (requests / clients).max(1);
     let json_path = ebs::util::cli::argv_value_flag("--json", "BENCH_serve.json");
+    let gateway_path =
+        ebs::util::cli::argv_value_flag("--json-gateway", "BENCH_serve_gateway.json");
 
-    // Shared request pool: 64 deterministic synthetic "images".
-    let probe = BdNetwork::synthetic(0xEB5);
+    // Shared request pool: 64 deterministic synthetic "images" (every
+    // synthetic net shares the 8×8×3 geometry).
+    let probe = ebs::bd::BdNetwork::synthetic(0xEB5);
     let img_sz = probe.input_hw * probe.input_hw * probe.input_ch;
     drop(probe);
     let mut rng = Rng::new(0x5E12);
@@ -157,6 +234,55 @@ fn main() -> anyhow::Result<()> {
             0,
             (0, 0),
             rows,
+        )?;
+        println!("# wrote {path}");
+    }
+
+    // Gateway section: resident-model sweep + a hot-swap-under-load
+    // configuration (8 swaps of model 0 while the fleet is saturated).
+    println!("# gateway — models × swaps, 4 workers, coalescing on");
+    println!(
+        "{:<8} {:<7} {:>10} {:>9} {:>9} {:>12} {:>9}",
+        "models", "swaps", "total ms", "p50 ms", "p99 ms", "req/s", "dropped"
+    );
+    let mut gw_rows = Vec::new();
+    for &(models, swaps) in &[(1usize, 0usize), (2, 0), (4, 0), (2, 8)] {
+        let mut runs: Vec<(f64, f64, f64, u64)> = (0..reps)
+            .map(|_| run_gateway(models, swaps, clients, per_client, &images, img_sz))
+            .collect();
+        runs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (total_ms, p50_ms, p99_ms, dropped) = runs[runs.len() / 2];
+        let rps = (clients * per_client) as f64 / (total_ms / 1e3);
+        println!(
+            "{:<8} {:<7} {:>10.1} {:>9.3} {:>9.3} {:>12.0} {:>9}",
+            models, swaps, total_ms, p50_ms, p99_ms, rps, dropped
+        );
+        if swaps > 0 {
+            println!(
+                "#   acceptance: {swaps} hot swaps under load, {dropped} dropped ({})",
+                if dropped == 0 { "PASS: zero downtime" } else { "DROPPED — investigate" }
+            );
+        }
+        gw_rows.push(Json::Obj(vec![
+            ("models".into(), Json::Num(models as f64)),
+            ("swaps".into(), Json::Num(swaps as f64)),
+            ("clients".into(), Json::Num(clients as f64)),
+            ("requests".into(), Json::Num((clients * per_client) as f64)),
+            ("total_ms".into(), Json::Num(total_ms)),
+            ("p50_ms".into(), Json::Num(p50_ms)),
+            ("p99_ms".into(), Json::Num(p99_ms)),
+            ("dropped".into(), Json::Num(dropped as f64)),
+        ]));
+    }
+
+    if let Some(path) = gateway_path {
+        ebs::util::json::write_bench_json(
+            std::path::Path::new(&path),
+            "serve_gateway",
+            reps,
+            0,
+            (0, 0),
+            gw_rows,
         )?;
         println!("# wrote {path}");
     }

@@ -1,0 +1,312 @@
+//! Versioned deployment artifacts — the one load/store path shared by
+//! `ebs deploy` (producer) and `ebs serve` (consumer); DESIGN.md §15.
+//!
+//! A deployment artifact is a directory holding the retrained
+//! checkpoint (`retrained.ckpt`) and the searched bitwidth selection
+//! (`selection.json`), sealed by a `deploy_manifest.json` that records
+//! the architecture name, a version label, per-file sha256 checksums,
+//! and the selection metadata (per-layer bitwidths + means) for
+//! fleet-side introspection without parsing the checkpoint.
+//!
+//! [`DeploymentArtifact::write`] hashes the files and emits the
+//! manifest; [`DeploymentArtifact::load`] re-verifies every checksum
+//! before anything touches the checkpoint bytes, failing with a typed
+//! [`ArtifactError`] (corrupt manifest / checksum mismatch / format
+//! version skew) so the serving tier can refuse a torn or tampered
+//! deployment *before* swapping it under live traffic.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Selection;
+use crate::runtime::{Manifest, StateVec};
+use crate::util::json::{parse, Json};
+use crate::util::sha256;
+
+use super::layer::BdMode;
+use super::network::BdNetwork;
+
+/// Manifest filename inside an artifact directory.
+pub const MANIFEST_FILE: &str = "deploy_manifest.json";
+
+/// Artifact format version; bump on incompatible manifest changes.
+pub const ARTIFACT_FORMAT: u64 = 1;
+
+/// Checkpoint filename (written by the pipeline, sealed by deploy).
+pub const CKPT_FILE: &str = "retrained.ckpt";
+
+/// Selection filename (written by search/pipeline, sealed by deploy).
+pub const SELECTION_FILE: &str = "selection.json";
+
+/// Why an artifact was rejected.  Typed so callers (the serve
+/// registry, tests) can distinguish corruption from skew without
+/// string-matching.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// `deploy_manifest.json` is absent — the directory was never
+    /// sealed by `ebs deploy`.
+    MissingManifest(PathBuf),
+    /// The manifest exists but does not parse / lacks required fields.
+    CorruptManifest { path: PathBuf, cause: String },
+    /// The manifest's `artifact_format` is not one this binary reads.
+    VersionSkew { found: u64, supported: u64 },
+    /// A file listed in the manifest is missing or unreadable.
+    MissingFile { file: String, cause: String },
+    /// A file's sha256 does not match the sealed checksum.
+    ChecksumMismatch { file: String, want: String, got: String },
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::MissingManifest(p) => {
+                write!(f, "no {MANIFEST_FILE} in {} (run `ebs deploy` to seal it)", p.display())
+            }
+            ArtifactError::CorruptManifest { path, cause } => {
+                write!(f, "corrupt {}: {cause}", path.display())
+            }
+            ArtifactError::VersionSkew { found, supported } => write!(
+                f,
+                "artifact format {found} is not supported (this binary reads format {supported})"
+            ),
+            ArtifactError::MissingFile { file, cause } => {
+                write!(f, "artifact file '{file}' unreadable: {cause}")
+            }
+            ArtifactError::ChecksumMismatch { file, want, got } => write!(
+                f,
+                "artifact file '{file}' checksum mismatch: manifest says sha256 {want}, file is {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// A verified deployment artifact: manifest metadata + the directory
+/// the (checksum-clean) files live in.
+#[derive(Debug, Clone)]
+pub struct DeploymentArtifact {
+    pub dir: PathBuf,
+    /// Architecture name (engine/model-registry key, e.g. `resnet8_tiny`).
+    pub model: String,
+    /// Version label; defaults to a checksum-derived tag on write.
+    pub version: String,
+    pub selection: Selection,
+    /// `(relative file, sha256 hex)` in manifest order.
+    pub files: Vec<(String, String)>,
+}
+
+impl DeploymentArtifact {
+    /// Seal `dir` (which must already contain [`CKPT_FILE`] and
+    /// [`SELECTION_FILE`]) into a versioned artifact: hash the files
+    /// and write [`MANIFEST_FILE`].  `version` may be empty, in which
+    /// case a content-derived label (`sha-<12 hex of the checkpoint>`)
+    /// is used, so re-deploying identical bytes yields an identical
+    /// version string.
+    pub fn write(dir: &Path, model: &str, version: &str) -> Result<DeploymentArtifact> {
+        let mut files = Vec::new();
+        for name in [CKPT_FILE, SELECTION_FILE] {
+            let digest = sha256::file_digest(&dir.join(name))
+                .with_context(|| format!("hashing {} in {}", name, dir.display()))?;
+            files.push((name.to_string(), digest));
+        }
+        let selection = Selection::load(&dir.join(SELECTION_FILE))?;
+        let version = if version.is_empty() {
+            format!("sha-{}", &files[0].1[..12])
+        } else {
+            version.to_string()
+        };
+        let (mw, mx) = selection.mean_bits();
+        let doc = Json::Obj(vec![
+            ("artifact_format".into(), Json::Num(ARTIFACT_FORMAT as f64)),
+            ("model".into(), Json::Str(model.to_string())),
+            ("version".into(), Json::Str(version.clone())),
+            ("created_by".into(), Json::Str(format!("ebs {}", env!("CARGO_PKG_VERSION")))),
+            ("mean_w_bits".into(), Json::Num(mw)),
+            ("mean_x_bits".into(), Json::Num(mx)),
+            ("selection".into(), selection.to_json()),
+            (
+                "files".into(),
+                Json::Obj(
+                    files.iter().map(|(n, d)| (n.clone(), Json::Str(d.clone()))).collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(dir.join(MANIFEST_FILE), doc.to_string())
+            .with_context(|| format!("writing {} in {}", MANIFEST_FILE, dir.display()))?;
+        Ok(DeploymentArtifact {
+            dir: dir.to_path_buf(),
+            model: model.to_string(),
+            version,
+            selection,
+            files,
+        })
+    }
+
+    /// Load and verify an artifact: parse the manifest, check the
+    /// format version, then re-hash every listed file against its
+    /// sealed checksum.  Nothing downstream (checkpoint decode, net
+    /// assembly) runs unless every byte verifies.
+    pub fn load(dir: &Path) -> std::result::Result<DeploymentArtifact, ArtifactError> {
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = match std::fs::read_to_string(&mpath) {
+            Ok(t) => t,
+            Err(_) => return Err(ArtifactError::MissingManifest(dir.to_path_buf())),
+        };
+        let corrupt = |cause: String| ArtifactError::CorruptManifest {
+            path: mpath.clone(),
+            cause,
+        };
+        let doc = parse(&text).map_err(|e| corrupt(format!("{e:#}")))?;
+        let format = doc
+            .req("artifact_format")
+            .and_then(|v| v.as_u64())
+            .map_err(|e| corrupt(format!("{e:#}")))?;
+        if format != ARTIFACT_FORMAT {
+            return Err(ArtifactError::VersionSkew { found: format, supported: ARTIFACT_FORMAT });
+        }
+        let str_field = |key: &str| -> std::result::Result<String, ArtifactError> {
+            doc.req(key)
+                .and_then(|v| v.as_str().map(str::to_string))
+                .map_err(|e| corrupt(format!("{e:#}")))
+        };
+        let model = str_field("model")?;
+        let version = str_field("version")?;
+        let sel_json = doc.req("selection").map_err(|e| corrupt(format!("{e:#}")))?;
+        let sel_bits = |key: &str| -> std::result::Result<Vec<u32>, ArtifactError> {
+            sel_json
+                .req(key)
+                .and_then(|v| v.as_arr())
+                .map_err(|e| corrupt(format!("{e:#}")))?
+                .iter()
+                .map(|v| v.as_usize().map(|b| b as u32).map_err(|e| corrupt(format!("{e:#}"))))
+                .collect()
+        };
+        let selection = Selection { w_bits: sel_bits("w_bits")?, x_bits: sel_bits("x_bits")? };
+        let files_obj = doc
+            .req("files")
+            .and_then(|v| v.as_obj().map(|o| o.to_vec()))
+            .map_err(|e| corrupt(format!("{e:#}")))?;
+        let mut files = Vec::with_capacity(files_obj.len());
+        for (name, v) in &files_obj {
+            let want = v
+                .as_str()
+                .map_err(|e| corrupt(format!("checksum for '{name}': {e:#}")))?
+                .to_string();
+            let got = sha256::file_digest(&dir.join(name)).map_err(|e| {
+                ArtifactError::MissingFile { file: name.clone(), cause: e.to_string() }
+            })?;
+            if got != want {
+                return Err(ArtifactError::ChecksumMismatch { file: name.clone(), want, got });
+            }
+            files.push((name.clone(), want));
+        }
+        Ok(DeploymentArtifact { dir: dir.to_path_buf(), model, version, selection, files })
+    }
+
+    /// Assemble the deployable [`BdNetwork`] from the verified files.
+    /// `manifest` is the runtime manifest of [`Self::model`] (callers
+    /// open the engine; this module stays transport- and backend-free).
+    pub fn build_network(&self, manifest: &Manifest, mode: BdMode) -> Result<BdNetwork> {
+        let state = StateVec::load(&self.dir.join(CKPT_FILE), &manifest.state_spec)
+            .with_context(|| format!("loading {} from {}", CKPT_FILE, self.dir.display()))?;
+        BdNetwork::from_state(manifest, &state, &self.selection, mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ebs_artifact_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Write a minimal artifact dir: a junk checkpoint (checksums do
+    /// not care about content) and a real selection.json.
+    fn seed_dir(tag: &str) -> PathBuf {
+        let d = scratch_dir(tag);
+        std::fs::write(d.join(CKPT_FILE), b"not-a-real-checkpoint").unwrap();
+        Selection { w_bits: vec![2, 3], x_bits: vec![4, 2] }
+            .save(&d.join(SELECTION_FILE))
+            .unwrap();
+        d
+    }
+
+    #[test]
+    fn write_then_load_roundtrips_and_verifies() {
+        let d = seed_dir("roundtrip");
+        let written = DeploymentArtifact::write(&d, "resnet8_tiny", "").unwrap();
+        assert!(written.version.starts_with("sha-"), "content-derived label: {}", written.version);
+        let loaded = DeploymentArtifact::load(&d).unwrap();
+        assert_eq!(loaded.model, "resnet8_tiny");
+        assert_eq!(loaded.version, written.version);
+        assert_eq!(loaded.selection.w_bits, vec![2, 3]);
+        assert_eq!(loaded.files.len(), 2);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn tampered_file_is_rejected_with_checksum_mismatch() {
+        let d = seed_dir("tamper");
+        DeploymentArtifact::write(&d, "m", "v1").unwrap();
+        std::fs::write(d.join(CKPT_FILE), b"tampered-after-sealing").unwrap();
+        match DeploymentArtifact::load(&d) {
+            Err(ArtifactError::ChecksumMismatch { file, want, got }) => {
+                assert_eq!(file, CKPT_FILE);
+                assert_ne!(want, got);
+            }
+            other => panic!("tampered checkpoint must fail checksum, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn corrupt_manifest_and_version_skew_are_typed() {
+        let d = seed_dir("corrupt");
+        std::fs::write(d.join(MANIFEST_FILE), b"{ not json").unwrap();
+        assert!(matches!(
+            DeploymentArtifact::load(&d),
+            Err(ArtifactError::CorruptManifest { .. })
+        ));
+        std::fs::write(
+            d.join(MANIFEST_FILE),
+            r#"{"artifact_format": 999, "model": "m", "version": "v"}"#,
+        )
+        .unwrap();
+        match DeploymentArtifact::load(&d) {
+            Err(ArtifactError::VersionSkew { found, supported }) => {
+                assert_eq!((found, supported), (999, ARTIFACT_FORMAT));
+            }
+            other => panic!("future format must be refused, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn unsealed_dir_reports_missing_manifest() {
+        let d = seed_dir("unsealed");
+        assert!(matches!(
+            DeploymentArtifact::load(&d),
+            Err(ArtifactError::MissingManifest(_))
+        ));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_listed_file_is_typed() {
+        let d = seed_dir("missing");
+        DeploymentArtifact::write(&d, "m", "v1").unwrap();
+        std::fs::remove_file(d.join(SELECTION_FILE)).unwrap();
+        assert!(matches!(
+            DeploymentArtifact::load(&d),
+            Err(ArtifactError::MissingFile { .. })
+        ));
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -14,6 +14,7 @@
 //! intermediate buffer lives in a reusable [`BdScratch`]/`NetScratch`
 //! so steady-state inference is allocation-free.
 
+pub mod artifact;
 pub mod bitplane;
 pub mod gemm;
 pub mod im2col;
@@ -22,6 +23,7 @@ pub mod network;
 pub mod reference;
 pub mod scratch;
 
+pub use artifact::{ArtifactError, DeploymentArtifact};
 pub use bitplane::{pack_cols, pack_cols_into, pack_rows, BitMatrix};
 pub use gemm::GemmTiles;
 pub use layer::{BdConvLayer, BdEngineCfg, BdExec, BdMode};

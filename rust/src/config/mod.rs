@@ -88,8 +88,9 @@ pub struct NativeConfig {
 }
 
 /// Serve-layer configuration (`[serve]` section; `ebs serve` flags
-/// `--addr/--workers/--max-batch/--max-wait-us/--queue-depth`
-/// override).  Defaults live on [`crate::serve::ServeCfg`].
+/// `--addr/--workers/--max-batch/--max-wait-us/--queue-depth/`
+/// `--metrics-addr` override).  Defaults live on
+/// [`crate::serve::ServeCfg`].
 fn serve_cfg(doc: &TomlDoc) -> crate::serve::ServeCfg {
     let d = crate::serve::ServeCfg::default();
     crate::serve::ServeCfg {
@@ -98,6 +99,7 @@ fn serve_cfg(doc: &TomlDoc) -> crate::serve::ServeCfg {
         max_batch: doc.usize_or("serve.max_batch", d.max_batch),
         max_wait_us: doc.i64_or("serve.max_wait_us", d.max_wait_us as i64).max(0) as u64,
         queue_depth: doc.usize_or("serve.queue_depth", d.queue_depth),
+        metrics_addr: doc.str_or("serve.metrics_addr", &d.metrics_addr).to_string(),
     }
 }
 
@@ -121,6 +123,10 @@ pub struct RunConfig {
     pub bd: BdDeployConfig,
     pub native: NativeConfig,
     pub serve: crate::serve::ServeCfg,
+    /// `NAME=SOURCE` model specs for `ebs serve` (`serve.models` array;
+    /// the `--model` CSV flag overrides).  SOURCE is a deployment
+    /// artifact directory or `synthetic:SEED`.
+    pub serve_models: Vec<String>,
     pub doc: TomlDoc,
 }
 
@@ -208,6 +214,7 @@ impl RunConfig {
             bd,
             native: NativeConfig { threads: doc.usize_or("native.threads", 0) },
             serve: serve_cfg(&doc),
+            serve_models: doc.str_array("serve.models").unwrap_or_default(),
             doc,
         }
     }
@@ -300,6 +307,8 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.serve.max_batch, 32);
         assert_eq!(cfg.serve.max_wait_us, 500);
         assert_eq!(cfg.serve.queue_depth, 256);
+        assert_eq!(cfg.serve.metrics_addr, "", "metrics endpoint defaults off");
+        assert!(cfg.serve_models.is_empty(), "no default model specs");
         let cfg = RunConfig::from_doc(
             parse(
                 r#"
@@ -309,6 +318,8 @@ workers = 2
 max_batch = 8
 max_wait_us = 1500
 queue_depth = 64
+metrics_addr = "127.0.0.1:9100"
+models = ["a=synthetic:11", "b=runs/r1/deploy"]
 "#,
             )
             .unwrap(),
@@ -318,6 +329,8 @@ queue_depth = 64
         assert_eq!(cfg.serve.max_batch, 8);
         assert_eq!(cfg.serve.max_wait_us, 1500);
         assert_eq!(cfg.serve.queue_depth, 64);
+        assert_eq!(cfg.serve.metrics_addr, "127.0.0.1:9100");
+        assert_eq!(cfg.serve_models, vec!["a=synthetic:11", "b=runs/r1/deploy"]);
     }
 
     #[test]

@@ -15,10 +15,11 @@
 //! Most subcommands take `--config configs/<name>.toml`; flags override.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use ebs::bd::{BdExec, BdMode, BdNetwork};
+use ebs::bd::{BdExec, BdMode, BdNetwork, DeploymentArtifact};
 use ebs::config::RunConfig;
 use ebs::coordinator::{
     run_pipeline, run_search, FlopsModel, PipelineCfg, RunLogger, Selection,
@@ -37,11 +38,16 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
   pipeline        full Fig. 1 pipeline (pretrain → search → retrain → eval)
   search          bilevel bitwidth search only; writes selection.json
                   [--shards N] [--ckpt-every N] [--resume <search_resume.ckpt>]
-  deploy          BD-engine inference from a pipeline run directory
+  deploy          BD-engine inference from a pipeline run directory; seals the
+                  run dir into a versioned deployment artifact
                   [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
-  serve           long-lived micro-batching BD inference server (DESIGN.md §13)
-                  [--addr H:P] [--workers N] [--max-batch N] [--max-wait-us N]
-                  [--queue-depth N] [--synthetic] [--stdin] [--exec ...]
+                  [--version LABEL]
+  serve           multi-model micro-batching BD inference server (DESIGN.md
+                  §13, §15): versioned protocol v2, hot swaps, telemetry
+                  [--model NAME=SRC,...] (SRC = artifact dir | synthetic:SEED)
+                  [--addr H:P] [--metrics-addr H:P] [--workers N]
+                  [--max-batch N] [--max-wait-us N] [--queue-depth N]
+                  [--synthetic] [--stdin] [--exec ...]
   report-table1   Table 1 + Fig. 5 rows (Tables 2/5 via imagenet configs)
   report-table3   Table 3 search-efficiency comparison [--models a,b] [--iters N]
   report-table4   Table 4 BD latency [--reps N] [--extended] [--json file]
@@ -249,13 +255,19 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Assemble the deployable BD network from a pipeline run directory
-/// (`--run-dir`, default `<out>/pipeline_<model>`) — shared by
-/// `deploy` and `serve` so the checkpoint layout lives in one place.
-fn load_bd_network(args: &Args, cfg: &RunConfig, mode: BdMode, who: &str) -> Result<BdNetwork> {
-    let run_dir = PathBuf::from(
+/// The pipeline run directory a deploy/serve subcommand operates on
+/// (`--run-dir`, default `<out>/pipeline_<model>`).
+fn run_dir_of(args: &Args, cfg: &RunConfig) -> PathBuf {
+    PathBuf::from(
         args.flag_or("run-dir", &format!("{}/pipeline_{}", cfg.out_dir.display(), cfg.model)),
-    );
+    )
+}
+
+/// Assemble the deployable BD network from a pipeline run directory —
+/// shared by `deploy` and `serve` so the checkpoint layout lives in
+/// one place.
+fn load_bd_network(args: &Args, cfg: &RunConfig, mode: BdMode, who: &str) -> Result<BdNetwork> {
+    let run_dir = run_dir_of(args, cfg);
     let engine = open_engine(cfg)?;
     let state = StateVec::load(&run_dir.join("retrained.ckpt"), &engine.manifest.state_spec)
         .with_context(|| format!("{who} needs a pipeline run dir with retrained.ckpt"))?;
@@ -304,6 +316,20 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         n as f64 / dt,
         net.packed_bytes() as f64 / 1024.0
     );
+
+    // Seal the run dir into a versioned deployment artifact: hash the
+    // checkpoint + selection and write deploy_manifest.json, the unit
+    // `ebs serve --model NAME=<dir>` loads (and checksum-verifies).
+    let run_dir = run_dir_of(args, &cfg);
+    let art = DeploymentArtifact::write(&run_dir, &cfg.model, args.flag_or("version", ""))?;
+    println!(
+        "sealed artifact {} (version {}, {} files); serve with --model {}={}",
+        run_dir.display(),
+        art.version,
+        art.files.len(),
+        cfg.model,
+        run_dir.display()
+    );
     Ok(())
 }
 
@@ -313,21 +339,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(a) = args.flag("addr") {
         scfg.addr = a.to_string();
     }
+    if let Some(m) = args.flag("metrics-addr") {
+        scfg.metrics_addr = m.to_string();
+    }
     if let Some(w) = args.flag("workers") {
         scfg.workers = w.parse().context("--workers must be an integer")?;
     }
     scfg.max_batch = args.usize_flag("max-batch", scfg.max_batch)?.max(1);
     scfg.max_wait_us = args.usize_flag("max-wait-us", scfg.max_wait_us as usize)? as u64;
     scfg.queue_depth = args.usize_flag("queue-depth", scfg.queue_depth)?;
-
-    // Model: a retrained pipeline run dir, or --synthetic for a
-    // deterministic artifact-free smoke network (CI uses this).
-    let mut net = if args.has_switch("synthetic") {
-        eprintln!("[serve] synthetic network (seed {})", cfg.seed);
-        BdNetwork::synthetic(cfg.seed as u64)
-    } else {
-        load_bd_network(args, &cfg, BdMode::Fused, "serve (or pass --synthetic)")?
-    };
 
     // BD engine knobs ride the same `[bd]` config/flags as `deploy`,
     // with one serve-specific rule: the serve workers are already the
@@ -343,8 +363,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if bd_cfg.threads == 0 {
         bd_cfg.threads = (ebs::kernels::auto_threads() / workers).max(1);
     }
-    net.set_engine_cfg(bd_cfg.engine_cfg());
-    net.batch_chunk = bd_cfg.batch_chunk.max(1);
+
+    // The artifact loader used for `--model NAME=<dir>` specs and for
+    // hot-swap `load` requests over the wire: verify checksums, open
+    // the runtime manifest of the architecture the artifact names,
+    // assemble the BD net with the same engine knobs as above.
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    let backend = cfg.backend;
+    let loader_bd = bd_cfg.clone();
+    let loader: ebs::serve::ModelLoader = Arc::new(move |source: &str| {
+        let art = DeploymentArtifact::load(Path::new(source))?;
+        let engine = Engine::open_with(&artifacts_dir.join(&art.model), backend)?;
+        let mut net = art.build_network(&engine.manifest, BdMode::Fused)?;
+        net.set_engine_cfg(loader_bd.engine_cfg());
+        net.batch_chunk = loader_bd.batch_chunk.max(1);
+        Ok(ebs::serve::LoadedModel { version: art.version, net })
+    });
 
     eprintln!(
         "[serve] workers={workers} max_batch={} max_wait_us={} queue_depth={} \
@@ -355,10 +389,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         format!("{:?}", bd_cfg.exec).to_lowercase(),
         bd_cfg.threads,
     );
-    if args.has_switch("stdin") {
-        ebs::serve::server::run_stdio(net, scfg)
+    let core = ebs::serve::ServeCore::new(scfg, loader);
+
+    // Resident models, in precedence order: `--model NAME=SRC,...`
+    // specs, the `[serve] models` config array, `--synthetic`, then
+    // the legacy single-model pipeline run dir.
+    let publish_spec = |name: &str, source: &str| -> Result<()> {
+        let resident = if let Some(seed) = source.strip_prefix("synthetic:") {
+            let seed: u64 =
+                seed.parse().with_context(|| format!("bad synthetic seed in '{source}'"))?;
+            let mut net = BdNetwork::synthetic(seed);
+            net.set_engine_cfg(bd_cfg.engine_cfg());
+            net.batch_chunk = bd_cfg.batch_chunk.max(1);
+            core.registry.publish(name, source, source, net)
+        } else {
+            core.load_model(name, source)?
+        };
+        eprintln!(
+            "[serve] model '{}' version {} (gen {}) from {}",
+            resident.name, resident.version, resident.generation, resident.source
+        );
+        Ok(())
+    };
+    let specs: Vec<String> = match args.flag("model") {
+        Some(m) if m.contains('=') => split_csv(m),
+        _ => cfg.serve_models.clone(),
+    };
+    if !specs.is_empty() {
+        for spec in &specs {
+            let (name, source) = spec
+                .split_once('=')
+                .with_context(|| format!("model spec '{spec}' must be NAME=SOURCE"))?;
+            publish_spec(name, source)?;
+        }
+    } else if args.has_switch("synthetic") {
+        publish_spec("default", &format!("synthetic:{}", cfg.seed))?;
     } else {
-        ebs::serve::server::Server::bind(net, scfg)?.run()
+        let mut net = load_bd_network(
+            args,
+            &cfg,
+            BdMode::Fused,
+            "serve (or pass --synthetic / --model NAME=SOURCE)",
+        )?;
+        net.set_engine_cfg(bd_cfg.engine_cfg());
+        net.batch_chunk = bd_cfg.batch_chunk.max(1);
+        let source = run_dir_of(args, &cfg).display().to_string();
+        let resident = core.registry.publish("default", "run-dir", &source, net);
+        eprintln!(
+            "[serve] model '{}' (gen {}) from {}",
+            resident.name, resident.generation, resident.source
+        );
+    }
+
+    if args.has_switch("stdin") {
+        ebs::serve::server::run_stdio(core)
+    } else {
+        ebs::serve::server::Server::bind(core)?.run()
     }
 }
 

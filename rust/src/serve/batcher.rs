@@ -1,25 +1,36 @@
 //! Dynamic micro-batcher — the coalescing policy of the serve layer
-//! (DESIGN.md §13).
+//! (DESIGN.md §13, §15).
 //!
 //! A worker opens a batch by blocking on the queue; once the first
 //! request is in hand it extends the batch with further *whole*
-//! requests until the image budget (`max_batch`) is met, the front
-//! request no longer fits, or `max_wait` elapses.  Requests are never
+//! requests of the *same model generation* until the image budget
+//! (`max_batch`) is met, the front request no longer fits (too big, or
+//! a different generation), or `max_wait` elapses.  Requests are never
 //! split across batches (each reply maps to one `classify_batch_with`
 //! slice), and an oversized request (count > `max_batch`) opens a
 //! batch of its own — `BdNetwork` chunks internally by `batch_chunk`,
 //! so nothing breaks, the coalescer just stops extending.
 //!
+//! The same-generation rule is what keeps hot swaps bit-exact: every
+//! executed batch runs wholly on one [`ResidentModel`]'s network, so
+//! each response equals a direct `classify_batch` on whichever
+//! generation admitted it — across a swap, clients see only
+//! old-net-exact or new-net-exact answers, never a blend.
+//!
 //! Coalescing is off when `max_batch == 1` (every request rides alone;
 //! the serve bench sweeps this on/off axis).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::queue::{ClassifyRequest, PopFit, RequestQueue};
+use super::registry::ResidentModel;
 
-/// One coalesced unit of work: whole requests, concatenated in arrival
-/// order, `images` total images.
+/// One coalesced unit of work: whole requests of one model generation,
+/// concatenated in arrival order, `images` total images.
 pub struct MicroBatch {
+    /// The generation every request in this batch bound at admission.
+    pub model: Arc<ResidentModel>,
     pub requests: Vec<ClassifyRequest>,
     pub images: usize,
 }
@@ -29,32 +40,39 @@ pub struct MicroBatch {
 pub fn next_batch(queue: &RequestQueue, max_batch: usize, max_wait: Duration) -> Option<MicroBatch> {
     let first = queue.pop_blocking()?;
     let max_batch = max_batch.max(1);
+    let model = Arc::clone(&first.model);
     let mut images = first.count;
     let mut requests = vec![first];
     let deadline = Instant::now() + max_wait;
     while images < max_batch {
-        match queue.pop_fitting_deadline(max_batch - images, deadline) {
+        match queue.pop_fitting_deadline(max_batch - images, model.generation, deadline) {
             PopFit::Got(req) => {
                 images += req.count;
                 requests.push(req);
             }
-            PopFit::TooBig | PopFit::Empty => break,
+            PopFit::NoFit | PopFit::Empty => break,
         }
     }
-    Some(MicroBatch { requests, images })
+    Some(MicroBatch { model, requests, images })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::registry::ModelRegistry;
 
-    fn req(count: usize) -> ClassifyRequest {
+    fn req(model: &Arc<ResidentModel>, count: usize) -> ClassifyRequest {
         ClassifyRequest {
+            model: Arc::clone(model),
             images: vec![0.0; count],
             count,
             enqueued: Instant::now(),
             reply: Box::new(|_| {}),
         }
+    }
+
+    fn one_model() -> Arc<ResidentModel> {
+        ModelRegistry::new().publish_synthetic("m", 5)
     }
 
     fn counts(b: &MicroBatch) -> Vec<usize> {
@@ -66,11 +84,12 @@ mod tests {
     /// never dropped.
     #[test]
     fn backlog_fills_to_exactly_max_batch_and_boundary_request_waits() {
+        let m = one_model();
         let q = RequestQueue::new(16);
         for _ in 0..4 {
-            q.push(req(1)).unwrap();
+            q.push(req(&m, 1)).unwrap();
         }
-        q.push(req(1)).unwrap(); // the boundary request
+        q.push(req(&m, 1)).unwrap(); // the boundary request
         let b = next_batch(&q, 4, Duration::ZERO).unwrap();
         assert_eq!(b.images, 4, "batch closes exactly at max_batch");
         assert_eq!(counts(&b), vec![1, 1, 1, 1]);
@@ -82,10 +101,11 @@ mod tests {
     /// left whole for the next batch.
     #[test]
     fn never_splits_a_request() {
+        let m = one_model();
         let q = RequestQueue::new(16);
-        q.push(req(1)).unwrap();
-        q.push(req(1)).unwrap();
-        q.push(req(3)).unwrap();
+        q.push(req(&m, 1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
+        q.push(req(&m, 3)).unwrap();
         let b = next_batch(&q, 4, Duration::ZERO).unwrap();
         assert_eq!(counts(&b), vec![1, 1], "count-3 request must not be split into budget 2");
         let b2 = next_batch(&q, 4, Duration::ZERO).unwrap();
@@ -95,21 +115,46 @@ mod tests {
     /// An oversized request (> max_batch images) is served alone.
     #[test]
     fn oversized_request_rides_alone() {
+        let m = one_model();
         let q = RequestQueue::new(16);
-        q.push(req(7)).unwrap();
-        q.push(req(1)).unwrap();
+        q.push(req(&m, 7)).unwrap();
+        q.push(req(&m, 1)).unwrap();
         let b = next_batch(&q, 4, Duration::ZERO).unwrap();
         assert_eq!(counts(&b), vec![7]);
         let b2 = next_batch(&q, 4, Duration::ZERO).unwrap();
         assert_eq!(counts(&b2), vec![1]);
     }
 
+    /// Mixed-model traffic never shares a batch: requests bound to
+    /// different models (or generations of one model) split at the
+    /// boundary, in queue order.
+    #[test]
+    fn batches_never_mix_models_or_generations() {
+        let reg = ModelRegistry::new();
+        let a = reg.publish_synthetic("a", 1);
+        let b = reg.publish_synthetic("b", 2);
+        let q = RequestQueue::new(16);
+        q.push(req(&a, 1)).unwrap();
+        q.push(req(&a, 1)).unwrap();
+        q.push(req(&b, 1)).unwrap();
+        q.push(req(&a, 1)).unwrap();
+        let b1 = next_batch(&q, 8, Duration::ZERO).unwrap();
+        assert_eq!(b1.model.name, "a");
+        assert_eq!(counts(&b1), vec![1, 1], "stops at the model boundary");
+        let b2 = next_batch(&q, 8, Duration::ZERO).unwrap();
+        assert_eq!(b2.model.name, "b");
+        assert_eq!(counts(&b2), vec![1]);
+        let b3 = next_batch(&q, 8, Duration::ZERO).unwrap();
+        assert_eq!((b3.model.name.as_str(), b3.images), ("a", 1));
+    }
+
     /// max_batch = 1 disables coalescing entirely.
     #[test]
     fn max_batch_one_is_single_request_mode() {
+        let m = one_model();
         let q = RequestQueue::new(16);
-        q.push(req(1)).unwrap();
-        q.push(req(1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
         let b = next_batch(&q, 1, Duration::from_millis(50)).unwrap();
         assert_eq!(counts(&b), vec![1]);
         assert_eq!(q.len(), 1, "second request untouched");
@@ -119,12 +164,14 @@ mod tests {
     /// batch is open.
     #[test]
     fn open_batch_waits_for_late_arrivals() {
+        let m = one_model();
         let q = std::sync::Arc::new(RequestQueue::new(16));
-        q.push(req(1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
         let q2 = std::sync::Arc::clone(&q);
+        let m2 = Arc::clone(&m);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
-            q2.push(req(2)).unwrap();
+            q2.push(req(&m2, 2)).unwrap();
         });
         let b = next_batch(&q, 8, Duration::from_millis(500)).unwrap();
         h.join().unwrap();
@@ -134,8 +181,9 @@ mod tests {
     /// Closed + drained queue ends the worker loop.
     #[test]
     fn closed_drained_queue_returns_none() {
+        let m = one_model();
         let q = RequestQueue::new(4);
-        q.push(req(1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
         q.close();
         assert!(next_batch(&q, 4, Duration::ZERO).is_some(), "queued request still served");
         assert!(next_batch(&q, 4, Duration::ZERO).is_none(), "then the loop ends");

@@ -1,39 +1,46 @@
-//! `ebs serve` — long-lived concurrent micro-batching serve layer for
-//! the BD deployment engine (DESIGN.md §13).
+//! `ebs serve` — gateway-grade multi-model serving node for the BD
+//! deployment engine (DESIGN.md §13, §15).
 //!
-//! The PR 1 batched engine made one `classify_batch` call cheap; this
-//! layer makes it *shared*: concurrent callers submit independent
-//! classification requests, a dynamic micro-batcher coalesces them
-//! into batches of up to [`ServeCfg::max_batch`] images (waiting at
-//! most [`ServeCfg::max_wait_us`] once a batch is open), and a pool of
-//! workers — each holding the long-lived [`BdNetwork`] plus its own
-//! [`NetScratch`] — runs each coalesced batch through
-//! [`BdNetwork::classify_batch_with`], so steady-state serving is
-//! allocation-free inside the network exactly like the one-shot path
-//! (DESIGN.md §5).
+//! The PR 1 batched engine made one `classify_batch` call cheap; PR 4
+//! made it *shared* (concurrent callers, micro-batch coalescing,
+//! allocation-free workers); this layer makes it *operable*: N
+//! resident [`crate::bd::BdNetwork`]s keyed by model name, versioned
+//! artifacts ([`crate::bd::DeploymentArtifact`]) as the load path,
+//! atomic hot swaps under live traffic, and per-model telemetry.
 //!
 //! Layering (one module per stage):
-//! * [`queue`]    — bounded MPMC request queue: admission control
+//! * [`registry`]  — resident models, generation-counted `Arc` swap:
+//!   admissions bind a generation, in-flight work finishes on it.
+//! * [`telemetry`] — per-model counters + log2 histograms + the
+//!   Prometheus text rendering.
+//! * [`queue`]     — bounded MPMC request queue: admission control
 //!   (reject-on-full backpressure) + close-and-drain shutdown.
-//! * [`batcher`]  — the coalescing policy: whole-request packing up to
-//!   `max_batch` images with a deadline, never splitting a request.
-//! * [`worker`]   — the worker pool; thread counts resolve through
-//!   [`crate::kernels::resolve_threads`] like every other pool here.
-//! * [`protocol`] — the length-prefixed wire format (classify / stats
-//!   / shutdown), transport-agnostic (TCP or stdin/stdout).
-//! * [`server`]   — the front-end: TCP accept loop or a single
-//!   stdin/stdout session, graceful drain on shutdown.
+//! * [`batcher`]   — the coalescing policy: whole-request packing up
+//!   to `max_batch` images with a deadline, never splitting a request,
+//!   never mixing model generations in one batch.
+//! * [`worker`]    — the model-blind worker pool; thread counts
+//!   resolve through [`crate::kernels::resolve_threads`].
+//! * [`protocol`]  — the versioned wire format (v2: magic + version
+//!   header, model-addressed classify/stats, metrics, hot-swap load),
+//!   transport-agnostic (TCP or stdin/stdout).
+//! * [`server`]    — the front-end: TCP accept loop or a single
+//!   stdin/stdout session, optional HTTP metrics listener, graceful
+//!   drain on shutdown.
 //!
 //! Determinism: a coalesced batch is the concatenation of whole
-//! requests, and the batched forward is bit-identical per image at any
-//! batch composition and worker count (tests/par_gemm.rs), so served
-//! predictions are bit-identical to a direct [`BdNetwork::classify_batch`]
-//! call on the same inputs — regression-tested in tests/serve.rs.
+//! requests bound to one model generation, and the batched forward is
+//! bit-identical per image at any batch composition and worker count
+//! (tests/par_gemm.rs), so served predictions are bit-identical to a
+//! direct [`crate::bd::BdNetwork::classify_batch`] on whichever generation served
+//! them — across a hot swap, clients see only old-net-exact or
+//! new-net-exact answers (tests/serve.rs, tests/serve_gateway.rs).
 
 pub mod batcher;
 pub mod protocol;
 pub mod queue;
+pub mod registry;
 pub mod server;
+pub mod telemetry;
 pub mod worker;
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,13 +48,15 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::bd::BdNetwork;
 use crate::util::json::Json;
 
 use queue::{ClassifyRequest, PushError, ReplyFn, RequestQueue};
 use worker::WorkerPool;
+
+pub use registry::{LoadedModel, ModelRegistry, ResidentModel, ResolveError};
+pub use telemetry::ModelStats;
 
 /// Serve-layer configuration (`[serve]` TOML section; `ebs serve`
 /// flags override).
@@ -55,8 +64,9 @@ use worker::WorkerPool;
 pub struct ServeCfg {
     /// Listen address for the TCP front-end (port 0 = ephemeral).
     pub addr: String,
-    /// Worker threads, each holding its own [`NetScratch`]; 0 resolves
-    /// to the machine count ([`crate::kernels::resolve_threads`]).
+    /// Worker threads, each holding its own [`crate::bd::NetScratch`];
+    /// 0 resolves to the machine count
+    /// ([`crate::kernels::resolve_threads`]).
     pub workers: usize,
     /// Max images per coalesced batch (1 disables coalescing).
     pub max_batch: usize,
@@ -67,6 +77,9 @@ pub struct ServeCfg {
     /// Bounded queue depth in *requests*; pushes beyond this are
     /// rejected with an overloaded error (admission control).
     pub queue_depth: usize,
+    /// HTTP listen address for the Prometheus scrape endpoint; empty
+    /// disables it (the `metrics` protocol request always works).
+    pub metrics_addr: String,
 }
 
 impl Default for ServeCfg {
@@ -77,6 +90,7 @@ impl Default for ServeCfg {
             max_batch: 32,
             max_wait_us: 500,
             queue_depth: 256,
+            metrics_addr: String::new(),
         }
     }
 }
@@ -89,6 +103,9 @@ pub enum SubmitError {
     Overloaded,
     /// Server is draining; no new admissions.
     ShuttingDown,
+    /// The named model is not resident (or the empty default is
+    /// ambiguous) — see [`ModelRegistry::resolve`] for the detail.
+    UnknownModel,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -96,12 +113,14 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Overloaded => write!(f, "queue full (admission control)"),
             SubmitError::ShuttingDown => write!(f, "server shutting down"),
+            SubmitError::UnknownModel => write!(f, "model not resident"),
         }
     }
 }
 
-/// Per-request latency + throughput counters (lock-free; snapshot via
-/// the `stats` protocol request or [`ServeStats::to_json`]).
+/// Process-wide latency + throughput counters, aggregated across every
+/// model (per-model detail lives in [`ModelStats`]); snapshot via the
+/// `stats` protocol request or [`ServeCore::stats_json`].
 #[derive(Debug)]
 pub struct ServeStats {
     /// Requests admitted into the queue.
@@ -158,19 +177,14 @@ impl ServeStats {
         self.latency_us_max.fetch_max(us, Ordering::Relaxed);
     }
 
-    /// Counters + derived throughput/means as the `stats` response
-    /// payload.  `model` rows let wire clients discover the input
-    /// geometry (the smoke client sizes its requests from this).
-    pub fn to_json(&self, net: &BdNetwork) -> Json {
+    /// Process-wide counters + derived throughput/means.
+    pub fn to_json(&self) -> Json {
         let completed = self.completed.load(Ordering::Relaxed);
         let images = self.images.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let lat_sum = self.latency_us_sum.load(Ordering::Relaxed);
         let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
         Json::Obj(vec![
-            ("input_hw".into(), Json::Num(net.input_hw as f64)),
-            ("input_ch".into(), Json::Num(net.input_ch as f64)),
-            ("classes".into(), Json::Num(net.classes as f64)),
             ("admitted".into(), Json::Num(self.admitted.load(Ordering::Relaxed) as f64)),
             (
                 "rejected_full".into(),
@@ -205,53 +219,162 @@ impl ServeStats {
     }
 }
 
-/// The serving core: network + queue + stats, shared by every
+/// How the serving node loads a (non-synthetic) model source: the CLI
+/// wires [`crate::bd::DeploymentArtifact`] loading in here; tests wire
+/// whatever they need.  The argument is the source spec (artifact
+/// directory path); `synthetic:SEED` sources never reach the loader.
+pub type ModelLoader = Arc<dyn Fn(&str) -> Result<LoadedModel> + Send + Sync>;
+
+/// A loader for registry-only deployments (tests, benches): any
+/// non-synthetic source is an error.
+pub fn no_loader() -> ModelLoader {
+    Arc::new(|source: &str| {
+        bail!("no artifact loader wired (cannot load '{source}'); use synthetic:SEED")
+    })
+}
+
+/// The serving core: registry + queue + stats, shared by every
 /// connection and worker.  Transport-free — tests drive it directly.
 pub struct ServeCore {
-    pub net: Arc<BdNetwork>,
+    pub registry: Arc<ModelRegistry>,
     pub queue: Arc<RequestQueue>,
     pub stats: Arc<ServeStats>,
     pub cfg: ServeCfg,
+    loader: ModelLoader,
 }
 
 impl ServeCore {
-    /// Bytes→images conversion factor of the served model.
-    pub fn image_size(&self) -> usize {
-        self.net.input_hw * self.net.input_hw * self.net.input_ch
+    /// Assemble a core with an empty registry; publish models via
+    /// [`ServeCore::load_model`] / [`ModelRegistry::publish`] before
+    /// serving traffic.
+    pub fn new(cfg: ServeCfg, loader: ModelLoader) -> Arc<ServeCore> {
+        Arc::new(ServeCore {
+            registry: Arc::new(ModelRegistry::new()),
+            queue: Arc::new(RequestQueue::new(cfg.queue_depth)),
+            stats: Arc::new(ServeStats::default()),
+            cfg,
+            loader,
+        })
     }
 
-    /// Admission control + enqueue.  `reply` is invoked exactly once
-    /// with the per-image predictions when the batch containing this
-    /// request completes; on `Err` it is never invoked (the caller
-    /// still holds whatever it needs to report the rejection).
-    pub fn submit_with(&self, images: Vec<f32>, count: usize, reply: ReplyFn) -> Result<(), SubmitError> {
-        debug_assert_eq!(images.len(), count * self.image_size());
-        let req = ClassifyRequest { images, count, enqueued: Instant::now(), reply };
+    /// Load `source` (artifact dir, or `synthetic:SEED`) and publish
+    /// it as `name`'s next generation — first load and hot swap are
+    /// the same operation.
+    pub fn load_model(&self, name: &str, source: &str) -> Result<Arc<ResidentModel>> {
+        if name.is_empty() {
+            bail!("model name must be non-empty (spec is NAME=SOURCE)");
+        }
+        if let Some(seed) = source.strip_prefix("synthetic:") {
+            let seed: u64 = seed
+                .parse()
+                .with_context(|| format!("bad synthetic seed in '{source}'"))?;
+            return Ok(self.registry.publish_synthetic(name, seed));
+        }
+        let loaded = (self.loader)(source)
+            .with_context(|| format!("loading model '{name}' from '{source}'"))?;
+        Ok(self.registry.publish(name, &loaded.version, source, loaded.net))
+    }
+
+    /// Admission control + enqueue onto a *resolved* model generation.
+    /// `reply` is invoked exactly once with the per-image predictions
+    /// when the batch containing this request completes; on `Err` it
+    /// is never invoked (the caller still holds whatever it needs to
+    /// report the rejection).
+    pub fn submit_to(
+        &self,
+        model: &Arc<ResidentModel>,
+        images: Vec<f32>,
+        count: usize,
+        reply: ReplyFn,
+    ) -> Result<(), SubmitError> {
+        debug_assert_eq!(images.len(), count * model.image_size());
+        let req = ClassifyRequest {
+            model: Arc::clone(model),
+            images,
+            count,
+            enqueued: Instant::now(),
+            reply,
+        };
         match self.queue.push(req) {
             Ok(()) => {
                 self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                model.stats.admitted.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
-            Err((_, PushError::Full)) => {
+            Err((req, PushError::Full)) => {
                 self.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
+                req.model.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Overloaded)
             }
-            Err((_, PushError::Closed)) => {
+            Err((req, PushError::Closed)) => {
                 self.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+                req.model.stats.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::ShuttingDown)
             }
         }
     }
 
-    /// [`Self::submit_with`] wired to a channel: returns a receiver
-    /// that yields the predictions once the request's batch ran.
-    pub fn submit(&self, images: Vec<f32>, count: usize) -> Result<mpsc::Receiver<Vec<usize>>, SubmitError> {
+    /// Resolve + [`Self::submit_to`] wired to a channel: returns a
+    /// receiver that yields the predictions once the request's batch
+    /// ran.  `model` may be empty when exactly one model is resident.
+    pub fn submit(
+        &self,
+        model: &str,
+        images: Vec<f32>,
+        count: usize,
+    ) -> Result<mpsc::Receiver<Vec<usize>>, SubmitError> {
+        let resident = self.registry.resolve(model).map_err(|_| SubmitError::UnknownModel)?;
         let (tx, rx) = mpsc::channel();
-        self.submit_with(images, count, Box::new(move |preds| {
-            let _ = tx.send(preds);
-        }))?;
+        self.submit_to(
+            &resident,
+            images,
+            count,
+            Box::new(move |preds| {
+                let _ = tx.send(preds);
+            }),
+        )?;
         Ok(rx)
     }
+
+    /// The full `stats` document: process-wide counters plus one block
+    /// per resident model (name → geometry, counters, p50/p99, QPS,
+    /// generation).
+    pub fn stats_json(&self) -> Json {
+        let Json::Obj(mut fields) = self.stats.to_json() else { unreachable!() };
+        let models: Vec<(String, Json)> = self
+            .registry
+            .models()
+            .iter()
+            .map(|m| (m.name.clone(), model_block(m)))
+            .collect();
+        fields.push(("models".into(), Json::Obj(models)));
+        Json::Obj(fields)
+    }
+
+    /// One model's `stats` block (the model-addressed stats request).
+    pub fn model_stats_json(&self, name: &str) -> Result<Json, ResolveError> {
+        Ok(model_block(&self.registry.resolve(name)?))
+    }
+
+    /// The Prometheus text exposition body (the `metrics` request and
+    /// the HTTP scrape endpoint serve exactly this).
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::from(telemetry::prometheus_header());
+        for m in self.registry.models() {
+            telemetry::render_model(&mut out, &m.name, m.generation, &m.stats);
+        }
+        out
+    }
+}
+
+fn model_block(m: &Arc<ResidentModel>) -> Json {
+    let mut fields = vec![
+        ("version".into(), Json::Str(m.version.clone())),
+        ("source".into(), Json::Str(m.source.clone())),
+        ("generation".into(), Json::Num(m.generation as f64)),
+    ];
+    fields.extend(m.stats.to_json(&m.net));
+    Json::Obj(fields)
 }
 
 /// A started serving instance: core + running worker pool.
@@ -261,22 +384,26 @@ pub struct ServeHandle {
 }
 
 impl ServeHandle {
-    /// Spawn the worker pool over `net`.  The network's engine config
-    /// (exec/threads/tiles) should be set before starting.
-    pub fn start(net: BdNetwork, cfg: ServeCfg) -> ServeHandle {
-        let core = Arc::new(ServeCore {
-            net: Arc::new(net),
-            queue: Arc::new(RequestQueue::new(cfg.queue_depth)),
-            stats: Arc::new(ServeStats::default()),
-            cfg: cfg.clone(),
-        });
+    /// Spawn the worker pool over a prepared core.  Each network's
+    /// engine config (exec/threads/tiles) should be set before its
+    /// model is published.
+    pub fn start(core: Arc<ServeCore>) -> ServeHandle {
         let pool = WorkerPool::spawn(&core);
         ServeHandle { core, pool }
     }
 
-    /// Blocking convenience path: submit and wait for predictions.
-    pub fn classify(&self, images: Vec<f32>, count: usize) -> Result<Vec<usize>> {
-        let rx = match self.core.submit(images, count) {
+    /// Convenience: a single synthetic model named `default`, started.
+    /// What most unit tests want.
+    pub fn start_synthetic(seed: u64, cfg: ServeCfg) -> ServeHandle {
+        let core = ServeCore::new(cfg, no_loader());
+        core.registry.publish_synthetic("default", seed);
+        ServeHandle::start(core)
+    }
+
+    /// Blocking convenience path: submit to `model` (empty = sole
+    /// resident) and wait for predictions.
+    pub fn classify(&self, model: &str, images: Vec<f32>, count: usize) -> Result<Vec<usize>> {
+        let rx = match self.core.submit(model, images, count) {
             Ok(rx) => rx,
             Err(e) => bail!("request rejected: {e}"),
         };

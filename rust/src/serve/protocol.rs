@@ -1,27 +1,51 @@
-//! Length-prefixed wire protocol of `ebs serve` (DESIGN.md §13).
+//! Versioned wire protocol of `ebs serve` (protocol v2; DESIGN.md §15).
 //!
 //! Transport-agnostic: the same frames flow over TCP or stdin/stdout.
-//! Every message is `[u32 LE payload_len][payload]`; payloads start
-//! with a one-byte opcode and a `u32 LE` client-chosen request id that
-//! the matching response echoes (responses to pipelined requests may
-//! arrive out of order — different micro-batches complete at different
-//! times).
+//! Every frame is
+//!
+//! ```text
+//! [0xEB magic u8][version u8 = 0x02][payload_len u32 LE][payload]
+//! ```
+//!
+//! The magic + version header is what v1 lacked: a v1 frame (bare
+//! length prefix) or random noise now fails the magic check and gets a
+//! typed [`FrameError::UnsupportedVersion`] — the server answers with
+//! an `ERR_UNSUPPORTED_VERSION` error frame instead of a garbage
+//! decode.  Payloads start with a one-byte opcode and a `u32 LE`
+//! client-chosen request id echoed by the matching response (responses
+//! to pipelined requests may arrive out of order).  Strings are
+//! `[len u16 LE][UTF-8 bytes]`; an empty model string means "the sole
+//! resident model" (single-model deployments keep v1's ergonomics).
 //!
 //! Requests:
-//! * `0x01` classify — `[op][id][count u32][count·H·W·C f32 LE]`
-//! * `0x02` stats    — `[op][id]`
+//! * `0x01` classify — `[op][id][model str][count u32][count·H·W·C f32 LE]`
+//! * `0x02` stats    — `[op][id][model str]` (empty = all models)
 //! * `0x03` shutdown — `[op][id]` (graceful: queued work drains first)
+//! * `0x04` metrics  — `[op][id]` (Prometheus text exposition)
+//! * `0x05` load     — `[op][id][model str][source str]` (hot swap:
+//!   load `source` — artifact dir or `synthetic:SEED` — and publish it
+//!   as `model`'s next generation)
 //!
 //! Responses:
 //! * `0x01` classify — `[op][id][count u32][count u32-labels]`
-//! * `0x02` stats    — `[op][id][UTF-8 JSON]` (includes `input_hw` /
-//!   `input_ch` / `classes`, so clients can size requests)
+//! * `0x02` stats    — `[op][id][UTF-8 JSON]`
 //! * `0x03` shutdown ack — `[op][id]`
-//! * `0xFF` error    — `[op][id][code u8][UTF-8 message]`
+//! * `0x04` metrics  — `[op][id][UTF-8 text]`
+//! * `0x05` load ack — `[op][id][generation u64 LE][version str]`
+//! * `0xFF` error    — `[op][id][code u8][UTF-8 cause]` — the cause
+//!   message always carries the underlying reason, so a torn frame
+//!   (`ERR_MALFORMED_FRAME`), a stale client (`ERR_UNSUPPORTED_VERSION`)
+//!   and bad geometry (`ERR_BAD_REQUEST`) are distinguishable.
 
 use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
+
+/// First header byte of every v2 frame.
+pub const MAGIC: u8 = 0xEB;
+
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 0x02;
 
 /// Hard cap on a frame payload (a 32×32×3 float image is 12 KiB; this
 /// allows ~5k of them per request while bounding a bad header's damage).
@@ -30,18 +54,82 @@ pub const MAX_FRAME: usize = 64 << 20;
 pub const OP_CLASSIFY: u8 = 0x01;
 pub const OP_STATS: u8 = 0x02;
 pub const OP_SHUTDOWN: u8 = 0x03;
+pub const OP_METRICS: u8 = 0x04;
+pub const OP_LOAD: u8 = 0x05;
 pub const OP_ERROR: u8 = 0xFF;
 
 /// Error codes carried by `0xFF` responses.
 pub const ERR_OVERLOADED: u8 = 1;
 pub const ERR_SHUTTING_DOWN: u8 = 2;
 pub const ERR_BAD_REQUEST: u8 = 3;
+pub const ERR_UNSUPPORTED_VERSION: u8 = 4;
+pub const ERR_UNKNOWN_MODEL: u8 = 5;
+pub const ERR_MALFORMED_FRAME: u8 = 6;
+pub const ERR_LOAD_FAILED: u8 = 7;
+
+/// Why a frame could not be read.  Typed so the session layer can
+/// send the right error code (and the actual cause) before closing,
+/// instead of dying silently.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Bad magic or version byte — a v1 client, or line noise.
+    UnsupportedVersion { magic: u8, version: u8 },
+    /// The stream ended inside a frame (torn header or payload).
+    Truncated(String),
+    /// Header claims a payload beyond [`MAX_FRAME`].
+    Oversized(usize),
+    /// Transport failure (connection reset, ...).
+    Io(std::io::Error),
+}
+
+impl FrameError {
+    /// The wire error code a server should answer with.
+    pub fn error_code(&self) -> u8 {
+        match self {
+            FrameError::UnsupportedVersion { .. } => ERR_UNSUPPORTED_VERSION,
+            FrameError::Truncated(_) | FrameError::Oversized(_) | FrameError::Io(_) => {
+                ERR_MALFORMED_FRAME
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::UnsupportedVersion { magic, version } => write!(
+                f,
+                "unsupported frame header (magic 0x{magic:02x}, version 0x{version:02x}); \
+                 this server speaks v{VERSION} frames [0x{MAGIC:02x}][0x{VERSION:02x}][len u32]"
+            ),
+            FrameError::Truncated(what) => write!(f, "truncated frame: {what}"),
+            FrameError::Oversized(len) => {
+                write!(f, "frame of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated("stream ended inside the payload".into())
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Classify { id: u32, count: u32, images: Vec<f32> },
-    Stats { id: u32 },
+    Classify { id: u32, model: String, count: u32, images: Vec<f32> },
+    Stats { id: u32, model: String },
     Shutdown { id: u32 },
+    Metrics { id: u32 },
+    Load { id: u32, model: String, source: String },
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -49,36 +137,48 @@ pub enum Response {
     Classify { id: u32, labels: Vec<u32> },
     Stats { id: u32, json: String },
     ShutdownAck { id: u32 },
+    Metrics { id: u32, text: String },
+    LoadAck { id: u32, generation: u64, version: String },
     Error { id: u32, code: u8, msg: String },
 }
 
 /// Read one frame's payload; `Ok(None)` on clean EOF at a frame
 /// boundary (client hung up between requests).
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
-    let mut len_buf = [0u8; 4];
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; 6];
     let mut got = 0;
-    while got < 4 {
-        match r.read(&mut len_buf[got..]) {
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
             Ok(0) if got == 0 => return Ok(None),
-            Ok(0) => bail!("truncated frame header ({got} of 4 length bytes)"),
+            Ok(0) => {
+                return Err(FrameError::Truncated(format!(
+                    "{got} of {} header bytes",
+                    header.len()
+                )))
+            }
             Ok(n) => got += n,
             // retry EINTR like read_exact does — a signal mid-header
             // must not kill a healthy connection
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(e.into()),
+            Err(e) => return Err(FrameError::Io(e)),
         }
     }
-    let len = u32::from_le_bytes(len_buf) as usize;
+    if header[0] != MAGIC || header[1] != VERSION {
+        return Err(FrameError::UnsupportedVersion { magic: header[0], version: header[1] });
+    }
+    let len = u32::from_le_bytes(header[2..6].try_into().unwrap()) as usize;
     if len > MAX_FRAME {
-        bail!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap");
+        return Err(FrameError::Oversized(len));
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok(Some(payload))
 }
 
-/// Write `[len][payload]` (no flush — callers batch and flush).
+/// Write `[magic][version][len][payload]` (no flush — callers batch
+/// and flush).
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&[MAGIC, VERSION])?;
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)
 }
@@ -90,16 +190,44 @@ fn take_u32(b: &[u8], at: usize, what: &str) -> Result<u32> {
     }
 }
 
+fn take_u64(b: &[u8], at: usize, what: &str) -> Result<u64> {
+    match b.get(at..at + 8) {
+        Some(s) => Ok(u64::from_le_bytes(s.try_into().unwrap())),
+        None => bail!("frame too short for {what}"),
+    }
+}
+
+/// Decode `[len u16 LE][UTF-8]` at `at`; returns the string and the
+/// offset just past it.
+fn take_str(b: &[u8], at: usize, what: &str) -> Result<(String, usize)> {
+    let len = match b.get(at..at + 2) {
+        Some(s) => u16::from_le_bytes(s.try_into().unwrap()) as usize,
+        None => bail!("frame too short for {what} length"),
+    };
+    let end = at + 2 + len;
+    match b.get(at + 2..end) {
+        Some(s) => Ok((String::from_utf8(s.to_vec()).map_err(|e| e.utf8_error())?, end)),
+        None => bail!("frame too short for {what} ({len} bytes)"),
+    }
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize, "wire strings are u16-length");
+    p.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    p.extend_from_slice(s.as_bytes());
+}
+
 /// Decode a request payload (geometry validation — does `count` match
-/// the served model — happens in the session layer, which knows the
-/// image size).
+/// the served model — happens in the session layer, which can resolve
+/// the model).
 pub fn decode_request(payload: &[u8]) -> Result<Request> {
     let Some(&op) = payload.first() else { bail!("empty frame") };
     let id = take_u32(payload, 1, "request id")?;
     match op {
         OP_CLASSIFY => {
-            let count = take_u32(payload, 5, "image count")?;
-            let body = &payload[9..];
+            let (model, at) = take_str(payload, 5, "model name")?;
+            let count = take_u32(payload, at, "image count")?;
+            let body = &payload[at + 4..];
             if body.len() % 4 != 0 {
                 bail!("classify body of {} bytes is not f32-aligned", body.len());
             }
@@ -107,40 +235,61 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            Ok(Request::Classify { id, count, images })
+            Ok(Request::Classify { id, model, count, images })
         }
-        OP_STATS => Ok(Request::Stats { id }),
+        OP_STATS => {
+            let (model, _) = take_str(payload, 5, "model name")?;
+            Ok(Request::Stats { id, model })
+        }
         OP_SHUTDOWN => Ok(Request::Shutdown { id }),
+        OP_METRICS => Ok(Request::Metrics { id }),
+        OP_LOAD => {
+            let (model, at) = take_str(payload, 5, "model name")?;
+            let (source, _) = take_str(payload, at, "load source")?;
+            Ok(Request::Load { id, model, source })
+        }
         other => bail!("unknown request opcode 0x{other:02x}"),
     }
 }
 
-/// Encode a full request frame (length prefix included) — the client
-/// half, used by tests, the bench, and the CI smoke driver.
+/// Encode a full request frame (header included) — the client half,
+/// used by tests, the bench, and the CI smoke driver.
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut p = Vec::new();
     match req {
-        Request::Classify { id, count, images } => {
+        Request::Classify { id, model, count, images } => {
             p.push(OP_CLASSIFY);
             p.extend_from_slice(&id.to_le_bytes());
+            put_str(&mut p, model);
             p.extend_from_slice(&count.to_le_bytes());
             for v in images {
                 p.extend_from_slice(&v.to_le_bytes());
             }
         }
-        Request::Stats { id } => {
+        Request::Stats { id, model } => {
             p.push(OP_STATS);
             p.extend_from_slice(&id.to_le_bytes());
+            put_str(&mut p, model);
         }
         Request::Shutdown { id } => {
             p.push(OP_SHUTDOWN);
             p.extend_from_slice(&id.to_le_bytes());
         }
+        Request::Metrics { id } => {
+            p.push(OP_METRICS);
+            p.extend_from_slice(&id.to_le_bytes());
+        }
+        Request::Load { id, model, source } => {
+            p.push(OP_LOAD);
+            p.extend_from_slice(&id.to_le_bytes());
+            put_str(&mut p, model);
+            put_str(&mut p, source);
+        }
     }
     frame(p)
 }
 
-/// Encode a full response frame (length prefix included).
+/// Encode a full response frame (header included).
 pub fn encode_response(resp: &Response) -> Vec<u8> {
     let mut p = Vec::new();
     match resp {
@@ -160,6 +309,17 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
         Response::ShutdownAck { id } => {
             p.push(OP_SHUTDOWN);
             p.extend_from_slice(&id.to_le_bytes());
+        }
+        Response::Metrics { id, text } => {
+            p.push(OP_METRICS);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(text.as_bytes());
+        }
+        Response::LoadAck { id, generation, version } => {
+            p.push(OP_LOAD);
+            p.extend_from_slice(&id.to_le_bytes());
+            p.extend_from_slice(&generation.to_le_bytes());
+            put_str(&mut p, version);
         }
         Response::Error { id, code, msg } => {
             p.push(OP_ERROR);
@@ -190,6 +350,14 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
         }
         OP_STATS => Ok(Response::Stats { id, json: String::from_utf8(payload[5..].to_vec())? }),
         OP_SHUTDOWN => Ok(Response::ShutdownAck { id }),
+        OP_METRICS => {
+            Ok(Response::Metrics { id, text: String::from_utf8(payload[5..].to_vec())? })
+        }
+        OP_LOAD => {
+            let generation = take_u64(payload, 5, "generation")?;
+            let (version, _) = take_str(payload, 13, "version")?;
+            Ok(Response::LoadAck { id, generation, version })
+        }
         OP_ERROR => {
             let Some(&code) = payload.get(5) else { bail!("error frame missing code") };
             Ok(Response::Error {
@@ -203,7 +371,9 @@ pub fn decode_response(payload: &[u8]) -> Result<Response> {
 }
 
 fn frame(payload: Vec<u8>) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 + payload.len());
+    let mut out = Vec::with_capacity(6 + payload.len());
+    out.push(MAGIC);
+    out.push(VERSION);
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
     out
@@ -231,9 +401,17 @@ mod tests {
     #[test]
     fn request_roundtrips() {
         for req in [
-            Request::Classify { id: 7, count: 2, images: vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE] },
-            Request::Stats { id: 0xFFFF_FFFF },
+            Request::Classify {
+                id: 7,
+                model: "resnet8_tiny".into(),
+                count: 2,
+                images: vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE],
+            },
+            Request::Classify { id: 8, model: String::new(), count: 1, images: vec![1.0] },
+            Request::Stats { id: 0xFFFF_FFFF, model: "λ-net".into() },
             Request::Shutdown { id: 0 },
+            Request::Metrics { id: 41 },
+            Request::Load { id: 9, model: "a".into(), source: "synthetic:33".into() },
         ] {
             assert_eq!(roundtrip_request(&req), req);
         }
@@ -245,34 +423,77 @@ mod tests {
             Response::Classify { id: 9, labels: vec![3, 0, 7] },
             Response::Stats { id: 1, json: "{\"images\": 4}".into() },
             Response::ShutdownAck { id: 2 },
+            Response::Metrics { id: 4, text: "ebs_serve_qps{model=\"a\"} 1.5\n".into() },
+            Response::LoadAck { id: 5, generation: u64::MAX, version: "sha-abc123".into() },
             Response::Error { id: 3, code: ERR_OVERLOADED, msg: "queue full".into() },
         ] {
             assert_eq!(roundtrip_response(&resp), resp);
         }
     }
 
+    /// The satellite contract: a v1 frame (bare `u32 LE` length
+    /// prefix) must yield a typed version error, not a garbage decode.
     #[test]
-    fn clean_eof_and_truncation_are_distinguished() {
+    fn v1_frames_are_rejected_as_unsupported_version() {
+        // v1 encoding of a stats request: [len=5][op=0x02][id u32].
+        let v1: &[u8] = &[5, 0, 0, 0, 0x02, 1, 0, 0, 0];
+        let mut cursor = v1;
+        match read_frame(&mut cursor) {
+            Err(e @ FrameError::UnsupportedVersion { magic: 5, version: 0 }) => {
+                assert_eq!(e.error_code(), ERR_UNSUPPORTED_VERSION);
+                let msg = e.to_string();
+                assert!(msg.contains("magic 0x05"), "cause names the bad byte: {msg}");
+            }
+            other => panic!("v1 frame must be UnsupportedVersion, got {other:?}"),
+        }
+        // Same for a v2 magic with a future version byte.
+        let future: &[u8] = &[MAGIC, 0x03, 0, 0, 0, 0];
+        let mut cursor = future;
+        assert!(matches!(
+            read_frame(&mut cursor),
+            Err(FrameError::UnsupportedVersion { magic: MAGIC, version: 0x03 })
+        ));
+    }
+
+    #[test]
+    fn clean_eof_torn_header_and_torn_payload_are_distinguished() {
         let mut empty: &[u8] = &[];
         assert!(read_frame(&mut empty).unwrap().is_none(), "EOF at a boundary is clean");
-        let mut torn: &[u8] = &[5, 0];
-        assert!(read_frame(&mut torn).is_err(), "torn header is an error");
-        let mut short: &[u8] = &[8, 0, 0, 0, 1, 2];
-        assert!(read_frame(&mut short).is_err(), "payload shorter than the prefix is an error");
+        let mut torn: &[u8] = &[MAGIC, VERSION, 5, 0];
+        match read_frame(&mut torn) {
+            Err(e @ FrameError::Truncated(_)) => assert_eq!(e.error_code(), ERR_MALFORMED_FRAME),
+            other => panic!("torn header must be Truncated, got {other:?}"),
+        }
+        let mut short: &[u8] = &[MAGIC, VERSION, 8, 0, 0, 0, 1, 2];
+        assert!(
+            matches!(read_frame(&mut short), Err(FrameError::Truncated(_))),
+            "payload shorter than the prefix is Truncated"
+        );
     }
 
     #[test]
     fn oversized_frames_are_rejected_before_allocation() {
-        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        let mut huge = vec![MAGIC, VERSION];
+        huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
         let mut r: &[u8] = &huge;
-        assert!(read_frame(&mut r).is_err());
+        match read_frame(&mut r) {
+            Err(e @ FrameError::Oversized(_)) => assert_eq!(e.error_code(), ERR_MALFORMED_FRAME),
+            other => panic!("oversized header must be Oversized, got {other:?}"),
+        }
     }
 
     #[test]
     fn garbage_payloads_fail_to_decode() {
         assert!(decode_request(&[]).is_err());
         assert!(decode_request(&[0x42, 0, 0, 0, 0]).is_err(), "unknown opcode");
-        assert!(decode_request(&[OP_CLASSIFY, 1, 0, 0, 0, 2, 0, 0, 0, 9]).is_err(), "unaligned body");
+        // classify with a model-string length pointing past the end
+        assert!(decode_request(&[OP_CLASSIFY, 1, 0, 0, 0, 9, 0]).is_err(), "torn model string");
+        // classify with an unaligned image body: model "", count 2, 1 byte
+        let mut p = vec![OP_CLASSIFY, 1, 0, 0, 0, 0, 0];
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.push(9);
+        assert!(decode_request(&p).is_err(), "unaligned body");
         assert!(decode_response(&[OP_ERROR, 1, 0, 0, 0]).is_err(), "error frame missing code");
+        assert!(decode_response(&[OP_LOAD, 1, 0, 0, 0, 7]).is_err(), "torn load ack");
     }
 }

@@ -1,5 +1,5 @@
 //! Bounded MPMC request queue — the admission-control stage of the
-//! serve layer (DESIGN.md §13).
+//! serve layer (DESIGN.md §13, §15).
 //!
 //! Backpressure rule: a push beyond `capacity` is refused *at the
 //! door* ([`PushError::Full`]) and the request handed back to the
@@ -8,17 +8,30 @@
 //! ([`PushError::Closed`]) but pops keep draining — a request that was
 //! ever admitted is always answered, never dropped (tests/serve.rs
 //! pins this).
+//!
+//! Every request carries the [`ResidentModel`] it resolved to at
+//! admission.  That Arc is the hot-swap mechanism: a swap publishes a
+//! new generation for future admissions while queued requests keep
+//! (and are executed on) the generation they bound — and
+//! [`RequestQueue::pop_fitting_deadline`] only extends a batch with
+//! same-generation requests, so every coalesced batch runs wholly on
+//! one network.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use super::registry::ResidentModel;
 
 /// Completion callback: invoked exactly once with the per-image
 /// predicted labels of a request once its coalesced batch ran.
 pub type ReplyFn = Box<dyn FnOnce(Vec<usize>) + Send>;
 
-/// One admitted classification request.
+/// One admitted classification request, bound to the model generation
+/// it resolved at admission.
 pub struct ClassifyRequest {
+    /// The generation this request will be executed on.
+    pub model: Arc<ResidentModel>,
     /// `count` images, (count, H, W, C) row-major.
     pub images: Vec<f32>,
     pub count: usize,
@@ -34,14 +47,16 @@ pub enum PushError {
     Closed,
 }
 
-/// Outcome of a deadline-bounded, size-constrained pop (the
-/// micro-batcher's "extend an open batch" primitive).
+/// Outcome of a deadline-bounded, constrained pop (the micro-batcher's
+/// "extend an open batch" primitive).
 pub enum PopFit {
-    /// Front request fit the remaining batch budget and was popped.
+    /// Front request matched the batch's generation, fit the remaining
+    /// image budget, and was popped.
     Got(ClassifyRequest),
-    /// Front request exists but exceeds the budget; left in place for
-    /// the next batch (requests are never split).
-    TooBig,
+    /// Front request exists but exceeds the budget or belongs to a
+    /// different model/generation; left in place for the next batch
+    /// (requests are never split, batches never mix generations).
+    NoFit,
     /// Nothing arrived before the deadline (or the queue is closed and
     /// drained).
     Empty,
@@ -101,17 +116,23 @@ impl RequestQueue {
         }
     }
 
-    /// Pop the oldest request if it carries ≤ `max_count` images,
-    /// waiting until `deadline` for one to arrive.  Never waits past
-    /// the deadline and never pops an oversized request.
-    pub fn pop_fitting_deadline(&self, max_count: usize, deadline: Instant) -> PopFit {
+    /// Pop the oldest request if it belongs to `generation` and
+    /// carries ≤ `max_count` images, waiting until `deadline` for one
+    /// to arrive.  Never waits past the deadline, never pops an
+    /// oversized request, never mixes generations into a batch.
+    pub fn pop_fitting_deadline(
+        &self,
+        max_count: usize,
+        generation: u64,
+        deadline: Instant,
+    ) -> PopFit {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(front) = g.deque.front() {
-                if front.count <= max_count {
+                if front.count <= max_count && front.model.generation == generation {
                     return PopFit::Got(g.deque.pop_front().unwrap());
                 }
-                return PopFit::TooBig;
+                return PopFit::NoFit;
             }
             if g.closed {
                 return PopFit::Empty;
@@ -148,9 +169,11 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::registry::ModelRegistry;
 
-    fn req(count: usize) -> ClassifyRequest {
+    fn req(model: &Arc<ResidentModel>, count: usize) -> ClassifyRequest {
         ClassifyRequest {
+            model: Arc::clone(model),
             images: vec![0.0; count],
             count,
             enqueued: Instant::now(),
@@ -158,12 +181,17 @@ mod tests {
         }
     }
 
+    fn one_model() -> Arc<ResidentModel> {
+        ModelRegistry::new().publish_synthetic("m", 5)
+    }
+
     #[test]
     fn push_pop_fifo_and_capacity_rejection() {
+        let m = one_model();
         let q = RequestQueue::new(2);
-        q.push(req(1)).unwrap();
-        q.push(req(2)).unwrap();
-        match q.push(req(3)) {
+        q.push(req(&m, 1)).unwrap();
+        q.push(req(&m, 2)).unwrap();
+        match q.push(req(&m, 3)) {
             Err((r, PushError::Full)) => assert_eq!(r.count, 3, "rejected request handed back"),
             _ => panic!("third push must be rejected"),
         }
@@ -173,11 +201,12 @@ mod tests {
 
     #[test]
     fn close_rejects_new_but_drains_queued() {
+        let m = one_model();
         let q = RequestQueue::new(8);
-        q.push(req(1)).unwrap();
+        q.push(req(&m, 1)).unwrap();
         q.close();
         assert!(q.is_closed());
-        match q.push(req(2)) {
+        match q.push(req(&m, 2)) {
             Err((_, PushError::Closed)) => {}
             _ => panic!("push after close must be rejected"),
         }
@@ -187,36 +216,60 @@ mod tests {
 
     #[test]
     fn fitting_pop_respects_budget_deadline_and_close() {
+        let m = one_model();
+        let gen = m.generation;
         let q = RequestQueue::new(8);
-        q.push(req(3)).unwrap();
+        q.push(req(&m, 3)).unwrap();
         let deadline = Instant::now();
-        match q.pop_fitting_deadline(2, deadline) {
-            PopFit::TooBig => {}
+        match q.pop_fitting_deadline(2, gen, deadline) {
+            PopFit::NoFit => {}
             _ => panic!("count 3 must not fit budget 2"),
         }
-        match q.pop_fitting_deadline(3, deadline) {
+        match q.pop_fitting_deadline(3, gen, deadline) {
             PopFit::Got(r) => assert_eq!(r.count, 3),
             _ => panic!("count 3 fits budget 3"),
         }
         // Empty queue + already-expired deadline → Empty, no blocking.
-        match q.pop_fitting_deadline(4, deadline) {
+        match q.pop_fitting_deadline(4, gen, deadline) {
             PopFit::Empty => {}
             _ => panic!("expired deadline on empty queue must return Empty"),
         }
         q.close();
-        match q.pop_fitting_deadline(4, Instant::now() + std::time::Duration::from_secs(5)) {
+        match q.pop_fitting_deadline(4, gen, Instant::now() + std::time::Duration::from_secs(5)) {
             PopFit::Empty => {}
             _ => panic!("closed + drained must return Empty immediately"),
         }
     }
 
+    /// The hot-swap invariant at the queue level: a front request of a
+    /// different generation is NoFit — left whole for its own batch.
+    #[test]
+    fn fitting_pop_never_crosses_generations() {
+        let reg = ModelRegistry::new();
+        let g1 = reg.publish_synthetic("m", 5);
+        let g2 = reg.publish_synthetic("m", 6); // hot swap
+        assert_ne!(g1.generation, g2.generation);
+        let q = RequestQueue::new(8);
+        q.push(req(&g2, 1)).unwrap();
+        let deadline = Instant::now();
+        match q.pop_fitting_deadline(8, g1.generation, deadline) {
+            PopFit::NoFit => {}
+            _ => panic!("a new-generation request must not join an old-generation batch"),
+        }
+        match q.pop_fitting_deadline(8, g2.generation, deadline) {
+            PopFit::Got(r) => assert_eq!(r.model.generation, g2.generation),
+            _ => panic!("same-generation request fits"),
+        }
+    }
+
     #[test]
     fn blocking_pop_wakes_on_push_from_another_thread() {
+        let m = one_model();
         let q = std::sync::Arc::new(RequestQueue::new(4));
         let q2 = std::sync::Arc::clone(&q);
         let h = std::thread::spawn(move || q2.pop_blocking().map(|r| r.count));
         std::thread::sleep(std::time::Duration::from_millis(20));
-        q.push(req(5)).unwrap();
+        q.push(req(&m, 5)).unwrap();
         assert_eq!(h.join().unwrap(), Some(5));
     }
 }

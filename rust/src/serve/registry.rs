@@ -1,0 +1,246 @@
+//! Multi-model registry with atomic hot-swap (DESIGN.md §15).
+//!
+//! The registry holds N resident [`BdNetwork`]s keyed by model name.
+//! Each name maps to a [`ModelEntry`] whose `current` slot holds an
+//! `Arc<ResidentModel>` — the unit of swap.  Admission resolves the
+//! name to that Arc *once* and the request carries it through queue →
+//! batcher → worker, so:
+//!
+//! * **zero downtime** — [`ModelRegistry::publish`] replaces the slot
+//!   under a short lock; no admission ever observes a half-installed
+//!   model;
+//! * **in-flight safety** — queued requests keep their Arc, so the old
+//!   generation's network stays alive until its last request is
+//!   answered, then drops;
+//! * **bit-identity per generation** — the batcher coalesces only
+//!   same-generation requests (queue.rs), so every executed batch runs
+//!   wholly on one network and equals a direct `classify_batch` on it.
+//!
+//! Generations are registry-global and monotonic; per-name counters
+//! ([`ModelStats`]) persist across swaps (the swap itself is recorded
+//! in `swaps` / the `generation` gauge).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::bd::BdNetwork;
+
+use super::telemetry::ModelStats;
+
+/// One immutable published generation of a model: what a request binds
+/// to at admission and what a worker executes against.
+pub struct ResidentModel {
+    /// Registry key (`--model NAME=SOURCE`).
+    pub name: String,
+    /// Registry-global monotonic swap counter; two generations of the
+    /// same name never share it.
+    pub generation: u64,
+    /// Artifact version label (`deploy_manifest.json`) or
+    /// `synthetic:<seed>`.
+    pub version: String,
+    /// Where the generation came from (artifact dir / synthetic spec).
+    pub source: String,
+    pub net: Arc<BdNetwork>,
+    /// Shared with every other generation of this name.
+    pub stats: Arc<ModelStats>,
+}
+
+impl ResidentModel {
+    /// Floats per image of this generation's network.
+    pub fn image_size(&self) -> usize {
+        self.net.input_hw * self.net.input_hw * self.net.input_ch
+    }
+}
+
+/// A model name's slot: stable stats + the swappable current generation.
+struct ModelEntry {
+    name: String,
+    stats: Arc<ModelStats>,
+    current: Mutex<Arc<ResidentModel>>,
+}
+
+/// A freshly loaded (not yet published) model — what a
+/// [`super::ModelLoader`] returns.
+pub struct LoadedModel {
+    pub version: String,
+    pub net: BdNetwork,
+}
+
+/// Why a model name failed to resolve at admission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResolveError {
+    /// The name is not registered.
+    Unknown(String),
+    /// Empty name with several resident models — no implicit default.
+    Ambiguous(Vec<String>),
+}
+
+impl std::fmt::Display for ResolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResolveError::Unknown(name) => write!(f, "unknown model '{name}'"),
+            ResolveError::Ambiguous(names) => write!(
+                f,
+                "several models resident ({}); requests must name one",
+                names.join(", ")
+            ),
+        }
+    }
+}
+
+/// The registry: entry list behind an RwLock (reads are resolve-heavy,
+/// writes are rare publishes).
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: RwLock<Vec<Arc<ModelEntry>>>,
+    next_gen: AtomicU64,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Install `net` as the current generation of `name`, creating the
+    /// entry on first publish.  Returns the new resident handle; its
+    /// `generation` strictly exceeds every previously published one.
+    pub fn publish(
+        &self,
+        name: &str,
+        version: &str,
+        source: &str,
+        net: BdNetwork,
+    ) -> Arc<ResidentModel> {
+        let generation = self.next_gen.fetch_add(1, Ordering::Relaxed) + 1;
+        let make = |stats: &Arc<ModelStats>| {
+            Arc::new(ResidentModel {
+                name: name.to_string(),
+                generation,
+                version: version.to_string(),
+                source: source.to_string(),
+                net: Arc::new(net),
+                stats: Arc::clone(stats),
+            })
+        };
+        let mut entries = self.entries.write().unwrap();
+        if let Some(entry) = entries.iter().find(|e| e.name == name) {
+            let resident = make(&entry.stats);
+            entry.stats.swaps.fetch_add(1, Ordering::Relaxed);
+            entry.stats.generation.store(generation, Ordering::Relaxed);
+            *entry.current.lock().unwrap() = Arc::clone(&resident);
+            resident
+        } else {
+            let stats = Arc::new(ModelStats::default());
+            stats.generation.store(generation, Ordering::Relaxed);
+            let resident = make(&stats);
+            entries.push(Arc::new(ModelEntry {
+                name: name.to_string(),
+                stats,
+                current: Mutex::new(Arc::clone(&resident)),
+            }));
+            resident
+        }
+    }
+
+    /// Convenience publish of a deterministic synthetic net — the
+    /// `--model NAME=synthetic:SEED` path, and what tests and the
+    /// bench use to stand up multi-model fleets without artifacts.
+    pub fn publish_synthetic(&self, name: &str, seed: u64) -> Arc<ResidentModel> {
+        let spec = format!("synthetic:{seed}");
+        self.publish(name, &spec, &spec, BdNetwork::synthetic(seed))
+    }
+
+    /// Resolve a request's model name to the current generation.  An
+    /// empty name is allowed exactly when one model is resident (the
+    /// single-model deployment keeps v1's ergonomics).
+    pub fn resolve(&self, name: &str) -> Result<Arc<ResidentModel>, ResolveError> {
+        let entries = self.entries.read().unwrap();
+        let entry = if name.is_empty() {
+            match entries.len() {
+                1 => &entries[0],
+                _ => {
+                    return Err(ResolveError::Ambiguous(
+                        entries.iter().map(|e| e.name.clone()).collect(),
+                    ))
+                }
+            }
+        } else {
+            match entries.iter().find(|e| e.name == name) {
+                Some(e) => e,
+                None => return Err(ResolveError::Unknown(name.to_string())),
+            }
+        };
+        Ok(Arc::clone(&entry.current.lock().unwrap()))
+    }
+
+    /// Snapshot of every model's current generation, registration order.
+    pub fn models(&self) -> Vec<Arc<ResidentModel>> {
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .map(|e| Arc::clone(&e.current.lock().unwrap()))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_resolve_and_default_rules() {
+        let reg = ModelRegistry::new();
+        assert!(matches!(reg.resolve(""), Err(ResolveError::Ambiguous(_))), "empty registry");
+        let a = reg.publish_synthetic("a", 11);
+        assert_eq!(a.generation, 1);
+        assert_eq!(reg.resolve("").unwrap().name, "a", "sole model is the default");
+        assert_eq!(reg.resolve("a").unwrap().generation, 1);
+        reg.publish_synthetic("b", 22);
+        match reg.resolve("") {
+            Err(ResolveError::Ambiguous(names)) => assert_eq!(names, vec!["a", "b"]),
+            other => panic!("two models → no implicit default, got {other:?}"),
+        }
+        assert!(matches!(reg.resolve("zzz"), Err(ResolveError::Unknown(_))));
+    }
+
+    #[test]
+    fn swap_bumps_generation_keeps_stats_and_old_arc_survives() {
+        let reg = ModelRegistry::new();
+        let g1 = reg.publish_synthetic("a", 11);
+        g1.stats.admitted.fetch_add(5, Ordering::Relaxed);
+        let g2 = reg.publish_synthetic("a", 33);
+        assert!(g2.generation > g1.generation, "generations are monotonic");
+        assert_eq!(reg.resolve("a").unwrap().generation, g2.generation);
+        // Stats survive the swap, and the swap itself is recorded.
+        assert_eq!(g2.stats.admitted.load(Ordering::Relaxed), 5);
+        assert_eq!(g2.stats.swaps.load(Ordering::Relaxed), 1);
+        assert_eq!(g2.stats.generation.load(Ordering::Relaxed), g2.generation);
+        // The superseded generation's network is still usable by
+        // whoever holds the Arc (in-flight requests).
+        let img_sz = g1.image_size();
+        let _ = g1.net.classify_batch(&vec![0.5; img_sz], 1);
+        assert_eq!(reg.len(), 1, "swap replaces, not appends");
+    }
+
+    #[test]
+    fn models_snapshot_tracks_currents() {
+        let reg = ModelRegistry::new();
+        reg.publish_synthetic("a", 1);
+        reg.publish_synthetic("b", 2);
+        reg.publish_synthetic("a", 3);
+        let gens: Vec<(String, u64)> =
+            reg.models().iter().map(|m| (m.name.clone(), m.generation)).collect();
+        assert_eq!(gens, vec![("a".into(), 3), ("b".into(), 2)]);
+    }
+}

@@ -1,6 +1,7 @@
-//! Serve front-end (DESIGN.md §13): a TCP accept loop (or a single
-//! stdin/stdout session) feeding the queue → micro-batcher → worker
-//! pipeline, with graceful drain on shutdown.
+//! Serve front-end (DESIGN.md §13, §15): a TCP accept loop (or a
+//! single stdin/stdout session) feeding the queue → micro-batcher →
+//! worker pipeline, an optional HTTP metrics listener, and graceful
+//! drain on shutdown.
 //!
 //! Threading: one reader thread per connection decodes frames and
 //! submits classify requests; completions write the response frame
@@ -8,6 +9,13 @@
 //! per-connection writer thread — a slow client briefly blocks one
 //! worker, acceptable at this scale and it makes the drain trivially
 //! correct: once the pool joins, every response has been written).
+//!
+//! Error reporting: a malformed or wrong-version frame gets an error
+//! frame carrying the typed cause (`ERR_MALFORMED_FRAME` /
+//! `ERR_UNSUPPORTED_VERSION` + message) before the session closes —
+//! clients can always distinguish a torn frame from bad geometry
+//! (`ERR_BAD_REQUEST`, session stays open) from an unknown model
+//! (`ERR_UNKNOWN_MODEL`).
 //!
 //! Shutdown protocol: on a shutdown request the session acks, closes
 //! the queue (no new admissions anywhere — concurrent submissions get
@@ -17,48 +25,77 @@
 //! EOF on stdin (stdio mode) triggers the same drain.
 
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::bd::BdNetwork;
-
 use super::protocol::{
-    self, Request, Response, ERR_BAD_REQUEST, ERR_OVERLOADED, ERR_SHUTTING_DOWN,
+    self, FrameError, Request, Response, ERR_BAD_REQUEST, ERR_LOAD_FAILED, ERR_OVERLOADED,
+    ERR_SHUTTING_DOWN, ERR_UNKNOWN_MODEL,
 };
 use super::{ServeCfg, ServeCore, ServeHandle, SubmitError};
 
 /// A bound-but-not-yet-serving TCP front-end (bind is separate from
-/// run so callers can learn the ephemeral port before serving).
+/// run so callers can learn the ephemeral ports before serving).
 pub struct Server {
     listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
     handle: ServeHandle,
     shutdown: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Bind `cfg.addr` and spawn the worker pool; serving starts at
+    /// Bind `cfg.addr` (and `cfg.metrics_addr` when set) and spawn the
+    /// worker pool over the prepared core; serving starts at
     /// [`Server::run`].
-    pub fn bind(net: BdNetwork, cfg: ServeCfg) -> Result<Server> {
+    pub fn bind(core: Arc<ServeCore>) -> Result<Server> {
+        let cfg: ServeCfg = core.cfg.clone();
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding serve address {}", cfg.addr))?;
-        let handle = ServeHandle::start(net, cfg);
-        Ok(Server { listener, handle, shutdown: Arc::new(AtomicBool::new(false)) })
+        let metrics_listener = if cfg.metrics_addr.is_empty() {
+            None
+        } else {
+            Some(
+                TcpListener::bind(&cfg.metrics_addr)
+                    .with_context(|| format!("binding metrics address {}", cfg.metrics_addr))?,
+            )
+        };
+        let handle = ServeHandle::start(core);
+        Ok(Server {
+            listener,
+            metrics_listener,
+            handle,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
+    /// The metrics endpoint's bound address, when enabled.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_listener.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
     /// Accept-and-serve until a shutdown request arrives, then drain
-    /// and return.  Prints `serving on <addr>` to stdout first (the CI
-    /// smoke driver parses it to find the ephemeral port).
+    /// and return.  Prints `metrics on <addr>` (when enabled) and
+    /// `serving on <addr>` to stdout first (the CI smoke driver parses
+    /// both to find the ephemeral ports).
     pub fn run(self) -> Result<()> {
-        let Server { listener, handle, shutdown } = self;
+        let Server { listener, metrics_listener, handle, shutdown } = self;
         let addr = listener.local_addr()?;
+        let metrics_join = match metrics_listener {
+            Some(ml) => {
+                let maddr = ml.local_addr()?;
+                println!("metrics on {maddr}");
+                Some(spawn_metrics(Arc::clone(&handle.core), ml, Arc::clone(&shutdown)))
+            }
+            None => None,
+        };
         println!("serving on {addr}");
         std::io::stdout().flush().ok();
         listener.set_nonblocking(true).context("nonblocking accept loop")?;
@@ -93,63 +130,94 @@ impl Server {
                 }
             }
         }
-        let stats = Arc::clone(&handle.core.stats);
-        let net = Arc::clone(&handle.core.net);
+        let core = Arc::clone(&handle.core);
         handle.shutdown(); // drain: every admitted request is answered
-        eprintln!("[serve] drained; final stats: {}", stats.to_json(&net));
+        if let Some(j) = metrics_join {
+            let _ = j.join(); // exits on the same shutdown flag
+        }
+        eprintln!("[serve] drained; final stats: {}", core.stats_json());
         Ok(())
     }
 }
 
 /// Single-session mode over stdin/stdout (`ebs serve --stdin`): same
 /// frames, no sockets.  EOF or a shutdown request drains and returns.
-pub fn run_stdio(net: BdNetwork, cfg: ServeCfg) -> Result<()> {
-    let handle = ServeHandle::start(net, cfg);
+pub fn run_stdio(core: Arc<ServeCore>) -> Result<()> {
+    let handle = ServeHandle::start(Arc::clone(&core));
     let shutdown = Arc::new(AtomicBool::new(false));
     let writer = Arc::new(Mutex::new(std::io::stdout()));
-    let result = handle_session(&handle.core, std::io::stdin().lock(), &writer, &shutdown);
-    let stats = Arc::clone(&handle.core.stats);
-    let net = Arc::clone(&handle.core.net);
+    let result = handle_session(&core, std::io::stdin().lock(), &writer, &shutdown);
     handle.shutdown();
     writer.lock().unwrap().flush().ok();
-    eprintln!("[serve] drained; final stats: {}", stats.to_json(&net));
+    eprintln!("[serve] drained; final stats: {}", core.stats_json());
     result
 }
 
 /// Decode-dispatch loop for one connection.  Returns on clean EOF, a
 /// transport error, or a shutdown request (after acking + flipping
-/// `shutdown`).
+/// `shutdown`).  Protocol-level failures never die silently: the
+/// client is sent an error frame carrying the cause first.
 pub fn handle_session<R: Read, W: Write + Send + 'static>(
     core: &Arc<ServeCore>,
     mut reader: R,
     writer: &Arc<Mutex<W>>,
     shutdown: &AtomicBool,
 ) -> Result<()> {
-    let img_sz = core.image_size();
     loop {
-        let Some(payload) = protocol::read_frame(&mut reader)? else {
-            return Ok(()); // client hung up between frames
+        let payload = match protocol::read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            Ok(None) => return Ok(()), // client hung up between frames
+            Err(e) => {
+                // Report the typed cause, then close: after a torn or
+                // wrong-version frame the stream offset is garbage, so
+                // resynchronizing is impossible — but the client gets
+                // told exactly why (id 0: no frame to attribute it to).
+                let resp =
+                    Response::Error { id: 0, code: e.error_code(), msg: e.to_string() };
+                let _ = send(writer, &resp);
+                return if matches!(e, FrameError::Io(_)) { Err(e.into()) } else { Ok(()) };
+            }
         };
         let req = match protocol::decode_request(&payload) {
             Ok(r) => r,
             Err(e) => {
-                send(writer, &Response::Error { id: 0, code: ERR_BAD_REQUEST, msg: format!("{e:#}") })?;
+                // Payload-level garbage: the frame boundary is intact,
+                // so the session survives — report and keep reading.
+                let resp =
+                    Response::Error { id: 0, code: ERR_BAD_REQUEST, msg: format!("{e:#}") };
+                send(writer, &resp)?;
                 continue;
             }
         };
         match req {
-            Request::Classify { id, count, images } => {
+            Request::Classify { id, model, count, images } => {
+                let resident = match core.registry.resolve(&model) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let resp = Response::Error {
+                            id,
+                            code: ERR_UNKNOWN_MODEL,
+                            msg: e.to_string(),
+                        };
+                        send(writer, &resp)?;
+                        continue;
+                    }
+                };
                 let count = count as usize;
+                let img_sz = resident.image_size();
                 if count == 0 || images.len() != count * img_sz {
                     let msg = format!(
-                        "classify request {id}: {} floats for count {count} (image size {img_sz})",
-                        images.len()
+                        "classify request {id}: {} floats for count {count} \
+                         (model '{}' image size {img_sz})",
+                        images.len(),
+                        resident.name,
                     );
                     send(writer, &Response::Error { id, code: ERR_BAD_REQUEST, msg })?;
                     continue;
                 }
                 let w = Arc::clone(writer);
-                let submitted = core.submit_with(
+                let submitted = core.submit_to(
+                    &resident,
                     images,
                     count,
                     Box::new(move |preds| {
@@ -161,14 +229,48 @@ pub fn handle_session<R: Read, W: Write + Send + 'static>(
                     let code = match e {
                         SubmitError::Overloaded => ERR_OVERLOADED,
                         SubmitError::ShuttingDown => ERR_SHUTTING_DOWN,
+                        SubmitError::UnknownModel => ERR_UNKNOWN_MODEL,
                     };
                     send(writer, &Response::Error { id, code, msg: e.to_string() })?;
                 }
             }
-            Request::Stats { id } => {
-                let json = core.stats.to_json(&core.net).to_string();
+            Request::Stats { id, model } => {
+                let json = if model.is_empty() {
+                    core.stats_json().to_string()
+                } else {
+                    match core.model_stats_json(&model) {
+                        Ok(j) => j.to_string(),
+                        Err(e) => {
+                            let resp = Response::Error {
+                                id,
+                                code: ERR_UNKNOWN_MODEL,
+                                msg: e.to_string(),
+                            };
+                            send(writer, &resp)?;
+                            continue;
+                        }
+                    }
+                };
                 send(writer, &Response::Stats { id, json })?;
             }
+            Request::Metrics { id } => {
+                send(writer, &Response::Metrics { id, text: core.metrics_text() })?;
+            }
+            Request::Load { id, model, source } => match core.load_model(&model, &source) {
+                Ok(resident) => {
+                    let resp = Response::LoadAck {
+                        id,
+                        generation: resident.generation,
+                        version: resident.version.clone(),
+                    };
+                    send(writer, &resp)?;
+                }
+                Err(e) => {
+                    let resp =
+                        Response::Error { id, code: ERR_LOAD_FAILED, msg: format!("{e:#}") };
+                    send(writer, &resp)?;
+                }
+            },
             Request::Shutdown { id } => {
                 send(writer, &Response::ShutdownAck { id })?;
                 core.queue.close();
@@ -184,4 +286,63 @@ fn send<W: Write>(writer: &Arc<Mutex<W>>, resp: &Response) -> std::io::Result<()
     let mut g = writer.lock().unwrap();
     g.write_all(&frame)?;
     g.flush()
+}
+
+/// The HTTP metrics listener: minimal HTTP/1.1, one scrape per
+/// connection, exits on the shared shutdown flag.
+fn spawn_metrics(
+    core: Arc<ServeCore>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("ebs-metrics".into())
+        .spawn(move || {
+            if listener.set_nonblocking(true).is_err() {
+                return;
+            }
+            while !shutdown.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        if let Err(e) = serve_scrape(&core, &mut stream) {
+                            eprintln!("[serve] metrics scrape: {e}");
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        })
+        .expect("spawning metrics listener")
+}
+
+/// Answer one Prometheus scrape: drain the request head, write the
+/// text exposition body.  Any path serves the same body (the endpoint
+/// has exactly one document).
+fn serve_scrape(core: &ServeCore, stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let body = core.metrics_text();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
 }

@@ -1,0 +1,389 @@
+//! Per-model serving telemetry (DESIGN.md §15): lock-free counters,
+//! log2-bucketed latency / batch-occupancy histograms, and the
+//! Prometheus-style text rendering shared by the `metrics` protocol
+//! request and the optional HTTP scrape endpoint.
+//!
+//! Everything here is written on the hot path (workers, admission), so
+//! it is all relaxed atomics — no locks, no allocation.  Quantiles are
+//! read from the log2 histogram as bucket upper bounds, which is the
+//! usual Prometheus-histogram trade: p50/p99 are upper estimates with
+//! ≤ 2× resolution, stable under concurrent writes, and free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::bd::BdNetwork;
+use crate::util::json::Json;
+
+/// Number of log2 buckets; bucket 31 absorbs everything ≥ 2^30
+/// (≈ 18 min in µs — far beyond any sane request latency).
+pub const HIST_BUCKETS: usize = 32;
+
+/// Lock-free log2 histogram: bucket 0 holds the value 0, bucket `i`
+/// (i ≥ 1) holds values in `[2^(i-1), 2^i)`.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (0, 1, 3, 7, 15, ...).
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (buckets are read independently; totals can
+    /// be off by in-flight increments, which is fine for monitoring).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A consistent-enough copy of a [`Histogram`] for rendering.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Upper-bound estimate of the `q`-quantile (q in [0, 1]): the
+    /// inclusive upper edge of the first bucket whose cumulative count
+    /// reaches `q · total`.  0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Per-model counters — one instance per registered model *name*,
+/// shared across generations so a hot swap does not reset history
+/// (`generation` and `swaps` record the swap itself).
+#[derive(Debug)]
+pub struct ModelStats {
+    /// Requests admitted into the queue for this model.
+    pub admitted: AtomicU64,
+    /// Requests rejected by admission control (queue full).
+    pub rejected_full: AtomicU64,
+    /// Requests rejected because shutdown had begun.
+    pub rejected_shutdown: AtomicU64,
+    /// Requests answered.
+    pub completed: AtomicU64,
+    /// Images classified.
+    pub images: AtomicU64,
+    /// Coalesced batches executed.
+    pub batches: AtomicU64,
+    /// Largest coalesced batch observed (images).
+    pub batch_images_max: AtomicU64,
+    /// Enqueue→reply latency distribution, µs.
+    pub latency_us: Histogram,
+    /// Batch-occupancy distribution (images per executed batch).
+    pub batch_occupancy: Histogram,
+    /// Generation currently serving this model name (gauge).
+    pub generation: AtomicU64,
+    /// Hot swaps performed on this model name.
+    pub swaps: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ModelStats {
+    fn default() -> ModelStats {
+        ModelStats {
+            admitted: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rejected_shutdown: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            images: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_images_max: AtomicU64::new(0),
+            latency_us: Histogram::default(),
+            batch_occupancy: Histogram::default(),
+            generation: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ModelStats {
+    /// Record one executed batch of `images` images over `requests`
+    /// requests.
+    pub fn record_batch(&self, images: usize, requests: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.images.fetch_add(images as u64, Ordering::Relaxed);
+        self.completed.fetch_add(requests as u64, Ordering::Relaxed);
+        self.batch_images_max.fetch_max(images as u64, Ordering::Relaxed);
+        self.batch_occupancy.record(images as u64);
+    }
+
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency_us.record(us);
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// One model's block of the `stats` response: geometry + counters
+    /// + derived rates.  Name / version / generation are added by the
+    /// registry layer, which knows them.
+    pub fn to_json(&self, net: &BdNetwork) -> Vec<(String, Json)> {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let images = self.images.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let lat = self.latency_us.snapshot();
+        let uptime = self.uptime_s();
+        vec![
+            ("input_hw".into(), Json::Num(net.input_hw as f64)),
+            ("input_ch".into(), Json::Num(net.input_ch as f64)),
+            ("classes".into(), Json::Num(net.classes as f64)),
+            ("admitted".into(), Json::Num(self.admitted.load(Ordering::Relaxed) as f64)),
+            (
+                "rejected_full".into(),
+                Json::Num(self.rejected_full.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected_shutdown".into(),
+                Json::Num(self.rejected_shutdown.load(Ordering::Relaxed) as f64),
+            ),
+            ("completed".into(), Json::Num(completed as f64)),
+            ("images".into(), Json::Num(images as f64)),
+            ("batches".into(), Json::Num(batches as f64)),
+            (
+                "batch_images_max".into(),
+                Json::Num(self.batch_images_max.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "mean_batch_images".into(),
+                Json::Num(if batches == 0 { 0.0 } else { images as f64 / batches as f64 }),
+            ),
+            ("mean_latency_us".into(), Json::Num(lat.mean())),
+            ("p50_latency_us".into(), Json::Num(lat.quantile(0.5) as f64)),
+            ("p99_latency_us".into(), Json::Num(lat.quantile(0.99) as f64)),
+            ("qps".into(), Json::Num(completed as f64 / uptime)),
+            ("images_per_s".into(), Json::Num(images as f64 / uptime)),
+            ("swaps".into(), Json::Num(self.swaps.load(Ordering::Relaxed) as f64)),
+        ]
+    }
+}
+
+/// Append one Prometheus sample line: `name{labels} value`.
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            // Prometheus label values escape backslash, quote, newline.
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+/// Render one model's metrics in the Prometheus text exposition
+/// format.  `model` is the label value; callers concatenate blocks
+/// (plus `# TYPE` headers once) for the full scrape body.
+pub fn render_model(out: &mut String, model: &str, generation: u64, stats: &ModelStats) {
+    let m = [("model", model)];
+    let load = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+    for (outcome, counter) in [
+        ("admitted", &stats.admitted),
+        ("rejected_full", &stats.rejected_full),
+        ("rejected_shutdown", &stats.rejected_shutdown),
+        ("completed", &stats.completed),
+    ] {
+        sample(
+            out,
+            "ebs_serve_requests_total",
+            &[("model", model), ("outcome", outcome)],
+            load(counter),
+        );
+    }
+    sample(out, "ebs_serve_images_total", &m, load(&stats.images));
+    sample(out, "ebs_serve_batches_total", &m, load(&stats.batches));
+    sample(out, "ebs_serve_swaps_total", &m, load(&stats.swaps));
+    sample(out, "ebs_serve_generation", &m, generation as f64);
+    let completed = stats.completed.load(Ordering::Relaxed);
+    sample(out, "ebs_serve_qps", &m, completed as f64 / stats.uptime_s());
+
+    let lat = stats.latency_us.snapshot();
+    for (q, label) in [(0.5, "0.5"), (0.99, "0.99")] {
+        sample(
+            out,
+            "ebs_serve_latency_us",
+            &[("model", model), ("quantile", label)],
+            lat.quantile(q) as f64,
+        );
+    }
+    sample(out, "ebs_serve_latency_us_sum", &m, lat.sum as f64);
+    sample(out, "ebs_serve_latency_us_count", &m, lat.count as f64);
+
+    // Cumulative (`le`) batch-occupancy buckets, log2 edges, zero runs
+    // above the top non-empty bucket elided.
+    let occ = stats.batch_occupancy.snapshot();
+    let top = occ.buckets.iter().rposition(|&b| b > 0).unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &b) in occ.buckets.iter().enumerate().take(top + 1) {
+        cum += b;
+        let le = format!("{}", bucket_upper(i));
+        sample(
+            out,
+            "ebs_serve_batch_occupancy_bucket",
+            &[("model", model), ("le", &le)],
+            cum as f64,
+        );
+    }
+    sample(
+        out,
+        "ebs_serve_batch_occupancy_bucket",
+        &[("model", model), ("le", "+Inf")],
+        occ.count as f64,
+    );
+}
+
+/// The `# TYPE` header block prefixed once per scrape body.
+pub fn prometheus_header() -> &'static str {
+    "# TYPE ebs_serve_requests_total counter\n\
+     # TYPE ebs_serve_images_total counter\n\
+     # TYPE ebs_serve_batches_total counter\n\
+     # TYPE ebs_serve_swaps_total counter\n\
+     # TYPE ebs_serve_generation gauge\n\
+     # TYPE ebs_serve_qps gauge\n\
+     # TYPE ebs_serve_latency_us gauge\n\
+     # TYPE ebs_serve_batch_occupancy_bucket counter\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.snapshot().quantile(0.99), 0, "empty histogram");
+        for v in [0u64, 1, 2, 3, 4, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 1110);
+        // p50 of 7 samples is the 4th: value 3 → bucket [2,4) → upper 3.
+        assert_eq!(s.quantile(0.5), 3);
+        // p99 needs all 7: 1000 lands in [512,1024) → upper 1023.
+        assert_eq!(s.quantile(0.99), 1023);
+        assert_eq!(s.quantile(0.0), 0, "q=0 is the min bucket edge");
+    }
+
+    #[test]
+    fn bucket_mapping_is_log2_with_saturation() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1, "huge values saturate");
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(3), 7);
+    }
+
+    #[test]
+    fn model_stats_track_batches_and_latency() {
+        let s = ModelStats::default();
+        s.record_batch(4, 2);
+        s.record_batch(1, 1);
+        s.record_latency_us(100);
+        s.record_latency_us(3000);
+        assert_eq!(s.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(s.images.load(Ordering::Relaxed), 5);
+        assert_eq!(s.batch_images_max.load(Ordering::Relaxed), 4);
+        let occ = s.batch_occupancy.snapshot();
+        assert_eq!(occ.count, 2);
+        assert!(s.latency_us.snapshot().quantile(0.99) >= 3000);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_labels_and_escapes() {
+        let s = ModelStats::default();
+        s.record_batch(2, 2);
+        let mut out = String::from(prometheus_header());
+        render_model(&mut out, "mo\"del", 3, &s);
+        assert!(out.contains("# TYPE ebs_serve_generation gauge"));
+        assert!(out.contains("ebs_serve_generation{model=\"mo\\\"del\"} 3"), "{out}");
+        assert!(out.contains("outcome=\"completed\"} 2"), "{out}");
+        assert!(out.contains("le=\"+Inf\"} 1"), "{out}");
+        assert!(out.ends_with('\n'));
+    }
+}

@@ -1,7 +1,11 @@
-//! Serve worker pool (DESIGN.md §13): N threads, each holding the
-//! shared [`BdNetwork`] plus its *own* [`NetScratch`] and input
-//! concatenation buffer, so steady-state serving performs no per-batch
-//! network allocation (the §5 scratch-reuse argument, per worker).
+//! Serve worker pool (DESIGN.md §13, §15): N threads, each holding its
+//! *own* [`NetScratch`] and input concatenation buffer, so
+//! steady-state serving performs no per-batch network allocation (the
+//! §5 scratch-reuse argument, per worker).  Workers are model-blind:
+//! each [`MicroBatch`] carries the [`ResidentModel`] its requests
+//! bound at admission, and the scratch grows to whatever geometry the
+//! batch's network needs, so one pool serves every resident model and
+//! every hot-swapped generation.
 //!
 //! Worker counts resolve through [`crate::kernels::resolve_threads`]
 //! (0 = machine parallelism), the same plumbing every other thread
@@ -59,25 +63,29 @@ fn worker_loop(core: &ServeCore) {
     let mut xs: Vec<f32> = Vec::new();
     let max_wait = Duration::from_micros(core.cfg.max_wait_us);
     while let Some(batch) = batcher::next_batch(&core.queue, core.cfg.max_batch, max_wait) {
-        // Concatenate whole requests in arrival order; the batched
-        // forward is bit-identical per image at any composition, so
-        // this equals a direct classify_batch on the same inputs.
+        // Concatenate whole requests in arrival order; all of them
+        // bound the same generation (batcher invariant), and the
+        // batched forward is bit-identical per image at any
+        // composition, so this equals a direct classify_batch on
+        // `batch.model.net` with the same inputs.
         xs.clear();
         for r in &batch.requests {
             xs.extend_from_slice(&r.images);
         }
-        let preds = core.net.classify_batch_with(&xs, batch.images, &mut scratch);
+        let preds = batch.model.net.classify_batch_with(&xs, batch.images, &mut scratch);
         debug_assert_eq!(preds.len(), batch.images);
         // Counters update BEFORE any reply goes out: a client that
         // just received its answer must never observe stats that don't
         // include it (the CI smoke asserts on this ordering).
         core.stats.record_batch(batch.images, batch.requests.len());
+        batch.model.stats.record_batch(batch.images, batch.requests.len());
         let mut off = 0;
         for r in batch.requests {
             let labels = preds[off..off + r.count].to_vec();
             off += r.count;
             let us = r.enqueued.elapsed().as_micros().min(u64::MAX as u128) as u64;
             core.stats.record_latency_us(us);
+            batch.model.stats.record_latency_us(us);
             (r.reply)(labels);
         }
     }

@@ -5,6 +5,7 @@ pub mod cli;
 pub mod json;
 pub mod mem;
 pub mod rng;
+pub mod sha256;
 pub mod toml;
 
 pub use rng::Rng;

@@ -1,20 +1,22 @@
-//! Serve-layer integration tests (DESIGN.md §13): bit-identical
+//! Serve-layer integration tests (DESIGN.md §13, §15): bit-identical
 //! served predictions, graceful shutdown drain, admission control,
 //! and the TCP front-end under concurrent load.
 //!
 //! The deterministic boundary behavior of the coalescer itself
 //! (exactly-at-max_batch, never-split, oversized-alone) is pinned by
 //! the unit tests in `serve::batcher`; these tests cover the threaded
-//! end of the same contracts.
+//! end of the same contracts.  Gateway-tier behavior (multi-model
+//! routing, hot swap, telemetry, protocol v2 errors over the wire)
+//! lives in tests/serve_gateway.rs.
 
 use std::net::TcpStream;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use ebs::bd::BdNetwork;
 use ebs::serve::protocol::{self, Request, Response};
-use ebs::serve::queue::RequestQueue;
 use ebs::serve::server::Server;
-use ebs::serve::{ServeCfg, ServeCore, ServeHandle, ServeStats, SubmitError};
+use ebs::serve::{no_loader, ServeCfg, ServeCore, ServeHandle, SubmitError};
 use ebs::util::Rng;
 
 fn test_cfg(workers: usize, max_batch: usize, max_wait_us: u64) -> ServeCfg {
@@ -24,6 +26,7 @@ fn test_cfg(workers: usize, max_batch: usize, max_wait_us: u64) -> ServeCfg {
         max_batch,
         max_wait_us,
         queue_depth: 256,
+        metrics_addr: String::new(),
     }
 }
 
@@ -59,15 +62,15 @@ fn served_predictions_bit_identical_to_direct_classify_batch() {
     let n = 24;
     let (xs, direct, img_sz) = pool(7, n);
     for workers in [1usize, 3] {
-        let handle =
-            Arc::new(ServeHandle::start(BdNetwork::synthetic(7), test_cfg(workers, 8, 2000)));
+        let handle = Arc::new(ServeHandle::start_synthetic(7, test_cfg(workers, 8, 2000)));
         let mut joins = Vec::new();
         for (off, count) in request_plan(n) {
             let h = Arc::clone(&handle);
             let req = xs[off * img_sz..(off + count) * img_sz].to_vec();
             let want = direct[off..off + count].to_vec();
             joins.push(std::thread::spawn(move || {
-                let got = h.classify(req, count).unwrap();
+                // Empty model name = the sole resident model.
+                let got = h.classify("", req, count).unwrap();
                 assert_eq!(got, want, "request at offset {off} (count {count})");
             }));
         }
@@ -80,10 +83,13 @@ fn served_predictions_bit_identical_to_direct_classify_batch() {
             Err(_) => panic!("all clients joined; handle must be unique"),
         }
         let stats = &core.stats;
-        let images = stats.images.load(std::sync::atomic::Ordering::Relaxed);
-        let batch_max = stats.batch_images_max.load(std::sync::atomic::Ordering::Relaxed);
+        let images = stats.images.load(Ordering::Relaxed);
+        let batch_max = stats.batch_images_max.load(Ordering::Relaxed);
         assert_eq!(images as usize, n, "workers={workers}");
         assert!(batch_max <= 8, "coalescer must respect max_batch (saw {batch_max})");
+        // Per-model telemetry agrees with the global counters.
+        let m = core.registry.resolve("default").unwrap();
+        assert_eq!(m.stats.images.load(Ordering::Relaxed) as usize, n);
     }
 }
 
@@ -94,11 +100,11 @@ fn served_predictions_bit_identical_to_direct_classify_batch() {
 fn shutdown_answers_all_queued_requests_and_rejects_new_ones() {
     let n = 40;
     let (xs, direct, img_sz) = pool(11, n);
-    let handle = ServeHandle::start(BdNetwork::synthetic(11), test_cfg(1, 4, 0));
+    let handle = ServeHandle::start_synthetic(11, test_cfg(1, 4, 0));
     let core = Arc::clone(&handle.core);
     let receivers: Vec<_> = (0..n)
         .map(|i| {
-            core.submit(xs[i * img_sz..(i + 1) * img_sz].to_vec(), 1)
+            core.submit("default", xs[i * img_sz..(i + 1) * img_sz].to_vec(), 1)
                 .expect("queue_depth 256 admits the whole burst")
         })
         .collect();
@@ -108,12 +114,12 @@ fn shutdown_answers_all_queued_requests_and_rejects_new_ones() {
         let preds = rx.recv().expect("admitted request must be answered, not dropped");
         assert_eq!(preds, &direct[i..i + 1], "request {i}");
     }
-    match core.submit(xs[..img_sz].to_vec(), 1) {
+    match core.submit("default", xs[..img_sz].to_vec(), 1) {
         Err(SubmitError::ShuttingDown) => {}
         other => panic!("post-shutdown submit must be rejected, got {other:?}"),
     }
-    let admitted = core.stats.admitted.load(std::sync::atomic::Ordering::Relaxed);
-    let completed = core.stats.completed.load(std::sync::atomic::Ordering::Relaxed);
+    let admitted = core.stats.admitted.load(Ordering::Relaxed);
+    let completed = core.stats.completed.load(Ordering::Relaxed);
     assert_eq!((admitted, completed), (n as u64, n as u64));
 }
 
@@ -122,23 +128,26 @@ fn shutdown_answers_all_queued_requests_and_rejects_new_ones() {
 /// synchronously (backpressure, not buffering).
 #[test]
 fn bounded_queue_rejects_overflow_synchronously() {
-    let net = BdNetwork::synthetic(3);
-    let img_sz = net.input_hw * net.input_hw * net.input_ch;
-    let core = ServeCore {
-        net: Arc::new(net),
-        queue: Arc::new(RequestQueue::new(2)),
-        stats: Arc::new(ServeStats::default()),
-        cfg: test_cfg(1, 8, 0),
-    };
-    let img = vec![0.5f32; img_sz];
-    assert!(core.submit(img.clone(), 1).is_ok());
-    assert!(core.submit(img.clone(), 1).is_ok());
-    match core.submit(img.clone(), 1) {
+    let mut cfg = test_cfg(1, 8, 0);
+    cfg.queue_depth = 2;
+    let core = ServeCore::new(cfg, no_loader());
+    let resident = core.registry.publish_synthetic("m", 3);
+    let img = vec![0.5f32; resident.image_size()];
+    assert!(core.submit("m", img.clone(), 1).is_ok());
+    assert!(core.submit("m", img.clone(), 1).is_ok());
+    match core.submit("m", img.clone(), 1) {
         Err(SubmitError::Overloaded) => {}
         other => panic!("third submit must hit admission control, got {other:?}"),
     }
-    let rejected = core.stats.rejected_full.load(std::sync::atomic::Ordering::Relaxed);
-    assert_eq!(rejected, 1);
+    assert_eq!(core.stats.rejected_full.load(Ordering::Relaxed), 1);
+    // The rejection is attributed to the model it targeted, too.
+    assert_eq!(resident.stats.rejected_full.load(Ordering::Relaxed), 1);
+    // A submission to a model that is not resident is refused without
+    // touching the queue.
+    match core.submit("ghost", img, 1) {
+        Err(SubmitError::UnknownModel) => {}
+        other => panic!("unknown model must be refused, got {other:?}"),
+    }
 }
 
 fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
@@ -154,7 +163,9 @@ fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
 fn tcp_server_serves_concurrent_load_and_shuts_down_cleanly() {
     let n = 24;
     let (xs, direct, img_sz) = pool(9, n);
-    let server = Server::bind(BdNetwork::synthetic(9), test_cfg(2, 8, 500)).unwrap();
+    let core = ServeCore::new(test_cfg(2, 8, 500), no_loader());
+    core.registry.publish_synthetic("default", 9);
+    let server = Server::bind(core).unwrap();
     let addr = server.local_addr().unwrap();
     let server_join = std::thread::spawn(move || server.run());
 
@@ -173,6 +184,7 @@ fn tcp_server_serves_concurrent_load_and_shuts_down_cleanly() {
                 let id = (t * 1000 + i) as u32;
                 let req = Request::Classify {
                     id,
+                    model: "default".into(),
                     count: count as u32,
                     images: xs[off * img_sz..(off + count) * img_sz].to_vec(),
                 };
@@ -192,17 +204,21 @@ fn tcp_server_serves_concurrent_load_and_shuts_down_cleanly() {
         c.join().unwrap();
     }
 
-    // Control connection: malformed frame → error; stats; shutdown.
+    // Control connection: bad geometry → error (session survives);
+    // stats; shutdown.
     let mut ctl = TcpStream::connect(addr).unwrap();
-    match roundtrip(&mut ctl, &Request::Classify { id: 5, count: 3, images: vec![0.0; 7] }) {
-        Response::Error { id, code, .. } => {
+    let bad = Request::Classify { id: 5, model: String::new(), count: 3, images: vec![0.0; 7] };
+    match roundtrip(&mut ctl, &bad) {
+        Response::Error { id, code, msg } => {
             assert_eq!((id, code), (5, protocol::ERR_BAD_REQUEST));
+            assert!(msg.contains("image size"), "error must carry the cause: {msg}");
         }
         other => panic!("bad geometry must be rejected, got {other:?}"),
     }
-    match roundtrip(&mut ctl, &Request::Stats { id: 6 }) {
+    match roundtrip(&mut ctl, &Request::Stats { id: 6, model: String::new() }) {
         Response::Stats { id, json } => {
             assert_eq!(id, 6);
+            assert!(json.contains("\"models\""), "stats must list residents: {json}");
             assert!(json.contains("\"input_hw\""), "stats must expose geometry: {json}");
             assert!(json.contains("\"batches\""), "stats must expose counters: {json}");
         }

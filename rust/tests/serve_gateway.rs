@@ -1,0 +1,316 @@
+//! Gateway-tier integration tests (DESIGN.md §15): multi-model
+//! routing, atomic hot swap under concurrent load, artifact checksum
+//! protection of the registry, and protocol v2 over TCP (model
+//! addressing, `load` hot swaps, metrics, versioned frame errors).
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ebs::bd::artifact::{CKPT_FILE, SELECTION_FILE};
+use ebs::bd::{BdNetwork, DeploymentArtifact};
+use ebs::coordinator::Selection;
+use ebs::serve::protocol::{self, Request, Response};
+use ebs::serve::server::Server;
+use ebs::serve::{no_loader, LoadedModel, ModelLoader, ServeCfg, ServeCore, ServeHandle};
+use ebs::util::Rng;
+
+fn gw_cfg(workers: usize, max_batch: usize, max_wait_us: u64, queue_depth: usize) -> ServeCfg {
+    ServeCfg {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        max_batch,
+        max_wait_us,
+        queue_depth,
+        metrics_addr: String::new(),
+    }
+}
+
+/// Deterministic image pool sized for the synthetic net geometry.
+fn images(n: usize, img_sz: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * img_sz).map(|_| rng.normal().abs()).collect()
+}
+
+/// Tentpole contract: a hot swap under concurrent load loses no
+/// request, and every answer is bit-identical to a direct
+/// `classify_batch` on *whichever generation admitted it* — old-exact
+/// or new-exact, never a blend.
+#[test]
+fn hot_swap_under_load_drops_nothing_and_answers_are_generation_exact() {
+    let old = BdNetwork::synthetic(11);
+    let new = BdNetwork::synthetic(22);
+    let img_sz = old.input_hw * old.input_hw * old.input_ch;
+    let n = 32;
+    let xs = images(n, img_sz, 0xABCD);
+    let old_direct = old.classify_batch(&xs, n);
+    let new_direct = new.classify_batch(&xs, n);
+
+    let core = ServeCore::new(gw_cfg(2, 4, 200, 1024), no_loader());
+    let gen1 = core.load_model("m", "synthetic:11").unwrap();
+    assert_eq!(gen1.generation, 1);
+    let handle = ServeHandle::start(Arc::clone(&core));
+
+    let xs = Arc::new(xs);
+    let old_d = Arc::new(old_direct);
+    let new_d = Arc::new(new_direct);
+    let mut clients = Vec::new();
+    for t in 0..4usize {
+        let core = Arc::clone(&core);
+        let (xs, old_d, new_d) = (Arc::clone(&xs), Arc::clone(&old_d), Arc::clone(&new_d));
+        clients.push(std::thread::spawn(move || {
+            for round in 0..25usize {
+                // Burst of 4 mixed-size requests, then collect: keeps
+                // the queue non-trivially occupied across the swap.
+                let mut pending = Vec::new();
+                for j in 0..4usize {
+                    let count = 1 + (round + j) % 3;
+                    let i = (t * 7 + round * 5 + j * 3) % (n - 3);
+                    let req = xs[i * img_sz..(i + count) * img_sz].to_vec();
+                    let rx = core.submit("m", req, count).expect("deep queue admits the burst");
+                    pending.push((i, count, rx));
+                }
+                for (i, count, rx) in pending {
+                    let got = rx.recv().expect("admitted request must be answered, not dropped");
+                    let wo = &old_d[i..i + count];
+                    let wn = &new_d[i..i + count];
+                    assert!(
+                        got == wo || got == wn,
+                        "request [{i}..{}] must be old-net-exact or new-net-exact \
+                         (got {got:?}, old {wo:?}, new {wn:?})",
+                        i + count
+                    );
+                }
+            }
+        }));
+    }
+
+    // Swap while the clients are mid-flight.
+    std::thread::sleep(Duration::from_millis(30));
+    let gen2 = core.load_model("m", "synthetic:22").unwrap();
+    assert!(gen2.generation > gen1.generation);
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // Post-swap admissions run on the new generation, bit-exactly.
+    let got = handle.classify("m", xs[..2 * img_sz].to_vec(), 2).unwrap();
+    assert_eq!(got, &new_d[..2], "post-swap request must be new-net-exact");
+
+    let m = core.registry.resolve("m").unwrap();
+    assert_eq!(m.stats.swaps.load(Ordering::Relaxed), 1, "the swap is recorded");
+    assert_eq!(m.generation, gen2.generation);
+    handle.shutdown();
+    let admitted = core.stats.admitted.load(Ordering::Relaxed);
+    let completed = core.stats.completed.load(Ordering::Relaxed);
+    assert_eq!(admitted, completed, "zero-downtime swap: nothing dropped");
+}
+
+/// Multi-model routing: requests reach the model they name, per-model
+/// telemetry attributes work to the right model, and the empty
+/// "default" name is refused once it becomes ambiguous.
+#[test]
+fn multi_model_routing_is_exact_and_attributed() {
+    let net_a = BdNetwork::synthetic(5);
+    let net_b = BdNetwork::synthetic(6);
+    let img_sz = net_a.input_hw * net_a.input_hw * net_a.input_ch;
+    let n = 8;
+    let xs = images(n, img_sz, 0x5151);
+    let direct_a = net_a.classify_batch(&xs, n);
+    let direct_b = net_b.classify_batch(&xs, n);
+
+    let core = ServeCore::new(gw_cfg(2, 4, 500, 256), no_loader());
+    core.registry.publish_synthetic("a", 5);
+    core.registry.publish_synthetic("b", 6);
+    let handle = ServeHandle::start(Arc::clone(&core));
+
+    // Interleave the two models over the same inputs.
+    for i in 0..n {
+        let req = xs[i * img_sz..(i + 1) * img_sz].to_vec();
+        let got_a = handle.classify("a", req.clone(), 1).unwrap();
+        let got_b = handle.classify("b", req, 1).unwrap();
+        assert_eq!(got_a, &direct_a[i..i + 1], "model a, image {i}");
+        assert_eq!(got_b, &direct_b[i..i + 1], "model b, image {i}");
+    }
+    assert!(
+        handle.classify("", xs[..img_sz].to_vec(), 1).is_err(),
+        "empty model name is ambiguous with two residents"
+    );
+    let a = core.registry.resolve("a").unwrap();
+    let b = core.registry.resolve("b").unwrap();
+    assert_eq!(a.stats.images.load(Ordering::Relaxed), n as u64);
+    assert_eq!(b.stats.images.load(Ordering::Relaxed), n as u64);
+    let metrics = core.metrics_text();
+    assert!(metrics.contains("ebs_serve_images_total{model=\"a\"} 8"), "{metrics}");
+    assert!(metrics.contains("ebs_serve_images_total{model=\"b\"} 8"), "{metrics}");
+    handle.shutdown();
+}
+
+/// A tampered artifact must be refused by the loader path *without*
+/// disturbing the resident generation: the swap is all-or-nothing.
+#[test]
+fn checksum_mismatch_rejects_swap_and_keeps_current_generation() {
+    let dir = std::env::temp_dir()
+        .join(format!("ebs_gateway_tamper_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join(CKPT_FILE), b"checkpoint-bytes").unwrap();
+    Selection { w_bits: vec![2, 3], x_bits: vec![4, 2] }
+        .save(&dir.join(SELECTION_FILE))
+        .unwrap();
+    DeploymentArtifact::write(&dir, "m", "v-good").unwrap();
+    // Tamper after sealing.
+    std::fs::write(dir.join(CKPT_FILE), b"tampered-bytes").unwrap();
+
+    // A loader that would happily serve if verification passed.
+    let loader: ModelLoader = Arc::new(|source: &str| {
+        let art = DeploymentArtifact::load(&PathBuf::from(source))?;
+        Ok(LoadedModel { version: art.version, net: BdNetwork::synthetic(99) })
+    });
+    let core = ServeCore::new(gw_cfg(1, 4, 0, 64), loader);
+    let gen1 = core.load_model("m", "synthetic:11").unwrap();
+
+    let err = core
+        .load_model("m", dir.to_str().unwrap())
+        .expect_err("tampered artifact must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checksum mismatch"), "cause must name the check: {msg}");
+
+    // The registry still serves the old generation.
+    let current = core.registry.resolve("m").unwrap();
+    assert_eq!(current.generation, gen1.generation, "failed swap must not disturb serving");
+    assert_eq!(current.stats.swaps.load(Ordering::Relaxed), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn roundtrip(stream: &mut TcpStream, req: &Request) -> Response {
+    use std::io::Write;
+    stream.write_all(&protocol::encode_request(req)).unwrap();
+    let payload = protocol::read_frame(stream).unwrap().expect("server hung up mid-request");
+    protocol::decode_response(&payload).unwrap()
+}
+
+/// The full gateway over TCP: model-addressed classify, per-model
+/// stats, a wire-driven hot swap, the metrics endpoint (protocol and
+/// HTTP), and the v1-frame rejection contract.
+#[test]
+fn tcp_gateway_routes_swaps_and_reports() {
+    use std::io::{Read, Write};
+
+    let net_a = BdNetwork::synthetic(11);
+    let img_sz = net_a.input_hw * net_a.input_hw * net_a.input_ch;
+    let xs = images(2, img_sz, 0x7777);
+    let direct_a = net_a.classify_batch(&xs, 2);
+    let direct_swapped = BdNetwork::synthetic(33).classify_batch(&xs, 2);
+
+    let mut cfg = gw_cfg(2, 8, 500, 256);
+    cfg.metrics_addr = "127.0.0.1:0".into();
+    let core = ServeCore::new(cfg, no_loader());
+    core.registry.publish_synthetic("a", 11);
+    core.registry.publish_synthetic("b", 22);
+    let server = Server::bind(Arc::clone(&core)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let maddr = server.metrics_addr().expect("metrics listener bound");
+    let server_join = std::thread::spawn(move || server.run());
+
+    let mut ctl = TcpStream::connect(addr).unwrap();
+
+    // Model-addressed classify.
+    let req = Request::Classify { id: 1, model: "a".into(), count: 2, images: xs.clone() };
+    match roundtrip(&mut ctl, &req) {
+        Response::Classify { id, labels } => {
+            assert_eq!(id, 1);
+            let want: Vec<u32> = direct_a.iter().map(|&p| p as u32).collect();
+            assert_eq!(labels, want);
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    // Unknown model → typed error, session survives.
+    let ghost = Request::Classify { id: 2, model: "ghost".into(), count: 1, images: vec![0.0; img_sz] };
+    match roundtrip(&mut ctl, &ghost) {
+        Response::Error { id, code, msg } => {
+            assert_eq!((id, code), (2, protocol::ERR_UNKNOWN_MODEL));
+            assert!(msg.contains("ghost"), "cause names the model: {msg}");
+        }
+        other => panic!("unknown model must error, got {other:?}"),
+    }
+    // Per-model stats.
+    match roundtrip(&mut ctl, &Request::Stats { id: 3, model: "a".into() }) {
+        Response::Stats { id, json } => {
+            assert_eq!(id, 3);
+            assert!(json.contains("\"admitted\""), "{json}");
+            assert!(json.contains("\"generation\""), "{json}");
+        }
+        other => panic!("unexpected stats response {other:?}"),
+    }
+    // Wire-driven hot swap; the ack reports the new generation.
+    let load = Request::Load { id: 4, model: "a".into(), source: "synthetic:33".into() };
+    let gen = match roundtrip(&mut ctl, &load) {
+        Response::LoadAck { id, generation, version } => {
+            assert_eq!(id, 4);
+            assert_eq!(version, "synthetic:33");
+            generation
+        }
+        other => panic!("unexpected load response {other:?}"),
+    };
+    assert!(gen >= 3, "swap generation must exceed both initial publishes");
+    let req = Request::Classify { id: 5, model: "a".into(), count: 2, images: xs.clone() };
+    match roundtrip(&mut ctl, &req) {
+        Response::Classify { labels, .. } => {
+            let want: Vec<u32> = direct_swapped.iter().map(|&p| p as u32).collect();
+            assert_eq!(labels, want, "post-swap classify must be new-net-exact");
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    // A load that fails (unknown source) is a typed error carrying the
+    // cause, and serving continues.
+    let bad = Request::Load { id: 6, model: "a".into(), source: "/no/such/artifact".into() };
+    match roundtrip(&mut ctl, &bad) {
+        Response::Error { id, code, msg } => {
+            assert_eq!((id, code), (6, protocol::ERR_LOAD_FAILED));
+            assert!(!msg.is_empty(), "load errors must carry a cause");
+        }
+        other => panic!("bad load must error, got {other:?}"),
+    }
+    // Metrics over the protocol.
+    match roundtrip(&mut ctl, &Request::Metrics { id: 7 }) {
+        Response::Metrics { id, text } => {
+            assert_eq!(id, 7);
+            assert!(text.contains("# TYPE ebs_serve_requests_total counter"), "{text}");
+            assert!(text.contains(&format!("ebs_serve_generation{{model=\"a\"}} {gen}")), "{text}");
+        }
+        other => panic!("unexpected metrics response {other:?}"),
+    }
+    // Metrics over HTTP (the Prometheus scrape path).
+    let mut scrape = TcpStream::connect(maddr).unwrap();
+    scrape.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut http = String::new();
+    scrape.read_to_string(&mut http).unwrap();
+    assert!(http.starts_with("HTTP/1.1 200 OK"), "{http}");
+    assert!(http.contains("ebs_serve_requests_total{model=\"a\""), "{http}");
+
+    // The v1-frame rejection contract: a bare length-prefixed frame
+    // gets a versioned error frame with the cause, then a close.
+    let mut v1 = TcpStream::connect(addr).unwrap();
+    v1.write_all(&[5, 0, 0, 0, 0x02, 1, 0, 0, 0]).unwrap();
+    let payload = protocol::read_frame(&mut v1).unwrap().expect("error frame expected");
+    match protocol::decode_response(&payload).unwrap() {
+        Response::Error { id, code, msg } => {
+            assert_eq!((id, code), (0, protocol::ERR_UNSUPPORTED_VERSION));
+            assert!(msg.contains("magic"), "cause describes the header: {msg}");
+        }
+        other => panic!("v1 frame must be refused, got {other:?}"),
+    }
+    assert!(
+        protocol::read_frame(&mut v1).unwrap().is_none(),
+        "the session closes after an unrecoverable frame error"
+    );
+
+    match roundtrip(&mut ctl, &Request::Shutdown { id: 8 }) {
+        Response::ShutdownAck { id } => assert_eq!(id, 8),
+        other => panic!("unexpected shutdown response {other:?}"),
+    }
+    server_join.join().unwrap().unwrap();
+}
