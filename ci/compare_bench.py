@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Compare fresh BENCH_*.json medians against the committed baseline.
 
-Usage: compare_bench.py <baseline.json> <fresh.json> [warn_ratio] [fail_ratio]
+Usage: compare_bench.py [--require-real] <baseline.json> <fresh.json> [warn_ratio] [fail_ratio]
 
 Both files use the DESIGN.md §9 envelope `{bench, reps, threads,
 tile_co, tile_n, rows}`.  Rows are matched on every non-latency field
@@ -21,6 +21,15 @@ benches — the end-to-end serve loop, the sharded search step — run
 whole concurrent subsystems and are inherently noisier on shared CI
 runners than the single-kernel benches); anything unlisted gets the
 (1.3, 1.5) default.
+
+Baseline trust: a committed baseline may carry `"provisional": true`,
+meaning it was seeded from an untrusted (first-run / hand-rolled)
+measurement rather than a vetted bench-json artifact.  Under
+`--require-real`, a provisional baseline only *warns* — hard failures
+are demoted to annotations and the script exits 0 — while a
+non-provisional baseline enforces the full band.  To mark a refreshed
+baseline trusted, copy a CI run's bench-json artifact into
+`ci/bench-baseline/` and drop the `provisional` key.
 """
 
 import json
@@ -61,10 +70,12 @@ def row_key(row):
 
 
 def main():
-    if len(sys.argv) < 3:
+    require_real = "--require-real" in sys.argv[1:]
+    argv = [a for a in sys.argv if a != "--require-real"]
+    if len(argv) < 3:
         print(__doc__)
         return 0
-    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    baseline_path, fresh_path = argv[1], argv[2]
     try:
         with open(baseline_path) as f:
             baseline = json.load(f)
@@ -74,7 +85,11 @@ def main():
         return 0
     with open(fresh_path) as f:
         fresh = json.load(f)
-    warn_ratio, fail_ratio = thresholds_for(fresh.get("bench"), sys.argv)
+    warn_ratio, fail_ratio = thresholds_for(fresh.get("bench"), argv)
+    # Provisional baselines never hard-gate under --require-real: they
+    # were not measured on a trusted runner, so a "regression" against
+    # them is noise until a real baseline is committed.
+    enforce = not (require_real and baseline.get("provisional"))
 
     base_rows = {row_key(r): r for r in baseline.get("rows", [])}
     checked = warned = failed = 0
@@ -97,16 +112,22 @@ def main():
                 f"bench regression in {fresh.get('bench', '?')} {ident}: {field} "
                 f"{old:.3f}ms -> {value:.3f}ms ({ratio:.2f}x)"
             )
-            if ratio > fail_ratio:
+            if ratio > fail_ratio and enforce:
                 failed += 1
                 print(f"::error file={fresh_path}::{detail} > {fail_ratio}x hard limit")
+            elif ratio > fail_ratio:
+                warned += 1
+                print(f"::warning file={fresh_path}::{detail} > {fail_ratio}x hard limit "
+                      "(demoted: baseline is provisional)")
             else:
                 warned += 1
                 print(f"::warning file={fresh_path}::{detail} > {warn_ratio}x")
+    trust = "provisional, warn-only" if not enforce else (
+        "trusted" if require_real else "enforced")
     print(
         f"[bench-diff] {fresh.get('bench', '?')}: compared {checked} medians "
-        f"against {baseline_path} (warn > {warn_ratio}x, fail > {fail_ratio}x); "
-        f"{warned} warned, {failed} failed"
+        f"against {baseline_path} [{trust}] (warn > {warn_ratio}x, "
+        f"fail > {fail_ratio}x); {warned} warned, {failed} failed"
     )
     return 1 if failed else 0
 

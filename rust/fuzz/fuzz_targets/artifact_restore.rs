@@ -1,0 +1,12 @@
+//! Deployment-artifact restore: `deploy_manifest.json` parse and
+//! checkpoint stream decode on arbitrary bytes must surface typed
+//! `ArtifactError`s / `anyhow` errors, never panic or allocate
+//! proportionally to hostile length fields.  Body shared with tier-1
+//! via `ebs::fuzzing`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    ebs::fuzzing::fuzz_artifact_restore(data);
+});

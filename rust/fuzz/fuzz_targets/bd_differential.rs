@@ -1,0 +1,11 @@
+//! Differential GEMM: arbitrary (shape, bit pair, tiles, threads)
+//! cases where the two-stage, fused, tiled and parallel AND+POPCNT
+//! paths must all match the naive integer reference bit-for-bit.
+//! Body shared with tier-1 via `ebs::fuzzing`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    ebs::fuzzing::fuzz_bd_differential(data);
+});

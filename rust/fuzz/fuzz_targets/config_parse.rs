@@ -1,0 +1,9 @@
+//! TOML config parse + typed `RunConfig` extraction on arbitrary
+//! bytes.  Body shared with tier-1 via `ebs::fuzzing`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    ebs::fuzzing::fuzz_config_parse(data);
+});

@@ -1,0 +1,10 @@
+//! Protocol v2 frame + payload decode: arbitrary bytes must yield a
+//! typed `FrameError`/decode error, never a panic or unbounded
+//! allocation.  Body shared with tier-1 via `ebs::fuzzing`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    ebs::fuzzing::fuzz_protocol_decode(data);
+});

@@ -155,55 +155,24 @@ impl DeploymentArtifact {
             Ok(t) => t,
             Err(_) => return Err(ArtifactError::MissingManifest(dir.to_path_buf())),
         };
-        let corrupt = |cause: String| ArtifactError::CorruptManifest {
-            path: mpath.clone(),
-            cause,
-        };
-        let doc = parse(&text).map_err(|e| corrupt(format!("{e:#}")))?;
-        let format = doc
-            .req("artifact_format")
-            .and_then(|v| v.as_u64())
-            .map_err(|e| corrupt(format!("{e:#}")))?;
-        if format != ARTIFACT_FORMAT {
-            return Err(ArtifactError::VersionSkew { found: format, supported: ARTIFACT_FORMAT });
-        }
-        let str_field = |key: &str| -> std::result::Result<String, ArtifactError> {
-            doc.req(key)
-                .and_then(|v| v.as_str().map(str::to_string))
-                .map_err(|e| corrupt(format!("{e:#}")))
-        };
-        let model = str_field("model")?;
-        let version = str_field("version")?;
-        let sel_json = doc.req("selection").map_err(|e| corrupt(format!("{e:#}")))?;
-        let sel_bits = |key: &str| -> std::result::Result<Vec<u32>, ArtifactError> {
-            sel_json
-                .req(key)
-                .and_then(|v| v.as_arr())
-                .map_err(|e| corrupt(format!("{e:#}")))?
-                .iter()
-                .map(|v| v.as_usize().map(|b| b as u32).map_err(|e| corrupt(format!("{e:#}"))))
-                .collect()
-        };
-        let selection = Selection { w_bits: sel_bits("w_bits")?, x_bits: sel_bits("x_bits")? };
-        let files_obj = doc
-            .req("files")
-            .and_then(|v| v.as_obj().map(|o| o.to_vec()))
-            .map_err(|e| corrupt(format!("{e:#}")))?;
-        let mut files = Vec::with_capacity(files_obj.len());
-        for (name, v) in &files_obj {
-            let want = v
-                .as_str()
-                .map_err(|e| corrupt(format!("checksum for '{name}': {e:#}")))?
-                .to_string();
-            let got = sha256::file_digest(&dir.join(name)).map_err(|e| {
+        let manifest = parse_manifest(&text, &mpath)?;
+        let mut files = Vec::with_capacity(manifest.files.len());
+        for (name, want) in manifest.files {
+            let got = sha256::file_digest(&dir.join(&name)).map_err(|e| {
                 ArtifactError::MissingFile { file: name.clone(), cause: e.to_string() }
             })?;
             if got != want {
-                return Err(ArtifactError::ChecksumMismatch { file: name.clone(), want, got });
+                return Err(ArtifactError::ChecksumMismatch { file: name, want, got });
             }
-            files.push((name.clone(), want));
+            files.push((name, want));
         }
-        Ok(DeploymentArtifact { dir: dir.to_path_buf(), model, version, selection, files })
+        Ok(DeploymentArtifact {
+            dir: dir.to_path_buf(),
+            model: manifest.model,
+            version: manifest.version,
+            selection: manifest.selection,
+            files,
+        })
     }
 
     /// Assemble the deployable [`BdNetwork`] from the verified files.
@@ -214,6 +183,79 @@ impl DeploymentArtifact {
             .with_context(|| format!("loading {} from {}", CKPT_FILE, self.dir.display()))?;
         BdNetwork::from_state(manifest, &state, &self.selection, mode)
     }
+}
+
+/// Manifest metadata as parsed (file checksums not yet verified).
+#[derive(Debug, Clone)]
+pub struct ParsedManifest {
+    pub model: String,
+    pub version: String,
+    pub selection: Selection,
+    /// `(relative file, sealed sha256 hex)` in manifest order.
+    pub files: Vec<(String, String)>,
+}
+
+/// Parse and validate manifest *text* — the pure half of
+/// [`DeploymentArtifact::load`], split out so the fuzz harness can
+/// drive it with arbitrary bytes and no filesystem.  `mpath` is only
+/// used to attribute [`ArtifactError::CorruptManifest`].
+///
+/// File names come from an untrusted manifest and are later joined to
+/// the artifact directory, so anything that could escape it (path
+/// separators, `..` components, absolute paths, empty names) is
+/// rejected here as corruption rather than handed to the filesystem.
+pub fn parse_manifest(
+    text: &str,
+    mpath: &Path,
+) -> std::result::Result<ParsedManifest, ArtifactError> {
+    let corrupt =
+        |cause: String| ArtifactError::CorruptManifest { path: mpath.to_path_buf(), cause };
+    let doc = parse(text).map_err(|e| corrupt(format!("{e:#}")))?;
+    let format = doc
+        .req("artifact_format")
+        .and_then(|v| v.as_u64())
+        .map_err(|e| corrupt(format!("{e:#}")))?;
+    if format != ARTIFACT_FORMAT {
+        return Err(ArtifactError::VersionSkew { found: format, supported: ARTIFACT_FORMAT });
+    }
+    let str_field = |key: &str| -> std::result::Result<String, ArtifactError> {
+        doc.req(key)
+            .and_then(|v| v.as_str().map(str::to_string))
+            .map_err(|e| corrupt(format!("{e:#}")))
+    };
+    let model = str_field("model")?;
+    let version = str_field("version")?;
+    let sel_json = doc.req("selection").map_err(|e| corrupt(format!("{e:#}")))?;
+    let sel_bits = |key: &str| -> std::result::Result<Vec<u32>, ArtifactError> {
+        sel_json
+            .req(key)
+            .and_then(|v| v.as_arr())
+            .map_err(|e| corrupt(format!("{e:#}")))?
+            .iter()
+            .map(|v| v.as_usize().map(|b| b as u32).map_err(|e| corrupt(format!("{e:#}"))))
+            .collect()
+    };
+    let selection = Selection { w_bits: sel_bits("w_bits")?, x_bits: sel_bits("x_bits")? };
+    let files_obj = doc
+        .req("files")
+        .and_then(|v| v.as_obj().map(|o| o.to_vec()))
+        .map_err(|e| corrupt(format!("{e:#}")))?;
+    let mut files = Vec::with_capacity(files_obj.len());
+    for (name, v) in &files_obj {
+        if name.is_empty()
+            || name.contains('/')
+            || name.contains('\\')
+            || name.split('.').all(str::is_empty)
+        {
+            return Err(corrupt(format!("file name '{name}' is not a plain relative name")));
+        }
+        let want = v
+            .as_str()
+            .map_err(|e| corrupt(format!("checksum for '{name}': {e:#}")))?
+            .to_string();
+        files.push((name.clone(), want));
+    }
+    Ok(ParsedManifest { model, version, selection, files })
 }
 
 #[cfg(test)]
@@ -286,6 +328,35 @@ mod tests {
             other => panic!("future format must be refused, got {other:?}"),
         }
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Fuzz regression: manifest `files` keys are attacker-controlled
+    /// and get joined to the artifact dir — names that could escape it
+    /// must be rejected as corruption before any filesystem access.
+    #[test]
+    fn traversal_file_names_in_manifest_are_rejected() {
+        for name in ["../secret", "/etc/passwd", "a/b", "a\\b", "..", ".", ""] {
+            let text = format!(
+                r#"{{"artifact_format":1,"model":"m","version":"v","selection":{{"w_bits":[2],"x_bits":[2]}},"files":{{"{}":"00"}}}}"#,
+                name.replace('\\', "\\\\")
+            );
+            match parse_manifest(&text, Path::new("test_manifest")) {
+                Err(ArtifactError::CorruptManifest { cause, .. }) => {
+                    assert!(
+                        cause.contains("not a plain relative name"),
+                        "name {name:?}: {cause}"
+                    );
+                }
+                other => panic!("hostile file name {name:?} must be rejected, got {other:?}"),
+            }
+        }
+        // A legitimate name still parses.
+        let ok = parse_manifest(
+            r#"{"artifact_format":1,"model":"m","version":"v","selection":{"w_bits":[2],"x_bits":[2]},"files":{"retrained.ckpt":"00"}}"#,
+            Path::new("test_manifest"),
+        )
+        .unwrap();
+        assert_eq!(ok.files, vec![("retrained.ckpt".to_string(), "00".to_string())]);
     }
 
     #[test]

@@ -1,0 +1,64 @@
+//! Deterministic byte-driven value derivation for fuzz harnesses — a
+//! dependency-free stand-in for the `arbitrary` crate's `Unstructured`.
+//!
+//! A [`FuzzInput`] wraps the raw fuzzer byte string and doles out small
+//! typed values; identical bytes always derive identical values, so a
+//! libFuzzer crash input replays byte-for-byte under plain `cargo test`
+//! (see `tests/fuzz_regressions.rs`).  When the input runs dry it
+//! yields zeros rather than failing — short inputs explore the
+//! all-zeros corner instead of being rejected.
+
+/// Cursor over a fuzzer-provided byte string.
+pub struct FuzzInput<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FuzzInput<'a> {
+    pub fn new(data: &'a [u8]) -> FuzzInput<'a> {
+        FuzzInput { data, pos: 0 }
+    }
+
+    /// Next byte; 0 once the input is exhausted.
+    pub fn byte(&mut self) -> u8 {
+        let b = self.data.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    /// A value in `lo..=hi`, derived from two bytes (wide enough that
+    /// every value in the ranges the harnesses use is reachable).
+    pub fn int_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let raw = u16::from_le_bytes([self.byte(), self.byte()]) as usize;
+        lo + raw % (hi - lo + 1)
+    }
+
+    /// Bytes not yet consumed.
+    pub fn rest(&self) -> &'a [u8] {
+        &self.data[self.pos.min(self.data.len())..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhausted_input_yields_zeros() {
+        let mut u = FuzzInput::new(&[7]);
+        assert_eq!(u.byte(), 7);
+        assert_eq!(u.byte(), 0);
+        assert_eq!(u.int_in(3, 9), 3, "zeros map to the range floor");
+        assert!(u.rest().is_empty());
+    }
+
+    #[test]
+    fn int_in_covers_bounds() {
+        // 2-byte little-endian derivation: raw % span + lo.
+        let mut u = FuzzInput::new(&[0, 0, 6, 0, 0xFF, 0xFF]);
+        assert_eq!(u.int_in(1, 5), 1);
+        assert_eq!(u.int_in(1, 5), 2); // 6 % 5 = 1 → lo+1
+        assert_eq!(u.int_in(0, 65535), 65535);
+    }
+}

@@ -1,0 +1,144 @@
+//! Fuzz-target bodies shared by the libFuzzer harness and tier-1 tests
+//! (DESIGN.md §16).
+//!
+//! Each boundary surface that accepts untrusted bytes — the serve wire
+//! protocol, TOML config, deployment-artifact restore — plus the
+//! fused-vs-reference GEMM differential has its target body here, as a
+//! plain `fn(&[u8])`.  The `rust/fuzz/` crate wraps these in
+//! `fuzz_target!` macros for coverage-guided runs on nightly, while
+//! `tests/fuzz_regressions.rs` replays the committed corpus (and seeded
+//! random sweeps) through the *same* functions under plain
+//! `cargo test`, so tier-1 CI exercises every fuzzed code path without
+//! a nightly toolchain.
+//!
+//! Contract for every target: arbitrary input must produce `Ok` or a
+//! typed error — never a panic, abort, or input-controlled allocation.
+//! The differential target additionally asserts that every GEMM
+//! implementation agrees with the naive integer reference bit-for-bit.
+
+mod input;
+
+pub use input::FuzzInput;
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::bd::artifact::parse_manifest;
+use crate::bd::bitplane::{pack_cols, pack_rows};
+use crate::bd::gemm::{
+    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine, GemmTiles,
+};
+use crate::config::RunConfig;
+use crate::runtime::{DType, LeafSpec, StateVec};
+use crate::serve::protocol::{decode_request, decode_response, read_frame};
+use crate::util::{json, toml};
+
+/// Transport that delivers one byte per `read` call — the worst legal
+/// short-read behavior, forcing every partial-header/payload path.
+struct Dribble<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl Read for Dribble<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self.data.get(self.pos) {
+            Some(&b) if !buf.is_empty() => {
+                buf[0] = b;
+                self.pos += 1;
+                Ok(1)
+            }
+            _ => Ok(0),
+        }
+    }
+}
+
+/// Target (a): protocol v2 framing + request/response payload decode.
+/// Covers v1 frames (bad magic), torn headers/payloads, oversized
+/// length prefixes, and hostile payloads, over both a well-behaved
+/// reader and a one-byte-at-a-time transport.
+pub fn fuzz_protocol_decode(data: &[u8]) {
+    let mut cursor = data;
+    while let Ok(Some(payload)) = read_frame(&mut cursor) {
+        let _ = decode_request(&payload);
+        let _ = decode_response(&payload);
+    }
+    // The raw bytes as a bare payload (no framing).
+    let _ = decode_request(data);
+    let _ = decode_response(data);
+    // Same stream over a dribbling transport: every read boundary
+    // lands mid-header or mid-payload at some point.
+    let mut dribble = Dribble { data, pos: 0 };
+    while let Ok(Some(payload)) = read_frame(&mut dribble) {
+        let _ = decode_request(&payload);
+    }
+}
+
+/// Target (b): TOML config parse + typed [`RunConfig`] extraction.
+pub fn fuzz_config_parse(data: &[u8]) {
+    if let Ok(text) = std::str::from_utf8(data) {
+        if let Ok(doc) = toml::parse(text) {
+            let cfg = RunConfig::from_doc(doc);
+            // Touch derived fields so extraction is not dead code.
+            let _ = (cfg.model.len(), cfg.search.shards);
+        }
+    }
+}
+
+/// Target (c): deployment-artifact restore — the manifest parser on
+/// arbitrary text and the checkpoint stream decoder on arbitrary
+/// bytes.  Both must yield typed errors, never panic or allocate
+/// proportionally to a hostile length field.
+pub fn fuzz_artifact_restore(data: &[u8]) {
+    if let Ok(text) = std::str::from_utf8(data) {
+        let _ = parse_manifest(text, Path::new("fuzz_manifest"));
+        let _ = json::parse(text);
+    }
+    let spec = [
+        LeafSpec { path: "stem/w".into(), shape: vec![2, 3], dtype: DType::F32 },
+        LeafSpec { path: "head/b".into(), shape: vec![4], dtype: DType::I32 },
+    ];
+    let _ = StateVec::read_from(&mut &data[..], &spec);
+}
+
+/// Target (d): differential GEMM — derive an arbitrary (shape, bit
+/// pair, tile, thread count) case from the input and assert that the
+/// two-stage, fused, tiled, and parallel AND+POPCNT paths all match
+/// the naive integer reference exactly.  Any divergence is a crash the
+/// fuzzer minimizes to a witness case.
+pub fn fuzz_bd_differential(data: &[u8]) {
+    let mut u = FuzzInput::new(data);
+    let co = u.int_in(1, 8);
+    let s = u.int_in(1, 192); // straddles 64-bit word boundaries
+    let n = u.int_in(1, 12);
+    let mb = u.int_in(1, 5) as u32;
+    let kb = u.int_in(1, 5) as u32;
+    let tiles = GemmTiles::new(u.int_in(1, 9), u.int_in(1, 9));
+    let threads = u.int_in(1, 4);
+    let wq: Vec<u8> = (0..co * s).map(|_| u.byte() & ((1u8 << mb) - 1)).collect();
+    let xq: Vec<u8> = (0..s * n).map(|_| u.byte() & ((1u8 << kb) - 1)).collect();
+
+    let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+    let bw = pack_rows(&wq, co, s, mb);
+    let (bx, col_sums) = pack_cols(&xq, s, n, kb);
+
+    let tag = format!("co={co} s={s} n={n} M={mb} K={kb} {tiles:?} T={threads}");
+    let p = binary_gemm_p(&bw, &bx);
+    assert_eq!(recombine(&p, co, n, mb, kb), expect, "two-stage diverged: {tag}");
+    assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "fused diverged: {tag}");
+    assert_eq!(
+        fused_tiled(&bw, &bx, co, n, mb, kb, tiles),
+        expect,
+        "fused_tiled diverged: {tag}"
+    );
+    assert_eq!(
+        par_fused(&bw, &bx, co, n, mb, kb, tiles, threads),
+        expect,
+        "par_fused diverged: {tag}"
+    );
+    // The packer's affine-decode side channel must match the codes too.
+    for (j, &got) in col_sums.iter().enumerate() {
+        let want: u32 = (0..s).map(|t| xq[t * n + j] as u32).sum();
+        assert_eq!(got, want, "col_sum[{j}] diverged: {tag}");
+    }
+}

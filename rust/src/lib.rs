@@ -26,6 +26,9 @@
 //! * [`data`] — synthetic dataset substrate + batching.
 //! * [`baselines`] — uniform precision, random search, DNAS supernet.
 //! * [`report`] — regenerators for every table/figure in the paper.
+//! * [`fuzzing`] — shared fuzz-target bodies: the libFuzzer harness in
+//!   `rust/fuzz/` and the tier-1 corpus-replay tests drive identical
+//!   code (DESIGN.md §16).
 
 pub mod baselines;
 pub mod bd;
@@ -33,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod fuzzing;
 pub mod kernels;
 pub mod models;
 pub mod native;

@@ -121,42 +121,73 @@ impl StateVec {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
         );
+        Self::read_from(&mut f, spec).with_context(|| format!("reading {}", path.display()))
+    }
+
+    /// Decode a checkpoint stream.  Checkpoints cross a trust boundary
+    /// (deployment artifacts, resume sidecars), so every length prefix
+    /// in the header is treated as hostile until proven otherwise:
+    /// counts are capped *before* any allocation sized by them, the
+    /// shape product is computed with overflow checks, and tensor data
+    /// is read incrementally so a lying element count fails at EOF
+    /// having allocated no more than the stream actually delivered.
+    pub fn read_from(r: &mut impl Read, spec: &[LeafSpec]) -> Result<StateVec> {
+        // Caps are far above anything a real state vector contains
+        // (hundreds of leaves, short slash paths, rank ≤ 4) while
+        // keeping a hostile header's worst-case allocation trivial.
+        const MAX_LEAVES: usize = 1 << 20;
+        const MAX_PATH_BYTES: usize = 4096;
+        const MAX_RANK: usize = 16;
+        const ALLOC_CHUNK: usize = 1 << 16;
+
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        r.read_exact(&mut magic)?;
         if &magic != b"EBSCKPT1" {
-            bail!("{} is not an EBS checkpoint", path.display());
+            bail!("not an EBS checkpoint (bad magic)");
         }
-        let n = read_u64(&mut f)? as usize;
-        let mut by_path: HashMap<String, Tensor> = HashMap::with_capacity(n);
+        let n = read_u64(r)? as usize;
+        if n > MAX_LEAVES {
+            bail!("checkpoint claims {n} leaves (cap {MAX_LEAVES})");
+        }
+        let mut by_path: HashMap<String, Tensor> = HashMap::with_capacity(n.min(ALLOC_CHUNK));
         for _ in 0..n {
-            let plen = read_u64(&mut f)? as usize;
+            let plen = read_u64(r)? as usize;
+            if plen > MAX_PATH_BYTES {
+                bail!("checkpoint leaf path of {plen} bytes (cap {MAX_PATH_BYTES})");
+            }
             let mut pb = vec![0u8; plen];
-            f.read_exact(&mut pb)?;
+            r.read_exact(&mut pb)?;
             let pstr = String::from_utf8(pb)?;
             let mut dt = [0u8; 1];
-            f.read_exact(&mut dt)?;
-            let rank = read_u64(&mut f)? as usize;
+            r.read_exact(&mut dt)?;
+            let rank = read_u64(r)? as usize;
+            if rank > MAX_RANK {
+                bail!("checkpoint leaf '{pstr}' claims rank {rank} (cap {MAX_RANK})");
+            }
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
-                shape.push(read_u64(&mut f)? as usize);
+                shape.push(read_u64(r)? as usize);
             }
-            let count: usize = shape.iter().product();
+            let count = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("leaf '{pstr}' shape {shape:?} overflows"))?;
             let t = match dt[0] {
                 0 => {
-                    let mut data = vec![0f32; count];
+                    let mut data = Vec::with_capacity(count.min(ALLOC_CHUNK));
                     let mut buf = [0u8; 4];
-                    for v in &mut data {
-                        f.read_exact(&mut buf)?;
-                        *v = f32::from_le_bytes(buf);
+                    for _ in 0..count {
+                        r.read_exact(&mut buf)?;
+                        data.push(f32::from_le_bytes(buf));
                     }
                     Tensor::F32 { shape, data }
                 }
                 1 => {
-                    let mut data = vec![0i32; count];
+                    let mut data = Vec::with_capacity(count.min(ALLOC_CHUNK));
                     let mut buf = [0u8; 4];
-                    for v in &mut data {
-                        f.read_exact(&mut buf)?;
-                        *v = i32::from_le_bytes(buf);
+                    for _ in 0..count {
+                        r.read_exact(&mut buf)?;
+                        data.push(i32::from_le_bytes(buf));
                     }
                     Tensor::I32 { shape, data }
                 }
@@ -187,4 +218,94 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<LeafSpec> {
+        vec![LeafSpec { path: "w".into(), shape: vec![2, 3], dtype: DType::F32 }]
+    }
+
+    /// Header with `n` leaves, then `body` spliced in as the first
+    /// leaf record (hand-built, so fields can lie).
+    fn ckpt(n: u64, body: &[u8]) -> Vec<u8> {
+        let mut b = b"EBSCKPT1".to_vec();
+        b.extend_from_slice(&n.to_le_bytes());
+        b.extend_from_slice(body);
+        b
+    }
+
+    #[test]
+    fn roundtrip_through_reader() {
+        let mut sv = StateVec::zeros(&spec());
+        if let Tensor::F32 { data, .. } = &mut sv.tensors[0] {
+            for (i, v) in data.iter_mut().enumerate() {
+                *v = i as f32 - 2.5;
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("ebs_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.ckpt");
+        sv.save(&p).unwrap();
+        let back = StateVec::load(&p, &spec()).unwrap();
+        assert_eq!(sv.tensors[0], back.tensors[0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Fuzz regressions: every length field in a checkpoint header
+    /// used to size an allocation directly; hostile values must now
+    /// error before memory is committed.
+    #[test]
+    fn hostile_headers_error_instead_of_allocating() {
+        // leaf count beyond the cap
+        let b = ckpt(u64::MAX, &[]);
+        let err = StateVec::read_from(&mut &b[..], &spec()).unwrap_err();
+        assert!(format!("{err:#}").contains("leaves"), "{err:#}");
+
+        // path length beyond the cap
+        let b = ckpt(1, &u64::MAX.to_le_bytes());
+        let err = StateVec::read_from(&mut &b[..], &spec()).unwrap_err();
+        assert!(format!("{err:#}").contains("path"), "{err:#}");
+
+        // absurd rank
+        let mut body = vec![];
+        body.extend_from_slice(&1u64.to_le_bytes()); // path len 1
+        body.push(b'w');
+        body.push(0); // dtype f32
+        body.extend_from_slice(&u64::MAX.to_le_bytes()); // rank
+        let b = ckpt(1, &body);
+        let err = StateVec::read_from(&mut &b[..], &spec()).unwrap_err();
+        assert!(format!("{err:#}").contains("rank"), "{err:#}");
+
+        // shape whose product overflows usize
+        let mut body = vec![];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(b'w');
+        body.push(0);
+        body.extend_from_slice(&2u64.to_le_bytes()); // rank 2
+        body.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        body.extend_from_slice(&4u64.to_le_bytes());
+        let b = ckpt(1, &body);
+        let err = StateVec::read_from(&mut &b[..], &spec()).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"), "{err:#}");
+
+        // element count far beyond the stream: must hit EOF cheaply,
+        // not allocate count·4 bytes up front
+        let mut body = vec![];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(b'w');
+        body.push(0);
+        body.extend_from_slice(&1u64.to_le_bytes()); // rank 1
+        body.extend_from_slice(&(1u64 << 40).to_le_bytes()); // 1T elements
+        let b = ckpt(1, &body);
+        assert!(StateVec::read_from(&mut &b[..], &spec()).is_err());
+
+        // bad magic
+        let mut b = b"NOTACKPT".to_vec();
+        b.extend_from_slice(&0u64.to_le_bytes());
+        let err = StateVec::read_from(&mut &b[..], &spec()).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    }
 }

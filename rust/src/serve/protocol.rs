@@ -170,8 +170,27 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
     if len > MAX_FRAME {
         return Err(FrameError::Oversized(len));
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
+    // Read the payload in bounded chunks instead of trusting the
+    // length prefix with one up-front allocation: a hostile header
+    // claiming (say) 64 MiB backed by a 10-byte stream costs one
+    // 64 KiB buffer before the Truncated error, not 64 MiB.
+    const READ_CHUNK: usize = 64 << 10;
+    let mut payload = Vec::with_capacity(len.min(READ_CHUNK));
+    let mut buf = [0u8; READ_CHUNK];
+    while payload.len() < len {
+        let want = (len - payload.len()).min(READ_CHUNK);
+        match r.read(&mut buf[..want]) {
+            Ok(0) => {
+                return Err(FrameError::Truncated(format!(
+                    "{} of {len} payload bytes",
+                    payload.len()
+                )))
+            }
+            Ok(n) => payload.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
     Ok(Some(payload))
 }
 

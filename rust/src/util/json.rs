@@ -168,10 +168,16 @@ pub fn write_bench_json(
     Ok(())
 }
 
+/// Nesting cap: `value()` recurses per `[`/`{` level, so unbounded
+/// depth lets a hostile document (`[[[[…`) overflow the stack.  Real
+/// manifests/reports nest a handful of levels; 128 is far above any
+/// legitimate document while keeping worst-case stack use trivial.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Json> {
     let bytes = text.as_bytes();
-    let mut p = Parser { b: bytes, i: 0 };
+    let mut p = Parser { b: bytes, i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -184,6 +190,7 @@ pub fn parse(text: &str) -> Result<Json> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -210,8 +217,15 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            c @ (b'{' | b'[') => {
+                if self.depth >= MAX_DEPTH {
+                    bail!("JSON nested deeper than {MAX_DEPTH} levels at byte {}", self.i);
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
@@ -319,8 +333,13 @@ impl<'a> Parser<'a> {
                     } else {
                         let start = self.i - 1;
                         let len = utf8_len(c);
-                        let chunk = std::str::from_utf8(&self.b[start..start + len])?;
-                        s.push_str(chunk);
+                        // A lead byte whose sequence runs past the end of
+                        // the document must error, not slice out of bounds.
+                        let chunk = self
+                            .b
+                            .get(start..start + len)
+                            .ok_or_else(|| anyhow!("truncated UTF-8 sequence at byte {start}"))?;
+                        s.push_str(std::str::from_utf8(chunk)?);
                         self.i = start + len;
                     }
                 }
@@ -381,5 +400,18 @@ mod tests {
     fn unicode_passthrough() {
         let v = parse(r#""λ→Ŵ""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "λ→Ŵ");
+    }
+
+    /// Fuzz regression: unbounded `[[[[…` nesting used to recurse until
+    /// the stack overflowed; the depth cap turns it into a typed error.
+    #[test]
+    fn pathological_nesting_is_rejected_not_stack_overflowed() {
+        let deep = "[".repeat(MAX_DEPTH + 10);
+        let err = parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nested deeper"), "depth cap must name itself: {err}");
+        assert!(parse(&"{\"k\":[".repeat(MAX_DEPTH)).is_err());
+        // documents at sane depth still parse
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(parse(&ok).is_ok(), "depth just under the cap must stay valid");
     }
 }

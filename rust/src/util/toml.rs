@@ -151,7 +151,7 @@ pub fn parse(text: &str) -> Result<TomlDoc> {
         } else {
             format!("{section}.{key}")
         };
-        let v = parse_value(value.trim())
+        let v = parse_value(value.trim(), 0)
             .with_context(|| format!("line {}: bad value for '{path}'", lineno + 1))?;
         doc.values.insert(path, v);
     }
@@ -178,7 +178,12 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
-fn parse_value(s: &str) -> Result<TomlValue> {
+/// Array-nesting cap: `parse_value` recurses per `[` level, so a
+/// hostile one-liner (`x = [[[[…`) could otherwise overflow the stack.
+/// Config files nest at most two levels; 32 is generous.
+const MAX_ARRAY_DEPTH: usize = 32;
+
+fn parse_value(s: &str, depth: usize) -> Result<TomlValue> {
     if let Some(inner) = s.strip_prefix('"') {
         let inner = inner
             .strip_suffix('"')
@@ -192,6 +197,9 @@ fn parse_value(s: &str) -> Result<TomlValue> {
         return Ok(TomlValue::Bool(false));
     }
     if let Some(inner) = s.strip_prefix('[') {
+        if depth >= MAX_ARRAY_DEPTH {
+            bail!("array nested deeper than {MAX_ARRAY_DEPTH} levels");
+        }
         let inner = inner
             .strip_suffix(']')
             .with_context(|| format!("unterminated array: {s}"))?;
@@ -199,7 +207,7 @@ fn parse_value(s: &str) -> Result<TomlValue> {
         for part in split_top_level(inner) {
             let part = part.trim();
             if !part.is_empty() {
-                items.push(parse_value(part)?);
+                items.push(parse_value(part, depth + 1)?);
             }
         }
         return Ok(TomlValue::Array(items));
@@ -272,5 +280,17 @@ tags = ["a", "b"]
     fn defaults_for_missing() {
         let doc = parse("").unwrap();
         assert_eq!(doc.usize_or("x.y", 7), 7);
+    }
+
+    /// Fuzz regression: a deeply nested array literal used to recurse
+    /// once per `[` and could overflow the stack; it now errors.
+    #[test]
+    fn pathological_array_nesting_is_rejected() {
+        let deep = format!("x = {}{}", "[".repeat(10_000), "]".repeat(10_000));
+        let err = parse(&deep).unwrap_err();
+        assert!(format!("{err:#}").contains("nested deeper"), "got: {err:#}");
+        // sane nesting still parses
+        let ok = parse("x = [[1, 2], [3]]").unwrap();
+        assert!(matches!(ok.get("x"), Some(TomlValue::Array(v)) if v.len() == 2));
     }
 }

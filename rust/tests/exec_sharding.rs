@@ -4,7 +4,10 @@
 //! sync-BN moments, the λ-hinge penalty, and the full `SearchResult` —
 //! plus bit-exact crash-resume replay.
 
-use ebs::coordinator::{run_search, FlopsModel, RunLogger, SearchCfg, SearchResult};
+use ebs::coordinator::{
+    run_fp_train, run_retrain, run_search, FlopsModel, RunLogger, SearchCfg, SearchResult,
+    Selection, TrainCfg, TrainResult,
+};
 use ebs::data::synth::{generate, SynthSpec};
 use ebs::exec::{ShardSpec, StepExecutor};
 use ebs::runtime::{metric_f32, StateVec, Tensor};
@@ -138,6 +141,79 @@ fn search_result_is_bit_identical_across_shard_counts_and_replays() {
     // a different seed diverges (the equalities above aren't vacuous)
     let other = seeded_search(ShardSpec::new(2, 4), 43, 0, None, "s2c");
     assert_ne!(r1, other, "different seeds should differ");
+}
+
+/// `TrainResult` lacks `PartialEq`; compare the exact f64 bits.
+fn result_bits(r: &TrainResult) -> (u64, u64) {
+    (r.best_test_acc.to_bits(), r.final_train_loss.to_bits())
+}
+
+/// FP pretrain under `spec` on seeded tiny data (ISSUE 7 satellite:
+/// shard invariance was previously only pinned for `search_det`).
+fn seeded_fp_train(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
+    let mut exec = StepExecutor::new(open_engine("resnet8_tiny"), spec);
+    let mut spec_data = SynthSpec::tiny(17);
+    spec_data.n_train = 192;
+    spec_data.n_test = 64;
+    let (train, test) = generate(&spec_data);
+    let mut logger = RunLogger::ephemeral();
+    let cfg = TrainCfg { eval_every: 6, log_every: 1000, seed, ..TrainCfg::defaults(12) };
+    let mut state = exec.init_state(5).unwrap();
+    let res = run_fp_train(&mut exec, &mut state, &train, &test, &cfg, &mut logger).unwrap();
+    (state, result_bits(&res))
+}
+
+/// Retrain under a fixed searched selection under `spec`.
+fn seeded_retrain(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
+    let mut exec = StepExecutor::new(open_engine("resnet8_tiny"), spec);
+    let layers = exec.manifest.num_qconvs();
+    // Cycle through the manifest's candidate bitwidths so the fixed
+    // selection is heterogeneous but always valid.
+    let cand = exec.manifest.bits.clone();
+    let selection = Selection {
+        w_bits: (0..layers).map(|i| cand[i % cand.len()]).collect(),
+        x_bits: (0..layers).map(|i| cand[(i + 1) % cand.len()]).collect(),
+    };
+    let mut spec_data = SynthSpec::tiny(19);
+    spec_data.n_train = 192;
+    spec_data.n_test = 64;
+    let (train, test) = generate(&spec_data);
+    let mut logger = RunLogger::ephemeral();
+    let cfg = TrainCfg { eval_every: 6, log_every: 1000, seed, ..TrainCfg::defaults(12) };
+    let mut state = exec.init_state(5).unwrap();
+    let res = run_retrain(
+        &mut exec, &mut state, &selection, &train, &test, &cfg, None, &mut logger,
+    )
+    .unwrap();
+    (state, result_bits(&res))
+}
+
+#[test]
+fn fp_pretrain_is_bit_identical_across_shard_counts() {
+    let (s1, r1) = seeded_fp_train(ShardSpec::new(1, 4), 31);
+    let (s2, r2) = seeded_fp_train(ShardSpec::new(2, 4), 31);
+    let (s4, r4) = seeded_fp_train(ShardSpec::new(4, 4), 31);
+    assert_eq!(r1, r2, "fp train result differs at 2 shards");
+    assert_eq!(r1, r4, "fp train result differs at 4 shards");
+    assert_states_identical(&s1, &s2, "fp shards 1 vs 2");
+    assert_states_identical(&s1, &s4, "fp shards 1 vs 4");
+    // Different seed diverges, so the equalities are not vacuous.
+    let (s_other, _) = seeded_fp_train(ShardSpec::new(2, 4), 32);
+    assert!(
+        s1.spec.iter().enumerate().any(|(i, _)| s1.tensors[i] != s_other.tensors[i]),
+        "different fp seeds should diverge"
+    );
+}
+
+#[test]
+fn retrain_is_bit_identical_across_shard_counts() {
+    let (s1, r1) = seeded_retrain(ShardSpec::new(1, 4), 57);
+    let (s2, r2) = seeded_retrain(ShardSpec::new(2, 4), 57);
+    let (s4, r4) = seeded_retrain(ShardSpec::new(4, 4), 57);
+    assert_eq!(r1, r2, "retrain result differs at 2 shards");
+    assert_eq!(r1, r4, "retrain result differs at 4 shards");
+    assert_states_identical(&s1, &s2, "retrain shards 1 vs 2");
+    assert_states_identical(&s1, &s4, "retrain shards 1 vs 4");
 }
 
 #[test]

@@ -1,0 +1,317 @@
+//! Tier-1 twin of the libFuzzer harness (DESIGN.md §16).
+//!
+//! Replays the committed corpus under `rust/fuzz/corpus/` and drives
+//! seeded random sweeps through the same `ebs::fuzzing` target bodies
+//! the `cargo fuzz` binaries wrap — so every fuzzed code path runs on
+//! every plain `cargo test`, no nightly toolchain required.  A crash
+//! input minimized by libFuzzer becomes a regression the moment it is
+//! committed to the corpus directory.
+//!
+//! Also home to the client-codec torn-frame property tests and the
+//! manifest single-byte-flip round-trip (ISSUE 7 satellites 3 and 4).
+
+use std::path::{Path, PathBuf};
+
+use ebs::bd::artifact::{
+    parse_manifest, ArtifactError, DeploymentArtifact, CKPT_FILE, MANIFEST_FILE, SELECTION_FILE,
+};
+use ebs::coordinator::Selection;
+use ebs::fuzzing::{
+    fuzz_artifact_restore, fuzz_bd_differential, fuzz_config_parse, fuzz_protocol_decode,
+};
+use ebs::serve::protocol::{
+    decode_response, encode_response, read_frame, FrameError, Response, MAGIC, VERSION,
+};
+use ebs::util::{sha256, Rng};
+
+/// All corpus inputs for `target`; fails if the directory is missing
+/// or empty so a broken checkout cannot silently skip replay.
+fn corpus(target: &str) -> Vec<(PathBuf, Vec<u8>)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("fuzz/corpus").join(target);
+    let mut inputs: Vec<(PathBuf, Vec<u8>)> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {} unreadable: {e}", dir.display()))
+        .map(|entry| {
+            let p = entry.unwrap().path();
+            let bytes = std::fs::read(&p).unwrap();
+            (p, bytes)
+        })
+        .collect();
+    assert!(!inputs.is_empty(), "corpus for '{target}' is empty");
+    inputs.sort();
+    inputs
+}
+
+fn replay(target: &str, body: fn(&[u8])) {
+    for (path, bytes) in corpus(target) {
+        // A panic inside `body` fails the test with the input named.
+        let name = path.display().to_string();
+        let result = std::panic::catch_unwind(|| body(&bytes));
+        assert!(result.is_ok(), "corpus input {name} crashed the {target} target");
+    }
+}
+
+#[test]
+fn corpus_replays_protocol_decode() {
+    replay("protocol_decode", fuzz_protocol_decode);
+}
+
+#[test]
+fn corpus_replays_config_parse() {
+    replay("config_parse", fuzz_config_parse);
+}
+
+#[test]
+fn corpus_replays_artifact_restore() {
+    replay("artifact_restore", fuzz_artifact_restore);
+}
+
+#[test]
+fn corpus_replays_bd_differential() {
+    replay("bd_differential", fuzz_bd_differential);
+}
+
+/// Seeded random sweeps: cheap, deterministic coverage of the same
+/// bodies between coverage-guided runs.  Byte strings are arbitrary;
+/// the bodies must never panic.
+#[test]
+fn seeded_sweep_boundary_targets() {
+    let mut rng = Rng::new(0xF022);
+    for case in 0..400 {
+        let len = rng.below(257);
+        let mut bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        fuzz_protocol_decode(&bytes);
+        fuzz_config_parse(&bytes);
+        fuzz_artifact_restore(&bytes);
+        // Bias some cases toward each surface's magic so the sweep
+        // reaches past the first header check.
+        match case % 4 {
+            0 if bytes.len() >= 2 => {
+                bytes[0] = MAGIC;
+                bytes[1] = VERSION;
+                fuzz_protocol_decode(&bytes);
+            }
+            1 if bytes.len() >= 8 => {
+                bytes[..8].copy_from_slice(b"EBSCKPT1");
+                fuzz_artifact_restore(&bytes);
+            }
+            2 => {
+                let mut text = b"[search]\nsteps = ".to_vec();
+                text.extend_from_slice(&bytes);
+                fuzz_config_parse(&text);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The differential body *asserts* agreement across GEMM paths, so a
+/// sweep here is a live equivalence check on random shapes/bit pairs.
+#[test]
+fn seeded_sweep_bd_differential() {
+    let mut rng = Rng::new(0xD1FF);
+    for _ in 0..60 {
+        let len = 12 + rng.below(3000);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        fuzz_bd_differential(&bytes);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: client-codec torn-frame / short-read properties.
+// ---------------------------------------------------------------------
+
+fn client_responses() -> Vec<Response> {
+    vec![
+        Response::Classify { id: 9, labels: vec![3, 0, 7] },
+        Response::Stats { id: 1, json: "{\"images\": 4}".into() },
+        Response::ShutdownAck { id: 2 },
+        Response::Metrics { id: 4, text: "ebs_serve_qps 1.5\n".into() },
+        Response::LoadAck { id: 5, generation: u64::MAX, version: "sha-abc123".into() },
+        Response::Error { id: 3, code: 6, msg: "queue full".into() },
+    ]
+}
+
+/// Every strict prefix of every encoded response frame must read as a
+/// clean EOF (empty) or a typed `Truncated` — never panic, never a
+/// bogus success — and the full frame must round-trip.
+#[test]
+fn every_response_frame_prefix_is_clean_eof_or_truncated() {
+    for resp in client_responses() {
+        let frame = encode_response(&resp);
+        for cut in 0..frame.len() {
+            let mut r = &frame[..cut];
+            match read_frame(&mut r) {
+                Ok(None) => assert_eq!(cut, 0, "only an empty stream is a clean EOF"),
+                Err(FrameError::Truncated(_)) => assert!(cut > 0),
+                other => panic!("{resp:?} cut at {cut}: want Truncated, got {other:?}"),
+            }
+        }
+        let mut r = &frame[..];
+        let payload = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(decode_response(&payload).unwrap(), resp);
+        // Payload prefixes must decode or error — never panic.
+        for cut in 0..payload.len() {
+            let _ = decode_response(&payload[..cut]);
+        }
+    }
+}
+
+/// EOF landing inside the 6-byte header specifically (the case a
+/// torn-payload test never reaches).
+#[test]
+fn eof_mid_header_is_truncated_with_byte_count() {
+    let header = [MAGIC, VERSION, 4, 0, 0, 0];
+    for cut in 1..header.len() {
+        let mut r = &header[..cut];
+        match read_frame(&mut r) {
+            Err(e @ FrameError::Truncated(_)) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains(&format!("{cut} of 6")),
+                    "cut {cut}: cause should carry progress, got: {msg}"
+                );
+            }
+            other => panic!("EOF after {cut} header bytes must be Truncated, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 4: manifest single-byte-flip round-trip.
+// ---------------------------------------------------------------------
+
+fn flip_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ebs_fuzzreg_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Load-bearing identity of an artifact: everything `load` extracts.
+fn fields(a: &DeploymentArtifact) -> (String, String, Vec<u32>, Vec<u32>, Vec<(String, String)>) {
+    (
+        a.model.clone(),
+        a.version.clone(),
+        a.selection.w_bits.clone(),
+        a.selection.x_bits.clone(),
+        a.files.clone(),
+    )
+}
+
+/// Flip every byte of a sealed manifest (XOR 0x01 keeps the text ASCII,
+/// so this exercises JSON/semantic corruption rather than UTF-8 read
+/// failures).  Every flip must either be rejected with a *correctly
+/// attributed* `ArtifactError` or produce an artifact whose
+/// load-bearing fields visibly differ — no flip may load silently
+/// identical.
+#[test]
+fn manifest_single_byte_flips_reject_with_right_variant() {
+    let d = flip_dir("flip");
+    std::fs::write(d.join(CKPT_FILE), b"checkpoint-bytes").unwrap();
+    Selection { w_bits: vec![2, 3], x_bits: vec![4, 2] }
+        .save(&d.join(SELECTION_FILE))
+        .unwrap();
+    // Seal with a hand-built minimal manifest (only load-bearing
+    // fields) so every byte position is attributable.
+    let ck = sha256::file_digest(&d.join(CKPT_FILE)).unwrap();
+    let sel = sha256::file_digest(&d.join(SELECTION_FILE)).unwrap();
+    let manifest = format!(
+        r#"{{"artifact_format":1,"model":"resnet8_tiny","version":"v1","selection":{{"w_bits":[2,3],"x_bits":[4,2]}},"files":{{"{CKPT_FILE}":"{ck}","{SELECTION_FILE}":"{sel}"}}}}"#
+    );
+    std::fs::write(d.join(MANIFEST_FILE), &manifest).unwrap();
+    let baseline = fields(&DeploymentArtifact::load(&d).unwrap());
+
+    let bytes = manifest.as_bytes();
+    let ck_span = manifest.find(&ck).unwrap()..manifest.find(&ck).unwrap() + ck.len();
+    let format_digit = manifest.find(":1,").unwrap() + 1;
+    let (mut skews, mut corrupts, mut checksums, mut missings, mut diffs) = (0, 0, 0, 0, 0);
+    for (i, &orig) in bytes.iter().enumerate() {
+        let mut flipped = bytes.to_vec();
+        flipped[i] = orig ^ 0x01;
+        std::fs::write(d.join(MANIFEST_FILE), &flipped).unwrap();
+        match DeploymentArtifact::load(&d) {
+            Err(ArtifactError::VersionSkew { found, supported }) => {
+                assert_ne!(found, supported, "byte {i}");
+                skews += 1;
+            }
+            Err(ArtifactError::CorruptManifest { .. }) => corrupts += 1,
+            Err(ArtifactError::ChecksumMismatch { file, .. }) => {
+                // Only a flip inside a checksum hex span can get here.
+                assert!(
+                    ck_span.contains(&i) || orig.is_ascii_hexdigit(),
+                    "byte {i} ('{}') misattributed as checksum corruption",
+                    orig as char
+                );
+                assert!(file == CKPT_FILE || file == SELECTION_FILE);
+                checksums += 1;
+            }
+            Err(ArtifactError::MissingFile { .. }) => missings += 1,
+            Err(ArtifactError::MissingManifest(_)) => {
+                panic!("byte {i}: flip cannot unlink the manifest")
+            }
+            Ok(a) => {
+                assert_ne!(
+                    fields(&a),
+                    baseline,
+                    "byte {i} ('{}'): flip loaded silently identical",
+                    orig as char
+                );
+                diffs += 1;
+            }
+        }
+    }
+    // Positional attribution: the format digit skews, the opening
+    // brace corrupts, a checksum byte mismatches, a file-name byte
+    // goes missing.
+    let check = |i: usize, want: &str| {
+        let mut flipped = bytes.to_vec();
+        flipped[i] ^= 0x01;
+        std::fs::write(d.join(MANIFEST_FILE), &flipped).unwrap();
+        let got = DeploymentArtifact::load(&d).unwrap_err();
+        let name = match got {
+            ArtifactError::MissingManifest(_) => "missing-manifest",
+            ArtifactError::CorruptManifest { .. } => "corrupt",
+            ArtifactError::VersionSkew { .. } => "skew",
+            ArtifactError::MissingFile { .. } => "missing-file",
+            ArtifactError::ChecksumMismatch { .. } => "checksum",
+        };
+        assert_eq!(name, want, "flip at byte {i}");
+    };
+    check(0, "corrupt");
+    check(format_digit, "skew");
+    check(ck_span.start, "checksum");
+    check(manifest.find(CKPT_FILE).unwrap(), "missing-file");
+    assert!(
+        skews >= 1 && corrupts >= 1 && checksums >= 1 && missings >= 1 && diffs >= 1,
+        "flip sweep must hit every class: skew={skews} corrupt={corrupts} \
+         checksum={checksums} missing={missings} differing={diffs}"
+    );
+    std::fs::remove_dir_all(&d).ok();
+}
+
+/// The traversal guard seen through the public load path: a manifest
+/// listing an escaping file name is corruption, not a filesystem probe.
+#[test]
+fn hostile_file_name_rejected_through_load() {
+    let d = flip_dir("traversal");
+    std::fs::write(
+        d.join(MANIFEST_FILE),
+        r#"{"artifact_format":1,"model":"m","version":"v","selection":{"w_bits":[2],"x_bits":[2]},"files":{"../outside":"00"}}"#,
+    )
+    .unwrap();
+    match DeploymentArtifact::load(&d) {
+        Err(ArtifactError::CorruptManifest { cause, .. }) => {
+            assert!(cause.contains("not a plain relative name"), "{cause}");
+        }
+        other => panic!("traversal name must be CorruptManifest, got {other:?}"),
+    }
+    // parse_manifest agrees (the pure path the fuzzer drives).
+    assert!(matches!(
+        parse_manifest(
+            r#"{"artifact_format":1,"model":"m","version":"v","selection":{"w_bits":[],"x_bits":[]},"files":{"a/b":"00"}}"#,
+            Path::new("m"),
+        ),
+        Err(ArtifactError::CorruptManifest { .. })
+    ));
+    std::fs::remove_dir_all(&d).ok();
+}
