@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Assert the bd_gemm bench actually dispatched a SIMD kernel tier.
+
+Usage: check_simd_dispatch.py <BENCH_bd_gemm.json> [--expect-vector]
+                              [--min-speedup RATIO]
+
+Reads the DESIGN.md §9 envelope's `kernel_tier` field (written by
+`benches/bd_gemm.rs` from the runtime dispatch in `bd::simd`) and the
+per-row `simd_speedup` column (dispatched serial kernel vs the
+forced-scalar tier on the same shape).
+
+Checks:
+
+* `--expect-vector` — hard-fail if the dispatched tier is `scalar` (or
+  missing).  Hosted x86-64 CI runners all have AVX2, so a scalar tier
+  there means runtime detection or dispatch is broken, not that the
+  hardware is slow.  The inverse direction — scalar fallback still
+  works — is covered by `tests/simd_forced_fallback.rs`, not here.
+* `--min-speedup R` — hard-fail if the **median** `simd_speedup`
+  across rows is below R (the ISSUE 8 acceptance line is 1.5 on an
+  AVX2 runner).  The median is used so one noisy row on a shared
+  runner cannot flip the gate either way.
+
+Exit 0 on success, 1 on any failed check, with GitHub Actions
+`::error::` annotations naming the condition.
+"""
+
+import json
+import statistics
+import sys
+
+
+def main():
+    argv = sys.argv[1:]
+    expect_vector = "--expect-vector" in argv
+    argv = [a for a in argv if a != "--expect-vector"]
+    min_speedup = None
+    if "--min-speedup" in argv:
+        i = argv.index("--min-speedup")
+        min_speedup = float(argv[i + 1])
+        del argv[i : i + 2]
+    if not argv:
+        print(__doc__)
+        return 0
+    path = argv[0]
+    with open(path) as f:
+        doc = json.load(f)
+
+    failed = 0
+    tier = doc.get("kernel_tier")
+    print(f"[simd-dispatch] {path}: kernel_tier={tier!r}")
+    if expect_vector and (tier is None or tier == "scalar"):
+        failed += 1
+        print(
+            f"::error file={path}::bd_gemm dispatched kernel_tier={tier!r}; "
+            "expected a vector tier (avx2/avx512/neon) on this runner — "
+            "runtime feature detection or dispatch is broken"
+        )
+
+    speedups = [
+        r["simd_speedup"]
+        for r in doc.get("rows", [])
+        if isinstance(r.get("simd_speedup"), (int, float))
+    ]
+    if speedups:
+        med = statistics.median(speedups)
+        print(
+            f"[simd-dispatch] simd_speedup over {len(speedups)} rows: "
+            f"median {med:.2f}x, min {min(speedups):.2f}x, "
+            f"max {max(speedups):.2f}x"
+        )
+        if min_speedup is not None and med < min_speedup:
+            failed += 1
+            print(
+                f"::error file={path}::median simd_speedup {med:.2f}x is below "
+                f"the {min_speedup}x acceptance line (dispatched tier {tier!r} "
+                "vs forced-scalar on identical shapes)"
+            )
+    elif min_speedup is not None:
+        failed += 1
+        print(
+            f"::error file={path}::no simd_speedup rows found; the bench JSON "
+            "schema and this check are out of sync"
+        )
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Rebuild ci/bench-baseline/*.json from trusted CI bench artifacts.
+
+Usage:
+  refresh_baselines.py --from-dir <dir> [--baseline-dir ci/bench-baseline]
+                       [--only BENCH_x.json,BENCH_y.json] [--dry-run]
+
+`<dir>` is a directory holding fresh `BENCH_*.json` documents — the
+extracted `bench-json` / `serve-bench-json` artifacts of a trusted CI
+run on `main` (e.g. via
+`gh run download <run-id> -D /tmp/artifacts` and pointing `--from-dir`
+at it, artifacts may be in subdirectories — this script recurses), or
+a quiet local machine's bench output.
+
+For every `BENCH_*.json` found, the matching committed baseline is
+replaced wholesale with the fresh document, minus the
+`"provisional": true` marker if present: a refreshed baseline is by
+definition a real measurement, so `compare_bench.py --require-real`
+starts hard-failing against it (see ci/bench-baseline/README.md for
+the trust model).  Files in the baseline dir with no fresh counterpart
+are left untouched; fresh files with no committed counterpart are
+**created** (this is how the first bd_gemm/bd_layers baseline lands
+and arms their comparisons).
+
+The envelope is preserved as-is — including `kernel_tier` where the
+bench reports it — so a baseline also records which SIMD tier produced
+it.  Output is deterministic (sorted keys are NOT used: key order is
+kept as the bench wrote it, matching the Rust writer; only the
+provisional marker is dropped).
+
+Review the diff before committing; the commit is the act of trust.
+"""
+
+import json
+import os
+import sys
+
+
+def find_bench_files(root):
+    """All BENCH_*.json under root, recursively (artifact dirs nest)."""
+    found = {}
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for name in sorted(filenames):
+            if name.startswith("BENCH_") and name.endswith(".json"):
+                # First hit wins on duplicate names across subdirs.
+                found.setdefault(name, os.path.join(dirpath, name))
+    return found
+
+
+def main():
+    argv = sys.argv[1:]
+
+    def take(flag, default=None):
+        if flag in argv:
+            i = argv.index(flag)
+            val = argv[i + 1]
+            del argv[i : i + 2]
+            return val
+        return default
+
+    from_dir = take("--from-dir")
+    baseline_dir = take("--baseline-dir", "ci/bench-baseline")
+    only = take("--only")
+    dry_run = "--dry-run" in argv
+    if from_dir is None:
+        print(__doc__)
+        return 0
+    only_names = set(only.split(",")) if only else None
+
+    fresh_files = find_bench_files(from_dir)
+    if not fresh_files:
+        print(f"::error::no BENCH_*.json found under {from_dir}")
+        return 1
+
+    wrote = 0
+    for name, path in sorted(fresh_files.items()):
+        if only_names is not None and name not in only_names:
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        had_provisional = doc.pop("provisional", None) is not None
+        rows = doc.get("rows", [])
+        if not rows:
+            print(f"::warning::{path} has no rows; skipping")
+            continue
+        dest = os.path.join(baseline_dir, name)
+        action = "refresh" if os.path.exists(dest) else "create"
+        note = " (cleared provisional marker)" if had_provisional else ""
+        print(
+            f"[refresh] {action} {dest} from {path}: {len(rows)} rows, "
+            f"bench={doc.get('bench')!r}, kernel_tier={doc.get('kernel_tier')!r}{note}"
+        )
+        if not dry_run:
+            os.makedirs(baseline_dir, exist_ok=True)
+            with open(dest, "w") as f:
+                json.dump(doc, f, indent=2)
+                f.write("\n")
+        wrote += 1
+
+    if wrote == 0:
+        print("::error::nothing refreshed (check --only filter)")
+        return 1
+    print(
+        f"[refresh] {'would write' if dry_run else 'wrote'} {wrote} baseline(s); "
+        "review `git diff` and commit to arm compare_bench.py --require-real"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization harness for the BD hot path (DESIGN.md §17).
+#
+# Four stages, all driven by the real benches (bd_gemm, bd_layers,
+# serve) so the profile sees exactly the serving workload:
+#
+#   1. baseline  — plain release build, benches run with --json →
+#                  $PGO_DIR/before/BENCH_*.json
+#   2. instrument — rebuild with -Cprofile-generate, replay the same
+#                  benches to collect .profraw files
+#   3. merge+use — llvm-profdata merge (rustup llvm-tools), rebuild
+#                  with -Cprofile-use, benches again →
+#                  $PGO_DIR/after/BENCH_*.json
+#   4. report    — ci/pgo_report.py renders the before/after medians
+#                  into report/PGO.md (commit it: the report is the
+#                  perf record of the PGO build on that machine)
+#
+# Each build stage uses its own CARGO_TARGET_DIR so instrumented and
+# PGO-optimized artifacts never cross-contaminate the normal target/
+# cache (and incremental rebuilds of each flavor stay warm).
+#
+# Env knobs:
+#   PGO_DIR         work dir (default /tmp/ebs-pgo)
+#   EBS_BENCH_REPS  median window per bench (default 5; CI smoke uses 1)
+#   EBS_BENCH_REQS  serve-bench request count (default 256)
+#   PGO_SKIP_SERVE  =1 to skip the serve bench (e.g. sandboxed runners)
+#
+# Requires: stable Rust toolchain + `rustup component add llvm-tools`
+# (the script adds it if missing).  No nightly needed — profile
+# generate/use are stable rustc flags.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-/tmp/ebs-pgo}"
+REPS="${EBS_BENCH_REPS:-5}"
+REQS="${EBS_BENCH_REQS:-256}"
+PROFRAW="$PGO_DIR/profraw"
+mkdir -p "$PGO_DIR/before" "$PGO_DIR/after" "$PROFRAW"
+
+# llvm-profdata ships in the rustup llvm-tools component, under the
+# host toolchain's sysroot.
+rustup component add llvm-tools >/dev/null 2>&1 || rustup component add llvm-tools-preview >/dev/null 2>&1 || true
+SYSROOT="$(rustc --print sysroot)"
+LLVM_PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f | head -n1)"
+if [ -z "$LLVM_PROFDATA" ]; then
+  echo "error: llvm-profdata not found under $SYSROOT (rustup component add llvm-tools)" >&2
+  exit 1
+fi
+echo "[pgo] using $LLVM_PROFDATA"
+
+# The bench replay used at every stage.  cargo runs benches with
+# cwd = the package root (rust/), so --json paths are absolute.
+run_benches() {
+  local out_dir="$1"
+  EBS_BENCH_REPS="$REPS" cargo bench --bench bd_gemm -- \
+    --json "$out_dir/BENCH_bd_gemm.json"
+  EBS_BENCH_REPS="$REPS" EBS_BENCH_OUT="$PGO_DIR/reports" cargo bench --bench bd_layers -- \
+    --json "$out_dir/BENCH_bd_layers.json"
+  if [ "${PGO_SKIP_SERVE:-0}" != "1" ]; then
+    EBS_BENCH_REPS="$REPS" EBS_BENCH_REQS="$REQS" cargo bench --bench serve -- \
+      --json "$out_dir/BENCH_serve.json" \
+      --json-gateway "$out_dir/BENCH_serve_gateway.json"
+  fi
+}
+
+echo "[pgo] stage 1/4: baseline release build + bench"
+export CARGO_TARGET_DIR="$PGO_DIR/target-base"
+unset RUSTFLAGS || true
+cargo build --release --workspace
+run_benches "$PGO_DIR/before"
+
+echo "[pgo] stage 2/4: instrumented build + profile collection"
+export CARGO_TARGET_DIR="$PGO_DIR/target-gen"
+export RUSTFLAGS="-Cprofile-generate=$PROFRAW"
+cargo build --release --workspace
+# Replay the benches purely to emit .profraw — timings from an
+# instrumented binary are meaningless and are discarded.
+run_benches "$PGO_DIR/profile-run"
+
+echo "[pgo] stage 3/4: merge profiles + PGO build + bench"
+"$LLVM_PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PROFRAW"
+export CARGO_TARGET_DIR="$PGO_DIR/target-use"
+export RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata"
+cargo build --release --workspace
+run_benches "$PGO_DIR/after"
+
+echo "[pgo] stage 4/4: report"
+unset RUSTFLAGS
+python3 ci/pgo_report.py "$PGO_DIR/before" "$PGO_DIR/after" > report/PGO.md
+echo "[pgo] wrote report/PGO.md — review and commit it"

@@ -9,15 +9,22 @@
 //!   cargo bench --bench bd_gemm [-- --json BENCH_bd_gemm.json]
 //!
 //! Env: EBS_BENCH_REPS (median window, default 5), EBS_BENCH_THREADS
-//! (0 = machine parallelism).  The acceptance row for CI is
+//! (0 = machine parallelism); EBS_FORCE_SCALAR / EBS_KERNEL_TIER pin
+//! the SIMD dispatch (DESIGN.md §17).  The acceptance rows for CI are
 //! (M,K)=(2,2) at batch 8 (n=1568): `par_speedup` vs the serial fused
-//! baseline.  JSON schema: DESIGN.md §9.
+//! baseline, and `simd_speedup` — the dispatched serial kernel vs the
+//! forced-scalar tier on the same shape (the ISSUE 8 ≥ 1.5× gate,
+//! checked by `ci/check_simd_dispatch.py`).  The dispatched kernel
+//! tier is reported in the JSON envelope as `kernel_tier`.  JSON
+//! schema: DESIGN.md §9.
 
 use std::time::Instant;
 
 use ebs::bd::gemm::{
-    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine, GemmTiles,
+    binary_gemm_p, fused, fused_tier, fused_tiled, naive_codes_matmul, par_fused, recombine,
+    GemmTiles,
 };
+use ebs::bd::simd::{self, KernelTier};
 use ebs::kernels::resolve_threads;
 use ebs::bd::{pack_cols, pack_rows};
 use ebs::util::json::Json;
@@ -47,14 +54,16 @@ fn main() -> anyhow::Result<()> {
 
     // 3×3 conv, 128→128 channels on a 14×14 map.
     let (co, s, n1) = (128usize, 1152usize, 196usize);
+    let tier = simd::active_tier();
     println!(
         "# BD GEMM bench — co={co} s={s} n=196·B, median of {reps}, {threads} threads, \
-         tiles (co={}, n={})",
+         tiles (co={}, n={}), kernel tier {tier}",
         tiles.co_tile, tiles.n_tile
     );
     println!(
-        "{:<6} {:>6} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9}",
-        "M,K", "batch", "n", "serial ms", "tiled ms", "par ms", "par GOP/s", "speedup"
+        "{:<6} {:>6} {:>8} {:>12} {:>12} {:>12} {:>12} {:>10} {:>9} {:>9}",
+        "M,K", "batch", "n", "scalar ms", "serial ms", "tiled ms", "par ms", "par GOP/s",
+        "par spd", "simd spd"
     );
 
     let mut rng = Rng::new(1);
@@ -67,6 +76,14 @@ fn main() -> anyhow::Result<()> {
             let bw = pack_rows(&wq, co, s, mb);
             let (bx, _) = pack_cols(&xq, s, n, kb);
 
+            // Forced-scalar serial baseline: what the dispatched serial
+            // kernel is measured against (simd_speedup).
+            let t_scalar = median_ms(
+                || {
+                    std::hint::black_box(fused_tier(&bw, &bx, co, n, mb, kb, KernelTier::Scalar));
+                },
+                reps,
+            );
             let t_serial = median_ms(
                 || {
                     std::hint::black_box(fused(&bw, &bx, co, n, mb, kb));
@@ -88,16 +105,19 @@ fn main() -> anyhow::Result<()> {
             // Eq. 2: s·n·co·M·K AND ops
             let ops = s as f64 * n as f64 * co as f64 * (mb * kb) as f64;
             let speedup = t_serial / t_par;
+            let simd_speedup = t_scalar / t_serial;
             println!(
-                "{:<6} {:>6} {:>8} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>8.2}x",
+                "{:<6} {:>6} {:>8} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>10.2} {:>8.2}x {:>8.2}x",
                 format!("{mb},{kb}"),
                 batch,
                 n,
+                t_scalar,
                 t_serial,
                 t_tiled,
                 t_par,
                 ops / (t_par * 1e6),
-                speedup
+                speedup,
+                simd_speedup
             );
             rows.push(Json::Obj(vec![
                 ("m_bits".into(), Json::Num(mb as f64)),
@@ -106,11 +126,13 @@ fn main() -> anyhow::Result<()> {
                 ("s".into(), Json::Num(s as f64)),
                 ("batch".into(), Json::Num(batch as f64)),
                 ("n".into(), Json::Num(n as f64)),
+                ("scalar_ms".into(), Json::Num(t_scalar)),
                 ("serial_ms".into(), Json::Num(t_serial)),
                 ("tiled_ms".into(), Json::Num(t_tiled)),
                 ("par_ms".into(), Json::Num(t_par)),
                 ("gops_par".into(), Json::Num(ops / (t_par * 1e6))),
                 ("par_speedup".into(), Json::Num(speedup)),
+                ("simd_speedup".into(), Json::Num(simd_speedup)),
             ]));
         }
     }
@@ -139,12 +161,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     if let Some(path) = json_path {
-        ebs::util::json::write_bench_json(
+        ebs::util::json::write_bench_json_with(
             std::path::Path::new(&path),
             "bd_gemm",
             reps,
             threads,
             (tiles.co_tile, tiles.n_tile),
+            vec![("kernel_tier".into(), Json::Str(tier.name().to_string()))],
             rows,
         )?;
         println!("# wrote {path}");

@@ -18,13 +18,25 @@
 //!   partitioner.  Each worker owns a disjoint slice of the output, so
 //!   no synchronization is needed beyond the scope join.
 //!
-//! Unit + property tests pin every path against a naive integer matmul
-//! (`tests/par_gemm.rs` additionally sweeps bit pairs, odd shapes and
-//! thread counts).
+//! The AND+POPCNT reduction itself runs at the SIMD tier
+//! [`super::simd`] selected at startup (AVX-512 VPOPCNTDQ → AVX2
+//! Harley–Seal → NEON → scalar): [`fused_block`] matches on the active
+//! tier once per block and monomorphizes the hot loop over the chosen
+//! kernel, so the tiled and parallel paths inherit the vector speedup
+//! with zero per-word dispatch overhead and unchanged
+//! `threads`/`tiles` semantics.  Every tier is bit-identical (popcount
+//! is exact integer arithmetic), which the `*_tier` entry points let
+//! tests assert directly.
+//!
+//! Unit + property tests pin every path — and every *available* SIMD
+//! tier — against a naive integer matmul (`tests/par_gemm.rs` and
+//! `tests/simd_gemm.rs` additionally sweep bit pairs, odd shapes,
+//! thread counts and word-tail lengths).
 
 use crate::kernels::par_row_chunks;
 
 use super::bitplane::BitMatrix;
+use super::simd::{self, KernelTier};
 
 /// Cache-blocking configuration for the tiled/parallel kernels.
 ///
@@ -52,20 +64,19 @@ impl GemmTiles {
 
 /// Stage 1 of the paper's formulation: P[i, j] = popcount(AND(B_w[i], B_x[j])).
 /// `bw` has co·M rows, `bx` has n·K rows (column-major packing); P is
-/// (co·M) × (n·K), row-major u32.
+/// (co·M) × (n·K), row-major u32.  Runs at the active SIMD tier via the
+/// dispatch table's function pointer (this path is the paper-literal
+/// reference, not the serving hot loop, so an indirect call per row
+/// pair is fine).
 pub fn binary_gemm_p(bw: &BitMatrix, bx: &BitMatrix) -> Vec<u32> {
     assert_eq!(bw.s, bx.s);
+    let popcnt = simd::active().and_popcount;
     let mut p = vec![0u32; bw.rows * bx.rows];
     for i in 0..bw.rows {
         let wrow = bw.row(i);
         let out = &mut p[i * bx.rows..(i + 1) * bx.rows];
         for (j, o) in out.iter_mut().enumerate() {
-            let xrow = bx.row(j);
-            let mut acc = 0u32;
-            for (a, b) in wrow.iter().zip(xrow) {
-                acc += (a & b).count_ones();
-            }
-            *o = acc;
+            *o = popcnt(wrow, bx.row(j));
         }
     }
     p
@@ -93,12 +104,8 @@ pub fn recombine(p: &[u32], co: usize, n: usize, m_bits: u32, k_bits: u32) -> Ve
 }
 
 /// Fused path: integer product matrix `co × n` of the M-bit × K-bit
-/// codes, computed entirely with AND + POPCNT + shifts.
-///
-/// Perf notes (EXPERIMENTS.md §Perf): row slices are hoisted out of the
-/// (m, k) loops and the word loop runs on `zip` iterators so LLVM drops
-/// the bounds checks and keeps 4-wide POPCNT chains in flight; this is
-/// the serial deployment path (Table 4 / bd_layers bench).
+/// codes, computed entirely with AND + POPCNT + shifts at the active
+/// SIMD tier.
 pub fn fused(bw: &BitMatrix, bx: &BitMatrix, co: usize, n: usize, m_bits: u32, k_bits: u32) -> Vec<i64> {
     let mut out = vec![0i64; co * n];
     fused_into(bw, bx, co, n, m_bits, k_bits, &mut out);
@@ -121,7 +128,27 @@ pub fn fused_into(
     // untiled loop nest (single j/i tile), so there is one copy of the
     // hot kernel.
     let full = GemmTiles { co_tile: co.max(1), n_tile: n.max(1) };
-    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, full, out);
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, full, simd::active_tier(), out);
+}
+
+/// [`fused`] forced to a specific SIMD tier (must be available on this
+/// host — see [`simd::available_tiers`]).  This is the handle the
+/// differential tests and the bench's scalar-baseline column use; the
+/// dispatched entry points above are what production code calls.
+pub fn fused_tier(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tier: KernelTier,
+) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    check_shapes(bw, bx, co, n, m_bits, k_bits, &out);
+    let full = GemmTiles { co_tile: co.max(1), n_tile: n.max(1) };
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, full, tier, &mut out);
+    out
 }
 
 /// Cache-blocked fused kernel: columns are processed in `n_tile` blocks
@@ -154,7 +181,25 @@ pub fn fused_tiled_into(
     out: &mut [i64],
 ) {
     check_shapes(bw, bx, co, n, m_bits, k_bits, out);
-    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, tiles, out);
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, tiles, simd::active_tier(), out);
+}
+
+/// [`fused_tiled`] forced to a specific SIMD tier (test/bench handle).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_tiled_tier(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    tier: KernelTier,
+) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    check_shapes(bw, bx, co, n, m_bits, k_bits, &out);
+    fused_block(bw, bx, 0, co, n, m_bits as usize, k_bits as usize, tiles, tier, &mut out);
+    out
 }
 
 /// Parallel tiled kernel: contiguous output-channel ranges are sharded
@@ -191,17 +236,59 @@ pub fn par_fused_into(
     threads: usize,
     out: &mut [i64],
 ) {
+    par_fused_into_tier(bw, bx, co, n, m_bits, k_bits, tiles, threads, simd::active_tier(), out);
+}
+
+/// [`par_fused_into`] forced to a specific SIMD tier.  The tier is
+/// resolved once here and every worker monomorphizes over the same
+/// kernel, so thread count and chunk boundaries never interact with
+/// kernel selection.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_into_tier(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    threads: usize,
+    tier: KernelTier,
+    out: &mut [i64],
+) {
     check_shapes(bw, bx, co, n, m_bits, k_bits, out);
     let (mb, kb) = (m_bits as usize, k_bits as usize);
     // Shard output channels into ≤ `threads` contiguous chunks; each
     // worker gets the matching disjoint slice of `out`.
     par_row_chunks(out, co, n, threads, |c0, chunk| {
-        fused_block(bw, bx, c0, c0 + chunk.len() / n, n, mb, kb, tiles, chunk);
+        fused_block(bw, bx, c0, c0 + chunk.len() / n, n, mb, kb, tiles, tier, chunk);
     });
 }
 
-/// Shared serial kernel over output-channel range `[c0, c1)`; `out` is
-/// the `(c1-c0) × n` slice for that range.
+/// [`par_fused`] forced to a specific SIMD tier (test/bench handle).
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_tier(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    co: usize,
+    n: usize,
+    m_bits: u32,
+    k_bits: u32,
+    tiles: GemmTiles,
+    threads: usize,
+    tier: KernelTier,
+) -> Vec<i64> {
+    let mut out = vec![0i64; co * n];
+    par_fused_into_tier(bw, bx, co, n, m_bits, k_bits, tiles, threads, tier, &mut out);
+    out
+}
+
+/// Tier dispatch for the shared serial block: one match per block, then
+/// the generic loop nest monomorphizes over the chosen kernel as a
+/// zero-sized fn item — direct (inlinable) calls in the inner loop, no
+/// function-pointer overhead at any tier.  Tiers that are not compiled
+/// for this architecture (or, defensively, not runnable) fall back to
+/// the scalar kernel, which is always correct.
 #[allow(clippy::too_many_arguments)]
 fn fused_block(
     bw: &BitMatrix,
@@ -212,14 +299,58 @@ fn fused_block(
     mb: usize,
     kb: usize,
     tiles: GemmTiles,
+    tier: KernelTier,
+    out: &mut [i64],
+) {
+    match tier {
+        KernelTier::Scalar => fused_block_with(bw, bx, c0, c1, n, mb, kb, tiles, simd::scalar, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => {
+            fused_block_with(bw, bx, c0, c1, n, mb, kb, tiles, super::simd::x86_64::avx2, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx512 => {
+            fused_block_with(bw, bx, c0, c1, n, mb, kb, tiles, super::simd::x86_64::avx512, out)
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => {
+            fused_block_with(bw, bx, c0, c1, n, mb, kb, tiles, super::simd::aarch64::neon, out)
+        }
+        #[allow(unreachable_patterns)] // tiers the target arch lacks
+        _ => fused_block_with(bw, bx, c0, c1, n, mb, kb, tiles, simd::scalar, out),
+    }
+}
+
+/// Shared serial kernel over output-channel range `[c0, c1)`; `out` is
+/// the `(c1-c0) × n` slice for that range.  Generic over the popcount
+/// kernel (see [`fused_block`]).  Row slices are hoisted out of the hot
+/// loops: the `mb` weight rows per output channel (`wrows`) and — per
+/// column tile — the `kb` activation rows of every column (`xrows`), so
+/// the inner (m, k) accumulation does no `BitMatrix::row` arithmetic.
+#[allow(clippy::too_many_arguments)]
+fn fused_block_with<F: Fn(&[u64], &[u64]) -> u32>(
+    bw: &BitMatrix,
+    bx: &BitMatrix,
+    c0: usize,
+    c1: usize,
+    n: usize,
+    mb: usize,
+    kb: usize,
+    tiles: GemmTiles,
+    popcnt: F,
     out: &mut [i64],
 ) {
     let n_tile = tiles.n_tile.max(1);
     let co_tile = tiles.co_tile.max(1);
     let mut wrows: Vec<&[u64]> = Vec::with_capacity(mb);
+    let mut xrows: Vec<&[u64]> = Vec::with_capacity(n_tile.min(n) * kb);
     let mut j0 = 0;
     while j0 < n {
         let j1 = (j0 + n_tile).min(n);
+        // Hoist the column tile's activation rows once per tile instead
+        // of re-deriving them for every output channel in the i loop.
+        xrows.clear();
+        xrows.extend((j0 * kb..j1 * kb).map(|r| bx.row(r)));
         let mut i0 = c0;
         while i0 < c1 {
             let i1 = (i0 + co_tile).min(c1);
@@ -227,17 +358,11 @@ fn fused_block(
                 wrows.clear();
                 wrows.extend((0..mb).map(|m| bw.row(i * mb + m)));
                 for j in j0..j1 {
-                    let xbase = j * kb;
+                    let xk = &xrows[(j - j0) * kb..(j - j0 + 1) * kb];
                     let mut acc = 0i64;
-                    for k in 0..kb {
-                        let xrow = bx.row(xbase + k);
+                    for (k, xrow) in xk.iter().enumerate() {
                         for (m, wrow) in wrows.iter().enumerate() {
-                            let pop: u32 = wrow
-                                .iter()
-                                .zip(xrow)
-                                .map(|(a, b)| (a & b).count_ones())
-                                .sum();
-                            acc += (pop as i64) << (m + k);
+                            acc += (popcnt(wrow, xrow) as i64) << (m + k);
                         }
                     }
                     out[(i - c0) * n + j] = acc;
@@ -297,8 +422,15 @@ mod tests {
         let p = binary_gemm_p(&bw, &bx);
         assert_eq!(recombine(&p, co, n, mb, kb), expect, "two_stage co={co} s={s} n={n} M={mb} K={kb}");
 
-        // fused path
+        // fused path (active tier) and every available tier explicitly
         assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "fused co={co} s={s} n={n} M={mb} K={kb}");
+        for tier in simd::available_tiers() {
+            assert_eq!(
+                fused_tier(&bw, &bx, co, n, mb, kb, tier),
+                expect,
+                "fused[{tier}] co={co} s={s} n={n} M={mb} K={kb}"
+            );
+        }
 
         // tiled + parallel paths (odd tiles, a few thread counts)
         for tiles in [GemmTiles::new(3, 5), GemmTiles::default()] {
@@ -325,6 +457,10 @@ mod tests {
             random_case(&mut rng, 3, 64, 4, mb, kb); // exact word
             random_case(&mut rng, 2, 130, 3, mb, kb);
         }
+        // Rows long enough to enter the AVX2 Harley–Seal block
+        // (≥ 64 words = s ≥ 4096), exact and straddling.
+        random_case(&mut rng, 2, 4096, 3, 2, 2);
+        random_case(&mut rng, 2, 4100, 2, 3, 1);
     }
 
     #[test]

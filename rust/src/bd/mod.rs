@@ -22,10 +22,12 @@ pub mod layer;
 pub mod network;
 pub mod reference;
 pub mod scratch;
+pub mod simd;
 
 pub use artifact::{ArtifactError, DeploymentArtifact};
 pub use bitplane::{pack_cols, pack_cols_into, pack_rows, BitMatrix};
 pub use gemm::GemmTiles;
+pub use simd::{KernelTier, PopcountKernel};
 pub use layer::{BdConvLayer, BdEngineCfg, BdExec, BdMode};
 pub use network::{BdNetwork, NetScratch};
 pub use scratch::{BdScratch, ScratchStats};

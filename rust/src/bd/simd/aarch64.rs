@@ -1,0 +1,46 @@
+//! aarch64 NEON popcount kernel (DESIGN.md §17) — the paper's own
+//! deployment ISA (§4.3 measures BD conv with NEON bit ops on ARM).
+//!
+//! `vcnt` counts bits per byte; three widening pairwise adds
+//! (`vpaddl` u8→u16→u32→u64) fold the 16 byte counts into two u64 lane
+//! sums that accumulate across the row.  Two words (one 128-bit
+//! vector) per iteration, scalar tail for odd word counts.
+//!
+//! NEON is a baseline feature of every aarch64 target Rust's std
+//! supports, so no runtime probe is needed and the intrinsics are safe
+//! to reach whenever this module compiles at all.  Never compiled on
+//! x86-64 — CI covers it only via review and the shared tier tests on
+//! ARM hosts.
+
+#![allow(unsafe_code)]
+
+use core::arch::aarch64::{
+    vaddq_u64, vandq_u64, vcntq_u8, vdupq_n_u64, vgetq_lane_u64, vld1q_u64, vpaddlq_u16,
+    vpaddlq_u32, vpaddlq_u8, vreinterpretq_u8_u64,
+};
+
+/// Safe entry: NEON kernel (always available on aarch64).
+pub fn neon(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "bit rows must share a word width");
+    let words = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut i = 0usize;
+    let mut total: u64 = 0;
+    // SAFETY: loads stay within `words` (guarded by the loop bounds);
+    // NEON is unconditionally present on aarch64.
+    unsafe {
+        let mut vacc = vdupq_n_u64(0);
+        while i + 2 <= words {
+            let and = vandq_u64(vld1q_u64(ap.add(i)), vld1q_u64(bp.add(i)));
+            let bytes = vcntq_u8(vreinterpretq_u8_u64(and));
+            vacc = vaddq_u64(vacc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes))));
+            i += 2;
+        }
+        total += vgetq_lane_u64::<0>(vacc) + vgetq_lane_u64::<1>(vacc);
+        while i < words {
+            total += (*ap.add(i) & *bp.add(i)).count_ones() as u64;
+            i += 1;
+        }
+    }
+    total as u32
+}

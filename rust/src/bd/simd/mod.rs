@@ -1,0 +1,293 @@
+//! Runtime-dispatched SIMD popcount kernels for the BD GEMM
+//! (DESIGN.md §17).
+//!
+//! Every BD path ultimately reduces pairs of packed bit rows with
+//! `popcount(AND(w_row, x_row))` (Eq. 13).  This module provides that
+//! one primitive at several hardware tiers and selects the best one
+//! **once per process**:
+//!
+//! * [`KernelTier::Scalar`] — portable `u64::count_ones` loop; always
+//!   available, and the reference the other tiers are tested against.
+//! * [`KernelTier::Avx2`] — x86-64 AVX2: Harley–Seal carry-save
+//!   accumulation over 16-vector (64-word) blocks with a nibble-LUT
+//!   (`vpshufb`) + `vpsadbw` byte popcount, remainder vectors through
+//!   the plain LUT path, sub-vector tail words scalar.
+//! * [`KernelTier::Avx512`] — x86-64 AVX-512 `VPOPCNTDQ`
+//!   (`_mm512_popcnt_epi64`), 8 words per instruction.
+//! * [`KernelTier::Neon`] — aarch64 `vcnt` + widening pairwise adds.
+//!
+//! **Bit-exactness**: popcount is pure integer arithmetic — every tier
+//! returns the exact population count, so any tier substitutes for any
+//! other without changing a single output bit.  This is asserted, not
+//! assumed: `tests/simd_gemm.rs`, the `bd_differential` fuzz body, and
+//! the in-module unit tests sweep every *available* tier against the
+//! scalar reference on word-exact, word-straddling, and sub-word row
+//! lengths.
+//!
+//! Selection happens lazily on first use and is cached in a process
+//! `OnceLock` ([`active`]).  `EBS_FORCE_SCALAR=1` pins the portable
+//! tier; `EBS_KERNEL_TIER=scalar|avx2|avx512|neon` requests a specific
+//! tier and falls back to scalar (never to a *different* vector tier)
+//! when the request is unavailable, so an operator override can only
+//! ever land on the named tier or the one tier that works everywhere.
+//!
+//! The GEMM consumes the selection two ways: `binary_gemm_p` calls the
+//! [`PopcountKernel::and_popcount`] function pointer directly, while
+//! the fused hot loop (`gemm::fused_block`) matches on the tier once
+//! per block and monomorphizes, so the inner loop pays no indirect-call
+//! overhead (DESIGN.md §17).
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod aarch64;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86_64;
+
+use std::sync::OnceLock;
+
+/// `popcount(AND(a, b))` over two equal-length packed bit rows.
+///
+/// Contract: callers pass rows of the same [`super::BitMatrix`] word
+/// width; implementations reduce over `min(a.len(), b.len())` words so
+/// a mismatched call is safe (and caught by the debug assert) rather
+/// than out-of-bounds.
+pub type PopcountFn = fn(&[u64], &[u64]) -> u32;
+
+/// The hardware tiers a kernel can be dispatched at.  Variants exist on
+/// every architecture (so config/telemetry can always name them); which
+/// are *runnable* on this host is [`available_tiers`]'s answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable `u64::count_ones` — always available.
+    Scalar,
+    /// AVX2 Harley–Seal + nibble-LUT popcount (x86-64).
+    Avx2,
+    /// AVX-512 `VPOPCNTDQ` hardware popcount (x86-64).
+    Avx512,
+    /// NEON `vcnt` byte popcount (aarch64).
+    Neon,
+}
+
+impl KernelTier {
+    /// Stable lowercase name used in logs, metrics labels, bench JSON
+    /// and the `EBS_KERNEL_TIER` override.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Avx512 => "avx512",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`name`](KernelTier::name); `None` for unknown text.
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelTier::Scalar),
+            "avx2" => Some(KernelTier::Avx2),
+            "avx512" => Some(KernelTier::Avx512),
+            "neon" => Some(KernelTier::Neon),
+            _ => None,
+        }
+    }
+
+    /// True for the vector (non-portable) tiers — what the CI dispatch
+    /// check asserts for on hosted x86-64 runners.
+    pub fn is_vector(self) -> bool {
+        self != KernelTier::Scalar
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Portable reference kernel — the semantics every other tier must
+/// reproduce exactly.
+pub fn scalar(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "bit rows must share a word width");
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+}
+
+/// Tiers runnable on this host, ordered worst → best (the last entry is
+/// what auto-selection picks).  Always starts with `Scalar`.
+pub fn available_tiers() -> Vec<KernelTier> {
+    let mut tiers = vec![KernelTier::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            tiers.push(KernelTier::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        {
+            tiers.push(KernelTier::Avx512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is a baseline feature of every aarch64 target Rust's
+        // std supports; no runtime probe needed.
+        tiers.push(KernelTier::Neon);
+    }
+    tiers
+}
+
+/// The kernel for `tier`, or `None` when this host cannot run it.
+/// `Scalar` is always `Some` — the forced-fallback guarantee.
+pub fn kernel_for(tier: KernelTier) -> Option<PopcountFn> {
+    match tier {
+        KernelTier::Scalar => Some(scalar as PopcountFn),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx2 => std::arch::is_x86_feature_detected!("avx2")
+            .then_some(x86_64::avx2 as PopcountFn),
+        #[cfg(target_arch = "x86_64")]
+        KernelTier::Avx512 => (std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vpopcntdq"))
+        .then_some(x86_64::avx512 as PopcountFn),
+        #[cfg(target_arch = "aarch64")]
+        KernelTier::Neon => Some(aarch64::neon as PopcountFn),
+        #[allow(unreachable_patterns)] // tiers not compiled for this arch
+        _ => None,
+    }
+}
+
+/// The selected kernel: tier tag + function-pointer table (one entry
+/// today; future ops — multi-row popcount, masked tails — join here so
+/// dispatch stays a single selection).
+#[derive(Debug, Clone, Copy)]
+pub struct PopcountKernel {
+    pub tier: KernelTier,
+    pub and_popcount: PopcountFn,
+}
+
+/// Pure selection rule, separated from env/feature probing so it is
+/// unit-testable: a forced scalar wins; an explicit request is honored
+/// only if available and otherwise degrades to scalar (the one tier
+/// that cannot be wrong); no request → best available.
+fn choose(force_scalar: bool, requested: Option<&str>, available: &[KernelTier]) -> KernelTier {
+    if force_scalar {
+        return KernelTier::Scalar;
+    }
+    if let Some(name) = requested {
+        return match KernelTier::parse(name) {
+            Some(t) if available.contains(&t) => t,
+            _ => KernelTier::Scalar,
+        };
+    }
+    *available.last().unwrap_or(&KernelTier::Scalar)
+}
+
+fn select() -> PopcountKernel {
+    let force_scalar = std::env::var("EBS_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false);
+    let requested = std::env::var("EBS_KERNEL_TIER").ok();
+    let tier = choose(force_scalar, requested.as_deref(), &available_tiers());
+    PopcountKernel {
+        tier,
+        // The chosen tier came from `available_tiers` (or is Scalar),
+        // so the lookup cannot miss; fall back defensively anyway.
+        and_popcount: kernel_for(tier).unwrap_or(scalar as PopcountFn),
+    }
+}
+
+/// The process-wide kernel, selected on first use and fixed thereafter
+/// (startup logging, telemetry, and every GEMM read the same answer).
+pub fn active() -> &'static PopcountKernel {
+    static ACTIVE: OnceLock<PopcountKernel> = OnceLock::new();
+    ACTIVE.get_or_init(select)
+}
+
+/// Tier tag of [`active`] — the observability handle (`ebs serve`
+/// banner, Prometheus `ebs_serve_kernel_tier`, bench JSON envelope).
+pub fn active_tier() -> KernelTier {
+    active().tier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random rows at every word-length class: sub-word via masking,
+    /// word-exact, straddling, and Harley–Seal-block-exact/straddling
+    /// (64 words = one AVX2 HS block).
+    fn cases(rng: &mut Rng) -> Vec<(Vec<u64>, Vec<u64>)> {
+        let mut out = Vec::new();
+        for words in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 63, 64, 65, 128, 130] {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            out.push((a, b));
+        }
+        // Masked final word (s % 64 ≠ 0): high bits zero, as BitMatrix
+        // packing guarantees.
+        for words in [1usize, 4, 65] {
+            let mask = (1u64 << 13) - 1;
+            let mut a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let mut b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            *a.last_mut().unwrap() &= mask;
+            *b.last_mut().unwrap() &= mask;
+            out.push((a, b));
+        }
+        // All-ones and all-zeros extremes.
+        out.push((vec![u64::MAX; 70], vec![u64::MAX; 70]));
+        out.push((vec![0; 70], vec![u64::MAX; 70]));
+        out
+    }
+
+    #[test]
+    fn every_available_tier_matches_scalar() {
+        let mut rng = Rng::new(0x51D);
+        let cases = cases(&mut rng);
+        for tier in available_tiers() {
+            let f = kernel_for(tier).expect("available tier must have a kernel");
+            for (i, (a, b)) in cases.iter().enumerate() {
+                assert_eq!(f(a, b), scalar(a, b), "tier {tier} case {i} ({} words)", a.len());
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tier_is_always_available() {
+        assert!(available_tiers().contains(&KernelTier::Scalar));
+        assert!(kernel_for(KernelTier::Scalar).is_some());
+        let avail = available_tiers();
+        assert_eq!(avail.first(), Some(&KernelTier::Scalar), "worst→best ordering");
+    }
+
+    #[test]
+    fn active_kernel_is_an_available_tier() {
+        let k = active();
+        assert!(available_tiers().contains(&k.tier), "active tier {} not available", k.tier);
+        let a = [0xF0F0_F0F0_F0F0_F0F0u64, 0x3];
+        let b = [0xFFFF_0000_FFFF_0000u64, 0x1];
+        assert_eq!((k.and_popcount)(&a, &b), scalar(&a, &b));
+    }
+
+    #[test]
+    fn choose_honors_force_and_degrades_to_scalar() {
+        let avail = [KernelTier::Scalar, KernelTier::Avx2];
+        // Forced scalar beats everything, including an explicit request.
+        assert_eq!(choose(true, Some("avx2"), &avail), KernelTier::Scalar);
+        // Explicit available request honored.
+        assert_eq!(choose(false, Some("avx2"), &avail), KernelTier::Avx2);
+        // Unavailable or unknown requests degrade to scalar, never to a
+        // different vector tier.
+        assert_eq!(choose(false, Some("avx512"), &avail), KernelTier::Scalar);
+        assert_eq!(choose(false, Some("warp9"), &avail), KernelTier::Scalar);
+        // No request: best (last) available.
+        assert_eq!(choose(false, None, &avail), KernelTier::Avx2);
+        assert_eq!(choose(false, None, &[KernelTier::Scalar]), KernelTier::Scalar);
+    }
+
+    #[test]
+    fn tier_names_round_trip() {
+        for t in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512, KernelTier::Neon] {
+            assert_eq!(KernelTier::parse(t.name()), Some(t));
+            assert_eq!(KernelTier::parse(&t.name().to_uppercase()), Some(t));
+        }
+        assert_eq!(KernelTier::parse("sse2"), None);
+        assert!(!KernelTier::Scalar.is_vector());
+        assert!(KernelTier::Avx2.is_vector());
+    }
+}

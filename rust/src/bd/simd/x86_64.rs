@@ -1,0 +1,209 @@
+//! x86-64 vector popcount kernels (DESIGN.md §17).
+//!
+//! Two tiers, both reducing `popcount(AND(a, b))` over packed u64 rows:
+//!
+//! * **AVX2** — no hardware vector popcount exists at this tier, so
+//!   bytes are counted with the classic nibble-LUT `vpshufb` trick and
+//!   summed per 64-bit lane with `vpsadbw`.  For rows of ≥ 64 words the
+//!   counting is amortized with Harley–Seal carry-save adders: 16
+//!   vectors are compressed into `ones/twos/fours/eights` partial-sum
+//!   registers and only the `sixteens` overflow stream is LUT-counted,
+//!   cutting the per-word count cost ~4× (the CSA network is pure
+//!   AND/XOR/OR).  Remainder vectors take the plain LUT path; the final
+//!   `words % 4` tail is scalar `count_ones`.
+//! * **AVX-512** — `VPOPCNTDQ` counts eight u64 lanes per instruction;
+//!   the loop is a straight load/AND/popcount/accumulate with a scalar
+//!   tail for `words % 8`.
+//!
+//! Bit-exactness is structural: every path computes the same integer
+//! population count, only the grouping differs (integer addition is
+//! associative).  The per-tier tests in `simd::tests`,
+//! `tests/simd_gemm.rs`, and the `bd_differential` fuzz body pin each
+//! tier against the scalar reference on every word-length class —
+//! including the `≥ 64`-word Harley–Seal blocks and all tail lengths.
+//!
+//! Safety: every `#[target_feature]` function is reachable only
+//! through `simd::kernel_for`, which gates on
+//! `is_x86_feature_detected!`, so the required CPU features are proven
+//! present before any call.
+
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::{
+    __m256i, __m512i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256, _mm256_loadu_si256,
+    _mm256_or_si256, _mm256_sad_epu8, _mm256_set1_epi8, _mm256_setr_epi8, _mm256_setzero_si256,
+    _mm256_shuffle_epi8, _mm256_slli_epi64, _mm256_srli_epi16, _mm256_storeu_si256,
+    _mm256_xor_si256, _mm512_add_epi64, _mm512_and_epi64, _mm512_loadu_epi64,
+    _mm512_popcnt_epi64, _mm512_reduce_add_epi64, _mm512_setzero_si512,
+};
+
+/// Safe entry: AVX2 kernel.  Caller (the dispatch table) has verified
+/// `avx2` is present.
+pub fn avx2(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "bit rows must share a word width");
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    // SAFETY: dispatched only after `is_x86_feature_detected!("avx2")`.
+    unsafe { avx2_impl(a, b) }
+}
+
+/// Safe entry: AVX-512 VPOPCNTDQ kernel.  Caller has verified
+/// `avx512f` + `avx512vpopcntdq` are present.
+pub fn avx512(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len(), "bit rows must share a word width");
+    debug_assert!(
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+    );
+    // SAFETY: dispatched only after feature detection (see above).
+    unsafe { avx512_impl(a, b) }
+}
+
+/// Per-64-bit-lane byte popcount of `v`: nibble LUT via `vpshufb`,
+/// horizontal byte sums via `vpsadbw` → four u64 lane counts ≤ 64.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn popcnt_lanes(v: __m256i) -> __m256i {
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+    let counts8 =
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+    _mm256_sad_epu8(counts8, _mm256_setzero_si256())
+}
+
+/// `AND` of the 4-word vectors at word offset `off` of `a` and `b`.
+/// Caller guarantees `off + 4 <= len`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load_and(a: *const u64, b: *const u64, off: usize) -> __m256i {
+    _mm256_and_si256(
+        _mm256_loadu_si256(a.add(off) as *const __m256i),
+        _mm256_loadu_si256(b.add(off) as *const __m256i),
+    )
+}
+
+/// Carry-save adder over bit-sliced counters: `(h, l)` hold the high
+/// and low bits of the per-bit sum `x + y + z` (h = majority,
+/// l = parity).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn csa(x: __m256i, y: __m256i, z: __m256i) -> (__m256i, __m256i) {
+    let u = _mm256_xor_si256(x, y);
+    let h = _mm256_or_si256(_mm256_and_si256(x, y), _mm256_and_si256(u, z));
+    let l = _mm256_xor_si256(u, z);
+    (h, l)
+}
+
+/// Sum of the four u64 lanes of an accumulator of lane counts.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_lanes(v: __m256i) -> u64 {
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn avx2_impl(a: &[u64], b: &[u64]) -> u32 {
+    let words = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut total: u64 = 0;
+    let mut i = 0usize;
+
+    // Harley–Seal over 16-vector (64-word) blocks.  `ones..eights` are
+    // bit-sliced counters (weight 1/2/4/8 per set bit); only the
+    // `sixteens` overflow of each block is byte-counted in the loop.
+    let hs_words = (words / 64) * 64;
+    if hs_words > 0 {
+        let mut sixteens_total = _mm256_setzero_si256();
+        let mut ones = _mm256_setzero_si256();
+        let mut twos = _mm256_setzero_si256();
+        let mut fours = _mm256_setzero_si256();
+        let mut eights = _mm256_setzero_si256();
+        while i < hs_words {
+            let (twos_a, l) = csa(ones, load_and(ap, bp, i), load_and(ap, bp, i + 4));
+            ones = l;
+            let (twos_b, l) = csa(ones, load_and(ap, bp, i + 8), load_and(ap, bp, i + 12));
+            ones = l;
+            let (fours_a, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (twos_a, l) = csa(ones, load_and(ap, bp, i + 16), load_and(ap, bp, i + 20));
+            ones = l;
+            let (twos_b, l) = csa(ones, load_and(ap, bp, i + 24), load_and(ap, bp, i + 28));
+            ones = l;
+            let (fours_b, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (eights_a, l) = csa(fours, fours_a, fours_b);
+            fours = l;
+            let (twos_a, l) = csa(ones, load_and(ap, bp, i + 32), load_and(ap, bp, i + 36));
+            ones = l;
+            let (twos_b, l) = csa(ones, load_and(ap, bp, i + 40), load_and(ap, bp, i + 44));
+            ones = l;
+            let (fours_a, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (twos_a, l) = csa(ones, load_and(ap, bp, i + 48), load_and(ap, bp, i + 52));
+            ones = l;
+            let (twos_b, l) = csa(ones, load_and(ap, bp, i + 56), load_and(ap, bp, i + 60));
+            ones = l;
+            let (fours_b, l) = csa(twos, twos_a, twos_b);
+            twos = l;
+            let (eights_b, l) = csa(fours, fours_a, fours_b);
+            fours = l;
+            let (sixteens, l) = csa(eights, eights_a, eights_b);
+            eights = l;
+            sixteens_total = _mm256_add_epi64(sixteens_total, popcnt_lanes(sixteens));
+            i += 64;
+        }
+        // total = 16·Σpc(sixteens) + 8·pc(eights) + 4·pc(fours)
+        //       + 2·pc(twos) + pc(ones)
+        let mut acc = _mm256_slli_epi64::<4>(sixteens_total);
+        acc = _mm256_add_epi64(acc, _mm256_slli_epi64::<3>(popcnt_lanes(eights)));
+        acc = _mm256_add_epi64(acc, _mm256_slli_epi64::<2>(popcnt_lanes(fours)));
+        acc = _mm256_add_epi64(acc, _mm256_slli_epi64::<1>(popcnt_lanes(twos)));
+        acc = _mm256_add_epi64(acc, popcnt_lanes(ones));
+        total += hsum_lanes(acc);
+    }
+
+    // Remainder full vectors: plain LUT count.
+    if i + 4 <= words {
+        let mut acc = _mm256_setzero_si256();
+        while i + 4 <= words {
+            acc = _mm256_add_epi64(acc, popcnt_lanes(load_and(ap, bp, i)));
+            i += 4;
+        }
+        total += hsum_lanes(acc);
+    }
+
+    // Sub-vector tail words: scalar.
+    while i < words {
+        total += (*ap.add(i) & *bp.add(i)).count_ones() as u64;
+        i += 1;
+    }
+    total as u32
+}
+
+#[target_feature(enable = "avx512f,avx512vpopcntdq")]
+unsafe fn avx512_impl(a: &[u64], b: &[u64]) -> u32 {
+    let words = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc: __m512i = _mm512_setzero_si512();
+    let mut i = 0usize;
+    while i + 8 <= words {
+        let va = _mm512_loadu_epi64(ap.add(i) as *const i64);
+        let vb = _mm512_loadu_epi64(bp.add(i) as *const i64);
+        acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_epi64(va, vb)));
+        i += 8;
+    }
+    // Lane counts are ≤ words/8 ≤ 2^61, far from i64 overflow.
+    let mut total = _mm512_reduce_add_epi64(acc) as u64;
+    while i < words {
+        total += (*ap.add(i) & *bp.add(i)).count_ones() as u64;
+        i += 1;
+    }
+    total as u32
+}

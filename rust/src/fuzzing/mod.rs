@@ -26,8 +26,10 @@ use std::path::Path;
 use crate::bd::artifact::parse_manifest;
 use crate::bd::bitplane::{pack_cols, pack_rows};
 use crate::bd::gemm::{
-    binary_gemm_p, fused, fused_tiled, naive_codes_matmul, par_fused, recombine, GemmTiles,
+    binary_gemm_p, fused, fused_tier, fused_tiled, fused_tiled_tier, naive_codes_matmul,
+    par_fused, par_fused_tier, recombine, GemmTiles,
 };
+use crate::bd::simd::available_tiers;
 use crate::config::RunConfig;
 use crate::runtime::{DType, LeafSpec, StateVec};
 use crate::serve::protocol::{decode_request, decode_response, read_frame};
@@ -103,14 +105,24 @@ pub fn fuzz_artifact_restore(data: &[u8]) {
 
 /// Target (d): differential GEMM — derive an arbitrary (shape, bit
 /// pair, tile, thread count) case from the input and assert that the
-/// two-stage, fused, tiled, and parallel AND+POPCNT paths all match
-/// the naive integer reference exactly.  Any divergence is a crash the
-/// fuzzer minimizes to a witness case.
+/// two-stage, fused, tiled, and parallel AND+POPCNT paths — at the
+/// dispatched SIMD tier *and* explicitly at every tier this host can
+/// run — all match the naive integer reference exactly.  Any
+/// divergence is a crash the fuzzer minimizes to a witness case.
+///
+/// The first byte is a mode selector: when its high bit is set, `s` is
+/// drawn large enough (≥ 62 words) that the AVX2 Harley–Seal block
+/// path (≥ 64 words per row, i.e. `s ≥ 4096`) and its tail are
+/// reachable, with the other dims kept tiny so the case stays fast;
+/// otherwise the usual small shapes sweep word-straddling tails.
 pub fn fuzz_bd_differential(data: &[u8]) {
     let mut u = FuzzInput::new(data);
-    let co = u.int_in(1, 8);
-    let s = u.int_in(1, 192); // straddles 64-bit word boundaries
-    let n = u.int_in(1, 12);
+    let big = u.byte() & 0x80 != 0;
+    let (co, s, n) = if big {
+        (u.int_in(1, 3), u.int_in(3968, 4424), u.int_in(1, 4))
+    } else {
+        (u.int_in(1, 8), u.int_in(1, 320), u.int_in(1, 12))
+    };
     let mb = u.int_in(1, 5) as u32;
     let kb = u.int_in(1, 5) as u32;
     let tiles = GemmTiles::new(u.int_in(1, 9), u.int_in(1, 9));
@@ -136,6 +148,25 @@ pub fn fuzz_bd_differential(data: &[u8]) {
         expect,
         "par_fused diverged: {tag}"
     );
+    // Every SIMD tier this host can run must be bit-identical on the
+    // same case, through the serial, tiled, and threaded paths.
+    for tier in available_tiers() {
+        assert_eq!(
+            fused_tier(&bw, &bx, co, n, mb, kb, tier),
+            expect,
+            "fused[{tier}] diverged: {tag}"
+        );
+        assert_eq!(
+            fused_tiled_tier(&bw, &bx, co, n, mb, kb, tiles, tier),
+            expect,
+            "fused_tiled[{tier}] diverged: {tag}"
+        );
+        assert_eq!(
+            par_fused_tier(&bw, &bx, co, n, mb, kb, tiles, threads, tier),
+            expect,
+            "par_fused[{tier}] diverged: {tag}"
+        );
+    }
     // The packer's affine-decode side channel must match the codes too.
     for (j, &got) in col_sums.iter().enumerate() {
         let want: u32 = (0..s).map(|t| xq[t * n + j] as u32).sum();

@@ -305,9 +305,10 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         .filter(|(p, &l)| **p == l as usize)
         .count();
     println!(
-        "BD deploy ({mode:?}, {:?} exec, batch {}): {}/{} correct ({:.2}%), \
+        "BD deploy ({mode:?}, {:?} exec, {} kernel, batch {}): {}/{} correct ({:.2}%), \
          {:.2} ms/image ({:.0} img/s), packed weights {:.1} KiB",
         bd_cfg.exec,
+        ebs::bd::simd::active_tier(),
         net.batch_chunk,
         correct,
         n,
@@ -382,12 +383,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     eprintln!(
         "[serve] workers={workers} max_batch={} max_wait_us={} queue_depth={} \
-         ({} exec, {} GEMM threads/worker)",
+         ({} exec, {} GEMM threads/worker, {} kernel)",
         scfg.max_batch,
         scfg.max_wait_us,
         scfg.queue_depth,
         format!("{:?}", bd_cfg.exec).to_lowercase(),
         bd_cfg.threads,
+        ebs::bd::simd::active_tier(),
     );
     let core = ebs::serve::ServeCore::new(scfg, loader);
 

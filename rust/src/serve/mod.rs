@@ -360,6 +360,7 @@ impl ServeCore {
     /// the HTTP scrape endpoint serve exactly this).
     pub fn metrics_text(&self) -> String {
         let mut out = String::from(telemetry::prometheus_header());
+        telemetry::render_kernel_tier(&mut out, crate::bd::simd::active_tier());
         for m in self.registry.models() {
             telemetry::render_model(&mut out, &m.name, m.generation, &m.stats);
         }

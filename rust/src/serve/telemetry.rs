@@ -323,7 +323,16 @@ pub fn prometheus_header() -> &'static str {
      # TYPE ebs_serve_generation gauge\n\
      # TYPE ebs_serve_qps gauge\n\
      # TYPE ebs_serve_latency_us gauge\n\
-     # TYPE ebs_serve_batch_occupancy_bucket counter\n"
+     # TYPE ebs_serve_batch_occupancy_bucket counter\n\
+     # TYPE ebs_serve_kernel_tier gauge\n"
+}
+
+/// Process-wide sample naming the dispatched SIMD popcount tier
+/// (DESIGN.md §17) — the usual "info" idiom: constant 1 with the tier
+/// as a label, so dashboards can group/alert on which kernel a fleet
+/// is actually running.
+pub fn render_kernel_tier(out: &mut String, tier: crate::bd::KernelTier) {
+    sample(out, "ebs_serve_kernel_tier", &[("tier", tier.name())], 1.0);
 }
 
 #[cfg(test)]
@@ -385,5 +394,13 @@ mod tests {
         assert!(out.contains("outcome=\"completed\"} 2"), "{out}");
         assert!(out.contains("le=\"+Inf\"} 1"), "{out}");
         assert!(out.ends_with('\n'));
+    }
+
+    #[test]
+    fn kernel_tier_sample_names_the_tier() {
+        let mut out = String::from(prometheus_header());
+        render_kernel_tier(&mut out, crate::bd::KernelTier::Scalar);
+        assert!(out.contains("# TYPE ebs_serve_kernel_tier gauge"));
+        assert!(out.contains("ebs_serve_kernel_tier{tier=\"scalar\"} 1"), "{out}");
     }
 }

@@ -151,14 +151,32 @@ pub fn write_bench_json(
     tiles: (usize, usize),
     rows: Vec<Json>,
 ) -> Result<()> {
-    let doc = Json::Obj(vec![
+    write_bench_json_with(path, bench, reps, threads, tiles, Vec::new(), rows)
+}
+
+/// [`write_bench_json`] with extra envelope fields appended after the
+/// standard ones (e.g. `kernel_tier` for the SIMD-dispatched benches).
+/// Envelope additions are safe for `ci/compare_bench.py`, whose row
+/// identity is computed from row fields only.
+pub fn write_bench_json_with(
+    path: &std::path::Path,
+    bench: &str,
+    reps: usize,
+    threads: usize,
+    tiles: (usize, usize),
+    extra: Vec<(String, Json)>,
+    rows: Vec<Json>,
+) -> Result<()> {
+    let mut fields = vec![
         ("bench".into(), Json::Str(bench.to_string())),
         ("reps".into(), Json::Num(reps as f64)),
         ("threads".into(), Json::Num(threads as f64)),
         ("tile_co".into(), Json::Num(tiles.0 as f64)),
         ("tile_n".into(), Json::Num(tiles.1 as f64)),
-        ("rows".into(), Json::Arr(rows)),
-    ]);
+    ];
+    fields.extend(extra);
+    fields.push(("rows".into(), Json::Arr(rows)));
+    let doc = Json::Obj(fields);
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;

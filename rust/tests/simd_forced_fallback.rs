@@ -1,0 +1,38 @@
+//! Forced-fallback test: `EBS_FORCE_SCALAR=1` must pin the process to
+//! the portable tier regardless of what the host CPU supports.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! kernel selection is cached in a process-wide `OnceLock` on first
+//! use, so the env var must be set before *any* GEMM runs, and no
+//! other test in the process may have triggered selection first.  A
+//! single `#[test]` in a dedicated binary guarantees both, without
+//! depending on test ordering or `--test-threads`.
+
+use ebs::bd::gemm::{fused, naive_codes_matmul};
+use ebs::bd::simd::{self, KernelTier};
+use ebs::bd::{pack_cols, pack_rows};
+use ebs::util::Rng;
+
+#[test]
+fn force_scalar_pins_the_portable_tier() {
+    // Safe on edition 2021 (no other thread is running yet: this is
+    // the only test in this binary, executed before any worker pools
+    // exist).
+    std::env::set_var("EBS_FORCE_SCALAR", "1");
+
+    assert_eq!(
+        simd::active_tier(),
+        KernelTier::Scalar,
+        "EBS_FORCE_SCALAR=1 must select the portable tier"
+    );
+    assert!(!simd::active_tier().is_vector());
+
+    // And the pinned kernel still computes correct results end-to-end.
+    let mut rng = Rng::new(0xFA11);
+    let (co, s, n, mb, kb) = (4usize, 130usize, 5usize, 3u32, 2u32);
+    let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+    let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+    let bw = pack_rows(&wq, co, s, mb);
+    let (bx, _) = pack_cols(&xq, s, n, kb);
+    assert_eq!(fused(&bw, &bx, co, n, mb, kb), naive_codes_matmul(&wq, &xq, co, s, n));
+}

@@ -1,0 +1,124 @@
+//! SIMD-tier differential property tests (ISSUE 8, DESIGN.md §17).
+//!
+//! Every kernel tier this host can run must be **bit-identical** to the
+//! scalar reference — the reduction is exact integer arithmetic, so
+//! equality is checked with `==`, never a tolerance.  The sweep covers
+//! the word-length classes where vector kernels diverge structurally
+//! from scalar code:
+//!
+//! * sub-word `s` (1, 7, 33 bits — a single masked word),
+//! * word-exact `s` (64, 128 bits),
+//! * word-straddling `s` (63, 65, 257 bits — partial final word),
+//! * Harley–Seal-block `s` (4096 = 64 words exactly; 4100 = HS block
+//!   plus a 4-bit tail, so the AVX2 path runs all three of its stages:
+//!   CSA blocks, remainder vectors, scalar tail words).
+//!
+//! Each shape runs through the serial, tiled, and threaded GEMM paths
+//! at every available tier, and the raw popcount kernels are swept
+//! directly across all word counts 0..=130.
+
+use ebs::bd::gemm::{
+    fused, fused_tier, fused_tiled_tier, naive_codes_matmul, par_fused_tier, GemmTiles,
+};
+use ebs::bd::simd::{self, KernelTier};
+use ebs::bd::{pack_cols, pack_rows};
+use ebs::util::Rng;
+
+/// GEMM cases at one `s`: random M/K-bit codes, checked against the
+/// naive integer matmul for every available tier × tiling × threads.
+fn sweep_s(rng: &mut Rng, s: usize, mb: u32, kb: u32) {
+    // Keep co·n small: the point is the inner reduction length, and
+    // s = 4096+ cases would otherwise dominate test time.
+    let (co, n) = (3usize, 4usize);
+    let wq: Vec<u8> = (0..co * s).map(|_| rng.below(1 << mb) as u8).collect();
+    let xq: Vec<u8> = (0..s * n).map(|_| rng.below(1 << kb) as u8).collect();
+    let expect = naive_codes_matmul(&wq, &xq, co, s, n);
+    let bw = pack_rows(&wq, co, s, mb);
+    let (bx, _) = pack_cols(&xq, s, n, kb);
+
+    assert_eq!(fused(&bw, &bx, co, n, mb, kb), expect, "dispatched fused s={s} M={mb} K={kb}");
+    for tier in simd::available_tiers() {
+        assert_eq!(
+            fused_tier(&bw, &bx, co, n, mb, kb, tier),
+            expect,
+            "fused[{tier}] s={s} M={mb} K={kb}"
+        );
+        for tiles in [GemmTiles::new(1, 1), GemmTiles::new(2, 3), GemmTiles::default()] {
+            assert_eq!(
+                fused_tiled_tier(&bw, &bx, co, n, mb, kb, tiles, tier),
+                expect,
+                "tiled[{tier}] s={s} M={mb} K={kb} {tiles:?}"
+            );
+            for threads in [1usize, 2, 8] {
+                assert_eq!(
+                    par_fused_tier(&bw, &bx, co, n, mb, kb, tiles, threads, tier),
+                    expect,
+                    "par[{tier}] s={s} M={mb} K={kb} T={threads} {tiles:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_tier_matches_naive_on_subword_s() {
+    let mut rng = Rng::new(0x51D0);
+    for &s in &[1usize, 7, 33] {
+        sweep_s(&mut rng, s, 2, 3);
+        sweep_s(&mut rng, s, 5, 5);
+    }
+}
+
+#[test]
+fn every_tier_matches_naive_on_word_exact_s() {
+    let mut rng = Rng::new(0x51D1);
+    for &s in &[64usize, 128] {
+        sweep_s(&mut rng, s, 2, 2);
+        sweep_s(&mut rng, s, 4, 3);
+    }
+}
+
+#[test]
+fn every_tier_matches_naive_on_word_straddling_s() {
+    let mut rng = Rng::new(0x51D2);
+    for &s in &[63usize, 65, 257] {
+        sweep_s(&mut rng, s, 1, 2);
+        sweep_s(&mut rng, s, 3, 4);
+    }
+}
+
+#[test]
+fn every_tier_matches_naive_on_harley_seal_block_s() {
+    let mut rng = Rng::new(0x51D3);
+    // 4096 bits = 64 words = exactly one AVX2 Harley–Seal block;
+    // 4100 adds a sub-word tail so every stage of the kernel runs.
+    sweep_s(&mut rng, 4096, 2, 2);
+    sweep_s(&mut rng, 4100, 3, 1);
+}
+
+/// The raw popcount kernels across every word count 0..=130 (spanning
+/// all vector-tail lengths of every tier), on dense random rows.
+#[test]
+fn raw_kernels_match_scalar_on_all_word_counts() {
+    let mut rng = Rng::new(0x51D4);
+    for tier in simd::available_tiers() {
+        let f = simd::kernel_for(tier).expect("available tier must have a kernel");
+        for words in 0usize..=130 {
+            let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+            assert_eq!(f(&a, &b), simd::scalar(&a, &b), "tier {tier}, {words} words");
+        }
+    }
+}
+
+/// The portable tier is unconditionally available — the guarantee the
+/// forced-fallback path (`EBS_FORCE_SCALAR=1`, see
+/// `tests/simd_forced_fallback.rs`) rests on.
+#[test]
+fn scalar_tier_is_always_present() {
+    let tiers = simd::available_tiers();
+    assert_eq!(tiers.first(), Some(&KernelTier::Scalar));
+    assert!(simd::kernel_for(KernelTier::Scalar).is_some());
+    // The auto-selected tier is always one of the available ones.
+    assert!(tiers.contains(&simd::active_tier()));
+}
