@@ -44,6 +44,7 @@ PER_BENCH_THRESHOLDS = {
     "serve": (1.6, 2.0),
     "serve_gateway": (1.6, 2.0),
     "shard_search": (1.5, 2.0),
+    "cluster_search": (1.6, 2.0),
 }
 
 

@@ -1,0 +1,11 @@
+//! Exec cluster wire protocol (DESIGN.md §18): framing + message
+//! decode on arbitrary bytes must yield typed errors, never a panic or
+//! unbounded allocation, and encode∘decode must be byte-stable.  Body
+//! shared with tier-1 via `ebs::fuzzing`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    ebs::fuzzing::fuzz_exec_frame(data);
+});

@@ -87,6 +87,22 @@ pub struct NativeConfig {
     pub threads: usize,
 }
 
+/// Distributed-search cluster configuration (`[cluster]` section;
+/// `ebs search --cluster ADDR --workers N` overrides — DESIGN.md §18).
+/// Cluster mode is off unless a listen address is set here or on the
+/// CLI; results are bit-identical to in-process sharding because the
+/// canonical chunk algebra is transport-invariant.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterConfig {
+    /// Coordinator listen address (e.g. `"127.0.0.1:7700"`; empty =
+    /// cluster mode off).  `"127.0.0.1:0"` picks a free port — useful
+    /// with spawned-local workers only.
+    pub listen: String,
+    /// Local worker processes for the coordinator to spawn (0 = none;
+    /// external workers dial in with `ebs worker --connect ADDR`).
+    pub workers: usize,
+}
+
 /// Serve-layer configuration (`[serve]` section; `ebs serve` flags
 /// `--addr/--workers/--max-batch/--max-wait-us/--queue-depth/`
 /// `--metrics-addr` override).  Defaults live on
@@ -122,6 +138,7 @@ pub struct RunConfig {
     pub targets_mflops: Vec<f64>,
     pub bd: BdDeployConfig,
     pub native: NativeConfig,
+    pub cluster: ClusterConfig,
     pub serve: crate::serve::ServeCfg,
     /// `NAME=SOURCE` model specs for `ebs serve` (`serve.models` array;
     /// the `--model` CSV flag overrides).  SOURCE is a deployment
@@ -140,6 +157,9 @@ fn train_cfg(doc: &TomlDoc, section: &str, default_steps: usize, default_lr: f32
         log_every: doc.usize_or(&format!("{section}.log_every"), 20),
         seed: doc.i64_or(&format!("{section}.seed"), 0) as u64,
         ckpt_every: doc.usize_or(&format!("{section}.ckpt_every"), 0),
+        // resume_from is CLI-only (`--resume`): a config file describes a
+        // run, not one particular crashed instance of it.
+        resume_from: None,
     }
 }
 
@@ -213,6 +233,10 @@ impl RunConfig {
             targets_mflops: doc.f64_array("search.targets_mflops").unwrap_or_default(),
             bd,
             native: NativeConfig { threads: doc.usize_or("native.threads", 0) },
+            cluster: ClusterConfig {
+                listen: doc.str_or("cluster.listen", "").to_string(),
+                workers: doc.usize_or("cluster.workers", 0),
+            },
             serve: serve_cfg(&doc),
             serve_models: doc.str_array("serve.models").unwrap_or_default(),
             doc,
@@ -289,6 +313,20 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.search.shard_chunks, 8);
         assert_eq!(cfg.search.ckpt_every, 50);
         assert_eq!(cfg.retrain.ckpt_every, 25);
+    }
+
+    #[test]
+    fn cluster_section_parses_and_defaults_off() {
+        let cfg = RunConfig::from_doc(parse("").unwrap());
+        assert_eq!(cfg.cluster.listen, "", "cluster mode defaults off");
+        assert_eq!(cfg.cluster.workers, 0);
+        assert!(cfg.pretrain.resume_from.is_none(), "resume is CLI-only");
+        assert!(cfg.retrain.resume_from.is_none());
+        let cfg = RunConfig::from_doc(
+            parse("[cluster]\nlisten = \"127.0.0.1:7700\"\nworkers = 2\n").unwrap(),
+        );
+        assert_eq!(cfg.cluster.listen, "127.0.0.1:7700");
+        assert_eq!(cfg.cluster.workers, 2);
     }
 
     #[test]

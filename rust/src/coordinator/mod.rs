@@ -7,6 +7,7 @@ pub mod evaluate;
 pub mod flops;
 pub mod metrics;
 pub mod pipeline;
+pub mod resume;
 pub mod schedule;
 pub mod search;
 pub mod selection;

@@ -1,0 +1,154 @@
+//! Checkpoint-sidecar plumbing shared by the search and training
+//! drivers (DESIGN.md §14).
+//!
+//! A resume checkpoint is a `StateVec` file plus a JSON meta sidecar
+//! holding everything the driver needs to continue the interrupted
+//! trajectory bit-for-bit: the step counter, f64 trackers (serialized
+//! as bit-pattern hex — JSON numbers would truncate the mantissa), the
+//! RNG state, and [`BatcherCursor`] snapshots of every batch stream.
+//! Restoring a cursor is O(1); drivers keep a replay fast-forward as a
+//! fallback for sidecars written before cursors existed.
+//!
+//! Commit protocol: every file is written to a `.tmp` and renamed
+//! (atomic within one directory) with the meta sidecar renamed *last* —
+//! it is the commit point, and it fingerprints the state file so a torn
+//! multi-file commit is detected at resume time instead of silently
+//! replaying a wrong trajectory.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::BatcherCursor;
+use crate::util::json::Json;
+
+/// Meta-sidecar path for a checkpoint file.
+pub fn meta_path(ckpt: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.meta.json", ckpt.display()))
+}
+
+/// f64 → lossless hex round-trip (JSON numbers would truncate the
+/// mantissa and break bit-exact resume).
+pub fn bits_str(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// Read a [`bits_str`]-encoded f64 field.
+pub fn bits_of(j: &Json, key: &str) -> Result<f64> {
+    let s = j.req(key)?.as_str()?;
+    Ok(f64::from_bits(
+        u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits in '{key}'"))?,
+    ))
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn u64_of(j: &Json) -> Result<u64> {
+    u64::from_str_radix(j.as_str()?, 16).context("bad u64 hex")
+}
+
+/// Serialize an RNG state snapshot ([`crate::util::Rng::state`]).
+pub fn rng_json(s: [u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|&w| u64_hex(w)).collect())
+}
+
+/// Read an RNG state written by [`rng_json`].
+pub fn rng_of(j: &Json) -> Result<[u64; 4]> {
+    let a = j.as_arr()?;
+    anyhow::ensure!(a.len() == 4, "rng state must have 4 words, got {}", a.len());
+    Ok([u64_of(&a[0])?, u64_of(&a[1])?, u64_of(&a[2])?, u64_of(&a[3])?])
+}
+
+/// Serialize a batcher cursor.  Permutation indices are < 2^53 by an
+/// enormous margin, so `Json::Num` is exact; the shuffle RNG words are
+/// hex like every other bit-critical value.
+pub fn cursor_json(c: &BatcherCursor) -> Json {
+    Json::Obj(vec![
+        ("order".into(), Json::Arr(c.order.iter().map(|&i| Json::Num(i as f64)).collect())),
+        ("pos".into(), Json::Num(c.pos as f64)),
+        ("epoch".into(), Json::Num(c.epoch as f64)),
+        ("rng".into(), rng_json(c.rng)),
+    ])
+}
+
+/// Read a cursor written by [`cursor_json`].  Structural validity
+/// (permutation, bounds) is checked by `EpochBatcher::restore`.
+pub fn cursor_of(j: &Json) -> Result<BatcherCursor> {
+    Ok(BatcherCursor {
+        order: j.req("order")?.as_arr()?.iter().map(|v| v.as_usize()).collect::<Result<_>>()?,
+        pos: j.req("pos")?.as_usize()?,
+        epoch: j.req("epoch")?.as_usize()?,
+        rng: rng_of(j.req("rng")?)?,
+    })
+}
+
+/// FNV-1a over a file's bytes — the meta sidecar fingerprints the state
+/// checkpoint so a torn multi-file commit is *detected* at resume time.
+pub fn file_fingerprint(path: &Path) -> Result<(u64, u64)> {
+    let bytes = std::fs::read(path)?;
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in &bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Ok((bytes.len() as u64, h))
+}
+
+/// Fingerprint fields for a just-written state `.tmp` file.
+pub fn fingerprint_fields(state_tmp: &Path) -> Result<[(String, Json); 2]> {
+    let (len, fnv) = file_fingerprint(state_tmp)?;
+    Ok([
+        ("state_len".into(), Json::Num(len as f64)),
+        ("state_fnv".into(), Json::Str(format!("{fnv:016x}"))),
+    ])
+}
+
+/// Verify a checkpoint against its meta sidecar's fingerprint.
+pub fn check_fingerprint(ckpt: &Path, meta: &Json) -> Result<()> {
+    let (state_len, state_fnv) = file_fingerprint(ckpt)?;
+    let want_len = meta.req("state_len")?.as_u64()?;
+    let want_fnv = u64::from_str_radix(meta.req("state_fnv")?.as_str()?, 16)
+        .context("bad state fingerprint in resume meta")?;
+    anyhow::ensure!(
+        state_len == want_len && state_fnv == want_fnv,
+        "resume checkpoint {} does not match its meta sidecar (torn checkpoint from a \
+         crash mid-write?) — cannot resume safely",
+        ckpt.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn f64_bits_roundtrip_is_lossless() {
+        for v in [0.0, -0.0, 1.0 / 3.0, f64::NEG_INFINITY, 1e-308, f64::NAN] {
+            let j = Json::Obj(vec![("v".into(), bits_str(v))]);
+            let back = bits_of(&parse(&j.to_string()).unwrap(), "v").unwrap();
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn cursor_roundtrips_through_json_text() {
+        let c = BatcherCursor {
+            order: vec![3, 0, 2, 1],
+            pos: 2,
+            epoch: 7,
+            rng: [u64::MAX, 0, 0xDEADBEEF, 1 << 63],
+        };
+        let text = cursor_json(&c).to_string();
+        assert_eq!(cursor_of(&parse(&text).unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn rng_state_rejects_wrong_arity() {
+        let j = parse("[\"00\",\"01\"]").unwrap();
+        assert!(rng_of(&j).is_err());
+    }
+}

@@ -12,9 +12,12 @@
 //!
 //! Crash recovery: with `ckpt_every > 0` (and a run directory) the
 //! driver periodically writes `search_resume.ckpt` + a meta sidecar;
-//! `resume_from` reloads them and fast-forwards the deterministic
-//! batch/noise streams, so a resumed run replays the uninterrupted
-//! trajectory bit-for-bit (regression-tested).
+//! `resume_from` reloads them and restores the deterministic
+//! batch/noise streams in O(1) from their serialized cursors
+//! ([`super::resume`]), so a resumed run replays the uninterrupted
+//! trajectory bit-for-bit (regression-tested).  Sidecars from before
+//! cursor serialization fall back to fast-forward replay of the
+//! streams — same bits, O(step) time.
 
 use std::path::{Path, PathBuf};
 
@@ -29,6 +32,10 @@ use crate::util::Rng;
 use super::evaluate::eval_quantized;
 use super::flops::FlopsModel;
 use super::metrics::RunLogger;
+use super::resume::{
+    bits_of, bits_str, check_fingerprint, cursor_json, cursor_of, fingerprint_fields, meta_path,
+    rng_json, rng_of,
+};
 use super::schedule::{CosineLr, LinearSchedule};
 use super::selection::Selection;
 
@@ -102,25 +109,8 @@ pub fn resume_ckpt_path(dir: &Path) -> PathBuf {
     dir.join("search_resume.ckpt")
 }
 
-fn meta_path(ckpt: &Path) -> PathBuf {
-    PathBuf::from(format!("{}.meta.json", ckpt.display()))
-}
-
 fn sel_path(ckpt: &Path) -> PathBuf {
     PathBuf::from(format!("{}.sel.json", ckpt.display()))
-}
-
-/// f64 → lossless hex round-trip (JSON numbers would truncate the
-/// mantissa and break bit-exact resume).
-fn bits_str(v: f64) -> Json {
-    Json::Str(format!("{:016x}", v.to_bits()))
-}
-
-fn bits_of(j: &Json, key: &str) -> Result<f64> {
-    let s = j.req(key)?.as_str()?;
-    Ok(f64::from_bits(
-        u64::from_str_radix(s, 16).with_context(|| format!("bad f64 bits in '{key}'"))?,
-    ))
 }
 
 /// Mid-run tracker state that must survive a crash for the resumed
@@ -132,35 +122,28 @@ struct ResumePoint {
     last_eflops: f64,
 }
 
-/// FNV-1a over a file's bytes — the meta sidecar fingerprints the state
-/// checkpoint so a torn multi-file commit is *detected* at resume time.
-fn file_fingerprint(path: &Path) -> Result<(u64, u64)> {
-    let bytes = std::fs::read(path)?;
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in &bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    Ok((bytes.len() as u64, h))
-}
-
-/// Checkpoint commit protocol: every file is written to a `.tmp` and
-/// renamed (atomic within one directory), with the meta sidecar renamed
-/// **last** — it is the commit point, and it carries the state file's
-/// length + FNV fingerprint.  A crash at any boundary therefore leaves
-/// either a fully old set, a fully new set, or a mismatched pair that
-/// resume rejects with a clear error — never a silent wrong-trajectory
-/// replay.
+/// Checkpoint commit protocol (see [`super::resume`]): every file is
+/// written to a `.tmp` and renamed (atomic within one directory), with
+/// the meta sidecar renamed **last** — it is the commit point, and it
+/// carries the state file's length + FNV fingerprint.  A crash at any
+/// boundary therefore leaves either a fully old set, a fully new set,
+/// or a mismatched pair that resume rejects with a clear error — never
+/// a silent wrong-trajectory replay.  The sidecar also snapshots both
+/// batcher cursors and the Gumbel RNG so resume restores every
+/// deterministic stream in O(1).
 fn write_resume(
     dir: &Path,
     state: &StateVec,
     point: &ResumePoint,
     best_selection: &Selection,
+    train_batches: &EpochBatcher<'_>,
+    val_batches: &EpochBatcher<'_>,
+    rng: &Rng,
 ) -> Result<()> {
     let ckpt = resume_ckpt_path(dir);
     let state_tmp = dir.join("search_resume.ckpt.tmp");
     state.save(&state_tmp)?;
-    let (state_len, state_fnv) = file_fingerprint(&state_tmp)?;
+    let [len_field, fnv_field] = fingerprint_fields(&state_tmp)?;
     let sel_tmp = dir.join("search_resume.ckpt.sel.json.tmp");
     best_selection.save(&sel_tmp)?;
     let meta = Json::Obj(vec![
@@ -168,8 +151,11 @@ fn write_resume(
         ("ema_bits".into(), bits_str(point.soft_acc_ema)),
         ("best_bits".into(), bits_str(point.best_val_acc)),
         ("eflops_bits".into(), bits_str(point.last_eflops)),
-        ("state_len".into(), Json::Num(state_len as f64)),
-        ("state_fnv".into(), Json::Str(format!("{state_fnv:016x}"))),
+        len_field,
+        fnv_field,
+        ("train_cursor".into(), cursor_json(&train_batches.cursor())),
+        ("val_cursor".into(), cursor_json(&val_batches.cursor())),
+        ("rng".into(), rng_json(rng.state())),
     ]);
     let meta_tmp = dir.join("search_resume.ckpt.meta.json.tmp");
     std::fs::write(&meta_tmp, meta.to_string())?;
@@ -210,10 +196,11 @@ pub fn run_search(
     let mut soft_acc_ema = 0.0f64;
     let ema_beta = 0.9f64;
 
-    // ---- resume: reload state + trackers, then fast-forward every
+    // ---- resume: reload state + trackers, then restore every
     // deterministic stream (batch permutations, Gumbel noise) to the
     // checkpointed step so the continuation replays the uninterrupted
-    // trajectory bit-for-bit.
+    // trajectory bit-for-bit.  Cursor-bearing sidecars restore in O(1);
+    // older ones fast-forward by replaying the streams (same bits).
     let mut start_step = 0usize;
     if let Some(ckpt) = &cfg.resume_from {
         let meta_text = std::fs::read_to_string(meta_path(ckpt))
@@ -222,16 +209,7 @@ pub fn run_search(
         // Torn-commit guard: the meta fingerprints the state file it was
         // written with; a crash between the checkpoint renames leaves a
         // mismatched pair that must error, not silently diverge.
-        let (state_len, state_fnv) = file_fingerprint(ckpt)?;
-        let want_len = meta.req("state_len")?.as_u64()?;
-        let want_fnv = u64::from_str_radix(meta.req("state_fnv")?.as_str()?, 16)
-            .context("bad state fingerprint in resume meta")?;
-        ensure!(
-            state_len == want_len && state_fnv == want_fnv,
-            "resume checkpoint {} does not match its meta sidecar (torn checkpoint from a \
-             crash mid-write?) — cannot resume safely",
-            ckpt.display()
-        );
+        check_fingerprint(ckpt, &meta)?;
         *state = StateVec::load(ckpt, &exec.manifest.state_spec)?;
         start_step = meta.req("step")?.as_usize()?;
         ensure!(
@@ -243,12 +221,19 @@ pub fn run_search(
         best_val_acc = bits_of(&meta, "best_bits")?;
         last_eflops = bits_of(&meta, "eflops_bits")?;
         best_selection = Selection::load(&sel_path(ckpt))?;
-        for _ in 0..start_step {
-            train_batches.next_indices();
-            val_batches.next_indices();
-            if cfg.stochastic {
-                for _ in 0..2 * l * n {
-                    rng.gumbel();
+        if let (Some(tc), Some(vc)) = (meta.get("train_cursor"), meta.get("val_cursor")) {
+            train_batches.restore(&cursor_of(tc)?)?;
+            val_batches.restore(&cursor_of(vc)?)?;
+            rng = Rng::from_state(rng_of(meta.req("rng")?)?);
+        } else {
+            // Pre-cursor sidecar: replay the draw/noise streams.
+            for _ in 0..start_step {
+                train_batches.next_indices();
+                val_batches.next_indices();
+                if cfg.stochastic {
+                    for _ in 0..2 * l * n {
+                        rng.gumbel();
+                    }
                 }
             }
         }
@@ -340,7 +325,15 @@ pub fn run_search(
                 best_val_acc,
                 last_eflops,
             };
-            write_resume(&logger.dir, state, &point, &best_selection)?;
+            write_resume(
+                &logger.dir,
+                state,
+                &point,
+                &best_selection,
+                &train_batches,
+                &val_batches,
+                &rng,
+            )?;
             logger.event("search_ckpt", &[("step", (step + 1) as f64)]);
         }
     }

@@ -3,14 +3,20 @@
 //! including the label-refinery (distillation) option and progressive
 //! initialization across FLOPs targets.
 
-use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
 
 use crate::data::{Dataset, EpochBatcher};
 use crate::exec::StepExecutor;
 use crate::runtime::{metric_f32, StateVec, Tensor};
+use crate::util::json::{parse as json_parse, Json};
 
 use super::evaluate::{eval_fp, eval_quantized, teacher_logits, EvalResult};
 use super::metrics::RunLogger;
+use super::resume::{
+    bits_of, bits_str, check_fingerprint, cursor_json, cursor_of, fingerprint_fields, meta_path,
+};
 use super::schedule::CosineLr;
 use super::selection::Selection;
 
@@ -27,10 +33,15 @@ pub struct TrainCfg {
     pub log_every: usize,
     pub seed: u64,
     /// Write a crash checkpoint (`fp_resume.ckpt` / `retrain_resume.ckpt`)
-    /// into the run directory every N steps (0 = off); a crashed long run
-    /// restarts from it via `ebs search --init-ckpt` or the pipeline's
-    /// `transfer_from`.
+    /// + meta sidecar into the run directory every N steps (0 = off); a
+    /// crashed long run restarts from it via `resume_from` (CLI
+    /// `--resume-pretrain` / `--resume-retrain`).
     pub ckpt_every: usize,
+    /// Resume a previous run from its crash checkpoint; the continued
+    /// trajectory is bit-identical to the uninterrupted one
+    /// (regression-tested), with the batch stream restored in O(1) from
+    /// the sidecar's serialized cursor.
+    pub resume_from: Option<PathBuf>,
 }
 
 impl TrainCfg {
@@ -44,20 +55,74 @@ impl TrainCfg {
             log_every: 20,
             seed: 0,
             ckpt_every: 0,
+            resume_from: None,
         }
     }
 }
 
-/// Atomic crash checkpoint: write-then-rename so an interrupted save
-/// never clobbers the previous good checkpoint.
-fn write_train_ckpt(logger: &RunLogger, name: &str, state: &StateVec) -> Result<()> {
+/// Atomic crash checkpoint: state + meta sidecar, each written to a
+/// `.tmp` and renamed so an interrupted save never clobbers the
+/// previous good set; the sidecar is the commit point and fingerprints
+/// the state file (see [`super::resume`]).
+fn write_train_ckpt(
+    logger: &RunLogger,
+    name: &str,
+    state: &StateVec,
+    step: usize,
+    best: f64,
+    batches: &EpochBatcher<'_>,
+) -> Result<()> {
     if logger.dir.as_os_str().is_empty() {
         return Ok(());
     }
-    let tmp = logger.dir.join(format!("{name}.tmp"));
-    state.save(&tmp)?;
-    std::fs::rename(&tmp, logger.dir.join(name))?;
+    let ckpt = logger.dir.join(name);
+    let state_tmp = logger.dir.join(format!("{name}.tmp"));
+    state.save(&state_tmp)?;
+    let [len_field, fnv_field] = fingerprint_fields(&state_tmp)?;
+    let meta = Json::Obj(vec![
+        ("step".into(), Json::Num(step as f64)),
+        ("best_bits".into(), bits_str(best)),
+        len_field,
+        fnv_field,
+        ("cursor".into(), cursor_json(&batches.cursor())),
+    ]);
+    let meta_tmp = logger.dir.join(format!("{name}.meta.json.tmp"));
+    std::fs::write(&meta_tmp, meta.to_string())?;
+    std::fs::rename(&state_tmp, &ckpt)?;
+    std::fs::rename(&meta_tmp, meta_path(&ckpt))?;
     Ok(())
+}
+
+/// Reload a training crash checkpoint: state, step counter, best-acc
+/// tracker, and the batch stream (O(1) cursor restore; sidecars from
+/// before cursor serialization fast-forward by replaying draws — same
+/// bits).  Returns `(start_step, best_test_acc)`.
+fn restore_train(
+    ckpt: &Path,
+    exec: &StepExecutor,
+    state: &mut StateVec,
+    batches: &mut EpochBatcher<'_>,
+    total_steps: usize,
+) -> Result<(usize, f64)> {
+    let meta_text = std::fs::read_to_string(meta_path(ckpt))
+        .with_context(|| format!("resume checkpoint {} has no meta sidecar", ckpt.display()))?;
+    let meta = json_parse(&meta_text)?;
+    check_fingerprint(ckpt, &meta)?;
+    *state = StateVec::load(ckpt, &exec.manifest.state_spec)?;
+    let start = meta.req("step")?.as_usize()?;
+    ensure!(
+        start <= total_steps,
+        "checkpoint is at step {start} but the run has only {total_steps} steps"
+    );
+    let best = bits_of(&meta, "best_bits")?;
+    if let Some(c) = meta.get("cursor") {
+        batches.restore(&cursor_of(c)?)?;
+    } else {
+        for _ in 0..start {
+            batches.next_indices();
+        }
+    }
+    Ok((start, best))
 }
 
 /// Outcome of a training run: best test accuracy seen at eval points.
@@ -80,7 +145,12 @@ pub fn run_fp_train(
     let lr = CosineLr::new(cfg.lr, cfg.steps);
     let mut best = f64::NEG_INFINITY;
     let mut last_loss = f64::NAN;
-    for step in 0..cfg.steps {
+    let mut start_step = 0usize;
+    if let Some(ckpt) = &cfg.resume_from {
+        (start_step, best) = restore_train(ckpt, exec, state, &mut batches, cfg.steps)?;
+        logger.event("fp_resume", &[("step", start_step as f64)]);
+    }
+    for step in start_step..cfg.steps {
         let (x, y) = batches.next_batch();
         let io = vec![
             ("x".to_string(), x),
@@ -109,7 +179,7 @@ pub fn run_fp_train(
             best = best.max(res.accuracy);
         }
         if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 && step + 1 < cfg.steps {
-            write_train_ckpt(logger, "fp_resume.ckpt", state)?;
+            write_train_ckpt(logger, "fp_resume.ckpt", state, step + 1, best, &batches)?;
         }
     }
     Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })
@@ -137,8 +207,13 @@ pub fn run_retrain(
     let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
     let mut best = f64::NEG_INFINITY;
     let mut last_loss = f64::NAN;
+    let mut start_step = 0usize;
+    if let Some(ckpt) = &cfg.resume_from {
+        (start_step, best) = restore_train(ckpt, exec, state, &mut batches, cfg.steps)?;
+        logger.event("retrain_resume", &[("step", start_step as f64)]);
+    }
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         let (x, y) = batches.next_batch();
         let (t_logits, mu) = match teacher.as_deref_mut() {
             Some(fp_state) if cfg.distill_mu > 0.0 => {
@@ -178,7 +253,7 @@ pub fn run_retrain(
             best = best.max(res.accuracy);
         }
         if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 && step + 1 < cfg.steps {
-            write_train_ckpt(logger, "retrain_resume.ckpt", state)?;
+            write_train_ckpt(logger, "retrain_resume.ckpt", state, step + 1, best, &batches)?;
         }
     }
     Ok(TrainResult { best_test_acc: best, final_train_loss: last_loss })

@@ -10,5 +10,5 @@
 pub mod batcher;
 pub mod synth;
 
-pub use batcher::EpochBatcher;
+pub use batcher::{BatcherCursor, EpochBatcher};
 pub use synth::{Dataset, SynthSpec};

@@ -1,0 +1,880 @@
+//! Coordinator/worker cluster transport (DESIGN.md §18).
+//!
+//! [`ClusterTransport`] is the [`ChunkTransport`] that runs replicas in
+//! *worker processes* instead of pool threads.  The coordinator owns
+//! the control plane: it listens on a TCP address, hands each dial-in a
+//! [`wire`] handshake, keeps every worker's state view in sync with
+//! delta [`Msg::StateSync`] frames (sha256-verified), and fans each
+//! phase out as one [`Msg::PhaseStart`] per live worker.  The data
+//! plane is the same canonical chunk algebra as the in-process pool:
+//! workers stream per-sync-point moment partials through a
+//! [`MomentHub`] living here (one handler thread per dispatched
+//! worker), and per-chunk scalar/grad partials come home in
+//! [`Msg::PhaseDone`] for the single-threaded chunk-order combine.
+//!
+//! Determinism invariant: chunk boundaries depend only on
+//! `(batch, chunks)` and every cross-example reduction is combined
+//! left-to-right in global chunk order on one thread — so worker count
+//! is a pure wall-clock knob and a same-seed search is bit-identical
+//! from 1 thread to N processes, through worker deaths and rejoins.
+//!
+//! Failure model: a worker that dies (or feeds us garbage) poisons the
+//! phase; survivors blocked in a rendezvous get [`Msg::Abort`] and
+//! acknowledge, every partial of the attempt is discarded, the dead
+//! worker's chunks are requeued by simply re-planning over the
+//! survivors, and the phase re-runs — state was never touched, so the
+//! retry is bit-identical.  New workers may dial in between phases
+//! (elastic rejoin); they are brought current with a full state sync.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::native::graph::{Coeffs, ExecCtx, Grads, NativeNet};
+use crate::native::replica::{replica_phase, PhaseArgs, Replica};
+use crate::native::{lookup, synthesize_manifest};
+use crate::runtime::StateVec;
+
+use super::sync::MomentExchange;
+use super::transport::{ChunkTransport, PhaseOutput, PhaseSpec};
+use super::wire::{self, Msg};
+use super::{accumulate_grads, zero_grads, MomentHub, ShardPlan, ShardSpec};
+
+/// How long a dial-in gets to complete the Hello/Welcome handshake.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long the coordinator waits for a (re)join when it has no
+/// live workers left before giving up on the phase.
+const REJOIN_GRACE: Duration = Duration::from_secs(30);
+/// Accept-poll interval while waiting for workers.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Hard cap on phase re-dispatch attempts (each failed attempt drops at
+/// least one worker; this is a backstop against pathological churn).
+const MAX_ATTEMPTS: usize = 64;
+
+/// State leaves workers need to execute a phase: parameters, BN
+/// statistics, and branch strengths.  Optimizer and arch-update state
+/// stay coordinator-only — coefficients arrive precomputed.
+fn is_view_leaf(path: &str) -> bool {
+    path.starts_with("state/params/")
+        || path.starts_with("state/bn/")
+        || path.starts_with("state/alphas/")
+}
+
+/// The worker-visible state view, in canonical spec order (identical on
+/// coordinator and worker — both sides synthesize the same manifest).
+fn view_leaves(state: &StateVec) -> impl Iterator<Item = (&str, &[f32])> {
+    state
+        .spec
+        .iter()
+        .zip(&state.tensors)
+        .filter(|(l, _)| is_view_leaf(&l.path))
+        .filter_map(|(l, t)| t.as_f32().ok().map(|v| (l.path.as_str(), v)))
+}
+
+/// Leaves of `leaves` whose bits differ from the cached view (bitwise:
+/// a NaN or −0.0 must sync like any other value).
+fn view_delta(
+    cache: &HashMap<String, Vec<f32>>,
+    leaves: &[(&str, &[f32])],
+) -> Vec<(String, Vec<f32>)> {
+    leaves
+        .iter()
+        .filter(|(p, v)| match cache.get(*p) {
+            Some(old) => {
+                old.len() != v.len()
+                    || old.iter().map(|x| x.to_bits()).ne(v.iter().map(|x| x.to_bits()))
+            }
+            None => true,
+        })
+        .map(|(p, v)| (p.to_string(), v.to_vec()))
+        .collect()
+}
+
+struct WorkerConn {
+    stream: TcpStream,
+    peer: String,
+    /// Whether this worker holds the last-broadcast state view (false
+    /// until its first sync → it gets the full view, not a delta).
+    synced: bool,
+}
+
+/// Outcome of one handler thread for one dispatched worker.
+enum Fail {
+    /// Connection lost or protocol violated — drop the worker.
+    Dead(String),
+    /// Blocked in a rendezvous the hub poisoned — worker is alive and
+    /// needs an [`Msg::Abort`]/ack drain before reuse.
+    Aborted,
+}
+
+/// The coordinator side of the worker-process replica pool.
+pub struct ClusterTransport {
+    listener: TcpListener,
+    model: String,
+    workers: Vec<WorkerConn>,
+    /// Last-broadcast state view (what every synced worker holds).
+    view: HashMap<String, Vec<f32>>,
+    /// BN running-stat commit from the latest train-mode phase.
+    bn_pending: Vec<(String, Vec<f32>)>,
+    children: Vec<Child>,
+}
+
+impl ClusterTransport {
+    /// Bind the coordinator listener.  `addr` may use port 0 for an
+    /// ephemeral port (see [`ClusterTransport::local_addr`]).
+    pub fn listen(addr: &str, model: &str) -> Result<ClusterTransport> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding cluster coordinator on {addr}"))?;
+        listener.set_nonblocking(true).context("cluster listener set_nonblocking")?;
+        Ok(ClusterTransport {
+            listener,
+            model: model.to_string(),
+            workers: Vec::new(),
+            view: HashMap::new(),
+            bn_pending: Vec::new(),
+            children: Vec::new(),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Spawn `n` worker processes of this same binary, dialing back in.
+    pub fn spawn_local_workers(&mut self, n: usize) -> Result<()> {
+        let exe = std::env::current_exe().context("resolving own binary for worker spawn")?;
+        let addr = self.local_addr()?.to_string();
+        for _ in 0..n {
+            let child = Command::new(&exe)
+                .args(["worker", "--connect", &addr])
+                .spawn()
+                .with_context(|| format!("spawning worker process {}", exe.display()))?;
+            self.children.push(child);
+        }
+        Ok(())
+    }
+
+    /// Block until at least `n` workers have completed the handshake.
+    pub fn wait_for_workers(&mut self, n: usize, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            self.accept_new();
+            if self.workers.len() >= n {
+                return Ok(());
+            }
+            ensure!(
+                t0.elapsed() < timeout,
+                "timed out waiting for {n} cluster workers ({} connected)",
+                self.workers.len()
+            );
+            std::thread::sleep(ACCEPT_POLL);
+        }
+    }
+
+    /// Drain the accept queue: handshake every pending dial-in.  A
+    /// failed handshake drops that connection, never the coordinator.
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Some(w) = self.handshake(stream, peer.to_string()) {
+                        eprintln!("[cluster] worker joined from {}", w.peer);
+                        self.workers.push(w);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    eprintln!("[cluster] accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handshake(&self, mut stream: TcpStream, peer: String) -> Option<WorkerConn> {
+        let setup = || -> Result<()> {
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+            match wire::read_msg(&mut stream)? {
+                Some(Msg::Hello) => {}
+                _ => bail!("expected Hello"),
+            }
+            wire::write_msg(&mut stream, &Msg::Welcome { model: self.model.clone() })?;
+            stream.set_read_timeout(None)?;
+            Ok(())
+        };
+        match setup() {
+            Ok(()) => Some(WorkerConn { stream, peer, synced: false }),
+            Err(e) => {
+                eprintln!("[cluster] handshake with {peer} failed: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Bring every live worker's state view current: synced workers get
+    /// the bitwise delta against the last broadcast, fresh dial-ins get
+    /// the full view.  Both carry the digest of the *full* view, which
+    /// workers verify after applying.  Workers whose socket fails here
+    /// are dropped.
+    fn sync_state(&mut self, state: &StateVec) {
+        let leaves: Vec<(&str, &[f32])> = view_leaves(state).collect();
+        let digest = wire::view_digest(leaves.iter().copied());
+        let delta = view_delta(&self.view, &leaves);
+        let delta_frame = wire::encode(&Msg::StateSync { leaves: delta.clone(), digest });
+        // Full frame built lazily — steady state has no fresh workers.
+        let mut full_frame: Option<Vec<u8>> = None;
+        self.workers.retain_mut(|w| {
+            let frame: &[u8] = if w.synced {
+                &delta_frame
+            } else {
+                full_frame.get_or_insert_with(|| {
+                    let all =
+                        leaves.iter().map(|(p, v)| (p.to_string(), v.to_vec())).collect();
+                    wire::encode(&Msg::StateSync { leaves: all, digest })
+                })
+            };
+            match w.stream.write_all(frame).and_then(|_| w.stream.flush()) {
+                Ok(()) => {
+                    w.synced = true;
+                    true
+                }
+                Err(e) => {
+                    eprintln!("[cluster] dropping worker {} (state sync: {e})", w.peer);
+                    false
+                }
+            }
+        });
+        for (p, v) in delta {
+            self.view.insert(p, v);
+        }
+    }
+
+    /// Combine one successful attempt: per-chunk scalars and grads from
+    /// every worker, replicas in shard order × local chunks in order —
+    /// i.e. global chunk order, same as the in-process pool.
+    fn combine_results(
+        &mut self,
+        net: &NativeNet,
+        spec: &PhaseSpec<'_>,
+        plan: &ShardPlan,
+        done: Vec<wire::PhaseDone>,
+        grads: &mut Grads,
+    ) -> Result<PhaseOutput> {
+        let n_layers = net.desc.qconv_names.len();
+        let n_bits = net.bits.len();
+        if spec.backward {
+            zero_grads(grads, n_layers, n_bits);
+        }
+        self.bn_pending.clear();
+        let mut out = PhaseOutput::default();
+        for (r, pd) in done.into_iter().enumerate() {
+            let k = plan.shard_chunks(r).len();
+            ensure!(
+                pd.ce.len() == k && pd.correct.len() == k,
+                "worker {r} returned {} chunk scalars, expected {k}",
+                pd.ce.len()
+            );
+            ensure!(
+                pd.kl.is_empty() || pd.kl.len() == k,
+                "worker {r} returned {} KL partials, expected 0 or {k}",
+                pd.kl.len()
+            );
+            out.ce_sum += pd.ce.iter().sum::<f64>();
+            out.kl_sum += pd.kl.iter().sum::<f64>();
+            out.correct += pd.correct.iter().sum::<f32>();
+            if spec.backward {
+                ensure!(
+                    pd.grads.len() == k,
+                    "worker {r} returned {} chunk grads, expected {k}",
+                    pd.grads.len()
+                );
+                for cg in pd.grads {
+                    ensure!(
+                        cg.dcw.len() == n_layers && cg.dcx.len() == n_layers,
+                        "worker {r} grad has {}/{} strength rows, expected {n_layers}",
+                        cg.dcw.len(),
+                        cg.dcx.len()
+                    );
+                    for row in cg.dcw.iter().chain(&cg.dcx) {
+                        ensure!(
+                            row.len() == n_bits,
+                            "worker {r} strength row of {} entries, expected {n_bits}",
+                            row.len()
+                        );
+                    }
+                    let part = Grads {
+                        by_path: cg.leaves.into_iter().collect(),
+                        dcw: cg.dcw,
+                        dcx: cg.dcx,
+                    };
+                    accumulate_grads(grads, &part);
+                }
+            } else {
+                ensure!(pd.grads.is_empty(), "worker {r} sent grads for a forward-only phase");
+            }
+            if r == 0 {
+                self.bn_pending = pd.bn;
+            } else {
+                ensure!(pd.bn.is_empty(), "worker {r} sent a BN commit (shard 0 is canonical)");
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ChunkTransport for ClusterTransport {
+    fn kind(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn run_phase(
+        &mut self,
+        net: &NativeNet,
+        state: &StateVec,
+        spec: &PhaseSpec<'_>,
+        grads: &mut Grads,
+    ) -> Result<PhaseOutput> {
+        let batch = spec.y.len();
+        ensure!(batch > 0, "cannot run a phase over an empty batch");
+        let img = spec.x.len() / batch;
+        let classes = spec.classes;
+        for attempt in 0.. {
+            ensure!(
+                attempt < MAX_ATTEMPTS,
+                "cluster phase failed {MAX_ATTEMPTS} consecutive dispatch attempts"
+            );
+            // Elastic membership: pick up dial-ins between phases; if
+            // everyone is gone, give a restart a grace window.
+            self.accept_new();
+            if self.workers.is_empty() {
+                self.wait_for_workers(1, REJOIN_GRACE)
+                    .context("cluster has no live workers")?;
+            }
+            self.sync_state(state);
+            if self.workers.is_empty() {
+                continue;
+            }
+            // Worker count is a wall-clock knob only: the plan keeps
+            // the canonical chunk grid and deals whole chunks out to
+            // however many workers are alive right now.
+            let plan = ShardPlan::new(
+                batch,
+                ShardSpec { shards: self.workers.len(), chunks: spec.chunks.max(1) },
+            );
+            let coeffs_wire = spec.coeffs.map(|c| (c.cw.clone(), c.cx.clone()));
+            let mut dispatch_ok = vec![true; plan.shards];
+            for r in 0..plan.shards {
+                let ex = plan.shard_examples(r);
+                let msg = Msg::PhaseStart(wire::PhaseStart {
+                    train: spec.train,
+                    backward: spec.backward,
+                    want_bn: spec.train && r == 0,
+                    classes: classes as u32,
+                    global_batch: batch as u32,
+                    chunk_size: plan.chunk_size as u32,
+                    chunk0: plan.shard_chunks(r).start as u32,
+                    total_chunks: plan.chunks as u32,
+                    shards: plan.shards as u32,
+                    mu: spec.teacher.map_or(0.0, |(_, mu)| mu),
+                    coeffs: coeffs_wire.clone(),
+                    x: spec.x[ex.start * img..ex.end * img].to_vec(),
+                    y: spec.y[ex.clone()].to_vec(),
+                    teacher: spec
+                        .teacher
+                        .map(|(t, _)| t[ex.start * classes..ex.end * classes].to_vec()),
+                });
+                if let Err(e) = wire::write_msg(&mut self.workers[r].stream, &msg) {
+                    eprintln!(
+                        "[cluster] phase dispatch to {} failed: {e:#}",
+                        self.workers[r].peer
+                    );
+                    dispatch_ok[r] = false;
+                }
+            }
+            let hub = MomentHub::new(plan.shards, plan.chunks);
+            if dispatch_ok.iter().any(|ok| !ok) {
+                // A shard is missing from the rendezvous — fail every
+                // sync point fast instead of deadlocking the others.
+                hub.poison();
+            }
+            let dispatched = &mut self.workers[..plan.shards];
+            let mut outcome: Vec<Result<wire::PhaseDone, Fail>> =
+                Vec::with_capacity(plan.shards);
+            std::thread::scope(|s| {
+                let hub = &hub;
+                let mut handles = Vec::with_capacity(plan.shards);
+                for (r, w) in dispatched.iter_mut().enumerate() {
+                    if !dispatch_ok[r] {
+                        handles.push(None);
+                        continue;
+                    }
+                    let owned = plan.shard_chunks(r);
+                    handles.push(Some(s.spawn(move || handle_worker(&mut w.stream, hub, owned))));
+                }
+                for h in handles {
+                    outcome.push(match h {
+                        None => Err(Fail::Dead("phase dispatch failed".into())),
+                        Some(h) => h
+                            .join()
+                            .unwrap_or_else(|_| Err(Fail::Dead("handler thread panicked".into()))),
+                    });
+                }
+            });
+            let mut done = Vec::with_capacity(plan.shards);
+            let mut dead = Vec::new();
+            let mut aborted = Vec::new();
+            for (r, res) in outcome.into_iter().enumerate() {
+                match res {
+                    Ok(pd) => done.push(pd),
+                    Err(Fail::Dead(why)) => {
+                        eprintln!("[cluster] worker {} lost: {why}", self.workers[r].peer);
+                        dead.push(r);
+                    }
+                    Err(Fail::Aborted) => aborted.push(r),
+                }
+            }
+            if dead.is_empty() && aborted.is_empty() {
+                return self.combine_results(net, spec, &plan, done, grads);
+            }
+            // Failed attempt: every partial is discarded.  Survivors
+            // blocked in the poisoned rendezvous get an abort/ack
+            // drain; anything that won't drain cleanly joins the dead.
+            for &r in &aborted {
+                if !drain_abort(&mut self.workers[r].stream) {
+                    eprintln!(
+                        "[cluster] worker {} failed the abort drain",
+                        self.workers[r].peer
+                    );
+                    dead.push(r);
+                }
+            }
+            dead.sort_unstable();
+            dead.dedup();
+            for &r in dead.iter().rev() {
+                let w = self.workers.remove(r);
+                eprintln!("[cluster] requeueing chunks of dead worker {}", w.peer);
+            }
+            // Loop: re-plan over the survivors.  State was never
+            // touched, chunk boundaries don't move → bit-identical.
+        }
+        unreachable!("attempt loop returns or bails");
+    }
+
+    fn commit_bn(&mut self, state: &mut StateVec) -> Result<()> {
+        for (path, vals) in &self.bn_pending {
+            ensure!(
+                path.starts_with("state/bn/"),
+                "cluster BN commit addressed non-BN leaf '{path}'"
+            );
+            let dst = state.get_mut(path)?.as_f32_mut()?;
+            ensure!(
+                dst.len() == vals.len(),
+                "cluster BN commit for '{path}': {} values for a {}-element leaf",
+                vals.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(vals);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ClusterTransport {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = wire::write_msg(&mut w.stream, &Msg::Shutdown);
+        }
+        for mut c in self.children.drain(..) {
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                match c.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(ACCEPT_POLL)
+                    }
+                    _ => {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serve one dispatched worker for one phase: relay its moment partials
+/// through the shared hub (the rendezvous that keeps sync-BN
+/// bit-identical), hand back each combined vector, and collect its
+/// [`wire::PhaseDone`].
+fn handle_worker(
+    stream: &mut TcpStream,
+    hub: &MomentHub,
+    owned: std::ops::Range<usize>,
+) -> Result<wire::PhaseDone, Fail> {
+    let mut combined = Vec::new();
+    loop {
+        match wire::read_msg(stream) {
+            Ok(Some(Msg::MomentPart { chunk0, m, parts })) => {
+                let k = if m == 0 { 0 } else { parts.len() / m as usize };
+                if chunk0 as usize != owned.start || k != owned.len() {
+                    hub.poison();
+                    return Err(Fail::Dead(format!(
+                        "moment partial for chunks {chunk0}+{k}, owns {owned:?}"
+                    )));
+                }
+                if hub.reduce(chunk0 as usize, m as usize, &parts, &mut combined).is_err() {
+                    return Err(Fail::Aborted);
+                }
+                let reply = Msg::MomentCombined { combined: std::mem::take(&mut combined) };
+                if wire::write_msg(stream, &reply).is_err() {
+                    hub.poison();
+                    return Err(Fail::Dead("socket died returning combined moments".into()));
+                }
+            }
+            Ok(Some(Msg::PhaseDone(pd))) => return Ok(pd),
+            Ok(Some(Msg::Error { msg })) => {
+                hub.poison();
+                return Err(Fail::Dead(format!("worker error: {msg}")));
+            }
+            Ok(Some(_)) => {
+                hub.poison();
+                return Err(Fail::Dead("unexpected frame mid-phase".into()));
+            }
+            Ok(None) => {
+                hub.poison();
+                return Err(Fail::Dead("connection closed mid-phase".into()));
+            }
+            Err(e) => {
+                hub.poison();
+                return Err(Fail::Dead(format!("{e:#}")));
+            }
+        }
+    }
+}
+
+/// Abort/ack drain for a live worker stuck in a poisoned rendezvous.
+/// Returns whether the worker acknowledged and is reusable.
+fn drain_abort(stream: &mut TcpStream) -> bool {
+    if wire::write_msg(stream, &Msg::Abort).is_err() {
+        return false;
+    }
+    loop {
+        match wire::read_msg(stream) {
+            Ok(Some(Msg::AbortAck)) => return true,
+            // In-flight partials/results from before the worker saw the
+            // abort — part of the discarded attempt.
+            Ok(Some(Msg::MomentPart { .. } | Msg::PhaseDone(_))) => continue,
+            _ => return false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Sentinel for a phase the coordinator aborted: the worker
+/// acknowledges and returns to its main loop.
+#[derive(Debug)]
+pub(crate) struct PhaseAborted;
+
+impl fmt::Display for PhaseAborted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "phase aborted by coordinator")
+    }
+}
+
+impl std::error::Error for PhaseAborted {}
+
+/// Sentinel for an injected fault: the worker process "dies" (drops
+/// the connection and exits) to exercise the failure model.
+#[derive(Debug)]
+struct FaultExit;
+
+impl fmt::Display for FaultExit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected worker fault")
+    }
+}
+
+impl std::error::Error for FaultExit {}
+
+/// Deterministic fault injection for the cluster tests/CI: die at the
+/// Nth phase dispatch (mid-epoch) or right after shipping the first
+/// moment partial of the Nth phase (mid-rendezvous).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerFault {
+    pub phase: Option<usize>,
+    pub moment: Option<usize>,
+}
+
+/// Parse a `--fault` spec: `phase:N` or `moment:N` (N counts
+/// [`Msg::PhaseStart`] frames received, 0-based).
+pub fn parse_fault(spec: &str) -> Result<WorkerFault> {
+    let (kind, n) = spec
+        .split_once(':')
+        .with_context(|| format!("--fault expects KIND:N, got '{spec}'"))?;
+    let n: usize = n.parse().with_context(|| format!("--fault index in '{spec}'"))?;
+    match kind {
+        "phase" => Ok(WorkerFault { phase: Some(n), moment: None }),
+        "moment" => Ok(WorkerFault { phase: None, moment: Some(n) }),
+        _ => bail!("unknown fault kind '{kind}' (expected phase|moment)"),
+    }
+}
+
+/// Worker-side [`MomentExchange`]: ship the partial to the coordinator
+/// and block for the combined vector — the wire twin of the in-process
+/// hub rendezvous.
+struct RemoteMoments {
+    stream: Mutex<TcpStream>,
+    /// One-shot mid-rendezvous fault: die after the next partial ships.
+    fault: AtomicBool,
+}
+
+impl MomentExchange for RemoteMoments {
+    fn reduce(&self, chunk0: usize, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        wire::write_msg(
+            &mut *s,
+            &Msg::MomentPart { chunk0: chunk0 as u32, m: m as u32, parts: parts.to_vec() },
+        )?;
+        if self.fault.swap(false, Ordering::SeqCst) {
+            return Err(FaultExit.into());
+        }
+        match wire::read_msg(&mut *s)? {
+            Some(Msg::MomentCombined { combined }) => {
+                out.clear();
+                out.extend_from_slice(&combined);
+                Ok(())
+            }
+            Some(Msg::Abort) => Err(PhaseAborted.into()),
+            Some(_) => bail!("unexpected frame while waiting for combined moments"),
+            None => bail!("coordinator hung up mid-rendezvous"),
+        }
+    }
+}
+
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) if t0.elapsed() < timeout => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to coordinator {addr}"))
+            }
+        }
+    }
+}
+
+/// Overwrite synced leaves.  Only view leaves are writable over the
+/// wire — the coordinator owns everything else.
+fn apply_sync(state: &mut StateVec, leaves: Vec<(String, Vec<f32>)>) -> Result<()> {
+    for (path, vals) in leaves {
+        ensure!(is_view_leaf(&path), "state sync writes non-view leaf '{path}'");
+        let dst = state.get_mut(&path)?.as_f32_mut()?;
+        ensure!(
+            dst.len() == vals.len(),
+            "state sync leaf '{path}': {} values for a {}-element leaf",
+            vals.len(),
+            dst.len()
+        );
+        dst.copy_from_slice(&vals);
+    }
+    Ok(())
+}
+
+/// Execute one phase dispatch on the worker's synced state view.
+fn worker_phase(
+    net: &NativeNet,
+    rep: &mut Replica,
+    state: &StateVec,
+    ps: &wire::PhaseStart,
+    stream: &TcpStream,
+    moment_fault: bool,
+) -> Result<wire::PhaseDone> {
+    let sb = ps.y.len();
+    ensure!(sb > 0, "phase dispatch with an empty shard");
+    ensure!(ps.chunk_size > 0, "phase dispatch with zero chunk size");
+    let coeffs =
+        ps.coeffs.as_ref().map(|(cw, cx)| Coeffs { cw: cw.clone(), cx: cx.clone() });
+    // Multi-worker train phases rendezvous through the coordinator;
+    // otherwise the local chunk-order combine is already canonical.
+    let remote;
+    let hub: Option<&(dyn MomentExchange + Sync)> = if ps.train && ps.shards > 1 {
+        remote = RemoteMoments {
+            stream: Mutex::new(stream.try_clone().context("cloning stream for moments")?),
+            fault: AtomicBool::new(moment_fault),
+        };
+        Some(&remote)
+    } else {
+        None
+    };
+    let ctx = ExecCtx {
+        global_batch: ps.global_batch as usize,
+        chunk_size: ps.chunk_size as usize,
+        chunk0: ps.chunk0 as usize,
+        total_chunks: ps.total_chunks as usize,
+        hub,
+        threads: net.threads,
+    };
+    let args = PhaseArgs {
+        train: ps.train,
+        backward: ps.backward,
+        classes: ps.classes as usize,
+        coeffs: coeffs.as_ref(),
+        x: &ps.x,
+        y: &ps.y,
+        teacher: ps.teacher.as_deref().map(|t| (t, ps.mu)),
+    };
+    replica_phase(net, rep, state, &args, &ctx)?;
+    let k = sb.div_ceil(ctx.chunk_size);
+    let mut pd = wire::PhaseDone {
+        ce: rep.ce.clone(),
+        kl: rep.kl.clone(),
+        correct: rep.correct.clone(),
+        grads: Vec::new(),
+        bn: Vec::new(),
+    };
+    if ps.backward {
+        for g in &rep.grads[..k] {
+            pd.grads.push(wire::ChunkGrads {
+                leaves: g.by_path.iter().map(|(p, v)| (p.clone(), v.clone())).collect(),
+                dcw: g.dcw.clone(),
+                dcx: g.dcx.clone(),
+            });
+        }
+    }
+    if ps.want_bn {
+        pd.bn = rep
+            .arena
+            .bn_updates
+            .live_entries()
+            .map(|(p, v)| (p.to_string(), v.to_vec()))
+            .collect();
+    }
+    Ok(pd)
+}
+
+/// Worker-process main loop: dial the coordinator, build the announced
+/// model, and serve state syncs + phase dispatches until shutdown.
+/// `threads` is the worker's own kernel-thread budget (0 = auto) —
+/// independent of the coordinator's.
+pub fn run_worker(addr: &str, threads: usize, fault: WorkerFault) -> Result<()> {
+    let mut stream = connect_retry(addr, Duration::from_secs(10))?;
+    stream.set_nodelay(true).ok();
+    wire::write_msg(&mut stream, &Msg::Hello)?;
+    let model = match wire::read_msg(&mut stream)? {
+        Some(Msg::Welcome { model }) => model,
+        Some(_) => bail!("expected Welcome from coordinator"),
+        None => bail!("coordinator hung up during handshake"),
+    };
+    let cfg = lookup(&model)
+        .with_context(|| format!("coordinator announced unknown model '{model}'"))?;
+    let manifest = synthesize_manifest(&cfg)?;
+    let mut net = NativeNet::from_manifest(&manifest)?;
+    net.threads = threads;
+    let mut state = StateVec::zeros(&manifest.state_spec);
+    let mut rep = Replica::default();
+    let mut phase_no: usize = 0;
+    loop {
+        match wire::read_msg(&mut stream)? {
+            None | Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::StateSync { leaves, digest }) => {
+                apply_sync(&mut state, leaves)?;
+                let got = wire::view_digest(view_leaves(&state));
+                if got != digest {
+                    let msg = "state view digest mismatch after sync".to_string();
+                    let _ = wire::write_msg(&mut stream, &Msg::Error { msg: msg.clone() });
+                    bail!(msg);
+                }
+            }
+            Some(Msg::PhaseStart(ps)) => {
+                let n = phase_no;
+                phase_no += 1;
+                if fault.phase == Some(n) {
+                    // Simulated crash: vanish without a goodbye.
+                    return Ok(());
+                }
+                let moment_fault = fault.moment == Some(n);
+                match worker_phase(&net, &mut rep, &state, &ps, &stream, moment_fault) {
+                    Ok(pd) => wire::write_msg(&mut stream, &Msg::PhaseDone(pd))?,
+                    Err(e) if e.downcast_ref::<PhaseAborted>().is_some() => {
+                        wire::write_msg(&mut stream, &Msg::AbortAck)?;
+                    }
+                    Err(e) if e.downcast_ref::<FaultExit>().is_some() => return Ok(()),
+                    Err(e) => {
+                        let _ =
+                            wire::write_msg(&mut stream, &Msg::Error { msg: format!("{e:#}") });
+                        return Err(e);
+                    }
+                }
+            }
+            // An abort can race past the PhaseDone we already sent —
+            // acknowledge so the coordinator's drain completes.
+            Some(Msg::Abort) => wire::write_msg(&mut stream, &Msg::AbortAck)?,
+            Some(_) => bail!("unexpected frame in worker main loop"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_specs_parse() {
+        let f = parse_fault("phase:2").unwrap();
+        assert_eq!(f.phase, Some(2));
+        assert_eq!(f.moment, None);
+        let f = parse_fault("moment:0").unwrap();
+        assert_eq!(f.moment, Some(0));
+        for bad in ["phase", "phase:", "phase:x", "epoch:1", ":3"] {
+            assert!(parse_fault(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn view_filter_excludes_coordinator_only_state() {
+        assert!(is_view_leaf("state/params/s0b0c1/w"));
+        assert!(is_view_leaf("state/bn/s0b0c1/mean"));
+        assert!(is_view_leaf("state/alphas/s0b0c1/r"));
+        assert!(!is_view_leaf("state/opt/momentum/s0b0c1/w"));
+        assert!(!is_view_leaf("state/arch/step"));
+        assert!(!is_view_leaf("in/x"));
+    }
+
+    #[test]
+    fn view_delta_is_bitwise() {
+        let mut cache = HashMap::new();
+        cache.insert("a".to_string(), vec![1.0f32, 0.0]);
+        cache.insert("b".to_string(), vec![2.0f32]);
+        // identical bits → no delta
+        let same: Vec<(&str, &[f32])> = vec![("a", &[1.0, 0.0][..]), ("b", &[2.0][..])];
+        assert!(view_delta(&cache, &same).is_empty());
+        // -0.0 differs from 0.0 bitwise even though -0.0 == 0.0
+        let neg: Vec<(&str, &[f32])> = vec![("a", &[1.0, -0.0][..]), ("b", &[2.0][..])];
+        let d = view_delta(&cache, &neg);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, "a");
+        // unknown leaf always syncs
+        let fresh: Vec<(&str, &[f32])> = vec![("c", &[3.0][..])];
+        assert_eq!(view_delta(&cache, &fresh).len(), 1);
+    }
+}

@@ -29,17 +29,30 @@
 //! count — defines the numerics: a same-seed run is bit-identical at
 //! shards {1, 2, 4} as long as `chunks` is held fixed.
 //!
+//! Where the replicas *live* is pluggable (DESIGN.md §18): the
+//! [`ChunkTransport`] trait (in [`transport`]) owns the replica pool,
+//! with two implementations — [`InProcessTransport`], the scoped-thread
+//! pool, and [`ClusterTransport`] (in [`cluster`]), a coordinator that
+//! fans phases out to `ebs worker` processes over the length-prefixed
+//! exec protocol (in [`wire`]).  Both honor the same chunk algebra, so
+//! the transport is invisible to the numerics.
+//!
 //! [`StepExecutor`] is the coordinator-facing front-end: it owns the
 //! [`Engine`], carries the [`ShardSpec`], and routes step graphs through
 //! the engine's sharded path when sharding is enabled.
 //!
 //! [`StateVec`]: crate::runtime::StateVec
 
+pub mod cluster;
 pub mod reduce;
 pub mod sync;
+pub mod transport;
+pub mod wire;
 
+pub use cluster::{parse_fault, run_worker, ClusterTransport, WorkerFault};
 pub use reduce::{accumulate_grads, zero_grads};
-pub use sync::MomentHub;
+pub use sync::{MomentExchange, MomentHub};
+pub use transport::{ChunkTransport, InProcessTransport, PhaseOutput, PhaseSpec};
 
 use std::ops::{Deref, DerefMut, Range};
 
@@ -77,15 +90,17 @@ impl ShardSpec {
 
     /// Normalize a `(--shards, [search] shard_chunks)` request:
     /// `shards == 0` means sharding is off entirely (serial legacy
-    /// path); otherwise `chunks == 0` resolves to
-    /// `max(shards, DEFAULT_CHUNKS)` so that every shard count up to
-    /// [`DEFAULT_CHUNKS`] shares one canonical chunking, and an explicit
-    /// `chunks` is floored at `shards` (a shard must own ≥ 1 chunk).
+    /// path); otherwise `chunks == 0` resolves to [`DEFAULT_CHUNKS`].
+    /// `chunks` is the one numerics-defining knob — it never follows
+    /// the shard count, so scaling replicas (threads or worker
+    /// processes) can never silently change the canonical chunking.  A
+    /// request for more shards than chunks is clamped at plan time
+    /// ([`ShardPlan::new`]); the surplus replicas simply idle.
     pub fn new(shards: usize, chunks: usize) -> ShardSpec {
         if shards == 0 {
             return ShardSpec::serial();
         }
-        let chunks = if chunks == 0 { shards.max(DEFAULT_CHUNKS) } else { chunks.max(shards) };
+        let chunks = if chunks == 0 { DEFAULT_CHUNKS } else { chunks };
         ShardSpec { shards, chunks }
     }
 
@@ -230,6 +245,14 @@ impl StepExecutor {
         self.spec
     }
 
+    /// Swap the replica transport of the engine's backend (DESIGN.md
+    /// §18) — e.g. to a [`ClusterTransport`] with dialed-in workers.
+    /// Transports honor the same canonical chunk algebra, so this
+    /// changes where replicas run, never what they compute.
+    pub fn set_transport(&mut self, transport: Box<dyn ChunkTransport>) -> Result<()> {
+        self.engine.set_transport(transport)
+    }
+
     /// Execute one step graph under the executor's sharding policy.
     pub fn step(
         &mut self,
@@ -257,8 +280,13 @@ mod tests {
         assert_eq!(s1.chunks, DEFAULT_CHUNKS);
         assert!(s1.active());
         assert_eq!(ShardSpec::new(2, 0).chunks, DEFAULT_CHUNKS);
-        assert_eq!(ShardSpec::new(8, 0).chunks, 8);
-        assert_eq!(ShardSpec::new(4, 2).chunks, 4, "chunks floored at shards");
+        // Chunk count never follows the shard count: 8 replicas over
+        // the default 4 chunks clamp to 4 effective shards at plan
+        // time instead of changing the numerics.
+        assert_eq!(ShardSpec::new(8, 0).chunks, DEFAULT_CHUNKS);
+        assert_eq!(ShardSpec::new(4, 2).chunks, 2, "explicit chunks wins");
+        assert_eq!(ShardPlan::new(16, ShardSpec::new(8, 0)).shards, 4);
+        assert_eq!(ShardPlan::new(16, ShardSpec::new(4, 2)).shards, 2);
     }
 
     #[test]

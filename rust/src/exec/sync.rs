@@ -17,6 +17,26 @@ use std::sync::{Condvar, Mutex};
 
 use anyhow::{ensure, Result};
 
+/// A cross-replica moment reduction point, abstracted over transport
+/// (DESIGN.md §18).  The in-process implementation is [`MomentHub`];
+/// the cluster worker's implementation ships the partials to the
+/// coordinator over the exec wire protocol and blocks for the combined
+/// vector.  The numerics contract is shared: whoever combines does so
+/// left-to-right in **global chunk order** on one thread, so every
+/// implementation yields bit-identical results for the same partials.
+pub trait MomentExchange {
+    /// Submit per-chunk partials (`parts[i·m..(i+1)·m]` is global chunk
+    /// `chunk0 + i`) and receive the canonical combined vector in
+    /// `out`.  Blocks until every participant has submitted.
+    fn reduce(&self, chunk0: usize, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()>;
+}
+
+impl MomentExchange for MomentHub {
+    fn reduce(&self, chunk0: usize, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()> {
+        MomentHub::reduce(self, chunk0, m, parts, out)
+    }
+}
+
 /// Rendezvous + canonical combine for per-chunk f64 partials.
 pub struct MomentHub {
     shards: usize,

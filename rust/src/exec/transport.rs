@@ -1,0 +1,182 @@
+//! The transport seam of the sharded step executor (DESIGN.md §18).
+//!
+//! A [`ChunkTransport`] owns the replicas of the data plane — where
+//! they live (threads of this process, or worker processes across a
+//! cluster) and how their per-chunk partials travel back.  The
+//! numerics contract is transport-independent: the global batch is cut
+//! by the canonical [`ShardPlan`] chunking, replicas compute per-chunk
+//! partials, and whoever combines does so left-to-right in global
+//! chunk order on one thread — so the same seed produces bit-identical
+//! steps on 1 thread, N threads, or N worker processes.
+//!
+//! [`InProcessTransport`] is the scoped-thread pool PR 5 introduced
+//! (the default); `cluster::ClusterTransport` drives remote workers
+//! over the exec wire protocol.
+
+use anyhow::{ensure, Result};
+
+use crate::native::graph::{Coeffs, Grads, NativeNet};
+use crate::native::replica::{replica_phase, PhaseArgs, Replica};
+use crate::runtime::StateVec;
+
+use super::sync::MomentExchange;
+use super::{accumulate_grads, run_replicas, zero_grads, MomentHub, ShardPlan, ShardSpec};
+
+/// One phase dispatch, transport-agnostic: a forward(+backward) over
+/// the full global batch, fanned out replica-per-shard.
+pub struct PhaseSpec<'a> {
+    /// Train-mode BN (batch statistics + running-stat capture) vs eval.
+    pub train: bool,
+    /// Run the backward and combine grad partials into the sink.
+    pub backward: bool,
+    pub classes: usize,
+    /// Precomputed branch coefficients (search/retrain graphs).
+    pub coeffs: Option<&'a Coeffs>,
+    /// The full global batch.
+    pub x: &'a [f32],
+    pub y: &'a [i32],
+    /// (teacher logits for the full batch, μ) — label-refinery retrain.
+    pub teacher: Option<(&'a [f32], f32)>,
+    /// Replica-count hint: the in-process pool sizes itself to it; the
+    /// cluster transport uses its live worker count instead (worker
+    /// count is a pure wall-clock knob either way).
+    pub shards: usize,
+    /// Canonical chunk count — the one numerics-defining knob.
+    pub chunks: usize,
+}
+
+/// Combined cross-replica scalars of one phase, summed in canonical
+/// chunk order (example-sums; the caller normalizes by the batch).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseOutput {
+    pub ce_sum: f64,
+    pub kl_sum: f64,
+    pub correct: f32,
+}
+
+/// Where replicas run and how their partials come home.
+pub trait ChunkTransport: Send {
+    /// Short transport name for logs/errors ("in-process", "cluster").
+    fn kind(&self) -> &'static str;
+
+    /// Fan one phase out over the transport's replicas and combine
+    /// everything in canonical chunk order.  When `spec.backward`,
+    /// gradient partials land combined in `grads`; otherwise `grads`
+    /// is untouched.
+    fn run_phase(
+        &mut self,
+        net: &NativeNet,
+        state: &StateVec,
+        spec: &PhaseSpec<'_>,
+        grads: &mut Grads,
+    ) -> Result<PhaseOutput>;
+
+    /// Commit the BN running-stat updates captured by the most recent
+    /// train-mode phase (the weight phase applies them, the arch phase
+    /// drops them by simply not calling this).
+    fn commit_bn(&mut self, state: &mut StateVec) -> Result<()>;
+}
+
+/// The scoped-thread replica pool: replicas are [`Replica`] contexts
+/// on this process's memory, sync-BN moments rendezvous through a
+/// [`MomentHub`], and the combine runs right here after the join.
+#[derive(Default)]
+pub struct InProcessTransport {
+    replicas: Vec<Replica>,
+}
+
+impl InProcessTransport {
+    pub fn new() -> InProcessTransport {
+        InProcessTransport::default()
+    }
+}
+
+impl ChunkTransport for InProcessTransport {
+    fn kind(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn run_phase(
+        &mut self,
+        net: &NativeNet,
+        state: &StateVec,
+        spec: &PhaseSpec<'_>,
+        grads: &mut Grads,
+    ) -> Result<PhaseOutput> {
+        let batch = spec.y.len();
+        ensure!(batch > 0, "cannot run a phase over an empty batch");
+        let plan = ShardPlan::new(
+            batch,
+            ShardSpec { shards: spec.shards.max(1), chunks: spec.chunks.max(1) },
+        );
+        while self.replicas.len() < plan.shards {
+            self.replicas.push(Replica::default());
+        }
+        // Eval-mode BN reads running stats — no moment exchange — so
+        // the hub only exists for multi-shard train phases.
+        let hub = (spec.train && plan.shards > 1)
+            .then(|| MomentHub::new(plan.shards, plan.chunks));
+        // Kernel threads per replica: the configured budget divided
+        // across the shard workers (auto resolves to the machine
+        // first) — N replicas × the full machine would oversubscribe.
+        let threads =
+            (crate::kernels::resolve_threads(net.threads) / plan.shards.max(1)).max(1);
+        let img = spec.x.len() / batch;
+        let classes = spec.classes;
+        run_replicas(&mut self.replicas[..plan.shards], hub.as_ref(), |r, rep| {
+            let ex = plan.shard_examples(r);
+            let ctx = crate::native::graph::ExecCtx {
+                global_batch: batch,
+                chunk_size: plan.chunk_size,
+                chunk0: plan.shard_chunks(r).start,
+                total_chunks: plan.chunks,
+                hub: hub.as_ref().map(|h| h as &(dyn MomentExchange + Sync)),
+                threads,
+            };
+            let args = PhaseArgs {
+                train: spec.train,
+                backward: spec.backward,
+                classes,
+                coeffs: spec.coeffs,
+                x: &spec.x[ex.start * img..ex.end * img],
+                y: &spec.y[ex.clone()],
+                teacher: spec
+                    .teacher
+                    .map(|(t, mu)| (&t[ex.start * classes..ex.end * classes], mu)),
+            };
+            replica_phase(net, rep, state, &args, &ctx)
+        })?;
+        // Chunk-ordered combines: replicas in shard order, each
+        // replica's partials in local-chunk order — i.e. global chunk
+        // order (DESIGN.md §14).
+        if spec.backward {
+            zero_grads(grads, net.desc.qconv_names.len(), net.bits.len());
+            for r in 0..plan.shards {
+                let k = plan.shard_chunks(r).len();
+                for g in &self.replicas[r].grads[..k] {
+                    accumulate_grads(grads, g);
+                }
+            }
+        }
+        let mut out = PhaseOutput::default();
+        for rep in &self.replicas[..plan.shards] {
+            for &v in &rep.ce {
+                out.ce_sum += v;
+            }
+            for &v in &rep.kl {
+                out.kl_sum += v;
+            }
+            for &v in &rep.correct {
+                out.correct += v;
+            }
+        }
+        Ok(out)
+    }
+
+    fn commit_bn(&mut self, state: &mut StateVec) -> Result<()> {
+        // The updates are a function of the combined global moments,
+        // identical on every replica — shard 0's copy is canonical.
+        ensure!(!self.replicas.is_empty(), "no train-mode phase has run on this transport");
+        self.replicas[0].arena.bn_updates.apply(state)
+    }
+}

@@ -1,0 +1,777 @@
+//! Exec wire protocol of the distributed search cluster (DESIGN.md
+//! §18) — the frames a coordinator and its chunk workers exchange.
+//!
+//! Same framing discipline as the serve protocol (`serve/protocol.rs`),
+//! different magic so a worker dialed into a serve port (or vice versa)
+//! fails the header check instead of mis-decoding:
+//!
+//! ```text
+//! [0xEC magic u8][version u8 = 0x01][payload_len u32 LE][payload]
+//! ```
+//!
+//! Payloads start with a one-byte opcode.  Strings are
+//! `[len u16 LE][UTF-8]`; numeric vectors are `[count u32 LE][LE
+//! elements]`, with every count validated against the bytes actually
+//! present before any allocation (hostile-header hardening, same rules
+//! the fuzz suite enforces on the serve codec).
+//!
+//! Control plane (coordinator ⇄ worker):
+//! * `0x01` hello      W→C — worker dials in
+//! * `0x02` welcome    C→W — model name the worker must build
+//! * `0x03` state-sync C→W — changed state-view leaves + sha256 of the
+//!   **full** view after applying (workers verify, then ack implicitly
+//!   by accepting the next phase)
+//! * `0x08` abort      C→W — drop the in-flight phase
+//! * `0x09` abort-ack  W→C
+//! * `0x0A` shutdown   C→W — clean exit
+//! * `0x0B` error      either — terminal, carries the cause
+//!
+//! Data plane (one phase = one forward(+backward) over the worker's
+//! chunk range):
+//! * `0x04` phase-start     C→W — flags, plan geometry, coeffs, the
+//!   shard's examples/labels/teacher slice
+//! * `0x05` moment-part     W→C — per-chunk f64 sync-BN partials
+//! * `0x06` moment-combined C→W — the canonical chunk-ordered combine
+//! * `0x07` phase-done      W→C — per-chunk losses + grad partials +
+//!   (shard 0 of a train phase) the BN running-stat commit
+//!
+//! The determinism invariant: everything cross-example stays per-chunk
+//! on the wire — scalars, moments, grad leaves are shipped *unsummed*
+//! and combined by the coordinator in canonical chunk order, the exact
+//! association `MomentHub`/`reduce::accumulate_grads` use in-process.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::sha256::Sha256;
+
+/// First header byte of every exec frame (serve speaks 0xEB).
+pub const MAGIC: u8 = 0xEC;
+
+/// Exec protocol version this build speaks.
+pub const VERSION: u8 = 0x01;
+
+/// Hard cap on a frame payload.  Phase-done frames carry per-chunk
+/// grad partials (chunks/shard × full parameter set), so the cap is
+/// generous; the incremental reader below bounds a lying header's
+/// damage to one 64 KiB chunk regardless.
+pub const MAX_FRAME: usize = 256 << 20;
+
+pub const OP_HELLO: u8 = 0x01;
+pub const OP_WELCOME: u8 = 0x02;
+pub const OP_STATE_SYNC: u8 = 0x03;
+pub const OP_PHASE_START: u8 = 0x04;
+pub const OP_MOMENT_PART: u8 = 0x05;
+pub const OP_MOMENT_COMBINED: u8 = 0x06;
+pub const OP_PHASE_DONE: u8 = 0x07;
+pub const OP_ABORT: u8 = 0x08;
+pub const OP_ABORT_ACK: u8 = 0x09;
+pub const OP_SHUTDOWN: u8 = 0x0A;
+pub const OP_ERROR: u8 = 0x0B;
+
+/// Why an exec frame could not be read (same taxonomy as the serve
+/// codec: typed so torn, oversized, and alien frames stay
+/// distinguishable in logs and tests).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Bad magic or version byte — line noise, or a serve client.
+    UnsupportedVersion { magic: u8, version: u8 },
+    /// The stream ended inside a frame (torn header or payload).
+    Truncated(String),
+    /// Header claims a payload beyond [`MAX_FRAME`].
+    Oversized(usize),
+    /// Transport failure (connection reset, ...).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::UnsupportedVersion { magic, version } => write!(
+                f,
+                "unsupported exec frame header (magic 0x{magic:02x}, version 0x{version:02x}); \
+                 this build speaks [0x{MAGIC:02x}][0x{VERSION:02x}][len u32]"
+            ),
+            FrameError::Truncated(what) => write!(f, "truncated exec frame: {what}"),
+            FrameError::Oversized(len) => {
+                write!(f, "exec frame of {len} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::Io(e) => write!(f, "exec transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated("stream ended inside the payload".into())
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
+
+/// One phase dispatch: everything a worker needs to run its chunk
+/// range of a forward(+backward) pass against its synced state view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseStart {
+    /// Train-mode BN (batch statistics) vs eval-mode.
+    pub train: bool,
+    /// Run the backward and return grad partials.
+    pub backward: bool,
+    /// This worker must return the BN running-stat commit (shard 0 of
+    /// a train phase; the commit is replica-independent, so one copy
+    /// suffices).
+    pub want_bn: bool,
+    pub classes: u32,
+    /// Global batch size (BN denominator; the worker's own slice is
+    /// `y.len()`).
+    pub global_batch: u32,
+    /// Examples per canonical chunk.
+    pub chunk_size: u32,
+    /// Global index of this worker's first chunk.
+    pub chunk0: u32,
+    /// Total canonical chunks in the plan.
+    pub total_chunks: u32,
+    /// Participating shard count; >1 means sync-BN moments go over the
+    /// wire, 1 means the worker combines locally (no round trips).
+    pub shards: u32,
+    /// Distillation blend μ (0 when no teacher).
+    pub mu: f32,
+    /// Precomputed per-layer branch coefficients (cw, cx) — present
+    /// for search/retrain graphs, absent for FP phases.
+    pub coeffs: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)>,
+    /// This shard's example slice.
+    pub x: Vec<f32>,
+    /// This shard's labels.
+    pub y: Vec<i32>,
+    /// This shard's teacher logits (label-refinery retrain).
+    pub teacher: Option<Vec<f32>>,
+}
+
+/// One chunk's gradient partials: state-path leaves plus the per-layer
+/// strength rows (dcw, dcx).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ChunkGrads {
+    pub leaves: Vec<(String, Vec<f32>)>,
+    pub dcw: Vec<Vec<f32>>,
+    pub dcx: Vec<Vec<f32>>,
+}
+
+/// A worker's phase result: per-local-chunk scalars (unsummed — the
+/// coordinator owns the canonical combine), per-chunk grad partials
+/// when the phase ran a backward, and the BN commit when requested.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseDone {
+    pub ce: Vec<f64>,
+    pub kl: Vec<f64>,
+    pub correct: Vec<f32>,
+    pub grads: Vec<ChunkGrads>,
+    pub bn: Vec<(String, Vec<f32>)>,
+}
+
+/// Every message of the exec protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Hello,
+    Welcome { model: String },
+    StateSync { leaves: Vec<(String, Vec<f32>)>, digest: [u8; 32] },
+    PhaseStart(PhaseStart),
+    MomentPart { chunk0: u32, m: u32, parts: Vec<f64> },
+    MomentCombined { combined: Vec<f64> },
+    PhaseDone(PhaseDone),
+    Abort,
+    AbortAck,
+    Shutdown,
+    Error { msg: String },
+}
+
+/// Read one frame's payload; `Ok(None)` on clean EOF at a frame
+/// boundary (peer hung up between messages).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; 6];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(FrameError::Truncated(format!(
+                    "{got} of {} header bytes",
+                    header.len()
+                )))
+            }
+            Ok(n) => got += n,
+            // retry EINTR like read_exact does — a signal mid-header
+            // must not kill a healthy connection
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    if header[0] != MAGIC || header[1] != VERSION {
+        return Err(FrameError::UnsupportedVersion { magic: header[0], version: header[1] });
+    }
+    let len = u32::from_le_bytes(header[2..6].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized(len));
+    }
+    // Incremental payload read: a hostile header claiming 256 MiB
+    // backed by a 10-byte stream costs one 64 KiB buffer before the
+    // Truncated error, not 256 MiB.
+    const READ_CHUNK: usize = 64 << 10;
+    let mut payload = Vec::with_capacity(len.min(READ_CHUNK));
+    let mut buf = [0u8; READ_CHUNK];
+    while payload.len() < len {
+        let want = (len - payload.len()).min(READ_CHUNK);
+        match r.read(&mut buf[..want]) {
+            Ok(0) => {
+                return Err(FrameError::Truncated(format!(
+                    "{} of {len} payload bytes",
+                    payload.len()
+                )))
+            }
+            Ok(n) => payload.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Read and decode one message; `Ok(None)` on clean EOF.
+pub fn read_msg(r: &mut impl Read) -> Result<Option<Msg>> {
+    match read_frame(r) {
+        Ok(Some(payload)) => Ok(Some(decode(&payload)?)),
+        Ok(None) => Ok(None),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Encode, frame, write, and flush one message.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    w.write_all(&encode(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Encode a full frame (header included).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Msg::Hello => p.push(OP_HELLO),
+        Msg::Welcome { model } => {
+            p.push(OP_WELCOME);
+            put_str(&mut p, model);
+        }
+        Msg::StateSync { leaves, digest } => {
+            p.push(OP_STATE_SYNC);
+            put_leaves(&mut p, leaves);
+            p.extend_from_slice(digest);
+        }
+        Msg::PhaseStart(ps) => {
+            p.push(OP_PHASE_START);
+            let flags = (ps.train as u8)
+                | (ps.backward as u8) << 1
+                | (ps.want_bn as u8) << 2
+                | (ps.coeffs.is_some() as u8) << 3
+                | (ps.teacher.is_some() as u8) << 4;
+            p.push(flags);
+            for v in [
+                ps.classes,
+                ps.global_batch,
+                ps.chunk_size,
+                ps.chunk0,
+                ps.total_chunks,
+                ps.shards,
+            ] {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            p.extend_from_slice(&ps.mu.to_le_bytes());
+            if let Some((cw, cx)) = &ps.coeffs {
+                put_rows(&mut p, cw);
+                put_rows(&mut p, cx);
+            }
+            put_f32s(&mut p, &ps.x);
+            put_i32s(&mut p, &ps.y);
+            if let Some(t) = &ps.teacher {
+                put_f32s(&mut p, t);
+            }
+        }
+        Msg::MomentPart { chunk0, m, parts } => {
+            p.push(OP_MOMENT_PART);
+            p.extend_from_slice(&chunk0.to_le_bytes());
+            p.extend_from_slice(&m.to_le_bytes());
+            put_f64s(&mut p, parts);
+        }
+        Msg::MomentCombined { combined } => {
+            p.push(OP_MOMENT_COMBINED);
+            put_f64s(&mut p, combined);
+        }
+        Msg::PhaseDone(pd) => {
+            p.push(OP_PHASE_DONE);
+            put_f64s(&mut p, &pd.ce);
+            put_f64s(&mut p, &pd.kl);
+            put_f32s(&mut p, &pd.correct);
+            p.extend_from_slice(&(pd.grads.len() as u32).to_le_bytes());
+            for g in &pd.grads {
+                put_leaves(&mut p, &g.leaves);
+                put_rows(&mut p, &g.dcw);
+                put_rows(&mut p, &g.dcx);
+            }
+            put_leaves(&mut p, &pd.bn);
+        }
+        Msg::Abort => p.push(OP_ABORT),
+        Msg::AbortAck => p.push(OP_ABORT_ACK),
+        Msg::Shutdown => p.push(OP_SHUTDOWN),
+        Msg::Error { msg } => {
+            p.push(OP_ERROR);
+            p.extend_from_slice(msg.as_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(6 + p.len());
+    out.push(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    out.extend_from_slice(&p);
+    out
+}
+
+/// Decode a message payload.  Every length field is validated against
+/// the bytes actually present before allocation.
+pub fn decode(payload: &[u8]) -> Result<Msg> {
+    let mut rd = Rd { b: payload, at: 0 };
+    let op = rd.u8("opcode")?;
+    let msg = match op {
+        OP_HELLO => Msg::Hello,
+        OP_WELCOME => Msg::Welcome { model: rd.str("model name")? },
+        OP_STATE_SYNC => {
+            let leaves = rd.leaves("state leaves")?;
+            let digest = rd.bytes32("view digest")?;
+            Msg::StateSync { leaves, digest }
+        }
+        OP_PHASE_START => {
+            let flags = rd.u8("phase flags")?;
+            ensure!(flags & !0x1F == 0, "unknown phase flag bits 0x{flags:02x}");
+            let classes = rd.u32("classes")?;
+            let global_batch = rd.u32("global batch")?;
+            let chunk_size = rd.u32("chunk size")?;
+            let chunk0 = rd.u32("chunk0")?;
+            let total_chunks = rd.u32("total chunks")?;
+            let shards = rd.u32("shards")?;
+            let mu = rd.f32("mu")?;
+            let coeffs = if flags & 0x08 != 0 {
+                Some((rd.rows("cw rows")?, rd.rows("cx rows")?))
+            } else {
+                None
+            };
+            let x = rd.f32s("examples")?;
+            let y = rd.i32s("labels")?;
+            let teacher = if flags & 0x10 != 0 { Some(rd.f32s("teacher logits")?) } else { None };
+            Msg::PhaseStart(PhaseStart {
+                train: flags & 0x01 != 0,
+                backward: flags & 0x02 != 0,
+                want_bn: flags & 0x04 != 0,
+                classes,
+                global_batch,
+                chunk_size,
+                chunk0,
+                total_chunks,
+                shards,
+                mu,
+                coeffs,
+                x,
+                y,
+                teacher,
+            })
+        }
+        OP_MOMENT_PART => {
+            let chunk0 = rd.u32("chunk0")?;
+            let m = rd.u32("moment width")?;
+            let parts = rd.f64s("moment partials")?;
+            Msg::MomentPart { chunk0, m, parts }
+        }
+        OP_MOMENT_COMBINED => Msg::MomentCombined { combined: rd.f64s("combined moments")? },
+        OP_PHASE_DONE => {
+            let ce = rd.f64s("ce partials")?;
+            let kl = rd.f64s("kl partials")?;
+            let correct = rd.f32s("correct partials")?;
+            let n = rd.count("chunk grads", 9)?;
+            let mut grads = Vec::with_capacity(n);
+            for _ in 0..n {
+                grads.push(ChunkGrads {
+                    leaves: rd.leaves("grad leaves")?,
+                    dcw: rd.rows("dcw rows")?,
+                    dcx: rd.rows("dcx rows")?,
+                });
+            }
+            let bn = rd.leaves("bn commit")?;
+            Msg::PhaseDone(PhaseDone { ce, kl, correct, grads, bn })
+        }
+        OP_ABORT => Msg::Abort,
+        OP_ABORT_ACK => Msg::AbortAck,
+        OP_SHUTDOWN => Msg::Shutdown,
+        OP_ERROR => Msg::Error { msg: String::from_utf8_lossy(rd.take_rest()).into_owned() },
+        other => bail!("unknown exec opcode 0x{other:02x}"),
+    };
+    ensure!(rd.rest().is_empty(), "trailing bytes after exec message 0x{op:02x}");
+    Ok(msg)
+}
+
+/// sha256 over a state view in leaf order (`path bytes ‖ len u32 LE ‖
+/// f32 LE values` per leaf) — what `StateSync` frames carry and both
+/// sides recompute to verify the sync.
+pub fn view_digest<'a>(leaves: impl Iterator<Item = (&'a str, &'a [f32])>) -> [u8; 32] {
+    let mut h = Sha256::new();
+    for (path, vals) in leaves {
+        h.update(path.as_bytes());
+        h.update(&(vals.len() as u32).to_le_bytes());
+        for v in vals {
+            h.update(&v.to_le_bytes());
+        }
+    }
+    h.finalize()
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize, "wire strings are u16-length");
+    p.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    p.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(p: &mut Vec<u8>, v: &[f32]) {
+    p.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(p: &mut Vec<u8>, v: &[f64]) {
+    p.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i32s(p: &mut Vec<u8>, v: &[i32]) {
+    p.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_rows(p: &mut Vec<u8>, rows: &[Vec<f32>]) {
+    p.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for r in rows {
+        put_f32s(p, r);
+    }
+}
+
+fn put_leaves(p: &mut Vec<u8>, leaves: &[(String, Vec<f32>)]) {
+    p.extend_from_slice(&(leaves.len() as u32).to_le_bytes());
+    for (path, vals) in leaves {
+        put_str(p, path);
+        put_f32s(p, vals);
+    }
+}
+
+/// Bounds-checked payload cursor.
+struct Rd<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.at
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.at..]
+    }
+
+    fn take_rest(&mut self) -> &'a [u8] {
+        let r = &self.b[self.at..];
+        self.at = self.b.len();
+        r
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        match self.b.get(self.at) {
+            Some(&v) => {
+                self.at += 1;
+                Ok(v)
+            }
+            None => bail!("exec frame too short for {what}"),
+        }
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        match self.b.get(self.at..self.at + 4) {
+            Some(s) => {
+                self.at += 4;
+                Ok(u32::from_le_bytes(s.try_into().unwrap()))
+            }
+            None => bail!("exec frame too short for {what}"),
+        }
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.u32(what)?.to_le_bytes()))
+    }
+
+    fn bytes32(&mut self, what: &str) -> Result<[u8; 32]> {
+        match self.b.get(self.at..self.at + 32) {
+            Some(s) => {
+                self.at += 32;
+                Ok(s.try_into().unwrap())
+            }
+            None => bail!("exec frame too short for {what}"),
+        }
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = match self.b.get(self.at..self.at + 2) {
+            Some(s) => u16::from_le_bytes(s.try_into().unwrap()) as usize,
+            None => bail!("exec frame too short for {what} length"),
+        };
+        self.at += 2;
+        match self.b.get(self.at..self.at + len) {
+            Some(s) => {
+                self.at += len;
+                Ok(String::from_utf8(s.to_vec()).map_err(|e| e.utf8_error())?)
+            }
+            None => bail!("exec frame too short for {what} ({len} bytes)"),
+        }
+    }
+
+    /// A `u32` element count, validated so `count · elem_size` fits in
+    /// the bytes remaining — the decoder never allocates on a lying
+    /// count.
+    fn count(&mut self, what: &str, elem_size: usize) -> Result<usize> {
+        let n = self.u32(what)? as usize;
+        ensure!(
+            n <= self.remaining() / elem_size.max(1),
+            "exec frame claims {n} {what} with only {} bytes left",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.count(what, 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32(what)?);
+        }
+        Ok(v)
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let n = self.count(what, 8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = self
+                .b
+                .get(self.at..self.at + 8)
+                .ok_or_else(|| anyhow::anyhow!("exec frame too short for {what}"))?;
+            self.at += 8;
+            v.push(f64::from_le_bytes(s.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    fn i32s(&mut self, what: &str) -> Result<Vec<i32>> {
+        let n = self.count(what, 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32(what)? as i32);
+        }
+        Ok(v)
+    }
+
+    fn rows(&mut self, what: &str) -> Result<Vec<Vec<f32>>> {
+        // Each row costs ≥ 4 bytes (its own count).
+        let n = self.count(what, 4)?;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            rows.push(self.f32s(what)?);
+        }
+        Ok(rows)
+    }
+
+    fn leaves(&mut self, what: &str) -> Result<Vec<(String, Vec<f32>)>> {
+        // Each leaf costs ≥ 6 bytes (str len u16 + vec count u32).
+        let n = self.count(what, 6)?;
+        let mut leaves = Vec::with_capacity(n);
+        for _ in 0..n {
+            let path = self.str(what)?;
+            let vals = self.f32s(what)?;
+            leaves.push((path, vals));
+        }
+        Ok(leaves)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let frame = encode(msg);
+        let mut cursor = &frame[..];
+        let payload = read_frame(&mut cursor).unwrap().unwrap();
+        assert!(cursor.is_empty(), "frame length prefix must cover the payload exactly");
+        decode(&payload).unwrap()
+    }
+
+    fn sample_phase_start() -> Msg {
+        Msg::PhaseStart(PhaseStart {
+            train: true,
+            backward: true,
+            want_bn: true,
+            classes: 10,
+            global_batch: 64,
+            chunk_size: 16,
+            chunk0: 2,
+            total_chunks: 4,
+            shards: 2,
+            mu: 0.5,
+            coeffs: Some((
+                vec![vec![0.25, 0.5, 0.25], vec![1.0, 0.0, 0.0]],
+                vec![vec![0.1, 0.2, 0.7], vec![0.0, 0.0, 1.0]],
+            )),
+            x: vec![0.5, -1.25, f32::MIN_POSITIVE],
+            y: vec![3, -1, 0],
+            teacher: Some(vec![0.125; 6]),
+        })
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        let msgs = [
+            Msg::Hello,
+            Msg::Welcome { model: "resnet8_tiny".into() },
+            Msg::StateSync {
+                leaves: vec![
+                    ("state/params/stem/w".into(), vec![1.0, -2.5]),
+                    ("state/bn/stem/mean".into(), vec![0.0; 8]),
+                ],
+                digest: [7u8; 32],
+            },
+            sample_phase_start(),
+            Msg::PhaseStart(PhaseStart {
+                train: false,
+                backward: false,
+                want_bn: false,
+                classes: 10,
+                global_batch: 32,
+                chunk_size: 8,
+                chunk0: 0,
+                total_chunks: 4,
+                shards: 1,
+                mu: 0.0,
+                coeffs: None,
+                x: vec![],
+                y: vec![],
+                teacher: None,
+            }),
+            Msg::MomentPart { chunk0: 1, m: 3, parts: vec![1.5, -2.25, 1e300, 0.0, -0.0, 7.0] },
+            Msg::MomentCombined { combined: vec![f64::MIN_POSITIVE, 2.0] },
+            Msg::PhaseDone(PhaseDone {
+                ce: vec![1.25, 0.5],
+                kl: vec![0.0, 0.0],
+                correct: vec![3.0, 1.0],
+                grads: vec![ChunkGrads {
+                    leaves: vec![("state/params/fc/w".into(), vec![0.5; 4])],
+                    dcw: vec![vec![0.1, 0.2]],
+                    dcx: vec![vec![-0.1, -0.2]],
+                }],
+                bn: vec![("state/bn/stem/var".into(), vec![1.0; 8])],
+            }),
+            Msg::Abort,
+            Msg::AbortAck,
+            Msg::Shutdown,
+            Msg::Error { msg: "worker lost".into() },
+        ];
+        for msg in msgs {
+            assert_eq!(roundtrip(&msg), msg);
+        }
+    }
+
+    #[test]
+    fn serve_frames_are_rejected_by_magic() {
+        // A serve v2 frame (0xEB magic) must fail the exec header
+        // check — the two protocols share a framing shape on purpose,
+        // and the magic byte is what keeps them apart.
+        let serve_like: &[u8] = &[0xEB, 0x02, 0, 0, 0, 0];
+        let mut cursor = serve_like;
+        assert!(matches!(
+            read_frame(&mut cursor),
+            Err(FrameError::UnsupportedVersion { magic: 0xEB, version: 0x02 })
+        ));
+    }
+
+    #[test]
+    fn clean_eof_torn_header_torn_payload_oversized() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty).unwrap().is_none(), "EOF at a boundary is clean");
+        let mut torn: &[u8] = &[MAGIC, VERSION, 5, 0];
+        assert!(matches!(read_frame(&mut torn), Err(FrameError::Truncated(_))));
+        let mut short: &[u8] = &[MAGIC, VERSION, 8, 0, 0, 0, 1, 2];
+        assert!(matches!(read_frame(&mut short), Err(FrameError::Truncated(_))));
+        let mut huge = vec![MAGIC, VERSION];
+        huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r: &[u8] = &huge;
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Oversized(_))));
+    }
+
+    #[test]
+    fn lying_counts_fail_before_allocation() {
+        // MomentPart claiming u32::MAX f64s backed by nothing.
+        let mut p = vec![OP_MOMENT_PART];
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&4u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&p).is_err());
+        // StateSync claiming a huge leaf count.
+        let mut p = vec![OP_STATE_SYNC];
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&p).is_err());
+        // PhaseDone claiming a huge chunk-grad count after empty scalars.
+        let mut p = vec![OP_PHASE_DONE];
+        for _ in 0..3 {
+            p.extend_from_slice(&0u32.to_le_bytes());
+        }
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&p).is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_fail_to_decode() {
+        assert!(decode(&[]).is_err(), "empty payload");
+        assert!(decode(&[0x42]).is_err(), "unknown opcode");
+        assert!(decode(&[OP_WELCOME, 9, 0]).is_err(), "torn model string");
+        assert!(decode(&[OP_PHASE_START, 0xFF]).is_err(), "unknown flag bits");
+        assert!(decode(&[OP_HELLO, 0]).is_err(), "trailing bytes");
+        // Non-UTF-8 leaf path.
+        let mut p = vec![OP_STATE_SYNC];
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&2u16.to_le_bytes());
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        p.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode(&p).is_err(), "non-UTF-8 path");
+    }
+
+    #[test]
+    fn view_digest_is_order_and_value_sensitive() {
+        let a = [("p/a", &[1.0f32, 2.0][..]), ("p/b", &[3.0][..])];
+        let b = [("p/b", &[3.0f32][..]), ("p/a", &[1.0, 2.0][..])];
+        let c = [("p/a", &[1.0f32, 2.5][..]), ("p/b", &[3.0][..])];
+        let da = view_digest(a.iter().copied());
+        assert_eq!(da, view_digest(a.iter().copied()), "deterministic");
+        assert_ne!(da, view_digest(b.iter().copied()), "order-sensitive");
+        assert_ne!(da, view_digest(c.iter().copied()), "value-sensitive");
+    }
+}

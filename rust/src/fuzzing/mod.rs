@@ -24,6 +24,7 @@ use std::io::Read;
 use std::path::Path;
 
 use crate::bd::artifact::parse_manifest;
+use crate::exec::wire;
 use crate::bd::bitplane::{pack_cols, pack_rows};
 use crate::bd::gemm::{
     binary_gemm_p, fused, fused_tier, fused_tiled, fused_tiled_tier, naive_codes_matmul,
@@ -73,6 +74,35 @@ pub fn fuzz_protocol_decode(data: &[u8]) {
     let mut dribble = Dribble { data, pos: 0 };
     while let Ok(Some(payload)) = read_frame(&mut dribble) {
         let _ = decode_request(&payload);
+    }
+}
+
+/// Target (e): exec cluster wire protocol (DESIGN.md §18) — framing +
+/// message decode over well-behaved and dribbling transports, plus an
+/// encode/decode stability differential: any message that decodes must
+/// re-encode to a frame that decodes and re-encodes to the same bytes.
+/// (Byte-level comparison, not `Msg` equality — hostile payloads can
+/// carry NaN floats, which are `!=` themselves.)
+pub fn fuzz_exec_frame(data: &[u8]) {
+    let mut cursor = data;
+    while let Ok(Some(payload)) = wire::read_frame(&mut cursor) {
+        if let Ok(msg) = wire::decode(&payload) {
+            let reenc = wire::encode(&msg);
+            let mut c = &reenc[..];
+            let payload2 = wire::read_frame(&mut c)
+                .expect("re-encoded exec frame must read")
+                .expect("re-encoded exec frame is non-empty");
+            let msg2 = wire::decode(&payload2).expect("re-encoded exec message must decode");
+            assert_eq!(wire::encode(&msg2), reenc, "exec wire encode∘decode is not stable");
+        }
+    }
+    // The raw bytes as a bare payload (no framing).
+    let _ = wire::decode(data);
+    // Same stream over a one-byte-at-a-time transport: every read
+    // boundary lands mid-header or mid-payload at some point.
+    let mut dribble = Dribble { data, pos: 0 };
+    while let Ok(Some(payload)) = wire::read_frame(&mut dribble) {
+        let _ = wire::decode(&payload);
     }
 }
 

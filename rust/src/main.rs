@@ -36,8 +36,12 @@ ebs — Efficient Bitwidth Search (mixed precision QNN) coordinator
 USAGE: ebs <subcommand> [--config <toml>] [flags]
 
   pipeline        full Fig. 1 pipeline (pretrain → search → retrain → eval)
+                  [--resume-pretrain <ckpt>] [--resume-retrain <ckpt>]
   search          bilevel bitwidth search only; writes selection.json
                   [--shards N] [--ckpt-every N] [--resume <search_resume.ckpt>]
+  worker          cluster worker process: executes chunk ranges for a
+                  coordinator (DESIGN.md §18) --connect HOST:PORT
+                  [--threads N] [--fault phase:N|moment:N (tests only)]
   deploy          BD-engine inference from a pipeline run directory; seals the
                   run dir into a versioned deployment artifact
                   [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
@@ -64,7 +68,11 @@ Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>
               --shards N    (data-parallel step replicas, native backend;
               results bit-identical for any N up to the chunk count —
               see DESIGN.md §14; 0 = off)
-              --ckpt-every N  (crash checkpoints every N steps)";
+              --ckpt-every N  (crash checkpoints every N steps)
+              --cluster H:P --workers N  (distributed replicas: listen on
+              H:P, spawn N local worker processes — external workers dial
+              in with `ebs worker --connect`; bit-identical to in-process
+              sharding at any worker count — see DESIGN.md §18)";
 
 fn main() {
     if let Err(e) = run() {
@@ -108,6 +116,12 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if args.has_switch("stochastic") {
         cfg.search.stochastic = true;
     }
+    if let Some(a) = args.flag("cluster") {
+        cfg.cluster.listen = a.to_string();
+    }
+    if let Some(w) = args.flag("workers") {
+        cfg.cluster.workers = w.parse().context("--workers must be an integer")?;
+    }
     Ok(cfg)
 }
 
@@ -122,13 +136,49 @@ fn open_engine(cfg: &RunConfig) -> Result<Engine> {
 }
 
 /// [`open_engine`] wrapped in the step executor configured by
-/// `[search] shards` / `--shards` (serial when sharding is off).
+/// `[search] shards` / `--shards` (serial when sharding is off), or —
+/// with `[cluster] listen` / `--cluster` — behind a coordinator/worker
+/// cluster transport (DESIGN.md §18).
 fn open_exec(cfg: &RunConfig) -> Result<StepExecutor> {
-    let spec = ShardSpec::new(cfg.search.shards, cfg.search.shard_chunks);
-    if spec.active() {
+    let cluster = !cfg.cluster.listen.is_empty();
+    let spec = if cluster {
+        // Cluster mode: the worker count is a property of the transport,
+        // not of the numerics — one logical shard with the canonical
+        // chunk count keeps the sharded path active while the
+        // coordinator re-plans shards over however many workers are
+        // live.  Results stay bit-identical because only `shard_chunks`
+        // defines the reduction order.
+        ShardSpec::new(1, cfg.search.shard_chunks)
+    } else {
+        ShardSpec::new(cfg.search.shards, cfg.search.shard_chunks)
+    };
+    if spec.active() && !cluster {
         eprintln!("[exec] sharded steps: {} replicas × {} chunks", spec.shards, spec.chunks);
     }
-    Ok(StepExecutor::new(open_engine(cfg)?, spec))
+    let mut exec = StepExecutor::new(open_engine(cfg)?, spec);
+    if cluster {
+        apply_cluster(cfg, &mut exec, spec.chunks)?;
+    }
+    Ok(exec)
+}
+
+/// Swap the executor's in-process replica pool for a TCP coordinator:
+/// bind the listen address, spawn any requested local worker processes,
+/// and wait for the first worker to dial in (external workers connect
+/// with `ebs worker --connect`).
+fn apply_cluster(cfg: &RunConfig, exec: &mut StepExecutor, chunks: usize) -> Result<()> {
+    let mut ct = ebs::exec::ClusterTransport::listen(&cfg.cluster.listen, &cfg.model)?;
+    eprintln!(
+        "[cluster] coordinator on {} ({} chunks/step)",
+        ct.local_addr()?,
+        chunks
+    );
+    if cfg.cluster.workers > 0 {
+        ct.spawn_local_workers(cfg.cluster.workers)?;
+    }
+    ct.wait_for_workers(cfg.cluster.workers.max(1), std::time::Duration::from_secs(60))?;
+    eprintln!("[cluster] {} worker(s) connected", ct.live_workers());
+    exec.set_transport(Box::new(ct))
 }
 
 fn run() -> Result<()> {
@@ -143,6 +193,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_str() {
         "pipeline" => cmd_pipeline(&args),
         "search" => cmd_search(&args),
+        "worker" => cmd_worker(&args),
         "deploy" => cmd_deploy(&args),
         "serve" => cmd_serve(&args),
         "report-table1" => {
@@ -183,8 +234,9 @@ fn run() -> Result<()> {
         }
         "info" => cmd_info(&args),
         _ => Err(args.unknown_subcommand(&[
-            "pipeline", "search", "deploy", "serve", "report-table1", "report-table3",
-            "report-table4", "report-fig3", "report-fig7", "report-ablation", "info",
+            "pipeline", "search", "worker", "deploy", "serve", "report-table1",
+            "report-table3", "report-table4", "report-fig3", "report-fig7",
+            "report-ablation", "info",
         ])),
     }
 }
@@ -198,13 +250,24 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         search.target_mflops = flops.uniform_mflops(3);
         eprintln!("[pipeline] no target set; defaulting to 3-bit cost = {:.2} MFLOPs", search.target_mflops);
     }
+    if let Some(p) = args.flag("resume") {
+        search.resume_from = Some(PathBuf::from(p));
+    }
+    let mut pretrain = cfg.pretrain.clone();
+    if let Some(p) = args.flag("resume-pretrain") {
+        pretrain.resume_from = Some(PathBuf::from(p));
+    }
+    let mut retrain = cfg.retrain.clone();
+    if let Some(p) = args.flag("resume-retrain") {
+        retrain.resume_from = Some(PathBuf::from(p));
+    }
     let (train, test) = generate(&cfg.data.to_spec());
     let run_dir = cfg.out_dir.join(format!("pipeline_{}", cfg.model));
     let mut logger = RunLogger::new(&run_dir, true)?;
     let pcfg = PipelineCfg {
-        pretrain: cfg.pretrain.clone(),
+        pretrain,
         search,
-        retrain: cfg.retrain.clone(),
+        retrain,
         seed: cfg.seed,
         save_artifacts: true,
     };
@@ -253,6 +316,21 @@ fn cmd_search(args: &Args) -> Result<()> {
         run_dir.join("selection.json").display()
     );
     Ok(())
+}
+
+/// Cluster worker process (DESIGN.md §18): dial the coordinator and
+/// execute assigned chunk ranges until it sends Shutdown (or the
+/// connection closes).  `--fault` injects a simulated crash at a given
+/// phase/rendezvous index — used by the fault-injection tests and CI
+/// lane, never in production runs.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.req_flag("connect")?;
+    let threads = args.usize_flag("threads", 0)?;
+    let fault = match args.flag("fault") {
+        Some(spec) => ebs::exec::parse_fault(spec)?,
+        None => ebs::exec::WorkerFault::default(),
+    };
+    ebs::exec::run_worker(addr, threads, fault)
 }
 
 /// The pipeline run directory a deploy/serve subcommand operates on

@@ -21,24 +21,25 @@
 //! guarantee.
 //!
 //! `set_shards` additionally fans whole train/search/eval *steps* out
-//! over data-parallel replicas (`run_sharded`, DESIGN.md §14): each
-//! replica owns a persistent [`Replica`] context (arena + one grad sink
-//! per canonical chunk), runs its contiguous shard with sync-BN moments
-//! exchanged through an [`MomentHub`], and the combiner reduces
-//! per-chunk partials in canonical chunk order before the single
-//! optimizer update — bit-identical results at any shard count under a
-//! fixed chunking.
+//! over data-parallel replicas (`run_sharded`, DESIGN.md §14).  Where
+//! those replicas live is the transport's business (DESIGN.md §18):
+//! every sharded phase goes through the backend's
+//! [`ChunkTransport`] — the in-process scoped-thread pool by default,
+//! or a coordinator/worker-process cluster via `set_transport` — and
+//! comes back as per-chunk partials combined in canonical chunk order
+//! before the single optimizer update here.  Bit-identical results at
+//! any shard/worker count under a fixed chunking.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::flops::{FlopsModel, MIXED_DIVISOR};
-use crate::exec::{accumulate_grads, run_replicas, zero_grads, MomentHub, ShardPlan, ShardSpec};
+use crate::exec::{ChunkTransport, InProcessTransport, PhaseSpec, ShardSpec};
 use crate::runtime::{Backend, Manifest, Metrics, StateVec, Tensor};
 use crate::util::Rng;
 
-use super::graph::{Coeffs, ExecCtx, Grads, NativeNet, TapeArena};
+use super::graph::{Coeffs, Grads, NativeNet, TapeArena};
 use super::ops;
 use super::optim;
 use super::quant;
@@ -58,28 +59,10 @@ pub struct NativeBackend {
     /// Data-parallel sharding of the step graphs (DESIGN.md §14);
     /// inactive spec ⇒ the serial path below runs unchanged.
     shards: ShardSpec,
-    /// Per-replica shard contexts (arena + per-chunk grad sinks),
-    /// persistent across steps like the serial arena.
-    replicas: Vec<Replica>,
-}
-
-/// One data-parallel replica: everything a shard-local forward+backward
-/// touches.  `grads[k]` is the sink of the replica's k-th local chunk;
-/// the scalar vectors hold one per-chunk partial each, combined by the
-/// single-threaded canonical reduction after the join.
-#[derive(Default)]
-struct Replica {
-    arena: TapeArena,
-    grads: Vec<Grads>,
-    probs: Vec<f32>,
-    teacher_probs: Vec<f32>,
-    dlogits: Vec<f32>,
-    /// Per-chunk Σ cross-entropy (f64, example-sum not mean).
-    ce: Vec<f64>,
-    /// Per-chunk Σ distillation KL (example-sum; empty without teacher).
-    kl: Vec<f64>,
-    /// Per-chunk correct-prediction counts (exact under any order).
-    correct: Vec<f32>,
+    /// Where the sharded-phase replicas run (DESIGN.md §18): the
+    /// in-process pool by default, a worker cluster via
+    /// [`NativeBackend::set_transport`].
+    transport: Box<dyn ChunkTransport>,
 }
 
 /// Gumbel-noise inputs of one stochastic step: ((L,N) rows for r and s,
@@ -118,30 +101,16 @@ impl NativeBackend {
             teacher_probs: Vec::new(),
             dlogits: Vec::new(),
             shards: ShardSpec::serial(),
-            replicas: Vec::new(),
+            transport: Box::new(InProcessTransport::new()),
         })
     }
 
-    /// Size the persistent replica contexts for a plan (grow-once, like
-    /// the serial arena).
-    fn ensure_replicas(&mut self, plan: &ShardPlan) {
-        while self.replicas.len() < plan.shards {
-            self.replicas.push(Replica::default());
-        }
-        for (r, rep) in self.replicas.iter_mut().enumerate().take(plan.shards) {
-            let k = plan.shard_chunks(r).len();
-            while rep.grads.len() < k {
-                rep.grads.push(Grads::default());
-            }
-        }
-    }
-
-    /// Kernel worker threads per replica: the configured budget divided
-    /// across the shard workers (auto resolves to the machine first) —
-    /// N replicas × the full machine would oversubscribe the host.
-    /// Thread count never changes results (DESIGN.md §12).
-    fn replica_threads(&self, shards: usize) -> usize {
-        (crate::kernels::resolve_threads(self.net.threads) / shards.max(1)).max(1)
+    /// Swap the replica transport (DESIGN.md §18) — e.g. to a
+    /// `ClusterTransport` with dialed-in workers.  The numerics
+    /// contract is transport-independent, so this never changes
+    /// results, only where the replicas run.
+    pub fn set_transport(&mut self, transport: Box<dyn ChunkTransport>) {
+        self.transport = transport;
     }
 
     /// Arena reuse accounting (tests assert `grows` freezes after the
@@ -354,31 +323,16 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Chunk-ordered gradient combine into the backend's accumulator:
-    /// replicas in shard order, each replica's sinks in local-chunk
-    /// order — i.e. global chunk order (DESIGN.md §14).
-    fn combine_shard_grads(&mut self, plan: &ShardPlan) {
-        zero_grads(&mut self.grads, self.net.desc.qconv_names.len(), self.net.bits.len());
-        for r in 0..plan.shards {
-            let k = plan.shard_chunks(r).len();
-            for g in &self.replicas[r].grads[..k] {
-                accumulate_grads(&mut self.grads, g);
-            }
-        }
-    }
-
-    /// Sharded Eq. 10 weight phase: replicas run shard-local
-    /// forward+backward (sync-BN moments exchanged through the hub),
-    /// then the combiner sums grads in canonical chunk order, commits
-    /// the BN running-stat updates (identical on every replica — they
-    /// are a function of the combined global moments), and applies one
-    /// SGD-momentum update to the global state.
+    /// Sharded Eq. 10 weight phase: the transport fans the
+    /// forward+backward out over its replicas (sync-BN moments through
+    /// its rendezvous) and combines grads in canonical chunk order;
+    /// the combiner here then commits the BN running-stat updates and
+    /// applies one SGD-momentum update to the global state.
     #[allow(clippy::too_many_arguments)]
     fn weight_phase_sharded(
         &mut self,
         state: &mut StateVec,
         coeffs: Option<&Coeffs>,
-        plan: &ShardPlan,
         x: &[f32],
         y: &[i32],
         lr: f32,
@@ -386,35 +340,39 @@ impl NativeBackend {
         teacher: Option<(&[f32], f32)>,
     ) -> Result<(f32, f32)> {
         let batch = y.len();
-        self.ensure_replicas(plan);
-        let hub = (plan.shards > 1).then(|| MomentHub::new(plan.shards, plan.chunks));
-        let threads = self.replica_threads(plan.shards);
-        shard_fwd_bwd(
-            &self.net, &mut self.replicas, plan, hub.as_ref(), threads, self.num_classes,
-            state, coeffs, x, y, teacher,
-        )?;
-        self.combine_shard_grads(plan);
-        let (ce_sum, kl_sum, correct) = combine_scalars(&self.replicas, plan.shards);
-        let ce = (ce_sum / batch as f64) as f32;
+        let spec = PhaseSpec {
+            train: true,
+            backward: true,
+            classes: self.num_classes,
+            coeffs,
+            x,
+            y,
+            teacher,
+            shards: self.shards.shards,
+            chunks: self.shards.chunks,
+        };
+        let out = self.transport.run_phase(&self.net, state, &spec, &mut self.grads)?;
+        let ce = (out.ce_sum / batch as f64) as f32;
         let loss = match teacher {
-            Some((_, mu)) if mu > 0.0 => (1.0 - mu) * ce + mu * (kl_sum / batch as f64) as f32,
+            Some((_, mu)) if mu > 0.0 => {
+                (1.0 - mu) * ce + mu * (out.kl_sum / batch as f64) as f32
+            }
             _ => ce,
         };
-        self.replicas[0].arena.bn_updates.apply(state)?;
+        self.transport.commit_bn(state)?;
         optim::sgd_momentum_step(state, &self.grads.by_path, lr, wd)?;
-        Ok((loss, correct / batch as f32))
+        Ok((loss, out.correct / batch as f32))
     }
 
     /// Sharded Eq. 9 arch phase: the validation forward+backward fans
-    /// out like the weight phase (batch statistics, updates dropped);
-    /// the FLOPs hinge and the softmax VJP + Adam update run once on
-    /// the combiner over the combined coefficient grads.
+    /// out like the weight phase (batch statistics, updates dropped by
+    /// not committing them); the FLOPs hinge and the softmax VJP +
+    /// Adam update run once here over the combined coefficient grads.
     #[allow(clippy::too_many_arguments)]
     fn arch_phase_sharded(
         &mut self,
         state: &mut StateVec,
         sto: Option<&StoInputs>,
-        plan: &ShardPlan,
         xv: &[f32],
         yv: &[i32],
         lr_arch: f32,
@@ -423,20 +381,23 @@ impl NativeBackend {
     ) -> Result<(f32, f32, f32)> {
         let batch = yv.len();
         let coeffs = self.coeffs_from_state(state, sto)?;
-        self.ensure_replicas(plan);
-        let hub = (plan.shards > 1).then(|| MomentHub::new(plan.shards, plan.chunks));
-        let threads = self.replica_threads(plan.shards);
-        shard_fwd_bwd(
-            &self.net, &mut self.replicas, plan, hub.as_ref(), threads, self.num_classes,
-            state, Some(&coeffs), xv, yv, None,
-        )?;
-        self.combine_shard_grads(plan);
-        let (ce_sum, _, correct) = combine_scalars(&self.replicas, plan.shards);
-        let val_ce = (ce_sum / batch as f64) as f32;
+        let spec = PhaseSpec {
+            train: true,
+            backward: true,
+            classes: self.num_classes,
+            coeffs: Some(&coeffs),
+            x: xv,
+            y: yv,
+            teacher: None,
+            shards: self.shards.shards,
+            chunks: self.shards.chunks,
+        };
+        let out = self.transport.run_phase(&self.net, state, &spec, &mut self.grads)?;
+        let val_ce = (out.ce_sum / batch as f64) as f32;
         let eflops = self.expected_mflops(&coeffs);
         self.apply_flops_hinge(&coeffs, eflops, lam, target);
         self.arch_strength_update(state, sto, &coeffs, lr_arch)?;
-        Ok((val_ce, correct, eflops as f32))
+        Ok((val_ce, out.correct, eflops as f32))
     }
 
     /// Sharded eval forward (eval-mode BN — no moment exchange needed):
@@ -450,41 +411,21 @@ impl NativeBackend {
         let x = io_f32(io, "x")?;
         let y = io_get(io, "y")?.as_i32()?;
         let batch = y.len();
-        let plan = ShardPlan::new(batch, self.shards);
-        self.ensure_replicas(&plan);
-        let threads = self.replica_threads(plan.shards);
-        let classes = self.num_classes;
-        let img = x.len() / batch;
-        let (net, replicas) = (&self.net, &mut self.replicas);
-        run_replicas(&mut replicas[..plan.shards], None, |r, rep| {
-            let ex = plan.shard_examples(r);
-            let sb = ex.len();
-            let ctx = ExecCtx {
-                global_batch: batch,
-                chunk_size: plan.chunk_size,
-                chunk0: plan.shard_chunks(r).start,
-                total_chunks: plan.chunks,
-                hub: None,
-                threads,
-            };
-            net.forward_ctx(
-                state, coeffs, &x[ex.start * img..ex.end * img], sb, false, &mut rep.arena, &ctx,
-            )?;
-            rep.ce.clear();
-            rep.kl.clear();
-            rep.correct.clear();
-            for lex in ctx.local_chunks(sb) {
-                let ly = &y[ex.start + lex.start..ex.start + lex.end];
-                let ll = &rep.arena.tape.logits[lex.start * classes..lex.end * classes];
-                rep.ce.push(ops::cross_entropy(ll, ly, classes) as f64 * ly.len() as f64);
-                rep.correct.push(ops::correct_count(ll, ly, classes));
-            }
-            Ok(())
-        })?;
-        let (ce_sum, _, correct) = combine_scalars(&self.replicas, plan.shards);
+        let spec = PhaseSpec {
+            train: false,
+            backward: false,
+            classes: self.num_classes,
+            coeffs,
+            x,
+            y,
+            teacher: None,
+            shards: self.shards.shards,
+            chunks: self.shards.chunks,
+        };
+        let out = self.transport.run_phase(&self.net, state, &spec, &mut self.grads)?;
         let mut m = Metrics::new();
-        m.insert("loss".into(), Tensor::scalar_f32((ce_sum / batch as f64) as f32));
-        m.insert("correct".into(), Tensor::scalar_f32(correct));
+        m.insert("loss".into(), Tensor::scalar_f32((out.ce_sum / batch as f64) as f32));
+        m.insert("correct".into(), Tensor::scalar_f32(out.correct));
         Ok(m)
     }
 
@@ -519,12 +460,10 @@ impl NativeBackend {
         };
 
         let coeffs = self.coeffs_from_state(state, sto)?;
-        let plan_t = ShardPlan::new(yt.len(), self.shards);
         let (train_loss, _) =
-            self.weight_phase_sharded(state, Some(&coeffs), &plan_t, xt, yt, lr_w, wd, None)?;
-        let plan_v = ShardPlan::new(yv.len(), self.shards);
+            self.weight_phase_sharded(state, Some(&coeffs), xt, yt, lr_w, wd, None)?;
         let (val_loss, correct, eflops) =
-            self.arch_phase_sharded(state, sto, &plan_v, xv, yv, lr_arch, lam, target)?;
+            self.arch_phase_sharded(state, sto, xv, yv, lr_arch, lam, target)?;
 
         let mut m = Metrics::new();
         m.insert("eflops".into(), Tensor::scalar_f32(eflops));
@@ -622,106 +561,6 @@ impl NativeBackend {
     }
 }
 
-/// One sharded forward+backward over `plan`: each replica runs its
-/// contiguous shard through the ctx-aware graph (sync-BN moments
-/// exchanged through `hub`), fills its per-chunk scalar partials
-/// (CE/correct, KL with a teacher), and lands per-chunk weight
-/// gradients in its sinks.  Pure shard-local compute over a read-only
-/// state — every state mutation belongs to the combiner.
-#[allow(clippy::too_many_arguments)]
-fn shard_fwd_bwd(
-    net: &NativeNet,
-    replicas: &mut [Replica],
-    plan: &ShardPlan,
-    hub: Option<&MomentHub>,
-    threads: usize,
-    classes: usize,
-    state: &StateVec,
-    coeffs: Option<&Coeffs>,
-    x: &[f32],
-    y: &[i32],
-    teacher: Option<(&[f32], f32)>,
-) -> Result<()> {
-    let batch = y.len();
-    let img = x.len() / batch;
-    let (mu, t_logits) = match teacher {
-        Some((t, m)) if m > 0.0 => (m, Some(t)),
-        _ => (0.0, None),
-    };
-    run_replicas(&mut replicas[..plan.shards], hub, |r, rep| {
-        let ex = plan.shard_examples(r);
-        let sb = ex.len();
-        let xs = &x[ex.start * img..ex.end * img];
-        let ys = &y[ex.clone()];
-        let ctx = ExecCtx {
-            global_batch: batch,
-            chunk_size: plan.chunk_size,
-            chunk0: plan.shard_chunks(r).start,
-            total_chunks: plan.chunks,
-            hub,
-            threads,
-        };
-        net.forward_ctx(state, coeffs, xs, sb, true, &mut rep.arena, &ctx)?;
-        ops::softmax_rows(&rep.arena.tape.logits, sb, classes, &mut rep.probs);
-        if let Some(t) = t_logits {
-            ops::softmax_rows(
-                &t[ex.start * classes..ex.end * classes], sb, classes, &mut rep.teacher_probs,
-            );
-        }
-        rep.ce.clear();
-        rep.kl.clear();
-        rep.correct.clear();
-        for lex in ctx.local_chunks(sb) {
-            let ly = &ys[lex.clone()];
-            let ll = &rep.arena.tape.logits[lex.start * classes..lex.end * classes];
-            rep.ce.push(ops::cross_entropy(ll, ly, classes) as f64 * ly.len() as f64);
-            rep.correct.push(ops::correct_count(ll, ly, classes));
-            if let Some(t) = t_logits {
-                let tl = &t[(ex.start + lex.start) * classes..(ex.start + lex.end) * classes];
-                rep.kl.push(ops::distill_loss(ll, tl, lex.len(), classes) as f64 * lex.len() as f64);
-            }
-        }
-        // dlogits over the shard rows, scaled by 1/global-batch
-        let inv_b = 1.0 / batch as f32;
-        rep.dlogits.clear();
-        rep.dlogits.resize(sb * classes, 0.0);
-        for b in 0..sb {
-            for c in 0..classes {
-                let i = b * classes + c;
-                let hard = rep.probs[i] - if ys[b] as usize == c { 1.0 } else { 0.0 };
-                let soft = if t_logits.is_some() {
-                    rep.probs[i] - rep.teacher_probs[i]
-                } else {
-                    0.0
-                };
-                rep.dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
-            }
-        }
-        let k = sb.div_ceil(plan.chunk_size);
-        net.backward_ctx(state, coeffs, &mut rep.arena, &rep.dlogits, &mut rep.grads[..k], &ctx)?;
-        Ok(())
-    })
-}
-
-/// Combine the replicas' per-chunk scalar partials in canonical chunk
-/// order: (Σ CE, Σ KL, Σ correct).  Correct counts are exact under any
-/// order; the f64 sums follow the fixed chunk association.
-fn combine_scalars(replicas: &[Replica], shards: usize) -> (f64, f64, f32) {
-    let (mut ce, mut kl, mut correct) = (0f64, 0f64, 0f32);
-    for rep in &replicas[..shards] {
-        for &v in &rep.ce {
-            ce += v;
-        }
-        for &v in &rep.kl {
-            kl += v;
-        }
-        for &v in &rep.correct {
-            correct += v;
-        }
-    }
-    (ce, kl, correct)
-}
-
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -733,6 +572,11 @@ impl Backend for NativeBackend {
 
     fn set_shards(&mut self, spec: ShardSpec) {
         self.shards = spec;
+    }
+
+    fn set_transport(&mut self, transport: Box<dyn ChunkTransport>) -> Result<()> {
+        NativeBackend::set_transport(self, transport);
+        Ok(())
     }
 
     /// The sharded-step dispatch (DESIGN.md §14).  Train/search/eval
@@ -756,9 +600,7 @@ impl Backend for NativeBackend {
                 let y = io_get(io, "y")?.as_i32()?;
                 let lr = io_scalar(io, "lr")?;
                 let wd = io_scalar(io, "wd")?;
-                let plan = ShardPlan::new(y.len(), self.shards);
-                let (loss, acc) =
-                    self.weight_phase_sharded(state, None, &plan, x, y, lr, wd, None)?;
+                let (loss, acc) = self.weight_phase_sharded(state, None, x, y, lr, wd, None)?;
                 let mut m = Metrics::new();
                 m.insert("loss".into(), Tensor::scalar_f32(loss));
                 m.insert("acc".into(), Tensor::scalar_f32(acc));
@@ -775,9 +617,8 @@ impl Backend for NativeBackend {
                 let teacher = io_f32(io, "teacher")?;
                 let lr = io_scalar(io, "lr")?;
                 let wd = io_scalar(io, "wd")?;
-                let plan = ShardPlan::new(y.len(), self.shards);
                 let (loss, acc) = self.weight_phase_sharded(
-                    state, Some(&coeffs), &plan, x, y, lr, wd, Some((teacher, mu)),
+                    state, Some(&coeffs), x, y, lr, wd, Some((teacher, mu)),
                 )?;
                 let mut m = Metrics::new();
                 m.insert("loss".into(), Tensor::scalar_f32(loss));

@@ -36,8 +36,7 @@ use anyhow::{ensure, Result};
 
 use crate::bd::im2col::Patches;
 use crate::bd::scratch::{ensure as ensure_buf, ScratchStats};
-use crate::exec::sync::combine_local;
-use crate::exec::MomentHub;
+use crate::exec::sync::{combine_local, MomentExchange};
 use crate::models::NetDesc;
 use crate::runtime::{LayerDesc, Manifest, StateVec};
 
@@ -53,8 +52,8 @@ use super::quant::{self, WTape};
 /// cross-example reduction inside forward/backward is computed as
 /// per-chunk partials (chunk boundaries fixed by the plan, never by the
 /// shard count) and combined in canonical chunk order — through the
-/// [`MomentHub`] when replicas must exchange sync-BN moments mid-pass,
-/// locally otherwise.
+/// [`MomentExchange`] when replicas must exchange sync-BN moments
+/// mid-pass (an in-process hub or the cluster wire), locally otherwise.
 pub struct ExecCtx<'a> {
     /// Global batch size (BN statistics denominator; the replica's own
     /// batch is the shard it was handed).
@@ -67,7 +66,7 @@ pub struct ExecCtx<'a> {
     pub total_chunks: usize,
     /// Cross-replica moment exchange; `None` when this call owns every
     /// chunk (serial, or a single-shard chunked run).
-    pub hub: Option<&'a MomentHub>,
+    pub hub: Option<&'a (dyn MomentExchange + Sync)>,
     /// Kernel worker threads for this replica.
     pub threads: usize,
 }
@@ -172,6 +171,18 @@ impl BnUpdates {
             state.get_mut(&e.var_path)?.as_f32_mut()?.copy_from_slice(&e.var);
         }
         Ok(())
+    }
+
+    /// Live `(path, values)` pairs in layer order — mean then var per
+    /// layer — for transports that ship the commit over the wire
+    /// instead of applying it in-process (DESIGN.md §18).
+    pub fn live_entries(&self) -> impl Iterator<Item = (&str, &[f32])> {
+        self.entries[..self.live].iter().flat_map(|e| {
+            [
+                (e.mean_path.as_str(), e.mean.as_slice()),
+                (e.var_path.as_str(), e.var.as_slice()),
+            ]
+        })
     }
 }
 

@@ -16,6 +16,7 @@
 //! | [`graph`]   | the supernet forward tape + full hand-written backward (Eq. 7 network, Eq. 18-19 gradients), step-persistent [`TapeArena`]/[`Grads`] (DESIGN.md §12) |
 //! | [`optim`]   | Eq. 10 SGD-momentum (decay-masked) and Eq. 9 Adam on [`StateVec`] leaves |
 //! | [`backend`] | graph-name dispatch implementing [`crate::runtime::Backend`], incl. the data-parallel sharded step path over [`crate::exec`] (DESIGN.md §14) |
+//! | `replica`   | per-replica shard context + the shard-local phase body shared by the in-process pool, the cluster worker, and sharded eval (DESIGN.md §18) |
 //!
 //! [`Manifest`]: crate::runtime::Manifest
 //! [`StateVec`]: crate::runtime::StateVec
@@ -26,6 +27,7 @@ pub mod models;
 pub mod ops;
 pub mod optim;
 pub mod quant;
+pub(crate) mod replica;
 
 pub use backend::NativeBackend;
 pub use graph::{Coeffs, Grads, NativeNet, TapeArena};

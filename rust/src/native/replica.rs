@@ -1,0 +1,117 @@
+//! The per-replica shard context and the shard-local phase body
+//! (DESIGN.md §18).
+//!
+//! One [`Replica`] is everything a shard-local forward(+backward)
+//! touches: a persistent tape arena, one grad sink per owned canonical
+//! chunk, and the per-chunk scalar partials the combiner reduces.
+//! [`replica_phase`] is the single definition of "run my chunk range of
+//! one phase" — the in-process transport runs it on pool threads, the
+//! cluster worker process runs it over its wire-synced state view, and
+//! the sharded eval path runs it with the backward disabled.  Keeping
+//! one body is what makes the cluster bit-identical to the thread pool:
+//! there is no second implementation to drift.
+
+use anyhow::Result;
+
+use crate::runtime::StateVec;
+
+use super::graph::{Coeffs, ExecCtx, Grads, NativeNet, TapeArena};
+use super::ops;
+
+/// One data-parallel replica: everything a shard-local forward+backward
+/// touches.  `grads[k]` is the sink of the replica's k-th local chunk;
+/// the scalar vectors hold one per-chunk partial each, combined by the
+/// single-threaded canonical reduction after the join.
+#[derive(Default)]
+pub(crate) struct Replica {
+    pub(crate) arena: TapeArena,
+    pub(crate) grads: Vec<Grads>,
+    pub(crate) probs: Vec<f32>,
+    pub(crate) teacher_probs: Vec<f32>,
+    pub(crate) dlogits: Vec<f32>,
+    /// Per-chunk Σ cross-entropy (f64, example-sum not mean).
+    pub(crate) ce: Vec<f64>,
+    /// Per-chunk Σ distillation KL (example-sum; empty without teacher).
+    pub(crate) kl: Vec<f64>,
+    /// Per-chunk correct-prediction counts (exact under any order).
+    pub(crate) correct: Vec<f32>,
+}
+
+/// What one replica needs to know about its slice of a phase.  All
+/// slices are already shard-local (`x`/`y`/`teacher` hold exactly this
+/// shard's examples); the ctx carries the global chunk geometry.
+pub(crate) struct PhaseArgs<'a> {
+    /// Train-mode BN (batch statistics + running-stat capture) vs eval.
+    pub train: bool,
+    /// Run the backward and fill the per-chunk grad sinks.
+    pub backward: bool,
+    pub classes: usize,
+    pub coeffs: Option<&'a Coeffs>,
+    pub x: &'a [f32],
+    pub y: &'a [i32],
+    /// (teacher logits for this shard, μ) — label-refinery retrain.
+    pub teacher: Option<(&'a [f32], f32)>,
+}
+
+/// Run one replica's share of a phase: forward over its shard (sync-BN
+/// moments exchanged through `ctx.hub`), per-chunk scalar partials, and
+/// — when `backward` — the per-chunk weight gradients.  Pure
+/// shard-local compute over a read-only state; every state mutation
+/// belongs to the combiner (DESIGN.md §14).
+pub(crate) fn replica_phase(
+    net: &NativeNet,
+    rep: &mut Replica,
+    state: &StateVec,
+    a: &PhaseArgs<'_>,
+    ctx: &ExecCtx<'_>,
+) -> Result<()> {
+    let sb = a.y.len();
+    let classes = a.classes;
+    let (mu, t_logits) = match a.teacher {
+        Some((t, m)) if m > 0.0 => (m, Some(t)),
+        _ => (0.0, None),
+    };
+    net.forward_ctx(state, a.coeffs, a.x, sb, a.train, &mut rep.arena, ctx)?;
+    rep.ce.clear();
+    rep.kl.clear();
+    rep.correct.clear();
+    for lex in ctx.local_chunks(sb) {
+        let ly = &a.y[lex.clone()];
+        let ll = &rep.arena.tape.logits[lex.start * classes..lex.end * classes];
+        rep.ce.push(ops::cross_entropy(ll, ly, classes) as f64 * ly.len() as f64);
+        rep.correct.push(ops::correct_count(ll, ly, classes));
+        if let Some(t) = t_logits {
+            let tl = &t[lex.start * classes..lex.end * classes];
+            rep.kl.push(ops::distill_loss(ll, tl, lex.len(), classes) as f64 * lex.len() as f64);
+        }
+    }
+    if !a.backward {
+        return Ok(());
+    }
+    ops::softmax_rows(&rep.arena.tape.logits, sb, classes, &mut rep.probs);
+    if let Some(t) = t_logits {
+        ops::softmax_rows(t, sb, classes, &mut rep.teacher_probs);
+    }
+    // dlogits over the shard rows, scaled by 1/global-batch
+    let inv_b = 1.0 / ctx.global_batch as f32;
+    rep.dlogits.clear();
+    rep.dlogits.resize(sb * classes, 0.0);
+    for b in 0..sb {
+        for c in 0..classes {
+            let i = b * classes + c;
+            let hard = rep.probs[i] - if a.y[b] as usize == c { 1.0 } else { 0.0 };
+            let soft = if t_logits.is_some() {
+                rep.probs[i] - rep.teacher_probs[i]
+            } else {
+                0.0
+            };
+            rep.dlogits[i] = ((1.0 - mu) * hard + mu * soft) * inv_b;
+        }
+    }
+    let k = sb.div_ceil(ctx.chunk_size);
+    while rep.grads.len() < k {
+        rep.grads.push(Grads::default());
+    }
+    net.backward_ctx(state, a.coeffs, &mut rep.arena, &rep.dlogits, &mut rep.grads[..k], ctx)?;
+    Ok(())
+}

@@ -63,6 +63,16 @@ pub trait Backend {
         let _ = spec;
     }
 
+    /// Swap the replica transport behind the sharded path (DESIGN.md
+    /// §18) — e.g. to a coordinator/worker-process cluster.  Transports
+    /// honor the same canonical chunk algebra, so this never changes
+    /// results.  Only backends with a transport-pluggable sharded path
+    /// (native) accept one; everything else fails fast.
+    fn set_transport(&mut self, transport: Box<dyn crate::exec::ChunkTransport>) -> Result<()> {
+        let _ = transport;
+        bail!("backend '{}' has no pluggable replica transport", self.name())
+    }
+
     /// Execute one step graph under the sharding configured via
     /// [`Backend::set_shards`].  Same contract as [`Backend::run`];
     /// backends that cannot shard (or graphs that have no sharded

@@ -138,6 +138,15 @@ impl Engine {
         self.backend.set_shards(spec);
     }
 
+    /// Swap the replica transport behind the sharded path (DESIGN.md
+    /// §18; `--cluster`).  Fails on backends without one (pjrt).
+    pub fn set_transport(
+        &mut self,
+        transport: Box<dyn crate::exec::ChunkTransport>,
+    ) -> Result<()> {
+        self.backend.set_transport(transport)
+    }
+
     /// Compile (or fetch cached) a graph by name; no-op on native.
     pub fn prepare(&mut self, graph: &str) -> Result<()> {
         self.backend.prepare(&self.manifest, graph)

@@ -1,0 +1,122 @@
+//! Coordinator/worker cluster transport tests (DESIGN.md §18): a
+//! same-seed search must be bit-identical whether replicas run as
+//! in-process pool threads or as workers behind [`ClusterTransport`] —
+//! at any worker count, and through injected worker deaths mid-epoch
+//! and mid-rendezvous (chunks requeued onto the survivors).
+//!
+//! Workers here are real `run_worker` main loops on localhost TCP, run
+//! on std threads instead of child processes so the tests need no
+//! target binary and fault injection stays deterministic.
+
+use std::time::Duration;
+
+use ebs::coordinator::{run_search, FlopsModel, RunLogger, SearchCfg, SearchResult};
+use ebs::data::synth::{generate, SynthSpec};
+use ebs::exec::{run_worker, ClusterTransport, ShardSpec, StepExecutor, WorkerFault};
+
+mod common;
+use common::open_engine;
+
+const MODEL: &str = "resnet8_tiny";
+
+/// Fixed-seed Algorithm 1 on seeded tiny data through whatever
+/// transport `exec` carries.  Every run in this file shares the same
+/// data, seeds, and canonical `chunks = 4`, so results are comparable
+/// bit-for-bit across transports and worker counts.
+fn search_with(exec: &mut StepExecutor) -> SearchResult {
+    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
+    let target = flops.uniform_mflops(3);
+    let mut spec_data = SynthSpec::tiny(13);
+    spec_data.n_train = 192;
+    spec_data.n_test = 64;
+    let (train, _) = generate(&spec_data);
+    let (s_train, s_val) = train.split(0.5, 5);
+    let mut logger = RunLogger::ephemeral();
+    let cfg = SearchCfg {
+        steps: 10,
+        eval_every: 6,
+        log_every: 1000,
+        lambda: 1.0,
+        seed: 42,
+        ..SearchCfg::defaults(target, 0)
+    };
+    let mut state = exec.init_state(9).unwrap();
+    run_search(exec, &mut state, &s_train, &s_val, &cfg, &mut logger).unwrap()
+}
+
+/// The in-process reference: the scoped-thread pool at 2 shards over
+/// the same canonical 4 chunks the cluster runs use.
+fn in_process_search() -> SearchResult {
+    let mut exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(2, 4));
+    search_with(&mut exec)
+}
+
+/// Run the search behind a coordinator with one worker per fault spec
+/// (`WorkerFault::default()` = a healthy worker).  Workers dial in one
+/// at a time so fault specs target a known worker index.
+fn cluster_search(faults: &[WorkerFault]) -> SearchResult {
+    let mut exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(1, 4));
+    let mut ct = ClusterTransport::listen("127.0.0.1:0", MODEL).unwrap();
+    let addr = ct.local_addr().unwrap().to_string();
+    let mut workers = Vec::new();
+    for (i, &fault) in faults.iter().enumerate() {
+        let dial = addr.clone();
+        workers.push(std::thread::spawn(move || run_worker(&dial, 1, fault)));
+        ct.wait_for_workers(i + 1, Duration::from_secs(30)).unwrap();
+    }
+    exec.set_transport(Box::new(ct)).unwrap();
+    let res = search_with(&mut exec);
+    // Dropping the executor drops the transport, whose Drop sends
+    // Shutdown to every live worker; faulted workers exited earlier.
+    drop(exec);
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker main loop errored");
+    }
+    res
+}
+
+#[test]
+fn cluster_search_is_bit_identical_to_in_process() {
+    let reference = in_process_search();
+    let one = cluster_search(&[WorkerFault::default()]);
+    assert_eq!(reference, one, "1-worker cluster must match the in-process pool bit-for-bit");
+    let two = cluster_search(&[WorkerFault::default(), WorkerFault::default()]);
+    assert_eq!(reference, two, "2-worker cluster must match the in-process pool bit-for-bit");
+}
+
+/// Each search step dispatches the weight phase then the arch phase, so
+/// phase index 4 is the weight phase of step 2: worker 1 receives the
+/// dispatch and vanishes without a reply.  The coordinator must abort
+/// the attempt, requeue worker 1's chunks onto the survivor, and finish
+/// with the exact bits of an uninterrupted run.
+#[test]
+fn worker_killed_mid_epoch_is_requeued_bit_identically() {
+    let reference = in_process_search();
+    let faulted = cluster_search(&[
+        WorkerFault::default(),
+        WorkerFault { phase: Some(4), moment: None },
+    ]);
+    assert_eq!(
+        reference, faulted,
+        "search with a worker killed mid-epoch must stay bit-identical"
+    );
+}
+
+/// Phase index 5 is the arch phase of step 2 — a train phase, so with
+/// two live workers its sync-BN moments rendezvous through the
+/// coordinator hub.  Worker 1 ships its first moment partial of that
+/// phase and then dies, leaving worker 0 blocked inside the rendezvous:
+/// the poisoned hub must unblock it, the abort must drain cleanly, and
+/// the requeued retry must reproduce the uninterrupted bits.
+#[test]
+fn worker_killed_mid_rendezvous_is_requeued_bit_identically() {
+    let reference = in_process_search();
+    let faulted = cluster_search(&[
+        WorkerFault::default(),
+        WorkerFault { phase: None, moment: Some(5) },
+    ]);
+    assert_eq!(
+        reference, faulted,
+        "search with a worker killed mid-rendezvous must stay bit-identical"
+    );
+}

@@ -5,12 +5,13 @@
 //! plus bit-exact crash-resume replay.
 
 use ebs::coordinator::{
-    run_fp_train, run_retrain, run_search, FlopsModel, RunLogger, SearchCfg, SearchResult,
-    Selection, TrainCfg, TrainResult,
+    resume::meta_path, run_fp_train, run_retrain, run_search, FlopsModel, RunLogger, SearchCfg,
+    SearchResult, Selection, TrainCfg, TrainResult,
 };
 use ebs::data::synth::{generate, SynthSpec};
 use ebs::exec::{ShardSpec, StepExecutor};
 use ebs::runtime::{metric_f32, StateVec, Tensor};
+use ebs::util::json::{parse as json_parse, Json};
 use ebs::util::Rng;
 
 mod common;
@@ -148,23 +149,59 @@ fn result_bits(r: &TrainResult) -> (u64, u64) {
     (r.best_test_acc.to_bits(), r.final_train_loss.to_bits())
 }
 
+/// Run-directory for a checkpointing train run (keyed by tag so
+/// parallel tests never collide).
+fn train_dir(dir_tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ebs_exec_sharding_{}_{dir_tag}", std::process::id()))
+}
+
+/// Logger for a train run: a real run directory when checkpoints are
+/// requested, the no-op ephemeral logger otherwise.
+fn train_logger(ckpt_every: usize, dir_tag: &str) -> RunLogger {
+    if ckpt_every == 0 {
+        return RunLogger::ephemeral();
+    }
+    let dir = train_dir(dir_tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    RunLogger::new(&dir, false).unwrap()
+}
+
 /// FP pretrain under `spec` on seeded tiny data (ISSUE 7 satellite:
 /// shard invariance was previously only pinned for `search_det`).
-fn seeded_fp_train(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
+fn seeded_fp_train(
+    spec: ShardSpec,
+    seed: u64,
+    ckpt_every: usize,
+    resume: Option<std::path::PathBuf>,
+    dir_tag: &str,
+) -> (StateVec, (u64, u64)) {
     let mut exec = StepExecutor::new(open_engine("resnet8_tiny"), spec);
     let mut spec_data = SynthSpec::tiny(17);
     spec_data.n_train = 192;
     spec_data.n_test = 64;
     let (train, test) = generate(&spec_data);
-    let mut logger = RunLogger::ephemeral();
-    let cfg = TrainCfg { eval_every: 6, log_every: 1000, seed, ..TrainCfg::defaults(12) };
+    let mut logger = train_logger(ckpt_every, dir_tag);
+    let cfg = TrainCfg {
+        eval_every: 6,
+        log_every: 1000,
+        seed,
+        ckpt_every,
+        resume_from: resume,
+        ..TrainCfg::defaults(12)
+    };
     let mut state = exec.init_state(5).unwrap();
     let res = run_fp_train(&mut exec, &mut state, &train, &test, &cfg, &mut logger).unwrap();
     (state, result_bits(&res))
 }
 
 /// Retrain under a fixed searched selection under `spec`.
-fn seeded_retrain(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
+fn seeded_retrain(
+    spec: ShardSpec,
+    seed: u64,
+    ckpt_every: usize,
+    resume: Option<std::path::PathBuf>,
+    dir_tag: &str,
+) -> (StateVec, (u64, u64)) {
     let mut exec = StepExecutor::new(open_engine("resnet8_tiny"), spec);
     let layers = exec.manifest.num_qconvs();
     // Cycle through the manifest's candidate bitwidths so the fixed
@@ -178,8 +215,15 @@ fn seeded_retrain(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
     spec_data.n_train = 192;
     spec_data.n_test = 64;
     let (train, test) = generate(&spec_data);
-    let mut logger = RunLogger::ephemeral();
-    let cfg = TrainCfg { eval_every: 6, log_every: 1000, seed, ..TrainCfg::defaults(12) };
+    let mut logger = train_logger(ckpt_every, dir_tag);
+    let cfg = TrainCfg {
+        eval_every: 6,
+        log_every: 1000,
+        seed,
+        ckpt_every,
+        resume_from: resume,
+        ..TrainCfg::defaults(12)
+    };
     let mut state = exec.init_state(5).unwrap();
     let res = run_retrain(
         &mut exec, &mut state, &selection, &train, &test, &cfg, None, &mut logger,
@@ -190,15 +234,15 @@ fn seeded_retrain(spec: ShardSpec, seed: u64) -> (StateVec, (u64, u64)) {
 
 #[test]
 fn fp_pretrain_is_bit_identical_across_shard_counts() {
-    let (s1, r1) = seeded_fp_train(ShardSpec::new(1, 4), 31);
-    let (s2, r2) = seeded_fp_train(ShardSpec::new(2, 4), 31);
-    let (s4, r4) = seeded_fp_train(ShardSpec::new(4, 4), 31);
+    let (s1, r1) = seeded_fp_train(ShardSpec::new(1, 4), 31, 0, None, "");
+    let (s2, r2) = seeded_fp_train(ShardSpec::new(2, 4), 31, 0, None, "");
+    let (s4, r4) = seeded_fp_train(ShardSpec::new(4, 4), 31, 0, None, "");
     assert_eq!(r1, r2, "fp train result differs at 2 shards");
     assert_eq!(r1, r4, "fp train result differs at 4 shards");
     assert_states_identical(&s1, &s2, "fp shards 1 vs 2");
     assert_states_identical(&s1, &s4, "fp shards 1 vs 4");
     // Different seed diverges, so the equalities are not vacuous.
-    let (s_other, _) = seeded_fp_train(ShardSpec::new(2, 4), 32);
+    let (s_other, _) = seeded_fp_train(ShardSpec::new(2, 4), 32, 0, None, "");
     assert!(
         s1.spec.iter().enumerate().any(|(i, _)| s1.tensors[i] != s_other.tensors[i]),
         "different fp seeds should diverge"
@@ -207,9 +251,9 @@ fn fp_pretrain_is_bit_identical_across_shard_counts() {
 
 #[test]
 fn retrain_is_bit_identical_across_shard_counts() {
-    let (s1, r1) = seeded_retrain(ShardSpec::new(1, 4), 57);
-    let (s2, r2) = seeded_retrain(ShardSpec::new(2, 4), 57);
-    let (s4, r4) = seeded_retrain(ShardSpec::new(4, 4), 57);
+    let (s1, r1) = seeded_retrain(ShardSpec::new(1, 4), 57, 0, None, "");
+    let (s2, r2) = seeded_retrain(ShardSpec::new(2, 4), 57, 0, None, "");
+    let (s4, r4) = seeded_retrain(ShardSpec::new(4, 4), 57, 0, None, "");
     assert_eq!(r1, r2, "retrain result differs at 2 shards");
     assert_eq!(r1, r4, "retrain result differs at 4 shards");
     assert_states_identical(&s1, &s2, "retrain shards 1 vs 2");
@@ -229,5 +273,61 @@ fn resume_replays_the_uninterrupted_sharded_search_bit_for_bit() {
     assert!(ckpt.exists(), "ckpt_every should have written {}", ckpt.display());
     let resumed = seeded_search(ShardSpec::new(2, 4), 77, 0, Some(ckpt.clone()), "resumed");
     assert_eq!(full, resumed, "resumed search must replay the full run bit-for-bit");
+    let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
+}
+
+/// Rewrite a checkpoint's meta sidecar with the named keys removed —
+/// what a sidecar written before those fields existed looks like.
+fn strip_meta_keys(meta: &std::path::Path, keys: &[&str]) {
+    let text = std::fs::read_to_string(meta).unwrap();
+    let Json::Obj(fields) = json_parse(&text).unwrap() else {
+        panic!("meta sidecar is not a JSON object");
+    };
+    let kept: Vec<_> =
+        fields.into_iter().filter(|(k, _)| !keys.contains(&k.as_str())).collect();
+    std::fs::write(meta, Json::Obj(kept).to_string()).unwrap();
+}
+
+#[test]
+fn search_resume_falls_back_to_replay_for_pre_cursor_sidecars() {
+    // A sidecar without the serialized cursors/rng (written before O(1)
+    // restore existed) must take the fast-forward replay path and land
+    // on the same bits as the uninterrupted run.
+    let full = seeded_search(ShardSpec::new(2, 4), 91, 12, None, "fb_full");
+    let ckpt = train_dir("fb_full").join("search_resume.ckpt");
+    assert!(ckpt.exists(), "ckpt_every should have written {}", ckpt.display());
+    strip_meta_keys(&meta_path(&ckpt), &["train_cursor", "val_cursor", "rng"]);
+    let resumed = seeded_search(ShardSpec::new(2, 4), 91, 0, Some(ckpt.clone()), "fb_resumed");
+    assert_eq!(full, resumed, "pre-cursor sidecar must replay to the same bits");
+    let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
+}
+
+#[test]
+fn fp_resume_restores_the_cursor_and_replays_bit_for_bit() {
+    // Run A: 12 steps straight through, crash checkpoint at step 6.
+    // Run B resumes via the O(1) cursor restore; run C resumes the same
+    // checkpoint with the cursor stripped (replay fast-forward).  All
+    // three must agree on every state bit and result tracker.
+    let (full_s, full_r) = seeded_fp_train(ShardSpec::new(2, 4), 61, 6, None, "fp_full");
+    let ckpt = train_dir("fp_full").join("fp_resume.ckpt");
+    assert!(ckpt.exists(), "ckpt_every should have written {}", ckpt.display());
+    let (s_cur, r_cur) = seeded_fp_train(ShardSpec::new(2, 4), 61, 0, Some(ckpt.clone()), "");
+    assert_eq!(full_r, r_cur, "fp resume (cursor restore) result diverged");
+    assert_states_identical(&full_s, &s_cur, "fp resume (cursor restore)");
+    strip_meta_keys(&meta_path(&ckpt), &["cursor"]);
+    let (s_rep, r_rep) = seeded_fp_train(ShardSpec::new(2, 4), 61, 0, Some(ckpt.clone()), "");
+    assert_eq!(full_r, r_rep, "fp resume (replay fallback) result diverged");
+    assert_states_identical(&full_s, &s_rep, "fp resume (replay fallback)");
+    let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
+}
+
+#[test]
+fn retrain_resume_restores_the_cursor_and_replays_bit_for_bit() {
+    let (full_s, full_r) = seeded_retrain(ShardSpec::new(2, 4), 73, 6, None, "rt_full");
+    let ckpt = train_dir("rt_full").join("retrain_resume.ckpt");
+    assert!(ckpt.exists(), "ckpt_every should have written {}", ckpt.display());
+    let (s_cur, r_cur) = seeded_retrain(ShardSpec::new(2, 4), 73, 0, Some(ckpt.clone()), "");
+    assert_eq!(full_r, r_cur, "retrain resume result diverged");
+    assert_states_identical(&full_s, &s_cur, "retrain resume (cursor restore)");
     let _ = std::fs::remove_dir_all(ckpt.parent().unwrap());
 }

@@ -16,8 +16,10 @@ use ebs::bd::artifact::{
     parse_manifest, ArtifactError, DeploymentArtifact, CKPT_FILE, MANIFEST_FILE, SELECTION_FILE,
 };
 use ebs::coordinator::Selection;
+use ebs::exec::wire;
 use ebs::fuzzing::{
-    fuzz_artifact_restore, fuzz_bd_differential, fuzz_config_parse, fuzz_protocol_decode,
+    fuzz_artifact_restore, fuzz_bd_differential, fuzz_config_parse, fuzz_exec_frame,
+    fuzz_protocol_decode,
 };
 use ebs::serve::protocol::{
     decode_response, encode_response, read_frame, FrameError, Response, MAGIC, VERSION,
@@ -70,6 +72,11 @@ fn corpus_replays_bd_differential() {
     replay("bd_differential", fuzz_bd_differential);
 }
 
+#[test]
+fn corpus_replays_exec_frame() {
+    replay("exec_frame", fuzz_exec_frame);
+}
+
 /// Seeded random sweeps: cheap, deterministic coverage of the same
 /// bodies between coverage-guided runs.  Byte strings are arbitrary;
 /// the bodies must never panic.
@@ -82,6 +89,7 @@ fn seeded_sweep_boundary_targets() {
         fuzz_protocol_decode(&bytes);
         fuzz_config_parse(&bytes);
         fuzz_artifact_restore(&bytes);
+        fuzz_exec_frame(&bytes);
         // Bias some cases toward each surface's magic so the sweep
         // reaches past the first header check.
         match case % 4 {
@@ -89,6 +97,9 @@ fn seeded_sweep_boundary_targets() {
                 bytes[0] = MAGIC;
                 bytes[1] = VERSION;
                 fuzz_protocol_decode(&bytes);
+                bytes[0] = wire::MAGIC;
+                bytes[1] = wire::VERSION;
+                fuzz_exec_frame(&bytes);
             }
             1 if bytes.len() >= 8 => {
                 bytes[..8].copy_from_slice(b"EBSCKPT1");
@@ -287,6 +298,89 @@ fn manifest_single_byte_flips_reject_with_right_variant() {
          checksum={checksums} missing={missings} differing={diffs}"
     );
     std::fs::remove_dir_all(&d).ok();
+}
+
+// ---------------------------------------------------------------------
+// Exec cluster protocol (DESIGN.md §18): torn-frame poison paths.
+// ---------------------------------------------------------------------
+
+fn exec_messages() -> Vec<wire::Msg> {
+    vec![
+        wire::Msg::Hello,
+        wire::Msg::Welcome { model: "resnet8_tiny".into() },
+        wire::Msg::StateSync {
+            leaves: vec![("state/params/stem/w".into(), vec![1.0, -2.5, f32::MIN_POSITIVE])],
+            digest: [9u8; 32],
+        },
+        wire::Msg::MomentPart { chunk0: 2, m: 3, parts: vec![1.5, -0.0, 1e300] },
+        wire::Msg::MomentCombined { combined: vec![0.25; 12] },
+        wire::Msg::PhaseDone(wire::PhaseDone {
+            ce: vec![1.0, 2.0],
+            kl: vec![0.5, 0.5],
+            correct: vec![7.0, 3.0],
+            grads: vec![wire::ChunkGrads {
+                leaves: vec![("state/params/fc/w".into(), vec![0.5; 4])],
+                dcw: vec![vec![0.1, 0.2]],
+                dcx: vec![vec![-0.1, -0.2]],
+            }],
+            bn: vec![("state/bn/stem/var".into(), vec![1.0; 8])],
+        }),
+        wire::Msg::Abort,
+        wire::Msg::Error { msg: "killed".into() },
+    ]
+}
+
+/// Every strict prefix of every encoded exec frame must read as a clean
+/// EOF (empty stream only) or a typed `Truncated` — the poison path a
+/// worker crash mid-write leaves behind — and the full frame must
+/// round-trip.  Payload prefixes must decode or error, never panic.
+#[test]
+fn every_exec_frame_prefix_is_clean_eof_or_truncated() {
+    for msg in exec_messages() {
+        let frame = wire::encode(&msg);
+        for cut in 0..frame.len() {
+            let mut r = &frame[..cut];
+            match wire::read_frame(&mut r) {
+                Ok(None) => assert_eq!(cut, 0, "only an empty stream is a clean EOF"),
+                Err(wire::FrameError::Truncated(_)) => assert!(cut > 0),
+                other => panic!("{msg:?} cut at {cut}: want Truncated, got {other:?}"),
+            }
+        }
+        let mut r = &frame[..];
+        let payload = wire::read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(wire::decode(&payload).unwrap(), msg);
+        for cut in 0..payload.len() {
+            let _ = wire::decode(&payload[..cut]);
+        }
+    }
+}
+
+/// A stream torn *between* the frames of a multi-message burst (the
+/// coordinator's state-sync + phase-start dispatch) must deliver every
+/// complete frame and then report the torn tail as Truncated.
+#[test]
+fn torn_multi_message_stream_delivers_whole_frames_then_truncates() {
+    let msgs = exec_messages();
+    let mut stream = Vec::new();
+    for m in &msgs {
+        stream.extend_from_slice(&wire::encode(m));
+    }
+    // Cut mid-way through the final frame.
+    let cut = stream.len() - 3;
+    let mut r = &stream[..cut];
+    let mut delivered = 0;
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Some(payload)) => {
+                assert_eq!(wire::decode(&payload).unwrap(), msgs[delivered]);
+                delivered += 1;
+            }
+            Ok(None) => panic!("torn tail must not read as clean EOF"),
+            Err(wire::FrameError::Truncated(_)) => break,
+            Err(other) => panic!("unexpected error on torn stream: {other}"),
+        }
+    }
+    assert_eq!(delivered, msgs.len() - 1, "every whole frame before the tear is delivered");
 }
 
 /// The traversal guard seen through the public load path: a manifest
