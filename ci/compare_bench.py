@@ -4,15 +4,19 @@
 Usage: compare_bench.py [--require-real] <baseline.json> <fresh.json> [warn_ratio] [fail_ratio]
 
 Both files use the DESIGN.md §9 envelope `{bench, reps, threads,
-tile_co, tile_n, rows}`.  Rows are matched on every non-latency field
-(shape, bits, batch, exec, threads, ...); every numeric field ending in
-`_ms` is compared.  A GitHub Actions `::warning::` annotation is
-emitted when fresh/baseline exceeds the warn ratio; an `::error::`
-annotation is emitted — and the script exits non-zero — when it exceeds
-the fail ratio.  The soft band exists because CI runners are noisy; the
-hard gate catches real step-time regressions (the bench-json artifact
-remains the full trajectory).  A missing baseline is not an error:
-commit one from a trusted run's `bench-json` artifact to
+tile_co, tile_n, rows}`.  Rows are matched on every non-measured field
+(shape, bits, batch, exec, threads, wire, ...); every numeric field
+ending in `_ms` is compared, as is every field ending in
+`_bytes_per_epoch` (the cluster bench's wire accounting — byte counts
+are near-deterministic, so they get their own tighter band,
+BYTES_THRESHOLDS, rather than the latency band).  A GitHub Actions
+`::warning::` annotation is emitted when fresh/baseline exceeds the
+warn ratio; an `::error::` annotation is emitted — and the script exits
+non-zero — when it exceeds the fail ratio.  The soft band exists
+because CI runners are noisy; the hard gate catches real step-time (or
+wire-bloat) regressions (the bench-json artifact remains the full
+trajectory).  Improvements always pass.  A missing baseline is not an
+error: commit one from a trusted run's `bench-json` artifact to
 `ci/bench-baseline/` to arm the comparison.
 
 Thresholds resolve per bench: explicit CLI ratios win; otherwise the
@@ -47,6 +51,11 @@ PER_BENCH_THRESHOLDS = {
     "cluster_search": (1.6, 2.0),
 }
 
+# `*_bytes_per_epoch` fields are byte counts, not timings: the same
+# build moves the same frames, so growth past a few percent is protocol
+# bloat, not runner noise.  The CLI ratio override does not touch these.
+BYTES_THRESHOLDS = (1.2, 1.5)
+
 
 def thresholds_for(bench, argv):
     """CLI override > per-bench table > default."""
@@ -62,6 +71,7 @@ def is_derived(field):
     return (
         field.endswith("_ms")
         or field.endswith("_speedup")
+        or field.endswith("_bytes_per_epoch")
         or field.startswith("gops")
     )
 
@@ -99,30 +109,36 @@ def main():
         if ref is None:
             continue
         for field, value in row.items():
-            if not field.endswith("_ms") or not isinstance(value, (int, float)):
-                continue  # compare latency medians only (gops/speedup are derived)
+            if not isinstance(value, (int, float)):
+                continue
+            if field.endswith("_ms"):
+                band, unit = (warn_ratio, fail_ratio), "ms"
+            elif field.endswith("_bytes_per_epoch"):
+                band, unit = BYTES_THRESHOLDS, "B/epoch"
+            else:
+                continue  # gops/speedup are derived from the compared fields
             old = ref.get(field)
             if not isinstance(old, (int, float)) or old <= 0:
                 continue
             checked += 1
             ratio = value / old
-            if ratio <= warn_ratio:
+            if ratio <= band[0]:
                 continue
             ident = {k: v for k, v in row.items() if not is_derived(k)}
             detail = (
                 f"bench regression in {fresh.get('bench', '?')} {ident}: {field} "
-                f"{old:.3f}ms -> {value:.3f}ms ({ratio:.2f}x)"
+                f"{old:.3f}{unit} -> {value:.3f}{unit} ({ratio:.2f}x)"
             )
-            if ratio > fail_ratio and enforce:
+            if ratio > band[1] and enforce:
                 failed += 1
-                print(f"::error file={fresh_path}::{detail} > {fail_ratio}x hard limit")
-            elif ratio > fail_ratio:
+                print(f"::error file={fresh_path}::{detail} > {band[1]}x hard limit")
+            elif ratio > band[1]:
                 warned += 1
-                print(f"::warning file={fresh_path}::{detail} > {fail_ratio}x hard limit "
+                print(f"::warning file={fresh_path}::{detail} > {band[1]}x hard limit "
                       "(demoted: baseline is provisional)")
             else:
                 warned += 1
-                print(f"::warning file={fresh_path}::{detail} > {warn_ratio}x")
+                print(f"::warning file={fresh_path}::{detail} > {band[0]}x")
     trust = "provisional, warn-only" if not enforce else (
         "trusted" if require_real else "enforced")
     print(

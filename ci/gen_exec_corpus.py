@@ -1,0 +1,220 @@
+#!/usr/bin/env python3
+"""Regenerate the exec_frame fuzz corpus (rust/fuzz/corpus/exec_frame/).
+
+Seeds mirror rust/src/exec/wire.rs at protocol v2 (0x02): every frame
+type the coordinator and workers exchange, plus the hostile shapes the
+decoder must refuse typed — torn frames, lying counts, version skew,
+zero-work phase plans.  Run from the repo root after a wire format
+change; the seeds are committed, and tests/fuzz_regressions.rs replays
+them on every `cargo test`.
+"""
+
+import os
+import struct
+
+MAGIC = 0xEC
+VERSION = 0x02
+
+OP_HELLO = 0x01
+OP_WELCOME = 0x02
+OP_STATE_SYNC = 0x03
+OP_PHASE_START = 0x04
+OP_MOMENT_PART = 0x05
+OP_MOMENT_COMBINED = 0x06
+OP_PHASE_DONE = 0x07
+OP_ABORT = 0x08
+OP_ABORT_ACK = 0x09
+OP_SHUTDOWN = 0x0A
+OP_ERROR = 0x0B
+OP_SYNC_ACK = 0x0C
+OP_DATASET_LOAD = 0x0D
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def f32s(vals):
+    return u32(len(vals)) + b"".join(struct.pack("<f", v) for v in vals)
+
+
+def f64s(vals):
+    return u32(len(vals)) + b"".join(struct.pack("<d", v) for v in vals)
+
+
+def i32s(vals):
+    return u32(len(vals)) + b"".join(struct.pack("<i", v) for v in vals)
+
+
+def u32s(vals):
+    return u32(len(vals)) + b"".join(u32(v) for v in vals)
+
+
+def s(text):
+    raw = text.encode()
+    return u16(len(raw)) + raw
+
+
+def rows(rr):
+    return u32(len(rr)) + b"".join(f32s(r) for r in rr)
+
+
+def leaves(ll):
+    return u32(len(ll)) + b"".join(s(p) + f32s(v) for p, v in ll)
+
+
+def frame(payload, version=VERSION, magic=MAGIC):
+    return bytes([magic, version]) + u32(len(payload)) + payload
+
+
+def phase_start(
+    train=True,
+    backward=True,
+    want_bn=False,
+    classes=10,
+    global_batch=64,
+    chunk_size=16,
+    chunk0=1,
+    total_chunks=4,
+    shards=2,
+    mu=0.0,
+    coeffs=None,
+    inline=None,
+    indexed=None,
+    teacher=None,
+):
+    flags = (
+        (1 if train else 0)
+        | (2 if backward else 0)
+        | (4 if want_bn else 0)
+        | (8 if coeffs is not None else 0)
+        | (16 if teacher is not None else 0)
+        | (32 if indexed is not None else 0)
+    )
+    p = bytes([OP_PHASE_START, flags])
+    for v in (classes, global_batch, chunk_size, chunk0, total_chunks, shards):
+        p += u32(v)
+    p += struct.pack("<f", mu)
+    if coeffs is not None:
+        cw, cx = coeffs
+        p += rows(cw) + rows(cx)
+    if indexed is not None:
+        dataset, idx = indexed
+        p += u32(dataset) + u32s(idx)
+    else:
+        x, y = inline
+        p += f32s(x) + i32s(y)
+    if teacher is not None:
+        p += f32s(teacher)
+    return p
+
+
+def dataset_load(ds_id, hw, ch, classes, fp, images, labels):
+    p = bytes([OP_DATASET_LOAD])
+    for v in (ds_id, hw, ch, classes):
+        p += u32(v)
+    return p + fp + f32s(images) + i32s(labels)
+
+
+COEFFS = ([[0.25, 0.5, 0.25], [1.0, 0.0, 0.0]], [[0.1, 0.2, 0.7], [0.0, 0.0, 1.0]])
+
+SEEDS = {
+    # -- well-formed frames, one per opcode ---------------------------
+    "hello_frame": frame(bytes([OP_HELLO]) + u32(0)),
+    "hello_fingerprints_frame": frame(
+        bytes([OP_HELLO]) + u32(2) + bytes([3] * 32) + bytes([255] * 32)
+    ),
+    "welcome_frame": frame(bytes([OP_WELCOME]) + s("resnet8_tiny")),
+    "state_sync_frame": frame(
+        bytes([OP_STATE_SYNC])
+        + leaves([("state/params/stem/w", [1.0, -2.5]), ("state/bn/stem/mean", [0.0] * 8)])
+        + bytes([9] * 32)
+    ),
+    "sync_ack_frame": frame(bytes([OP_SYNC_ACK]) + bytes([0xAB] * 32)),
+    "dataset_load_frame": frame(
+        dataset_load(1, 2, 3, 10, bytes([9] * 32), [0.5] * (2 * 2 * 3 * 2), [4, 7])
+    ),
+    # Bind-by-fingerprint: no rows, worker already holds the content.
+    "dataset_bind_frame": frame(dataset_load(3, 8, 3, 10, bytes([12] * 32), [], [])),
+    "phase_start_frame": frame(
+        phase_start(
+            want_bn=True,
+            coeffs=COEFFS,
+            inline=([0.5, -1.25, 1.5], [3, -1, 0]),
+            teacher=[0.125] * 6,
+            mu=0.5,
+        )
+    ),
+    "phase_start_indexed_frame": frame(
+        phase_start(coeffs=COEFFS, indexed=(2, [17, 0, 191, 3]))
+    ),
+    "phase_start_eval_frame": frame(
+        phase_start(train=False, backward=False, shards=1, inline=([0.25] * 4, [1]))
+    ),
+    "moment_part_frame": frame(
+        bytes([OP_MOMENT_PART]) + u32(1) + u32(3) + f64s([1.5, -2.25, 1e300, 0.0, -0.0, 7.0])
+    ),
+    "moment_combined_frame": frame(bytes([OP_MOMENT_COMBINED]) + f64s([5e-324, 2.0])),
+    "phase_done_frame": frame(
+        bytes([OP_PHASE_DONE])
+        + f64s([1.25, 0.5])
+        + f64s([0.0, 0.0])
+        + f32s([3.0, 1.0])
+        + u32(1)
+        + leaves([("state/params/fc/w", [0.5] * 4)])
+        + rows([[0.1, 0.2]])
+        + rows([[-0.1, -0.2]])
+        + leaves([("state/bn/stem/var", [1.0] * 8)])
+    ),
+    "abort_frames": frame(bytes([OP_ABORT]))
+    + frame(bytes([OP_ABORT_ACK]))
+    + frame(bytes([OP_SHUTDOWN])),
+    "error_frame": frame(bytes([OP_ERROR]) + b"worker lost"),
+    # -- hostile shapes the decoder must refuse typed -----------------
+    # Version skew: a v1 peer whose length field lies (4 GiB claim);
+    # refusal must fire on the version byte, before the length parse.
+    "v1_skew_frame": frame(bytes([OP_HELLO]), version=0x01)[:2] + b"\xff\xff\xff\xff",
+    "serve_magic": frame(b"", magic=0xEB),
+    "torn_header": bytes([MAGIC, VERSION, 0x05, 0x00]),
+    "torn_payload": frame(bytes([OP_WELCOME]) + s("resnet8_tiny"))[:-4],
+    # A dataset-load torn inside its image rows (worker died mid-ship).
+    "torn_dataset_load": frame(
+        dataset_load(0, 2, 3, 10, bytes([7] * 32), [0.5] * (2 * 2 * 3 * 2), [4, 7])
+    )[:-17],
+    "oversized": bytes([MAGIC, VERSION]) + u32((256 << 20) + 1),
+    "lying_moment_count": frame(
+        bytes([OP_MOMENT_PART]) + u32(0) + u32(4) + b"\xff\xff\xff\xff"
+    ),
+    # Indexed phase-start whose index count claims u32::MAX entries
+    # (count + 4 idx words stripped, lying count appended).
+    "lying_idx_count": frame(
+        phase_start(coeffs=COEFFS, indexed=(2, [17, 0, 191, 3]))[:-20]
+        + b"\xff\xff\xff\xff"
+    ),
+    # Plans no work: every chunk-geometry field zero, empty index set.
+    "zero_chunk_phase_start": frame(
+        phase_start(
+            global_batch=0, chunk_size=0, chunk0=0, total_chunks=0, shards=0, indexed=(0, [])
+        )
+    ),
+}
+
+
+def main():
+    out = os.path.join(os.path.dirname(__file__), "..", "rust", "fuzz", "corpus", "exec_frame")
+    out = os.path.normpath(out)
+    for name in os.listdir(out):
+        os.remove(os.path.join(out, name))
+    for name, data in sorted(SEEDS.items()):
+        with open(os.path.join(out, name), "wb") as f:
+            f.write(data)
+        print(f"{name}: {len(data)} bytes")
+    print(f"{len(SEEDS)} seeds -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@
 Usage:
   refresh_baselines.py --from-dir <dir> [--baseline-dir ci/bench-baseline]
                        [--only BENCH_x.json,BENCH_y.json] [--dry-run]
+                       [--force]
 
 `<dir>` is a directory holding fresh `BENCH_*.json` documents — the
 extracted `bench-json` / `serve-bench-json` artifacts of a trusted CI
@@ -22,6 +23,12 @@ are left untouched; fresh files with no committed counterpart are
 **created** (this is how the first bd_gemm/bd_layers baseline lands
 and arms their comparisons).
 
+Promotion is reps-gated for benches listed in MIN_TRUSTED_REPS: a
+fresh document with fewer reps than the floor (e.g. the cluster bench's
+single-rep smoke rows) keeps the `"provisional": true` marker instead
+of clearing it, so `compare_bench.py --require-real` stays warn-only
+until a real multi-rep artifact lands.  `--force` overrides the gate.
+
 The envelope is preserved as-is — including `kernel_tier` where the
 bench reports it — so a baseline also records which SIMD tier produced
 it.  Output is deterministic (sorted keys are NOT used: key order is
@@ -34,6 +41,15 @@ Review the diff before committing; the commit is the act of trust.
 import json
 import os
 import sys
+
+# Benches whose baseline may only shed its provisional marker when the
+# fresh document carries at least this many reps.  The cluster bench's
+# per-PR smoke runs one rep per (wire, workers) cell — too noisy to
+# arm a hard gate; its trusted baseline comes from a scheduled
+# multi-rep artifact.
+MIN_TRUSTED_REPS = {
+    "BENCH_cluster_search.json": 3,
+}
 
 
 def find_bench_files(root):
@@ -62,6 +78,7 @@ def main():
     baseline_dir = take("--baseline-dir", "ci/bench-baseline")
     only = take("--only")
     dry_run = "--dry-run" in argv
+    force = "--force" in argv
     if from_dir is None:
         print(__doc__)
         return 0
@@ -83,9 +100,29 @@ def main():
         if not rows:
             print(f"::warning::{path} has no rows; skipping")
             continue
+        min_reps = MIN_TRUSTED_REPS.get(name, 0)
+        gated = not force and doc.get("reps", 0) < min_reps
+        if gated:
+            # Re-insert the marker right after `bench` so the committed
+            # diff stays in the writer's key order.
+            regated = {}
+            for k, v in doc.items():
+                regated[k] = v
+                if k == "bench":
+                    regated["provisional"] = True
+            regated.setdefault("provisional", True)
+            doc = regated
         dest = os.path.join(baseline_dir, name)
         action = "refresh" if os.path.exists(dest) else "create"
-        note = " (cleared provisional marker)" if had_provisional else ""
+        if gated:
+            note = (
+                f" (kept provisional: {doc.get('reps', 0)} reps < {min_reps}"
+                " floor; pass --force to promote anyway)"
+            )
+        elif had_provisional:
+            note = " (cleared provisional marker)"
+        else:
+            note = ""
         print(
             f"[refresh] {action} {dest} from {path}: {len(rows)} rows, "
             f"bench={doc.get('bench')!r}, kernel_tier={doc.get('kernel_tier')!r}{note}"

@@ -188,60 +188,91 @@ fn main() -> anyhow::Result<()> {
 
     // Cluster-transport sweep (DESIGN.md §18): the same step with
     // replicas behind the coordinator/worker exec protocol at {1, 2}
-    // workers, on the same canonical 4-chunk grid as the shard sweep —
-    // bit-identical numerics, so step_ms (state sync + dispatch + wire
-    // reduction overhead included) is the only axis.  Workers are
+    // workers × {index, payload} wire modes, on the same canonical
+    // 4-chunk grid as the shard sweep — bit-identical numerics across
+    // the whole sweep, so step_ms (state sync + dispatch + wire
+    // reduction overhead included) and the wire-traffic columns are the
+    // axes.  Batches come from a real dataset through the driver's
+    // batcher protocol so index mode has worker-resident copies to
+    // resolve against; `wire_bytes_per_epoch` counts the phase-data
+    // path only (PhaseStart + DatasetLoad) — state sync is
+    // mode-invariant and reported as its own column.  Workers are
     // `run_worker` main loops on threads behind real localhost TCP
     // sockets: the full wire path, without needing the `ebs` binary.
     if let Some(path) = ebs::util::cli::argv_value_flag("--cluster-json", "BENCH_cluster_search.json")
     {
-        use ebs::exec::{run_worker, ClusterTransport, ShardSpec, StepExecutor, WorkerFault};
+        use ebs::data::synth::{generate, SynthSpec};
+        use ebs::exec::{run_worker, ClusterTransport, ShardSpec, StepExecutor, WireMode, WorkerFault};
+        let (ds_train, ds_val) = generate(&SynthSpec::tiny(13));
         println!("# native search_det cluster sweep — median of {reps} × {iters} steps");
-        println!("{:<8} {:>8} {:>12} {:>9}", "workers", "chunks", "step ms", "speedup");
+        println!(
+            "{:<8} {:<8} {:>8} {:>12} {:>9} {:>14} {:>14}",
+            "wire", "workers", "chunks", "step ms", "speedup", "phase KiB/ep", "sync KiB/ep"
+        );
         let mut cluster_rows = Vec::new();
-        let mut serial_ms = 0f64;
-        for &workers in &[1usize, 2] {
-            let spec = ShardSpec::new(1, 0); // worker count lives in the transport
-            let mut step_ms: Vec<f64> = Vec::with_capacity(reps);
-            for _ in 0..reps.max(1) {
-                let mut exec = StepExecutor::new(Engine::native(&model)?, spec);
-                let mut ct = ClusterTransport::listen("127.0.0.1:0", &model)?;
-                let addr = ct.local_addr()?.to_string();
-                let mut handles = Vec::new();
-                for _ in 0..workers {
-                    let dial = addr.clone();
-                    handles.push(std::thread::spawn(move || {
-                        run_worker(&dial, 0, WorkerFault::default())
-                    }));
+        for &wire in &[WireMode::Index, WireMode::Payload] {
+            let mut serial_ms = 0f64;
+            for &workers in &[1usize, 2] {
+                let spec = ShardSpec::new(1, 0); // worker count lives in the transport
+                let mut step_ms: Vec<f64> = Vec::with_capacity(reps);
+                let mut wire_ep = 0f64;
+                let mut sync_ep = 0f64;
+                for _ in 0..reps.max(1) {
+                    let mut exec = StepExecutor::new(Engine::native(&model)?, spec);
+                    let mut ct = ClusterTransport::listen("127.0.0.1:0", &model)?;
+                    ct.set_wire_mode(wire);
+                    let addr = ct.local_addr()?.to_string();
+                    let mut handles = Vec::new();
+                    for _ in 0..workers {
+                        let dial = addr.clone();
+                        handles.push(std::thread::spawn(move || {
+                            run_worker(&dial, 0, WorkerFault::default())
+                        }));
+                    }
+                    ct.wait_for_workers(workers, std::time::Duration::from_secs(30))?;
+                    exec.set_transport(Box::new(ct))?;
+                    let mut state = exec.init_state(1)?;
+                    let cost = ebs::baselines::dnas::run_dataset_search_steps(
+                        &mut exec, &mut state, &ds_train, &ds_val, iters, 7,
+                    )?;
+                    step_ms.push(cost.total_seconds * 1e3 / iters as f64);
+                    wire_ep = cost.wire_bytes_per_epoch.unwrap_or(0.0);
+                    sync_ep = cost.sync_bytes_per_epoch.unwrap_or(0.0);
+                    drop(exec); // transport Drop shuts the workers down
+                    for h in handles {
+                        h.join().expect("worker thread panicked")?;
+                    }
                 }
-                ct.wait_for_workers(workers, std::time::Duration::from_secs(30))?;
-                exec.set_transport(Box::new(ct))?;
-                let mut state = exec.init_state(1)?;
-                let cost =
-                    ebs::baselines::dnas::run_sharded_search_steps(&mut exec, &mut state, iters, 7)?;
-                step_ms.push(cost.total_seconds * 1e3 / iters as f64);
-                drop(exec); // transport Drop shuts the workers down
-                for h in handles {
-                    h.join().expect("worker thread panicked")?;
+                step_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let med = step_ms[step_ms.len() / 2];
+                if workers == 1 {
+                    serial_ms = med;
                 }
+                let speedup = serial_ms / med;
+                println!(
+                    "{:<8} {:<8} {:>8} {:>12.2} {:>8.2}x {:>14.1} {:>14.1}",
+                    wire.name(),
+                    workers,
+                    4,
+                    med,
+                    speedup,
+                    wire_ep / 1024.0,
+                    sync_ep / 1024.0
+                );
+                cluster_rows.push(Json::Obj(vec![
+                    ("backend".into(), Json::Str("native".into())),
+                    ("model".into(), Json::Str(model.clone())),
+                    ("batch".into(), Json::Num(batch as f64)),
+                    ("iters".into(), Json::Num(iters as f64)),
+                    ("wire".into(), Json::Str(wire.name().into())),
+                    ("workers".into(), Json::Num(workers as f64)),
+                    ("chunks".into(), Json::Num(4.0)),
+                    ("step_ms".into(), Json::Num(med)),
+                    ("cluster_speedup".into(), Json::Num(speedup)),
+                    ("wire_bytes_per_epoch".into(), Json::Num(wire_ep)),
+                    ("sync_bytes_per_epoch".into(), Json::Num(sync_ep)),
+                ]));
             }
-            step_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let med = step_ms[step_ms.len() / 2];
-            if workers == 1 {
-                serial_ms = med;
-            }
-            let speedup = serial_ms / med;
-            println!("{:<8} {:>8} {:>12.2} {:>8.2}x", workers, 4, med, speedup);
-            cluster_rows.push(Json::Obj(vec![
-                ("backend".into(), Json::Str("native".into())),
-                ("model".into(), Json::Str(model.clone())),
-                ("batch".into(), Json::Num(batch as f64)),
-                ("iters".into(), Json::Num(iters as f64)),
-                ("workers".into(), Json::Num(workers as f64)),
-                ("chunks".into(), Json::Num(4.0)),
-                ("step_ms".into(), Json::Num(med)),
-                ("cluster_speedup".into(), Json::Num(speedup)),
-            ]));
         }
         ebs::util::json::write_bench_json(
             std::path::Path::new(&path),

@@ -125,6 +125,90 @@ pub fn run_sharded_search_steps(
     })
 }
 
+/// Wall-clock + wire accounting for a dataset-driven sharded run
+/// ([`run_dataset_search_steps`]).  Byte figures are `None` when the
+/// executor has no wire (in-process transport).
+#[derive(Debug, Clone, Copy)]
+pub struct DataStepCost {
+    pub total_seconds: f64,
+    /// Phase-data path bytes per training epoch — PhaseStart +
+    /// DatasetLoad frames sent during the timed window, scaled to one
+    /// epoch of the train split.  This is the traffic the wire mode
+    /// moves (O(batch·H·W·C) payload vs O(batch) indices); state sync
+    /// is identical in both modes and reported separately.
+    pub wire_bytes_per_epoch: Option<f64>,
+    /// StateSync bytes per epoch over the same window (mode-invariant;
+    /// logged for the coordinator-summary observability story).
+    pub sync_bytes_per_epoch: Option<f64>,
+}
+
+/// Dataset-driven variant of [`run_sharded_search_steps`]: batches are
+/// drawn from a real [`crate::data::Dataset`] pair through the driver's
+/// own `EpochBatcher` protocol, with the `xt_src`/`xv_src` index
+/// side-channels attached — so a cluster transport in index wire mode
+/// resolves them from worker-resident copies (DESIGN.md §18).  Wire
+/// deltas are measured across the timed window only (warmup and the
+/// one-time dataset ship excluded), then scaled to bytes/epoch.
+pub fn run_dataset_search_steps(
+    exec: &mut crate::exec::StepExecutor,
+    state: &mut StateVec,
+    train: &crate::data::Dataset,
+    valid: &crate::data::Dataset,
+    iters: usize,
+    seed: u64,
+) -> Result<DataStepCost> {
+    use crate::data::{source_io, EpochBatcher};
+    let batch = exec.manifest.batch_size;
+    exec.host_dataset(0, train)?;
+    exec.host_dataset(1, valid)?;
+    let mut tb = EpochBatcher::new(train, batch, seed ^ 0x7214);
+    let mut vb = EpochBatcher::new(valid, batch, seed ^ 0x88AA);
+    let steps_per_epoch = tb.batches_per_epoch().max(1);
+    let step = |exec: &mut crate::exec::StepExecutor,
+                tb: &mut EpochBatcher,
+                vb: &mut EpochBatcher,
+                state: &mut StateVec| {
+        let ti = tb.next_indices();
+        let vi = vb.next_indices();
+        let (xt, yt) = train.gather(&ti);
+        let (xv, yv) = valid.gather(&vi);
+        let io = vec![
+            ("xt".to_string(), xt),
+            ("yt".to_string(), yt),
+            ("xv".to_string(), xv),
+            ("yv".to_string(), yv),
+            ("xt_src".to_string(), source_io(0, &ti)),
+            ("xv_src".to_string(), source_io(1, &vi)),
+            ("lr_w".to_string(), Tensor::scalar_f32(0.01)),
+            ("lr_arch".to_string(), Tensor::scalar_f32(0.02)),
+            ("wd".to_string(), Tensor::scalar_f32(5e-4)),
+            ("lam".to_string(), Tensor::scalar_f32(0.5)),
+            ("target".to_string(), Tensor::scalar_f32(1.0)),
+        ];
+        exec.step("search_det", state, &io).map(|_| ())
+    };
+    step(exec, &mut tb, &mut vb, state)?; // warmup
+    let before = exec.wire_stats();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        step(exec, &mut tb, &mut vb, state)?;
+    }
+    let total_seconds = t0.elapsed().as_secs_f64();
+    let per_epoch = |sent: fn(&crate::exec::wire::WireTotals) -> u64| -> Option<f64> {
+        let (b, a) = (before.as_ref()?, exec.wire_stats()?);
+        Some(sent(&a).saturating_sub(sent(b)) as f64 / iters.max(1) as f64 * steps_per_epoch as f64)
+    };
+    use crate::exec::wire::{OP_DATASET_LOAD, OP_PHASE_START, OP_STATE_SYNC};
+    Ok(DataStepCost {
+        total_seconds,
+        wire_bytes_per_epoch: per_epoch(|t| {
+            t.per_op[OP_PHASE_START as usize].sent_bytes
+                + t.per_op[OP_DATASET_LOAD as usize].sent_bytes
+        }),
+        sync_bytes_per_epoch: per_epoch(|t| t.per_op[OP_STATE_SYNC as usize].sent_bytes),
+    })
+}
+
 /// Analytic memory model (the structural part of Table 3): bytes of
 /// meta-weight copies held by each method for N candidate bitwidths.
 pub fn weight_copy_bytes(engine: &Engine, n_candidates: usize) -> (usize, usize) {

@@ -101,6 +101,11 @@ pub struct ClusterConfig {
     /// Local worker processes for the coordinator to spawn (0 = none;
     /// external workers dial in with `ebs worker --connect ADDR`).
     pub workers: usize,
+    /// Wire mode for phase batches: `"index"` (default — workers hold
+    /// the datasets and phases carry example indices) or `"payload"`
+    /// (batches ship inline; debugging / heterogeneous-data fallback).
+    /// Bit-identical results either way; empty = the transport default.
+    pub wire: String,
 }
 
 /// Serve-layer configuration (`[serve]` section; `ebs serve` flags
@@ -236,6 +241,7 @@ impl RunConfig {
             cluster: ClusterConfig {
                 listen: doc.str_or("cluster.listen", "").to_string(),
                 workers: doc.usize_or("cluster.workers", 0),
+                wire: doc.str_or("cluster.wire", "").to_string(),
             },
             serve: serve_cfg(&doc),
             serve_models: doc.str_array("serve.models").unwrap_or_default(),
@@ -322,11 +328,14 @@ targets_mflops = [0.10, 0.16]
         assert_eq!(cfg.cluster.workers, 0);
         assert!(cfg.pretrain.resume_from.is_none(), "resume is CLI-only");
         assert!(cfg.retrain.resume_from.is_none());
+        assert_eq!(cfg.cluster.wire, "", "wire mode defaults to the transport default");
         let cfg = RunConfig::from_doc(
-            parse("[cluster]\nlisten = \"127.0.0.1:7700\"\nworkers = 2\n").unwrap(),
+            parse("[cluster]\nlisten = \"127.0.0.1:7700\"\nworkers = 2\nwire = \"payload\"\n")
+                .unwrap(),
         );
         assert_eq!(cfg.cluster.listen, "127.0.0.1:7700");
         assert_eq!(cfg.cluster.workers, 2);
+        assert_eq!(cfg.cluster.wire, "payload");
     }
 
     #[test]

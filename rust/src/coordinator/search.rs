@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::data::{Dataset, EpochBatcher};
+use crate::data::{source_io, Dataset, EpochBatcher};
 use crate::exec::StepExecutor;
 use crate::runtime::{metric_f32, StateVec, Tensor};
 use crate::util::json::{parse as json_parse, Json};
@@ -182,6 +182,11 @@ pub fn run_search(
 
     let mut train_batches = EpochBatcher::new(train, exec.manifest.batch_size, cfg.seed ^ 0x7214);
     let mut val_batches = EpochBatcher::new(valid, exec.manifest.batch_size, cfg.seed ^ 0x88AA);
+    // Register both splits with the transport (no-op off-cluster) so
+    // index-mode workers resolve batches locally; ids pair with the
+    // `xt_src`/`xv_src` side-channels attached below.
+    exec.host_dataset(0, train)?;
+    exec.host_dataset(1, valid)?;
     let lr_sched = CosineLr::new(cfg.lr_w, cfg.steps);
     let tau_sched = LinearSchedule::new(cfg.tau0, cfg.tau1, cfg.steps);
     let mut rng = Rng::new(cfg.seed ^ 0x6B31);
@@ -241,13 +246,20 @@ pub fn run_search(
     }
 
     for step in start_step..cfg.steps {
-        let (xt, yt) = train_batches.next_batch();
-        let (xv, yv) = val_batches.next_batch();
+        // Draw by index, then materialize: identical tensors to
+        // `next_batch()` (which is exactly this), but the indices also
+        // feed the `*_src` side-channels for index-mode transports.
+        let ti = train_batches.next_indices();
+        let vi = val_batches.next_indices();
+        let (xt, yt) = train.gather(&ti);
+        let (xv, yv) = valid.gather(&vi);
         let mut io = vec![
             ("xt".to_string(), xt),
             ("yt".to_string(), yt),
             ("xv".to_string(), xv),
             ("yv".to_string(), yv),
+            ("xt_src".to_string(), source_io(0, &ti)),
+            ("xv_src".to_string(), source_io(1, &vi)),
             ("lr_w".to_string(), Tensor::scalar_f32(lr_sched.at(step))),
             ("lr_arch".to_string(), Tensor::scalar_f32(cfg.lr_arch)),
             ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
 
-use crate::data::{Dataset, EpochBatcher};
+use crate::data::{source_io, Dataset, EpochBatcher};
 use crate::exec::StepExecutor;
 use crate::runtime::{metric_f32, StateVec, Tensor};
 use crate::util::json::{parse as json_parse, Json};
@@ -143,6 +143,9 @@ pub fn run_fp_train(
 ) -> Result<TrainResult> {
     let mut batches = EpochBatcher::new(train, exec.manifest.batch_size, cfg.seed ^ 0xF9);
     let lr = CosineLr::new(cfg.lr, cfg.steps);
+    // Dataset id 2 = fp-pretrain train split (0/1 are the search
+    // splits, 3 is retrain); pairs with the `x_src` side-channel.
+    exec.host_dataset(2, train)?;
     let mut best = f64::NEG_INFINITY;
     let mut last_loss = f64::NAN;
     let mut start_step = 0usize;
@@ -151,10 +154,12 @@ pub fn run_fp_train(
         logger.event("fp_resume", &[("step", start_step as f64)]);
     }
     for step in start_step..cfg.steps {
-        let (x, y) = batches.next_batch();
+        let idx = batches.next_indices();
+        let (x, y) = train.gather(&idx);
         let io = vec![
             ("x".to_string(), x),
             ("y".to_string(), y),
+            ("x_src".to_string(), source_io(2, &idx)),
             ("lr".to_string(), Tensor::scalar_f32(lr.at(step))),
             ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),
         ];
@@ -204,6 +209,8 @@ pub fn run_retrain(
     let classes = exec.manifest.num_classes;
     let mut batches = EpochBatcher::new(train, b, cfg.seed ^ 0x3C);
     let lr = CosineLr::new(cfg.lr, cfg.steps);
+    // Dataset id 3 = retrain train split; pairs with `x_src` below.
+    exec.host_dataset(3, train)?;
     let zero_teacher = Tensor::from_f32(&[b, classes], vec![0.0; b * classes]);
     let mut best = f64::NEG_INFINITY;
     let mut last_loss = f64::NAN;
@@ -214,7 +221,10 @@ pub fn run_retrain(
     }
 
     for step in start_step..cfg.steps {
-        let (x, y) = batches.next_batch();
+        let idx = batches.next_indices();
+        let (x, y) = train.gather(&idx);
+        // Teacher logits stay inline on the wire: they are fresh model
+        // outputs, not dataset rows, so there is nothing to host.
         let (t_logits, mu) = match teacher.as_deref_mut() {
             Some(fp_state) if cfg.distill_mu > 0.0 => {
                 (teacher_logits(exec, fp_state, &x)?, cfg.distill_mu)
@@ -226,6 +236,7 @@ pub fn run_retrain(
             ("sel_x".to_string(), sel_x.clone()),
             ("x".to_string(), x),
             ("y".to_string(), y),
+            ("x_src".to_string(), source_io(3, &idx)),
             ("teacher".to_string(), t_logits),
             ("lr".to_string(), Tensor::scalar_f32(lr.at(step))),
             ("wd".to_string(), Tensor::scalar_f32(cfg.weight_decay)),

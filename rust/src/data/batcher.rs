@@ -56,6 +56,20 @@ pub struct EpochBatcher<'a> {
     pub epoch: usize,
 }
 
+/// Build the `{name}_src` io side-channel for a batch drawn by index:
+/// `[dataset_id, idx0, idx1, …]` as f32 (exact for integers ≤ 2²⁴ —
+/// far beyond any dataset here).  Drivers attach it next to the
+/// materialized batch tensors whenever the dataset was registered with
+/// the executor via `host_dataset`, so an index-mode cluster transport
+/// can ship O(batch) indices instead of pixels while every other
+/// backend ignores the extra entry (DESIGN.md §18).
+pub fn source_io(dataset_id: u32, idx: &[usize]) -> Tensor {
+    let mut v = Vec::with_capacity(idx.len() + 1);
+    v.push(dataset_id as f32);
+    v.extend(idx.iter().map(|&i| i as f32));
+    Tensor::from_f32(&[idx.len() + 1], v)
+}
+
 impl<'a> EpochBatcher<'a> {
     pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> EpochBatcher<'a> {
         assert!(batch <= ds.len(), "batch {} > dataset {}", batch, ds.len());
@@ -280,6 +294,15 @@ mod tests {
         let mut cur = b.cursor();
         cur.order[0] = cur.order[1];
         assert!(b.restore(&cur).is_err(), "non-permutation order must be rejected");
+    }
+
+    #[test]
+    fn source_io_encodes_id_then_indices_exactly() {
+        let t = source_io(3, &[0, 7, 1 << 24]);
+        assert_eq!(t.shape(), &[4]);
+        let v = t.as_f32().unwrap();
+        assert_eq!(v, &[3.0, 0.0, 7.0, 16_777_216.0]);
+        assert_eq!(v[3] as u32, 1 << 24); // round-trips exactly
     }
 
     #[test]

@@ -10,5 +10,5 @@
 pub mod batcher;
 pub mod synth;
 
-pub use batcher::{BatcherCursor, EpochBatcher};
+pub use batcher::{source_io, BatcherCursor, EpochBatcher};
 pub use synth::{Dataset, SynthSpec};

@@ -141,6 +141,19 @@ impl Dataset {
         (self.subset(&ia), self.subset(&ib))
     }
 
+    /// Content fingerprint (sha256 over geometry + raw bytes) — the
+    /// identity workers and coordinator compare so index-only phases
+    /// provably batch over identical bytes (DESIGN.md §18).
+    pub fn fingerprint(&self) -> [u8; 32] {
+        crate::exec::wire::dataset_fingerprint(
+            self.hw as u32,
+            self.channels as u32,
+            self.classes as u32,
+            &self.images,
+            &self.labels,
+        )
+    }
+
     fn subset(&self, idx: &[usize]) -> Dataset {
         let sz = self.sample_size();
         let mut images = Vec::with_capacity(idx.len() * sz);
@@ -296,6 +309,18 @@ mod tests {
             counts[l as usize] += 1;
         }
         assert!(counts.iter().all(|&c| c > 0), "stratified: {counts:?}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_and_geometry() {
+        let (a, _) = generate(&SynthSpec::tiny(5));
+        let (b, _) = generate(&SynthSpec::tiny(5));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "deterministic");
+        let (c, _) = generate(&SynthSpec::tiny(6));
+        assert_ne!(a.fingerprint(), c.fingerprint(), "content-sensitive");
+        let mut d = a.clone();
+        d.labels[0] ^= 1;
+        assert_ne!(a.fingerprint(), d.fingerprint(), "label-sensitive");
     }
 
     #[test]

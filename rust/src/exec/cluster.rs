@@ -3,20 +3,33 @@
 //! [`ClusterTransport`] is the [`ChunkTransport`] that runs replicas in
 //! *worker processes* instead of pool threads.  The coordinator owns
 //! the control plane: it listens on a TCP address, hands each dial-in a
-//! [`wire`] handshake, keeps every worker's state view in sync with
-//! delta [`Msg::StateSync`] frames (sha256-verified), and fans each
-//! phase out as one [`Msg::PhaseStart`] per live worker.  The data
-//! plane is the same canonical chunk algebra as the in-process pool:
-//! workers stream per-sync-point moment partials through a
-//! [`MomentHub`] living here (one handler thread per dispatched
-//! worker), and per-chunk scalar/grad partials come home in
-//! [`Msg::PhaseDone`] for the single-threaded chunk-order combine.
+//! [`wire`] handshake (and, in index mode, the hosted datasets), and
+//! drives each phase over a wire-lean data path:
 //!
-//! Determinism invariant: chunk boundaries depend only on
-//! `(batch, chunks)` and every cross-example reduction is combined
-//! left-to-right in global chunk order on one thread — so worker count
-//! is a pure wall-clock knob and a same-seed search is bit-identical
-//! from 1 thread to N processes, through worker deaths and rejoins.
+//! * **Worker-resident datasets** — [`ChunkTransport::host_dataset`]
+//!   ships every dataset to every worker exactly once per connection
+//!   (fingerprint-verified; rejoining workers that still hold the bytes
+//!   re-bind by fingerprint instead of re-downloading).  Phases in
+//!   [`WireMode::Index`] then carry only example *indices* — O(batch)
+//!   u32s instead of O(batch·H·W·C) pixels.
+//! * **Pipelined, digest-acked state sync** — each phase dispatch fuses
+//!   the bitwise state-view delta and the [`Msg::PhaseStart`] into one
+//!   socket write; the worker applies the delta, acks the sha256 of its
+//!   full view, and the coordinator's handler gates the phase result on
+//!   that ack — a phase can never complete against a stale or skewed
+//!   view, yet the sync never costs a dedicated round trip.
+//! * **Throughput-aware chunk runs** — per-worker EWMA chunk latency
+//!   sizes each worker's *contiguous run of whole canonical chunks*.
+//!   Chunk boundaries still depend only on `(batch, chunks)` and the
+//!   combine still walks global chunk order on one thread, so the
+//!   scheduler redistributes wall-clock, never numerics.
+//! * **Wire observability** — every connection counts frames/bytes per
+//!   direction and frame type ([`wire::WireStats`]); the transport
+//!   aggregates live + retired connections for benches and logs.
+//!
+//! Determinism invariant: worker count, wire mode, and scheduling skew
+//! are pure wall-clock knobs — a same-seed search is bit-identical from
+//! 1 thread to N processes, through worker deaths and rejoins.
 //!
 //! Failure model: a worker that dies (or feeds us garbage) poisons the
 //! phase; survivors blocked in a rendezvous get [`Msg::Abort`] and
@@ -24,19 +37,22 @@
 //! worker's chunks are requeued by simply re-planning over the
 //! survivors, and the phase re-runs — state was never touched, so the
 //! retry is bit-identical.  New workers may dial in between phases
-//! (elastic rejoin); they are brought current with a full state sync.
+//! (elastic rejoin); they are brought current with a full state sync
+//! and the hosted datasets.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt;
 use std::io::Write as _;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::data::Dataset;
 use crate::native::graph::{Coeffs, ExecCtx, Grads, NativeNet};
 use crate::native::replica::{replica_phase, PhaseArgs, Replica};
 use crate::native::{lookup, synthesize_manifest};
@@ -44,7 +60,7 @@ use crate::runtime::StateVec;
 
 use super::sync::MomentExchange;
 use super::transport::{ChunkTransport, PhaseOutput, PhaseSpec};
-use super::wire::{self, Msg};
+use super::wire::{self, Msg, PhaseData, WireStats, WireTotals};
 use super::{accumulate_grads, zero_grads, MomentHub, ShardPlan, ShardSpec};
 
 /// How long a dial-in gets to complete the Hello/Welcome handshake.
@@ -57,6 +73,39 @@ const ACCEPT_POLL: Duration = Duration::from_millis(25);
 /// Hard cap on phase re-dispatch attempts (each failed attempt drops at
 /// least one worker; this is a backstop against pathological churn).
 const MAX_ATTEMPTS: usize = 64;
+/// Smoothing of the per-worker chunk-latency estimate: high enough to
+/// track a machine that heats up or frees up within a few phases, low
+/// enough that one noisy phase doesn't thrash the chunk assignment.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// How phase batches travel to workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Example rows + labels ride every `PhaseStart` (v1 behavior).
+    Payload,
+    /// Datasets are shipped once and live worker-resident; phases carry
+    /// only example indices.  The default — payload mode remains for
+    /// A/B verification and ad-hoc tensors.
+    #[default]
+    Index,
+}
+
+impl WireMode {
+    pub fn parse(s: &str) -> Result<WireMode> {
+        Ok(match s {
+            "payload" => WireMode::Payload,
+            "index" => WireMode::Index,
+            other => bail!("unknown wire mode '{other}' (expected payload|index)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireMode::Payload => "payload",
+            WireMode::Index => "index",
+        }
+    }
+}
 
 /// State leaves workers need to execute a phase: parameters, BN
 /// statistics, and branch strengths.  Optimizer and arch-update state
@@ -97,12 +146,95 @@ fn view_delta(
         .collect()
 }
 
+/// Split the canonical chunk grid into one contiguous run of whole
+/// chunks per worker, sized ∝ the worker's measured speed (1/EWMA chunk
+/// latency), largest-remainder rounded, every worker ≥ 1 chunk.  The
+/// runs tile `0..chunks` in worker order — the combine still walks
+/// global chunk order, so skewing the assignment moves wall-clock,
+/// never numerics.
+pub(crate) fn schedule_runs(speed: &[f64], chunks: usize) -> Vec<Range<usize>> {
+    let n = speed.len();
+    assert!(n >= 1 && chunks >= n, "schedule_runs needs 1 <= workers <= chunks");
+    let sane: Vec<f64> =
+        speed.iter().map(|&s| if s.is_finite() && s > 0.0 { s } else { 1.0 }).collect();
+    let total: f64 = sane.iter().sum();
+    let want: Vec<f64> = sane.iter().map(|s| chunks as f64 * s / total).collect();
+    let mut take: Vec<usize> = want.iter().map(|w| (w.floor() as usize).min(chunks)).collect();
+    let spare = chunks.saturating_sub(take.iter().sum());
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        let (ra, rb) = (want[a] - take[a] as f64, want[b] - take[b] as f64);
+        rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for i in 0..spare {
+        take[order[i % n]] += 1;
+    }
+    // Whole canonical chunks only, and every active worker owns at
+    // least one — a worker 1000× slower than its peers still gets a
+    // chunk (the scheduler shrinks its share, membership decides more).
+    while let Some(zi) = take.iter().position(|&t| t == 0) {
+        let donor = (0..n).max_by_key(|&i| take[i]).expect("n >= 1");
+        take[zi] += 1;
+        take[donor] -= 1;
+    }
+    let mut runs = Vec::with_capacity(n);
+    let mut at = 0;
+    for t in take {
+        runs.push(at..at + t);
+        at += t;
+    }
+    debug_assert_eq!(at, chunks, "runs must tile the canonical chunk grid");
+    runs
+}
+
+/// Per-worker speeds for [`schedule_runs`]: 1/EWMA for measured
+/// workers; a worker with no history yet gets the mean measured speed
+/// (equal share when nobody has history).
+fn worker_speeds(workers: &[WorkerConn]) -> Vec<f64> {
+    let speeds: Vec<Option<f64>> = workers
+        .iter()
+        .map(|w| w.ewma_ms.and_then(|m| (m.is_finite() && m > 0.0).then_some(1.0 / m)))
+        .collect();
+    let known: Vec<f64> = speeds.iter().flatten().copied().collect();
+    let fallback =
+        if known.is_empty() { 1.0 } else { known.iter().sum::<f64>() / known.len() as f64 };
+    speeds.into_iter().map(|s| s.unwrap_or(fallback)).collect()
+}
+
+/// One dataset the coordinator hosts for its workers (kept owned so
+/// elastic rejoins can be re-shipped without the driver's help).
+struct Hosted {
+    ds: Dataset,
+    fp: [u8; 32],
+}
+
+fn dataset_msg(id: u32, h: &Hosted, bind: bool) -> Msg {
+    Msg::DatasetLoad(wire::DatasetLoad {
+        id,
+        hw: h.ds.hw as u32,
+        channels: h.ds.channels as u32,
+        classes: h.ds.classes as u32,
+        fingerprint: h.fp,
+        images: if bind { Vec::new() } else { h.ds.images.clone() },
+        labels: if bind { Vec::new() } else { h.ds.labels.clone() },
+    })
+}
+
 struct WorkerConn {
     stream: TcpStream,
     peer: String,
     /// Whether this worker holds the last-broadcast state view (false
     /// until its first sync → it gets the full view, not a delta).
     synced: bool,
+    /// Dataset fingerprints this worker holds resident (from its Hello
+    /// plus every load we shipped it).
+    holds: HashSet<[u8; 32]>,
+    /// EWMA of this worker's per-chunk phase latency (ms); None until
+    /// its first completed phase.
+    ewma_ms: Option<f64>,
+    /// Byte/frame counters, shared with this connection's per-phase
+    /// handler thread.
+    stats: Arc<WireStats>,
 }
 
 /// Outcome of one handler thread for one dispatched worker.
@@ -118,11 +250,20 @@ enum Fail {
 pub struct ClusterTransport {
     listener: TcpListener,
     model: String,
+    mode: WireMode,
     workers: Vec<WorkerConn>,
+    /// Datasets shipped to workers, kept for elastic rejoins.
+    hosted: BTreeMap<u32, Hosted>,
     /// Last-broadcast state view (what every synced worker holds).
     view: HashMap<String, Vec<f32>>,
+    /// Per-leaf digest cache: the full-view digest is a fold over these
+    /// ([`wire::digest_of_leaf_digests`]), so each phase rehashes only
+    /// the leaves its delta touched.
+    leaf_digests: HashMap<String, [u8; 32]>,
     /// BN running-stat commit from the latest train-mode phase.
     bn_pending: Vec<(String, Vec<f32>)>,
+    /// Wire totals of connections that have been dropped.
+    retired: WireTotals,
     children: Vec<Child>,
 }
 
@@ -136,9 +277,13 @@ impl ClusterTransport {
         Ok(ClusterTransport {
             listener,
             model: model.to_string(),
+            mode: WireMode::default(),
             workers: Vec::new(),
+            hosted: BTreeMap::new(),
             view: HashMap::new(),
+            leaf_digests: HashMap::new(),
             bn_pending: Vec::new(),
+            retired: WireTotals::default(),
             children: Vec::new(),
         })
     }
@@ -149,6 +294,31 @@ impl ClusterTransport {
 
     pub fn live_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn wire_mode(&self) -> WireMode {
+        self.mode
+    }
+
+    /// Switch the phase data path.  Flipping to index mode ships every
+    /// hosted dataset to the already-connected workers, so the order of
+    /// `set_wire_mode`/`host_dataset`/dial-ins doesn't matter.
+    pub fn set_wire_mode(&mut self, mode: WireMode) {
+        let flip = mode == WireMode::Index && self.mode != WireMode::Index;
+        self.mode = mode;
+        if flip {
+            let ids: Vec<u32> = self.hosted.keys().copied().collect();
+            self.ship_hosted(&ids);
+        }
+    }
+
+    /// Seed the throughput scheduler's per-worker chunk-latency
+    /// estimates (ms), in current worker order — a test/bench hook to
+    /// force a known chunk-run skew without waiting for real timings.
+    pub fn preset_ewma(&mut self, ms: &[f64]) {
+        for (w, &m) in self.workers.iter_mut().zip(ms) {
+            w.ewma_ms = Some(m);
+        }
     }
 
     /// Spawn `n` worker processes of this same binary, dialing back in.
@@ -202,21 +372,44 @@ impl ClusterTransport {
         }
     }
 
+    /// Hello/Welcome, then (index mode) make the dial-in
+    /// dataset-resident: full transfer for fingerprints it doesn't
+    /// hold, a cheap bind frame for ones it kept across a rejoin.
     fn handshake(&self, mut stream: TcpStream, peer: String) -> Option<WorkerConn> {
-        let setup = || -> Result<()> {
+        let stats = Arc::new(WireStats::new());
+        let mut holds: HashSet<[u8; 32]> = HashSet::new();
+        let mut setup = |stream: &mut TcpStream| -> Result<()> {
             stream.set_nonblocking(false)?;
             stream.set_nodelay(true)?;
             stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
-            match wire::read_msg(&mut stream)? {
-                Some(Msg::Hello) => {}
+            match wire::read_msg_counted(stream, &stats)? {
+                Some(Msg::Hello { fingerprints }) => holds.extend(fingerprints),
                 _ => bail!("expected Hello"),
             }
-            wire::write_msg(&mut stream, &Msg::Welcome { model: self.model.clone() })?;
+            wire::write_msg_counted(
+                stream,
+                &Msg::Welcome { model: self.model.clone() },
+                &stats,
+            )?;
+            if self.mode == WireMode::Index {
+                for (&id, h) in &self.hosted {
+                    let bind = holds.contains(&h.fp);
+                    wire::write_msg_counted(stream, &dataset_msg(id, h, bind), &stats)?;
+                    holds.insert(h.fp);
+                }
+            }
             stream.set_read_timeout(None)?;
             Ok(())
         };
-        match setup() {
-            Ok(()) => Some(WorkerConn { stream, peer, synced: false }),
+        match setup(&mut stream) {
+            Ok(()) => Some(WorkerConn {
+                stream,
+                peer,
+                synced: false,
+                holds,
+                ewma_ms: None,
+                stats,
+            }),
             Err(e) => {
                 eprintln!("[cluster] handshake with {peer} failed: {e:#}");
                 None
@@ -224,52 +417,61 @@ impl ClusterTransport {
         }
     }
 
-    /// Bring every live worker's state view current: synced workers get
-    /// the bitwise delta against the last broadcast, fresh dial-ins get
-    /// the full view.  Both carry the digest of the *full* view, which
-    /// workers verify after applying.  Workers whose socket fails here
-    /// are dropped.
-    fn sync_state(&mut self, state: &StateVec) {
-        let leaves: Vec<(&str, &[f32])> = view_leaves(state).collect();
-        let digest = wire::view_digest(leaves.iter().copied());
-        let delta = view_delta(&self.view, &leaves);
-        let delta_frame = wire::encode(&Msg::StateSync { leaves: delta.clone(), digest });
-        // Full frame built lazily — steady state has no fresh workers.
-        let mut full_frame: Option<Vec<u8>> = None;
+    /// Ship hosted datasets to every live worker (bind-by-fingerprint
+    /// where the worker already holds the bytes).  Workers whose socket
+    /// fails are dropped.
+    fn ship_hosted(&mut self, ids: &[u32]) {
+        let hosted = &self.hosted;
+        let retired = &mut self.retired;
         self.workers.retain_mut(|w| {
-            let frame: &[u8] = if w.synced {
-                &delta_frame
-            } else {
-                full_frame.get_or_insert_with(|| {
-                    let all =
-                        leaves.iter().map(|(p, v)| (p.to_string(), v.to_vec())).collect();
-                    wire::encode(&Msg::StateSync { leaves: all, digest })
-                })
-            };
-            match w.stream.write_all(frame).and_then(|_| w.stream.flush()) {
-                Ok(()) => {
-                    w.synced = true;
-                    true
+            for &id in ids {
+                let h = &hosted[&id];
+                let bind = w.holds.contains(&h.fp);
+                if let Err(e) =
+                    wire::write_msg_counted(&mut w.stream, &dataset_msg(id, h, bind), &w.stats)
+                {
+                    eprintln!("[cluster] dropping worker {} (dataset load: {e:#})", w.peer);
+                    retired.absorb(&w.stats.totals());
+                    return false;
                 }
-                Err(e) => {
-                    eprintln!("[cluster] dropping worker {} (state sync: {e})", w.peer);
-                    false
-                }
+                w.holds.insert(h.fp);
             }
+            true
+        });
+    }
+
+    /// Build this phase's state-sync frames: the bitwise delta against
+    /// the last broadcast (what synced workers get) and, lazily, the
+    /// full view (what fresh dial-ins get).  Both carry the digest of
+    /// the full view, folded incrementally from cached per-leaf digests
+    /// — O(changed bytes), not O(view) per phase.
+    fn sync_frames(&mut self, state: &StateVec) -> (Vec<u8>, Option<Vec<u8>>, [u8; 32]) {
+        let leaves: Vec<(&str, &[f32])> = view_leaves(state).collect();
+        let delta = view_delta(&self.view, &leaves);
+        for (p, v) in &delta {
+            self.leaf_digests.insert(p.clone(), wire::leaf_digest(p, v));
+        }
+        let digest =
+            wire::digest_of_leaf_digests(leaves.iter().map(|(p, _)| self.leaf_digests[*p]));
+        let delta_frame = wire::encode(&Msg::StateSync { leaves: delta.clone(), digest });
+        let full_frame = self.workers.iter().any(|w| !w.synced).then(|| {
+            let all = leaves.iter().map(|(p, v)| (p.to_string(), v.to_vec())).collect();
+            wire::encode(&Msg::StateSync { leaves: all, digest })
         });
         for (p, v) in delta {
             self.view.insert(p, v);
         }
+        (delta_frame, full_frame, digest)
     }
 
     /// Combine one successful attempt: per-chunk scalars and grads from
-    /// every worker, replicas in shard order × local chunks in order —
-    /// i.e. global chunk order, same as the in-process pool.
+    /// every run, runs in order × local chunks in order — i.e. global
+    /// chunk order, same as the in-process pool.
     fn combine_results(
         &mut self,
         net: &NativeNet,
         spec: &PhaseSpec<'_>,
-        plan: &ShardPlan,
+        runs: &[Range<usize>],
         done: Vec<wire::PhaseDone>,
         grads: &mut Grads,
     ) -> Result<PhaseOutput> {
@@ -281,7 +483,7 @@ impl ClusterTransport {
         self.bn_pending.clear();
         let mut out = PhaseOutput::default();
         for (r, pd) in done.into_iter().enumerate() {
-            let k = plan.shard_chunks(r).len();
+            let k = runs[r].len();
             ensure!(
                 pd.ce.len() == k && pd.correct.len() == k,
                 "worker {r} returned {} chunk scalars, expected {k}",
@@ -349,6 +551,13 @@ impl ChunkTransport for ClusterTransport {
     ) -> Result<PhaseOutput> {
         let batch = spec.y.len();
         ensure!(batch > 0, "cannot run a phase over an empty batch");
+        if let Some(src) = &spec.source {
+            ensure!(
+                src.idx.len() == batch,
+                "batch source carries {} indices for a {batch}-example batch",
+                src.idx.len()
+            );
+        }
         let img = spec.x.len() / batch;
         let classes = spec.classes;
         for attempt in 0.. {
@@ -363,101 +572,142 @@ impl ChunkTransport for ClusterTransport {
                 self.wait_for_workers(1, REJOIN_GRACE)
                     .context("cluster has no live workers")?;
             }
-            self.sync_state(state);
-            if self.workers.is_empty() {
-                continue;
-            }
-            // Worker count is a wall-clock knob only: the plan keeps
-            // the canonical chunk grid and deals whole chunks out to
-            // however many workers are alive right now.
+            // The canonical chunk grid depends only on (batch, chunks);
+            // membership and speed decide only which worker runs which
+            // contiguous slice of it.
             let plan = ShardPlan::new(
                 batch,
                 ShardSpec { shards: self.workers.len(), chunks: spec.chunks.max(1) },
             );
+            let active = self.workers.len().min(plan.chunks);
+            let runs = schedule_runs(&worker_speeds(&self.workers[..active]), plan.chunks);
+            let (delta_frame, full_frame, digest) = self.sync_frames(state);
+            let indexed = self.mode == WireMode::Index
+                && spec.source.is_some_and(|s| self.hosted.contains_key(&s.dataset));
             let coeffs_wire = spec.coeffs.map(|c| (c.cw.clone(), c.cx.clone()));
-            let mut dispatch_ok = vec![true; plan.shards];
-            for r in 0..plan.shards {
-                let ex = plan.shard_examples(r);
-                let msg = Msg::PhaseStart(wire::PhaseStart {
-                    train: spec.train,
-                    backward: spec.backward,
-                    want_bn: spec.train && r == 0,
-                    classes: classes as u32,
-                    global_batch: batch as u32,
-                    chunk_size: plan.chunk_size as u32,
-                    chunk0: plan.shard_chunks(r).start as u32,
-                    total_chunks: plan.chunks as u32,
-                    shards: plan.shards as u32,
-                    mu: spec.teacher.map_or(0.0, |(_, mu)| mu),
-                    coeffs: coeffs_wire.clone(),
-                    x: spec.x[ex.start * img..ex.end * img].to_vec(),
-                    y: spec.y[ex.clone()].to_vec(),
-                    teacher: spec
-                        .teacher
-                        .map(|(t, _)| t[ex.start * classes..ex.end * classes].to_vec()),
-                });
-                if let Err(e) = wire::write_msg(&mut self.workers[r].stream, &msg) {
-                    eprintln!(
-                        "[cluster] phase dispatch to {} failed: {e:#}",
-                        self.workers[r].peer
-                    );
-                    dispatch_ok[r] = false;
-                }
-            }
-            let hub = MomentHub::new(plan.shards, plan.chunks);
-            if dispatch_ok.iter().any(|ok| !ok) {
-                // A shard is missing from the rendezvous — fail every
-                // sync point fast instead of deadlocking the others.
-                hub.poison();
-            }
-            let dispatched = &mut self.workers[..plan.shards];
-            let mut outcome: Vec<Result<wire::PhaseDone, Fail>> =
-                Vec::with_capacity(plan.shards);
+            let phase_frames: Vec<Vec<u8>> = runs
+                .iter()
+                .enumerate()
+                .map(|(r, run)| {
+                    let ex = plan.chunk_examples(run.start).start
+                        ..plan.chunk_examples(run.end - 1).end;
+                    let data = if indexed {
+                        let src = spec.source.expect("indexed implies a batch source");
+                        PhaseData::Indexed {
+                            dataset: src.dataset,
+                            idx: src.idx[ex.clone()].to_vec(),
+                        }
+                    } else {
+                        PhaseData::Inline {
+                            x: spec.x[ex.start * img..ex.end * img].to_vec(),
+                            y: spec.y[ex.clone()].to_vec(),
+                        }
+                    };
+                    wire::encode(&Msg::PhaseStart(wire::PhaseStart {
+                        train: spec.train,
+                        backward: spec.backward,
+                        want_bn: spec.train && r == 0,
+                        classes: classes as u32,
+                        global_batch: batch as u32,
+                        chunk_size: plan.chunk_size as u32,
+                        chunk0: run.start as u32,
+                        total_chunks: plan.chunks as u32,
+                        shards: runs.len() as u32,
+                        mu: spec.teacher.map_or(0.0, |(_, mu)| mu),
+                        coeffs: coeffs_wire.clone(),
+                        data,
+                        teacher: spec
+                            .teacher
+                            .map(|(t, _)| t[ex.start * classes..ex.end * classes].to_vec()),
+                    }))
+                })
+                .collect();
+            let hub = MomentHub::new(active, plan.chunks);
+            // One sender/handler thread per live worker: actives get
+            // [StateSync][PhaseStart] fused into one write, idles (more
+            // workers than chunks) get the sync alone so their view
+            // never goes stale.  Every thread gates on the SyncAck.
+            let mut outcome: Vec<Result<Option<(wire::PhaseDone, f64)>, Fail>> =
+                Vec::with_capacity(self.workers.len());
             std::thread::scope(|s| {
                 let hub = &hub;
-                let mut handles = Vec::with_capacity(plan.shards);
-                for (r, w) in dispatched.iter_mut().enumerate() {
-                    if !dispatch_ok[r] {
-                        handles.push(None);
-                        continue;
-                    }
-                    let owned = plan.shard_chunks(r);
-                    handles.push(Some(s.spawn(move || handle_worker(&mut w.stream, hub, owned))));
+                let runs = &runs;
+                let phase_frames = &phase_frames;
+                let mut handles = Vec::with_capacity(self.workers.len());
+                for (r, w) in self.workers.iter_mut().enumerate() {
+                    let sync: &[u8] = if w.synced {
+                        &delta_frame
+                    } else {
+                        full_frame.as_deref().expect("full frame built for unsynced worker")
+                    };
+                    let stats = w.stats.clone();
+                    let stream = &mut w.stream;
+                    handles.push(s.spawn(move || {
+                        let phase =
+                            (r < runs.len()).then(|| (&phase_frames[r][..], runs[r].clone()));
+                        drive_worker(stream, &stats, sync, digest, phase, hub)
+                    }));
                 }
                 for h in handles {
-                    outcome.push(match h {
-                        None => Err(Fail::Dead("phase dispatch failed".into())),
-                        Some(h) => h
-                            .join()
-                            .unwrap_or_else(|_| Err(Fail::Dead("handler thread panicked".into()))),
-                    });
+                    outcome.push(h.join().unwrap_or_else(|_| {
+                        Err(Fail::Dead("handler thread panicked".into()))
+                    }));
                 }
             });
-            let mut done = Vec::with_capacity(plan.shards);
-            let mut dead = Vec::new();
-            let mut aborted = Vec::new();
+            let mut done: Vec<Option<(wire::PhaseDone, f64)>> =
+                (0..active).map(|_| None).collect();
+            let mut dead: Vec<usize> = Vec::new();
+            let mut aborted: Vec<usize> = Vec::new();
             for (r, res) in outcome.into_iter().enumerate() {
                 match res {
-                    Ok(pd) => done.push(pd),
+                    Ok(got) => {
+                        self.workers[r].synced = true;
+                        if r < active {
+                            done[r] = got;
+                        }
+                    }
                     Err(Fail::Dead(why)) => {
                         eprintln!("[cluster] worker {} lost: {why}", self.workers[r].peer);
                         dead.push(r);
                     }
-                    Err(Fail::Aborted) => aborted.push(r),
+                    Err(Fail::Aborted) => {
+                        self.workers[r].synced = true;
+                        aborted.push(r);
+                    }
                 }
             }
-            if dead.is_empty() && aborted.is_empty() {
-                return self.combine_results(net, spec, &plan, done, grads);
+            // A dead *idle* worker never held chunks — the attempt
+            // stands; only an active failure discards it.
+            if aborted.is_empty() && dead.iter().all(|&r| r >= active) {
+                for (r, run) in runs.iter().enumerate() {
+                    if let Some((_, ms)) = &done[r] {
+                        let sample = ms / run.len() as f64;
+                        let w = &mut self.workers[r];
+                        w.ewma_ms = Some(match w.ewma_ms {
+                            Some(old) => EWMA_ALPHA * sample + (1.0 - EWMA_ALPHA) * old,
+                            None => sample,
+                        });
+                    }
+                }
+                dead.sort_unstable();
+                for &r in dead.iter().rev() {
+                    let w = self.workers.remove(r);
+                    eprintln!("[cluster] dropping idle worker {}", w.peer);
+                    self.retired.absorb(&w.stats.totals());
+                }
+                let done: Vec<wire::PhaseDone> = done
+                    .into_iter()
+                    .map(|d| d.expect("every active worker reported a result").0)
+                    .collect();
+                return self.combine_results(net, spec, &runs, done, grads);
             }
             // Failed attempt: every partial is discarded.  Survivors
             // blocked in the poisoned rendezvous get an abort/ack
             // drain; anything that won't drain cleanly joins the dead.
             for &r in &aborted {
-                if !drain_abort(&mut self.workers[r].stream) {
-                    eprintln!(
-                        "[cluster] worker {} failed the abort drain",
-                        self.workers[r].peer
-                    );
+                let w = &mut self.workers[r];
+                if !drain_abort(&mut w.stream, &w.stats) {
+                    eprintln!("[cluster] worker {} failed the abort drain", w.peer);
                     dead.push(r);
                 }
             }
@@ -466,6 +716,7 @@ impl ChunkTransport for ClusterTransport {
             for &r in dead.iter().rev() {
                 let w = self.workers.remove(r);
                 eprintln!("[cluster] requeueing chunks of dead worker {}", w.peer);
+                self.retired.absorb(&w.stats.totals());
             }
             // Loop: re-plan over the survivors.  State was never
             // touched, chunk boundaries don't move → bit-identical.
@@ -490,12 +741,34 @@ impl ChunkTransport for ClusterTransport {
         }
         Ok(())
     }
+
+    fn host_dataset(&mut self, id: u32, ds: &Dataset) -> Result<()> {
+        ensure!(!ds.is_empty(), "cannot host an empty dataset under id {id}");
+        let fp = ds.fingerprint();
+        self.hosted.insert(id, Hosted { ds: ds.clone(), fp });
+        if self.mode == WireMode::Index {
+            self.ship_hosted(&[id]);
+        }
+        Ok(())
+    }
+
+    fn wire_stats(&self) -> Option<WireTotals> {
+        let mut t = self.retired;
+        for w in &self.workers {
+            t.absorb(&w.stats.totals());
+        }
+        Some(t)
+    }
 }
 
 impl Drop for ClusterTransport {
     fn drop(&mut self) {
-        for w in &mut self.workers {
-            let _ = wire::write_msg(&mut w.stream, &Msg::Shutdown);
+        for mut w in self.workers.drain(..) {
+            let _ = wire::write_msg_counted(&mut w.stream, &Msg::Shutdown, &w.stats);
+            self.retired.absorb(&w.stats.totals());
+        }
+        if self.retired.sent_frames + self.retired.recv_frames > 0 {
+            eprintln!("[cluster] wire totals: {}", self.retired.summary());
         }
         for mut c in self.children.drain(..) {
             let deadline = Instant::now() + Duration::from_secs(5);
@@ -516,18 +789,61 @@ impl Drop for ClusterTransport {
     }
 }
 
-/// Serve one dispatched worker for one phase: relay its moment partials
-/// through the shared hub (the rendezvous that keeps sync-BN
-/// bit-identical), hand back each combined vector, and collect its
-/// [`wire::PhaseDone`].
-fn handle_worker(
+/// Serve one worker for one phase: write its fused
+/// [StateSync][PhaseStart] dispatch, gate on the digest ack (no phase
+/// result is accepted from an unverified view), relay moment partials
+/// through the shared hub, and collect the [`wire::PhaseDone`] plus the
+/// dispatch-to-done wall-clock (the scheduler's EWMA sample).  Idle
+/// workers (`phase` is None) just get the sync + ack.
+fn drive_worker(
     stream: &mut TcpStream,
+    stats: &WireStats,
+    sync_frame: &[u8],
+    expect: [u8; 32],
+    phase: Option<(&[u8], Range<usize>)>,
     hub: &MomentHub,
-    owned: std::ops::Range<usize>,
-) -> Result<wire::PhaseDone, Fail> {
+) -> Result<Option<(wire::PhaseDone, f64)>, Fail> {
+    let active = phase.is_some();
+    // An active worker missing from the rendezvous would deadlock its
+    // peers — fail every sync point fast.  An idle failure poisons
+    // nothing: the attempt can still stand.
+    let died = |why: String| -> Fail {
+        if active {
+            hub.poison();
+        }
+        Fail::Dead(why)
+    };
+    let t0 = Instant::now();
+    let sent = (|| -> std::io::Result<()> {
+        stream.write_all(sync_frame)?;
+        if let Some((pf, _)) = &phase {
+            stream.write_all(pf)?;
+        }
+        stream.flush()
+    })();
+    if let Err(e) = sent {
+        return Err(died(format!("phase dispatch failed: {e}")));
+    }
+    stats.count_sent(wire::OP_STATE_SYNC, sync_frame.len());
+    if let Some((pf, _)) = &phase {
+        stats.count_sent(wire::OP_PHASE_START, pf.len());
+    }
+    match wire::read_msg_counted(stream, stats) {
+        Ok(Some(Msg::SyncAck { digest })) if digest == expect => {}
+        Ok(Some(Msg::SyncAck { .. })) => {
+            return Err(died("worker acked a skewed state digest".into()))
+        }
+        Ok(Some(Msg::Error { msg })) => return Err(died(format!("worker error: {msg}"))),
+        Ok(Some(_)) => return Err(died("unexpected frame instead of sync-ack".into())),
+        Ok(None) => return Err(died("connection closed before sync-ack".into())),
+        Err(e) => return Err(died(format!("{e:#}"))),
+    }
+    let Some((_, owned)) = phase else {
+        return Ok(None);
+    };
     let mut combined = Vec::new();
     loop {
-        match wire::read_msg(stream) {
+        match wire::read_msg_counted(stream, stats) {
             Ok(Some(Msg::MomentPart { chunk0, m, parts })) => {
                 let k = if m == 0 { 0 } else { parts.len() / m as usize };
                 if chunk0 as usize != owned.start || k != owned.len() {
@@ -540,12 +856,14 @@ fn handle_worker(
                     return Err(Fail::Aborted);
                 }
                 let reply = Msg::MomentCombined { combined: std::mem::take(&mut combined) };
-                if wire::write_msg(stream, &reply).is_err() {
+                if wire::write_msg_counted(stream, &reply, stats).is_err() {
                     hub.poison();
                     return Err(Fail::Dead("socket died returning combined moments".into()));
                 }
             }
-            Ok(Some(Msg::PhaseDone(pd))) => return Ok(pd),
+            Ok(Some(Msg::PhaseDone(pd))) => {
+                return Ok(Some((pd, t0.elapsed().as_secs_f64() * 1e3)))
+            }
             Ok(Some(Msg::Error { msg })) => {
                 hub.poison();
                 return Err(Fail::Dead(format!("worker error: {msg}")));
@@ -568,12 +886,12 @@ fn handle_worker(
 
 /// Abort/ack drain for a live worker stuck in a poisoned rendezvous.
 /// Returns whether the worker acknowledged and is reusable.
-fn drain_abort(stream: &mut TcpStream) -> bool {
-    if wire::write_msg(stream, &Msg::Abort).is_err() {
+fn drain_abort(stream: &mut TcpStream, stats: &WireStats) -> bool {
+    if wire::write_msg_counted(stream, &Msg::Abort, stats).is_err() {
         return false;
     }
     loop {
-        match wire::read_msg(stream) {
+        match wire::read_msg_counted(stream, stats) {
             Ok(Some(Msg::AbortAck)) => return true,
             // In-flight partials/results from before the worker saw the
             // abort — part of the discarded attempt.
@@ -614,25 +932,91 @@ impl fmt::Display for FaultExit {
 impl std::error::Error for FaultExit {}
 
 /// Deterministic fault injection for the cluster tests/CI: die at the
-/// Nth phase dispatch (mid-epoch) or right after shipping the first
-/// moment partial of the Nth phase (mid-rendezvous).
+/// Nth phase dispatch (mid-epoch), right after shipping the first
+/// moment partial of the Nth phase (mid-rendezvous), or on the Nth
+/// state sync before acking it (mid-pipelined-sync).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WorkerFault {
     pub phase: Option<usize>,
     pub moment: Option<usize>,
+    pub sync: Option<usize>,
 }
 
-/// Parse a `--fault` spec: `phase:N` or `moment:N` (N counts
-/// [`Msg::PhaseStart`] frames received, 0-based).
+/// Parse a `--fault` spec: `phase:N`, `moment:N` (N counts
+/// [`Msg::PhaseStart`] frames received, 0-based), or `sync:N` (N counts
+/// [`Msg::StateSync`] frames, 0-based — dies before the ack).
 pub fn parse_fault(spec: &str) -> Result<WorkerFault> {
     let (kind, n) = spec
         .split_once(':')
         .with_context(|| format!("--fault expects KIND:N, got '{spec}'"))?;
     let n: usize = n.parse().with_context(|| format!("--fault index in '{spec}'"))?;
+    let mut f = WorkerFault::default();
     match kind {
-        "phase" => Ok(WorkerFault { phase: Some(n), moment: None }),
-        "moment" => Ok(WorkerFault { phase: None, moment: Some(n) }),
-        _ => bail!("unknown fault kind '{kind}' (expected phase|moment)"),
+        "phase" => f.phase = Some(n),
+        "moment" => f.moment = Some(n),
+        "sync" => f.sync = Some(n),
+        _ => bail!("unknown fault kind '{kind}' (expected phase|moment|sync)"),
+    }
+    Ok(f)
+}
+
+/// The worker's resident dataset store: contents keyed by fingerprint
+/// (what Hello advertises and bind frames reference), ids bound on top
+/// (what indexed `PhaseStart` frames reference).
+#[derive(Default)]
+struct Resident {
+    content: HashMap<[u8; 32], Dataset>,
+    bound: HashMap<u32, [u8; 32]>,
+}
+
+impl Resident {
+    fn get(&self, id: u32) -> Option<&Dataset> {
+        self.bound.get(&id).and_then(|fp| self.content.get(fp))
+    }
+
+    /// Held fingerprints in a stable order (for the Hello frame).
+    fn fingerprints(&self) -> Vec<[u8; 32]> {
+        let mut v: Vec<[u8; 32]> = self.content.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Apply one dataset-load: a full transfer is fingerprint-verified
+    /// before it becomes referenceable; a bind (empty rows) must name
+    /// bytes this worker already holds.
+    fn load(&mut self, dl: wire::DatasetLoad) -> Result<()> {
+        if dl.images.is_empty() && dl.labels.is_empty() {
+            ensure!(
+                self.content.contains_key(&dl.fingerprint),
+                "dataset-load binds id {} to a fingerprint this worker does not hold",
+                dl.id
+            );
+        } else {
+            let got = wire::dataset_fingerprint(
+                dl.hw,
+                dl.channels,
+                dl.classes,
+                &dl.images,
+                &dl.labels,
+            );
+            ensure!(
+                got == dl.fingerprint,
+                "dataset {} failed its fingerprint check after transfer",
+                dl.id
+            );
+            self.content.insert(
+                dl.fingerprint,
+                Dataset {
+                    hw: dl.hw as usize,
+                    channels: dl.channels as usize,
+                    classes: dl.classes as usize,
+                    images: dl.images,
+                    labels: dl.labels,
+                },
+            );
+        }
+        self.bound.insert(dl.id, dl.fingerprint);
+        Ok(())
     }
 }
 
@@ -641,6 +1025,7 @@ pub fn parse_fault(spec: &str) -> Result<WorkerFault> {
 /// hub rendezvous.
 struct RemoteMoments {
     stream: Mutex<TcpStream>,
+    stats: Arc<WireStats>,
     /// One-shot mid-rendezvous fault: die after the next partial ships.
     fault: AtomicBool,
 }
@@ -648,14 +1033,15 @@ struct RemoteMoments {
 impl MomentExchange for RemoteMoments {
     fn reduce(&self, chunk0: usize, m: usize, parts: &[f64], out: &mut Vec<f64>) -> Result<()> {
         let mut s = self.stream.lock().unwrap();
-        wire::write_msg(
+        wire::write_msg_counted(
             &mut *s,
             &Msg::MomentPart { chunk0: chunk0 as u32, m: m as u32, parts: parts.to_vec() },
+            &self.stats,
         )?;
         if self.fault.swap(false, Ordering::SeqCst) {
             return Err(FaultExit.into());
         }
-        match wire::read_msg(&mut *s)? {
+        match wire::read_msg_counted(&mut *s, &self.stats)? {
             Some(Msg::MomentCombined { combined }) => {
                 out.clear();
                 out.extend_from_slice(&combined);
@@ -700,18 +1086,52 @@ fn apply_sync(state: &mut StateVec, leaves: Vec<(String, Vec<f32>)>) -> Result<(
     Ok(())
 }
 
-/// Execute one phase dispatch on the worker's synced state view.
+/// Execute one phase dispatch on the worker's synced state view,
+/// resolving indexed batches from the resident dataset store.
+#[allow(clippy::too_many_arguments)]
 fn worker_phase(
     net: &NativeNet,
     rep: &mut Replica,
     state: &StateVec,
+    resident: &Resident,
     ps: &wire::PhaseStart,
     stream: &TcpStream,
+    stats: &Arc<WireStats>,
     moment_fault: bool,
 ) -> Result<wire::PhaseDone> {
-    let sb = ps.y.len();
+    let sb = ps.data.examples();
     ensure!(sb > 0, "phase dispatch with an empty shard");
     ensure!(ps.chunk_size > 0, "phase dispatch with zero chunk size");
+    // Materialize the shard's batch: inline rows as-is, indexed rows
+    // gathered from the resident copy (the bytes the fingerprint in the
+    // load frame proved identical to the coordinator's).
+    let gathered: Option<(Vec<f32>, Vec<i32>)> = match &ps.data {
+        PhaseData::Inline { .. } => None,
+        PhaseData::Indexed { dataset, idx } => {
+            let ds = resident.get(*dataset).with_context(|| {
+                format!("phase references dataset {dataset}, not resident on this worker")
+            })?;
+            let sz = ds.hw * ds.hw * ds.channels;
+            let mut xv = vec![0f32; idx.len() * sz];
+            let mut yv = vec![0i32; idx.len()];
+            for (row, &i) in idx.iter().enumerate() {
+                let i = i as usize;
+                ensure!(
+                    i < ds.len(),
+                    "phase index {i} out of range for dataset {dataset} ({} examples)",
+                    ds.len()
+                );
+                ds.copy_sample(i, &mut xv[row * sz..(row + 1) * sz]);
+                yv[row] = ds.labels[i];
+            }
+            Some((xv, yv))
+        }
+    };
+    let (x, y): (&[f32], &[i32]) = match (&ps.data, &gathered) {
+        (PhaseData::Inline { x, y }, _) => (x, y),
+        (_, Some((xv, yv))) => (xv, yv),
+        _ => unreachable!("indexed data always gathers"),
+    };
     let coeffs =
         ps.coeffs.as_ref().map(|(cw, cx)| Coeffs { cw: cw.clone(), cx: cx.clone() });
     // Multi-worker train phases rendezvous through the coordinator;
@@ -720,6 +1140,7 @@ fn worker_phase(
     let hub: Option<&(dyn MomentExchange + Sync)> = if ps.train && ps.shards > 1 {
         remote = RemoteMoments {
             stream: Mutex::new(stream.try_clone().context("cloning stream for moments")?),
+            stats: stats.clone(),
             fault: AtomicBool::new(moment_fault),
         };
         Some(&remote)
@@ -739,8 +1160,8 @@ fn worker_phase(
         backward: ps.backward,
         classes: ps.classes as usize,
         coeffs: coeffs.as_ref(),
-        x: &ps.x,
-        y: &ps.y,
+        x,
+        y,
         teacher: ps.teacher.as_deref().map(|t| (t, ps.mu)),
     };
     replica_phase(net, rep, state, &args, &ctx)?;
@@ -773,19 +1194,55 @@ fn worker_phase(
 }
 
 /// Worker-process main loop: dial the coordinator, build the announced
-/// model, and serve state syncs + phase dispatches until shutdown.
-/// `threads` is the worker's own kernel-thread budget (0 = auto) —
-/// independent of the coordinator's.
+/// model, and serve dataset loads, state syncs, and phase dispatches
+/// until shutdown.  `threads` is the worker's own kernel-thread budget
+/// (0 = auto) — independent of the coordinator's.
 pub fn run_worker(addr: &str, threads: usize, fault: WorkerFault) -> Result<()> {
+    run_worker_seeded(addr, threads, fault, Vec::new())
+}
+
+/// [`run_worker`], pre-seeded with datasets the process already holds —
+/// the Hello frame advertises their fingerprints, so a coordinator in
+/// index mode binds them by fingerprint instead of re-shipping the
+/// bytes (the elastic-rejoin fast path; also the test hook for it).
+pub fn run_worker_seeded(
+    addr: &str,
+    threads: usize,
+    fault: WorkerFault,
+    seeds: Vec<Dataset>,
+) -> Result<()> {
+    let mut resident = Resident::default();
+    for ds in seeds {
+        let fp = ds.fingerprint();
+        resident.content.insert(fp, ds);
+    }
+    let stats = Arc::new(WireStats::new());
     let mut stream = connect_retry(addr, Duration::from_secs(10))?;
     stream.set_nodelay(true).ok();
-    wire::write_msg(&mut stream, &Msg::Hello)?;
-    let model = match wire::read_msg(&mut stream)? {
+    wire::write_msg_counted(
+        &mut stream,
+        &Msg::Hello { fingerprints: resident.fingerprints() },
+        &stats,
+    )?;
+    let model = match wire::read_msg_counted(&mut stream, &stats)? {
         Some(Msg::Welcome { model }) => model,
         Some(_) => bail!("expected Welcome from coordinator"),
         None => bail!("coordinator hung up during handshake"),
     };
-    let cfg = lookup(&model)
+    let res = worker_loop(&model, threads, fault, &mut resident, &mut stream, &stats);
+    eprintln!("[worker] wire totals: {}", stats.totals().summary());
+    res
+}
+
+fn worker_loop(
+    model: &str,
+    threads: usize,
+    fault: WorkerFault,
+    resident: &mut Resident,
+    stream: &mut TcpStream,
+    stats: &Arc<WireStats>,
+) -> Result<()> {
+    let cfg = lookup(model)
         .with_context(|| format!("coordinator announced unknown model '{model}'"))?;
     let manifest = synthesize_manifest(&cfg)?;
     let mut net = NativeNet::from_manifest(&manifest)?;
@@ -793,15 +1250,38 @@ pub fn run_worker(addr: &str, threads: usize, fault: WorkerFault) -> Result<()> 
     let mut state = StateVec::zeros(&manifest.state_spec);
     let mut rep = Replica::default();
     let mut phase_no: usize = 0;
+    let mut sync_no: usize = 0;
     loop {
-        match wire::read_msg(&mut stream)? {
+        match wire::read_msg_counted(stream, stats)? {
             None | Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::DatasetLoad(dl)) => {
+                if let Err(e) = resident.load(dl) {
+                    let _ = wire::write_msg_counted(
+                        stream,
+                        &Msg::Error { msg: format!("{e:#}") },
+                        stats,
+                    );
+                    return Err(e);
+                }
+            }
             Some(Msg::StateSync { leaves, digest }) => {
+                let n = sync_no;
+                sync_no += 1;
+                if fault.sync == Some(n) {
+                    // Simulated crash mid-pipelined-sync: vanish with
+                    // the dispatch in flight and the ack never sent.
+                    return Ok(());
+                }
                 apply_sync(&mut state, leaves)?;
                 let got = wire::view_digest(view_leaves(&state));
+                wire::write_msg_counted(stream, &Msg::SyncAck { digest: got }, stats)?;
                 if got != digest {
                     let msg = "state view digest mismatch after sync".to_string();
-                    let _ = wire::write_msg(&mut stream, &Msg::Error { msg: msg.clone() });
+                    let _ = wire::write_msg_counted(
+                        stream,
+                        &Msg::Error { msg: msg.clone() },
+                        stats,
+                    );
                     bail!(msg);
                 }
             }
@@ -813,22 +1293,34 @@ pub fn run_worker(addr: &str, threads: usize, fault: WorkerFault) -> Result<()> 
                     return Ok(());
                 }
                 let moment_fault = fault.moment == Some(n);
-                match worker_phase(&net, &mut rep, &state, &ps, &stream, moment_fault) {
-                    Ok(pd) => wire::write_msg(&mut stream, &Msg::PhaseDone(pd))?,
+                match worker_phase(
+                    &net,
+                    &mut rep,
+                    &state,
+                    resident,
+                    &ps,
+                    &*stream,
+                    stats,
+                    moment_fault,
+                ) {
+                    Ok(pd) => wire::write_msg_counted(stream, &Msg::PhaseDone(pd), stats)?,
                     Err(e) if e.downcast_ref::<PhaseAborted>().is_some() => {
-                        wire::write_msg(&mut stream, &Msg::AbortAck)?;
+                        wire::write_msg_counted(stream, &Msg::AbortAck, stats)?;
                     }
                     Err(e) if e.downcast_ref::<FaultExit>().is_some() => return Ok(()),
                     Err(e) => {
-                        let _ =
-                            wire::write_msg(&mut stream, &Msg::Error { msg: format!("{e:#}") });
+                        let _ = wire::write_msg_counted(
+                            stream,
+                            &Msg::Error { msg: format!("{e:#}") },
+                            stats,
+                        );
                         return Err(e);
                     }
                 }
             }
             // An abort can race past the PhaseDone we already sent —
             // acknowledge so the coordinator's drain completes.
-            Some(Msg::Abort) => wire::write_msg(&mut stream, &Msg::AbortAck)?,
+            Some(Msg::Abort) => wire::write_msg_counted(stream, &Msg::AbortAck, stats)?,
             Some(_) => bail!("unexpected frame in worker main loop"),
         }
     }
@@ -842,12 +1334,23 @@ mod tests {
     fn fault_specs_parse() {
         let f = parse_fault("phase:2").unwrap();
         assert_eq!(f.phase, Some(2));
-        assert_eq!(f.moment, None);
+        assert_eq!((f.moment, f.sync), (None, None));
         let f = parse_fault("moment:0").unwrap();
         assert_eq!(f.moment, Some(0));
-        for bad in ["phase", "phase:", "phase:x", "epoch:1", ":3"] {
+        let f = parse_fault("sync:1").unwrap();
+        assert_eq!(f.sync, Some(1));
+        assert_eq!((f.phase, f.moment), (None, None));
+        for bad in ["phase", "phase:", "phase:x", "epoch:1", ":3", "sync"] {
             assert!(parse_fault(bad).is_err(), "{bad} should not parse");
         }
+    }
+
+    #[test]
+    fn wire_mode_parses() {
+        assert_eq!(WireMode::parse("index").unwrap(), WireMode::Index);
+        assert_eq!(WireMode::parse("payload").unwrap(), WireMode::Payload);
+        assert!(WireMode::parse("inline").is_err());
+        assert_eq!(WireMode::default(), WireMode::Index);
     }
 
     #[test]
@@ -876,5 +1379,90 @@ mod tests {
         // unknown leaf always syncs
         let fresh: Vec<(&str, &[f32])> = vec![("c", &[3.0][..])];
         assert_eq!(view_delta(&cache, &fresh).len(), 1);
+    }
+
+    #[test]
+    fn schedule_tiles_the_grid_contiguously() {
+        for (speeds, chunks) in [
+            (vec![1.0], 4),
+            (vec![1.0, 1.0], 5),
+            (vec![3.0, 1.0, 2.0], 8),
+            (vec![1.0, 1.0, 1.0, 1.0], 4),
+        ] {
+            let runs = schedule_runs(&speeds, chunks);
+            assert_eq!(runs.len(), speeds.len());
+            let mut at = 0;
+            for r in &runs {
+                assert_eq!(r.start, at, "contiguous in worker order: {runs:?}");
+                assert!(!r.is_empty(), "every worker owns a whole chunk: {runs:?}");
+                at = r.end;
+            }
+            assert_eq!(at, chunks, "runs tile 0..{chunks}: {runs:?}");
+        }
+    }
+
+    #[test]
+    fn schedule_skews_toward_fast_workers() {
+        // 9:1 speed ratio over 10 chunks → a 9-chunk run and a 1-chunk run.
+        let runs = schedule_runs(&[9.0, 1.0], 10);
+        assert_eq!(runs, vec![0..9, 9..10]);
+        // Equal speeds split evenly (remainder to the front).
+        let runs = schedule_runs(&[1.0, 1.0], 5);
+        assert_eq!(runs, vec![0..3, 3..5]);
+    }
+
+    #[test]
+    fn schedule_grants_every_worker_a_whole_chunk_under_extreme_skew() {
+        let runs = schedule_runs(&[1000.0, 1.0, 1.0], 4);
+        assert!(runs.iter().all(|r| !r.is_empty()), "{runs:?}");
+        assert_eq!(runs.last().unwrap().end, 4);
+    }
+
+    #[test]
+    fn schedule_sanitizes_degenerate_speeds() {
+        // NaN/zero/negative speeds fall back to an equal split instead
+        // of panicking or starving a worker.
+        let runs = schedule_runs(&[f64::NAN, 0.0], 4);
+        assert_eq!(runs, vec![0..2, 2..4]);
+    }
+
+    #[test]
+    fn resident_store_verifies_and_binds() {
+        let images = vec![0.25f32; 2 * 2 * 2 * 1];
+        let labels = vec![1i32, 0];
+        let fp = wire::dataset_fingerprint(2, 1, 4, &images, &labels);
+        let mut res = Resident::default();
+        // A bind for bytes we don't hold is refused.
+        let bind = wire::DatasetLoad {
+            id: 7,
+            hw: 2,
+            channels: 1,
+            classes: 4,
+            fingerprint: fp,
+            images: vec![],
+            labels: vec![],
+        };
+        assert!(res.load(bind.clone()).is_err());
+        // A full load with a lying fingerprint is refused.
+        let mut lying = wire::DatasetLoad {
+            id: 7,
+            hw: 2,
+            channels: 1,
+            classes: 4,
+            fingerprint: [0u8; 32],
+            images: images.clone(),
+            labels: labels.clone(),
+        };
+        assert!(res.load(lying.clone()).is_err());
+        // An honest full load verifies, lands resident, and binds.
+        lying.fingerprint = fp;
+        res.load(lying).unwrap();
+        assert_eq!(res.get(7).unwrap().labels, labels);
+        assert_eq!(res.fingerprints(), vec![fp]);
+        // Now the bind succeeds and may alias a second id to the bytes.
+        let mut rebind = bind;
+        rebind.id = 9;
+        res.load(rebind).unwrap();
+        assert_eq!(res.get(9).unwrap().images, images);
     }
 }

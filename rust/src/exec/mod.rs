@@ -49,10 +49,12 @@ pub mod sync;
 pub mod transport;
 pub mod wire;
 
-pub use cluster::{parse_fault, run_worker, ClusterTransport, WorkerFault};
+pub use cluster::{
+    parse_fault, run_worker, run_worker_seeded, ClusterTransport, WireMode, WorkerFault,
+};
 pub use reduce::{accumulate_grads, zero_grads};
 pub use sync::{MomentExchange, MomentHub};
-pub use transport::{ChunkTransport, InProcessTransport, PhaseOutput, PhaseSpec};
+pub use transport::{BatchSource, ChunkTransport, InProcessTransport, PhaseOutput, PhaseSpec};
 
 use std::ops::{Deref, DerefMut, Range};
 

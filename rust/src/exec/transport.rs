@@ -22,6 +22,21 @@ use crate::runtime::StateVec;
 use super::sync::MomentExchange;
 use super::{accumulate_grads, run_replicas, zero_grads, MomentHub, ShardPlan, ShardSpec};
 
+/// Where this phase's batch came from, for transports that hold the
+/// dataset on the far side: a hosted-dataset id plus the example
+/// indices of the batch (in batch order).  `x`/`y` in the spec are
+/// always the materialized batch — a transport that can't (or won't)
+/// resolve indices remotely just uses them; the cluster transport in
+/// index mode sends `(dataset, idx)` instead, shrinking the wire
+/// payload from O(batch·H·W·C) to O(batch) u32s.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchSource<'a> {
+    /// Id previously registered via [`ChunkTransport::host_dataset`].
+    pub dataset: u32,
+    /// One index per example, same order as `x`/`y`.
+    pub idx: &'a [u32],
+}
+
 /// One phase dispatch, transport-agnostic: a forward(+backward) over
 /// the full global batch, fanned out replica-per-shard.
 pub struct PhaseSpec<'a> {
@@ -35,6 +50,9 @@ pub struct PhaseSpec<'a> {
     /// The full global batch.
     pub x: &'a [f32],
     pub y: &'a [i32],
+    /// Index-form of the same batch, when the driver knows it came from
+    /// a hosted dataset (None otherwise — e.g. ad-hoc bench tensors).
+    pub source: Option<BatchSource<'a>>,
     /// (teacher logits for the full batch, μ) — label-refinery retrain.
     pub teacher: Option<(&'a [f32], f32)>,
     /// Replica-count hint: the in-process pool sizes itself to it; the
@@ -75,6 +93,22 @@ pub trait ChunkTransport: Send {
     /// train-mode phase (the weight phase applies them, the arch phase
     /// drops them by simply not calling this).
     fn commit_bn(&mut self, state: &mut StateVec) -> Result<()>;
+
+    /// Register a dataset under `id` so later phases may refer to its
+    /// examples by index ([`BatchSource`]).  Local transports resolve
+    /// indices from the driver-materialized `x`/`y` and need nothing,
+    /// hence the no-op default; the cluster transport ships the bytes
+    /// to workers once (fingerprint-verified) and keeps a copy for
+    /// elastic rejoins.
+    fn host_dataset(&mut self, _id: u32, _ds: &crate::data::Dataset) -> Result<()> {
+        Ok(())
+    }
+
+    /// Cumulative wire traffic (all connections, both directions), for
+    /// transports that have a wire at all.  None for in-process.
+    fn wire_stats(&self) -> Option<crate::exec::wire::WireTotals> {
+        None
+    }
 }
 
 /// The scoped-thread replica pool: replicas are [`Replica`] contexts

@@ -6,30 +6,38 @@
 //! fails the header check instead of mis-decoding:
 //!
 //! ```text
-//! [0xEC magic u8][version u8 = 0x01][payload_len u32 LE][payload]
+//! [0xEC magic u8][version u8 = 0x02][payload_len u32 LE][payload]
 //! ```
 //!
-//! Payloads start with a one-byte opcode.  Strings are
+//! The magic and version bytes are validated **before** the u32 length
+//! field is even parsed — a frame from a build speaking another
+//! protocol version is refused with a typed skew error, never trusted
+//! for its length.  Payloads start with a one-byte opcode.  Strings are
 //! `[len u16 LE][UTF-8]`; numeric vectors are `[count u32 LE][LE
 //! elements]`, with every count validated against the bytes actually
 //! present before any allocation (hostile-header hardening, same rules
 //! the fuzz suite enforces on the serve codec).
 //!
 //! Control plane (coordinator ⇄ worker):
-//! * `0x01` hello      W→C — worker dials in
-//! * `0x02` welcome    C→W — model name the worker must build
-//! * `0x03` state-sync C→W — changed state-view leaves + sha256 of the
-//!   **full** view after applying (workers verify, then ack implicitly
-//!   by accepting the next phase)
-//! * `0x08` abort      C→W — drop the in-flight phase
-//! * `0x09` abort-ack  W→C
-//! * `0x0A` shutdown   C→W — clean exit
-//! * `0x0B` error      either — terminal, carries the cause
+//! * `0x01` hello        W→C — worker dials in, listing the sha256
+//!   fingerprints of datasets it already holds resident
+//! * `0x02` welcome      C→W — model name the worker must build
+//! * `0x03` state-sync   C→W — changed state-view leaves + sha256 of
+//!   the **full** view after applying
+//! * `0x0C` sync-ack     W→C — the digest the worker's view reached
+//!   after applying a state-sync; the coordinator gates the phase on it
+//! * `0x0D` dataset-load C→W — a dataset shipped once per connection
+//!   (empty rows = bind an id to a fingerprint the worker already has)
+//! * `0x08` abort        C→W — drop the in-flight phase
+//! * `0x09` abort-ack    W→C
+//! * `0x0A` shutdown     C→W — clean exit
+//! * `0x0B` error        either — terminal, carries the cause
 //!
 //! Data plane (one phase = one forward(+backward) over the worker's
 //! chunk range):
-//! * `0x04` phase-start     C→W — flags, plan geometry, coeffs, the
-//!   shard's examples/labels/teacher slice
+//! * `0x04` phase-start     C→W — flags, plan geometry, coeffs, and the
+//!   shard's batch either inline (payload mode: example rows + labels)
+//!   or as indices into a worker-resident dataset (index mode)
 //! * `0x05` moment-part     W→C — per-chunk f64 sync-BN partials
 //! * `0x06` moment-combined C→W — the canonical chunk-ordered combine
 //! * `0x07` phase-done      W→C — per-chunk losses + grad partials +
@@ -41,6 +49,7 @@
 //! association `MomentHub`/`reduce::accumulate_grads` use in-process.
 
 use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, ensure, Result};
 
@@ -49,13 +58,17 @@ use crate::util::sha256::Sha256;
 /// First header byte of every exec frame (serve speaks 0xEB).
 pub const MAGIC: u8 = 0xEC;
 
-/// Exec protocol version this build speaks.
-pub const VERSION: u8 = 0x01;
+/// Exec protocol version this build speaks.  v2 (this version) added
+/// dataset-fingerprint hellos, worker-resident `DatasetLoad`, indexed
+/// `PhaseStart`, and digest-acked state sync; v1 peers are refused
+/// with a typed skew error at the header check.
+pub const VERSION: u8 = 0x02;
 
 /// Hard cap on a frame payload.  Phase-done frames carry per-chunk
-/// grad partials (chunks/shard × full parameter set), so the cap is
-/// generous; the incremental reader below bounds a lying header's
-/// damage to one 64 KiB chunk regardless.
+/// grad partials (chunks/shard × full parameter set) and dataset-load
+/// frames carry whole datasets, so the cap is generous; the
+/// incremental reader below bounds a lying header's damage to one
+/// 64 KiB chunk regardless.
 pub const MAX_FRAME: usize = 256 << 20;
 
 pub const OP_HELLO: u8 = 0x01;
@@ -69,13 +82,42 @@ pub const OP_ABORT: u8 = 0x08;
 pub const OP_ABORT_ACK: u8 = 0x09;
 pub const OP_SHUTDOWN: u8 = 0x0A;
 pub const OP_ERROR: u8 = 0x0B;
+pub const OP_SYNC_ACK: u8 = 0x0C;
+pub const OP_DATASET_LOAD: u8 = 0x0D;
+
+/// One past the highest assigned opcode — sizes the per-op counter
+/// tables; slot 0 absorbs unknown opcodes.
+pub const OP_LIMIT: usize = 0x0E;
+
+/// Human name of an opcode, for stats summaries and logs.
+pub fn op_name(op: u8) -> &'static str {
+    match op {
+        OP_HELLO => "hello",
+        OP_WELCOME => "welcome",
+        OP_STATE_SYNC => "state-sync",
+        OP_PHASE_START => "phase-start",
+        OP_MOMENT_PART => "moment-part",
+        OP_MOMENT_COMBINED => "moment-combined",
+        OP_PHASE_DONE => "phase-done",
+        OP_ABORT => "abort",
+        OP_ABORT_ACK => "abort-ack",
+        OP_SHUTDOWN => "shutdown",
+        OP_ERROR => "error",
+        OP_SYNC_ACK => "sync-ack",
+        OP_DATASET_LOAD => "dataset-load",
+        _ => "unknown",
+    }
+}
 
 /// Why an exec frame could not be read (same taxonomy as the serve
 /// codec: typed so torn, oversized, and alien frames stay
 /// distinguishable in logs and tests).
 #[derive(Debug)]
 pub enum FrameError {
-    /// Bad magic or version byte — line noise, or a serve client.
+    /// Bad magic or version byte — line noise, a serve client, or a
+    /// peer built at another protocol version.  Raised before the
+    /// length field is parsed, so a skewed peer can never make this
+    /// side trust (or allocate for) its length claim.
     UnsupportedVersion { magic: u8, version: u8 },
     /// The stream ended inside a frame (torn header or payload).
     Truncated(String),
@@ -88,6 +130,11 @@ pub enum FrameError {
 impl std::fmt::Display for FrameError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            FrameError::UnsupportedVersion { magic, version } if *magic == MAGIC => write!(
+                f,
+                "exec protocol version skew: peer sent version 0x{version:02x}, this build \
+                 speaks 0x{VERSION:02x} — rebuild the older side"
+            ),
             FrameError::UnsupportedVersion { magic, version } => write!(
                 f,
                 "unsupported exec frame header (magic 0x{magic:02x}, version 0x{version:02x}); \
@@ -114,6 +161,43 @@ impl From<std::io::Error> for FrameError {
     }
 }
 
+/// Typed rejection of a `PhaseStart` that plans no work — zero chunks,
+/// zero-sized chunks, or an empty example set.  Decoding refuses these
+/// instead of letting a worker silently run (and ack) an empty phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroChunkPhaseStart {
+    /// Which geometry field was degenerate.
+    pub field: &'static str,
+}
+
+impl std::fmt::Display for ZeroChunkPhaseStart {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "phase-start frame plans no work: {} is zero/empty", self.field)
+    }
+}
+
+impl std::error::Error for ZeroChunkPhaseStart {}
+
+/// Where a phase's batch rows come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PhaseData {
+    /// Payload mode: the shard's example rows + labels ride the frame.
+    Inline { x: Vec<f32>, y: Vec<i32> },
+    /// Index mode: the shard gathers these rows from the
+    /// worker-resident dataset loaded under `dataset`.
+    Indexed { dataset: u32, idx: Vec<u32> },
+}
+
+impl PhaseData {
+    /// Number of examples this phase slice covers.
+    pub fn examples(&self) -> usize {
+        match self {
+            PhaseData::Inline { y, .. } => y.len(),
+            PhaseData::Indexed { idx, .. } => idx.len(),
+        }
+    }
+}
+
 /// One phase dispatch: everything a worker needs to run its chunk
 /// range of a forward(+backward) pass against its synced state view.
 #[derive(Debug, Clone, PartialEq)]
@@ -128,7 +212,7 @@ pub struct PhaseStart {
     pub want_bn: bool,
     pub classes: u32,
     /// Global batch size (BN denominator; the worker's own slice is
-    /// `y.len()`).
+    /// `data.examples()`).
     pub global_batch: u32,
     /// Examples per canonical chunk.
     pub chunk_size: u32,
@@ -144,11 +228,11 @@ pub struct PhaseStart {
     /// Precomputed per-layer branch coefficients (cw, cx) — present
     /// for search/retrain graphs, absent for FP phases.
     pub coeffs: Option<(Vec<Vec<f32>>, Vec<Vec<f32>>)>,
-    /// This shard's example slice.
-    pub x: Vec<f32>,
-    /// This shard's labels.
-    pub y: Vec<i32>,
-    /// This shard's teacher logits (label-refinery retrain).
+    /// The shard's batch rows: inline (payload mode) or indices into a
+    /// worker-resident dataset (index mode).
+    pub data: PhaseData,
+    /// This shard's teacher logits (label-refinery retrain; always
+    /// inline — they come from coordinator-held FP state).
     pub teacher: Option<Vec<f32>>,
 }
 
@@ -173,12 +257,35 @@ pub struct PhaseDone {
     pub bn: Vec<(String, Vec<f32>)>,
 }
 
+/// A dataset shipped to (or bound on) a worker: id is the handle
+/// `PhaseStart` indices reference; the fingerprint is
+/// [`dataset_fingerprint`] over the full contents, verified by the
+/// worker after receipt.  Empty rows mean "bind `id` to a dataset you
+/// already hold under `fingerprint`".
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetLoad {
+    pub id: u32,
+    pub hw: u32,
+    pub channels: u32,
+    pub classes: u32,
+    pub fingerprint: [u8; 32],
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
 /// Every message of the exec protocol.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
-    Hello,
+    /// Worker dial-in, listing fingerprints of datasets it already
+    /// holds (empty for a fresh process; lets a rejoining worker skip
+    /// re-downloading data it kept).
+    Hello { fingerprints: Vec<[u8; 32]> },
     Welcome { model: String },
     StateSync { leaves: Vec<(String, Vec<f32>)>, digest: [u8; 32] },
+    /// Worker's post-apply view digest; the coordinator refuses to let
+    /// a phase proceed on a worker whose ack digest skews.
+    SyncAck { digest: [u8; 32] },
+    DatasetLoad(DatasetLoad),
     PhaseStart(PhaseStart),
     MomentPart { chunk0: u32, m: u32, parts: Vec<f64> },
     MomentCombined { combined: Vec<f64> },
@@ -187,6 +294,158 @@ pub enum Msg {
     AbortAck,
     Shutdown,
     Error { msg: String },
+}
+
+/// Opcode of a message (the byte its payload starts with).
+pub fn opcode(msg: &Msg) -> u8 {
+    match msg {
+        Msg::Hello { .. } => OP_HELLO,
+        Msg::Welcome { .. } => OP_WELCOME,
+        Msg::StateSync { .. } => OP_STATE_SYNC,
+        Msg::SyncAck { .. } => OP_SYNC_ACK,
+        Msg::DatasetLoad(_) => OP_DATASET_LOAD,
+        Msg::PhaseStart(_) => OP_PHASE_START,
+        Msg::MomentPart { .. } => OP_MOMENT_PART,
+        Msg::MomentCombined { .. } => OP_MOMENT_COMBINED,
+        Msg::PhaseDone(_) => OP_PHASE_DONE,
+        Msg::Abort => OP_ABORT,
+        Msg::AbortAck => OP_ABORT_ACK,
+        Msg::Shutdown => OP_SHUTDOWN,
+        Msg::Error { .. } => OP_ERROR,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire observability: per-connection byte/frame counters.
+// ---------------------------------------------------------------------
+
+/// Per-connection wire counters: bytes and frames by direction and
+/// frame type.  Relaxed atomics so the sender and handler threads of a
+/// connection can share one instance; every frame is counted exactly
+/// once by whichever thread moved it, so totals are exact.
+pub struct WireStats {
+    sent_frames: [AtomicU64; OP_LIMIT],
+    sent_bytes: [AtomicU64; OP_LIMIT],
+    recv_frames: [AtomicU64; OP_LIMIT],
+    recv_bytes: [AtomicU64; OP_LIMIT],
+}
+
+impl Default for WireStats {
+    fn default() -> Self {
+        WireStats {
+            sent_frames: std::array::from_fn(|_| AtomicU64::new(0)),
+            sent_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+            recv_frames: std::array::from_fn(|_| AtomicU64::new(0)),
+            recv_bytes: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl WireStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn slot(op: u8) -> usize {
+        let i = op as usize;
+        if i < OP_LIMIT {
+            i
+        } else {
+            0
+        }
+    }
+
+    /// Count one sent frame (`bytes` includes the 6-byte header).
+    pub fn count_sent(&self, op: u8, bytes: usize) {
+        let i = Self::slot(op);
+        self.sent_frames[i].fetch_add(1, Ordering::Relaxed);
+        self.sent_bytes[i].fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count one received frame (`bytes` includes the 6-byte header).
+    pub fn count_recv(&self, op: u8, bytes: usize) {
+        let i = Self::slot(op);
+        self.recv_frames[i].fetch_add(1, Ordering::Relaxed);
+        self.recv_bytes[i].fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough snapshot (counters only ever grow).
+    pub fn totals(&self) -> WireTotals {
+        let mut t = WireTotals::default();
+        for i in 0..OP_LIMIT {
+            let o = &mut t.per_op[i];
+            o.sent_frames = self.sent_frames[i].load(Ordering::Relaxed);
+            o.sent_bytes = self.sent_bytes[i].load(Ordering::Relaxed);
+            o.recv_frames = self.recv_frames[i].load(Ordering::Relaxed);
+            o.recv_bytes = self.recv_bytes[i].load(Ordering::Relaxed);
+            t.sent_frames += o.sent_frames;
+            t.sent_bytes += o.sent_bytes;
+            t.recv_frames += o.recv_frames;
+            t.recv_bytes += o.recv_bytes;
+        }
+        t
+    }
+}
+
+/// One frame type's share of a [`WireTotals`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpTotals {
+    pub sent_frames: u64,
+    pub sent_bytes: u64,
+    pub recv_frames: u64,
+    pub recv_bytes: u64,
+}
+
+/// Snapshot of wire traffic, overall and per frame type.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireTotals {
+    pub sent_frames: u64,
+    pub sent_bytes: u64,
+    pub recv_frames: u64,
+    pub recv_bytes: u64,
+    pub per_op: [OpTotals; OP_LIMIT],
+}
+
+impl WireTotals {
+    /// Total bytes moved in either direction.
+    pub fn bytes(&self) -> u64 {
+        self.sent_bytes + self.recv_bytes
+    }
+
+    /// Fold another snapshot in (summing a fleet of connections).
+    pub fn absorb(&mut self, other: &WireTotals) {
+        self.sent_frames += other.sent_frames;
+        self.sent_bytes += other.sent_bytes;
+        self.recv_frames += other.recv_frames;
+        self.recv_bytes += other.recv_bytes;
+        for (a, b) in self.per_op.iter_mut().zip(other.per_op.iter()) {
+            a.sent_frames += b.sent_frames;
+            a.sent_bytes += b.sent_bytes;
+            a.recv_frames += b.recv_frames;
+            a.recv_bytes += b.recv_bytes;
+        }
+    }
+
+    /// One-line-per-frame-type summary for logs (quiet ops omitted).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "sent {} B / {} frames, recv {} B / {} frames",
+            self.sent_bytes, self.sent_frames, self.recv_bytes, self.recv_frames
+        );
+        for (op, o) in self.per_op.iter().enumerate() {
+            if o.sent_frames + o.recv_frames > 0 {
+                s.push_str(&format!(
+                    "\n    {:<15} sent {} B / {}, recv {} B / {}",
+                    op_name(op as u8),
+                    o.sent_bytes,
+                    o.sent_frames,
+                    o.recv_bytes,
+                    o.recv_frames
+                ));
+            }
+        }
+        s
+    }
 }
 
 /// Read one frame's payload; `Ok(None)` on clean EOF at a frame
@@ -210,6 +469,9 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
             Err(e) => return Err(FrameError::Io(e)),
         }
     }
+    // Magic + version are validated before the length field is parsed:
+    // a skewed peer's length claim is never trusted, sized, or
+    // allocated for.
     if header[0] != MAGIC || header[1] != VERSION {
         return Err(FrameError::UnsupportedVersion { magic: header[0], version: header[1] });
     }
@@ -249,9 +511,30 @@ pub fn read_msg(r: &mut impl Read) -> Result<Option<Msg>> {
     }
 }
 
+/// [`read_msg`], counting the frame into `stats`.
+pub fn read_msg_counted(r: &mut impl Read, stats: &WireStats) -> Result<Option<Msg>> {
+    match read_frame(r) {
+        Ok(Some(payload)) => {
+            stats.count_recv(payload.first().copied().unwrap_or(0), payload.len() + 6);
+            Ok(Some(decode(&payload)?))
+        }
+        Ok(None) => Ok(None),
+        Err(e) => Err(e.into()),
+    }
+}
+
 /// Encode, frame, write, and flush one message.
 pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
     w.write_all(&encode(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// [`write_msg`], counting the frame into `stats`.
+pub fn write_msg_counted(w: &mut impl Write, msg: &Msg, stats: &WireStats) -> Result<()> {
+    let frame = encode(msg);
+    stats.count_sent(opcode(msg), frame.len());
+    w.write_all(&frame)?;
     w.flush()?;
     Ok(())
 }
@@ -260,7 +543,13 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
 pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut p = Vec::new();
     match msg {
-        Msg::Hello => p.push(OP_HELLO),
+        Msg::Hello { fingerprints } => {
+            p.push(OP_HELLO);
+            p.extend_from_slice(&(fingerprints.len() as u32).to_le_bytes());
+            for fp in fingerprints {
+                p.extend_from_slice(fp);
+            }
+        }
         Msg::Welcome { model } => {
             p.push(OP_WELCOME);
             put_str(&mut p, model);
@@ -270,13 +559,28 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_leaves(&mut p, leaves);
             p.extend_from_slice(digest);
         }
+        Msg::SyncAck { digest } => {
+            p.push(OP_SYNC_ACK);
+            p.extend_from_slice(digest);
+        }
+        Msg::DatasetLoad(dl) => {
+            p.push(OP_DATASET_LOAD);
+            for v in [dl.id, dl.hw, dl.channels, dl.classes] {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            p.extend_from_slice(&dl.fingerprint);
+            put_f32s(&mut p, &dl.images);
+            put_i32s(&mut p, &dl.labels);
+        }
         Msg::PhaseStart(ps) => {
             p.push(OP_PHASE_START);
+            let indexed = matches!(ps.data, PhaseData::Indexed { .. });
             let flags = (ps.train as u8)
                 | (ps.backward as u8) << 1
                 | (ps.want_bn as u8) << 2
                 | (ps.coeffs.is_some() as u8) << 3
-                | (ps.teacher.is_some() as u8) << 4;
+                | (ps.teacher.is_some() as u8) << 4
+                | (indexed as u8) << 5;
             p.push(flags);
             for v in [
                 ps.classes,
@@ -293,8 +597,16 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 put_rows(&mut p, cw);
                 put_rows(&mut p, cx);
             }
-            put_f32s(&mut p, &ps.x);
-            put_i32s(&mut p, &ps.y);
+            match &ps.data {
+                PhaseData::Inline { x, y } => {
+                    put_f32s(&mut p, x);
+                    put_i32s(&mut p, y);
+                }
+                PhaseData::Indexed { dataset, idx } => {
+                    p.extend_from_slice(&dataset.to_le_bytes());
+                    put_u32s(&mut p, idx);
+                }
+            }
             if let Some(t) = &ps.teacher {
                 put_f32s(&mut p, t);
             }
@@ -344,16 +656,41 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
     let mut rd = Rd { b: payload, at: 0 };
     let op = rd.u8("opcode")?;
     let msg = match op {
-        OP_HELLO => Msg::Hello,
+        OP_HELLO => {
+            let n = rd.count("dataset fingerprints", 32)?;
+            let mut fingerprints = Vec::with_capacity(n);
+            for _ in 0..n {
+                fingerprints.push(rd.bytes32("dataset fingerprint")?);
+            }
+            Msg::Hello { fingerprints }
+        }
         OP_WELCOME => Msg::Welcome { model: rd.str("model name")? },
         OP_STATE_SYNC => {
             let leaves = rd.leaves("state leaves")?;
             let digest = rd.bytes32("view digest")?;
             Msg::StateSync { leaves, digest }
         }
+        OP_SYNC_ACK => Msg::SyncAck { digest: rd.bytes32("ack digest")? },
+        OP_DATASET_LOAD => {
+            let id = rd.u32("dataset id")?;
+            let hw = rd.u32("dataset hw")?;
+            let channels = rd.u32("dataset channels")?;
+            let classes = rd.u32("dataset classes")?;
+            let fingerprint = rd.bytes32("dataset fingerprint")?;
+            let images = rd.f32s("dataset images")?;
+            let labels = rd.i32s("dataset labels")?;
+            let expect = labels.len() as u64 * hw as u64 * hw as u64 * channels as u64;
+            ensure!(
+                images.len() as u64 == expect,
+                "dataset-load geometry mismatch: {} image values for {} labels × {hw}×{hw}×{channels}",
+                images.len(),
+                labels.len()
+            );
+            Msg::DatasetLoad(DatasetLoad { id, hw, channels, classes, fingerprint, images, labels })
+        }
         OP_PHASE_START => {
             let flags = rd.u8("phase flags")?;
-            ensure!(flags & !0x1F == 0, "unknown phase flag bits 0x{flags:02x}");
+            ensure!(flags & !0x3F == 0, "unknown phase flag bits 0x{flags:02x}");
             let classes = rd.u32("classes")?;
             let global_batch = rd.u32("global batch")?;
             let chunk_size = rd.u32("chunk size")?;
@@ -366,9 +703,31 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
             } else {
                 None
             };
-            let x = rd.f32s("examples")?;
-            let y = rd.i32s("labels")?;
+            let data = if flags & 0x20 != 0 {
+                let dataset = rd.u32("dataset id")?;
+                let idx = rd.u32s("example indices")?;
+                PhaseData::Indexed { dataset, idx }
+            } else {
+                let x = rd.f32s("examples")?;
+                let y = rd.i32s("labels")?;
+                PhaseData::Inline { x, y }
+            };
             let teacher = if flags & 0x10 != 0 { Some(rd.f32s("teacher logits")?) } else { None };
+            // Zero-work geometry is refused typed instead of silently
+            // planning an empty phase (satellite of ISSUE 10).
+            for (field, v) in [
+                ("global_batch", global_batch),
+                ("chunk_size", chunk_size),
+                ("total_chunks", total_chunks),
+                ("shards", shards),
+            ] {
+                if v == 0 {
+                    return Err(ZeroChunkPhaseStart { field }.into());
+                }
+            }
+            if data.examples() == 0 {
+                return Err(ZeroChunkPhaseStart { field: "examples" }.into());
+            }
             Msg::PhaseStart(PhaseStart {
                 train: flags & 0x01 != 0,
                 backward: flags & 0x02 != 0,
@@ -381,8 +740,7 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
                 shards,
                 mu,
                 coeffs,
-                x,
-                y,
+                data,
                 teacher,
             })
         }
@@ -419,17 +777,51 @@ pub fn decode(payload: &[u8]) -> Result<Msg> {
     Ok(msg)
 }
 
-/// sha256 over a state view in leaf order (`path bytes ‖ len u32 LE ‖
-/// f32 LE values` per leaf) — what `StateSync` frames carry and both
-/// sides recompute to verify the sync.
-pub fn view_digest<'a>(leaves: impl Iterator<Item = (&'a str, &'a [f32])>) -> [u8; 32] {
+/// sha256 of one state-view leaf: `path bytes ‖ len u32 LE ‖ f32 LE
+/// values`.  The full-view digest is a hash over these per-leaf
+/// digests, so either side can update its view digest incrementally —
+/// rehashing only leaves a delta touched, O(changed bytes + 32·leaves)
+/// instead of O(view bytes).
+pub fn leaf_digest(path: &str, vals: &[f32]) -> [u8; 32] {
     let mut h = Sha256::new();
-    for (path, vals) in leaves {
-        h.update(path.as_bytes());
-        h.update(&(vals.len() as u32).to_le_bytes());
-        for v in vals {
-            h.update(&v.to_le_bytes());
-        }
+    h.update(path.as_bytes());
+    h.update(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        h.update(&v.to_le_bytes());
+    }
+    h.finalize()
+}
+
+/// sha256 over a state view in leaf order — what `StateSync` frames
+/// carry and both sides recompute to verify the sync.  Defined as a
+/// hash of the per-leaf digests ([`leaf_digest`]) so it composes with
+/// incremental per-leaf caching.
+pub fn view_digest<'a>(leaves: impl Iterator<Item = (&'a str, &'a [f32])>) -> [u8; 32] {
+    digest_of_leaf_digests(leaves.map(|(path, vals)| leaf_digest(path, vals)))
+}
+
+/// Fold already-computed per-leaf digests into the full-view digest.
+pub fn digest_of_leaf_digests(digests: impl Iterator<Item = [u8; 32]>) -> [u8; 32] {
+    let mut h = Sha256::new();
+    for d in digests {
+        h.update(&d);
+    }
+    h.finalize()
+}
+
+/// sha256 fingerprint of a dataset's full contents (geometry header +
+/// image values + labels, all LE) — coordinator and workers use it to
+/// prove they batch over identical bytes.
+pub fn dataset_fingerprint(hw: u32, channels: u32, classes: u32, images: &[f32], labels: &[i32]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    for v in [hw, channels, classes, images.len() as u32, labels.len() as u32] {
+        h.update(&v.to_le_bytes());
+    }
+    for v in images {
+        h.update(&v.to_le_bytes());
+    }
+    for v in labels {
+        h.update(&v.to_le_bytes());
     }
     h.finalize()
 }
@@ -455,6 +847,13 @@ fn put_f64s(p: &mut Vec<u8>, v: &[f64]) {
 }
 
 fn put_i32s(p: &mut Vec<u8>, v: &[i32]) {
+    p.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(p: &mut Vec<u8>, v: &[u32]) {
     p.extend_from_slice(&(v.len() as u32).to_le_bytes());
     for x in v {
         p.extend_from_slice(&x.to_le_bytes());
@@ -591,6 +990,15 @@ impl<'a> Rd<'a> {
         Ok(v)
     }
 
+    fn u32s(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.count(what, 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32(what)?);
+        }
+        Ok(v)
+    }
+
     fn rows(&mut self, what: &str) -> Result<Vec<Vec<f32>>> {
         // Each row costs ≥ 4 bytes (its own count).
         let n = self.count(what, 4)?;
@@ -642,16 +1050,34 @@ mod tests {
                 vec![vec![0.25, 0.5, 0.25], vec![1.0, 0.0, 0.0]],
                 vec![vec![0.1, 0.2, 0.7], vec![0.0, 0.0, 1.0]],
             )),
-            x: vec![0.5, -1.25, f32::MIN_POSITIVE],
-            y: vec![3, -1, 0],
+            data: PhaseData::Inline { x: vec![0.5, -1.25, f32::MIN_POSITIVE], y: vec![3, -1, 0] },
             teacher: Some(vec![0.125; 6]),
+        })
+    }
+
+    fn sample_indexed_phase_start() -> Msg {
+        Msg::PhaseStart(PhaseStart {
+            train: true,
+            backward: true,
+            want_bn: false,
+            classes: 10,
+            global_batch: 64,
+            chunk_size: 16,
+            chunk0: 1,
+            total_chunks: 4,
+            shards: 3,
+            mu: 0.0,
+            coeffs: Some((vec![vec![0.5, 0.5]], vec![vec![1.0, 0.0]])),
+            data: PhaseData::Indexed { dataset: 2, idx: vec![17, 0, 191, 3] },
+            teacher: None,
         })
     }
 
     #[test]
     fn all_messages_roundtrip() {
         let msgs = [
-            Msg::Hello,
+            Msg::Hello { fingerprints: vec![] },
+            Msg::Hello { fingerprints: vec![[3u8; 32], [255u8; 32]] },
             Msg::Welcome { model: "resnet8_tiny".into() },
             Msg::StateSync {
                 leaves: vec![
@@ -660,7 +1086,29 @@ mod tests {
                 ],
                 digest: [7u8; 32],
             },
+            Msg::StateSync { leaves: vec![], digest: [1u8; 32] },
+            Msg::SyncAck { digest: [0xABu8; 32] },
+            Msg::DatasetLoad(DatasetLoad {
+                id: 1,
+                hw: 2,
+                channels: 3,
+                classes: 10,
+                fingerprint: [9u8; 32],
+                images: vec![0.5; 2 * 2 * 3 * 2],
+                labels: vec![4, 7],
+            }),
+            // Bind-by-fingerprint form: no rows, worker already holds it.
+            Msg::DatasetLoad(DatasetLoad {
+                id: 3,
+                hw: 8,
+                channels: 3,
+                classes: 10,
+                fingerprint: [12u8; 32],
+                images: vec![],
+                labels: vec![],
+            }),
             sample_phase_start(),
+            sample_indexed_phase_start(),
             Msg::PhaseStart(PhaseStart {
                 train: false,
                 backward: false,
@@ -673,8 +1121,7 @@ mod tests {
                 shards: 1,
                 mu: 0.0,
                 coeffs: None,
-                x: vec![],
-                y: vec![],
+                data: PhaseData::Inline { x: vec![0.25; 4], y: vec![1] },
                 teacher: None,
             }),
             Msg::MomentPart { chunk0: 1, m: 3, parts: vec![1.5, -2.25, 1e300, 0.0, -0.0, 7.0] },
@@ -714,6 +1161,30 @@ mod tests {
     }
 
     #[test]
+    fn version_skew_is_refused_before_the_length_field_is_trusted() {
+        // A v1 frame whose length field claims 4 GiB: the typed skew
+        // refusal must fire on the version byte, not Oversized — the
+        // length of a skewed frame is never parsed or trusted.
+        let mut v1 = vec![MAGIC, 0x01];
+        v1.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r: &[u8] = &v1;
+        match read_frame(&mut r) {
+            Err(FrameError::UnsupportedVersion { magic, version }) => {
+                assert_eq!((magic, version), (MAGIC, 0x01));
+            }
+            other => panic!("v1 frame must refuse as version skew, got {other:?}"),
+        }
+        // A future-version frame gets the same treatment, and its
+        // Display names both versions so operators see the skew.
+        let mut v9 = vec![MAGIC, 0x09];
+        v9.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r: &[u8] = &v9;
+        let err = read_frame(&mut r).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version skew") && msg.contains("0x09") && msg.contains("0x02"), "{msg}");
+    }
+
+    #[test]
     fn clean_eof_torn_header_torn_payload_oversized() {
         let mut empty: &[u8] = &[];
         assert!(read_frame(&mut empty).unwrap().is_none(), "EOF at a boundary is clean");
@@ -746,6 +1217,66 @@ mod tests {
         }
         p.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&p).is_err());
+        // Hello claiming a huge fingerprint count.
+        let mut p = vec![OP_HELLO];
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&p).is_err());
+        // Indexed PhaseStart claiming a huge index count.
+        let frame = encode(&sample_indexed_phase_start());
+        let mut p = frame[6..].to_vec();
+        let lying = p.len() - 4 * 4 - 4; // overwrite the idx count field
+        p[lying..lying + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&p).is_err());
+    }
+
+    #[test]
+    fn zero_work_phase_starts_are_refused_typed() {
+        let zeroed = |patch: fn(&mut PhaseStart)| {
+            let Msg::PhaseStart(mut ps) = sample_indexed_phase_start() else { unreachable!() };
+            patch(&mut ps);
+            let frame = encode(&Msg::PhaseStart(ps));
+            decode(&frame[6..]).unwrap_err()
+        };
+        let cases: [(fn(&mut PhaseStart), &str); 5] = [
+            (|ps| ps.chunk_size = 0, "chunk_size"),
+            (|ps| ps.total_chunks = 0, "total_chunks"),
+            (|ps| ps.global_batch = 0, "global_batch"),
+            (|ps| ps.shards = 0, "shards"),
+            (|ps| ps.data = PhaseData::Indexed { dataset: 0, idx: vec![] }, "examples"),
+        ];
+        for (patch, field) in cases {
+            let err = zeroed(patch);
+            let typed = err
+                .downcast_ref::<ZeroChunkPhaseStart>()
+                .unwrap_or_else(|| panic!("{field}: want ZeroChunkPhaseStart, got {err}"));
+            assert_eq!(typed.field, field);
+        }
+        // The inline form's empty example set is refused the same way.
+        let Msg::PhaseStart(mut ps) = sample_phase_start() else { unreachable!() };
+        ps.data = PhaseData::Inline { x: vec![], y: vec![] };
+        ps.teacher = None;
+        let frame = encode(&Msg::PhaseStart(ps));
+        let err = decode(&frame[6..]).unwrap_err();
+        assert!(err.downcast_ref::<ZeroChunkPhaseStart>().is_some(), "{err}");
+    }
+
+    #[test]
+    fn dataset_load_geometry_mismatch_is_rejected() {
+        let mut dl = DatasetLoad {
+            id: 0,
+            hw: 2,
+            channels: 1,
+            classes: 4,
+            fingerprint: [0u8; 32],
+            images: vec![0.0; 8],
+            labels: vec![1, 2],
+        };
+        let frame = encode(&Msg::DatasetLoad(dl.clone()));
+        assert!(decode(&frame[6..]).is_ok());
+        dl.images.pop();
+        let frame = encode(&Msg::DatasetLoad(dl));
+        let err = decode(&frame[6..]).unwrap_err();
+        assert!(err.to_string().contains("geometry mismatch"), "{err}");
     }
 
     #[test]
@@ -754,7 +1285,8 @@ mod tests {
         assert!(decode(&[0x42]).is_err(), "unknown opcode");
         assert!(decode(&[OP_WELCOME, 9, 0]).is_err(), "torn model string");
         assert!(decode(&[OP_PHASE_START, 0xFF]).is_err(), "unknown flag bits");
-        assert!(decode(&[OP_HELLO, 0]).is_err(), "trailing bytes");
+        assert!(decode(&[OP_HELLO]).is_err(), "hello missing fingerprint count");
+        assert!(decode(&[OP_ABORT, 0]).is_err(), "trailing bytes");
         // Non-UTF-8 leaf path.
         let mut p = vec![OP_STATE_SYNC];
         p.extend_from_slice(&1u32.to_le_bytes());
@@ -773,5 +1305,61 @@ mod tests {
         assert_eq!(da, view_digest(a.iter().copied()), "deterministic");
         assert_ne!(da, view_digest(b.iter().copied()), "order-sensitive");
         assert_ne!(da, view_digest(c.iter().copied()), "value-sensitive");
+    }
+
+    #[test]
+    fn incremental_view_digest_matches_full_recompute() {
+        // The pipelined sync path folds cached per-leaf digests; it
+        // must land on the same bytes as hashing the view from scratch.
+        let leaves = [("p/a", &[1.0f32, -0.0][..]), ("p/b", &[f32::NAN][..]), ("p/c", &[][..])];
+        let full = view_digest(leaves.iter().copied());
+        let cached =
+            digest_of_leaf_digests(leaves.iter().map(|(p, v)| leaf_digest(p, v)));
+        assert_eq!(full, cached);
+    }
+
+    #[test]
+    fn dataset_fingerprint_is_content_and_geometry_sensitive() {
+        let base = dataset_fingerprint(2, 3, 10, &[1.0, 2.0], &[7]);
+        assert_eq!(base, dataset_fingerprint(2, 3, 10, &[1.0, 2.0], &[7]), "deterministic");
+        assert_ne!(base, dataset_fingerprint(3, 2, 10, &[1.0, 2.0], &[7]), "geometry-sensitive");
+        assert_ne!(base, dataset_fingerprint(2, 3, 10, &[1.0, 2.5], &[7]), "value-sensitive");
+        assert_ne!(base, dataset_fingerprint(2, 3, 10, &[1.0, 2.0], &[8]), "label-sensitive");
+    }
+
+    #[test]
+    fn wire_stats_count_by_direction_and_op() {
+        let stats = WireStats::new();
+        let hello = encode(&Msg::Hello { fingerprints: vec![] });
+        stats.count_sent(OP_HELLO, hello.len());
+        stats.count_recv(OP_PHASE_DONE, 100);
+        stats.count_recv(OP_PHASE_DONE, 50);
+        stats.count_recv(0xEE, 9); // unknown ops land in slot 0
+        let t = stats.totals();
+        assert_eq!(t.sent_frames, 1);
+        assert_eq!(t.sent_bytes, hello.len() as u64);
+        assert_eq!(t.recv_frames, 3);
+        assert_eq!(t.recv_bytes, 159);
+        assert_eq!(t.per_op[OP_PHASE_DONE as usize].recv_frames, 2);
+        assert_eq!(t.per_op[OP_PHASE_DONE as usize].recv_bytes, 150);
+        assert_eq!(t.per_op[0].recv_frames, 1);
+        let mut sum = WireTotals::default();
+        sum.absorb(&t);
+        sum.absorb(&t);
+        assert_eq!(sum.bytes(), 2 * t.bytes());
+        assert!(t.summary().contains("phase-done"));
+    }
+
+    #[test]
+    fn counted_io_counts_header_bytes() {
+        let stats = WireStats::new();
+        let mut buf = Vec::new();
+        write_msg_counted(&mut buf, &Msg::Abort, &stats).unwrap();
+        let mut r = &buf[..];
+        let got = read_msg_counted(&mut r, &stats).unwrap().unwrap();
+        assert_eq!(got, Msg::Abort);
+        let t = stats.totals();
+        assert_eq!(t.sent_bytes, buf.len() as u64);
+        assert_eq!(t.recv_bytes, buf.len() as u64, "recv counts header + payload");
     }
 }

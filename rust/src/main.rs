@@ -41,7 +41,8 @@ USAGE: ebs <subcommand> [--config <toml>] [flags]
                   [--shards N] [--ckpt-every N] [--resume <search_resume.ckpt>]
   worker          cluster worker process: executes chunk ranges for a
                   coordinator (DESIGN.md §18) --connect HOST:PORT
-                  [--threads N] [--fault phase:N|moment:N (tests only)]
+                  [--threads N]
+                  [--fault phase:N|moment:N|sync:N (tests only)]
   deploy          BD-engine inference from a pipeline run directory; seals the
                   run dir into a versioned deployment artifact
                   [--exec auto|serial|tiled|parallel] [--threads N] [--batch N]
@@ -72,7 +73,11 @@ Common flags: --config <file> --model <name> --artifacts <dir> --out <dir>
               --cluster H:P --workers N  (distributed replicas: listen on
               H:P, spawn N local worker processes — external workers dial
               in with `ebs worker --connect`; bit-identical to in-process
-              sharding at any worker count — see DESIGN.md §18)";
+              sharding at any worker count — see DESIGN.md §18)
+              --wire index|payload  (cluster phase batches: 'index' ships
+              example indices to worker-resident datasets — the default,
+              ~10x+ less wire traffic; 'payload' ships batch tensors
+              inline; bit-identical results either way)";
 
 fn main() {
     if let Err(e) = run() {
@@ -122,6 +127,9 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(w) = args.flag("workers") {
         cfg.cluster.workers = w.parse().context("--workers must be an integer")?;
     }
+    if let Some(w) = args.flag("wire") {
+        cfg.cluster.wire = w.to_string();
+    }
     Ok(cfg)
 }
 
@@ -168,10 +176,14 @@ fn open_exec(cfg: &RunConfig) -> Result<StepExecutor> {
 /// with `ebs worker --connect`).
 fn apply_cluster(cfg: &RunConfig, exec: &mut StepExecutor, chunks: usize) -> Result<()> {
     let mut ct = ebs::exec::ClusterTransport::listen(&cfg.cluster.listen, &cfg.model)?;
+    if !cfg.cluster.wire.is_empty() {
+        ct.set_wire_mode(ebs::exec::WireMode::parse(&cfg.cluster.wire)?);
+    }
     eprintln!(
-        "[cluster] coordinator on {} ({} chunks/step)",
+        "[cluster] coordinator on {} ({} chunks/step, {} wire)",
         ct.local_addr()?,
-        chunks
+        chunks,
+        ct.wire_mode().name()
     );
     if cfg.cluster.workers > 0 {
         ct.spawn_local_workers(cfg.cluster.workers)?;

@@ -35,6 +35,7 @@ use std::collections::HashMap;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::flops::{FlopsModel, MIXED_DIVISOR};
+use crate::exec::transport::BatchSource;
 use crate::exec::{ChunkTransport, InProcessTransport, PhaseSpec, ShardSpec};
 use crate::runtime::{Backend, Manifest, Metrics, StateVec, Tensor};
 use crate::util::Rng;
@@ -86,6 +87,37 @@ fn io_f32<'a>(io: &'a [(String, Tensor)], name: &str) -> Result<&'a [f32]> {
 
 fn io_scalar(io: &[(String, Tensor)], name: &str) -> Result<f32> {
     io_get(io, name)?.item_f32()
+}
+
+/// Optional index side-channel for a batch input: a `{name}_src` io
+/// entry carrying `[dataset_id, idx0, idx1, …]` as f32 (exact for
+/// integers ≤ 2²⁴ — far beyond any dataset here).  Drivers attach it
+/// when the batch came from a transport-hosted dataset so the cluster
+/// transport can ship indices instead of pixels (DESIGN.md §18);
+/// absence means payload mode.  Backends and graphs that don't know
+/// the key ignore extra io entries, so attaching is always safe.
+fn io_source(
+    io: &[(String, Tensor)],
+    name: &str,
+    batch: usize,
+) -> Result<Option<(u32, Vec<u32>)>> {
+    let key = format!("{name}_src");
+    let Some((_, t)) = io.iter().find(|(k, _)| *k == key) else {
+        return Ok(None);
+    };
+    let v = t.as_f32()?;
+    ensure!(
+        v.len() == batch + 1,
+        "'{key}' carries {} values, expected dataset id + {batch} indices",
+        v.len()
+    );
+    Ok(Some((v[0] as u32, v[1..].iter().map(|&f| f as u32).collect())))
+}
+
+/// Borrow an [`io_source`] result as the [`BatchSource`] a `PhaseSpec`
+/// wants.
+fn as_source(parsed: &Option<(u32, Vec<u32>)>) -> Option<BatchSource<'_>> {
+    parsed.as_ref().map(|(d, v)| BatchSource { dataset: *d, idx: v })
 }
 
 impl NativeBackend {
@@ -338,6 +370,7 @@ impl NativeBackend {
         lr: f32,
         wd: f32,
         teacher: Option<(&[f32], f32)>,
+        source: Option<BatchSource<'_>>,
     ) -> Result<(f32, f32)> {
         let batch = y.len();
         let spec = PhaseSpec {
@@ -347,6 +380,7 @@ impl NativeBackend {
             coeffs,
             x,
             y,
+            source,
             teacher,
             shards: self.shards.shards,
             chunks: self.shards.chunks,
@@ -378,6 +412,7 @@ impl NativeBackend {
         lr_arch: f32,
         lam: f32,
         target: f32,
+        source: Option<BatchSource<'_>>,
     ) -> Result<(f32, f32, f32)> {
         let batch = yv.len();
         let coeffs = self.coeffs_from_state(state, sto)?;
@@ -388,6 +423,7 @@ impl NativeBackend {
             coeffs: Some(&coeffs),
             x: xv,
             y: yv,
+            source,
             teacher: None,
             shards: self.shards.shards,
             chunks: self.shards.chunks,
@@ -411,6 +447,7 @@ impl NativeBackend {
         let x = io_f32(io, "x")?;
         let y = io_get(io, "y")?.as_i32()?;
         let batch = y.len();
+        let src = io_source(io, "x", batch)?;
         let spec = PhaseSpec {
             train: false,
             backward: false,
@@ -418,6 +455,7 @@ impl NativeBackend {
             coeffs,
             x,
             y,
+            source: as_source(&src),
             teacher: None,
             shards: self.shards.shards,
             chunks: self.shards.chunks,
@@ -459,11 +497,14 @@ impl NativeBackend {
             None
         };
 
+        let ti = io_source(io, "xt", yt.len())?;
+        let vi = io_source(io, "xv", yv.len())?;
         let coeffs = self.coeffs_from_state(state, sto)?;
-        let (train_loss, _) =
-            self.weight_phase_sharded(state, Some(&coeffs), xt, yt, lr_w, wd, None)?;
+        let (train_loss, _) = self.weight_phase_sharded(
+            state, Some(&coeffs), xt, yt, lr_w, wd, None, as_source(&ti),
+        )?;
         let (val_loss, correct, eflops) =
-            self.arch_phase_sharded(state, sto, xv, yv, lr_arch, lam, target)?;
+            self.arch_phase_sharded(state, sto, xv, yv, lr_arch, lam, target, as_source(&vi))?;
 
         let mut m = Metrics::new();
         m.insert("eflops".into(), Tensor::scalar_f32(eflops));
@@ -579,6 +620,14 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    fn host_dataset(&mut self, id: u32, ds: &crate::data::Dataset) -> Result<()> {
+        self.transport.host_dataset(id, ds)
+    }
+
+    fn wire_stats(&self) -> Option<crate::exec::wire::WireTotals> {
+        self.transport.wire_stats()
+    }
+
     /// The sharded-step dispatch (DESIGN.md §14).  Train/search/eval
     /// graphs fan out over the configured replicas with shard-invariant
     /// chunked reductions; graphs without a sharded lowering (infer),
@@ -600,7 +649,10 @@ impl Backend for NativeBackend {
                 let y = io_get(io, "y")?.as_i32()?;
                 let lr = io_scalar(io, "lr")?;
                 let wd = io_scalar(io, "wd")?;
-                let (loss, acc) = self.weight_phase_sharded(state, None, x, y, lr, wd, None)?;
+                let src = io_source(io, "x", y.len())?;
+                let (loss, acc) = self.weight_phase_sharded(
+                    state, None, x, y, lr, wd, None, as_source(&src),
+                )?;
                 let mut m = Metrics::new();
                 m.insert("loss".into(), Tensor::scalar_f32(loss));
                 m.insert("acc".into(), Tensor::scalar_f32(acc));
@@ -617,8 +669,10 @@ impl Backend for NativeBackend {
                 let teacher = io_f32(io, "teacher")?;
                 let lr = io_scalar(io, "lr")?;
                 let wd = io_scalar(io, "wd")?;
+                let src = io_source(io, "x", y.len())?;
                 let (loss, acc) = self.weight_phase_sharded(
                     state, Some(&coeffs), x, y, lr, wd, Some((teacher, mu)),
+                    as_source(&src),
                 )?;
                 let mut m = Metrics::new();
                 m.insert("loss".into(), Tensor::scalar_f32(loss));

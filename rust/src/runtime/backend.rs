@@ -73,6 +73,22 @@ pub trait Backend {
         bail!("backend '{}' has no pluggable replica transport", self.name())
     }
 
+    /// Register a dataset with the replica transport so later sharded
+    /// steps may pass batches by example index (`*_src` io entries;
+    /// DESIGN.md §18).  Backends whose transports resolve batches from
+    /// the materialized tensors need nothing — the default is a no-op —
+    /// so drivers can call this unconditionally.
+    fn host_dataset(&mut self, id: u32, ds: &crate::data::Dataset) -> Result<()> {
+        let _ = (id, ds);
+        Ok(())
+    }
+
+    /// Cumulative transport wire traffic, when the configured transport
+    /// has a wire at all (cluster); None otherwise.
+    fn wire_stats(&self) -> Option<crate::exec::wire::WireTotals> {
+        None
+    }
+
     /// Execute one step graph under the sharding configured via
     /// [`Backend::set_shards`].  Same contract as [`Backend::run`];
     /// backends that cannot shard (or graphs that have no sharded

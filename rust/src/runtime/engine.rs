@@ -147,6 +147,19 @@ impl Engine {
         self.backend.set_transport(transport)
     }
 
+    /// Register a dataset with the sharded path's transport so drivers
+    /// can pass batches by example index (`*_src` io entries;
+    /// DESIGN.md §18).  No-op on transports without remote residency.
+    pub fn host_dataset(&mut self, id: u32, ds: &crate::data::Dataset) -> Result<()> {
+        self.backend.host_dataset(id, ds)
+    }
+
+    /// Cumulative transport wire traffic (cluster mode); None when the
+    /// configured transport has no wire.
+    pub fn wire_stats(&self) -> Option<crate::exec::wire::WireTotals> {
+        self.backend.wire_stats()
+    }
+
     /// Compile (or fetch cached) a graph by name; no-op on native.
     pub fn prepare(&mut self, graph: &str) -> Result<()> {
         self.backend.prepare(&self.manifest, graph)

@@ -1,8 +1,12 @@
 //! Coordinator/worker cluster transport tests (DESIGN.md §18): a
 //! same-seed search must be bit-identical whether replicas run as
 //! in-process pool threads or as workers behind [`ClusterTransport`] —
-//! at any worker count, and through injected worker deaths mid-epoch
-//! and mid-rendezvous (chunks requeued onto the survivors).
+//! at any worker count, in both wire modes (index-only phases against
+//! worker-resident datasets, and inline payload), under skewed
+//! throughput-aware chunk scheduling, and through injected worker
+//! deaths mid-epoch, mid-rendezvous, and mid-pipelined-sync (chunks
+//! requeued onto the survivors), including an elastic rejoin that binds
+//! a pre-seeded dataset by fingerprint.
 //!
 //! Workers here are real `run_worker` main loops on localhost TCP, run
 //! on std threads instead of child processes so the tests need no
@@ -10,27 +14,42 @@
 
 use std::time::Duration;
 
-use ebs::coordinator::{run_search, FlopsModel, RunLogger, SearchCfg, SearchResult};
-use ebs::data::synth::{generate, SynthSpec};
-use ebs::exec::{run_worker, ClusterTransport, ShardSpec, StepExecutor, WorkerFault};
+use ebs::coordinator::{
+    run_fp_train, run_retrain, run_search, FlopsModel, RunLogger, SearchCfg, SearchResult,
+    Selection, TrainCfg,
+};
+use ebs::data::synth::{generate, Dataset, SynthSpec};
+use ebs::exec::wire::OP_DATASET_LOAD;
+use ebs::exec::{
+    run_worker, run_worker_seeded, ClusterTransport, ShardSpec, StepExecutor, WireMode, WorkerFault,
+};
 
 mod common;
 use common::open_engine;
 
 const MODEL: &str = "resnet8_tiny";
 
-/// Fixed-seed Algorithm 1 on seeded tiny data through whatever
-/// transport `exec` carries.  Every run in this file shares the same
-/// data, seeds, and canonical `chunks = 4`, so results are comparable
-/// bit-for-bit across transports and worker counts.
-fn search_with(exec: &mut StepExecutor) -> SearchResult {
-    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
-    let target = flops.uniform_mflops(3);
+/// The seeded tiny task every run in this file shares: `(full_train,
+/// test)` for the training drivers, plus the deterministic search
+/// split.  One source of truth so cluster workers can be pre-seeded
+/// with byte-identical copies (fingerprint binding).
+fn search_data() -> (Dataset, Dataset, Dataset, Dataset) {
     let mut spec_data = SynthSpec::tiny(13);
     spec_data.n_train = 192;
     spec_data.n_test = 64;
-    let (train, _) = generate(&spec_data);
+    let (train, test) = generate(&spec_data);
     let (s_train, s_val) = train.split(0.5, 5);
+    (train, test, s_train, s_val)
+}
+
+/// Fixed-seed Algorithm 1 on seeded tiny data through whatever
+/// transport `exec` carries.  Every run in this file shares the same
+/// data, seeds, and canonical `chunks = 4`, so results are comparable
+/// bit-for-bit across transports, worker counts, and wire modes.
+fn search_with(exec: &mut StepExecutor) -> SearchResult {
+    let flops = FlopsModel::from_manifest(&exec.manifest).unwrap();
+    let target = flops.uniform_mflops(3);
+    let (_, _, s_train, s_val) = search_data();
     let mut logger = RunLogger::ephemeral();
     let cfg = SearchCfg {
         steps: 10,
@@ -51,18 +70,50 @@ fn in_process_search() -> SearchResult {
     search_with(&mut exec)
 }
 
+/// One cluster run's shape: the worker fleet (one entry per worker,
+/// faults included), the wire mode, an optional pre-seeded EWMA skew
+/// (uneven scheduler runs from step one), and an optional elastic
+/// rejoiner that dials in pre-seeded with the datasets.
+struct Fleet<'a> {
+    faults: &'a [WorkerFault],
+    wire: WireMode,
+    ewma_ms: Option<&'a [f64]>,
+    rejoin_seeded: bool,
+}
+
+impl Default for Fleet<'_> {
+    fn default() -> Self {
+        Fleet { faults: &[], wire: WireMode::Index, ewma_ms: None, rejoin_seeded: false }
+    }
+}
+
 /// Run the search behind a coordinator with one worker per fault spec
 /// (`WorkerFault::default()` = a healthy worker).  Workers dial in one
 /// at a time so fault specs target a known worker index.
-fn cluster_search(faults: &[WorkerFault]) -> SearchResult {
+fn cluster_search(fleet: Fleet) -> SearchResult {
     let mut exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(1, 4));
     let mut ct = ClusterTransport::listen("127.0.0.1:0", MODEL).unwrap();
+    ct.set_wire_mode(fleet.wire);
     let addr = ct.local_addr().unwrap().to_string();
     let mut workers = Vec::new();
-    for (i, &fault) in faults.iter().enumerate() {
+    for (i, &fault) in fleet.faults.iter().enumerate() {
         let dial = addr.clone();
         workers.push(std::thread::spawn(move || run_worker(&dial, 1, fault)));
         ct.wait_for_workers(i + 1, Duration::from_secs(30)).unwrap();
+    }
+    if let Some(ms) = fleet.ewma_ms {
+        ct.preset_ewma(ms);
+    }
+    if fleet.rejoin_seeded {
+        // An extra worker dials in already holding byte-identical
+        // dataset copies: the coordinator accepts it at the next phase
+        // boundary and its handshake binds the hosted ids to the
+        // advertised fingerprints instead of re-shipping content.
+        let (_, _, s_train, s_val) = search_data();
+        let dial = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            run_worker_seeded(&dial, 1, WorkerFault::default(), vec![s_train, s_val])
+        }));
     }
     exec.set_transport(Box::new(ct)).unwrap();
     let res = search_with(&mut exec);
@@ -78,10 +129,42 @@ fn cluster_search(faults: &[WorkerFault]) -> SearchResult {
 #[test]
 fn cluster_search_is_bit_identical_to_in_process() {
     let reference = in_process_search();
-    let one = cluster_search(&[WorkerFault::default()]);
-    assert_eq!(reference, one, "1-worker cluster must match the in-process pool bit-for-bit");
-    let two = cluster_search(&[WorkerFault::default(), WorkerFault::default()]);
-    assert_eq!(reference, two, "2-worker cluster must match the in-process pool bit-for-bit");
+    for n in [1usize, 2, 3] {
+        let faults = vec![WorkerFault::default(); n];
+        let got = cluster_search(Fleet { faults: &faults, ..Fleet::default() });
+        assert_eq!(
+            reference, got,
+            "{n}-worker index-mode cluster must match the in-process pool bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn payload_wire_mode_is_bit_identical_too() {
+    let reference = in_process_search();
+    let faults = [WorkerFault::default(), WorkerFault::default()];
+    let got = cluster_search(Fleet {
+        faults: &faults,
+        wire: WireMode::Payload,
+        ..Fleet::default()
+    });
+    assert_eq!(reference, got, "payload-mode cluster must match the in-process pool bit-for-bit");
+}
+
+/// A 9:1 pre-seeded latency skew makes the throughput-aware scheduler
+/// hand worker 0 most of the grid from the first step (contiguous
+/// whole-chunk runs, uneven sizes).  The combine order is the global
+/// chunk order regardless, so the bits cannot move.
+#[test]
+fn uneven_scheduler_chunk_runs_stay_bit_identical() {
+    let reference = in_process_search();
+    let faults = [WorkerFault::default(), WorkerFault::default()];
+    let got = cluster_search(Fleet {
+        faults: &faults,
+        ewma_ms: Some(&[1.0, 9.0]),
+        ..Fleet::default()
+    });
+    assert_eq!(reference, got, "skewed chunk runs must not change the bits");
 }
 
 /// Each search step dispatches the weight phase then the arch phase, so
@@ -92,10 +175,11 @@ fn cluster_search_is_bit_identical_to_in_process() {
 #[test]
 fn worker_killed_mid_epoch_is_requeued_bit_identically() {
     let reference = in_process_search();
-    let faulted = cluster_search(&[
+    let faults = [
         WorkerFault::default(),
-        WorkerFault { phase: Some(4), moment: None },
-    ]);
+        WorkerFault { phase: Some(4), ..WorkerFault::default() },
+    ];
+    let faulted = cluster_search(Fleet { faults: &faults, ..Fleet::default() });
     assert_eq!(
         reference, faulted,
         "search with a worker killed mid-epoch must stay bit-identical"
@@ -111,12 +195,156 @@ fn worker_killed_mid_epoch_is_requeued_bit_identically() {
 #[test]
 fn worker_killed_mid_rendezvous_is_requeued_bit_identically() {
     let reference = in_process_search();
-    let faulted = cluster_search(&[
+    let faults = [
         WorkerFault::default(),
-        WorkerFault { phase: None, moment: Some(5) },
-    ]);
+        WorkerFault { moment: Some(5), ..WorkerFault::default() },
+    ];
+    let faulted = cluster_search(Fleet { faults: &faults, ..Fleet::default() });
     assert_eq!(
         reference, faulted,
         "search with a worker killed mid-rendezvous must stay bit-identical"
     );
+}
+
+/// Worker 1 dies on the 4th pipelined StateSync *before acking it* —
+/// the coordinator has already fused [sync][phase] onto the socket, so
+/// the ack gate must catch the silence, abort the attempt, and re-plan
+/// on the survivor without ever starting a phase on stale weights.
+#[test]
+fn worker_killed_mid_pipelined_sync_is_requeued_bit_identically() {
+    let reference = in_process_search();
+    let faults = [
+        WorkerFault::default(),
+        WorkerFault { sync: Some(4), ..WorkerFault::default() },
+    ];
+    let faulted = cluster_search(Fleet { faults: &faults, ..Fleet::default() });
+    assert_eq!(
+        reference, faulted,
+        "search with a worker killed mid-pipelined-sync must stay bit-identical"
+    );
+}
+
+/// Elastic rejoin: worker 1 dies early (sync fault at phase 2), while a
+/// replacement that already holds byte-identical dataset copies dials
+/// in.  The coordinator accepts it at a phase boundary, its Hello
+/// fingerprints bind the hosted ids without re-shipping pixels, and the
+/// final bits match the uninterrupted run at any join timing.
+#[test]
+fn elastic_rejoin_with_seeded_datasets_stays_bit_identical() {
+    let reference = in_process_search();
+    let faults = [
+        WorkerFault::default(),
+        WorkerFault { sync: Some(2), ..WorkerFault::default() },
+    ];
+    let got = cluster_search(Fleet { faults: &faults, rejoin_seeded: true, ..Fleet::default() });
+    assert_eq!(reference, got, "elastic rejoin must not change the bits");
+}
+
+/// The tentpole's payoff, asserted on the exact metric the cluster
+/// bench reports: per epoch of steady-state steps, index mode must move
+/// ≥10× fewer phase-data-path bytes (PhaseStart + DatasetLoad during
+/// the timed window) than payload mode.  The one-time DatasetLoad ship
+/// happens at hosting time — before the window — and only in index
+/// mode.
+#[test]
+fn index_mode_cuts_phase_wire_bytes_10x() {
+    let bytes_per_epoch = |wire: WireMode| -> (f64, u64) {
+        let mut exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(1, 4));
+        let mut ct = ClusterTransport::listen("127.0.0.1:0", MODEL).unwrap();
+        ct.set_wire_mode(wire);
+        let addr = ct.local_addr().unwrap().to_string();
+        let mut workers = Vec::new();
+        for _ in 0..2 {
+            let dial = addr.clone();
+            workers
+                .push(std::thread::spawn(move || run_worker(&dial, 1, WorkerFault::default())));
+        }
+        ct.wait_for_workers(2, Duration::from_secs(30)).unwrap();
+        exec.set_transport(Box::new(ct)).unwrap();
+        let (_, _, s_train, s_val) = search_data();
+        let mut state = exec.init_state(9).unwrap();
+        let cost = ebs::baselines::dnas::run_dataset_search_steps(
+            &mut exec, &mut state, &s_train, &s_val, 5, 7,
+        )
+        .unwrap();
+        let t = exec.wire_stats().expect("cluster transport must report wire totals");
+        let ds_bytes = t.per_op[OP_DATASET_LOAD as usize].sent_bytes;
+        drop(exec);
+        for w in workers {
+            w.join().expect("worker thread panicked").expect("worker main loop errored");
+        }
+        (cost.wire_bytes_per_epoch.expect("cluster run must measure wire bytes"), ds_bytes)
+    };
+    let (idx, idx_ds) = bytes_per_epoch(WireMode::Index);
+    let (pay, pay_ds) = bytes_per_epoch(WireMode::Payload);
+    assert!(idx_ds > 0, "index mode must ship the datasets once");
+    assert_eq!(pay_ds, 0, "payload mode must never ship datasets");
+    assert!(
+        pay >= 10.0 * idx,
+        "index-only phases must cut phase-data bytes/epoch ≥10×: payload {pay} vs index {idx}"
+    );
+}
+
+/// FP pretrain and quantized retrain ride the same sharded data path as
+/// the search: both must be bit-identical between the in-process pool
+/// and a 2-worker index-mode cluster — results *and* every state leaf.
+#[test]
+fn cluster_pretrain_and_retrain_are_bit_identical_to_in_process() {
+    let run_drivers = |exec: &mut StepExecutor| {
+        let (train, test, _, _) = search_data();
+        let cfg = TrainCfg {
+            steps: 6,
+            eval_every: 4,
+            log_every: 1000,
+            seed: 11,
+            ..TrainCfg::defaults(0)
+        };
+        let mut logger = RunLogger::ephemeral();
+        let mut fp_state = exec.init_state(9).unwrap();
+        let fp = run_fp_train(exec, &mut fp_state, &train, &test, &cfg, &mut logger).unwrap();
+        let sel = Selection::from_state(&fp_state, &exec.manifest).unwrap();
+        let mut rt_state = exec.init_state(9).unwrap();
+        rt_state.transfer_from(&fp_state, "state/params/");
+        let rt = run_retrain(
+            exec, &mut rt_state, &sel, &train, &test, &cfg, None, &mut logger,
+        )
+        .unwrap();
+        (fp, fp_state, rt, rt_state)
+    };
+    let mut ref_exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(2, 4));
+    let (ref_fp, ref_fp_state, ref_rt, ref_rt_state) = run_drivers(&mut ref_exec);
+
+    let mut exec = StepExecutor::new(open_engine(MODEL), ShardSpec::new(1, 4));
+    let mut ct = ClusterTransport::listen("127.0.0.1:0", MODEL).unwrap();
+    let addr = ct.local_addr().unwrap().to_string();
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let dial = addr.clone();
+        workers.push(std::thread::spawn(move || run_worker(&dial, 1, WorkerFault::default())));
+    }
+    ct.wait_for_workers(2, Duration::from_secs(30)).unwrap();
+    exec.set_transport(Box::new(ct)).unwrap();
+    let (fp, fp_state, rt, rt_state) = run_drivers(&mut exec);
+    let spec: Vec<String> = exec.manifest.state_spec.iter().map(|l| l.path.clone()).collect();
+    drop(exec);
+    for w in workers {
+        w.join().expect("worker thread panicked").expect("worker main loop errored");
+    }
+
+    assert_eq!(ref_fp.best_test_acc.to_bits(), fp.best_test_acc.to_bits());
+    assert_eq!(ref_fp.final_train_loss.to_bits(), fp.final_train_loss.to_bits());
+    assert_eq!(ref_rt.best_test_acc.to_bits(), rt.best_test_acc.to_bits());
+    assert_eq!(ref_rt.final_train_loss.to_bits(), rt.final_train_loss.to_bits());
+    for path in &spec {
+        assert_eq!(
+            ref_fp_state.get(path).unwrap(),
+            fp_state.get(path).unwrap(),
+            "fp state leaf {path} diverged"
+        );
+        assert_eq!(
+            ref_rt_state.get(path).unwrap(),
+            rt_state.get(path).unwrap(),
+            "retrain state leaf {path} diverged"
+        );
+    }
 }

@@ -306,12 +306,66 @@ fn manifest_single_byte_flips_reject_with_right_variant() {
 
 fn exec_messages() -> Vec<wire::Msg> {
     vec![
-        wire::Msg::Hello,
+        wire::Msg::Hello { fingerprints: vec![] },
+        wire::Msg::Hello { fingerprints: vec![[3u8; 32], [255u8; 32]] },
         wire::Msg::Welcome { model: "resnet8_tiny".into() },
         wire::Msg::StateSync {
             leaves: vec![("state/params/stem/w".into(), vec![1.0, -2.5, f32::MIN_POSITIVE])],
             digest: [9u8; 32],
         },
+        wire::Msg::SyncAck { digest: [0xABu8; 32] },
+        // Full dataset ship and the bind-by-fingerprint form (empty
+        // rows: the rejoining worker already holds the content).
+        wire::Msg::DatasetLoad(wire::DatasetLoad {
+            id: 1,
+            hw: 2,
+            channels: 3,
+            classes: 10,
+            fingerprint: [9u8; 32],
+            images: vec![0.5; 2 * 2 * 3 * 2],
+            labels: vec![4, 7],
+        }),
+        wire::Msg::DatasetLoad(wire::DatasetLoad {
+            id: 3,
+            hw: 8,
+            channels: 3,
+            classes: 10,
+            fingerprint: [12u8; 32],
+            images: vec![],
+            labels: vec![],
+        }),
+        // The two PhaseStart data planes: inline payload rows and
+        // index-only against a worker-resident dataset.
+        wire::Msg::PhaseStart(wire::PhaseStart {
+            train: true,
+            backward: true,
+            want_bn: true,
+            classes: 10,
+            global_batch: 64,
+            chunk_size: 16,
+            chunk0: 2,
+            total_chunks: 4,
+            shards: 2,
+            mu: 0.5,
+            coeffs: Some((vec![vec![0.25, 0.5, 0.25]], vec![vec![0.1, 0.2, 0.7]])),
+            data: wire::PhaseData::Inline { x: vec![0.5, -1.25, 1.5], y: vec![3, -1, 0] },
+            teacher: Some(vec![0.125; 6]),
+        }),
+        wire::Msg::PhaseStart(wire::PhaseStart {
+            train: true,
+            backward: true,
+            want_bn: false,
+            classes: 10,
+            global_batch: 64,
+            chunk_size: 16,
+            chunk0: 1,
+            total_chunks: 4,
+            shards: 3,
+            mu: 0.0,
+            coeffs: Some((vec![vec![0.5, 0.5]], vec![vec![1.0, 0.0]])),
+            data: wire::PhaseData::Indexed { dataset: 2, idx: vec![17, 0, 191, 3] },
+            teacher: None,
+        }),
         wire::Msg::MomentPart { chunk0: 2, m: 3, parts: vec![1.5, -0.0, 1e300] },
         wire::Msg::MomentCombined { combined: vec![0.25; 12] },
         wire::Msg::PhaseDone(wire::PhaseDone {
